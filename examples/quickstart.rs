@@ -1,0 +1,45 @@
+//! Quickstart: the paper's question in 30 seconds.
+//!
+//! Runs the what-if simulator for the three models at 10 and 100 Gbps
+//! under both transports and prints the headline comparison: the network
+//! *speed* is not the bottleneck — the transport software is.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use netbn::models::timing::backward_trace;
+use netbn::models::ModelId;
+use netbn::report::Table;
+use netbn::sim::{simulate, SimParams};
+
+fn main() -> netbn::Result<()> {
+    // 8 servers × 8 GPUs (p3dn.24xlarge)
+    let mut table = Table::new(
+        "scaling factor: Horovod-like transport vs fully-utilized network (64 GPUs)",
+        &["model", "bw Gbps", "measured-mode", "what-if (full util)", "gap"],
+    );
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        for bw in [10.0, 100.0] {
+            let meas =
+                simulate(&SimParams::horovod_like(trace.clone(), 8, 8, bw)).scaling_factor;
+            let ideal = simulate(&SimParams::whatif(trace.clone(), 8, 8, bw)).scaling_factor;
+            table.row(vec![
+                id.name().into(),
+                format!("{bw}"),
+                format!("{:.1}%", meas * 100.0),
+                format!("{:.1}%", ideal * 100.0),
+                format!("{:+.1} pts", (ideal - meas) * 100.0),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "Takeaway (the paper's): at 100 Gbps the fully-utilized network reaches\n\
+         ~100% scaling for every model — the 25–40 point gap is transport\n\
+         software, not link speed. At 10 Gbps the two agree: there the wire\n\
+         really is the limit, and only there does gradient compression help."
+    );
+    Ok(())
+}

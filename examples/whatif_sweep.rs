@@ -1,0 +1,40 @@
+//! Regenerate every figure of the paper's evaluation (Fig 1–8), write the
+//! CSVs to `out/`, and verify the paper-shape checks. Exits non-zero if
+//! any shape check fails — usable as a reproduction gate in CI.
+//!
+//! ```text
+//! cargo run --release --example whatif_sweep [out_dir]
+//! ```
+
+use std::path::PathBuf;
+
+fn main() {
+    let out = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| PathBuf::from("out"));
+    let mut all_ok = true;
+    let mut total_checks = 0;
+    for id in netbn::figures::FIGURE_IDS {
+        let run = match netbn::figures::run_figure(id) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("figure {id} failed: {e:#}");
+                std::process::exit(2);
+            }
+        };
+        match run.emit(&out) {
+            Ok(ok) => {
+                all_ok &= ok;
+                total_checks += run.checks.len();
+            }
+            Err(e) => {
+                eprintln!("figure {id} emit failed: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!(
+        "\n{} shape checks across 8 figures: {}",
+        total_checks,
+        if all_ok { "ALL PASS" } else { "FAILURES" }
+    );
+    std::process::exit(if all_ok { 0 } else { 1 });
+}

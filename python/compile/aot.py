@@ -1,0 +1,120 @@
+"""AOT lowering: jax functions -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos): jax >= 0.5 emits
+64-bit instruction ids that the image's xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+* ``train_fwd_bwd.hlo.txt``  — transformer loss+grads (L2+L1 fused)
+* ``apply_sgd.hlo.txt``      — SGD parameter update
+* ``vecadd_1m.hlo.txt``      — Pallas vector-add over 262144 f32 (1 MiB)
+* ``vecavg_1m.hlo.txt``      — fused (a+b)/2 over the same shape
+* ``quant_int8_1m.hlo.txt``  — Pallas int8 quantize (scale + i32 codes)
+* ``dequant_int8_1m.hlo.txt``— Pallas int8 dequantize
+* ``topk_mask_1m.hlo.txt``   — Pallas magnitude-threshold mask
+* ``model_meta.txt``         — flat-parameter layout for the rust trainer
+* ``init_params.bin``        — initial parameters (little-endian f32)
+
+Run via ``make artifacts``; idempotent and build-time only.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dequant_int8, mask_by_threshold, quant_int8, vecadd, vecavg
+
+KERNEL_N = 262144  # 1 MiB of f32 per kernel artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path: pathlib.Path) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    path.write_text(text)
+    return len(text)
+
+
+def build_all(out_dir: pathlib.Path, cfg=None, seed: int = 0) -> dict:
+    cfg = cfg or model.TINY
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = {}
+
+    flat, _unravel, train_fwd_bwd, apply_sgd, spans = model.make_flat_fns(cfg, seed)
+    p = flat.size
+    b, s = cfg["batch"], cfg["seq"]
+
+    params_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    written["train_fwd_bwd"] = lower_to_file(
+        train_fwd_bwd, (params_spec, tokens_spec), out_dir / "train_fwd_bwd.hlo.txt"
+    )
+    written["apply_sgd"] = lower_to_file(
+        apply_sgd, (params_spec, params_spec, lr_spec), out_dir / "apply_sgd.hlo.txt"
+    )
+
+    vec_spec = jax.ShapeDtypeStruct((KERNEL_N,), jnp.float32)
+    scale_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    int_spec = jax.ShapeDtypeStruct((KERNEL_N,), jnp.int32)
+    written["vecadd_1m"] = lower_to_file(
+        lambda a, b: (vecadd(a, b),), (vec_spec, vec_spec), out_dir / "vecadd_1m.hlo.txt"
+    )
+    written["vecavg_1m"] = lower_to_file(
+        lambda a, b: (vecavg(a, b),), (vec_spec, vec_spec), out_dir / "vecavg_1m.hlo.txt"
+    )
+    written["quant_int8_1m"] = lower_to_file(
+        quant_int8, (vec_spec,), out_dir / "quant_int8_1m.hlo.txt"
+    )
+    written["dequant_int8_1m"] = lower_to_file(
+        lambda s_, q: (dequant_int8(s_, q),),
+        (scale_spec, int_spec),
+        out_dir / "dequant_int8_1m.hlo.txt",
+    )
+    written["topk_mask_1m"] = lower_to_file(
+        lambda x, t: (mask_by_threshold(x, t),),
+        (vec_spec, scale_spec),
+        out_dir / "topk_mask_1m.hlo.txt",
+    )
+
+    # Metadata + initial parameters for the rust trainer.
+    meta_lines = [
+        f"param_count {p}",
+        f"vocab {cfg['vocab']}",
+        f"seq {cfg['seq']}",
+        f"batch {cfg['batch']}",
+    ]
+    meta_lines += [f"layer {name} {off} {n}" for name, off, n in spans]
+    (out_dir / "model_meta.txt").write_text("\n".join(meta_lines) + "\n")
+    np.asarray(flat, dtype="<f4").tofile(out_dir / "init_params.bin")
+    written["model_meta"] = p
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    written = build_all(out_dir, seed=args.seed)
+    for name, size in sorted(written.items()):
+        print(f"  {name}: {size}")
+    print(f"artifacts -> {out_dir.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO artifacts)."""
+
+from .matmul import matmul
+from .quantize import dequant_int8, mask_by_threshold, quant_int8, topk_mask
+from .vecadd import vecadd, vecavg
+
+__all__ = [
+    "matmul",
+    "vecadd",
+    "vecavg",
+    "quant_int8",
+    "dequant_int8",
+    "topk_mask",
+    "mask_by_threshold",
+]

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+The transformer's projections (QKV, output, MLP, LM head) all route
+through this kernel, so it lowers into the train-step artifact for both
+the forward and backward passes (backward is two more matmuls).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks are MXU-oriented —
+(bm, K) x (K, bn) tiles with bm = bn = 64 for the tiny e2e model (the
+paper-scale config would use 128x128 bf16 tiles). The K dimension stays
+resident in VMEM because every K in the model is small (<= 1024);
+paper-scale shapes would add a K-loop accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 64
+BN = 64
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pallas_mm(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims {k} vs {k2}"
+    bm = BM if m % BM == 0 else _divisor(m, BM)
+    bn = BN if n % BN == 0 else _divisor(n, BN)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+def _divisor(n: int, cap: int) -> int:
+    b = min(n, cap)
+    while n % b:
+        b -= 1
+    return b
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """a @ b through the Pallas kernel, differentiable."""
+    return _pallas_mm(a, b)
+
+
+def _fwd(a, b):
+    return _pallas_mm(a, b), (a, b)
+
+
+def _bwd(res, g):
+    a, b = res
+    # dA = g @ B^T, dB = A^T @ g — the backward matmuls also hit the MXU
+    # kernel, mirroring how cuDNN/cuBLAS serve both passes on GPU.
+    return _pallas_mm(g, b.T), _pallas_mm(a.T, g)
+
+
+matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernels: int8 linear quantization (encode/decode) and the
+magnitude-threshold mask used by top-k sparsification.
+
+These are the gradient-compression hot spots of §3.2.  The scale (a global
+max-reduction) is computed by XLA outside the kernel; the element-wise
+quantize/dequantize/mask streams through VMEM-sized blocks like vecadd.
+The rust trainer runs the same codecs natively; the AOT artifacts built
+from these kernels let the runtime cross-check both implementations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _block(n: int) -> int:
+    b = min(n, BLOCK)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _quant_kernel(x_ref, scale_ref, o_ref):
+    inv = 1.0 / scale_ref[0]
+    q = jnp.clip(jnp.round(x_ref[...] * inv), -127.0, 127.0)
+    o_ref[...] = q.astype(jnp.int32)
+
+
+def _dequant_kernel(q_ref, scale_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+def _mask_kernel(x_ref, thr_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(jnp.abs(x) >= thr_ref[0], x, 0.0)
+
+
+def quant_int8(x):
+    """x f32[n] -> (scale f32[1], q i32[n]) with scale = max|x|/127."""
+    n = x.shape[0]
+    blk = _block(n)
+    scale = (jnp.max(jnp.abs(x)) / 127.0 + 1e-30).reshape(1)
+    q = pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(x, scale)
+    return scale, q
+
+
+def dequant_int8(scale, q):
+    """(scale f32[1], q i32[n]) -> f32[n]."""
+    n = q.shape[0]
+    blk = _block(n)
+    return pl.pallas_call(
+        _dequant_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(q, scale)
+
+
+def topk_mask(x, k_fraction: float):
+    """Zero all but (approximately) the top k_fraction of |x|.
+
+    The threshold is the (1-k)-quantile of |x| computed by XLA; the mask
+    itself is the Pallas kernel.
+    """
+    thr = jnp.quantile(jnp.abs(x), 1.0 - k_fraction).reshape(1)
+    return mask_by_threshold(x, thr)
+
+
+def mask_by_threshold(x, thr):
+    """x f32[n], thr f32[1] -> x masked where |x| < thr."""
+    n = x.shape[0]
+    blk = _block(n)
+    return pl.pallas_call(
+        _mask_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(x, thr)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+pytest compares against — no pallas imports here on purpose)."""
+
+import jax.numpy as jnp
+
+
+def ref_vecadd(a, b):
+    return a + b
+
+
+def ref_vecavg(a, b):
+    return (a + b) * a.dtype.type(0.5)
+
+
+def ref_matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def ref_quant_int8(x):
+    scale = (jnp.max(jnp.abs(x)) / 127.0 + 1e-30).reshape(1)
+    q = jnp.clip(jnp.round(x / scale[0]), -127.0, 127.0).astype(jnp.int32)
+    return scale, q
+
+
+def ref_dequant_int8(scale, q):
+    return q.astype(jnp.float32) * scale[0]
+
+
+def ref_mask_by_threshold(x, thr):
+    return jnp.where(jnp.abs(x) >= thr[0], x, 0.0)
+
+
+def ref_topk_mask(x, k_fraction: float):
+    thr = jnp.quantile(jnp.abs(x), 1.0 - k_fraction).reshape(1)
+    return ref_mask_by_threshold(x, thr)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused gradient vector add / average.
+
+This is the all-reduce reduction hot spot the paper models as
+``(N-1) * AddEst(S/N)``.  On TPU the op is HBM-bound, so the kernel's job
+is purely a well-shaped HBM<->VMEM schedule: 1-D grid over contiguous
+blocks sized to stream through VMEM (see DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+through the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size in elements. 64K f32 = 256 KB per operand -> 3 operands fit
+# comfortably in a 16 MB VMEM with room for double buffering.
+BLOCK = 65536
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _scale_add_kernel(a_ref, b_ref, o_ref, *, scale):
+    o_ref[...] = (a_ref[...] + b_ref[...]) * scale
+
+
+def _block(n: int) -> int:
+    """Largest block that divides n, capped at BLOCK."""
+    b = min(n, BLOCK)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=())
+def vecadd(a, b):
+    """Element-wise a + b via the Pallas kernel (1-D inputs)."""
+    n = a.shape[0]
+    blk = _block(n)
+    return pl.pallas_call(
+        _add_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(a, b)
+
+
+def vecavg(a, b):
+    """(a + b) / 2 fused in one pass (the 2-worker gradient average)."""
+    n = a.shape[0]
+    blk = _block(n)
+    kernel = functools.partial(_scale_add_kernel, scale=a.dtype.type(0.5))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,143 @@
+"""L2: the transformer LM train step in JAX, calling the L1 Pallas kernels.
+
+Everything here runs ONCE at build time (`make artifacts`): the functions
+are lowered to HLO text by `aot.py` and executed from rust afterwards.
+
+The model is a small decoder-only transformer (pre-LN, tied embeddings)
+whose dimensions mirror `rust/src/models/transformer.rs::tiny_transformer_dims`
+— keep TINY in sync with that function.
+
+Artifact contract (consumed by `rust/src/trainer/xla.rs`):
+
+* ``train_fwd_bwd(params_flat f32[P], tokens i32[B, S+1]) -> (loss f32[],
+  grads_flat f32[P])``
+* ``apply_sgd(params f32[P], grads f32[P], lr f32[]) -> (params f32[P],)``
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import matmul
+
+# Must mirror rust tiny_transformer_dims(): (vocab, d_model, n_layers,
+# n_heads, seq).
+TINY = dict(vocab=512, d_model=256, n_layers=4, n_heads=8, seq=64, batch=4)
+
+
+def init_params(key, cfg: Dict) -> Dict:
+    """Initialize the parameter pytree (dict keys define the flat order)."""
+    d = cfg["d_model"]
+    vocab = cfg["vocab"]
+    seq = cfg["seq"]
+    n_layers = cfg["n_layers"]
+    keys = jax.random.split(key, 2 + 4 * n_layers)
+    params = {
+        "embed": jax.random.normal(keys[0], (vocab, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(keys[1], (seq, d), jnp.float32) * 0.01,
+        "final_ln_scale": jnp.ones((d,), jnp.float32),
+        "final_ln_bias": jnp.zeros((d,), jnp.float32),
+    }
+    for layer in range(n_layers):
+        k = keys[2 + 4 * layer : 6 + 4 * layer]
+        prefix = f"layer{layer:02d}"
+        params[f"{prefix}.qkv"] = jax.random.normal(k[0], (d, 3 * d), jnp.float32) * (
+            1.0 / jnp.sqrt(d)
+        )
+        params[f"{prefix}.proj"] = jax.random.normal(k[1], (d, d), jnp.float32) * (
+            1.0 / jnp.sqrt(d)
+        )
+        params[f"{prefix}.mlp_up"] = jax.random.normal(k[2], (d, 4 * d), jnp.float32) * (
+            1.0 / jnp.sqrt(d)
+        )
+        params[f"{prefix}.mlp_down"] = jax.random.normal(
+            k[3], (4 * d, d), jnp.float32
+        ) * (1.0 / jnp.sqrt(4 * d))
+        params[f"{prefix}.ln1_scale"] = jnp.ones((d,), jnp.float32)
+        params[f"{prefix}.ln1_bias"] = jnp.zeros((d,), jnp.float32)
+        params[f"{prefix}.ln2_scale"] = jnp.ones((d,), jnp.float32)
+        params[f"{prefix}.ln2_bias"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _block(params, prefix: str, x, cfg: Dict):
+    """One pre-LN decoder block; projections via the Pallas matmul."""
+    n_heads = cfg["n_heads"]
+    seq = cfg["seq"]
+    bs, d = x.shape  # x is [B*S, d]
+    h = _layer_norm(x, params[f"{prefix}.ln1_scale"], params[f"{prefix}.ln1_bias"])
+    qkv = matmul(h, params[f"{prefix}.qkv"])  # [B*S, 3d]
+    b = bs // seq
+    d_head = d // n_heads
+    qkv = qkv.reshape(b, seq, 3, n_heads, d_head)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [b, s, h, dh]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(d_head))
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    scores = jnp.where(causal[None, None, :, :] > 0, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(bs, d)
+    x = x + matmul(ctx, params[f"{prefix}.proj"])
+    h = _layer_norm(x, params[f"{prefix}.ln2_scale"], params[f"{prefix}.ln2_bias"])
+    up = jax.nn.gelu(matmul(h, params[f"{prefix}.mlp_up"]))
+    return x + matmul(up, params[f"{prefix}.mlp_down"])
+
+
+def forward(params: Dict, tokens_in, cfg: Dict):
+    """tokens_in i32[B, S] -> logits f32[B*S, vocab]."""
+    b, s = tokens_in.shape
+    x = params["embed"][tokens_in] + params["pos"][None, :s, :]
+    x = x.reshape(b * s, cfg["d_model"])
+    for layer in range(cfg["n_layers"]):
+        x = _block(params, f"layer{layer:02d}", x, cfg)
+    x = _layer_norm(x, params["final_ln_scale"], params["final_ln_bias"])
+    # Tied LM head: the big [B*S, d] @ [d, vocab] matmul on the MXU kernel.
+    return matmul(x, params["embed"].T)
+
+
+def loss_fn(params: Dict, tokens, cfg: Dict):
+    """tokens i32[B, S+1] -> mean cross-entropy of next-token prediction."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:].reshape(-1)
+    logits = forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_flat_fns(cfg: Dict, seed: int = 0):
+    """Build the flat-parameter functions the artifacts are lowered from.
+
+    Returns ``(init_flat, unravel, train_fwd_bwd, apply_sgd, spans)`` where
+    ``spans`` is ``[(name, offset, elems)]`` describing the flat layout.
+    """
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    flat, unravel = ravel_pytree(params)
+
+    # Span table: ravel_pytree flattens in tree_flatten order (sorted keys).
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    spans = []
+    offset = 0
+    for path, leaf in leaves_with_path:
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        spans.append((name, offset, int(leaf.size)))
+        offset += int(leaf.size)
+    assert offset == flat.size
+
+    def train_fwd_bwd(params_flat, tokens):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(unravel(p), tokens, cfg))(
+            params_flat
+        )
+        return loss, grads
+
+    def apply_sgd(params_flat, grads_flat, lr):
+        return (params_flat - lr * grads_flat,)
+
+    return flat, unravel, train_fwd_bwd, apply_sgd, spans

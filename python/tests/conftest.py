@@ -1,0 +1,7 @@
+"""Make the build-time `compile` package importable whether pytest runs
+from the repo root (`pytest python/tests/`) or from `python/`."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -1,0 +1,167 @@
+"""Pallas kernels vs pure-jnp oracles, with hypothesis shape/value sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    dequant_int8,
+    mask_by_threshold,
+    matmul,
+    quant_int8,
+    topk_mask,
+    vecadd,
+    vecavg,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=3.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- vecadd
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(min_value=1, max_value=70000), seed=st.integers(0, 2**16))
+def test_vecadd_matches_ref_any_length(n, seed):
+    a = rand(seed, (n,))
+    b = rand(seed + 1, (n,))
+    assert_allclose(np.asarray(vecadd(a, b)), np.asarray(ref.ref_vecadd(a, b)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vecadd_dtypes(dtype):
+    a = rand(0, (4096,), dtype)
+    b = rand(1, (4096,), dtype)
+    got = vecadd(a, b)
+    assert got.dtype == dtype
+    assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(ref.ref_vecadd(a, b), dtype=np.float32),
+        rtol=1e-2,
+    )
+
+
+def test_vecadd_block_boundary_sizes():
+    from compile.kernels.vecadd import BLOCK
+
+    for n in [BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK, 3]:
+        a = rand(2, (n,))
+        b = rand(3, (n,))
+        assert_allclose(np.asarray(vecadd(a, b)), np.asarray(a + b), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(min_value=2, max_value=8192), seed=st.integers(0, 2**16))
+def test_vecavg_matches_ref(n, seed):
+    a = rand(seed, (n,))
+    b = rand(seed + 9, (n,))
+    assert_allclose(np.asarray(vecavg(a, b)), np.asarray((a + b) * 0.5), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 7, 64, 128, 192]),
+    k=st.sampled_from([1, 32, 256]),
+    n=st.sampled_from([1, 64, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k), scale=1.0)
+    b = rand(seed + 1, (k, n), scale=1.0)
+    assert_allclose(
+        np.asarray(matmul(a, b)), np.asarray(ref.ref_matmul(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_gradients_match_jnp():
+    a = rand(5, (64, 32), scale=1.0)
+    b = rand(6, (32, 64), scale=1.0)
+
+    def f_pallas(a, b):
+        return jnp.sum(matmul(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(ref.ref_matmul(a, b) ** 2)
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    assert_allclose(np.asarray(ga_p), np.asarray(ga_r), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(gb_p), np.asarray(gb_r), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- quantize
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(min_value=1, max_value=50000), seed=st.integers(0, 2**16))
+def test_quant_dequant_round_trip_error_bounded(n, seed):
+    x = rand(seed, (n,), scale=10.0)
+    scale, q = quant_int8(x)
+    back = dequant_int8(scale, q)
+    # |err| <= scale/2 per element (linear quantization bound).
+    bound = float(scale[0]) * 0.5 + 1e-6
+    assert np.max(np.abs(np.asarray(back) - np.asarray(x))) <= bound
+
+
+def test_quant_matches_ref_exactly():
+    x = rand(7, (8192,), scale=5.0)
+    s_p, q_p = quant_int8(x)
+    s_r, q_r = ref.ref_quant_int8(x)
+    assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-7)
+    assert np.array_equal(np.asarray(q_p), np.asarray(q_r))
+    assert_allclose(
+        np.asarray(dequant_int8(s_p, q_p)),
+        np.asarray(ref.ref_dequant_int8(s_r, q_r)),
+        rtol=1e-7,
+    )
+
+
+def test_quant_codes_in_range():
+    x = rand(8, (4096,), scale=100.0)
+    _, q = quant_int8(x)
+    qn = np.asarray(q)
+    assert qn.min() >= -127 and qn.max() <= 127
+
+
+def test_quant_zero_vector():
+    x = jnp.zeros((1024,), jnp.float32)
+    scale, q = quant_int8(x)
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.isfinite(np.asarray(scale)))
+
+
+# ----------------------------------------------------------------- topk
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([0.01, 0.1, 0.5]))
+def test_topk_mask_matches_ref(seed, k):
+    x = rand(seed, (10000,))
+    got = topk_mask(x, k)
+    want = ref.ref_topk_mask(x, k)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topk_keeps_about_k_fraction():
+    x = rand(11, (100000,))
+    got = np.asarray(topk_mask(x, 0.1))
+    frac = np.count_nonzero(got) / got.size
+    assert 0.05 < frac < 0.15, frac
+
+
+def test_mask_threshold_semantics():
+    x = jnp.array([-3.0, -1.0, 0.5, 2.0], jnp.float32)
+    thr = jnp.array([1.5], jnp.float32)
+    got = np.asarray(mask_by_threshold(x, thr))
+    assert np.array_equal(got, np.array([-3.0, 0.0, 0.0, 2.0], np.float32))

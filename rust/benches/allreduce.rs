@@ -1,0 +1,113 @@
+//! Collective benches: ring vs tree vs parameter-server over the in-proc
+//! fabric, plus the raw reduction kernel. Backs the §Perf targets for the
+//! L3 hot path (reduction within 2× of memcpy roofline; ring beats PS at
+//! scale, as the paper's ring cost model presumes).
+
+use netbn::collectives::reduce::add_assign;
+use netbn::collectives::{ps::ps_allreduce, ring::ring_allreduce, tree::tree_allreduce};
+use netbn::net::{inproc::InProcFabric, Endpoint, Fabric};
+use netbn::topology::{Ring, Topology};
+use netbn::util::bench::{black_box, Bench, BenchConfig};
+use std::time::Duration;
+
+type Collective = fn(&dyn Endpoint, &Ring, u32, u32, &mut [f32]) -> netbn::Result<()>;
+
+fn run_collective(n: usize, elems: usize, step: u32, f: Collective) {
+    let topo = Topology::new(n, 1);
+    let ring = topo.flat_ring();
+    let fabric = InProcFabric::new(n);
+    let eps = fabric.endpoints();
+    let mut handles = Vec::new();
+    for ep in eps {
+        let ring = ring.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut data = vec![1.0f32; elems];
+            f(ep.as_ref(), &ring, step, 0, &mut data).unwrap();
+            black_box(&data);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 200,
+        min_time: Duration::from_millis(300),
+        max_time: Duration::from_secs(4),
+    };
+
+    // Raw reduction kernel (the AddEst subject).
+    let mut b = Bench::with_config("reduce", cfg);
+    for elems in [1usize << 14, 1 << 18, 1 << 22] {
+        let mut dst = vec![1.0f32; elems];
+        let src = vec![2.0f32; elems];
+        b.bench_bytes(
+            &format!("add_assign/{}KiB", elems * 4 / 1024),
+            Some((elems * 12) as f64),
+            || {
+                add_assign(&mut dst, &src);
+                black_box(&dst);
+            },
+        );
+    }
+    // memcpy roofline reference for the same footprint.
+    {
+        let elems = 1usize << 22;
+        let src = vec![2.0f32; elems];
+        let mut dst = vec![0.0f32; elems];
+        b.bench_bytes(
+            &format!("memcpy/{}KiB", elems * 4 / 1024),
+            Some((elems * 8) as f64),
+            || {
+                dst.copy_from_slice(&src);
+                black_box(&dst);
+            },
+        );
+    }
+    // §Perf before/after: the old allocating serialization vs the
+    // zero-copy view the collectives now use on the send path.
+    {
+        let elems = 1usize << 20;
+        let data = vec![1.5f32; elems];
+        b.bench_bytes("serialize/alloc-per-call (before)", Some((elems * 4) as f64), || {
+            black_box(netbn::collectives::f32s_to_bytes(&data));
+        });
+        b.bench_bytes("serialize/zero-copy view (after)", Some((elems * 4) as f64), || {
+            black_box(netbn::collectives::f32s_as_bytes(&data));
+        });
+    }
+    b.report();
+
+    // Collectives at 4 MB across 4 workers.
+    let mut step = 0u32;
+    let mut b = Bench::with_config("allreduce-4w-4MB", cfg);
+    let elems = 1 << 20;
+    let bytes = Some((elems * 4) as f64);
+    b.bench_bytes("ring", bytes, || {
+        run_collective(4, elems, step, ring_allreduce);
+        step += 1;
+    });
+    b.bench_bytes("tree", bytes, || {
+        run_collective(4, elems, step, tree_allreduce);
+        step += 1;
+    });
+    b.bench_bytes("parameter-server", bytes, || {
+        run_collective(4, elems, step, ps_allreduce);
+        step += 1;
+    });
+    b.report();
+
+    // Ring scaling in worker count (fixed 1 MB).
+    let mut b = Bench::with_config("ring-scaling-1MB", cfg);
+    for n in [2usize, 4, 8] {
+        b.bench(&format!("{n}w"), || {
+            run_collective(n, 1 << 18, step, ring_allreduce);
+            step += 1;
+        });
+    }
+    b.report();
+}

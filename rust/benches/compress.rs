@@ -1,0 +1,52 @@
+//! Codec benches: encode/decode throughput per codec. These bound how
+//! much compression can help in practice — a codec slower than the wire
+//! saves nothing (the systems caveat behind the paper's §3.2).
+
+use netbn::compress::{codecs, CodecKind};
+use netbn::util::bench::{black_box, Bench, BenchConfig};
+use netbn::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 500,
+        min_time: Duration::from_millis(300),
+        max_time: Duration::from_secs(3),
+    };
+    let n = 1 << 20; // 4 MB of gradients
+    let mut rng = Rng::new(1);
+    let mut grad = vec![0.0f32; n];
+    rng.fill_f32(&mut grad, 0.5);
+    let bytes = Some((n * 4) as f64);
+
+    let kinds = [
+        CodecKind::Fp16,
+        CodecKind::Int8,
+        CodecKind::OneBit,
+        CodecKind::TopK { k_fraction: 0.01 },
+        CodecKind::RandomK { k_fraction: 0.01 },
+    ];
+
+    let mut b = Bench::with_config("encode-4MB", cfg);
+    for kind in kinds {
+        b.bench_bytes(&kind.name(), bytes, || {
+            black_box(codecs::encode(kind, &grad, 3));
+        });
+    }
+    b.report();
+
+    let mut b = Bench::with_config("decode-4MB", cfg);
+    for kind in kinds {
+        let enc = codecs::encode(kind, &grad, 3);
+        b.bench_bytes(&kind.name(), bytes, || {
+            black_box(codecs::decode(kind, &enc, 3).unwrap());
+        });
+    }
+    b.report();
+
+    // Wire-time budget comparison at 10 Gbps: encoding must beat the
+    // bytes it saves.
+    println!("\nwire-time context: 4 MB at 10 Gbps = {:.2} ms on the wire", 4e6 / 1.25e9 * 1e3);
+}

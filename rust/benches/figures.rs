@@ -1,0 +1,36 @@
+//! Figure regeneration benches: one bench per paper figure. Each bench
+//! re-generates the figure's full data series (so `cargo bench` both
+//! times the harness and reprints the reproduction numbers), then the
+//! series themselves are printed once at the end.
+
+use netbn::util::bench::{Bench, BenchConfig};
+use std::time::Duration;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 50,
+        min_time: Duration::from_millis(200),
+        max_time: Duration::from_secs(3),
+    };
+    let mut b = Bench::with_config("figures", cfg);
+    for id in netbn::figures::FIGURE_IDS {
+        b.bench(&format!("fig{id}/regenerate"), || {
+            let run = netbn::figures::run_figure(id).expect("figure runs");
+            std::hint::black_box(&run.figures);
+        });
+    }
+    b.report();
+
+    // Print the actual reproduction series once (the paper's rows).
+    println!("\n==== regenerated figure data ====");
+    for id in netbn::figures::FIGURE_IDS {
+        let run = netbn::figures::run_figure(id).unwrap();
+        for f in &run.figures {
+            println!("{}", f.render());
+        }
+        let (text, ok) = netbn::report::render_checks(&run.checks);
+        println!("{text}  => fig{id} shape {}", if ok { "OK" } else { "MISMATCH" });
+    }
+}

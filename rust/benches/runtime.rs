@@ -1,0 +1,87 @@
+//! Runtime benches: PJRT artifact execution latency/throughput — the L1
+//! kernel artifacts and the full L2 train step through the same device
+//! service the e2e trainer uses. Skips cleanly if `make artifacts` has
+//! not run.
+
+use netbn::runtime::{artifacts_dir, DeviceService, HostTensor};
+use netbn::util::bench::{black_box, Bench, BenchConfig};
+use netbn::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("vecadd_1m.hlo.txt").exists() {
+        println!("runtime bench: artifacts missing at {dir:?}; run `make artifacts` first — skipping");
+        return;
+    }
+    let svc = DeviceService::start(dir.clone());
+    let h = svc.handle();
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: 200,
+        min_time: Duration::from_millis(300),
+        max_time: Duration::from_secs(5),
+    };
+
+    const N: usize = 262144;
+    let mut rng = Rng::new(2);
+    let mut a = vec![0.0f32; N];
+    let mut bb = vec![0.0f32; N];
+    rng.fill_f32(&mut a, 1.0);
+    rng.fill_f32(&mut bb, 1.0);
+
+    let mut b = Bench::with_config("kernel-artifacts", cfg);
+    b.bench_bytes("vecadd_1m", Some((N * 12) as f64), || {
+        let out = h
+            .exec(
+                "vecadd_1m",
+                vec![
+                    HostTensor::f32(&[N as i64], a.clone()),
+                    HostTensor::f32(&[N as i64], bb.clone()),
+                ],
+            )
+            .unwrap();
+        black_box(out);
+    });
+    b.bench_bytes("quant_int8_1m", Some((N * 4) as f64), || {
+        let out = h.exec("quant_int8_1m", vec![HostTensor::f32(&[N as i64], a.clone())]).unwrap();
+        black_box(out);
+    });
+    b.report();
+
+    // Full train step (the e2e compute phase).
+    match netbn::trainer::xla::ModelMeta::load(&dir) {
+        Ok(meta) => {
+            let init = netbn::trainer::xla::load_init_params(&dir, meta.param_count).unwrap();
+            let trainer = netbn::trainer::xla::XlaTrainer::new(h.clone(), meta.clone());
+            let mut gen = netbn::trainer::xla::DataGen::new(1, meta.vocab, 0.1);
+            let tokens = gen.batch(meta.batch, meta.seq);
+            let slow = BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 20,
+                min_time: Duration::from_millis(200),
+                max_time: Duration::from_secs(30),
+            };
+            let mut b = Bench::with_config("train-step", slow);
+            b.bench(&format!("grad_step/{:.1}M-params", meta.param_count as f64 / 1e6), || {
+                black_box(trainer.grad_step(&init, &tokens).unwrap());
+            });
+            let grads = trainer.grad_step(&init, &tokens).unwrap().1;
+            b.bench("apply_sgd", || {
+                black_box(trainer.apply(&init, &grads, 0.1).unwrap());
+            });
+            b.report();
+            let stats = h.stats().unwrap();
+            println!(
+                "\ndevice service: {} calls, mean exec {:.2} ms, {} compiles ({:.1}s)",
+                stats.calls,
+                stats.exec_seconds / stats.calls.max(1) as f64 * 1e3,
+                stats.compiles,
+                stats.compile_seconds
+            );
+        }
+        Err(e) => println!("train-step bench skipped: {e}"),
+    }
+}

@@ -1,0 +1,59 @@
+//! Simulator benches: full what-if step simulations per second (the §Perf
+//! target is ≥10⁴ sims/s so whole-figure sweeps stay interactive), fusion
+//! buffer throughput, and trace generation cost.
+
+use netbn::collectives::fusion::{FusionBuffer, GradTensor};
+use netbn::config::FusionConfig;
+use netbn::models::timing::backward_trace;
+use netbn::models::ModelId;
+use netbn::sim::{simulate, SimParams};
+use netbn::util::bench::{black_box, Bench, BenchConfig};
+use std::time::Duration;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 3,
+        min_iters: 20,
+        max_iters: 100_000,
+        min_time: Duration::from_millis(400),
+        max_time: Duration::from_secs(3),
+    };
+
+    let mut b = Bench::with_config("simulate", cfg);
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let p = SimParams::whatif(trace, 8, 8, 100.0);
+        b.bench(&format!("whatif/{}", id.name()), || {
+            black_box(simulate(&p));
+        });
+    }
+    {
+        let p = SimParams::horovod_like(backward_trace(&ModelId::Vgg16.profile()), 8, 8, 100.0);
+        b.bench("horovod-like/VGG16", || {
+            black_box(simulate(&p));
+        });
+    }
+    b.report();
+
+    let mut b = Bench::with_config("fusion-buffer", cfg);
+    b.bench("push/160-layer-model", || {
+        let mut f = FusionBuffer::new(FusionConfig::default());
+        let mut emitted = 0usize;
+        for layer in 0..160 {
+            let now = layer as f64 * 4e-4;
+            emitted += f.push(GradTensor::sized(layer, 600_000), now).len();
+        }
+        emitted += usize::from(f.flush().is_some());
+        black_box(emitted);
+    });
+    b.report();
+
+    let mut b = Bench::with_config("trace-gen", cfg);
+    for id in ModelId::paper_models() {
+        let profile = id.profile();
+        b.bench(&format!("backward_trace/{}", id.name()), || {
+            black_box(backward_trace(&profile));
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,112 @@
+//! Transport benches: in-proc fabric message rate, TCP loopback round
+//! trips and bulk throughput, token-bucket shaper accuracy, and the
+//! kernel-TCP model evaluation cost.
+
+use netbn::net::kernel_tcp::KernelTcpModel;
+use netbn::net::shaper::Shaper;
+use netbn::net::{inproc::InProcFabric, tcp::TcpFabric, Fabric};
+use netbn::topology::{Topology, WorkerId};
+use netbn::util::bench::{black_box, Bench, BenchConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 10,
+        max_iters: 5_000,
+        min_time: Duration::from_millis(300),
+        max_time: Duration::from_secs(3),
+    };
+
+    // In-proc fabric: small-message rate + bulk throughput.
+    let mut b = Bench::with_config("inproc", cfg);
+    {
+        let fab = InProcFabric::new(2);
+        let eps = fab.endpoints();
+        let (a, bb) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let mut tag = 0u64;
+        b.bench("send+recv/64B", || {
+            a.send(WorkerId(1), tag, &[0u8; 64]).unwrap();
+            black_box(bb.recv(WorkerId(0), tag).unwrap());
+            tag += 1;
+        });
+        let payload = vec![7u8; 1 << 20];
+        b.bench_bytes("send+recv/1MiB", Some((1 << 20) as f64), || {
+            a.send(WorkerId(1), tag, &payload).unwrap();
+            black_box(bb.recv(WorkerId(0), tag).unwrap());
+            tag += 1;
+        });
+    }
+    b.report();
+
+    // TCP loopback: the e2e fabric.
+    let mut b = Bench::with_config("tcp-loopback", cfg);
+    {
+        let fab = TcpFabric::new(2, None).unwrap();
+        let eps = fab.endpoints();
+        let (a, bb) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let echo_a = Arc::clone(&bb);
+        let t = std::thread::spawn(move || {
+            let mut n = 0u64;
+            loop {
+                let m = echo_a.recv(WorkerId(0), n).unwrap();
+                if m.is_empty() {
+                    return;
+                }
+                echo_a.send(WorkerId(0), n | (1 << 60), &m).unwrap();
+                n += 1;
+            }
+        });
+        let mut tag = 0u64;
+        b.bench("round-trip/64B", || {
+            a.send(WorkerId(1), tag, &[1u8; 64]).unwrap();
+            black_box(a.recv(WorkerId(1), tag | (1 << 60)).unwrap());
+            tag += 1;
+        });
+        let payload = vec![7u8; 1 << 20];
+        b.bench_bytes("round-trip/1MiB", Some((2 << 20) as f64), || {
+            a.send(WorkerId(1), tag, &payload).unwrap();
+            black_box(a.recv(WorkerId(1), tag | (1 << 60)).unwrap());
+            tag += 1;
+        });
+        a.send(WorkerId(1), tag, &[]).unwrap(); // stop echo
+        t.join().unwrap();
+    }
+    b.report();
+
+    // Shaper: admission cost and pacing accuracy.
+    let mut b = Bench::with_config("shaper", cfg);
+    {
+        let topo = Topology::new(2, 1);
+        let fast = Shaper::new(topo, 1e12, 0.0); // effectively unthrottled
+        b.bench("admit/unthrottled", || {
+            black_box(fast.admit(WorkerId(0), WorkerId(1), 4096));
+        });
+    }
+    b.report();
+
+    // Pacing accuracy check (printed, not timed): 10 MB at 100 MB/s ≈ 100 ms.
+    {
+        let topo = Topology::new(2, 1);
+        let s = Shaper::new(topo, 100e6, 0.0);
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            s.admit(WorkerId(0), WorkerId(1), 1_000_000);
+        }
+        let took = t0.elapsed().as_secs_f64();
+        println!(
+            "\nshaper pacing: 10 MB at 100 MB/s took {took:.3}s (target 0.100s, error {:+.1}%)",
+            (took / 0.100 - 1.0) * 100.0
+        );
+    }
+
+    // Kernel-TCP model: effectively free to evaluate.
+    let mut b = Bench::with_config("kernel-tcp-model", cfg);
+    let m = KernelTcpModel::default();
+    let mut x = 1.0;
+    b.bench("effective_gbps", || {
+        x = black_box(m.effective_gbps(x % 100.0 + 1.0));
+    });
+    b.report();
+}

@@ -1,0 +1,265 @@
+//! Command-line parsing substrate (clap stand-in): subcommands, `--flag`,
+//! `--key value` / `--key=value` options, positional args, and generated
+//! help text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the option takes a value; `false` for boolean flags.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A subcommand spec.
+#[derive(Clone, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Get an option value, falling back to the spec default.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option → Vec<f64>.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("--{name}: bad list element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A CLI application: name + subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+/// Result of parsing argv.
+#[derive(Debug)]
+pub enum Parsed {
+    /// (subcommand name, its args)
+    Command(String, Args),
+    /// Help was requested; the rendered text is returned.
+    Help(String),
+}
+
+impl App {
+    /// Parse an argv (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(Parsed::Help(self.render_help()));
+        }
+        let cmd_name = &argv[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command {cmd_name:?}; try --help"))?;
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                args.options.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Ok(Parsed::Help(self.render_cmd_help(spec)));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let ospec = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name} for {cmd_name}"))?;
+                if ospec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("--{name} expects a value"))?
+                                .clone()
+                        }
+                    };
+                    args.options.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        if args.positional.len() > spec.positional.len() {
+            bail!(
+                "{cmd_name} takes at most {} positional argument(s), got {}",
+                spec.positional.len(),
+                args.positional.len()
+            );
+        }
+        Ok(Parsed::Command(cmd_name.clone(), args))
+    }
+
+    /// Top-level help text.
+    pub fn render_help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `netbn <command> --help` for command options.\n");
+        s
+    }
+
+    /// Per-command help text.
+    pub fn render_cmd_help(&self, spec: &CmdSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, spec.name, spec.about);
+        for o in &spec.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{:<24} {}{}\n", o.name, val, o.help, def));
+        }
+        for (p, h) in &spec.positional {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "netbn",
+            about: "test",
+            commands: vec![CmdSpec {
+                name: "fig",
+                about: "regenerate a figure",
+                opts: vec![
+                    OptSpec { name: "servers", help: "server count", takes_value: true, default: Some("2") },
+                    OptSpec { name: "fast", help: "quick mode", takes_value: false, default: None },
+                ],
+                positional: vec![("n", "figure number")],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_with_positional_and_options() {
+        match app().parse(&argv(&["fig", "3", "--servers", "8", "--fast"])).unwrap() {
+            Parsed::Command(name, args) => {
+                assert_eq!(name, "fig");
+                assert_eq!(args.positional, vec!["3"]);
+                assert_eq!(args.get("servers"), Some("8"));
+                assert!(args.has_flag("fast"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equals_syntax() {
+        match app().parse(&argv(&["fig", "--servers=4"])).unwrap() {
+            Parsed::Command(_, args) => assert_eq!(args.get_usize("servers", 0).unwrap(), 4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_applied() {
+        match app().parse(&argv(&["fig"])).unwrap() {
+            Parsed::Command(_, args) => assert_eq!(args.get("servers"), Some("2")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(app().parse(&argv(&["fig", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(app().parse(&argv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&argv(&["--help"])).unwrap(), Parsed::Help(_)));
+        assert!(matches!(app().parse(&argv(&["fig", "--help"])).unwrap(), Parsed::Help(_)));
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        match app().parse(&argv(&["fig", "--servers", "1,2.5,100"])) {
+            Ok(Parsed::Command(_, args)) => {
+                assert_eq!(args.get_f64_list("servers", &[]).unwrap(), vec![1.0, 2.5, 100.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

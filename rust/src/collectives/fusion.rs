@@ -1,0 +1,310 @@
+//! Horovod-style gradient **fusion buffer** ("tensor fusion").
+//!
+//! Paper §3.1: *"the backward process has a timeout window of 5 ms and a
+//! gradients buffer size of 64 MB for batching gradients for the
+//! all-reduce operations. Once the timeout criterion or buffer size limit
+//! is satisfied, it notifies the all-reduce process."*
+//!
+//! Implemented as a pure state machine over an abstract clock (seconds as
+//! `f64`), so the *same* logic drives both the real-time emulator/trainer
+//! and the virtual-time what-if simulator — a core design invariant of
+//! this reproduction (see DESIGN.md).
+
+use crate::config::FusionConfig;
+
+/// One gradient tensor handed to the buffer by the backward pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradTensor {
+    /// Layer index (front of the model = 0).
+    pub layer: usize,
+    /// Size on the wire in bytes (f32 elements × 4 unless compressed).
+    pub bytes: usize,
+    /// Actual values; `None` in simulation (timing only).
+    pub data: Option<Vec<f32>>,
+}
+
+impl GradTensor {
+    pub fn sized(layer: usize, bytes: usize) -> GradTensor {
+        GradTensor { layer, bytes, data: None }
+    }
+
+    pub fn with_data(layer: usize, data: Vec<f32>) -> GradTensor {
+        GradTensor { layer, bytes: data.len() * 4, data: Some(data) }
+    }
+}
+
+/// A batch of fused tensors ready for one all-reduce.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    pub seq: u32,
+    pub tensors: Vec<GradTensor>,
+    pub bytes: usize,
+    /// Why the bucket was emitted (observability + tests).
+    pub trigger: Trigger,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Size limit reached.
+    Size,
+    /// Timeout window expired.
+    Timeout,
+    /// Backward finished; explicit flush.
+    Flush,
+}
+
+/// The fusion state machine. Call [`push`](FusionBuffer::push) as layers
+/// finish, [`poll`](FusionBuffer::poll) when the deadline passes, and
+/// [`flush`](FusionBuffer::flush) at end of backward.
+#[derive(Debug)]
+pub struct FusionBuffer {
+    cfg: FusionConfig,
+    pending: Vec<GradTensor>,
+    pending_bytes: usize,
+    window_start: Option<f64>,
+    next_seq: u32,
+    emitted_bytes_total: u64,
+    emitted_buckets: u32,
+}
+
+impl FusionBuffer {
+    pub fn new(cfg: FusionConfig) -> FusionBuffer {
+        FusionBuffer {
+            cfg,
+            pending: Vec::new(),
+            pending_bytes: 0,
+            window_start: None,
+            next_seq: 0,
+            emitted_bytes_total: 0,
+            emitted_buckets: 0,
+        }
+    }
+
+    /// Absolute deadline (same clock as `now` passed to `push`) by which
+    /// the pending window times out, if a window is open.
+    pub fn deadline(&self) -> Option<f64> {
+        self.window_start.map(|t| t + self.cfg.timeout_s)
+    }
+
+    pub fn pending_bytes(&self) -> usize {
+        self.pending_bytes
+    }
+
+    /// Lifetime counters `(buckets, bytes)` — conservation checks.
+    pub fn emitted(&self) -> (u32, u64) {
+        (self.emitted_buckets, self.emitted_bytes_total)
+    }
+
+    /// Offer a tensor at time `now`. Returns any bucket(s) this emission
+    /// triggers (at most 2: a size-triggered flush of the previous window
+    /// plus an oversized tensor's own bucket).
+    pub fn push(&mut self, t: GradTensor, now: f64) -> Vec<Bucket> {
+        let mut out = Vec::new();
+        // Timeout may already have expired before this push.
+        if let Some(b) = self.poll(now) {
+            out.push(b);
+        }
+        if t.bytes >= self.cfg.buffer_bytes {
+            // Oversized tensor (e.g. VGG16's ~400 MB fc layer): flush what
+            // we have, then the tensor ships as its own bucket.
+            if let Some(b) = self.emit(Trigger::Size) {
+                out.push(b);
+            }
+            self.pending.push(t);
+            self.pending_bytes = self.pending.last().unwrap().bytes;
+            out.push(self.emit(Trigger::Size).unwrap());
+            return out;
+        }
+        if self.pending_bytes + t.bytes > self.cfg.buffer_bytes {
+            if let Some(b) = self.emit(Trigger::Size) {
+                out.push(b);
+            }
+        }
+        if self.pending.is_empty() {
+            self.window_start = Some(now);
+        }
+        self.pending_bytes += t.bytes;
+        self.pending.push(t);
+        if self.pending_bytes >= self.cfg.buffer_bytes {
+            out.push(self.emit(Trigger::Size).unwrap());
+        }
+        out
+    }
+
+    /// Emit the pending bucket if its timeout window has expired at `now`.
+    pub fn poll(&mut self, now: f64) -> Option<Bucket> {
+        match self.deadline() {
+            Some(d) if now >= d && !self.pending.is_empty() => self.emit(Trigger::Timeout),
+            _ => None,
+        }
+    }
+
+    /// Unconditionally emit whatever is pending (end of backward pass).
+    pub fn flush(&mut self) -> Option<Bucket> {
+        self.emit(Trigger::Flush)
+    }
+
+    fn emit(&mut self, trigger: Trigger) -> Option<Bucket> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let tensors = std::mem::take(&mut self.pending);
+        let bytes = self.pending_bytes;
+        self.pending_bytes = 0;
+        self.window_start = None;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.emitted_buckets += 1;
+        self.emitted_bytes_total += bytes as u64;
+        Some(Bucket { seq, tensors, bytes, trigger })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(buffer: usize, timeout: f64) -> FusionConfig {
+        FusionConfig { buffer_bytes: buffer, timeout_s: timeout }
+    }
+
+    #[test]
+    fn size_trigger_at_limit() {
+        let mut f = FusionBuffer::new(cfg(100, 1.0));
+        assert!(f.push(GradTensor::sized(0, 40), 0.0).is_empty());
+        assert!(f.push(GradTensor::sized(1, 40), 0.001).is_empty());
+        let out = f.push(GradTensor::sized(2, 40), 0.002);
+        // 40+40 = 80, adding 40 would exceed 100 → emit {0,1}, keep {2}.
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].trigger, Trigger::Size);
+        assert_eq!(out[0].tensors.len(), 2);
+        assert_eq!(out[0].bytes, 80);
+        assert_eq!(f.pending_bytes(), 40);
+    }
+
+    #[test]
+    fn exact_fill_emits() {
+        let mut f = FusionBuffer::new(cfg(80, 1.0));
+        assert!(f.push(GradTensor::sized(0, 40), 0.0).is_empty());
+        let out = f.push(GradTensor::sized(1, 40), 0.0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].bytes, 80);
+        assert_eq!(f.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn timeout_trigger() {
+        let mut f = FusionBuffer::new(cfg(1000, 0.005));
+        f.push(GradTensor::sized(0, 10), 0.000);
+        assert_eq!(f.deadline(), Some(0.005));
+        assert!(f.poll(0.004).is_none());
+        let b = f.poll(0.005).unwrap();
+        assert_eq!(b.trigger, Trigger::Timeout);
+        assert_eq!(b.bytes, 10);
+        assert!(f.poll(0.006).is_none(), "empty buffer never times out");
+    }
+
+    #[test]
+    fn window_starts_at_first_tensor() {
+        let approx = |a: Option<f64>, b: f64| (a.unwrap() - b).abs() < 1e-12;
+        let mut f = FusionBuffer::new(cfg(1000, 0.005));
+        f.push(GradTensor::sized(0, 10), 0.100);
+        assert!(approx(f.deadline(), 0.105));
+        // Second tensor does NOT extend the window (Horovod semantics).
+        f.push(GradTensor::sized(1, 10), 0.104);
+        assert!(approx(f.deadline(), 0.105));
+    }
+
+    #[test]
+    fn push_after_expiry_emits_old_window_first() {
+        let mut f = FusionBuffer::new(cfg(1000, 0.005));
+        f.push(GradTensor::sized(0, 10), 0.0);
+        let out = f.push(GradTensor::sized(1, 20), 0.010);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].trigger, Trigger::Timeout);
+        assert_eq!(out[0].tensors[0].layer, 0);
+        assert_eq!(f.pending_bytes(), 20);
+    }
+
+    #[test]
+    fn oversized_tensor_ships_alone() {
+        // VGG16's 400 MB fc layer against a 64 MB buffer.
+        let mut f = FusionBuffer::new(cfg(64 << 20, 5e-3));
+        f.push(GradTensor::sized(0, 1 << 20), 0.0);
+        let out = f.push(GradTensor::sized(1, 400 << 20), 0.001);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].bytes, 1 << 20);
+        assert_eq!(out[1].bytes, 400 << 20);
+        assert_eq!(out[1].tensors.len(), 1);
+        assert_eq!(f.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn flush_emits_remainder() {
+        let mut f = FusionBuffer::new(cfg(100, 1.0));
+        f.push(GradTensor::sized(0, 30), 0.0);
+        let b = f.flush().unwrap();
+        assert_eq!(b.trigger, Trigger::Flush);
+        assert_eq!(b.bytes, 30);
+        assert!(f.flush().is_none());
+    }
+
+    #[test]
+    fn property_conservation_and_order() {
+        // Every pushed byte comes out exactly once, in layer order.
+        prop::forall("fusion conserves bytes/order", 100, |rng| {
+            let buffer = prop::usize_in(rng, 50..=5000);
+            let timeout = rng.range_f64(0.001, 0.01);
+            let mut f = FusionBuffer::new(cfg(buffer, timeout));
+            let n = prop::usize_in(rng, 1..=60);
+            let mut now = 0.0;
+            let mut pushed_bytes = 0u64;
+            let mut emitted: Vec<usize> = Vec::new();
+            let mut emitted_bytes = 0u64;
+            for layer in 0..n {
+                let sz = prop::usize_in(rng, 1..=2000);
+                pushed_bytes += sz as u64;
+                now += rng.range_f64(0.0, 0.004);
+                for b in f.push(GradTensor::sized(layer, sz), now) {
+                    emitted_bytes += b.bytes as u64;
+                    emitted.extend(b.tensors.iter().map(|t| t.layer));
+                }
+            }
+            if let Some(b) = f.flush() {
+                emitted_bytes += b.bytes as u64;
+                emitted.extend(b.tensors.iter().map(|t| t.layer));
+            }
+            if emitted_bytes != pushed_bytes {
+                return Err(format!("bytes {emitted_bytes} != {pushed_bytes}"));
+            }
+            let want: Vec<usize> = (0..n).collect();
+            if emitted != want {
+                return Err(format!("order {emitted:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn buckets_never_exceed_limit_unless_single_tensor() {
+        prop::forall("fusion size bound", 100, |rng| {
+            let buffer = prop::usize_in(rng, 100..=1000);
+            let mut f = FusionBuffer::new(cfg(buffer, 0.005));
+            let mut now = 0.0;
+            for layer in 0..40 {
+                let sz = prop::usize_in(rng, 1..=buffer * 2);
+                now += 0.001;
+                for b in f.push(GradTensor::sized(layer, sz), now) {
+                    if b.bytes > buffer && b.tensors.len() != 1 {
+                        return Err(format!(
+                            "multi-tensor bucket of {} > limit {}",
+                            b.bytes, buffer
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

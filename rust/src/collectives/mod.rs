@@ -1,0 +1,152 @@
+//! Collective operations over a [`crate::net::Endpoint`] fabric, plus the
+//! Horovod-style gradient **fusion buffer**.
+//!
+//! The all-reduce algorithms here are the real thing — they move real
+//! bytes and produce numerically correct sums — and are shared by the
+//! integration tests, the emulated trainer, and the e2e example. The
+//! what-if simulator ([`crate::sim`]) instead uses the paper's analytic
+//! cost model of the *same* ring algorithm, which is why the two can be
+//! compared apples-to-apples.
+
+pub mod fusion;
+pub mod ps;
+pub mod reduce;
+pub mod ring;
+pub mod tree;
+
+use crate::net::{tag, tags, Endpoint};
+use crate::Result;
+
+/// Serialize an f32 slice to little-endian bytes (allocating copy; kept
+/// as the readable reference — the hot path uses [`f32s_as_bytes`]).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize little-endian bytes to f32s (allocating; hot path uses
+/// [`bytes_to_f32s_into`]).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    anyhow::ensure!(bytes.len() % 4 == 0, "payload length {} not a multiple of 4", bytes.len());
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Zero-copy view of an f32 slice as wire bytes. Valid because every f32
+/// bit pattern is a valid byte sequence; the wire format is little-endian,
+/// which is asserted at compile time (the supported targets are LE).
+#[inline]
+pub fn f32s_as_bytes(xs: &[f32]) -> &[u8] {
+    const _: () = assert!(cfg!(target_endian = "little"), "wire format is little-endian");
+    // SAFETY: f32 and u8 have no invalid bit patterns; alignment of u8 is 1;
+    // the length is exactly the byte size of the slice.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Decode little-endian bytes into an existing f32 buffer (no allocation).
+#[inline]
+pub fn bytes_to_f32s_into(bytes: &[u8], dst: &mut [f32]) -> Result<()> {
+    anyhow::ensure!(
+        bytes.len() == dst.len() * 4,
+        "payload {} bytes, expected {}",
+        bytes.len(),
+        dst.len() * 4
+    );
+    for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *d = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// Chunk boundaries that split `len` elements into `parts` nearly-equal
+/// contiguous ranges (first `len % parts` ranges get one extra element).
+pub fn split_points(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts >= 1);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Rendezvous barrier over the fabric: everyone sends a token to rank 0,
+/// rank 0 replies. Used to align step boundaries in the emulator.
+pub fn barrier(ep: &dyn Endpoint, step: u32) -> Result<()> {
+    let world = ep.world();
+    let root = crate::topology::WorkerId(0);
+    let t_up = tag(tags::BARRIER, step, 0);
+    let t_down = tag(tags::BARRIER, step, 1);
+    if ep.me() == root {
+        for w in 1..world {
+            ep.recv(crate::topology::WorkerId(w), t_up)?;
+        }
+        for w in 1..world {
+            ep.send(crate::topology::WorkerId(w), t_down, &[])?;
+        }
+    } else {
+        ep.send(root, t_up, &[])?;
+        ep.recv(root, t_down)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let xs = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn split_points_cover_exactly() {
+        for (len, parts) in [(10, 3), (7, 7), (5, 8), (0, 2), (64, 4)] {
+            let ranges = split_points(len, parts);
+            assert_eq!(ranges.len(), parts);
+            let mut covered = 0;
+            let mut expected_start = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expected_start);
+                expected_start = r.end;
+                covered += r.len();
+            }
+            assert_eq!(covered, len);
+            // Near-equal: sizes differ by at most 1.
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn barrier_releases_everyone() {
+        use crate::net::{inproc::InProcFabric, Fabric};
+        let fab = InProcFabric::new(4);
+        let eps = fab.endpoints();
+        let mut hs = Vec::new();
+        for ep in eps {
+            hs.push(std::thread::spawn(move || {
+                barrier(ep.as_ref(), 0).unwrap();
+                barrier(ep.as_ref(), 1).unwrap();
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Parameter-server baseline: every worker pushes its gradient to a single
+//! server (ring member 0), which sums and sends the result back. Wire cost
+//! at the server scales with `N·S` — the centralization bottleneck the
+//! all-reduce strategy avoids. The paper lists PS as a future-work
+//! comparison; we include it so the benches can show the contrast.
+
+use super::{bytes_to_f32s, f32s_as_bytes, reduce::add_assign};
+use crate::net::{tag, tags, Endpoint};
+use crate::topology::Ring;
+use crate::Result;
+
+/// In-place parameter-server all-reduce (sum) over `ring`'s members, with
+/// member 0 acting as the server. Must be called by every member.
+pub fn ps_allreduce(
+    ep: &dyn Endpoint,
+    ring: &Ring,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> Result<()> {
+    let n = ring.len();
+    if n == 1 {
+        return Ok(());
+    }
+    let me = ep.me();
+    let rank = ring
+        .position(me)
+        .ok_or_else(|| anyhow::anyhow!("worker {me} not in the PS group"))?;
+    let server = ring.members()[0];
+    let t_push = tag(tags::PS_PUSH, step, bucket);
+    let t_pull = tag(tags::PS_PULL, step, bucket);
+    if rank == 0 {
+        for &w in &ring.members()[1..] {
+            let inb = ep.recv(w, t_push)?;
+            let incoming = bytes_to_f32s(&inb)?;
+            anyhow::ensure!(incoming.len() == data.len(), "ps push size mismatch");
+            add_assign(data, &incoming);
+        }
+        let out = f32s_as_bytes(data).to_vec();
+        for &w in &ring.members()[1..] {
+            ep.send(w, t_pull, &out)?;
+        }
+    } else {
+        ep.send(server, t_push, f32s_as_bytes(data))?;
+        let inb = ep.recv(server, t_pull)?;
+        let reduced = bytes_to_f32s(&inb)?;
+        anyhow::ensure!(reduced.len() == data.len(), "ps pull size mismatch");
+        data.copy_from_slice(&reduced);
+    }
+    Ok(())
+}
+
+/// Wire bytes through the *server's* NIC for one PS round of `s_bytes`
+/// across `n` members: `(n-1)·S` in plus `(n-1)·S` out.
+pub fn server_wire_bytes(s_bytes: f64, n: usize) -> f64 {
+    if n <= 1 {
+        0.0
+    } else {
+        2.0 * s_bytes * (n as f64 - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reduce::serial_sum;
+    use crate::net::{inproc::InProcFabric, Fabric};
+    use crate::topology::Topology;
+
+    fn run_ps(inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let n = inputs.len();
+        let topo = Topology::new(n, 1);
+        let ring = topo.flat_ring();
+        let fab = InProcFabric::new(n);
+        let eps = fab.endpoints();
+        let mut handles = Vec::new();
+        for (ep, mut data) in eps.into_iter().zip(inputs) {
+            let ring = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                ps_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn sums_across_members() {
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 4]).collect();
+        let want = serial_sum(&inputs);
+        for r in run_ps(inputs) {
+            assert_eq!(r, want);
+        }
+    }
+
+    #[test]
+    fn single_member_identity() {
+        assert_eq!(run_ps(vec![vec![1.0, 2.0]])[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn server_traffic_scales_linearly() {
+        assert_eq!(server_wire_bytes(10.0, 1), 0.0);
+        assert_eq!(server_wire_bytes(10.0, 3), 40.0);
+        // vs ring at the same size: constant ~2S per worker.
+        assert!(server_wire_bytes(10.0, 64) > super::super::ring::wire_bytes_per_worker(10.0, 64) * 30.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! The reduction hot path: element-wise vector add (and average). This is
+//! the CPU cost the paper models as `(N−1)·AddEst(S/N)` — in our stack it
+//! exists twice: here (rust, used on the emulator's hot path) and as the
+//! Pallas `vecadd` kernel (used inside the AOT'd train step). The two are
+//! cross-checked in `rust/tests/`.
+
+/// `dst[i] += src[i]`. The loop is written so LLVM auto-vectorizes it
+/// (no bounds checks in the body; exact-length zip).
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "add_assign length mismatch");
+    // Chunked to give the optimizer a straight-line inner body.
+    const LANES: usize = 8;
+    let n = dst.len();
+    let main = n - n % LANES;
+    let (dm, dt) = dst.split_at_mut(main);
+    let (sm, st) = src.split_at(main);
+    for (d8, s8) in dm.chunks_exact_mut(LANES).zip(sm.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            d8[i] += s8[i];
+        }
+    }
+    for (d, s) in dt.iter_mut().zip(st) {
+        *d += *s;
+    }
+}
+
+/// `dst[i] *= k` — used to turn the all-reduce sum into an average.
+#[inline]
+pub fn scale(dst: &mut [f32], k: f32) {
+    for d in dst.iter_mut() {
+        *d *= k;
+    }
+}
+
+/// Serial reference all-reduce: sum the per-worker vectors. Ground truth
+/// for every collective's correctness tests.
+pub fn serial_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!inputs.is_empty());
+    let mut acc = inputs[0].clone();
+    for x in &inputs[1..] {
+        add_assign(&mut acc, x);
+    }
+    acc
+}
+
+/// Measure the wall time of `add_assign` over vectors of `elems` f32s —
+/// the empirical basis for the simulator's `AddEst` table (§3.1: "we first
+/// empirically evaluate time cost of vector-add with various vector sizes
+/// ... then use linear interpolation").
+pub fn measure_add_seconds(elems: usize, reps: usize) -> f64 {
+    let mut a = vec![1.0f32; elems.max(1)];
+    let b = vec![1.000001f32; elems.max(1)];
+    // Warmup.
+    add_assign(&mut a, &b);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps.max(1) {
+        add_assign(&mut a, &b);
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps.max(1) as f64;
+    std::hint::black_box(&a);
+    dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn add_assign_matches_scalar_loop() {
+        prop::forall("add_assign == scalar", 100, |rng| {
+            let a = prop::vec_f32(rng, 1..=4099, 10.0);
+            let b_full = prop::vec_f32(rng, a.len()..=a.len(), 10.0);
+            let mut got = a.clone();
+            add_assign(&mut got, &b_full);
+            for i in 0..a.len() {
+                let want = a[i] + b_full[i];
+                if got[i] != want {
+                    return Err(format!("idx {i}: {} != {}", got[i], want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_assign_tail_handling() {
+        // Lengths around the LANES boundary.
+        for n in [1usize, 7, 8, 9, 15, 16, 17] {
+            let mut d = vec![1.0f32; n];
+            let s = vec![2.0f32; n];
+            add_assign(&mut d, &s);
+            assert!(d.iter().all(|x| *x == 3.0), "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn add_assign_rejects_mismatch() {
+        add_assign(&mut [1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn scale_averages() {
+        let mut v = vec![4.0f32, 8.0];
+        scale(&mut v, 0.25);
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn serial_sum_is_columnwise() {
+        let s = serial_sum(&[vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]]);
+        assert_eq!(s, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn measure_add_is_positive_and_scales() {
+        let t_small = measure_add_seconds(1 << 10, 10);
+        let t_big = measure_add_seconds(1 << 20, 10);
+        assert!(t_small > 0.0);
+        assert!(t_big > t_small, "big {t_big} <= small {t_small}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Ring all-reduce: reduce-scatter followed by all-gather — the algorithm
+//! Horovod/NCCL run and the one the paper's cost model describes
+//! (per-worker wire traffic `2·S·(N−1)/N`).
+//!
+//! Every worker calls [`ring_allreduce`] with its local gradient vector;
+//! on return the vector holds the element-wise **sum** across the ring.
+
+use super::{f32s_as_bytes, split_points};
+use crate::net::{tag, tags, Endpoint};
+use crate::topology::Ring;
+use crate::Result;
+
+/// Reinterpret received wire bytes as f32s in place of the destination
+/// chunk, adding (reduce-scatter) — no intermediate Vec<f32>.
+#[inline]
+fn add_bytes_assign(dst: &mut [f32], bytes: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        bytes.len() == dst.len() * 4,
+        "chunk size mismatch: got {} bytes, want {}",
+        bytes.len(),
+        dst.len() * 4
+    );
+    for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *d += f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// In-place ring all-reduce of `data` across `ring`. `step` and `bucket`
+/// disambiguate concurrent collectives (tag space). Blocking; must be
+/// called by *every* ring member with identically-sized `data`.
+pub fn ring_allreduce(
+    ep: &dyn Endpoint,
+    ring: &Ring,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> Result<()> {
+    let n = ring.len();
+    if n == 1 {
+        return Ok(());
+    }
+    let me = ep.me();
+    let pos = ring
+        .position(me)
+        .ok_or_else(|| anyhow::anyhow!("worker {me} not a member of the ring"))?;
+    let next = ring.next(me);
+    let prev = ring.prev(me);
+    let chunks = split_points(data.len(), n);
+    // Tag sub-field: bucket in the high 16 bits, round in the low 16.
+    let sub = |round: usize| ((bucket as u32) << 16) | round as u32;
+
+    // Phase 1 — reduce-scatter. After round r, worker at position p holds
+    // the partial sum of chunk (p - r) over r+1 contributors; after n-1
+    // rounds, chunk (p+1) mod n is fully reduced at position p.
+    for round in 0..n - 1 {
+        let send_idx = (pos + n - round) % n;
+        let recv_idx = (pos + n - round - 1) % n;
+        // Zero-copy send view; decode-and-add without an intermediate Vec.
+        ep.send(
+            next,
+            tag(tags::REDUCE_SCATTER, step, sub(round)),
+            f32s_as_bytes(&data[chunks[send_idx].clone()]),
+        )?;
+        let inb = ep.recv(prev, tag(tags::REDUCE_SCATTER, step, sub(round)))?;
+        add_bytes_assign(&mut data[chunks[recv_idx].clone()], &inb)?;
+    }
+
+    // Phase 2 — all-gather. Each worker circulates its fully-reduced chunk.
+    for round in 0..n - 1 {
+        let send_idx = (pos + 1 + n - round) % n;
+        let recv_idx = (pos + n - round) % n;
+        ep.send(
+            next,
+            tag(tags::ALL_GATHER, step, sub(round)),
+            f32s_as_bytes(&data[chunks[send_idx].clone()]),
+        )?;
+        let inb = ep.recv(prev, tag(tags::ALL_GATHER, step, sub(round)))?;
+        super::bytes_to_f32s_into(&inb, &mut data[chunks[recv_idx].clone()])?;
+    }
+    Ok(())
+}
+
+/// Wire bytes each worker sends for one ring all-reduce of `s_bytes` —
+/// the paper's `2·S·(N−1)/N`.
+pub fn wire_bytes_per_worker(s_bytes: f64, n: usize) -> f64 {
+    if n <= 1 {
+        0.0
+    } else {
+        2.0 * s_bytes * (n as f64 - 1.0) / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reduce::serial_sum;
+    use crate::net::{inproc::InProcFabric, Fabric};
+    use crate::topology::Topology;
+    use crate::util::{prop, Rng};
+    use std::sync::Arc;
+
+    /// Run a full ring all-reduce across `n` threads and return each
+    /// worker's result.
+    fn run_ring(inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let n = inputs.len();
+        let topo = Topology::new(n, 1);
+        let ring = topo.flat_ring();
+        let fab = InProcFabric::new(n);
+        let eps = fab.endpoints();
+        let mut handles = Vec::new();
+        for (ep, mut data) in eps.into_iter().zip(inputs) {
+            let ring = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                ring_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn two_workers_sum() {
+        let results = run_ring(vec![vec![1.0, 2.0, 3.0], vec![10.0, 20.0, 30.0]]);
+        for r in results {
+            assert_eq!(r, vec![11.0, 22.0, 33.0]);
+        }
+    }
+
+    #[test]
+    fn four_workers_arbitrary_len() {
+        // Length not divisible by ring size exercises uneven chunks.
+        let mut rng = Rng::new(42);
+        let inputs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = vec![0.0f32; 101];
+                rng.fill_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let want = serial_sum(&inputs);
+        for r in run_ring(inputs) {
+            for (a, b) in r.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let results = run_ring(vec![vec![5.0, 6.0]]);
+        assert_eq!(results[0], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn len_smaller_than_ring() {
+        // 4 workers, 2 elements → some chunks are empty.
+        let inputs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32, 1.0]).collect();
+        let want = serial_sum(&inputs);
+        for r in run_ring(inputs) {
+            assert_eq!(r, want);
+        }
+    }
+
+    #[test]
+    fn property_all_ranks_agree_and_match_serial() {
+        prop::forall("ring == serial", 15, |rng| {
+            let n = prop::usize_in(rng, 2..=5);
+            let len = prop::usize_in(rng, 1..=257);
+            let inputs: Vec<Vec<f32>> =
+                (0..n).map(|_| prop::vec_f32(rng, len..=len, 5.0)).collect();
+            let want = serial_sum(&inputs);
+            let results = run_ring(inputs);
+            for r in &results {
+                if r.len() != want.len() {
+                    return Err("length changed".into());
+                }
+                for i in 0..want.len() {
+                    if (r[i] - want[i]).abs() > 1e-3 {
+                        return Err(format!("elem {i}: {} vs {}", r[i], want[i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_buckets_do_not_cross() {
+        // Two all-reduces in flight under different bucket ids.
+        let n = 3;
+        let topo = Topology::new(n, 1);
+        let ring = topo.flat_ring();
+        let fab = InProcFabric::new(n);
+        let eps = fab.endpoints();
+        let mut handles = Vec::new();
+        for (i, ep) in eps.into_iter().enumerate() {
+            let ring = ring.clone();
+            let ep: Arc<dyn crate::net::Endpoint> = ep;
+            handles.push(std::thread::spawn(move || {
+                let mut a = vec![i as f32; 10];
+                let mut b = vec![(i * 100) as f32; 7];
+                ring_allreduce(ep.as_ref(), &ring, 5, 0, &mut a).unwrap();
+                ring_allreduce(ep.as_ref(), &ring, 5, 1, &mut b).unwrap();
+                (a, b)
+            }));
+        }
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert_eq!(a, vec![3.0; 10]); // 0+1+2
+            assert_eq!(b, vec![300.0; 7]); // 0+100+200
+        }
+    }
+
+    #[test]
+    fn wire_bytes_formula() {
+        assert_eq!(wire_bytes_per_worker(100.0, 1), 0.0);
+        assert_eq!(wire_bytes_per_worker(100.0, 2), 100.0);
+        assert!((wire_bytes_per_worker(527e6, 64) - 2.0 * 527e6 * 63.0 / 64.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Binary-tree all-reduce baseline: reduce up a binomial tree to the root,
+//! then broadcast down. Wire cost per step is `O(S·log N)` on the critical
+//! path vs the ring's `2S(N−1)/N` — included so benches can contrast the
+//! algorithms the way the paper's §3.1 model assumes ring.
+
+use super::{bytes_to_f32s, f32s_as_bytes, reduce::add_assign};
+use crate::net::{tag, tags, Endpoint};
+use crate::topology::{Ring, WorkerId};
+use crate::Result;
+
+/// In-place binomial-tree all-reduce (sum) over the members of `ring`
+/// (the ring order provides a stable rank assignment; no ring links are
+/// implied). Must be called by every member.
+pub fn tree_allreduce(
+    ep: &dyn Endpoint,
+    ring: &Ring,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> Result<()> {
+    let n = ring.len();
+    if n == 1 {
+        return Ok(());
+    }
+    let me = ep.me();
+    let rank = ring
+        .position(me)
+        .ok_or_else(|| anyhow::anyhow!("worker {me} not a member of the tree group"))?;
+    let member = |r: usize| -> WorkerId { ring.members()[r] };
+    let sub = |round: usize| ((bucket as u32) << 16) | round as u32;
+
+    // Reduce phase: in round k, ranks with the (1<<k) bit set send to
+    // rank - (1<<k) and drop out; receivers accumulate.
+    let mut k = 0usize;
+    loop {
+        let bit = 1usize << k;
+        if bit >= n {
+            break;
+        }
+        if rank & (bit - 1) != 0 {
+            // Already sent in an earlier round.
+            k += 1;
+            continue;
+        }
+        if rank & bit != 0 {
+            let dst = rank - bit;
+            ep.send(member(dst), tag(tags::TREE_UP, step, sub(k)), f32s_as_bytes(data))?;
+            break; // sender's reduce role is done
+        } else if rank + bit < n {
+            let src = rank + bit;
+            let inb = ep.recv(member(src), tag(tags::TREE_UP, step, sub(k)))?;
+            let incoming = bytes_to_f32s(&inb)?;
+            anyhow::ensure!(incoming.len() == data.len(), "tree reduce size mismatch");
+            add_assign(data, &incoming);
+        }
+        k += 1;
+    }
+
+    // Broadcast phase: mirror image — root sends down the same tree.
+    let rounds = (0..).take_while(|k| (1usize << k) < n).count();
+    for k in (0..rounds).rev() {
+        let bit = 1usize << k;
+        if rank & (bit - 1) != 0 {
+            continue;
+        }
+        if rank & bit != 0 {
+            let src = rank - bit;
+            let inb = ep.recv(member(src), tag(tags::TREE_DOWN, step, sub(k)))?;
+            let incoming = bytes_to_f32s(&inb)?;
+            anyhow::ensure!(incoming.len() == data.len(), "tree bcast size mismatch");
+            data.copy_from_slice(&incoming);
+        } else if rank + bit < n {
+            let dst = rank + bit;
+            ep.send(member(dst), tag(tags::TREE_DOWN, step, sub(k)), f32s_as_bytes(data))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::reduce::serial_sum;
+    use crate::net::{inproc::InProcFabric, Fabric};
+    use crate::topology::Topology;
+    use crate::util::prop;
+
+    fn run_tree(inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let n = inputs.len();
+        let topo = Topology::new(n, 1);
+        let ring = topo.flat_ring();
+        let fab = InProcFabric::new(n);
+        let eps = fab.endpoints();
+        let mut handles = Vec::new();
+        for (ep, mut data) in eps.into_iter().zip(inputs) {
+            let ring = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                tree_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn powers_of_two_and_odd_sizes() {
+        for n in [2usize, 3, 4, 5, 7, 8] {
+            let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32, 1.0, -(i as f32)]).collect();
+            let want = serial_sum(&inputs);
+            for r in run_tree(inputs) {
+                assert_eq!(r, want, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_identity() {
+        let r = run_tree(vec![vec![9.0]]);
+        assert_eq!(r[0], vec![9.0]);
+    }
+
+    #[test]
+    fn property_matches_serial() {
+        prop::forall("tree == serial", 12, |rng| {
+            let n = prop::usize_in(rng, 2..=6);
+            let len = prop::usize_in(rng, 1..=64);
+            let inputs: Vec<Vec<f32>> =
+                (0..n).map(|_| prop::vec_f32(rng, len..=len, 3.0)).collect();
+            let want = serial_sum(&inputs);
+            for r in run_tree(inputs) {
+                for i in 0..want.len() {
+                    if (r[i] - want[i]).abs() > 1e-3 {
+                        return Err(format!("elem {i}: {} vs {}", r[i], want[i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,449 @@
+//! Codec implementations. All stateless; the error-feedback residual for
+//! lossy codecs lives in [`super::error_feedback`].
+
+use super::CodecKind;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::ensure;
+
+/// Compressed payload + metadata needed to reconstruct.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub kind_name: String,
+    /// Original element count.
+    pub len: usize,
+    /// Wire bytes.
+    pub bytes: Vec<u8>,
+}
+
+impl Encoded {
+    /// Achieved compression ratio for this payload.
+    pub fn achieved_ratio(&self) -> f64 {
+        (self.len * 4) as f64 / self.bytes.len().max(1) as f64
+    }
+}
+
+/// Compress `data` with `kind`. `seed` feeds RandomK (both encode and
+/// decode must agree on the seed; the trainer derives it from the step).
+pub fn encode(kind: CodecKind, data: &[f32], seed: u64) -> Encoded {
+    let bytes = match kind {
+        CodecKind::Fp16 => fp16_encode(data),
+        CodecKind::Int8 => int8_encode(data),
+        CodecKind::TopK { k_fraction } => topk_encode(data, k_fraction),
+        CodecKind::RandomK { k_fraction } => randk_encode(data, k_fraction, seed),
+        CodecKind::OneBit => onebit_encode(data),
+    };
+    Encoded { kind_name: kind.name(), len: data.len(), bytes }
+}
+
+/// Decompress. Sparse codecs return dense vectors with zeros at dropped
+/// coordinates.
+pub fn decode(kind: CodecKind, enc: &Encoded, seed: u64) -> Result<Vec<f32>> {
+    match kind {
+        CodecKind::Fp16 => fp16_decode(&enc.bytes, enc.len),
+        CodecKind::Int8 => int8_decode(&enc.bytes, enc.len),
+        CodecKind::TopK { .. } => topk_decode(&enc.bytes, enc.len),
+        CodecKind::RandomK { k_fraction } => randk_decode(&enc.bytes, enc.len, k_fraction, seed),
+        CodecKind::OneBit => onebit_decode(&enc.bytes, enc.len),
+    }
+}
+
+// ------------------------------------------------------------------- fp16
+
+/// f32 → IEEE 754 half, round-to-nearest-even, with overflow → ±inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // Inf/NaN.
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal half.
+        let half_exp = (unbiased + 15) as u32;
+        let half_mant = mant >> 13;
+        // Round to nearest even on the dropped 13 bits.
+        let round_bits = mant & 0x1fff;
+        let mut h = ((half_exp << 10) | half_mant) as u16;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
+            h += 1; // may carry into exponent — that's correct rounding
+        }
+        return sign | h;
+    }
+    if unbiased >= -24 {
+        // Subnormal half.
+        let shift = (-unbiased - 14) as u32 + 13;
+        let full_mant = mant | 0x80_0000;
+        let half_mant = full_mant >> (shift + 1);
+        let round = (full_mant >> shift) & 1;
+        return sign | (half_mant as u16 + round as u16);
+    }
+    sign // underflow → ±0
+}
+
+/// IEEE half bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+fn fp16_encode(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for x in data {
+        out.extend_from_slice(&f32_to_f16_bits(*x).to_le_bytes());
+    }
+    out
+}
+
+fn fp16_decode(bytes: &[u8], len: usize) -> Result<Vec<f32>> {
+    ensure!(bytes.len() == len * 2, "fp16 payload size");
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect())
+}
+
+// ------------------------------------------------------------------- int8
+
+/// Per-buffer linear quantization: scale = max|x| / 127.
+fn int8_encode(data: &[f32]) -> Vec<u8> {
+    let max_abs = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let mut out = Vec::with_capacity(4 + data.len());
+    out.extend_from_slice(&scale.to_le_bytes());
+    for x in data {
+        let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        out.push(q as u8);
+    }
+    out
+}
+
+fn int8_decode(bytes: &[u8], len: usize) -> Result<Vec<f32>> {
+    ensure!(bytes.len() == 4 + len, "int8 payload size");
+    let scale = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    Ok(bytes[4..].iter().map(|b| (*b as i8) as f32 * scale).collect())
+}
+
+// ------------------------------------------------------------------- topk
+
+fn kept_count(len: usize, k_fraction: f64) -> usize {
+    ((len as f64 * k_fraction).ceil() as usize).clamp(1, len.max(1))
+}
+
+/// Keep the `k_fraction` largest-magnitude coordinates:
+/// wire = [u32 count][u32 idx]*k [f32 val]*k.
+fn topk_encode(data: &[f32], k_fraction: f64) -> Vec<u8> {
+    let k = kept_count(data.len(), k_fraction);
+    let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+    // Partial selection by magnitude (descending).
+    let nth = k.saturating_sub(1).min(idx.len() - 1);
+    idx.select_nth_unstable_by(nth, |a, b| {
+        data[*b as usize]
+            .abs()
+            .partial_cmp(&data[*a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    let mut out = Vec::with_capacity(4 + k * 8);
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    for i in &idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for i in &idx {
+        out.extend_from_slice(&data[*i as usize].to_le_bytes());
+    }
+    out
+}
+
+fn topk_decode(bytes: &[u8], len: usize) -> Result<Vec<f32>> {
+    ensure!(bytes.len() >= 4, "topk payload too short");
+    let k = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    ensure!(bytes.len() == 4 + k * 8, "topk payload size");
+    let mut out = vec![0.0f32; len];
+    let idx_bytes = &bytes[4..4 + k * 4];
+    let val_bytes = &bytes[4 + k * 4..];
+    for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
+        let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+        ensure!(i < len, "topk index {i} out of range {len}");
+        out[i] = f32::from_le_bytes(vb.try_into().unwrap());
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------------- randomk
+
+/// Random-k: indices are *not* sent — both sides regenerate them from the
+/// shared seed. Values are scaled by 1/k so the estimate is unbiased.
+fn randk_indices(len: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    let mut idx: Vec<usize> = (0..len).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+fn randk_encode(data: &[f32], k_fraction: f64, seed: u64) -> Vec<u8> {
+    let k = kept_count(data.len(), k_fraction);
+    let idx = randk_indices(data.len(), k, seed);
+    let inv_k = 1.0 / k_fraction.min(1.0) as f32;
+    let mut out = Vec::with_capacity(idx.len() * 4);
+    for i in idx {
+        out.extend_from_slice(&(data[i] * inv_k).to_le_bytes());
+    }
+    out
+}
+
+fn randk_decode(bytes: &[u8], len: usize, k_fraction: f64, seed: u64) -> Result<Vec<f32>> {
+    let k = kept_count(len, k_fraction);
+    ensure!(bytes.len() == k * 4, "randk payload size");
+    let idx = randk_indices(len, k, seed);
+    let mut out = vec![0.0f32; len];
+    for (i, vb) in idx.into_iter().zip(bytes.chunks_exact(4)) {
+        out[i] = f32::from_le_bytes(vb.try_into().unwrap());
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ 1-bit
+
+/// 1-bit SGD: sign bitmap + one mean magnitude for positives and one for
+/// negatives (per buffer).
+fn onebit_encode(data: &[f32]) -> Vec<u8> {
+    let (mut pos_sum, mut pos_n, mut neg_sum, mut neg_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for x in data {
+        if *x >= 0.0 {
+            pos_sum += *x as f64;
+            pos_n += 1;
+        } else {
+            neg_sum += *x as f64;
+            neg_n += 1;
+        }
+    }
+    let pos_mean = if pos_n > 0 { (pos_sum / pos_n as f64) as f32 } else { 0.0 };
+    let neg_mean = if neg_n > 0 { (neg_sum / neg_n as f64) as f32 } else { 0.0 };
+    let mut out = Vec::with_capacity(8 + data.len().div_ceil(8));
+    out.extend_from_slice(&pos_mean.to_le_bytes());
+    out.extend_from_slice(&neg_mean.to_le_bytes());
+    let mut byte = 0u8;
+    for (i, x) in data.iter().enumerate() {
+        if *x >= 0.0 {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if data.len() % 8 != 0 {
+        out.push(byte);
+    }
+    out
+}
+
+fn onebit_decode(bytes: &[u8], len: usize) -> Result<Vec<f32>> {
+    ensure!(bytes.len() == 8 + len.div_ceil(8), "onebit payload size");
+    let pos = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let neg = f32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let bitmap = &bytes[8..];
+    Ok((0..len)
+        .map(|i| if bitmap[i / 8] >> (i % 8) & 1 == 1 { pos } else { neg })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn l2(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    fn norm(a: &[f32]) -> f64 {
+        a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt().max(1e-12)
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        for (x, h) in [(0.0f32, 0u16), (1.0, 0x3c00), (-2.0, 0xc000), (65504.0, 0x7bff)] {
+            assert_eq!(f32_to_f16_bits(x), h, "{x}");
+            assert_eq!(f16_bits_to_f32(h), x, "{h:#x}");
+        }
+        assert_eq!(f32_to_f16_bits(1e30), 0x7c00); // overflow → inf
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+    }
+
+    #[test]
+    fn fp16_round_trip_precision() {
+        prop::forall("fp16 relative error < 0.1%", 100, |rng| {
+            let xs = prop::vec_f32(rng, 1..=300, 10.0);
+            let enc = encode(CodecKind::Fp16, &xs, 0);
+            let dec = decode(CodecKind::Fp16, &enc, 0).unwrap();
+            for (a, b) in xs.iter().zip(&dec) {
+                let rel = (a - b).abs() / a.abs().max(1e-3);
+                if rel > 1e-3 {
+                    return Err(format!("{a} -> {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_error_bounded_by_scale() {
+        prop::forall("int8 |err| <= scale/2", 100, |rng| {
+            let xs = prop::vec_f32(rng, 1..=500, 50.0);
+            let enc = encode(CodecKind::Int8, &xs, 0);
+            let dec = decode(CodecKind::Int8, &enc, 0).unwrap();
+            let max_abs = xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let scale = max_abs / 127.0;
+            for (a, b) in xs.iter().zip(&dec) {
+                if (a - b).abs() > scale * 0.5 + 1e-7 {
+                    return Err(format!("{a} -> {b}, scale {scale}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let xs = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let enc = encode(CodecKind::TopK { k_fraction: 0.4 }, &xs, 0);
+        let dec = decode(CodecKind::TopK { k_fraction: 0.4 }, &enc, 0).unwrap();
+        assert_eq!(dec, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_reduces_error_vs_zero() {
+        prop::forall("topk beats dropping everything", 50, |rng| {
+            let xs = prop::vec_f32(rng, 10..=500, 1.0);
+            let kind = CodecKind::TopK { k_fraction: 0.25 };
+            let dec = decode(kind, &encode(kind, &xs, 0), 0).unwrap();
+            let zero = vec![0.0f32; xs.len()];
+            if l2(&xs, &dec) <= l2(&xs, &zero) {
+                Ok(())
+            } else {
+                Err("topk worse than zeros".into())
+            }
+        });
+    }
+
+    #[test]
+    fn randk_same_seed_reconstructs_unbiased_scale() {
+        // Values start at 1 so "kept" is detectable as nonzero.
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let kind = CodecKind::RandomK { k_fraction: 0.5 };
+        let dec = decode(kind, &encode(kind, &xs, 42), 42).unwrap();
+        // Kept coordinates are scaled by 1/k = 2.
+        let kept: Vec<(usize, f32)> =
+            dec.iter().cloned().enumerate().filter(|(_, v)| *v != 0.0).collect();
+        assert_eq!(kept.len(), 50);
+        for (i, v) in kept {
+            assert_eq!(v, xs[i] * 2.0);
+        }
+    }
+
+    #[test]
+    fn randk_different_seed_fails_cleanly() {
+        // Different seeds → different index sets; decode still succeeds
+        // structurally (payload size is seed-independent).
+        let xs: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let kind = CodecKind::RandomK { k_fraction: 0.25 };
+        let enc = encode(kind, &xs, 1);
+        let dec = decode(kind, &enc, 2).unwrap();
+        assert_eq!(dec.len(), xs.len());
+    }
+
+    #[test]
+    fn onebit_preserves_signs_and_mean() {
+        let xs = vec![1.0f32, 2.0, 3.0, -1.0, -3.0];
+        let enc = encode(CodecKind::OneBit, &xs, 0);
+        let dec = decode(CodecKind::OneBit, &enc, 0).unwrap();
+        assert_eq!(dec, vec![2.0, 2.0, 2.0, -2.0, -2.0]);
+    }
+
+    #[test]
+    fn achieved_ratios_near_nominal_for_large_buffers() {
+        let xs: Vec<f32> = (0..100_000).map(|i| (i as f32).sin()).collect();
+        for kind in [CodecKind::Fp16, CodecKind::Int8, CodecKind::OneBit] {
+            let enc = encode(kind, &xs, 0);
+            let nominal = kind.nominal_ratio();
+            let achieved = enc.achieved_ratio();
+            assert!(
+                (achieved - nominal).abs() / nominal < 0.05,
+                "{kind:?}: {achieved} vs {nominal}"
+            );
+        }
+        let kind = CodecKind::TopK { k_fraction: 0.01 };
+        let enc = encode(kind, &xs, 0);
+        assert!((enc.achieved_ratio() - 50.0).abs() < 5.0, "{}", enc.achieved_ratio());
+    }
+
+    #[test]
+    fn all_codecs_handle_edge_vectors() {
+        prop::forall("codecs round-trip structurally on edgy data", 60, |rng| {
+            let xs = prop::vec_f32_edgy(rng, 1..=64);
+            for kind in [
+                CodecKind::Fp16,
+                CodecKind::Int8,
+                CodecKind::TopK { k_fraction: 0.3 },
+                CodecKind::RandomK { k_fraction: 0.3 },
+                CodecKind::OneBit,
+            ] {
+                let enc = encode(kind, &xs, 7);
+                let dec = decode(kind, &enc, 7)
+                    .map_err(|e| format!("{kind:?}: {e}"))?;
+                if dec.len() != xs.len() {
+                    return Err(format!("{kind:?}: length {}", dec.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relative_error_ordering_matches_lossiness() {
+        // fp16 < int8 < onebit in reconstruction error, on generic data.
+        let mut rng = crate::util::Rng::new(3);
+        let mut xs = vec![0.0f32; 10_000];
+        rng.fill_f32(&mut xs, 1.0);
+        let err = |kind| {
+            let enc = encode(kind, &xs, 0);
+            let dec = decode(kind, &enc, 0).unwrap();
+            l2(&xs, &dec) / norm(&xs)
+        };
+        let e16 = err(CodecKind::Fp16);
+        let e8 = err(CodecKind::Int8);
+        let e1 = err(CodecKind::OneBit);
+        assert!(e16 < e8 && e8 < e1, "{e16} {e8} {e1}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Error-feedback (memory) for lossy codecs: the quantization/sparsification
+//! residual is carried into the next step's gradient (Seide et al. 2014,
+//! Lin et al. DGC). This is the mechanism that keeps convergence from
+//! collapsing under aggressive compression — and the reason the paper can
+//! say compression "can prolong the convergence time": without residuals
+//! the bias is unbounded; with them it is contained but still costs steps.
+
+use super::{codecs, CodecKind};
+use crate::Result;
+
+/// Per-bucket residual state.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    kind: CodecKind,
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(kind: CodecKind, len: usize) -> ErrorFeedback {
+        ErrorFeedback { kind, residual: vec![0.0; len] }
+    }
+
+    /// Compress `grad + residual`, retaining the new residual locally.
+    /// Returns the encoded payload to ship.
+    pub fn compress(&mut self, grad: &[f32], seed: u64) -> Result<codecs::Encoded> {
+        anyhow::ensure!(grad.len() == self.residual.len(), "error-feedback length mismatch");
+        let corrected: Vec<f32> =
+            grad.iter().zip(&self.residual).map(|(g, r)| g + r).collect();
+        let enc = codecs::encode(self.kind, &corrected, seed);
+        let dec = codecs::decode(self.kind, &enc, seed)?;
+        for ((r, c), d) in self.residual.iter_mut().zip(&corrected).zip(&dec) {
+            *r = c - d;
+        }
+        Ok(enc)
+    }
+
+    pub fn residual_norm(&self) -> f64 {
+        self.residual.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn residual_carries_dropped_mass() {
+        // With top-k keeping 1 of 4 coords, the other 3 must persist in
+        // the residual and eventually ship.
+        let kind = CodecKind::TopK { k_fraction: 0.25 };
+        let mut ef = ErrorFeedback::new(kind, 4);
+        let grad = vec![1.0f32, 0.9, 0.8, 0.7];
+        let enc1 = ef.compress(&grad, 0).unwrap();
+        let dec1 = codecs::decode(kind, &enc1, 0).unwrap();
+        assert_eq!(dec1, vec![1.0, 0.0, 0.0, 0.0]);
+        // Next step, zero fresh gradient: the residual's largest (0.9)
+        // ships now.
+        let enc2 = ef.compress(&[0.0; 4], 1).unwrap();
+        let dec2 = codecs::decode(kind, &enc2, 1).unwrap();
+        assert_eq!(dec2, vec![0.0, 0.9, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn cumulative_transmission_approaches_cumulative_gradient() {
+        // Σ decoded ≈ Σ grads + residual ⇒ ‖Σ grads − Σ decoded‖ = ‖residual‖.
+        let kind = CodecKind::Int8;
+        let n = 256;
+        let mut ef = ErrorFeedback::new(kind, n);
+        let mut rng = Rng::new(9);
+        let mut sum_grad = vec![0.0f64; n];
+        let mut sum_dec = vec![0.0f64; n];
+        for step in 0..50 {
+            let mut g = vec![0.0f32; n];
+            rng.fill_f32(&mut g, 0.1);
+            for (s, v) in sum_grad.iter_mut().zip(&g) {
+                *s += *v as f64;
+            }
+            let enc = ef.compress(&g, step).unwrap();
+            let dec = codecs::decode(kind, &enc, step).unwrap();
+            for (s, v) in sum_dec.iter_mut().zip(&dec) {
+                *s += *v as f64;
+            }
+        }
+        let drift: f64 = sum_grad
+            .iter()
+            .zip(&sum_dec)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!((drift - ef.residual_norm()).abs() < 1e-3, "drift {drift} vs residual {}", ef.residual_norm());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let mut ef = ErrorFeedback::new(CodecKind::Fp16, 4);
+        assert!(ef.compress(&[1.0; 5], 0).is_err());
+    }
+}

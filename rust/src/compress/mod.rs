@@ -1,0 +1,104 @@
+//! Real gradient compression codecs (§3.2's subject). The what-if
+//! simulator only needs a *ratio*; these implementations exist so the
+//! trainer can run compression for real, so the ratio numbers used in
+//! Fig 8 are grounded in working codecs, and so the accuracy cost the
+//! paper warns about ("lossy compression ... can prolong the convergence
+//! time") is measurable (see `examples/compression_lab.rs`).
+//!
+//! Codecs: fp16 (2×), int8 linear quantization (4×), top-k magnitude
+//! sparsification (~`1/k`×), random-k sparsification, and 1-bit SGD
+//! (Seide et al.) with the customary error-feedback residual.
+
+pub mod codecs;
+pub mod error_feedback;
+
+pub use codecs::{decode, encode, Encoded};
+pub use error_feedback::ErrorFeedback;
+
+/// The codec selector (config-file facing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecKind {
+    /// IEEE half precision: 2× smaller, low loss.
+    Fp16,
+    /// Per-chunk linear int8 quantization: 4× smaller.
+    Int8,
+    /// Keep the top `k` fraction of coordinates by magnitude
+    /// (values + u32 indices on the wire).
+    TopK { k_fraction: f64 },
+    /// Keep a uniformly random `k` fraction (cheap, unbiased w/ scaling).
+    RandomK { k_fraction: f64 },
+    /// Sign + per-chunk mean magnitude: ~32× smaller.
+    OneBit,
+}
+
+impl CodecKind {
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "fp16" | "half" => return Some(CodecKind::Fp16),
+            "int8" | "q8" => return Some(CodecKind::Int8),
+            "onebit" | "1bit" | "sign" => return Some(CodecKind::OneBit),
+            _ => {}
+        }
+        // topk:0.01 / randk:0.05
+        if let Some(rest) = lower.strip_prefix("topk:") {
+            return rest.parse().ok().map(|k_fraction| CodecKind::TopK { k_fraction });
+        }
+        if let Some(rest) = lower.strip_prefix("randk:") {
+            return rest.parse().ok().map(|k_fraction| CodecKind::RandomK { k_fraction });
+        }
+        None
+    }
+
+    /// Nominal wire-size ratio (uncompressed / compressed) — what the
+    /// paper's §3.2 model divides the transit time by.
+    pub fn nominal_ratio(&self) -> f64 {
+        match self {
+            CodecKind::Fp16 => 2.0,
+            CodecKind::Int8 => 4.0,
+            // topk sends (f32 value + u32 index) per kept coordinate.
+            CodecKind::TopK { k_fraction } => 1.0 / (k_fraction * 2.0).max(1e-9),
+            // randk regenerates indices from the shared seed: values only.
+            CodecKind::RandomK { k_fraction } => 1.0 / k_fraction.max(1e-9),
+            CodecKind::OneBit => 32.0,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CodecKind::Fp16 => "fp16".into(),
+            CodecKind::Int8 => "int8".into(),
+            CodecKind::TopK { k_fraction } => format!("topk:{k_fraction}"),
+            CodecKind::RandomK { k_fraction } => format!("randk:{k_fraction}"),
+            CodecKind::OneBit => "onebit".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        for k in [
+            CodecKind::Fp16,
+            CodecKind::Int8,
+            CodecKind::TopK { k_fraction: 0.01 },
+            CodecKind::RandomK { k_fraction: 0.05 },
+            CodecKind::OneBit,
+        ] {
+            assert_eq!(CodecKind::parse(&k.name()), Some(k));
+        }
+        assert_eq!(CodecKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn nominal_ratios() {
+        assert_eq!(CodecKind::Fp16.nominal_ratio(), 2.0);
+        assert_eq!(CodecKind::Int8.nominal_ratio(), 4.0);
+        assert_eq!(CodecKind::OneBit.nominal_ratio(), 32.0);
+        // topk 1% → 50× (value+index doubles the per-coordinate cost).
+        assert!((CodecKind::TopK { k_fraction: 0.01 }.nominal_ratio() - 50.0).abs() < 1e-9);
+    }
+}

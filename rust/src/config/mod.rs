@@ -1,0 +1,242 @@
+//! Experiment configuration: typed configs, paper presets, and a small
+//! TOML-subset parser (`[section]`, `key = value`) so experiment files can
+//! be versioned without a serde dependency.
+
+pub mod parser;
+
+use crate::models::ModelId;
+use std::fmt;
+
+/// Which transport the communication phase runs over — the pivot of the
+/// whole paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Idealized transport that achieves 100% of provisioned bandwidth
+    /// (the what-if §3.1 assumption).
+    FullUtilization,
+    /// Mechanistic kernel-TCP model calibrated to the paper's Fig 4
+    /// utilization measurements — reproduces Horovod's "measured" series.
+    KernelTcp,
+    /// Real TCP sockets between local worker threads, shaped by a token
+    /// bucket to the provisioned rate (the emulation path).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "full-utilization" | "ideal" => Some(TransportKind::FullUtilization),
+            "kernel-tcp" | "kernel_tcp" | "horovod" => Some(TransportKind::KernelTcp),
+            "tcp" | "emulated" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            TransportKind::FullUtilization => "full-utilization",
+            TransportKind::KernelTcp => "kernel-tcp",
+            TransportKind::Tcp => "tcp",
+        };
+        f.write_str(s)
+    }
+}
+
+/// All-reduce algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Ring all-reduce: reduce-scatter + all-gather, `2S(N-1)/N` on the wire
+    /// per worker — the paper's §3.1 model and Horovod/NCCL's algorithm.
+    Ring,
+    /// Binary-tree reduce + broadcast baseline (`2S·log2(N)`-ish critical path).
+    Tree,
+    /// Central parameter-server baseline (paper §4 "future work" strategy).
+    ParameterServer,
+}
+
+impl CollectiveKind {
+    pub fn parse(s: &str) -> Option<CollectiveKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(CollectiveKind::Ring),
+            "tree" => Some(CollectiveKind::Tree),
+            "ps" | "parameter-server" => Some(CollectiveKind::ParameterServer),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CollectiveKind::Ring => "ring",
+            CollectiveKind::Tree => "tree",
+            CollectiveKind::ParameterServer => "parameter-server",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Horovod-style gradient fusion ("tensor fusion") parameters. Paper §3.1:
+/// "a timeout window of 5 ms and a gradients buffer size of 64 MB".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FusionConfig {
+    pub buffer_bytes: usize,
+    pub timeout_s: f64,
+}
+
+impl Default for FusionConfig {
+    fn default() -> Self {
+        FusionConfig { buffer_bytes: 64 << 20, timeout_s: 5e-3 }
+    }
+}
+
+/// Gradient compression applied before the wire (what-if §3.2 divides the
+/// transit time by `ratio`; the real codecs live in [`crate::compress`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compression {
+    None,
+    /// Pure what-if ratio (paper's simplification).
+    Ratio(f64),
+    /// Real codec identified by name; its measured ratio is used.
+    Codec(crate::compress::CodecKind),
+}
+
+impl Compression {
+    /// Effective wire-size divisor.
+    pub fn ratio(&self) -> f64 {
+        match self {
+            Compression::None => 1.0,
+            Compression::Ratio(r) => *r,
+            Compression::Codec(c) => c.nominal_ratio(),
+        }
+    }
+}
+
+/// One experiment: a (model, cluster, network, algorithm) point.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelId,
+    /// Number of servers; each has `gpus_per_server` workers.
+    pub servers: usize,
+    /// GPUs per server (p3dn.24xlarge → 8).
+    pub gpus_per_server: usize,
+    /// Per-worker batch size (paper fixes 32).
+    pub batch_per_worker: usize,
+    /// Provisioned inter-server bandwidth in Gbps.
+    pub bandwidth_gbps: f64,
+    pub transport: TransportKind,
+    pub collective: CollectiveKind,
+    pub fusion: FusionConfig,
+    pub compression: Compression,
+    /// Measured steps (after warmup).
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: ModelId::ResNet50,
+            servers: 2,
+            gpus_per_server: 8,
+            batch_per_worker: 32,
+            bandwidth_gbps: 100.0,
+            transport: TransportKind::KernelTcp,
+            collective: CollectiveKind::Ring,
+            fusion: FusionConfig::default(),
+            compression: Compression::None,
+            steps: 30,
+            warmup_steps: 5,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Total workers in the cluster.
+    pub fn workers(&self) -> usize {
+        self.servers * self.gpus_per_server
+    }
+
+    /// The paper's hardware preset: p3dn.24xlarge (8×V100, 100 Gbps).
+    pub fn p3dn(model: ModelId, servers: usize) -> ExperimentConfig {
+        ExperimentConfig { model, servers, ..Default::default() }
+    }
+
+    /// Validate invariants; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.servers == 0 {
+            errs.push("servers must be >= 1".into());
+        }
+        if self.gpus_per_server == 0 {
+            errs.push("gpus_per_server must be >= 1".into());
+        }
+        if self.bandwidth_gbps <= 0.0 {
+            errs.push("bandwidth_gbps must be > 0".into());
+        }
+        if self.fusion.buffer_bytes == 0 {
+            errs.push("fusion.buffer_bytes must be > 0".into());
+        }
+        if self.fusion.timeout_s < 0.0 {
+            errs.push("fusion.timeout_s must be >= 0".into());
+        }
+        if self.compression.ratio() < 1.0 {
+            errs.push("compression ratio must be >= 1".into());
+        }
+        if self.steps == 0 {
+            errs.push("steps must be >= 1".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_paper_shaped() {
+        let c = ExperimentConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.gpus_per_server, 8);
+        assert_eq!(c.batch_per_worker, 32);
+        assert_eq!(c.fusion.buffer_bytes, 64 << 20);
+        assert!((c.fusion.timeout_s - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workers_product() {
+        let c = ExperimentConfig::p3dn(ModelId::Vgg16, 8);
+        assert_eq!(c.workers(), 64);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.servers = 0;
+        c.bandwidth_gbps = -1.0;
+        let errs = c.validate().unwrap_err();
+        assert_eq!(errs.len(), 2);
+    }
+
+    #[test]
+    fn transport_parse() {
+        assert_eq!(TransportKind::parse("ideal"), Some(TransportKind::FullUtilization));
+        assert_eq!(TransportKind::parse("horovod"), Some(TransportKind::KernelTcp));
+        assert_eq!(TransportKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn compression_ratio() {
+        assert_eq!(Compression::None.ratio(), 1.0);
+        assert_eq!(Compression::Ratio(5.0).ratio(), 5.0);
+    }
+}

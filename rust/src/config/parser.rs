@@ -1,0 +1,291 @@
+//! TOML-subset parser for experiment files. Supports:
+//!
+//! * `[section]` headers (one level),
+//! * `key = value` with string (`"..."`), bool, integer, float values,
+//! * `#` comments and blank lines.
+//!
+//! This deliberately covers only what our config files need — it is a
+//! substrate standing in for `toml`+`serde` in the offline build.
+
+use super::{Compression, ExperimentConfig, FusionConfig, TransportKind};
+use crate::config::CollectiveKind;
+use crate::models::ModelId;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value`; top-level keys use section `""`.
+pub type Doc = BTreeMap<String, Value>;
+
+/// Parse TOML-subset text into a flat `section.key` map.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        doc.insert(full, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Integers may use `_` separators like TOML.
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+/// Build an [`ExperimentConfig`] from a parsed doc, starting from defaults.
+/// Recognized keys (all optional):
+///
+/// ```toml
+/// model = "vgg16"            # resnet50 | resnet101 | vgg16 | transformer
+/// servers = 4
+/// gpus_per_server = 8
+/// batch_per_worker = 32
+/// bandwidth_gbps = 100.0
+/// transport = "kernel-tcp"   # full | kernel-tcp | tcp
+/// collective = "ring"        # ring | tree | ps
+/// steps = 30
+/// warmup_steps = 5
+/// seed = 1234
+/// [fusion]
+/// buffer_mb = 64
+/// timeout_ms = 5.0
+/// [compression]
+/// ratio = 4.0                # or codec = "int8"
+/// ```
+pub fn experiment_from_doc(doc: &Doc) -> Result<ExperimentConfig> {
+    let mut c = ExperimentConfig::default();
+    for (key, val) in doc {
+        match key.as_str() {
+            "model" => {
+                let s = val.as_str().ok_or_else(|| anyhow!("model must be a string"))?;
+                c.model = ModelId::parse(s).ok_or_else(|| anyhow!("unknown model {s:?}"))?;
+            }
+            "servers" => c.servers = get_usize(val, key)?,
+            "gpus_per_server" => c.gpus_per_server = get_usize(val, key)?,
+            "batch_per_worker" => c.batch_per_worker = get_usize(val, key)?,
+            "bandwidth_gbps" => {
+                c.bandwidth_gbps = val.as_f64().ok_or_else(|| anyhow!("{key} must be numeric"))?
+            }
+            "transport" => {
+                let s = val.as_str().ok_or_else(|| anyhow!("transport must be a string"))?;
+                c.transport =
+                    TransportKind::parse(s).ok_or_else(|| anyhow!("unknown transport {s:?}"))?;
+            }
+            "collective" => {
+                let s = val.as_str().ok_or_else(|| anyhow!("collective must be a string"))?;
+                c.collective =
+                    CollectiveKind::parse(s).ok_or_else(|| anyhow!("unknown collective {s:?}"))?;
+            }
+            "steps" => c.steps = get_usize(val, key)?,
+            "warmup_steps" => c.warmup_steps = get_usize(val, key)?,
+            "seed" => c.seed = get_usize(val, key)? as u64,
+            "fusion.buffer_mb" => {
+                c.fusion = FusionConfig {
+                    buffer_bytes: (get_f64(val, key)? * 1e6) as usize,
+                    ..c.fusion
+                }
+            }
+            "fusion.timeout_ms" => {
+                c.fusion = FusionConfig { timeout_s: get_f64(val, key)? * 1e-3, ..c.fusion }
+            }
+            "compression.ratio" => c.compression = Compression::Ratio(get_f64(val, key)?),
+            "compression.codec" => {
+                let s = val.as_str().ok_or_else(|| anyhow!("codec must be a string"))?;
+                let kind = crate::compress::CodecKind::parse(s)
+                    .ok_or_else(|| anyhow!("unknown codec {s:?}"))?;
+                c.compression = Compression::Codec(kind);
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+    }
+    c.validate().map_err(|errs| anyhow!("invalid config: {}", errs.join("; ")))?;
+    Ok(c)
+}
+
+/// Parse an experiment config straight from TOML-subset text.
+pub fn experiment_from_str(text: &str) -> Result<ExperimentConfig> {
+    experiment_from_doc(&parse(text)?)
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize> {
+    let i = v.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))?;
+    if i < 0 {
+        bail!("{key} must be non-negative");
+    }
+    Ok(i as usize)
+}
+
+fn get_f64(v: &Value, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("{key} must be numeric"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_sections_comments() {
+        let doc = parse(
+            r#"
+# top comment
+model = "vgg16"   # trailing
+servers = 4
+bandwidth_gbps = 25.0
+flag = true
+[fusion]
+buffer_mb = 32
+timeout_ms = 2.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["model"], Value::Str("vgg16".into()));
+        assert_eq!(doc["servers"], Value::Int(4));
+        assert_eq!(doc["bandwidth_gbps"], Value::Float(25.0));
+        assert_eq!(doc["flag"], Value::Bool(true));
+        assert_eq!(doc["fusion.buffer_mb"], Value::Int(32));
+        assert_eq!(doc["fusion.timeout_ms"], Value::Float(2.5));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc["name"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn full_experiment_round_trip() {
+        let c = experiment_from_str(
+            r#"
+model = "resnet101"
+servers = 8
+bandwidth_gbps = 10
+transport = "full"
+collective = "tree"
+[fusion]
+buffer_mb = 64
+timeout_ms = 5.0
+[compression]
+ratio = 4.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, ModelId::ResNet101);
+        assert_eq!(c.servers, 8);
+        assert_eq!(c.bandwidth_gbps, 10.0);
+        assert_eq!(c.transport, TransportKind::FullUtilization);
+        assert_eq!(c.collective, CollectiveKind::Tree);
+        assert_eq!(c.compression.ratio(), 4.0);
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        assert!(experiment_from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn bad_section_reports_line() {
+        let err = parse("[oops").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        assert!(experiment_from_str("servers = 0").is_err());
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc["n"], Value::Int(1_000_000));
+    }
+}

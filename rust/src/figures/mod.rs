@@ -1,0 +1,304 @@
+//! Per-figure experiment drivers: each paper figure gets a runner that
+//! regenerates its data (via the what-if simulator and/or the emulator),
+//! renders it, writes CSV, and evaluates the paper-shape checks (who
+//! wins, by what factor, where the knees fall).
+
+use crate::models::ModelId;
+use crate::report::{render_checks, Check, Figure};
+use crate::sim::whatif;
+use crate::Result;
+use std::path::Path;
+
+/// Output of one figure run.
+pub struct FigureRun {
+    pub figures: Vec<Figure>,
+    pub checks: Vec<Check>,
+}
+
+impl FigureRun {
+    /// Render everything (figures + checks) and persist CSVs.
+    pub fn emit(&self, out_dir: &Path) -> Result<bool> {
+        for f in &self.figures {
+            println!("{}", f.render());
+            let path = f.write_csv(out_dir)?;
+            println!("  -> {}", path.display());
+        }
+        let (text, ok) = render_checks(&self.checks);
+        println!("paper-shape checks:\n{text}");
+        Ok(ok)
+    }
+}
+
+/// All known figure ids.
+pub const FIGURE_IDS: [&str; 8] = ["1", "2", "3", "4", "5", "6", "7", "8"];
+
+/// Run one figure by id ("1".."8").
+pub fn run_figure(id: &str) -> Result<FigureRun> {
+    match id {
+        "1" => Ok(fig1()),
+        "2" => Ok(fig2()),
+        "3" => Ok(fig3()),
+        "4" => Ok(fig4()),
+        "5" => Ok(fig5()),
+        "6" => Ok(fig6()),
+        "7" => Ok(fig7()),
+        "8" => Ok(fig8()),
+        other => anyhow::bail!("unknown figure {other:?}; known: {FIGURE_IDS:?}"),
+    }
+}
+
+fn fig1() -> FigureRun {
+    let f = whatif::fig1_scaling_vs_servers();
+    let mut checks = Vec::new();
+    // Paper: 56%–76% overall; ResNet50 best, VGG16 worst at every point.
+    for servers in whatif::SERVER_COUNTS {
+        let x = servers as f64;
+        let rn50 = f.series("ResNet50").unwrap().y_at(x).unwrap();
+        let rn101 = f.series("ResNet101").unwrap().y_at(x).unwrap();
+        let vgg = f.series("VGG16").unwrap().y_at(x).unwrap();
+        checks.push(Check::assert(
+            format!("fig1@{servers}srv ordering rn50>rn101>vgg16"),
+            rn50 > rn101 && rn101 > vgg,
+            format!("{rn50:.3} / {rn101:.3} / {vgg:.3}"),
+        ));
+        // Band: paper measured 0.56–0.76; our hierarchical NIC accounting
+        // (per-NIC traffic 2S(M−1)/M over M servers, vs the paper's
+        // flat-ring-over-GPUs approximation) runs the 2-server points
+        // ~10 pts higher — see EXPERIMENTS.md §Deviations.
+        checks.push(Check::assert(
+            format!("fig1@{servers}srv all within band 0.45–0.90"),
+            [rn50, rn101, vgg].iter().all(|v| (0.45..=0.90).contains(v)),
+            "paper: 0.56–0.76".to_string(),
+        ));
+    }
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig2() -> FigureRun {
+    let f = whatif::fig2_computation_time();
+    let mut checks = Vec::new();
+    for s in &f.series {
+        let single = s.y_at(1.0).unwrap();
+        let at2 = s.y_at(2.0).unwrap();
+        let at8 = s.y_at(8.0).unwrap();
+        checks.push(Check::assert(
+            format!("fig2 {} flat across 2–8 servers", s.name),
+            (at2 - at8).abs() / at2 < 0.02,
+            format!("{at2:.1} ms vs {at8:.1} ms"),
+        ));
+        checks.push(Check::assert(
+            format!("fig2 {} distributed ≤ 15% above single GPU", s.name),
+            at8 / single <= 1.15 + 1e-9 && at8 / single >= 1.0,
+            format!("ratio {:.3}", at8 / single),
+        ));
+    }
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig3() -> FigureRun {
+    let f = whatif::fig3_scaling_vs_bandwidth(ModelId::ResNet50);
+    let mut checks = Vec::new();
+    for s in &f.series {
+        let low_gain = s.y_at(10.0).unwrap() - s.y_at(1.0).unwrap();
+        let high_gain = s.y_at(100.0).unwrap() - s.y_at(25.0).unwrap();
+        checks.push(Check::assert(
+            format!("fig3 {} plateaus after 25 Gbps", s.name),
+            high_gain < low_gain * 0.4,
+            format!("Δ(1→10)={low_gain:.3}, Δ(25→100)={high_gain:.3}"),
+        ));
+    }
+    // Paper: 2 servers grow 13% → ~68% from 1 to 10 Gbps.
+    let s2 = f.series("2 servers").unwrap();
+    checks.push(Check::assert(
+        "fig3 2srv @1Gbps deeply degraded (paper: 13%)",
+        s2.y_at(1.0).unwrap() < 0.30,
+        format!("{:.3}", s2.y_at(1.0).unwrap()),
+    ));
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig4() -> FigureRun {
+    let f = whatif::fig4_network_utilization();
+    let cap = f.series("transport achievable").unwrap();
+    let checks = vec![
+        Check::assert(
+            "fig4 ≈ full utilization at 1 Gbps",
+            cap.y_at(1.0).unwrap() > 0.99,
+            format!("{:.3}", cap.y_at(1.0).unwrap()),
+        ),
+        Check::assert(
+            "fig4 ≤ 32/100 at 100 Gbps (paper: 'no more than 32 Gbps')",
+            cap.y_at(100.0).unwrap() <= 0.32,
+            format!("{:.3}", cap.y_at(100.0).unwrap()),
+        ),
+        Check::assert(
+            "fig4 utilization monotonically falls with provisioned bw",
+            whatif::BANDWIDTHS
+                .windows(2)
+                .all(|w| cap.y_at(w[0]).unwrap() >= cap.y_at(w[1]).unwrap()),
+            String::new(),
+        ),
+    ];
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig5() -> FigureRun {
+    let f = whatif::fig5_cpu_utilization();
+    let mut checks = Vec::new();
+    for s in &f.series {
+        let max = s.points.iter().map(|p| p.1).fold(0.0, f64::max);
+        checks.push(Check::assert(
+            format!("fig5 {} CPU stays ≤ 30% (paper: 14–25%)", s.name),
+            max <= 0.30,
+            format!("max {max:.3}"),
+        ));
+    }
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig6() -> FigureRun {
+    let mut figures = Vec::new();
+    let mut checks = Vec::new();
+    for id in ModelId::paper_models() {
+        let f = whatif::fig6_sim_vs_measured(id, 8);
+        let sim = f.series("simulated (full util)").unwrap();
+        let meas = f.series("measured-mode (Horovod-like)").unwrap();
+        checks.push(Check::assert(
+            format!("fig6 {id} lines close at 1–10 Gbps"),
+            (sim.y_at(1.0).unwrap() - meas.y_at(1.0).unwrap()).abs() < 0.12
+                && (sim.y_at(10.0).unwrap() - meas.y_at(10.0).unwrap()).abs() < 0.15,
+            format!(
+                "Δ@1G={:.3}, Δ@10G={:.3}",
+                sim.y_at(1.0).unwrap() - meas.y_at(1.0).unwrap(),
+                sim.y_at(10.0).unwrap() - meas.y_at(10.0).unwrap()
+            ),
+        ));
+        checks.push(Check::assert(
+            format!("fig6 {id} diverges past 25 Gbps"),
+            sim.y_at(100.0).unwrap() - meas.y_at(100.0).unwrap() > 0.10,
+            format!("Δ@100G={:.3}", sim.y_at(100.0).unwrap() - meas.y_at(100.0).unwrap()),
+        ));
+        checks.push(Check::assert(
+            format!("fig6 {id} simulated ≈ 100% at 100 Gbps"),
+            sim.y_at(100.0).unwrap() > 0.95,
+            format!("{:.3}", sim.y_at(100.0).unwrap()),
+        ));
+        figures.push(f);
+    }
+    FigureRun { figures, checks }
+}
+
+fn fig7() -> FigureRun {
+    let f = whatif::fig7_simulated_at_100g();
+    let mut checks = Vec::new();
+    for id in ModelId::paper_models() {
+        let sim = f.series(&format!("{} simulated", id.name())).unwrap();
+        let meas = f.series(&format!("{} measured", id.name())).unwrap();
+        checks.push(Check::assert(
+            format!("fig7 {id} simulated >95% even at 64 GPUs"),
+            whatif::SERVER_COUNTS.iter().all(|s| sim.y_at((s * 8) as f64).unwrap() > 0.95),
+            format!("@64: {:.3}", sim.y_at(64.0).unwrap()),
+        ));
+        checks.push(Check::assert(
+            format!("fig7 {id} visible gap to measured"),
+            meas.y_at(64.0).unwrap() < sim.y_at(64.0).unwrap() - 0.1,
+            format!("measured@64 {:.3}", meas.y_at(64.0).unwrap()),
+        ));
+    }
+    FigureRun { figures: vec![f], checks }
+}
+
+fn fig8() -> FigureRun {
+    let f10 = whatif::fig8_compression(10.0);
+    let f100 = whatif::fig8_compression(100.0);
+    let mut checks = Vec::new();
+    let vgg10 = f10.series("VGG16").unwrap();
+    checks.push(Check::assert(
+        "fig8 VGG16 @10G: 10× compression reaches ≈ linear",
+        vgg10.y_at(10.0).unwrap() > 0.90,
+        format!("{:.3}", vgg10.y_at(10.0).unwrap()),
+    ));
+    checks.push(Check::assert(
+        "fig8 @10G: 100× adds almost nothing over 10×",
+        vgg10.y_at(100.0).unwrap() - vgg10.y_at(10.0).unwrap() < 0.08,
+        format!("Δ={:.3}", vgg10.y_at(100.0).unwrap() - vgg10.y_at(10.0).unwrap()),
+    ));
+    let rn50_10 = f10.series("ResNet50").unwrap();
+    checks.push(Check::assert(
+        "fig8 ResNet50 @10G: 2–5× already ≈ linear (paper §1: 2×–5×)",
+        rn50_10.y_at(5.0).unwrap() > 0.90,
+        format!("@5x: {:.3}", rn50_10.y_at(5.0).unwrap()),
+    ));
+    for s in &f100.series {
+        checks.push(Check::assert(
+            format!("fig8 {} @100G: compression unnecessary", s.name),
+            s.y_at(1.0).unwrap() > 0.90,
+            format!("@1x: {:.3}", s.y_at(1.0).unwrap()),
+        ));
+    }
+    FigureRun { figures: vec![f10, f100], checks }
+}
+
+/// Cross-validation: emulator (real clocks, shaped fabric, real bytes) vs
+/// simulator (virtual clock, analytic costs) on identical laptop-scale
+/// configs — our analogue of the paper's low-bandwidth validation of the
+/// what-if simulator.
+pub fn validate_emulator_against_sim(
+    model: ModelId,
+    workers: usize,
+    bandwidth_gbps: f64,
+    payload_scale: f64,
+) -> Result<(f64, f64, Check)> {
+    use crate::config::{ExperimentConfig, TransportKind};
+    use crate::models::timing::backward_trace;
+    use crate::sim::{simulate, SimParams};
+    use crate::trainer::{run_emulated, EmulatedRunConfig};
+
+    let exp = ExperimentConfig {
+        model,
+        servers: workers,
+        gpus_per_server: 1,
+        bandwidth_gbps,
+        transport: TransportKind::FullUtilization,
+        steps: 5,
+        warmup_steps: 1,
+        ..Default::default()
+    };
+    let emu = run_emulated(&EmulatedRunConfig { exp, payload_scale })?;
+    let mut p = SimParams::whatif(backward_trace(&model.profile()), workers, 1, bandwidth_gbps);
+    // The emulator reduces *payload-scaled* buffers, so its add cost is
+    // negligible by construction; zero the sim's AddEst so both sides
+    // model the same thing (the validation isolates transit + fusion +
+    // overlap, which is the paper's argument).
+    p.add_est = crate::models::timing::AddEst::from_points(vec![(0.0, 0.0), (1e9, 0.0)]);
+    let sim = simulate(&p);
+    let (e, s) = (emu.scaling_factor, sim.scaling_factor);
+    let rel = (e - s).abs() / s.max(1e-9);
+    let check = Check::assert(
+        format!("emulator ≈ simulator ({model}, {workers}w, {bandwidth_gbps} Gbps)"),
+        rel < 0.25,
+        format!("emulated {e:.3} vs simulated {s:.3} (rel Δ {:.1}%)", rel * 100.0),
+    );
+    Ok((e, s, check))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_runs_and_passes_shape_checks() {
+        for id in FIGURE_IDS {
+            let run = run_figure(id).unwrap();
+            assert!(!run.figures.is_empty(), "fig{id} produced no figures");
+            for c in &run.checks {
+                assert!(c.pass, "fig{id} check failed: {} — {}", c.desc, c.detail);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(run_figure("9").is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! # netbn — "Is Network the Bottleneck of Distributed Training?"
+//!
+//! A reproduction of Zhang et al., NetAI'20, as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — a data-parallel training *emulator* (real worker
+//!   threads, real TCP, token-bucket bandwidth shaping, Horovod-style fusion
+//!   buffer + ring all-reduce), the paper's **what-if simulator** (virtual
+//!   clock, full-utilization transport, `AddEst` interpolation), gradient
+//!   compression codecs, and the measurement harness that regenerates every
+//!   figure in the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — a JAX transformer train step, AOT
+//!   lowered to HLO text at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots
+//!   (gradient vector-add, tiled matmul, int8 quantization, top-k masking),
+//!   lowered inside the same HLO artifacts.
+//!
+//! Python never runs on the measurement/request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+//!
+//! ## Map of the crate
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | PRNG, statistics, microbench + property-test mini-frameworks, logging |
+//! | [`cli`] | subcommand/flag parser (no clap in the offline env) |
+//! | [`config`] | typed experiment configs + parser + paper presets |
+//! | [`topology`] | servers × GPUs, hierarchical ring construction |
+//! | [`net`] | `Transport` trait: real TCP, token-bucket shaper, kernel-TCP cost model, in-proc |
+//! | [`collectives`] | ring / tree / PS all-reduce + Horovod fusion buffer |
+//! | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
+//! | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap |
+//! | [`sim`] | the paper's §3 what-if simulator (backward + all-reduce processes) |
+//! | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
+//! | [`measure`] | CPU / link utilization sampling, white-box timing traces |
+//! | [`runtime`] | PJRT wrapper: load + execute AOT artifacts |
+//! | [`report`] | ASCII tables, CSV/JSON series, paper-shape checks |
+//! | [`figures`] | per-figure experiment drivers (Fig 1–8) |
+
+pub mod cli;
+pub mod collectives;
+pub mod compress;
+pub mod config;
+pub mod figures;
+pub mod measure;
+pub mod models;
+pub mod net;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Bits per byte — kept explicit because the paper mixes Gbps (bits) and
+/// MB (bytes) constantly and silent factor-of-8 bugs are the #1 hazard here.
+pub const BITS_PER_BYTE: f64 = 8.0;
+
+/// Convert a link speed in Gbps to bytes/second.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / BITS_PER_BYTE
+}
+
+/// Convert bytes/second to Gbps.
+pub fn bytes_per_sec_to_gbps(bps: f64) -> f64 {
+    bps * BITS_PER_BYTE / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbps_round_trip() {
+        for g in [1.0, 10.0, 25.0, 50.0, 100.0] {
+            let b = gbps_to_bytes_per_sec(g);
+            assert!((bytes_per_sec_to_gbps(b) - g).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gbps_magnitude() {
+        // 100 Gbps = 12.5 GB/s
+        assert_eq!(gbps_to_bytes_per_sec(100.0), 12.5e9);
+    }
+}

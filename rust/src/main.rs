@@ -1,0 +1,349 @@
+//! `netbn` — leader binary: regenerate paper figures, run emulated or real
+//! training, calibrate cost tables, validate emulator vs simulator.
+
+use netbn::cli::{App, Args, CmdSpec, OptSpec, Parsed};
+use netbn::config::{Compression, ExperimentConfig, TransportKind};
+use netbn::models::ModelId;
+use netbn::report::Table;
+use netbn::Result;
+use std::path::PathBuf;
+
+fn app() -> App {
+    App {
+        name: "netbn",
+        about: "reproduction of 'Is Network the Bottleneck of Distributed Training?' (NetAI'20)",
+        commands: vec![
+            CmdSpec {
+                name: "fig",
+                about: "regenerate a paper figure (1-8, or 'all')",
+                opts: vec![OptSpec {
+                    name: "out",
+                    help: "CSV output directory",
+                    takes_value: true,
+                    default: Some("out"),
+                }],
+                positional: vec![("n", "figure number 1-8 or 'all'")],
+            },
+            CmdSpec {
+                name: "simulate",
+                about: "run the what-if simulator at one experiment point",
+                opts: vec![
+                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16|transformer", takes_value: true, default: Some("resnet50") },
+                    OptSpec { name: "workers", help: "GPUs in the all-reduce", takes_value: true, default: Some("64") },
+                    OptSpec { name: "bandwidth", help: "provisioned Gbps", takes_value: true, default: Some("100") },
+                    OptSpec { name: "transport", help: "full|kernel-tcp", takes_value: true, default: Some("full") },
+                    OptSpec { name: "compression", help: "wire-size ratio", takes_value: true, default: Some("1") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "emulate",
+                about: "run the real-time emulator (modeled compute, shaped fabric)",
+                opts: vec![
+                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16", takes_value: true, default: Some("resnet50") },
+                    OptSpec { name: "servers", help: "server count (1 worker each)", takes_value: true, default: Some("4") },
+                    OptSpec { name: "bandwidth", help: "provisioned Gbps", takes_value: true, default: Some("25") },
+                    OptSpec { name: "transport", help: "full|kernel-tcp", takes_value: true, default: Some("full") },
+                    OptSpec { name: "steps", help: "measured steps", takes_value: true, default: Some("5") },
+                    OptSpec { name: "payload-scale", help: "byte/rate shrink factor", takes_value: true, default: Some("256") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "validate",
+                about: "cross-validate emulator vs simulator (the paper's Fig 6 logic)",
+                opts: vec![
+                    OptSpec { name: "workers", help: "worker count", takes_value: true, default: Some("4") },
+                    OptSpec { name: "bandwidths", help: "comma list of Gbps", takes_value: true, default: Some("5,25,100") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "calibrate-add",
+                about: "measure AddEst(x) locally and print the table (§3.1)",
+                opts: vec![OptSpec {
+                    name: "max-elems",
+                    help: "largest vector size",
+                    takes_value: true,
+                    default: Some("4194304"),
+                }],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "train",
+                about: "e2e: train the AOT transformer over N emulated workers",
+                opts: vec![
+                    OptSpec { name: "workers", help: "worker count", takes_value: true, default: Some("2") },
+                    OptSpec { name: "steps", help: "training steps", takes_value: true, default: Some("20") },
+                    OptSpec { name: "batch", help: "batch per worker", takes_value: true, default: Some("4") },
+                    OptSpec { name: "lr", help: "learning rate", takes_value: true, default: Some("0.05") },
+                    OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "ablate",
+                about: "run the ablation sweeps (fusion size/timeout, collectives, bw×compression)",
+                opts: vec![
+                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16", takes_value: true, default: Some("vgg16") },
+                    OptSpec { name: "out", help: "CSV output directory", takes_value: true, default: Some("out") },
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "info",
+                about: "print model profiles and environment",
+                opts: vec![],
+                positional: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(true) => 0,
+        Ok(false) => 1,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<bool> {
+    match app().parse(argv)? {
+        Parsed::Help(text) => {
+            println!("{text}");
+            Ok(true)
+        }
+        Parsed::Command(name, args) => match name.as_str() {
+            "fig" => cmd_fig(&args),
+            "simulate" => cmd_simulate(&args),
+            "emulate" => cmd_emulate(&args),
+            "validate" => cmd_validate(&args),
+            "calibrate-add" => cmd_calibrate(&args),
+            "train" => cmd_train(&args),
+            "ablate" => cmd_ablate(&args),
+            "info" => cmd_info(),
+            other => anyhow::bail!("unhandled command {other}"),
+        },
+    }
+}
+
+fn parse_model(args: &Args) -> Result<ModelId> {
+    let s = args.get_or("model", "resnet50");
+    ModelId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown model {s:?}"))
+}
+
+fn cmd_fig(args: &Args) -> Result<bool> {
+    let out = PathBuf::from(args.get_or("out", "out"));
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        netbn::figures::FIGURE_IDS.to_vec()
+    } else {
+        vec![which]
+    };
+    let mut all_ok = true;
+    for id in ids {
+        let run = netbn::figures::run_figure(id)?;
+        all_ok &= run.emit(&out)?;
+    }
+    Ok(all_ok)
+}
+
+fn cmd_simulate(args: &Args) -> Result<bool> {
+    use netbn::models::timing::backward_trace;
+    use netbn::sim::{simulate, SimParams};
+    let model = parse_model(args)?;
+    let workers = args.get_usize("workers", 64)?;
+    let bw = args.get_f64("bandwidth", 100.0)?;
+    let transport = TransportKind::parse(args.get_or("transport", "full"))
+        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
+    let ratio = args.get_f64("compression", 1.0)?;
+    let trace = backward_trace(&model.profile());
+    let gpus = 8.min(workers.max(1));
+    let servers = (workers / gpus).max(1);
+    let mut p = match transport {
+        TransportKind::KernelTcp => SimParams::horovod_like(trace, servers, gpus, bw),
+        _ => SimParams::whatif(trace, servers, gpus, bw),
+    };
+    p.compression_ratio = ratio;
+    let r = simulate(&p);
+    let mut t = Table::new(
+        format!("what-if: {model}, {workers} workers, {bw} Gbps, {transport}, {ratio}x"),
+        &["metric", "value"],
+    );
+    t.row(vec!["t_batch".into(), netbn::util::fmt::secs(r.t_batch)]);
+    t.row(vec!["t_back".into(), netbn::util::fmt::secs(r.t_back)]);
+    t.row(vec!["t_sync".into(), netbn::util::fmt::secs(r.t_sync)]);
+    t.row(vec!["t_overhead".into(), netbn::util::fmt::secs(r.t_overhead)]);
+    t.row(vec!["scaling factor".into(), netbn::util::fmt::pct(r.scaling_factor)]);
+    t.row(vec!["buckets".into(), r.buckets.to_string()]);
+    t.row(vec!["wire bytes/worker".into(), netbn::util::fmt::bytes(r.wire_bytes_per_worker)]);
+    t.row(vec!["achieved rate".into(), format!("{:.2} Gbps", r.achieved_gbps)]);
+    println!("{}", t.render());
+    Ok(true)
+}
+
+fn cmd_emulate(args: &Args) -> Result<bool> {
+    use netbn::trainer::{run_emulated, EmulatedRunConfig};
+    let model = parse_model(args)?;
+    let servers = args.get_usize("servers", 4)?;
+    let bw = args.get_f64("bandwidth", 25.0)?;
+    let steps = args.get_usize("steps", 5)?;
+    let payload_scale = args.get_f64("payload-scale", 256.0)?;
+    let transport = TransportKind::parse(args.get_or("transport", "full"))
+        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
+    let exp = ExperimentConfig {
+        model,
+        servers,
+        gpus_per_server: 1,
+        bandwidth_gbps: bw,
+        transport,
+        compression: Compression::None,
+        steps,
+        warmup_steps: 1,
+        ..Default::default()
+    };
+    let r = run_emulated(&EmulatedRunConfig { exp, payload_scale })?;
+    let mut t = Table::new(
+        format!("emulated: {model}, {servers} servers, {bw} Gbps, {transport}"),
+        &["metric", "value"],
+    );
+    t.row(vec!["step time".into(), netbn::util::fmt::secs(r.step_time_s)]);
+    t.row(vec!["throughput".into(), format!("{:.1} samples/s", r.throughput)]);
+    t.row(vec!["scaling factor".into(), netbn::util::fmt::pct(r.scaling_factor)]);
+    t.row(vec!["mean compute".into(), netbn::util::fmt::secs(r.mean_compute_s)]);
+    t.row(vec!["mean comm wait".into(), netbn::util::fmt::secs(r.mean_comm_wait_s)]);
+    t.row(vec!["network utilization".into(), netbn::util::fmt::pct(r.network_utilization)]);
+    t.row(vec!["buckets/step".into(), format!("{:.1}", r.buckets_per_step)]);
+    println!("{}", t.render());
+    Ok(true)
+}
+
+fn cmd_validate(args: &Args) -> Result<bool> {
+    let workers = args.get_usize("workers", 4)?;
+    let bws = args.get_f64_list("bandwidths", &[5.0, 25.0, 100.0])?;
+    let mut checks = Vec::new();
+    let mut t = Table::new(
+        "emulator vs simulator (full-utilization transport)",
+        &["model", "Gbps", "emulated sf", "simulated sf"],
+    );
+    for bw in bws {
+        let (e, s, check) = netbn::figures::validate_emulator_against_sim(
+            ModelId::ResNet50,
+            workers,
+            bw,
+            1024.0,
+        )?;
+        t.row(vec!["ResNet50".into(), format!("{bw}"), format!("{e:.3}"), format!("{s:.3}")]);
+        checks.push(check);
+    }
+    println!("{}", t.render());
+    let (text, ok) = netbn::report::render_checks(&checks);
+    println!("{text}");
+    Ok(ok)
+}
+
+fn cmd_calibrate(args: &Args) -> Result<bool> {
+    let max = args.get_usize("max-elems", 1 << 22)?;
+    let add = netbn::models::timing::AddEst::measure_local(max);
+    let mut t = Table::new("AddEst(x) measured on this host", &["elements", "seconds"]);
+    let mut elems = 1024usize;
+    while elems <= max {
+        t.row(vec![elems.to_string(), format!("{:.3e}", add.seconds(elems as f64))]);
+        elems *= 4;
+    }
+    println!("{}", t.render());
+    let v100 = netbn::models::timing::AddEst::v100();
+    println!(
+        "reference V100 AddEst(131.75M elems / VGG16) = {:.3} ms",
+        v100.seconds(527e6 / 4.0) * 1e3
+    );
+    Ok(true)
+}
+
+fn cmd_train(args: &Args) -> Result<bool> {
+    use netbn::net::tcp::TcpFabric;
+    use netbn::runtime::DeviceService;
+    use netbn::trainer::xla::{load_init_params, ModelMeta, XlaTrainer};
+    let workers = args.get_usize("workers", 2)?;
+    let steps = args.get_usize("steps", 20)?;
+    let batch = args.get_usize("batch", 4)?;
+    let lr = args.get_f64("lr", 0.05)? as f32;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let meta = ModelMeta::load(&dir)?;
+    let init = load_init_params(&dir, meta.param_count)?;
+    println!(
+        "model: {} params over {} tensors, vocab {}, seq {}",
+        meta.param_count,
+        meta.layers.len(),
+        meta.vocab,
+        meta.seq
+    );
+    let svc = DeviceService::start(dir);
+    let trainer = XlaTrainer::new(svc.handle(), meta);
+    let fabric = TcpFabric::new(workers, None)?;
+    let result = trainer.train_distributed(
+        &fabric,
+        init,
+        steps,
+        batch,
+        lr,
+        0xe2e,
+        netbn::config::FusionConfig::default(),
+    )?;
+    println!("loss curve (mean across {} workers):", result.workers);
+    for (i, l) in result.loss_curve.iter().enumerate() {
+        println!("  step {i:>4}  loss {l:.4}");
+    }
+    let first = result.loss_curve.first().copied().unwrap_or(0.0);
+    let last = result.loss_curve.last().copied().unwrap_or(0.0);
+    println!("loss: {first:.4} -> {last:.4}");
+    Ok(last < first)
+}
+
+fn cmd_ablate(args: &Args) -> Result<bool> {
+    let model = parse_model(args)?;
+    let out = PathBuf::from(args.get_or("out", "out"));
+    for fig in netbn::sim::ablation::all(model) {
+        println!("{}", fig.render());
+        let path = fig.write_csv(&out)?;
+        println!("  -> {}", path.display());
+    }
+    Ok(true)
+}
+
+fn cmd_info() -> Result<bool> {
+    let mut t = Table::new(
+        "model profiles",
+        &["model", "layers", "params", "size", "fwd GFLOPs", "t_batch"],
+    );
+    for id in [ModelId::ResNet50, ModelId::ResNet101, ModelId::Vgg16, ModelId::Transformer] {
+        let p = id.profile();
+        t.row(vec![
+            id.name().into(),
+            p.layers.len().to_string(),
+            format!("{:.2}M", p.total_params() as f64 / 1e6),
+            netbn::util::fmt::bytes(p.total_bytes() as f64),
+            format!("{:.1}", p.total_fwd_flops_per_sample() / 1e9),
+            netbn::util::fmt::secs(p.t_batch()),
+        ]);
+    }
+    println!("{}", t.render());
+    let m = netbn::net::kernel_tcp::KernelTcpModel::default();
+    let mut t2 =
+        Table::new("kernel-TCP transport model", &["provisioned Gbps", "effective Gbps", "utilization"]);
+    for bw in [1.0, 10.0, 25.0, 50.0, 100.0] {
+        t2.row(vec![
+            format!("{bw}"),
+            format!("{:.1}", m.effective_gbps(bw)),
+            netbn::util::fmt::pct(m.utilization(bw)),
+        ]);
+    }
+    println!("{}", t2.render());
+    Ok(true)
+}

@@ -1,0 +1,83 @@
+//! CPU utilization sampling via `/proc/stat` — the instrument behind the
+//! paper's Fig 5 ("CPU utilizations while training ... under five
+//! different network speeds").
+
+use crate::Result;
+
+/// Aggregate jiffies from the `cpu ` line of `/proc/stat`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CpuTimes {
+    pub busy: u64,
+    pub idle: u64,
+}
+
+/// Parse the aggregate `cpu ` line.
+pub fn parse_proc_stat(text: &str) -> Result<CpuTimes> {
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("cpu "))
+        .ok_or_else(|| anyhow::anyhow!("no aggregate cpu line in /proc/stat"))?;
+    let fields: Vec<u64> =
+        line.split_whitespace().skip(1).map(|f| f.parse().unwrap_or(0)).collect();
+    anyhow::ensure!(fields.len() >= 4, "short cpu line: {line:?}");
+    // user nice system idle iowait irq softirq steal ...
+    let idle = fields[3] + fields.get(4).copied().unwrap_or(0);
+    let busy: u64 = fields.iter().sum::<u64>() - idle;
+    Ok(CpuTimes { busy, idle })
+}
+
+/// Samples `/proc/stat` and reports utilization between samples.
+pub struct CpuSampler {
+    last: CpuTimes,
+}
+
+impl CpuSampler {
+    pub fn new() -> Result<CpuSampler> {
+        Ok(CpuSampler { last: read_now()? })
+    }
+
+    /// Utilization (0..=1) since the previous call.
+    pub fn sample(&mut self) -> Result<f64> {
+        let cur = read_now()?;
+        let busy = cur.busy.saturating_sub(self.last.busy);
+        let idle = cur.idle.saturating_sub(self.last.idle);
+        self.last = cur;
+        let total = busy + idle;
+        Ok(if total == 0 { 0.0 } else { busy as f64 / total as f64 })
+    }
+}
+
+fn read_now() -> Result<CpuTimes> {
+    let text = std::fs::read_to_string("/proc/stat")?;
+    parse_proc_stat(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_line() {
+        let t = parse_proc_stat("cpu  100 0 50 800 25 0 5 0 0 0\ncpu0 1 2 3 4\n").unwrap();
+        assert_eq!(t.idle, 825);
+        assert_eq!(t.busy, 155);
+    }
+
+    #[test]
+    fn rejects_missing_line() {
+        assert!(parse_proc_stat("intr 0 0 0").is_err());
+    }
+
+    #[test]
+    fn live_sampling_in_unit_interval() {
+        let mut s = CpuSampler::new().unwrap();
+        // Burn a little CPU so the sample is meaningful.
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let u = s.sample().unwrap();
+        assert!((0.0..=1.0).contains(&u), "{u}");
+    }
+}

@@ -1,0 +1,78 @@
+//! System measurement: CPU utilization sampling from `/proc/stat` (the
+//! paper's Fig 5 instrument), wall-clock phase timers, and the white-box
+//! timing trace logger (§3.1's "add logging code to training scripts to
+//! retrieve detailed timing information").
+
+pub mod cpu;
+pub mod trace;
+
+pub use cpu::CpuSampler;
+pub use trace::{TraceLogger, TraceRecord};
+
+use std::time::Instant;
+
+/// A simple two-phase (compute / communicate) stopwatch used by the
+/// emulated trainer to report the paper's Fig 2 computation times.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PhaseTimes {
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub steps: u32,
+}
+
+impl PhaseTimes {
+    pub fn add_compute(&mut self, t: f64) {
+        self.compute_s += t;
+    }
+
+    pub fn add_comm(&mut self, t: f64) {
+        self.comm_s += t;
+    }
+
+    pub fn end_step(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn mean_compute(&self) -> f64 {
+        if self.steps == 0 { 0.0 } else { self.compute_s / self.steps as f64 }
+    }
+
+    pub fn mean_comm(&self) -> f64 {
+        if self.steps == 0 { 0.0 } else { self.comm_s / self.steps as f64 }
+    }
+}
+
+/// Measure the wall time of `f`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_average() {
+        let mut p = PhaseTimes::default();
+        p.add_compute(1.0);
+        p.add_comm(0.5);
+        p.end_step();
+        p.add_compute(3.0);
+        p.add_comm(1.5);
+        p.end_step();
+        assert!((p.mean_compute() - 2.0).abs() < 1e-12);
+        assert!((p.mean_comm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, t) = timed(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t >= 0.004);
+    }
+}

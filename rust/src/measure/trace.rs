@@ -1,0 +1,196 @@
+//! White-box timing trace: JSON-lines records of gradient-ready /
+//! bucket-emitted / all-reduce-done events, written by the emulated
+//! trainer and replayable into the what-if simulator — the closed loop
+//! the paper builds between measurement and simulation.
+
+use crate::report::json_str;
+use crate::Result;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// One trace record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Event kind: `grad_ready`, `bucket_emit`, `allreduce_done`, `step`.
+    pub kind: String,
+    pub step: u32,
+    pub worker: usize,
+    /// Layer index or bucket seq (kind-dependent).
+    pub id: usize,
+    pub bytes: usize,
+    /// Seconds since trace start.
+    pub t: f64,
+}
+
+impl TraceRecord {
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"kind\":{},\"step\":{},\"worker\":{},\"id\":{},\"bytes\":{},\"t\":{}}}",
+            json_str(&self.kind),
+            self.step,
+            self.worker,
+            self.id,
+            self.bytes,
+            self.t
+        )
+    }
+
+    /// Parse a record from the exact format `to_json_line` writes.
+    pub fn from_json_line(line: &str) -> Result<TraceRecord> {
+        let get = |key: &str| -> Result<&str> {
+            let pat = format!("\"{key}\":");
+            let start = line
+                .find(&pat)
+                .ok_or_else(|| anyhow::anyhow!("missing key {key} in {line:?}"))?
+                + pat.len();
+            let rest = &line[start..];
+            let end = rest
+                .find([',', '}'])
+                .ok_or_else(|| anyhow::anyhow!("unterminated value for {key}"))?;
+            Ok(rest[..end].trim())
+        };
+        let kind_raw = get("kind")?;
+        let kind = kind_raw.trim_matches('"').to_string();
+        Ok(TraceRecord {
+            kind,
+            step: get("step")?.parse()?,
+            worker: get("worker")?.parse()?,
+            id: get("id")?.parse()?,
+            bytes: get("bytes")?.parse()?,
+            t: get("t")?.parse()?,
+        })
+    }
+}
+
+/// Appending JSONL writer.
+pub struct TraceLogger {
+    out: std::io::BufWriter<std::fs::File>,
+    start: std::time::Instant,
+}
+
+impl TraceLogger {
+    pub fn create(path: &Path) -> Result<TraceLogger> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(TraceLogger {
+            out: std::io::BufWriter::new(std::fs::File::create(path)?),
+            start: std::time::Instant::now(),
+        })
+    }
+
+    /// Seconds since logger creation — the `t` to put into records.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn log(&mut self, rec: &TraceRecord) -> Result<()> {
+        writeln!(self.out, "{}", rec.to_json_line())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Load a trace file.
+pub fn load_trace(path: &Path) -> Result<Vec<TraceRecord>> {
+    let f = std::fs::File::open(path)?;
+    let mut out = Vec::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(TraceRecord::from_json_line(&line)?);
+    }
+    Ok(out)
+}
+
+/// Convert recorded `grad_ready` events of one worker+step into a
+/// [`crate::models::timing::StepTrace`] the simulator can consume —
+/// closing the measure→simulate loop on *real* traces.
+pub fn step_trace_from_records(
+    records: &[TraceRecord],
+    worker: usize,
+    step: u32,
+    t_forward: f64,
+) -> Option<crate::models::timing::StepTrace> {
+    let mut events: Vec<crate::models::timing::TraceEvent> = records
+        .iter()
+        .filter(|r| r.kind == "grad_ready" && r.worker == worker && r.step == step)
+        .map(|r| crate::models::timing::TraceEvent { layer: r.id, bytes: r.bytes, t_ready: r.t })
+        .collect();
+    if events.is_empty() {
+        return None;
+    }
+    // Normalize to backward start.
+    let t0 = events.iter().map(|e| e.t_ready).fold(f64::INFINITY, f64::min);
+    for e in &mut events {
+        e.t_ready -= t0;
+    }
+    events.sort_by(|a, b| a.t_ready.partial_cmp(&b.t_ready).unwrap());
+    let t_backward = events.last().map(|e| e.t_ready).unwrap_or(0.0);
+    Some(crate::models::timing::StepTrace {
+        t_forward,
+        t_backward,
+        t_batch: t_forward + t_backward,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> TraceRecord {
+        TraceRecord { kind: "grad_ready".into(), step: 3, worker: 1, id: 17, bytes: 4096, t: 0.125 }
+    }
+
+    #[test]
+    fn json_line_round_trip() {
+        let r = rec();
+        let parsed = TraceRecord::from_json_line(&r.to_json_line()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir().join("netbn_trace_test.jsonl");
+        {
+            let mut l = TraceLogger::create(&path).unwrap();
+            l.log(&rec()).unwrap();
+            let mut r2 = rec();
+            r2.step = 4;
+            l.log(&r2).unwrap();
+            l.flush().unwrap();
+        }
+        let back = load_trace(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], rec());
+        assert_eq!(back[1].step, 4);
+    }
+
+    #[test]
+    fn records_to_step_trace() {
+        let records = vec![
+            TraceRecord { kind: "grad_ready".into(), step: 0, worker: 0, id: 2, bytes: 100, t: 1.10 },
+            TraceRecord { kind: "grad_ready".into(), step: 0, worker: 0, id: 1, bytes: 200, t: 1.20 },
+            TraceRecord { kind: "grad_ready".into(), step: 0, worker: 1, id: 2, bytes: 100, t: 9.0 },
+            TraceRecord { kind: "bucket_emit".into(), step: 0, worker: 0, id: 0, bytes: 300, t: 1.25 },
+        ];
+        let st = step_trace_from_records(&records, 0, 0, 0.5).unwrap();
+        assert_eq!(st.events.len(), 2);
+        assert_eq!(st.events[0].t_ready, 0.0);
+        assert!((st.events[1].t_ready - 0.1).abs() < 1e-9);
+        assert!((st.t_batch - 0.6).abs() < 1e-9);
+        assert!(step_trace_from_records(&records, 5, 0, 0.5).is_none());
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        assert!(TraceRecord::from_json_line("{\"nope\":1}").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Model profiles: per-layer parameter counts and FLOPs for the paper's
+//! three workloads — ResNet50, ResNet101, VGG16 — generated from the real
+//! architectures (not hard-coded totals), plus a transformer profile for
+//! the e2e example. The what-if simulator consumes these through
+//! [`timing`], which turns FLOPs into V100-calibrated per-layer
+//! *gradient-computation-done* traces (the paper's white-box logs).
+
+pub mod resnet;
+pub mod timing;
+pub mod transformer;
+pub mod vgg;
+
+/// The workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    ResNet50,
+    ResNet101,
+    Vgg16,
+    /// The e2e transformer (trained for real through the XLA runtime).
+    Transformer,
+}
+
+impl ModelId {
+    pub fn parse(s: &str) -> Option<ModelId> {
+        match s.to_ascii_lowercase().as_str() {
+            "resnet50" | "rn50" => Some(ModelId::ResNet50),
+            "resnet101" | "rn101" => Some(ModelId::ResNet101),
+            "vgg16" | "vgg" => Some(ModelId::Vgg16),
+            "transformer" | "tfm" => Some(ModelId::Transformer),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::ResNet50 => "ResNet50",
+            ModelId::ResNet101 => "ResNet101",
+            ModelId::Vgg16 => "VGG16",
+            ModelId::Transformer => "Transformer",
+        }
+    }
+
+    /// The three models of the paper's evaluation.
+    pub fn paper_models() -> [ModelId; 3] {
+        [ModelId::ResNet50, ModelId::ResNet101, ModelId::Vgg16]
+    }
+
+    /// Build the layer profile.
+    pub fn profile(&self) -> ModelProfile {
+        match self {
+            ModelId::ResNet50 => resnet::resnet_profile(50),
+            ModelId::ResNet101 => resnet::resnet_profile(101),
+            ModelId::Vgg16 => vgg::vgg16_profile(),
+            ModelId::Transformer => transformer::transformer_profile(),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One learnable layer (as the training framework's gradient hooks see it:
+/// a parameter tensor that becomes ready during backward).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Learnable parameter count.
+    pub params: usize,
+    /// Forward FLOPs for one sample (batch multiplies this).
+    pub fwd_flops_per_sample: f64,
+}
+
+impl LayerProfile {
+    /// Gradient bytes (f32).
+    pub fn grad_bytes(&self) -> usize {
+        self.params * 4
+    }
+}
+
+/// A whole model: layers in forward order + single-device calibration.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub id: ModelId,
+    pub layers: Vec<LayerProfile>,
+    /// Calibrated single-V100 training throughput at the paper's batch
+    /// size (32), images (or sequences) per second. Sets the absolute time
+    /// scale; the per-layer split is by FLOPs.
+    pub base_throughput_per_sec: f64,
+    pub batch_size: usize,
+}
+
+impl ModelProfile {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Model size in bytes (f32 params) — the paper's `S`.
+    pub fn total_bytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    pub fn total_fwd_flops_per_sample(&self) -> f64 {
+        self.layers.iter().map(|l| l.fwd_flops_per_sample).sum()
+    }
+
+    /// Single-device time for one batch (forward + backward), seconds —
+    /// the paper's `t_batch`.
+    pub fn t_batch(&self) -> f64 {
+        self.batch_size as f64 / self.base_throughput_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_sizes_match_paper() {
+        // Paper §2.1: "The model sizes are 97 MB for ResNet50, 170 MB for
+        // ResNet101, and 527 MB for VGG16."
+        let mb = |id: ModelId| id.profile().total_bytes() as f64 / 1e6;
+        let rn50 = mb(ModelId::ResNet50);
+        let rn101 = mb(ModelId::ResNet101);
+        let vgg = mb(ModelId::Vgg16);
+        assert!((rn50 - 97.0).abs() < 7.0, "ResNet50 {rn50} MB");
+        assert!((rn101 - 170.0).abs() < 10.0, "ResNet101 {rn101} MB");
+        assert!((vgg - 527.0).abs() < 30.0, "VGG16 {vgg} MB");
+    }
+
+    #[test]
+    fn vgg_has_the_400mb_layer() {
+        // Paper: "VGG16 has a layer with 400MB parameters".
+        let p = ModelId::Vgg16.profile();
+        let max_layer = p.layers.iter().map(|l| l.grad_bytes()).max().unwrap();
+        assert!(
+            (380e6..=430e6).contains(&(max_layer as f64)),
+            "largest VGG16 layer = {} bytes",
+            max_layer
+        );
+    }
+
+    #[test]
+    fn resnet_params_spread_more_evenly() {
+        // Paper: "parameters in ResNet series are distributed more evenly".
+        let frac_max = |id: ModelId| {
+            let p = id.profile();
+            let mx = p.layers.iter().map(|l| l.params).max().unwrap() as f64;
+            mx / p.total_params() as f64
+        };
+        assert!(frac_max(ModelId::ResNet50) < 0.12);
+        assert!(frac_max(ModelId::Vgg16) > 0.7);
+    }
+
+    #[test]
+    fn parse_and_display() {
+        assert_eq!(ModelId::parse("vgg16"), Some(ModelId::Vgg16));
+        assert_eq!(ModelId::parse("RESNET101"), Some(ModelId::ResNet101));
+        assert_eq!(ModelId::parse("x"), None);
+        assert_eq!(ModelId::Vgg16.to_string(), "VGG16");
+    }
+
+    #[test]
+    fn t_batch_reasonable() {
+        // Single V100 step times in the tens-to-hundreds of ms.
+        for id in ModelId::paper_models() {
+            let t = id.profile().t_batch();
+            assert!((0.02..0.5).contains(&t), "{id}: {t}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! ResNet-50/101 layer generation (He et al., CVPR'16), bottleneck
+//! variant, ImageNet configuration (224×224 input, 1000 classes).
+//!
+//! Layers are produced in forward order with real parameter counts and
+//! per-sample FLOPs, so the profile totals must land on the paper's
+//! quoted sizes (97 MB / 170 MB) without any hand-tuned constants.
+
+use super::{LayerProfile, ModelId, ModelProfile};
+
+/// Conv2d parameter count (no bias, as in torchvision ResNet).
+fn conv_params(k: usize, c_in: usize, c_out: usize) -> usize {
+    k * k * c_in * c_out
+}
+
+/// Conv2d forward FLOPs per sample: 2 · K² · C_in · C_out · H_out · W_out.
+fn conv_flops(k: usize, c_in: usize, c_out: usize, h_out: usize, w_out: usize) -> f64 {
+    2.0 * (k * k * c_in * c_out * h_out * w_out) as f64
+}
+
+/// BatchNorm: weight + bias per channel.
+fn bn_params(c: usize) -> usize {
+    2 * c
+}
+
+struct Builder {
+    layers: Vec<LayerProfile>,
+}
+
+impl Builder {
+    fn conv_bn(&mut self, name: &str, k: usize, c_in: usize, c_out: usize, h: usize, w: usize) {
+        self.layers.push(LayerProfile {
+            name: format!("{name}.conv"),
+            params: conv_params(k, c_in, c_out),
+            fwd_flops_per_sample: conv_flops(k, c_in, c_out, h, w),
+        });
+        self.layers.push(LayerProfile {
+            name: format!("{name}.bn"),
+            params: bn_params(c_out),
+            // 4 ops per output element (normalize, scale, shift, running stats).
+            fwd_flops_per_sample: 4.0 * (c_out * h * w) as f64,
+        });
+    }
+
+    /// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ optional
+    /// projection shortcut). `h`/`w` are the block's *output* spatial dims.
+    fn bottleneck(
+        &mut self,
+        name: &str,
+        c_in: usize,
+        mid: usize,
+        stride: usize,
+        h: usize,
+        w: usize,
+    ) {
+        let c_out = mid * 4;
+        // conv1 (1×1) runs at input resolution / stride applied at conv2
+        // (torchvision v1.5+ puts stride on the 3×3).
+        let (h_in, w_in) = (h * stride, w * stride);
+        self.conv_bn(&format!("{name}.conv1"), 1, c_in, mid, h_in, w_in);
+        self.conv_bn(&format!("{name}.conv2"), 3, mid, mid, h, w);
+        self.conv_bn(&format!("{name}.conv3"), 1, mid, c_out, h, w);
+        if stride != 1 || c_in != c_out {
+            self.conv_bn(&format!("{name}.downsample"), 1, c_in, c_out, h, w);
+        }
+    }
+}
+
+/// Build the profile for ResNet-`depth` (50 or 101).
+pub fn resnet_profile(depth: usize) -> ModelProfile {
+    let (blocks, id, throughput) = match depth {
+        // Stage block counts and calibrated single-V100 throughput
+        // (images/s, batch 32, fp32, paper-era cuDNN).
+        50 => ([3usize, 4, 6, 3], ModelId::ResNet50, 360.0),
+        101 => ([3, 4, 23, 3], ModelId::ResNet101, 235.0),
+        other => panic!("unsupported ResNet depth {other}"),
+    };
+    let mut b = Builder { layers: Vec::new() };
+
+    // Stem: 7×7/2 conv, 64 channels, output 112×112 (then 3×3/2 maxpool → 56).
+    b.conv_bn("stem", 7, 3, 64, 112, 112);
+
+    // Stages: (mid channels, output spatial size).
+    let stage_cfg = [(64usize, 56usize), (128, 28), (256, 14), (512, 7)];
+    let mut c_in = 64;
+    for (s, ((mid, hw), n_blocks)) in stage_cfg.iter().zip(blocks.iter()).enumerate() {
+        for blk in 0..*n_blocks {
+            // First block of stages 2–4 downsamples (stride 2); stage 1's
+            // first block only projects channels.
+            let stride = if blk == 0 && s > 0 { 2 } else { 1 };
+            b.bottleneck(&format!("layer{}.{}", s + 1, blk), c_in, *mid, stride, *hw, *hw);
+            c_in = mid * 4;
+        }
+    }
+
+    // Classifier head.
+    b.layers.push(LayerProfile {
+        name: "fc".into(),
+        params: 2048 * 1000 + 1000,
+        fwd_flops_per_sample: 2.0 * 2048.0 * 1000.0,
+    });
+
+    ModelProfile { id, layers: b.layers, base_throughput_per_sec: throughput, batch_size: 32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_parameter_count() {
+        // torchvision resnet50: 25,557,032 params.
+        let p = resnet_profile(50);
+        let total = p.total_params();
+        assert!(
+            (25_000_000..=26_100_000).contains(&total),
+            "ResNet50 params = {total}"
+        );
+    }
+
+    #[test]
+    fn resnet101_parameter_count() {
+        // torchvision resnet101: 44,549,160 params.
+        let p = resnet_profile(101);
+        let total = p.total_params();
+        assert!(
+            (43_900_000..=45_200_000).contains(&total),
+            "ResNet101 params = {total}"
+        );
+    }
+
+    #[test]
+    fn resnet50_flops_about_8_gflops() {
+        // Published "4.1 GFLOPs" counts multiply-adds (MACs); at 2 FLOPs
+        // per MAC the forward pass is ≈ 8.2 GFLOPs.
+        let p = resnet_profile(50);
+        let gf = p.total_fwd_flops_per_sample() / 1e9;
+        assert!((7.0..=9.5).contains(&gf), "ResNet50 fwd = {gf} GFLOPs");
+    }
+
+    #[test]
+    fn layer_count_reasonable() {
+        // 50-layer net → >100 learnable tensors with BN tracked separately.
+        let p = resnet_profile(50);
+        assert!(p.layers.len() > 100 && p.layers.len() < 250, "{}", p.layers.len());
+        let p = resnet_profile(101);
+        assert!(p.layers.len() > 200 && p.layers.len() < 500, "{}", p.layers.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported ResNet depth")]
+    fn rejects_unknown_depth() {
+        resnet_profile(34);
+    }
+}

@@ -1,0 +1,177 @@
+//! Device timing model: turns a [`ModelProfile`] into the per-layer
+//! *gradient-computation-done* trace that the paper's what-if simulator
+//! consumes (§3.1 "white-box approach ... hooks for parameters in the
+//! model to get the gradient-computation-done time"), plus the `AddEst`
+//! vector-add cost tables.
+
+use super::ModelProfile;
+use crate::util::stats::Interp;
+
+/// One gradient-ready event in a backward pass, relative to backward start.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Forward-order layer index.
+    pub layer: usize,
+    /// Gradient bytes.
+    pub bytes: usize,
+    /// Seconds after backward start at which this gradient is ready.
+    pub t_ready: f64,
+}
+
+/// A full white-box timing log for one training step on one device.
+#[derive(Clone, Debug)]
+pub struct StepTrace {
+    /// Forward-pass duration (no gradients produced).
+    pub t_forward: f64,
+    /// Gradient-ready events in emission order (last layer first).
+    pub events: Vec<TraceEvent>,
+    /// Total backward duration (= last event's `t_ready`).
+    pub t_backward: f64,
+    /// Single-device whole-batch time (`t_forward + t_backward`) — the
+    /// paper's `t_batch`.
+    pub t_batch: f64,
+}
+
+/// Split of `t_batch` between forward and backward. Backward ≈ 2× forward
+/// for conv nets (two GEMMs per layer in backward vs one in forward).
+pub const BWD_FRACTION: f64 = 2.0 / 3.0;
+
+/// Generate the backward trace for a model: per-layer backward time is
+/// proportional to the layer's FLOPs; layers finish in reverse forward
+/// order (the output layer's gradient is ready first — which is what makes
+/// communication/computation *overlap* possible, §4).
+pub fn backward_trace(profile: &ModelProfile) -> StepTrace {
+    let t_batch = profile.t_batch();
+    let t_backward = t_batch * BWD_FRACTION;
+    let t_forward = t_batch - t_backward;
+    let total_flops: f64 = profile.total_fwd_flops_per_sample().max(1.0);
+    let mut events = Vec::with_capacity(profile.layers.len());
+    let mut t = 0.0;
+    for (layer_idx, layer) in profile.layers.iter().enumerate().rev() {
+        let frac = layer.fwd_flops_per_sample / total_flops;
+        t += t_backward * frac;
+        events.push(TraceEvent { layer: layer_idx, bytes: layer.grad_bytes(), t_ready: t });
+    }
+    StepTrace { t_forward, events, t_backward, t_batch }
+}
+
+/// `AddEst(x)`: time to element-wise add two f32 vectors of `x` elements.
+/// Paper §3.1 prescribes an empirical table + linear interpolation; the
+/// table is in *elements*.
+#[derive(Clone, Debug)]
+pub struct AddEst {
+    interp: Interp,
+}
+
+impl AddEst {
+    pub fn from_points(points: Vec<(f64, f64)>) -> AddEst {
+        AddEst { interp: Interp::new(points) }
+    }
+
+    /// Estimated seconds to add two vectors of `elems` f32 elements.
+    pub fn seconds(&self, elems: f64) -> f64 {
+        self.interp.eval(elems.max(0.0)).max(0.0)
+    }
+
+    /// V100 preset: vector add is HBM-bound — 12 bytes/element moved
+    /// (2 reads + 1 write) at ~810 GB/s effective (90% of 900 GB/s peak),
+    /// plus ~4 µs launch latency. Table knots at powers of 4 up to 256 M
+    /// elements (a 1 GB tensor).
+    pub fn v100() -> AddEst {
+        const LAUNCH_S: f64 = 4e-6;
+        const BYTES_PER_ELEM: f64 = 12.0;
+        const EFF_BW: f64 = 810e9;
+        let pts = (0..15)
+            .map(|i| {
+                let elems = 4f64.powi(i); // 1 .. 256M
+                (elems, LAUNCH_S + elems * BYTES_PER_ELEM / EFF_BW)
+            })
+            .collect();
+        AddEst::from_points(pts)
+    }
+
+    /// Empirical table measured on *this* machine through the same
+    /// `add_assign` the emulator's hot path uses — the paper's method,
+    /// executed locally. `max_elems` bounds measurement time.
+    pub fn measure_local(max_elems: usize) -> AddEst {
+        let mut pts = Vec::new();
+        let mut elems = 1usize << 10;
+        // Always include a near-zero knot so interpolation starts sanely.
+        pts.push((0.0, 1e-7));
+        while elems <= max_elems {
+            let reps = (1 << 22) / elems.max(1) + 1;
+            let t = crate::collectives::reduce::measure_add_seconds(elems, reps.min(64));
+            pts.push((elems as f64, t));
+            elems *= 4;
+        }
+        AddEst::from_points(pts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+
+    #[test]
+    fn trace_covers_all_layers_reverse_order() {
+        let p = ModelId::ResNet50.profile();
+        let tr = backward_trace(&p);
+        assert_eq!(tr.events.len(), p.layers.len());
+        // Emission order: strictly decreasing layer index, increasing time.
+        for w in tr.events.windows(2) {
+            assert!(w[0].layer > w[1].layer);
+            assert!(w[0].t_ready <= w[1].t_ready);
+        }
+        assert_eq!(tr.events.first().unwrap().layer, p.layers.len() - 1);
+        assert_eq!(tr.events.last().unwrap().layer, 0);
+    }
+
+    #[test]
+    fn trace_times_sum_to_backward() {
+        let p = ModelId::Vgg16.profile();
+        let tr = backward_trace(&p);
+        let last = tr.events.last().unwrap().t_ready;
+        assert!((last - tr.t_backward).abs() < 1e-9);
+        assert!((tr.t_forward + tr.t_backward - tr.t_batch).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_bytes_sum_to_model_size() {
+        for id in ModelId::paper_models() {
+            let p = id.profile();
+            let tr = backward_trace(&p);
+            let total: usize = tr.events.iter().map(|e| e.bytes).sum();
+            assert_eq!(total, p.total_bytes());
+        }
+    }
+
+    #[test]
+    fn addest_v100_matches_paper_transmit_scale() {
+        // Sanity: adding a 527 MB (131.75 M elem) vector on V100 ≈ 2 ms —
+        // far below its 42.2 ms transmit at 100 Gbps, which is why the
+        // paper can treat the add cost as secondary.
+        let a = AddEst::v100();
+        let t = a.seconds(527e6 / 4.0);
+        assert!((1e-3..4e-3).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn addest_monotone() {
+        let a = AddEst::v100();
+        let mut last = 0.0;
+        for e in [1e3, 1e5, 1e7, 2.5e8] {
+            let t = a.seconds(e);
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn addest_local_measurement_works() {
+        let a = AddEst::measure_local(1 << 14);
+        let small = a.seconds(1024.0);
+        let big = a.seconds(16384.0);
+        assert!(small > 0.0 && big > small);
+    }
+}

@@ -1,0 +1,103 @@
+//! Transformer profile — the model the e2e example actually trains through
+//! the XLA runtime. Two variants:
+//!
+//! * [`transformer_profile`] — a GPT-2-small-class decoder (~117 M params)
+//!   used by the simulator when `--model transformer` is selected, showing
+//!   the paper's analysis generalizes beyond CNNs (its §4 future work).
+//! * [`tiny_transformer_dims`] — the scaled-down configuration the e2e
+//!   example trains for real on this box (matching
+//!   `python/compile/model.py`; the AOT artifact is built from the same
+//!   numbers, keep them in sync).
+
+use super::{LayerProfile, ModelId, ModelProfile};
+
+/// Decoder-block parameter count for width `d`, FFN multiplier 4.
+fn block_params(d: usize) -> usize {
+    // qkv + output projection: 4·d² (+4d bias) ; MLP: 8·d² (+5d bias);
+    // 2 layer norms: 4d.
+    4 * d * d + 4 * d + 8 * d * d + 5 * d + 4 * d
+}
+
+fn block_flops(d: usize, seq: usize) -> f64 {
+    // Per sample (sequence): matmuls 2·seq·(12·d²) + attention 4·seq²·d.
+    (2 * seq * 12 * d * d) as f64 + (4 * seq * seq * d) as f64
+}
+
+/// GPT-2-small-class profile: 12 layers, d=768, vocab 50257, seq 1024.
+pub fn transformer_profile() -> ModelProfile {
+    let (d, n_layers, vocab, seq) = (768usize, 12usize, 50257usize, 1024usize);
+    let mut layers = Vec::new();
+    layers.push(LayerProfile {
+        name: "embed".into(),
+        params: vocab * d + seq * d,
+        fwd_flops_per_sample: (seq * d) as f64, // lookup + add
+    });
+    for i in 0..n_layers {
+        layers.push(LayerProfile {
+            name: format!("block{i}"),
+            params: block_params(d),
+            fwd_flops_per_sample: block_flops(d, seq),
+        });
+    }
+    layers.push(LayerProfile {
+        name: "lm_head".into(),
+        // Tied embeddings contribute no extra params; final LN only.
+        params: 2 * d,
+        fwd_flops_per_sample: (2 * seq * vocab * d) as f64,
+    });
+    ModelProfile {
+        id: ModelId::Transformer,
+        layers,
+        // V100 fp32, batch 32 sequences: ~4 seq/s (GPT-2-small scale).
+        base_throughput_per_sec: 4.0,
+        batch_size: 32,
+    }
+}
+
+/// Dimensions of the e2e training config (must mirror
+/// `python/compile/model.py::TINY`): returns
+/// `(vocab, d_model, n_layers, n_heads, seq_len)`.
+pub fn tiny_transformer_dims() -> (usize, usize, usize, usize, usize) {
+    (512, 256, 4, 8, 64)
+}
+
+/// Parameter count of the tiny e2e transformer (python side must agree;
+/// checked by an integration test against the artifact metadata).
+///
+/// The python model (`python/compile/model.py`) uses bias-free linear
+/// layers: per block qkv `d·3d` + proj `d·d` + mlp `d·4d + 4d·d` + four
+/// layer-norm vectors `4d` = `12d² + 4d`.
+pub fn tiny_transformer_params() -> usize {
+    let (vocab, d, n_layers, _heads, seq) = tiny_transformer_dims();
+    let embed = vocab * d + seq * d;
+    let per_block = 12 * d * d + 4 * d;
+    let final_ln = 2 * d;
+    embed + n_layers * per_block + final_ln // lm head tied to embedding
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_small_scale() {
+        let p = transformer_profile();
+        let m = p.total_params() as f64 / 1e6;
+        // GPT-2 small is 117M; block-math approximation should land close.
+        assert!((100.0..140.0).contains(&m), "{m}M params");
+    }
+
+    #[test]
+    fn tiny_params_are_laptop_scale() {
+        let n = tiny_transformer_params();
+        // A few million params: real to train on 1 CPU core, big enough to
+        // produce MB-scale gradients for the fusion buffer to chew on.
+        assert!((1_000_000..20_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn block_params_formula() {
+        // d=4: qkv+proj 64+16, mlp 128+20, ln 16 → 244.
+        assert_eq!(block_params(4), 244);
+    }
+}

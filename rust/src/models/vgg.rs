@@ -1,0 +1,97 @@
+//! VGG16 layer generation (Simonyan & Zisserman, configuration D) with
+//! bias terms, ImageNet shape. The interesting property for this paper:
+//! the first fully-connected layer holds 25088×4096 ≈ 103 M parameters
+//! (~411 MB of f32 gradients) — the "layer with 400MB parameters" that
+//! stresses the fusion buffer and makes VGG16 the worst scaler.
+
+use super::{LayerProfile, ModelId, ModelProfile};
+
+fn conv(name: &str, c_in: usize, c_out: usize, hw: usize) -> LayerProfile {
+    LayerProfile {
+        name: name.into(),
+        params: 3 * 3 * c_in * c_out + c_out, // 3×3 kernel + bias
+        fwd_flops_per_sample: 2.0 * (3 * 3 * c_in * c_out * hw * hw) as f64,
+    }
+}
+
+fn fc(name: &str, d_in: usize, d_out: usize) -> LayerProfile {
+    LayerProfile {
+        name: name.into(),
+        params: d_in * d_out + d_out,
+        fwd_flops_per_sample: 2.0 * (d_in * d_out) as f64,
+    }
+}
+
+/// Build the VGG16 profile.
+pub fn vgg16_profile() -> ModelProfile {
+    // (channels, spatial size while at that stage)
+    let mut layers = Vec::new();
+    let cfg: &[(usize, usize, usize)] = &[
+        // (c_in, c_out, hw)
+        (3, 64, 224),
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    for (i, (ci, co, hw)) in cfg.iter().enumerate() {
+        layers.push(conv(&format!("conv{}", i + 1), *ci, *co, *hw));
+    }
+    // Classifier: 7×7×512 = 25088 → 4096 → 4096 → 1000.
+    layers.push(fc("fc1", 25088, 4096));
+    layers.push(fc("fc2", 4096, 4096));
+    layers.push(fc("fc3", 4096, 1000));
+
+    ModelProfile {
+        id: ModelId::Vgg16,
+        layers,
+        // Calibrated single-V100 throughput (images/s, batch 32, fp32).
+        base_throughput_per_sec: 170.0,
+        batch_size: 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_parameter_count() {
+        // Published: 138,357,544 parameters.
+        let p = vgg16_profile();
+        let total = p.total_params();
+        assert!(
+            (137_000_000..=139_500_000).contains(&total),
+            "VGG16 params = {total}"
+        );
+    }
+
+    #[test]
+    fn fc1_dominates() {
+        let p = vgg16_profile();
+        let fc1 = p.layers.iter().find(|l| l.name == "fc1").unwrap();
+        assert_eq!(fc1.params, 25088 * 4096 + 4096);
+        assert!(fc1.params as f64 / p.total_params() as f64 > 0.7);
+    }
+
+    #[test]
+    fn vgg16_flops_about_31_gflops() {
+        // Published "15.5 GFLOPs" counts multiply-adds (MACs); at 2 FLOPs
+        // per MAC the forward pass is ≈ 31 GFLOPs.
+        let gf = vgg16_profile().total_fwd_flops_per_sample() / 1e9;
+        assert!((28.0..=33.0).contains(&gf), "VGG16 fwd = {gf} GFLOPs");
+    }
+
+    #[test]
+    fn sixteen_weight_layers() {
+        assert_eq!(vgg16_profile().layers.len(), 16);
+    }
+}

@@ -1,0 +1,154 @@
+//! In-process fabric: per-worker mailboxes guarded by `Mutex` + `Condvar`,
+//! with tag matching. The fast path for emulation and the reference
+//! implementation the TCP fabric is tested against.
+
+use super::{Endpoint, Fabric, Mailbox};
+use crate::net::shaper::Shaper;
+use crate::topology::WorkerId;
+use crate::Result;
+use std::sync::Arc;
+
+struct Shared {
+    mailboxes: Vec<Mailbox>,
+    /// Optional egress shaping (None = infinitely fast fabric).
+    shaper: Option<Shaper>,
+}
+
+/// In-process fabric over `n` workers.
+pub struct InProcFabric {
+    shared: Arc<Shared>,
+}
+
+impl InProcFabric {
+    /// Unshaped fabric (tests, intra-node-only experiments).
+    pub fn new(n: usize) -> InProcFabric {
+        Self::with_shaper(n, None)
+    }
+
+    /// Fabric whose sends pass through `shaper` (the NIC model).
+    pub fn with_shaper(n: usize, shaper: Option<Shaper>) -> InProcFabric {
+        assert!(n >= 1);
+        let mailboxes = (0..n).map(|_| Mailbox::default()).collect();
+        InProcFabric { shared: Arc::new(Shared { mailboxes, shaper }) }
+    }
+}
+
+impl Fabric for InProcFabric {
+    fn endpoints(&self) -> Vec<Arc<dyn Endpoint>> {
+        (0..self.shared.mailboxes.len())
+            .map(|i| {
+                Arc::new(InProcEndpoint { me: WorkerId(i), shared: Arc::clone(&self.shared) })
+                    as Arc<dyn Endpoint>
+            })
+            .collect()
+    }
+}
+
+struct InProcEndpoint {
+    me: WorkerId,
+    shared: Arc<Shared>,
+}
+
+impl Endpoint for InProcEndpoint {
+    fn me(&self) -> WorkerId {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.shared.mailboxes.len()
+    }
+
+    fn send(&self, to: WorkerId, tag: u64, payload: &[u8]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world(), "send to out-of-range worker {to}");
+        if let Some(shaper) = &self.shared.shaper {
+            shaper.admit(self.me, to, payload.len() as u64);
+        }
+        self.shared.mailboxes[to.0].put(self.me.0, tag, payload.to_vec());
+        Ok(())
+    }
+
+    fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        anyhow::ensure!(from.0 < self.world(), "recv from out-of-range worker {from}");
+        Ok(self.shared.mailboxes[self.me.0].take(from.0, tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn ping_pong() {
+        let fab = InProcFabric::new(2);
+        let eps = fab.endpoints();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = thread::spawn(move || {
+            let m = b.recv(WorkerId(0), 7).unwrap();
+            b.send(WorkerId(0), 8, &m).unwrap();
+        });
+        a.send(WorkerId(1), 7, b"hello").unwrap();
+        let echo = a.recv(WorkerId(1), 8).unwrap();
+        t.join().unwrap();
+        assert_eq!(echo, b"hello");
+    }
+
+    #[test]
+    fn tag_isolation_and_fifo_order() {
+        let fab = InProcFabric::new(2);
+        let eps = fab.endpoints();
+        eps[0].send(WorkerId(1), 1, b"t1-first").unwrap();
+        eps[0].send(WorkerId(1), 2, b"t2").unwrap();
+        eps[0].send(WorkerId(1), 1, b"t1-second").unwrap();
+        assert_eq!(eps[1].recv(WorkerId(0), 2).unwrap(), b"t2");
+        assert_eq!(eps[1].recv(WorkerId(0), 1).unwrap(), b"t1-first");
+        assert_eq!(eps[1].recv(WorkerId(0), 1).unwrap(), b"t1-second");
+    }
+
+    #[test]
+    fn sender_isolation() {
+        let fab = InProcFabric::new(3);
+        let eps = fab.endpoints();
+        eps[0].send(WorkerId(2), 5, b"from0").unwrap();
+        eps[1].send(WorkerId(2), 5, b"from1").unwrap();
+        assert_eq!(eps[2].recv(WorkerId(1), 5).unwrap(), b"from1");
+        assert_eq!(eps[2].recv(WorkerId(0), 5).unwrap(), b"from0");
+    }
+
+    #[test]
+    fn many_threads_all_to_all() {
+        let n = 4;
+        let fab = InProcFabric::new(n);
+        let eps = fab.endpoints();
+        let mut handles = Vec::new();
+        for (i, ep) in eps.into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                for j in 0..n {
+                    if j != i {
+                        ep.send(WorkerId(j), 9, &[i as u8]).unwrap();
+                    }
+                }
+                let mut got = Vec::new();
+                for j in 0..n {
+                    if j != i {
+                        got.push(ep.recv(WorkerId(j), 9).unwrap()[0]);
+                    }
+                }
+                got.sort();
+                let want: Vec<u8> =
+                    (0..n as u8).filter(|x| *x != i as u8).collect();
+                assert_eq!(got, want);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        let fab = InProcFabric::new(1);
+        let eps = fab.endpoints();
+        assert!(eps[0].send(WorkerId(5), 0, b"x").is_err());
+    }
+}

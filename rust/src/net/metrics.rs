@@ -1,0 +1,134 @@
+//! Link byte counters and utilization sampling — the instrumentation behind
+//! the paper's Fig 4 ("recording real time network throughput").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Cumulative byte counters: one egress counter per server plus an
+/// aggregate intra-node counter. Lock-free; safe to read while workers run.
+pub struct NetCounters {
+    egress: Vec<AtomicU64>,
+    intra: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn new(servers: usize) -> NetCounters {
+        NetCounters { egress: (0..servers).map(|_| AtomicU64::new(0)).collect(), intra: AtomicU64::new(0) }
+    }
+
+    pub fn record_egress(&self, server: usize, bytes: u64) {
+        self.egress[server].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_intra(&self, bytes: u64) {
+        self.intra.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn egress_bytes(&self, server: usize) -> u64 {
+        self.egress[server].load(Ordering::Relaxed)
+    }
+
+    pub fn total_egress(&self) -> u64 {
+        self.egress.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn intra_bytes(&self) -> u64 {
+        self.intra.load(Ordering::Relaxed)
+    }
+
+    pub fn servers(&self) -> usize {
+        self.egress.len()
+    }
+}
+
+/// Windowed utilization sampler: snapshot cumulative counters over a wall
+/// interval and convert to achieved bytes/sec per server.
+pub struct UtilizationSampler {
+    last_snapshot: Vec<u64>,
+    last_time: Instant,
+}
+
+/// One utilization sample.
+#[derive(Clone, Debug)]
+pub struct UtilizationSample {
+    /// Seconds since the previous sample.
+    pub window_s: f64,
+    /// Achieved egress bytes/sec per server during the window.
+    pub egress_bps: Vec<f64>,
+}
+
+impl UtilizationSample {
+    /// Mean utilization across servers against a provisioned rate.
+    pub fn mean_utilization(&self, provisioned_bytes_per_sec: f64) -> f64 {
+        if self.egress_bps.is_empty() {
+            return 0.0;
+        }
+        let mean = self.egress_bps.iter().sum::<f64>() / self.egress_bps.len() as f64;
+        mean / provisioned_bytes_per_sec
+    }
+
+    /// Peak per-server rate in the window.
+    pub fn peak_bps(&self) -> f64 {
+        self.egress_bps.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+impl UtilizationSampler {
+    pub fn new(counters: &NetCounters) -> UtilizationSampler {
+        UtilizationSampler {
+            last_snapshot: (0..counters.servers()).map(|s| counters.egress_bytes(s)).collect(),
+            last_time: Instant::now(),
+        }
+    }
+
+    /// Take a sample since the last call.
+    pub fn sample(&mut self, counters: &NetCounters) -> UtilizationSample {
+        let now = Instant::now();
+        let window = (now - self.last_time).as_secs_f64().max(1e-9);
+        let mut egress_bps = Vec::with_capacity(self.last_snapshot.len());
+        for (s, last) in self.last_snapshot.iter_mut().enumerate() {
+            let cur = counters.egress_bytes(s);
+            egress_bps.push((cur - *last) as f64 / window);
+            *last = cur;
+        }
+        self.last_time = now;
+        UtilizationSample { window_s: window, egress_bps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_per_server() {
+        let c = NetCounters::new(3);
+        c.record_egress(0, 10);
+        c.record_egress(2, 30);
+        assert_eq!(c.egress_bytes(0), 10);
+        assert_eq!(c.egress_bytes(1), 0);
+        assert_eq!(c.egress_bytes(2), 30);
+        assert_eq!(c.total_egress(), 40);
+    }
+
+    #[test]
+    fn sampler_reports_window_rate() {
+        let c = NetCounters::new(1);
+        let mut s = UtilizationSampler::new(&c);
+        c.record_egress(0, 1_000_000);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let sample = s.sample(&c);
+        assert!(sample.egress_bps[0] > 0.0);
+        // Second window with no traffic → zero rate.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let sample2 = s.sample(&c);
+        assert_eq!(sample2.egress_bps[0], 0.0);
+    }
+
+    #[test]
+    fn utilization_against_provisioned() {
+        let s = UtilizationSample { window_s: 1.0, egress_bps: vec![5e8, 5e8] };
+        assert!((s.mean_utilization(1e9) - 0.5).abs() < 1e-12);
+        assert_eq!(s.peak_bps(), 5e8);
+    }
+}

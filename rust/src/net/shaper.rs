@@ -1,0 +1,147 @@
+//! Token-bucket NIC model.
+//!
+//! Each *server* has one egress shaper at the provisioned rate (p3dn: one
+//! 100 Gbps NIC shared by its 8 GPUs). Intra-node traffic (NVLink) is not
+//! charged. A `time_scale > 1` slows the emulated network down uniformly so
+//! 100 Gbps-class experiments fit on a loopback interface; as long as the
+//! compute phase is scaled by the same factor, scaling factors are
+//! invariant (both phases stretch equally).
+
+use crate::net::metrics::NetCounters;
+use crate::topology::{LinkClass, Topology, WorkerId};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-server egress token bucket state.
+struct Bucket {
+    /// Time at which the NIC is next free (virtual serialization point).
+    next_free: Instant,
+}
+
+/// The NIC model shared by all endpoints of a fabric.
+pub struct Shaper {
+    topo: Topology,
+    /// Bytes/second actually granted on the wire (after time scaling and
+    /// any effective-bandwidth model applied by the caller).
+    rate_bytes_per_sec: f64,
+    /// Fixed per-message latency (propagation + stack traversal), seconds.
+    latency_s: f64,
+    buckets: Vec<Mutex<Bucket>>,
+    counters: Arc<NetCounters>,
+}
+
+impl Shaper {
+    /// `rate_bytes_per_sec` is the *emulated wall-clock* rate, i.e.
+    /// `provisioned / time_scale`.
+    pub fn new(topo: Topology, rate_bytes_per_sec: f64, latency_s: f64) -> Shaper {
+        assert!(rate_bytes_per_sec > 0.0);
+        let now = Instant::now();
+        Shaper {
+            topo,
+            rate_bytes_per_sec,
+            latency_s,
+            buckets: (0..topo.servers).map(|_| Mutex::new(Bucket { next_free: now })).collect(),
+            counters: Arc::new(NetCounters::new(topo.servers)),
+        }
+    }
+
+    /// Counters for utilization measurement (Fig 4).
+    pub fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// The configured rate in bytes/sec.
+    pub fn rate(&self) -> f64 {
+        self.rate_bytes_per_sec
+    }
+
+    /// Admit `bytes` from `from` to `to`: blocks the sender for the
+    /// serialization delay if the message crosses the network. Returns the
+    /// time actually spent blocked.
+    pub fn admit(&self, from: WorkerId, to: WorkerId, bytes: u64) -> Duration {
+        if self.topo.link_class(from, to) == LinkClass::IntraNode {
+            // NVLink-class: counted but never throttled.
+            self.counters.record_intra(bytes);
+            return Duration::ZERO;
+        }
+        let server = self.topo.server_of(from).0;
+        let serialization = Duration::from_secs_f64(bytes as f64 / self.rate_bytes_per_sec);
+        let start = Instant::now();
+        let wake = {
+            let mut b = self.buckets[server].lock().unwrap();
+            let begin = if b.next_free > start { b.next_free } else { start };
+            b.next_free = begin + serialization;
+            b.next_free
+        };
+        let wake = wake + Duration::from_secs_f64(self.latency_s);
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+        self.counters.record_egress(server, bytes);
+        start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo22() -> Topology {
+        Topology::new(2, 2)
+    }
+
+    #[test]
+    fn intra_node_is_free() {
+        let s = Shaper::new(topo22(), 1e6, 0.0);
+        let d = s.admit(WorkerId(0), WorkerId(1), 10_000_000);
+        assert_eq!(d, Duration::ZERO);
+    }
+
+    #[test]
+    fn inter_node_is_paced_at_rate() {
+        // 1 MB/s; send 200 KB across servers → ~200 ms.
+        let s = Shaper::new(topo22(), 1e6, 0.0);
+        let t0 = Instant::now();
+        s.admit(WorkerId(0), WorkerId(2), 200_000);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.15 && dt < 0.4, "dt={dt}");
+    }
+
+    #[test]
+    fn egress_is_serialized_per_server() {
+        // Two workers on server 0 both send across: the second waits for
+        // the first's serialization slot.
+        let s = Arc::new(Shaper::new(topo22(), 1e6, 0.0));
+        let t0 = Instant::now();
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || {
+            s2.admit(WorkerId(1), WorkerId(3), 100_000);
+        });
+        s.admit(WorkerId(0), WorkerId(2), 100_000);
+        h.join().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        // 200 KB total through one 1 MB/s NIC → ≥ ~200 ms.
+        assert!(dt > 0.17, "dt={dt}");
+    }
+
+    #[test]
+    fn latency_added_once_per_message() {
+        let s = Shaper::new(topo22(), 1e9, 0.05);
+        let t0 = Instant::now();
+        s.admit(WorkerId(0), WorkerId(2), 10);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.05 && dt < 0.2, "dt={dt}");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let s = Shaper::new(topo22(), 1e9, 0.0);
+        s.admit(WorkerId(0), WorkerId(2), 1000);
+        s.admit(WorkerId(0), WorkerId(3), 500);
+        s.admit(WorkerId(0), WorkerId(1), 123); // intra
+        let c = s.counters();
+        assert_eq!(c.egress_bytes(0), 1500);
+        assert_eq!(c.intra_bytes(), 123);
+    }
+}

@@ -1,0 +1,326 @@
+//! Result presentation: ASCII tables, figure series, CSV/JSON writers and
+//! paper-shape checks. (serde stands replaced by purpose-built writers —
+//! the offline build has no serde.)
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A named data series: `(x, y)` points.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn y_at(&self, x: f64) -> Option<f64> {
+        self.points.iter().find(|(px, _)| (*px - x).abs() < 1e-9).map(|(_, y)| *y)
+    }
+}
+
+/// One figure: what the paper plots, as regenerable data.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    /// e.g. "fig3".
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(
+        id: impl Into<String>,
+        title: impl Into<String>,
+        x_label: impl Into<String>,
+        y_label: impl Into<String>,
+    ) -> Figure {
+        Figure {
+            id: id.into(),
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Render as an aligned text table: one row per x, one column per series.
+    pub fn render(&self) -> String {
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        let mut out = String::new();
+        let _ = writeln!(out, "[{}] {}", self.id, self.title);
+        let _ = write!(out, "{:>14}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, " {:>18}", truncate(&s.name, 18));
+        }
+        let _ = writeln!(out, "    ({})", self.y_label);
+        for x in &xs {
+            let _ = write!(out, "{x:>14.3}");
+            for s in &self.series {
+                match s.y_at(*x) {
+                    Some(y) => {
+                        let _ = write!(out, " {y:>18.4}");
+                    }
+                    None => {
+                        let _ = write!(out, " {:>18}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Write `out_dir/<id>.csv`: `x,<series...>` header then one row per x.
+    pub fn write_csv(&self, out_dir: &Path) -> crate::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = out_dir.join(format!("{}.csv", self.id));
+        let mut f = std::fs::File::create(&path)?;
+        let mut header = vec![self.x_label.clone()];
+        header.extend(self.series.iter().map(|s| csv_escape(&s.name)));
+        writeln!(f, "{}", header.join(","))?;
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        for x in xs {
+            let mut row = vec![format!("{x}")];
+            for s in &self.series {
+                row.push(s.y_at(x).map(|y| format!("{y}")).unwrap_or_default());
+            }
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Minimal JSON encoding (hand-rolled; numbers + strings only).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"id\":{},\"title\":{},\"x_label\":{},\"y_label\":{},\"series\":[",
+            json_str(&self.id),
+            json_str(&self.title),
+            json_str(&self.x_label),
+            json_str(&self.y_label)
+        );
+        for (i, ser) in self.series.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{{\"name\":{},\"points\":[", json_str(&ser.name));
+            for (j, (x, y)) in ser.points.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "[{x},{y}]");
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n.saturating_sub(1)])
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// JSON string literal with escaping.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A generic ASCII table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// A paper-shape assertion: "who wins / by what factor / where's the knee"
+/// checks recorded alongside each regenerated figure.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub desc: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl Check {
+    pub fn assert(desc: impl Into<String>, pass: bool, detail: impl Into<String>) -> Check {
+        Check { desc: desc.into(), pass, detail: detail.into() }
+    }
+}
+
+/// Render a check list; returns `(rendered, all_passed)`.
+pub fn render_checks(checks: &[Check]) -> (String, bool) {
+    let mut out = String::new();
+    let mut all = true;
+    for c in checks {
+        all &= c.pass;
+        let _ = writeln!(out, "  [{}] {} — {}", if c.pass { "PASS" } else { "FAIL" }, c.desc, c.detail);
+    }
+    (out, all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_lookup() {
+        let mut s = Series::new("a");
+        s.push(1.0, 10.0);
+        s.push(2.0, 20.0);
+        assert_eq!(s.y_at(2.0), Some(20.0));
+        assert_eq!(s.y_at(3.0), None);
+    }
+
+    #[test]
+    fn figure_render_aligns_series() {
+        let mut f = Figure::new("figX", "test", "x", "y");
+        let mut a = Series::new("a");
+        a.push(1.0, 0.5);
+        let mut b = Series::new("b");
+        b.push(1.0, 0.6);
+        b.push(2.0, 0.7);
+        f.series = vec![a, b];
+        let r = f.render();
+        assert!(r.contains("figX"));
+        assert!(r.contains('-')); // missing point placeholder
+    }
+
+    #[test]
+    fn csv_written_with_header() {
+        let dir = std::env::temp_dir().join("netbn_test_csv");
+        let mut f = Figure::new("figY", "t", "bw", "sf");
+        let mut s = Series::new("m,1");
+        s.push(1.0, 0.1);
+        f.series = vec![s];
+        let p = f.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.starts_with("bw,\"m,1\""));
+        assert!(text.contains("1,0.1"));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        let mut f = Figure::new("f", "t", "x", "y");
+        f.series.push(Series { name: "s".into(), points: vec![(1.0, 2.0)] });
+        let j = f.to_json();
+        assert!(j.contains("\"points\":[[1,2]]"));
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("T"));
+        assert!(r.contains("bb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn checks_aggregate() {
+        let (_, ok) = render_checks(&[
+            Check::assert("x", true, ""),
+            Check::assert("y", false, "boom"),
+        ]);
+        assert!(!ok);
+    }
+}

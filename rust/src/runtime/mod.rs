@@ -1,0 +1,76 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas side) and executes them on
+//! the CPU PJRT client. Python never runs here.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers without `Send`, so all
+//! device work is owned by a dedicated **device-service thread**; worker
+//! threads talk to it through a cloneable [`DeviceHandle`] with plain
+//! `Vec<f32>`/`Vec<i32>` tensors. On this 1-core testbed that thread also
+//! models the reality that compute serializes — the emulator's scaling
+//! experiments use modeled compute instead (see `trainer`).
+
+pub mod service;
+pub mod tensor;
+
+pub use service::{DeviceHandle, DeviceService, ExecStats};
+pub use tensor::{HostTensor, TensorData};
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: `$NETBN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("NETBN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of a named artifact.
+pub fn artifact_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.hlo.txt"))
+}
+
+/// List artifact names available in a directory.
+pub fn list_artifacts(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    if !dir.exists() {
+        return Ok(names);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                names.push(stem.to_string());
+            }
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_shape() {
+        let p = artifact_path(Path::new("/a"), "train_step");
+        assert_eq!(p, PathBuf::from("/a/train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn list_artifacts_empty_dir_ok() {
+        let names = list_artifacts(Path::new("/definitely/not/here")).unwrap();
+        assert!(names.is_empty());
+    }
+
+    #[test]
+    fn list_artifacts_filters_suffix() {
+        let dir = std::env::temp_dir().join("netbn_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("b.txt"), "x").unwrap();
+        let names = list_artifacts(&dir).unwrap();
+        assert_eq!(names, vec!["a"]);
+    }
+}

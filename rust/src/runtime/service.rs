@@ -1,0 +1,233 @@
+//! The device-service thread: owns the PJRT client and compiled
+//! executables; serves execution requests from any number of worker
+//! threads over an mpsc channel.
+
+use super::tensor::{HostTensor, TensorData};
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Execution statistics (for §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub compiles: u64,
+    pub exec_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+enum Request {
+    Exec { name: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
+    Stats { reply: mpsc::Sender<ExecStats> },
+    /// Preload (compile) an artifact without running it.
+    Warm { name: String, reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the device service.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Request>,
+    // Serializes shutdown.
+    _shared: Arc<Mutex<()>>,
+}
+
+impl DeviceHandle {
+    /// Execute artifact `name` with `inputs`; returns the flattened tuple
+    /// outputs.
+    pub fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("device service is down"))?;
+        rx.recv().map_err(|_| anyhow!("device service dropped the request"))?
+    }
+
+    /// Compile `name` ahead of first use.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("device service is down"))?;
+        rx.recv().map_err(|_| anyhow!("device service dropped the request"))?
+    }
+
+    pub fn stats(&self) -> Result<ExecStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Request::Stats { reply }).map_err(|_| anyhow!("device service is down"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+/// The service: spawn once, hand out handles.
+pub struct DeviceService {
+    handle: DeviceHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Request>,
+}
+
+impl DeviceService {
+    /// Start the service over an artifacts directory.
+    pub fn start(artifact_dir: PathBuf) -> DeviceService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("device-service".into())
+            .spawn(move || service_main(artifact_dir, rx))
+            .expect("spawn device service");
+        let handle = DeviceHandle { tx: tx.clone(), _shared: Arc::new(Mutex::new(())) };
+        DeviceService { handle, join: Some(join), tx }
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_main(artifact_dir: PathBuf, rx: mpsc::Receiver<Request>) {
+    let mut state = match ServiceState::new(artifact_dir) {
+        Ok(s) => s,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Exec { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed to start: {e}")));
+                    }
+                    Request::Warm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed to start: {e}")));
+                    }
+                    Request::Stats { reply } => {
+                        let _ = reply.send(ExecStats::default());
+                    }
+                    Request::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Exec { name, inputs, reply } => {
+                let _ = reply.send(state.exec(&name, inputs));
+            }
+            Request::Warm { name, reply } => {
+                let _ = reply.send(state.ensure_compiled(&name).map(|_| ()));
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(state.stats);
+            }
+            Request::Shutdown => return,
+        }
+    }
+}
+
+struct ServiceState {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: ExecStats,
+}
+
+impl ServiceState {
+    fn new(artifact_dir: PathBuf) -> Result<ServiceState> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ServiceState { client, artifact_dir, executables: HashMap::new(), stats: ExecStats::default() })
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = super::artifact_path(&self.artifact_dir, name);
+            anyhow::ensure!(
+                path.exists(),
+                "artifact {name:?} not found at {path:?}; run `make artifacts`"
+            );
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.stats.compile_seconds += t0.elapsed().as_secs_f64();
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    fn exec(&mut self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let exe = &self.executables[name];
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        anyhow::ensure!(!out.is_empty() && !out[0].is_empty(), "no outputs from {name}");
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch outputs: {e:?}"))?;
+        self.stats.calls += 1;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        // jax lowers with return_tuple=True → always a tuple at top level.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts.into_iter().map(|l| from_literal(&l)).collect()
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+        TensorData::U32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&t.dims).map_err(|e| anyhow!("reshape to {:?}: {e:?}", t.dims))
+}
+
+fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("output shape: {e:?}"))?;
+    let dims = shape.dims().to_vec();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => {
+            TensorData::F32(l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?)
+        }
+        xla::ElementType::S32 => {
+            TensorData::I32(l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?)
+        }
+        xla::ElementType::U32 => {
+            TensorData::U32(l.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e:?}"))?)
+        }
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    };
+    Ok(HostTensor { dims, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let svc = DeviceService::start(PathBuf::from("/nonexistent"));
+        let h = svc.handle();
+        let err = h.exec("nope", vec![]).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn handle_survives_many_clones() {
+        let svc = DeviceService::start(PathBuf::from("/nonexistent"));
+        let h1 = svc.handle();
+        let h2 = h1.clone();
+        assert!(h2.exec("x", vec![]).is_err());
+        assert_eq!(h1.stats().unwrap().calls, 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Host-side tensors: the `Send`-able currency between worker threads and
+//! the device-service thread.
+
+use crate::Result;
+
+/// Element storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A shaped host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[i64], data: Vec<f32>) -> HostTensor {
+        let t = HostTensor { dims: dims.to_vec(), data: TensorData::F32(data) };
+        t.check();
+        t
+    }
+
+    pub fn i32(dims: &[i64], data: Vec<i32>) -> HostTensor {
+        let t = HostTensor { dims: dims.to_vec(), data: TensorData::I32(data) };
+        t.check();
+        t
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor { dims: vec![], data: TensorData::F32(vec![x]) }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().map(|d| *d as usize).product()
+    }
+
+    fn check(&self) {
+        assert_eq!(self.elem_count(), self.data.len(), "dims {:?} vs len {}", self.dims, self.data.len());
+    }
+
+    /// Borrow as f32 slice.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => anyhow::bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Consume into an f32 vector.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            other => anyhow::bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Mean of an f32 tensor (loss reporting).
+    pub fn mean_f32(&self) -> Result<f64> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(!v.is_empty(), "mean of empty tensor");
+        Ok(v.iter().map(|x| *x as f64).sum::<f64>() / v.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_has_empty_dims() {
+        let t = HostTensor::scalar_f32(3.0);
+        assert_eq!(t.elem_count(), 1);
+        assert_eq!(t.as_f32().unwrap(), &[3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims")]
+    fn mismatched_dims_panic() {
+        HostTensor::f32(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = HostTensor::i32(&[1], vec![1]);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn mean() {
+        let t = HostTensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        assert!((t.mean_f32().unwrap() - 2.0).abs() < 1e-12);
+    }
+}

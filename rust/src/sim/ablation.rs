@@ -1,0 +1,173 @@
+//! Ablation studies over the design choices DESIGN.md calls out —
+//! extensions beyond the paper's figures, answering "how sensitive are
+//! the conclusions to the knobs?":
+//!
+//! * fusion-buffer size and timeout (Horovod's 64 MB / 5 ms defaults),
+//! * all-reduce algorithm (ring vs tree vs parameter-server cost models),
+//! * the bandwidth × compression interaction grid.
+
+use super::{simulate, SimParams};
+use crate::models::timing::backward_trace;
+use crate::models::ModelId;
+use crate::report::{Figure, Series};
+
+/// Fusion-buffer size sweep: scaling factor vs buffer MB at fixed 5 ms
+/// timeout (measured-mode, 100 Gbps, 8 servers).
+pub fn ablate_fusion_size(model: ModelId) -> Figure {
+    let mut fig = Figure::new(
+        "ablate_fusion_size",
+        format!("Scaling factor vs fusion buffer size ({}, measured-mode, 100 Gbps)", model.name()),
+        "buffer MB",
+        "scaling factor",
+    );
+    let trace = backward_trace(&model.profile());
+    let mut s = Series::new(model.name());
+    for mb in [1.0, 4.0, 16.0, 64.0, 256.0, 1024.0] {
+        let mut p = SimParams::horovod_like(trace.clone(), 8, 8, 100.0);
+        p.fusion.buffer_bytes = (mb * 1e6) as usize;
+        s.push(mb, simulate(&p).scaling_factor);
+    }
+    fig.series.push(s);
+    fig
+}
+
+/// Fusion timeout sweep at fixed 64 MB buffer.
+pub fn ablate_fusion_timeout(model: ModelId) -> Figure {
+    let mut fig = Figure::new(
+        "ablate_fusion_timeout",
+        format!("Scaling factor vs fusion timeout ({}, measured-mode, 100 Gbps)", model.name()),
+        "timeout ms",
+        "scaling factor",
+    );
+    let trace = backward_trace(&model.profile());
+    let mut s = Series::new(model.name());
+    for ms in [0.5, 1.0, 2.0, 5.0, 10.0, 25.0, 100.0] {
+        let mut p = SimParams::horovod_like(trace.clone(), 8, 8, 100.0);
+        p.fusion.timeout_s = ms * 1e-3;
+        s.push(ms, simulate(&p).scaling_factor);
+    }
+    fig.series.push(s);
+    fig
+}
+
+/// Analytic per-step communication time of the three collective
+/// algorithms at a given scale — the reason all-reduce strategies moved
+/// from PS to rings, rendered as a figure.
+pub fn ablate_collective_cost(model: ModelId, bandwidth_gbps: f64) -> Figure {
+    let mut fig = Figure::new(
+        "ablate_collectives",
+        format!("Analytic wire time per step ({}, {bandwidth_gbps} Gbps)", model.name()),
+        "servers",
+        "wire seconds at the bottleneck link",
+    );
+    let s_bytes = model.profile().total_bytes() as f64;
+    let rate = crate::gbps_to_bytes_per_sec(bandwidth_gbps);
+    let mut ring = Series::new("ring (2S(M-1)/M)");
+    let mut tree = Series::new("tree (2S·ceil(log2 M))");
+    let mut ps = Series::new("parameter server (2S(M-1) at server)");
+    for m in [2usize, 4, 8, 16, 32] {
+        let mf = m as f64;
+        ring.push(mf, 2.0 * s_bytes * (mf - 1.0) / mf / rate);
+        tree.push(mf, 2.0 * s_bytes * (mf as f64).log2().ceil() / rate);
+        ps.push(mf, 2.0 * s_bytes * (mf - 1.0) / rate);
+    }
+    fig.series = vec![ring, tree, ps];
+    fig
+}
+
+/// Bandwidth × compression grid: the full interaction the paper samples
+/// at two bandwidths in Fig 8.
+pub fn ablate_bw_compression_grid(model: ModelId) -> Figure {
+    let mut fig = Figure::new(
+        "ablate_bw_compression",
+        format!("Scaling factor across bandwidth × compression ({}, full util)", model.name()),
+        "bandwidth Gbps",
+        "scaling factor",
+    );
+    let trace = backward_trace(&model.profile());
+    for ratio in [1.0, 2.0, 5.0, 10.0, 50.0] {
+        let mut s = Series::new(format!("{ratio}x"));
+        for bw in [1.0, 5.0, 10.0, 25.0, 50.0, 100.0] {
+            let mut p = SimParams::whatif(trace.clone(), 8, 8, bw);
+            p.compression_ratio = ratio;
+            s.push(bw, simulate(&p).scaling_factor);
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// All ablations for a model, ready to emit.
+pub fn all(model: ModelId) -> Vec<Figure> {
+    vec![
+        ablate_fusion_size(model),
+        ablate_fusion_timeout(model),
+        ablate_collective_cost(model, 100.0),
+        ablate_bw_compression_grid(model),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_size_has_interior_structure() {
+        // Tiny buffers cost coordination per bucket; huge buffers delay
+        // the first all-reduce. The defaults should beat at least one
+        // extreme, and every point must be a valid fraction.
+        let f = ablate_fusion_size(ModelId::Vgg16);
+        let s = &f.series[0];
+        for (x, y) in &s.points {
+            assert!((0.0..=1.0).contains(y), "{x}: {y}");
+        }
+        let at_1 = s.y_at(1.0).unwrap();
+        let at_64 = s.y_at(64.0).unwrap();
+        assert!(at_64 >= at_1 - 0.05, "64MB {at_64} vs 1MB {at_1}");
+    }
+
+    #[test]
+    fn losing_overlap_hurts_what_if_scaling() {
+        // Isolate the paper's §4 claim "this overlap is critical": in the
+        // idealized what-if with an effectively infinite buffer, a huge
+        // timeout means nothing ships until backward ends — the scaling
+        // factor must drop vs the 5 ms default. (In *measured* mode the
+        // figure shows the opposite can happen: fewer buckets also means
+        // less per-bucket negotiation — a real Horovod tuning tradeoff.)
+        let trace = backward_trace(&ModelId::ResNet50.profile());
+        let f = |timeout_s: f64| {
+            let mut p = SimParams::whatif(trace.clone(), 8, 8, 25.0);
+            p.fusion.buffer_bytes = 1 << 30; // no size triggers
+            p.fusion.timeout_s = timeout_s;
+            simulate(&p).scaling_factor
+        };
+        let overlapped = f(5e-3);
+        let serial = f(1.0);
+        assert!(serial < overlapped - 0.05, "{serial} vs {overlapped}");
+    }
+
+    #[test]
+    fn ps_is_worst_at_scale() {
+        let f = ablate_collective_cost(ModelId::Vgg16, 100.0);
+        let ring = f.series("ring (2S(M-1)/M)").unwrap();
+        let ps = f.series("parameter server (2S(M-1) at server)").unwrap();
+        assert!(ps.y_at(32.0).unwrap() > ring.y_at(32.0).unwrap() * 10.0);
+    }
+
+    #[test]
+    fn compression_grid_monotone_both_axes() {
+        let f = ablate_bw_compression_grid(ModelId::Vgg16);
+        // Along bandwidth at fixed ratio.
+        for s in &f.series {
+            for w in s.points.windows(2) {
+                assert!(w[1].1 >= w[0].1 - 1e-9, "{}: {:?}", s.name, w);
+            }
+        }
+        // Along ratio at fixed bandwidth.
+        let at = |name: &str, bw: f64| f.series(name).unwrap().y_at(bw).unwrap();
+        for bw in [1.0, 10.0] {
+            assert!(at("2x", bw) >= at("1x", bw) - 1e-9);
+            assert!(at("10x", bw) >= at("2x", bw) - 1e-9);
+        }
+    }
+}

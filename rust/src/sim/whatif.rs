@@ -1,0 +1,343 @@
+//! What-if sweep drivers: every figure in the paper's evaluation as a
+//! regenerable data series. Each function returns [`Figure`]s containing
+//! exactly the rows/series the paper plots; the shape checks that go with
+//! them live in [`crate::figures`].
+
+use super::{simulate, SimParams};
+use crate::models::timing::backward_trace;
+use crate::models::ModelId;
+use crate::net::kernel_tcp::KernelTcpModel;
+use crate::report::{Figure, Series};
+
+/// Default GPUs per server (p3dn.24xlarge).
+pub const GPUS_PER_SERVER: usize = 8;
+/// The paper's bandwidth sweep points (Gbps).
+pub const BANDWIDTHS: [f64; 5] = [1.0, 10.0, 25.0, 50.0, 100.0];
+/// The paper's server sweep points.
+pub const SERVER_COUNTS: [usize; 3] = [2, 4, 8];
+
+/// Fig 1 — scaling factor vs number of servers (Horovod-like transport at
+/// 100 Gbps), one series per model.
+pub fn fig1_scaling_vs_servers() -> Figure {
+    let mut fig = Figure::new(
+        "fig1",
+        "Scaling factor vs. number of servers (measured-mode, 100 Gbps)",
+        "servers",
+        "scaling factor",
+    );
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let mut s = Series::new(id.name());
+        for servers in SERVER_COUNTS {
+            let p = SimParams::horovod_like(trace.clone(), servers, GPUS_PER_SERVER, 100.0);
+            s.push(servers as f64, simulate(&p).scaling_factor);
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 2 — computation time (ms per batch) vs number of servers, one
+/// series per model, plus the single-GPU baseline at x = 1.
+pub fn fig2_computation_time() -> Figure {
+    let mut fig = Figure::new(
+        "fig2",
+        "Computation time vs. number of servers",
+        "servers",
+        "computation ms/batch",
+    );
+    for id in ModelId::paper_models() {
+        let profile = id.profile();
+        let mut s = Series::new(id.name());
+        // Single GPU: no hooks, no in-stream all-reduce ops.
+        s.push(1.0, profile.t_batch() * 1e3);
+        for servers in SERVER_COUNTS {
+            let p = SimParams::horovod_like(
+                backward_trace(&profile),
+                servers,
+                GPUS_PER_SERVER,
+                100.0,
+            );
+            // Distributed computation phase = inflated t_batch; constant in
+            // the number of servers (the paper's point).
+            s.push(servers as f64, profile.t_batch() * p.compute_inflation * 1e3);
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 3 — scaling factor vs bandwidth for one model (paper: ResNet50),
+/// one series per server count, measured-mode transport.
+pub fn fig3_scaling_vs_bandwidth(model: ModelId) -> Figure {
+    let mut fig = Figure::new(
+        "fig3",
+        format!("Scaling factor vs. bandwidth ({}, measured-mode)", model.name()),
+        "bandwidth Gbps",
+        "scaling factor",
+    );
+    let trace = backward_trace(&model.profile());
+    for servers in SERVER_COUNTS {
+        let mut s = Series::new(format!("{servers} servers"));
+        for bw in BANDWIDTHS {
+            let p = SimParams::horovod_like(trace.clone(), servers, GPUS_PER_SERVER, bw);
+            s.push(bw, simulate(&p).scaling_factor);
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 4 — network bandwidth utilization vs provisioned bandwidth.
+/// Two views per model: the transport model's achievable utilization and
+/// the achieved-over-communication-window rate from the simulation.
+pub fn fig4_network_utilization() -> Figure {
+    let mut fig = Figure::new(
+        "fig4",
+        "Network bandwidth utilization vs. provisioned bandwidth (8 servers)",
+        "bandwidth Gbps",
+        "utilization (fraction)",
+    );
+    let transport = KernelTcpModel::default();
+    let mut cap = Series::new("transport achievable");
+    for bw in BANDWIDTHS {
+        cap.push(bw, transport.utilization(bw));
+    }
+    fig.series.push(cap);
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let mut s = Series::new(format!("{} achieved", id.name()));
+        for bw in BANDWIDTHS {
+            let p = SimParams::horovod_like(trace.clone(), 8, GPUS_PER_SERVER, bw);
+            let r = simulate(&p);
+            s.push(bw, (r.achieved_gbps / bw).min(1.0));
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 5 — CPU utilization during the communication phase vs network
+/// speed, one series per model (8 servers).
+pub fn fig5_cpu_utilization() -> Figure {
+    let mut fig = Figure::new(
+        "fig5",
+        "CPU utilization vs. network speed (8 servers)",
+        "bandwidth Gbps",
+        "CPU utilization (fraction)",
+    );
+    let transport = KernelTcpModel::default();
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let mut s = Series::new(id.name());
+        for bw in BANDWIDTHS {
+            let p = SimParams::horovod_like(trace.clone(), 8, GPUS_PER_SERVER, bw);
+            let r = simulate(&p);
+            // CPU cost follows the achieved wire rate; duty-cycle weights
+            // it by how much of the step the communication phase occupies.
+            let duty = (r.t_sync - 0.0).min(r.t_batch + r.t_overhead) / (r.t_batch + r.t_overhead);
+            s.push(bw, transport.cpu_utilization(bw) * duty.clamp(0.0, 1.0));
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 6 — simulated (full-utilization) vs measured-mode scaling factor
+/// across bandwidths; one figure per model (8 servers, as the paper's
+/// divergence analysis).
+pub fn fig6_sim_vs_measured(model: ModelId, servers: usize) -> Figure {
+    let mut fig = Figure::new(
+        format!("fig6_{}", model.name().to_ascii_lowercase()),
+        format!("Simulated vs measured scaling factor ({}, {servers} servers)", model.name()),
+        "bandwidth Gbps",
+        "scaling factor",
+    );
+    let trace = backward_trace(&model.profile());
+    let mut sim_s = Series::new("simulated (full util)");
+    let mut meas_s = Series::new("measured-mode (Horovod-like)");
+    for bw in BANDWIDTHS {
+        sim_s.push(
+            bw,
+            simulate(&SimParams::whatif(trace.clone(), servers, GPUS_PER_SERVER, bw))
+                .scaling_factor,
+        );
+        meas_s.push(
+            bw,
+            simulate(&SimParams::horovod_like(trace.clone(), servers, GPUS_PER_SERVER, bw))
+                .scaling_factor,
+        );
+    }
+    fig.series = vec![sim_s, meas_s];
+    fig
+}
+
+/// Fig 7 — simulated scaling factor under 100 Gbps vs number of workers,
+/// with the measured-mode value alongside (the paper's red "gap" bars).
+pub fn fig7_simulated_at_100g() -> Figure {
+    let mut fig = Figure::new(
+        "fig7",
+        "Simulated scaling factor under 100 Gbps (gap to measured-mode)",
+        "workers (GPUs)",
+        "scaling factor",
+    );
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let mut sim_s = Series::new(format!("{} simulated", id.name()));
+        let mut meas_s = Series::new(format!("{} measured", id.name()));
+        for servers in SERVER_COUNTS {
+            let w = servers * GPUS_PER_SERVER;
+            sim_s.push(
+                w as f64,
+                simulate(&SimParams::whatif(trace.clone(), servers, GPUS_PER_SERVER, 100.0))
+                    .scaling_factor,
+            );
+            meas_s.push(
+                w as f64,
+                simulate(&SimParams::horovod_like(trace.clone(), servers, GPUS_PER_SERVER, 100.0))
+                    .scaling_factor,
+            );
+        }
+        fig.series.push(sim_s);
+        fig.series.push(meas_s);
+    }
+    fig
+}
+
+/// The paper's compression-ratio sweep points.
+pub const COMPRESSION_RATIOS: [f64; 6] = [1.0, 2.0, 4.0, 5.0, 10.0, 100.0];
+
+/// Fig 8 — simulated scaling factor vs gradient-compression ratio at a
+/// given bandwidth (paper shows 10 Gbps and 100 Gbps), full utilization,
+/// one series per model (8 servers).
+pub fn fig8_compression(bandwidth_gbps: f64) -> Figure {
+    let mut fig = Figure::new(
+        format!("fig8_{}g", bandwidth_gbps as u64),
+        format!("Simulated scaling factor vs compression ratio ({bandwidth_gbps} Gbps)"),
+        "compression ratio",
+        "scaling factor",
+    );
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let mut s = Series::new(id.name());
+        for ratio in COMPRESSION_RATIOS {
+            let mut p = SimParams::whatif(trace.clone(), 8, GPUS_PER_SERVER, bandwidth_gbps);
+            p.compression_ratio = ratio;
+            s.push(ratio, simulate(&p).scaling_factor);
+        }
+        fig.series.push(s);
+    }
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_three_models_three_points() {
+        let f = fig1_scaling_vs_servers();
+        assert_eq!(f.series.len(), 3);
+        for s in &f.series {
+            assert_eq!(s.points.len(), 3);
+            for (_, y) in &s.points {
+                assert!((0.3..1.0).contains(y), "{}: {y}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_ordering_resnet50_best_vgg_worst() {
+        let f = fig1_scaling_vs_servers();
+        for servers in SERVER_COUNTS {
+            let x = servers as f64;
+            let rn50 = f.series("ResNet50").unwrap().y_at(x).unwrap();
+            let rn101 = f.series("ResNet101").unwrap().y_at(x).unwrap();
+            let vgg = f.series("VGG16").unwrap().y_at(x).unwrap();
+            assert!(rn50 > rn101 && rn101 > vgg, "{servers}: {rn50} {rn101} {vgg}");
+        }
+    }
+
+    #[test]
+    fn fig2_flat_in_servers() {
+        let f = fig2_computation_time();
+        for s in &f.series {
+            let at2 = s.y_at(2.0).unwrap();
+            let at8 = s.y_at(8.0).unwrap();
+            assert!((at2 - at8).abs() < 1e-9, "{}", s.name);
+            // Distributed ≤ 15% above single GPU (paper's bound).
+            let single = s.y_at(1.0).unwrap();
+            assert!(at8 / single <= 1.15 + 1e-9);
+            assert!(at8 / single > 1.0);
+        }
+    }
+
+    #[test]
+    fn fig3_plateaus_after_25g() {
+        let f = fig3_scaling_vs_bandwidth(ModelId::ResNet50);
+        for s in &f.series {
+            let gain_low = s.y_at(10.0).unwrap() - s.y_at(1.0).unwrap();
+            let gain_high = s.y_at(100.0).unwrap() - s.y_at(25.0).unwrap();
+            assert!(gain_high < gain_low * 0.4, "{}: {gain_low} vs {gain_high}", s.name);
+        }
+    }
+
+    #[test]
+    fn fig4_full_at_1g_low_at_100g() {
+        let f = fig4_network_utilization();
+        let cap = f.series("transport achievable").unwrap();
+        assert!(cap.y_at(1.0).unwrap() > 0.99);
+        assert!(cap.y_at(100.0).unwrap() < 0.35);
+    }
+
+    #[test]
+    fn fig5_in_paper_band() {
+        let f = fig5_cpu_utilization();
+        for s in &f.series {
+            for (bw, u) in &s.points {
+                assert!((0.0..=0.30).contains(u), "{} @ {bw}: {u}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_diverges_at_high_bw() {
+        for id in ModelId::paper_models() {
+            let f = fig6_sim_vs_measured(id, 8);
+            let sim = f.series("simulated (full util)").unwrap();
+            let meas = f.series("measured-mode (Horovod-like)").unwrap();
+            let gap1 = sim.y_at(1.0).unwrap() - meas.y_at(1.0).unwrap();
+            let gap100 = sim.y_at(100.0).unwrap() - meas.y_at(100.0).unwrap();
+            assert!(gap1 < 0.12, "{id}: gap at 1G = {gap1}");
+            assert!(gap100 > 0.1, "{id}: gap at 100G = {gap100}");
+            assert!(sim.y_at(100.0).unwrap() > 0.95, "{id}");
+        }
+    }
+
+    #[test]
+    fn fig7_simulated_near_one_even_at_64() {
+        let f = fig7_simulated_at_100g();
+        for id in ModelId::paper_models() {
+            let s = f.series(&format!("{} simulated", id.name())).unwrap();
+            assert!(s.y_at(64.0).unwrap() > 0.95, "{id}");
+        }
+    }
+
+    #[test]
+    fn fig8_10g_vs_100g() {
+        let f10 = fig8_compression(10.0);
+        let f100 = fig8_compression(100.0);
+        // VGG16 at 10 Gbps: 10× compression → near-linear (paper's claim).
+        let vgg10 = f10.series("VGG16").unwrap();
+        assert!(vgg10.y_at(10.0).unwrap() > 0.9);
+        // Diminishing: 100× adds little over 10×.
+        assert!(vgg10.y_at(100.0).unwrap() - vgg10.y_at(10.0).unwrap() < 0.08);
+        // At 100 Gbps compression is unnecessary (already near 1 at ratio 1).
+        for s in &f100.series {
+            assert!(s.y_at(1.0).unwrap() > 0.9, "{}", s.name);
+        }
+        // 2×–5× already recovers most of the gap at 10 Gbps.
+        let rn50 = f10.series("ResNet50").unwrap();
+        assert!(rn50.y_at(5.0).unwrap() > 0.9, "{}", rn50.y_at(5.0).unwrap());
+    }
+}

@@ -1,0 +1,214 @@
+//! Cluster topology: servers × GPUs-per-server worker addressing, ring
+//! orders for all-reduce, and the intra-node (NVLink) vs inter-node
+//! (network) distinction the p3dn testbed has.
+
+use std::fmt;
+
+/// Global worker (GPU) rank, `0..workers()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WorkerId(pub usize);
+
+/// Server (instance) index, `0..servers`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServerId(pub usize);
+
+impl fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "w{}", self.0)
+    }
+}
+
+impl fmt::Display for ServerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Whether a worker-to-worker link crosses the network or stays on NVLink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Same server: NVLink-class, effectively not the bottleneck.
+    IntraNode,
+    /// Crosses servers: the provisioned network (the paper's subject).
+    InterNode,
+}
+
+/// A `servers × gpus_per_server` cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub servers: usize,
+    pub gpus_per_server: usize,
+}
+
+impl Topology {
+    pub fn new(servers: usize, gpus_per_server: usize) -> Topology {
+        assert!(servers >= 1 && gpus_per_server >= 1);
+        Topology { servers, gpus_per_server }
+    }
+
+    /// Total workers.
+    pub fn workers(&self) -> usize {
+        self.servers * self.gpus_per_server
+    }
+
+    /// Server hosting a worker. Workers are numbered server-major:
+    /// server 0 gets ranks `0..g`, server 1 gets `g..2g`, …
+    pub fn server_of(&self, w: WorkerId) -> ServerId {
+        assert!(w.0 < self.workers(), "worker {w} out of range");
+        ServerId(w.0 / self.gpus_per_server)
+    }
+
+    /// Local (on-server) index of a worker.
+    pub fn local_rank(&self, w: WorkerId) -> usize {
+        assert!(w.0 < self.workers());
+        w.0 % self.gpus_per_server
+    }
+
+    /// The designated leader worker (local rank 0) for a server.
+    pub fn leader_of(&self, s: ServerId) -> WorkerId {
+        assert!(s.0 < self.servers);
+        WorkerId(s.0 * self.gpus_per_server)
+    }
+
+    /// All workers on a server.
+    pub fn workers_on(&self, s: ServerId) -> Vec<WorkerId> {
+        let base = s.0 * self.gpus_per_server;
+        (base..base + self.gpus_per_server).map(WorkerId).collect()
+    }
+
+    /// Classify the link between two workers.
+    pub fn link_class(&self, a: WorkerId, b: WorkerId) -> LinkClass {
+        if self.server_of(a) == self.server_of(b) {
+            LinkClass::IntraNode
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    /// Flat ring over all workers (rank order). Successor of the last is
+    /// the first. This is the single-level ring NCCL uses when every hop
+    /// cost is uniform; with `gpus_per_server > 1` most hops stay on
+    /// NVLink and exactly `servers` hops cross the network.
+    pub fn flat_ring(&self) -> Ring {
+        Ring { order: (0..self.workers()).map(WorkerId).collect() }
+    }
+
+    /// Ring over server leaders only — the inter-node stage of a
+    /// hierarchical all-reduce.
+    pub fn leader_ring(&self) -> Ring {
+        Ring { order: (0..self.servers).map(|s| self.leader_of(ServerId(s))).collect() }
+    }
+
+    /// Number of ring hops that cross the network in the flat ring.
+    pub fn inter_node_hops(&self) -> usize {
+        if self.servers == 1 {
+            0
+        } else {
+            self.servers
+        }
+    }
+}
+
+/// An ordered ring of workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ring {
+    order: Vec<WorkerId>,
+}
+
+impl Ring {
+    pub fn new(order: Vec<WorkerId>) -> Ring {
+        assert!(!order.is_empty());
+        Ring { order }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn members(&self) -> &[WorkerId] {
+        &self.order
+    }
+
+    /// Position of a worker in the ring.
+    pub fn position(&self, w: WorkerId) -> Option<usize> {
+        self.order.iter().position(|x| *x == w)
+    }
+
+    /// Next worker clockwise from `w`.
+    pub fn next(&self, w: WorkerId) -> WorkerId {
+        let i = self.position(w).expect("worker not in ring");
+        self.order[(i + 1) % self.order.len()]
+    }
+
+    /// Previous worker (counter-clockwise) from `w`.
+    pub fn prev(&self, w: WorkerId) -> WorkerId {
+        let i = self.position(w).expect("worker not in ring");
+        self.order[(i + self.order.len() - 1) % self.order.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p3dn_shape() {
+        let t = Topology::new(8, 8);
+        assert_eq!(t.workers(), 64);
+        assert_eq!(t.server_of(WorkerId(0)), ServerId(0));
+        assert_eq!(t.server_of(WorkerId(63)), ServerId(7));
+        assert_eq!(t.local_rank(WorkerId(17)), 1);
+        assert_eq!(t.leader_of(ServerId(3)), WorkerId(24));
+    }
+
+    #[test]
+    fn link_classification() {
+        let t = Topology::new(2, 8);
+        assert_eq!(t.link_class(WorkerId(0), WorkerId(7)), LinkClass::IntraNode);
+        assert_eq!(t.link_class(WorkerId(7), WorkerId(8)), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn flat_ring_neighbors_wrap() {
+        let t = Topology::new(2, 2);
+        let r = t.flat_ring();
+        assert_eq!(r.next(WorkerId(3)), WorkerId(0));
+        assert_eq!(r.prev(WorkerId(0)), WorkerId(3));
+    }
+
+    #[test]
+    fn flat_ring_crosses_network_servers_times() {
+        let t = Topology::new(4, 8);
+        let r = t.flat_ring();
+        let crossings = r
+            .members()
+            .iter()
+            .filter(|w| t.link_class(**w, r.next(**w)) == LinkClass::InterNode)
+            .count();
+        assert_eq!(crossings, 4);
+        assert_eq!(t.inter_node_hops(), 4);
+    }
+
+    #[test]
+    fn leader_ring_members() {
+        let t = Topology::new(4, 8);
+        let r = t.leader_ring();
+        assert_eq!(r.members(), &[WorkerId(0), WorkerId(8), WorkerId(16), WorkerId(24)]);
+    }
+
+    #[test]
+    fn single_server_has_no_network_hops() {
+        let t = Topology::new(1, 8);
+        assert_eq!(t.inter_node_hops(), 0);
+    }
+
+    #[test]
+    fn workers_on_server() {
+        let t = Topology::new(2, 4);
+        assert_eq!(t.workers_on(ServerId(1)), vec![WorkerId(4), WorkerId(5), WorkerId(6), WorkerId(7)]);
+    }
+}

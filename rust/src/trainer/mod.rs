@@ -1,0 +1,448 @@
+//! The data-parallel trainer.
+//!
+//! Two engines share the same communication machinery (fusion buffer →
+//! ring all-reduce over a [`crate::net::Fabric`]):
+//!
+//! * [`run_emulated`] — **modeled compute**: each worker replays the
+//!   device timing trace (sleeping through forward/backward and emitting
+//!   gradient tensors at the recorded instants) while the communication
+//!   phase moves *real bytes* through the shaped fabric. This is the
+//!   measurement bed for scaling-factor experiments on a 1-core host: the
+//!   sleeps release the CPU, so communication genuinely overlaps backward,
+//!   exactly like the GPU/NIC concurrency it stands in for.
+//! * [`xla::XlaTrainer`] — **real compute**: executes the AOT train-step
+//!   artifact through the PJRT device service (the e2e example).
+//!
+//! Payload scaling: emulated runs shrink gradient *bytes* and NIC *rate*
+//! by the same factor `payload_scale`, leaving every time ratio intact
+//! while fitting hundreds of MB of model on loopback.
+
+pub mod xla;
+
+use crate::collectives::fusion::{FusionBuffer, GradTensor};
+use crate::collectives::{barrier, ring::ring_allreduce};
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::measure::PhaseTimes;
+use crate::models::timing::{backward_trace, StepTrace};
+use crate::net::kernel_tcp::KernelTcpModel;
+use crate::net::metrics::UtilizationSampler;
+use crate::net::shaper::Shaper;
+use crate::net::{inproc::InProcFabric, Endpoint, Fabric};
+use crate::topology::{Ring, Topology};
+use crate::util::Rng;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Emulated-run configuration on top of the experiment point.
+#[derive(Clone, Debug)]
+pub struct EmulatedRunConfig {
+    pub exp: ExperimentConfig,
+    /// Divide gradient bytes and NIC rate by this factor (time-neutral).
+    pub payload_scale: f64,
+}
+
+impl EmulatedRunConfig {
+    pub fn new(exp: ExperimentConfig) -> EmulatedRunConfig {
+        // Default scale keeps per-step wire traffic in the tens of MB.
+        EmulatedRunConfig { exp, payload_scale: 64.0 }
+    }
+}
+
+/// Result of an emulated or real run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Mean wall time per training step (measured window).
+    pub step_time_s: f64,
+    /// Samples (images/sequences) per second across the cluster.
+    pub throughput: f64,
+    /// `T_n / (n · T)` against the single-device baseline step time.
+    pub scaling_factor: f64,
+    pub mean_compute_s: f64,
+    pub mean_comm_wait_s: f64,
+    /// Mean provisioned-bandwidth utilization over the run (Fig 4's y).
+    pub network_utilization: f64,
+    /// Buckets all-reduced per step (mean).
+    pub buckets_per_step: f64,
+    pub steps: usize,
+    pub workers: usize,
+}
+
+/// A worker's view of one emulated step: sleeps through the trace, pushes
+/// tensors to the comm thread, then waits for sync completion.
+struct CommPlan {
+    ring: Ring,
+    compression_ratio: f64,
+}
+
+/// Precomputed deterministic bucket schedule: `(emit time rel. backward
+/// start, bucket bytes)`.
+///
+/// Fusion decisions MUST be identical on every worker or the collectives
+/// deadlock (Horovod solves this with a negotiation round; we solve it by
+/// deriving the schedule from the shared trace in *virtual* time — the
+/// same pass the what-if simulator runs — and replaying it in real time).
+pub fn bucket_timeline(
+    trace: &StepTrace,
+    fusion_cfg: crate::config::FusionConfig,
+) -> Vec<(f64, usize)> {
+    let mut fusion = FusionBuffer::new(fusion_cfg);
+    let mut out = Vec::new();
+    for ev in &trace.events {
+        let t = ev.t_ready;
+        while let Some(d) = fusion.deadline() {
+            if d < t {
+                if let Some(b) = fusion.poll(d) {
+                    out.push((d, b.bytes));
+                }
+            } else {
+                break;
+            }
+        }
+        for b in fusion.push(GradTensor::sized(ev.layer, ev.bytes), t) {
+            out.push((t, b.bytes));
+        }
+    }
+    while let Some(d) = fusion.deadline() {
+        if d < trace.t_backward {
+            if let Some(b) = fusion.poll(d) {
+                out.push((d, b.bytes));
+            }
+        } else {
+            break;
+        }
+    }
+    if let Some(b) = fusion.flush() {
+        out.push((trace.t_backward, b.bytes));
+    }
+    out
+}
+
+enum CommMsg {
+    Bucket { step: u32, seq: u32, data: Vec<f32> },
+    EndStep { reply: mpsc::Sender<()> },
+}
+
+/// Run an emulated data-parallel training experiment.
+pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
+    cfg.exp.validate().map_err(|e| anyhow::anyhow!("invalid config: {}", e.join("; ")))?;
+    let exp = &cfg.exp;
+    let topo = Topology::new(exp.servers, exp.gpus_per_server);
+    let workers = topo.workers();
+    let profile = exp.model.profile();
+    let trace = backward_trace(&profile);
+
+    // Transport: map the configured kind onto a shaped in-proc fabric.
+    // (inproc, not TCP, for the figure-mode emulator: the fabric itself
+    // must not add 1-core scheduling noise; TCP is exercised by the e2e
+    // example and the integration tests.)
+    let transport_model = match exp.transport {
+        TransportKind::FullUtilization => KernelTcpModel::ideal(),
+        TransportKind::KernelTcp => KernelTcpModel::default(),
+        TransportKind::Tcp => KernelTcpModel::ideal(),
+    };
+    let eff_gbps = transport_model.effective_gbps(exp.bandwidth_gbps);
+    let rate = crate::gbps_to_bytes_per_sec(eff_gbps) / cfg.payload_scale;
+    let latency = transport_model.per_msg_overhead_s;
+    let shaper = Shaper::new(topo, rate, latency);
+    let counters = shaper.counters();
+    let fabric = InProcFabric::with_shaper(workers, Some(shaper));
+    let endpoints = fabric.endpoints();
+
+    let ring = topo.flat_ring();
+    let steps_total = exp.warmup_steps + exp.steps;
+    let compute_inflation =
+        if exp.transport == TransportKind::KernelTcp { 1.12 } else { 1.0 };
+    let coord_latency = if exp.transport == TransportKind::KernelTcp { 2.0e-3 } else { 0.0 };
+    let bucket_count = Arc::new(AtomicU64::new(0));
+
+    // Deterministic bucket schedule shared by every worker (see
+    // `bucket_timeline` — this is what keeps the collectives matched).
+    let timeline = Arc::new(bucket_timeline(&trace, exp.fusion));
+
+    let mut handles = Vec::new();
+    for ep in endpoints {
+        let trace = trace.clone();
+        let plan = CommPlan { ring: ring.clone(), compression_ratio: exp.compression.ratio() };
+        let payload_scale = cfg.payload_scale;
+        let bucket_count = Arc::clone(&bucket_count);
+        let timeline = Arc::clone(&timeline);
+        let exp = exp.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_main(
+                ep,
+                &exp,
+                trace,
+                plan,
+                timeline,
+                payload_scale,
+                steps_total,
+                compute_inflation,
+                coord_latency,
+                bucket_count,
+            )
+        }));
+    }
+
+    // Utilization sampling happens from the coordinator thread.
+    let mut sampler = UtilizationSampler::new(&counters);
+    let provisioned = crate::gbps_to_bytes_per_sec(exp.bandwidth_gbps) / cfg.payload_scale;
+    let mut util_samples = Vec::new();
+    let poll = Duration::from_millis(50);
+    let mut pending: Vec<_> = handles.into_iter().collect();
+    while pending.iter().any(|h| !h.is_finished()) {
+        std::thread::sleep(poll);
+        let s = sampler.sample(&counters);
+        util_samples.push(s.mean_utilization(provisioned));
+    }
+    let mut phases = Vec::new();
+    for h in pending.drain(..) {
+        phases.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+    }
+
+    // Aggregate: all workers ran the same number of steps in lockstep; the
+    // slowest worker's wall time defines the cluster step time.
+    let step_time = phases.iter().map(|p| p.measured_wall_s).fold(0.0f64, f64::max)
+        / exp.steps.max(1) as f64;
+    let mean_compute =
+        phases.iter().map(|p| p.phase.mean_compute()).sum::<f64>() / workers as f64;
+    let mean_comm = phases.iter().map(|p| p.phase.mean_comm()).sum::<f64>() / workers as f64;
+    let throughput = workers as f64 * exp.batch_per_worker as f64 / step_time;
+    // Single-device baseline: modeled t_batch (uninflated) at the same
+    // batch size.
+    let base_throughput = exp.batch_per_worker as f64 / trace.t_batch;
+    let scaling_factor = throughput / (workers as f64 * base_throughput);
+    // Communication-active utilization: mean of nonzero samples.
+    let active: Vec<f64> = util_samples.iter().copied().filter(|u| *u > 1e-6).collect();
+    let network_utilization = if active.is_empty() {
+        0.0
+    } else {
+        active.iter().sum::<f64>() / active.len() as f64
+    };
+    Ok(RunReport {
+        step_time_s: step_time,
+        throughput,
+        scaling_factor,
+        mean_compute_s: mean_compute,
+        mean_comm_wait_s: mean_comm,
+        network_utilization,
+        buckets_per_step: bucket_count.load(Ordering::Relaxed) as f64
+            / (workers as f64 * steps_total as f64),
+        steps: exp.steps,
+        workers,
+    })
+}
+
+struct WorkerOutcome {
+    phase: PhaseTimes,
+    /// Wall seconds spent in the measured (post-warmup) window.
+    measured_wall_s: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    ep: Arc<dyn Endpoint>,
+    exp: &ExperimentConfig,
+    trace: StepTrace,
+    plan: CommPlan,
+    timeline: Arc<Vec<(f64, usize)>>,
+    payload_scale: f64,
+    steps_total: usize,
+    compute_inflation: f64,
+    coord_latency: f64,
+    bucket_count: Arc<AtomicU64>,
+) -> Result<WorkerOutcome> {
+    let me = ep.me();
+    let mut rng = Rng::new(exp.seed ^ (me.0 as u64) << 32);
+
+    // Comm thread: drains buckets and runs the collective.
+    let (tx, rx) = mpsc::channel::<CommMsg>();
+    let comm_ep = Arc::clone(&ep);
+    let comm = std::thread::spawn(move || -> Result<()> {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                CommMsg::Bucket { step, seq, mut data } => {
+                    if coord_latency > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(coord_latency));
+                    }
+                    ring_allreduce(comm_ep.as_ref(), &plan.ring, step, seq, &mut data)?;
+                    std::hint::black_box(&data);
+                }
+                CommMsg::EndStep { reply } => {
+                    let _ = reply.send(());
+                }
+            }
+        }
+        Ok(())
+    });
+
+    let mut phase = PhaseTimes::default();
+    let mut measured_wall = 0.0f64;
+    for step in 0..steps_total {
+        let measured = step >= exp.warmup_steps;
+        let step_start = Instant::now();
+        barrier(ep.as_ref(), step as u32)?;
+
+        // ---- Forward (modeled). ----
+        let t_fwd = trace.t_forward * compute_inflation;
+        spin_sleep(t_fwd);
+
+        // ---- Backward (modeled): replay the deterministic bucket
+        // timeline, sleeping to each emission instant. ----
+        let backward_start = Instant::now();
+        for (seq, (t_emit, bytes)) in timeline.iter().enumerate() {
+            let target = t_emit * compute_inflation;
+            let elapsed = backward_start.elapsed().as_secs_f64();
+            if target > elapsed {
+                spin_sleep(target - elapsed);
+            }
+            // Wire size: scaled + compressed. A tiny floor keeps zero-byte
+            // buckets representable.
+            let wire_elems = ((*bytes as f64 / payload_scale / plan.compression_ratio / 4.0)
+                as usize)
+                .max(1);
+            let mut data = vec![0.0f32; wire_elems];
+            rng.fill_f32(&mut data, 1.0);
+            bucket_count.fetch_add(1, Ordering::Relaxed);
+            tx.send(CommMsg::Bucket { step: step as u32, seq: seq as u32, data })
+                .map_err(|_| anyhow::anyhow!("comm thread died"))?;
+        }
+        // Finish out the backward pass (tail after the last emission).
+        {
+            let target = trace.t_backward * compute_inflation;
+            let elapsed = backward_start.elapsed().as_secs_f64();
+            if target > elapsed {
+                spin_sleep(target - elapsed);
+            }
+        }
+        let compute_s = step_start.elapsed().as_secs_f64();
+
+        // ---- Wait for the all-reduce process to drain (t_sync). ----
+        let (done_tx, done_rx) = mpsc::channel();
+        tx.send(CommMsg::EndStep { reply: done_tx })
+            .map_err(|_| anyhow::anyhow!("comm thread died"))?;
+        let wait_start = Instant::now();
+        done_rx.recv().map_err(|_| anyhow::anyhow!("comm thread died mid-step"))?;
+        let comm_wait = wait_start.elapsed().as_secs_f64();
+
+        if measured {
+            phase.add_compute(compute_s);
+            phase.add_comm(comm_wait);
+            phase.end_step();
+            measured_wall += step_start.elapsed().as_secs_f64();
+        }
+    }
+    drop(tx);
+    comm.join().map_err(|_| anyhow::anyhow!("comm thread panicked"))??;
+    Ok(WorkerOutcome { phase, measured_wall_s: measured_wall })
+}
+
+/// Sleep that tolerates the coarse scheduler on a busy 1-core box: OS
+/// sleep for the bulk, spin for the last stretch only when short.
+fn spin_sleep(seconds: f64) {
+    if seconds <= 0.0 {
+        return;
+    }
+    let start = Instant::now();
+    if seconds > 0.0005 {
+        std::thread::sleep(Duration::from_secs_f64(seconds - 0.0003));
+    }
+    while start.elapsed().as_secs_f64() < seconds {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Compression, ExperimentConfig};
+    use crate::models::ModelId;
+
+    fn quick_cfg(servers: usize, bw: f64, transport: TransportKind) -> EmulatedRunConfig {
+        let exp = ExperimentConfig {
+            model: ModelId::ResNet50,
+            servers,
+            gpus_per_server: 1,
+            bandwidth_gbps: bw,
+            transport,
+            steps: 3,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        // Aggressive payload scale keeps tests fast.
+        EmulatedRunConfig { exp, payload_scale: 2048.0 }
+    }
+
+    #[test]
+    fn emulated_run_completes_and_reports() {
+        let r = run_emulated(&quick_cfg(2, 100.0, TransportKind::FullUtilization)).unwrap();
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.steps, 3);
+        assert!(r.step_time_s > 0.0);
+        assert!(r.throughput > 0.0);
+        assert!(r.scaling_factor > 0.2 && r.scaling_factor <= 1.05, "{}", r.scaling_factor);
+        assert!(r.buckets_per_step >= 1.0);
+    }
+
+    #[test]
+    fn full_utilization_beats_kernel_tcp_at_high_bw() {
+        let ideal = run_emulated(&quick_cfg(2, 100.0, TransportKind::FullUtilization)).unwrap();
+        let horovod = run_emulated(&quick_cfg(2, 100.0, TransportKind::KernelTcp)).unwrap();
+        assert!(
+            ideal.scaling_factor > horovod.scaling_factor,
+            "{} vs {}",
+            ideal.scaling_factor,
+            horovod.scaling_factor
+        );
+    }
+
+    #[test]
+    fn compression_improves_low_bandwidth() {
+        let mut plain = quick_cfg(2, 1.0, TransportKind::FullUtilization);
+        plain.exp.model = ModelId::Vgg16;
+        let mut compressed = plain.clone();
+        compressed.exp.compression = Compression::Ratio(10.0);
+        let a = run_emulated(&plain).unwrap();
+        let b = run_emulated(&compressed).unwrap();
+        assert!(b.scaling_factor > a.scaling_factor, "{} vs {}", b.scaling_factor, a.scaling_factor);
+    }
+
+    #[test]
+    fn single_worker_near_perfect() {
+        let r = run_emulated(&quick_cfg(1, 100.0, TransportKind::FullUtilization)).unwrap();
+        assert!(r.scaling_factor > 0.9, "{}", r.scaling_factor);
+    }
+
+    #[test]
+    fn bucket_timeline_conserves_bytes_and_is_sorted() {
+        use crate::models::timing::backward_trace;
+        for id in [ModelId::ResNet50, ModelId::Vgg16] {
+            let trace = backward_trace(&id.profile());
+            let tl = bucket_timeline(&trace, crate::config::FusionConfig::default());
+            let total: usize = tl.iter().map(|(_, b)| *b).sum();
+            assert_eq!(total, id.profile().total_bytes(), "{id}");
+            for w in tl.windows(2) {
+                assert!(w[0].0 <= w[1].0, "{id}: timeline not sorted");
+            }
+            assert!(tl.last().unwrap().0 <= trace.t_backward + 1e-12);
+        }
+    }
+
+    #[test]
+    fn bucket_timeline_identical_across_calls() {
+        use crate::models::timing::backward_trace;
+        let trace = backward_trace(&ModelId::ResNet101.profile());
+        let a = bucket_timeline(&trace, crate::config::FusionConfig::default());
+        let b = bucket_timeline(&trace, crate::config::FusionConfig::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spin_sleep_accuracy() {
+        let t0 = Instant::now();
+        spin_sleep(0.01);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((0.009..0.05).contains(&dt), "{dt}");
+    }
+}

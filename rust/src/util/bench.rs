@@ -1,0 +1,176 @@
+//! Microbenchmark harness — a criterion stand-in for the offline build.
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("allreduce");
+//! b.bench("ring/64MB/4w", || run_allreduce(...));
+//! b.report();
+//! ```
+//!
+//! The harness warms up, then runs timed batches until both a minimum
+//! iteration count and a minimum wall time are met, and reports
+//! mean/p50/p95 with outlier-robust statistics.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected timings.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration, one entry per timed sample.
+    pub samples: Vec<f64>,
+    /// Optional throughput denominator: bytes processed per iteration.
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            min_time: Duration::from_millis(300),
+            max_time: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A named group of benchmarks with a shared config.
+pub struct Bench {
+    group: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench { group: group.to_string(), cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Bench {
+        Bench { group: group.to_string(), cfg, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_bytes(name, None, f)
+    }
+
+    /// Like [`bench`](Self::bench) but records a throughput denominator so
+    /// the report can print GB/s.
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: Option<f64>, mut f: F) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            let done_iters = samples.len() >= self.cfg.min_iters;
+            let done_time = start.elapsed() >= self.cfg.min_time;
+            if (done_iters && done_time)
+                || samples.len() >= self.cfg.max_iters
+                || start.elapsed() >= self.cfg.max_time
+            {
+                break;
+            }
+        }
+        self.results.push(BenchResult { name: name.to_string(), samples, bytes_per_iter: bytes });
+        self.results.last().unwrap()
+    }
+
+    /// Render the group's results as an aligned table on stdout and return
+    /// them (so figure benches can also persist CSV).
+    pub fn report(&self) -> &[BenchResult] {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<42} {:>10} {:>10} {:>10} {:>8} {:>12}",
+            "name", "mean", "p50", "p95", "iters", "throughput"
+        );
+        for r in &self.results {
+            let s = r.summary();
+            let tput = match r.bytes_per_iter {
+                Some(b) if s.mean > 0.0 => format!("{:.2} GB/s", b / s.mean / 1e9),
+                _ => "-".to_string(),
+            };
+            println!(
+                "{:<42} {:>10} {:>10} {:>10} {:>8} {:>12}",
+                r.name,
+                super::fmt::secs(s.mean),
+                super::fmt::secs(s.p50),
+                super::fmt::secs(s.p95),
+                s.n,
+                tput
+            );
+        }
+        &self.results
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+/// (std::hint::black_box is stable; thin wrapper for discoverability.)
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_min_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 100,
+            min_time: Duration::from_millis(1),
+            max_time: Duration::from_secs(1),
+        };
+        let mut b = Bench::with_config("t", cfg);
+        let mut n = 0u64;
+        let r = b.bench("count", || {
+            n = black_box(n + 1);
+        });
+        assert!(r.samples.len() >= 5);
+    }
+
+    #[test]
+    fn respects_max_time() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1_000_000,
+            max_iters: usize::MAX,
+            min_time: Duration::from_secs(60),
+            max_time: Duration::from_millis(50),
+        };
+        let mut b = Bench::with_config("t", cfg);
+        let t0 = Instant::now();
+        b.bench("sleepy", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+}

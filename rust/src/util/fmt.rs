@@ -1,0 +1,72 @@
+//! Human-readable formatting for bytes, durations and rates — used by every
+//! report the harness prints.
+
+/// Format a byte count with binary-ish units matching the paper's usage
+/// (the paper says "97 MB" meaning 1e6-based MB; we follow it).
+pub fn bytes(b: f64) -> String {
+    let abs = b.abs();
+    if abs >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a duration given in seconds.
+pub fn secs(s: f64) -> String {
+    let abs = s.abs();
+    if abs >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if abs >= 1.0 {
+        format!("{s:.2} s")
+    } else if abs >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Format a rate in Gbps.
+pub fn gbps(bytes_per_sec: f64) -> String {
+    format!("{:.2} Gbps", bytes_per_sec * 8.0 / 1e9)
+}
+
+/// Format a ratio as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(527e6), "527.0 MB");
+        assert_eq!(bytes(12.5e9), "12.50 GB");
+        assert_eq!(bytes(100.0), "100 B");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(0.0422), "42.20 ms");
+        assert_eq!(secs(2.0), "2.00 s");
+        assert_eq!(secs(1.5e-6), "1.50 us");
+    }
+
+    #[test]
+    fn gbps_format() {
+        assert_eq!(gbps(12.5e9), "100.00 Gbps");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.5999), "60.0%");
+    }
+}

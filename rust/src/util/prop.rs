@@ -1,0 +1,200 @@
+//! A miniature property-based testing framework (the offline environment
+//! has no `proptest`). Provides generators over a seeded [`Rng`], a
+//! `forall` runner with failure-case reporting, and greedy shrinking for
+//! the container generators.
+//!
+//! ```ignore
+//! prop::forall("allreduce sums", 200, |rng| {
+//!     let xs = prop::vec_f32(rng, 1..=4096, 10.0);
+//!     /* ... assert the invariant, return Ok(()) or Err(msg) ... */
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random trials of `prop`, each with a fresh deterministic
+/// RNG derived from the property name (so failures reproduce). Panics with
+/// the seed and message on the first failure.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn replay<F>(seed: u64, mut prop: F) -> PropResult
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+/// FNV-1a hash for stable name→seed derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- generators
+
+/// Uniform usize in an inclusive range.
+pub fn usize_in(rng: &mut Rng, range: RangeInclusive<usize>) -> usize {
+    rng.range_usize(*range.start(), *range.end())
+}
+
+/// Vector of f32 in `[-scale, scale)`, with length in `len`.
+pub fn vec_f32(rng: &mut Rng, len: RangeInclusive<usize>, scale: f32) -> Vec<f32> {
+    let n = usize_in(rng, len);
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v, scale);
+    v
+}
+
+/// Vector that sometimes contains adversarial values (0, ±inf-adjacent
+/// magnitudes, denormal-ish) — useful for codec properties.
+pub fn vec_f32_edgy(rng: &mut Rng, len: RangeInclusive<usize>) -> Vec<f32> {
+    let mut v = vec_f32(rng, len, 100.0);
+    for x in v.iter_mut() {
+        match rng.next_below(12) {
+            0 => *x = 0.0,
+            1 => *x = f32::MIN_POSITIVE,
+            2 => *x = -f32::MIN_POSITIVE,
+            3 => *x = 3.0e38,
+            4 => *x = -3.0e38,
+            5 => *x = 1e-30,
+            _ => {}
+        }
+    }
+    v
+}
+
+/// Random "message sizes" spanning the scales distributed training sees:
+/// tiny biases (bytes) through fused buckets (tens of MB).
+pub fn grad_size(rng: &mut Rng) -> usize {
+    // log-uniform over [4 B, 16 MB] then 4-byte aligned.
+    let lo = 2.0f64;  // log2(4)
+    let hi = 24.0f64; // log2(16 MiB)
+    let bits = rng.range_f64(lo, hi);
+    ((2f64.powf(bits) as usize) / 4).max(1) * 4
+}
+
+/// Greedy shrink of a failing `Vec` input: try removing halves, then
+/// individual elements, re-running `check` (which returns true when the
+/// failure still reproduces). Returns the smallest failing input found.
+pub fn shrink_vec<T: Clone, F>(mut input: Vec<T>, mut check: F) -> Vec<T>
+where
+    F: FnMut(&[T]) -> bool,
+{
+    debug_assert!(check(&input), "shrink_vec called with a passing input");
+    loop {
+        let mut shrunk = false;
+        // Halves.
+        let n = input.len();
+        if n > 1 {
+            for (s, e) in [(0, n / 2), (n / 2, n)] {
+                let mut cand = input.clone();
+                cand.drain(s..e);
+                if !cand.is_empty() && check(&cand) {
+                    input = cand;
+                    shrunk = true;
+                    break;
+                }
+            }
+        }
+        if shrunk {
+            continue;
+        }
+        // Single elements.
+        let mut i = 0;
+        while i < input.len() && input.len() > 1 {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if check(&cand) {
+                input = cand;
+                shrunk = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !shrunk {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |rng| {
+            let v = vec_f32(rng, 1..=16, 1.0);
+            if v.len() <= 16 && !v.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn forall_reports_failure() {
+        forall("must-fail", 10, |rng| {
+            let n = usize_in(rng, 0..=100);
+            if n < 90 {
+                Ok(())
+            } else {
+                Err(format!("hit {n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn grad_size_is_aligned_and_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let s = grad_size(&mut rng);
+            assert_eq!(s % 4, 0);
+            assert!((4..=16 << 20).contains(&s));
+        }
+    }
+
+    #[test]
+    fn shrink_finds_minimal_culprit() {
+        // Failure: vector contains a negative number.
+        let input = vec![1.0f32, 2.0, -3.0, 4.0, 5.0, 6.0];
+        let out = shrink_vec(input, |v| v.iter().any(|x| *x < 0.0));
+        assert_eq!(out, vec![-3.0]);
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut seen = None;
+        let seed = 0xabcdef;
+        let _ = replay(seed, |rng| {
+            seen = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut rng2 = Rng::new(seed);
+        assert_eq!(seen.unwrap(), rng2.next_u64());
+    }
+}

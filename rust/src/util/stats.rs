@@ -1,0 +1,181 @@
+//! Statistics helpers: summaries, percentiles, linear interpolation (the
+//! paper's `AddEst` is an interpolation table) and least-squares fits used
+//! by the transport calibration.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `xs` need not be sorted. Returns a zeroed summary
+    /// for an empty sample.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Percentile (0–100) of an already-sorted sample, with linear
+/// interpolation between order statistics.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Piecewise-linear interpolation table `y = f(x)`, exactly the mechanism
+/// the paper prescribes for `AddEst(x)` (§3.1: "empirically evaluate time
+/// cost of vector-add with various vector sizes ... then use linear
+/// interpolation").
+#[derive(Clone, Debug)]
+pub struct Interp {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl Interp {
+    /// Build from `(x, y)` points. Points are sorted by `x`; duplicate `x`
+    /// keeps the later `y`. Panics on empty input.
+    pub fn new(mut pts: Vec<(f64, f64)>) -> Interp {
+        assert!(!pts.is_empty(), "Interp::new on empty point set");
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pts.dedup_by(|a, b| a.0 == b.0);
+        let (xs, ys) = pts.into_iter().unzip();
+        Interp { xs, ys }
+    }
+
+    /// Evaluate with linear interpolation inside the hull and linear
+    /// extrapolation from the last segment outside it (vector-add time is
+    /// asymptotically linear in size, so extrapolation is principled).
+    pub fn eval(&self, x: f64) -> f64 {
+        let n = self.xs.len();
+        if n == 1 {
+            return self.ys[0];
+        }
+        // Segment index: the first i with xs[i] >= x, clamped into [1, n-1].
+        let i = match self.xs.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => return self.ys[i],
+            Err(i) => i.clamp(1, n - 1),
+        };
+        let (x0, x1) = (self.xs[i - 1], self.xs[i]);
+        let (y0, y1) = (self.ys[i - 1], self.ys[i]);
+        y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+    }
+
+    /// The x-knots of the table.
+    pub fn knots(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Least-squares fit of `y = a + b·x`. Returns `(a, b)`.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx = xs.iter().sum::<f64>();
+    let sy = ys.iter().sum::<f64>();
+    let sxx = xs.iter().map(|x| x * x).sum::<f64>();
+    let sxy = xs.iter().zip(ys).map(|(x, y)| x * y).sum::<f64>();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > 1e-12, "degenerate x in linfit");
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Geometric mean (used for cross-model aggregate scaling factors).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn interp_exact_and_between() {
+        let t = Interp::new(vec![(0.0, 0.0), (10.0, 100.0), (20.0, 150.0)]);
+        assert_eq!(t.eval(10.0), 100.0);
+        assert!((t.eval(5.0) - 50.0).abs() < 1e-12);
+        assert!((t.eval(15.0) - 125.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interp_extrapolates_linearly() {
+        let t = Interp::new(vec![(0.0, 0.0), (1.0, 2.0)]);
+        assert!((t.eval(2.0) - 4.0).abs() < 1e-12);
+        assert!((t.eval(-1.0) + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interp_unsorted_input() {
+        let t = Interp::new(vec![(10.0, 1.0), (0.0, 0.0)]);
+        assert!((t.eval(5.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.5 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: collectives over real TCP sockets, emulator end-to-end,
+//! and the emulator-vs-simulator cross-validation — no artifacts needed.
+
+use netbn::collectives::reduce::serial_sum;
+use netbn::collectives::ring::ring_allreduce;
+use netbn::collectives::tree::tree_allreduce;
+use netbn::config::{Compression, ExperimentConfig, TransportKind};
+use netbn::models::ModelId;
+use netbn::net::{tcp::TcpFabric, Fabric};
+use netbn::topology::Topology;
+use netbn::trainer::{run_emulated, EmulatedRunConfig};
+use netbn::util::Rng;
+use std::sync::Arc;
+
+fn run_collective<F>(n: usize, len: usize, f: F) -> Vec<Vec<f32>>
+where
+    F: Fn(&dyn netbn::net::Endpoint, &netbn::topology::Ring, &mut [f32]) + Send + Sync + 'static,
+{
+    let topo = Topology::new(n, 1);
+    let ring = topo.flat_ring();
+    let fabric = TcpFabric::new(n, None).unwrap();
+    let eps = fabric.endpoints();
+    let f = Arc::new(f);
+    let mut rng = Rng::new(99);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_f32(&mut v, 2.0);
+            v
+        })
+        .collect();
+    let want = serial_sum(&inputs);
+    let mut handles = Vec::new();
+    for (ep, mut data) in eps.into_iter().zip(inputs) {
+        let ring = ring.clone();
+        let f = Arc::clone(&f);
+        handles.push(std::thread::spawn(move || {
+            f(ep.as_ref(), &ring, &mut data);
+            data
+        }));
+    }
+    let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results {
+        for (a, b) in r.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+    results
+}
+
+#[test]
+fn ring_allreduce_over_tcp_matches_serial() {
+    run_collective(4, 1000, |ep, ring, data| {
+        ring_allreduce(ep, ring, 0, 0, data).unwrap();
+    });
+}
+
+#[test]
+fn tree_allreduce_over_tcp_matches_serial() {
+    run_collective(5, 333, |ep, ring, data| {
+        tree_allreduce(ep, ring, 0, 0, data).unwrap();
+    });
+}
+
+#[test]
+fn ring_large_buffer_over_tcp() {
+    // 4 MB per worker: exercises framing + chunking under real sockets.
+    run_collective(3, 1_000_000, |ep, ring, data| {
+        ring_allreduce(ep, ring, 0, 0, data).unwrap();
+    });
+}
+
+#[test]
+fn emulator_transports_ordering() {
+    // At 100 Gbps: ideal transport ≥ kernel-TCP transport on scaling.
+    let mk = |transport| {
+        let exp = ExperimentConfig {
+            model: ModelId::Vgg16,
+            servers: 2,
+            gpus_per_server: 1,
+            bandwidth_gbps: 100.0,
+            transport,
+            steps: 3,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        run_emulated(&EmulatedRunConfig { exp, payload_scale: 2048.0 }).unwrap()
+    };
+    let ideal = mk(TransportKind::FullUtilization);
+    let horovod = mk(TransportKind::KernelTcp);
+    assert!(
+        ideal.scaling_factor > horovod.scaling_factor,
+        "{} vs {}",
+        ideal.scaling_factor,
+        horovod.scaling_factor
+    );
+}
+
+#[test]
+fn emulator_utilization_drops_with_bandwidth_under_kernel_tcp() {
+    let mk = |bw| {
+        let exp = ExperimentConfig {
+            model: ModelId::Vgg16,
+            servers: 2,
+            gpus_per_server: 1,
+            bandwidth_gbps: bw,
+            transport: TransportKind::KernelTcp,
+            steps: 3,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        run_emulated(&EmulatedRunConfig { exp, payload_scale: 2048.0 }).unwrap()
+    };
+    let low = mk(1.0);
+    let high = mk(100.0);
+    // Fig 4's shape: near-saturated at 1 Gbps, far below at 100 Gbps.
+    assert!(
+        low.network_utilization > high.network_utilization + 0.2,
+        "low {} vs high {}",
+        low.network_utilization,
+        high.network_utilization
+    );
+}
+
+#[test]
+fn emulator_compression_recovers_scaling_at_low_bandwidth() {
+    let mk = |ratio| {
+        let exp = ExperimentConfig {
+            model: ModelId::Vgg16,
+            servers: 2,
+            gpus_per_server: 1,
+            bandwidth_gbps: 1.0,
+            transport: TransportKind::FullUtilization,
+            compression: if ratio > 1.0 { Compression::Ratio(ratio) } else { Compression::None },
+            steps: 3,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        run_emulated(&EmulatedRunConfig { exp, payload_scale: 2048.0 }).unwrap()
+    };
+    let plain = mk(1.0);
+    let x10 = mk(10.0);
+    assert!(x10.scaling_factor > plain.scaling_factor + 0.1, "{} vs {}", x10.scaling_factor, plain.scaling_factor);
+}
+
+#[test]
+fn emulator_agrees_with_simulator() {
+    // The repo's analogue of the paper's Fig 6 validation.
+    let (emulated, simulated, check) =
+        netbn::figures::validate_emulator_against_sim(ModelId::ResNet50, 3, 25.0, 2048.0)
+            .unwrap();
+    assert!(check.pass, "emulated {emulated} vs simulated {simulated}: {}", check.detail);
+}

@@ -1,0 +1,188 @@
+//! Integration: the rust runtime executes the AOT artifacts and agrees
+//! with the rust-native implementations (L1 Pallas kernel ⇄ L3 hot path).
+//!
+//! These tests need `make artifacts` to have run; they fail with a clear
+//! message otherwise (CI runs `make test`, which builds artifacts first).
+
+use netbn::collectives::reduce::add_assign;
+use netbn::compress::{codecs, CodecKind};
+use netbn::runtime::{artifacts_dir, DeviceService, HostTensor};
+use netbn::util::Rng;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+const KERNEL_N: usize = 262144;
+
+fn artifacts() -> PathBuf {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("vecadd_1m.hlo.txt").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    dir
+}
+
+fn service() -> &'static DeviceService {
+    static SVC: OnceLock<DeviceService> = OnceLock::new();
+    SVC.get_or_init(|| DeviceService::start(artifacts()))
+}
+
+fn rand_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v, scale);
+    v
+}
+
+#[test]
+fn vecadd_artifact_matches_rust_reducer() {
+    let h = service().handle();
+    let a = rand_vec(1, KERNEL_N, 5.0);
+    let b = rand_vec(2, KERNEL_N, 5.0);
+    let out = h
+        .exec(
+            "vecadd_1m",
+            vec![
+                HostTensor::f32(&[KERNEL_N as i64], a.clone()),
+                HostTensor::f32(&[KERNEL_N as i64], b.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    let mut want = a;
+    add_assign(&mut want, &b);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn vecavg_artifact_averages() {
+    let h = service().handle();
+    let a = vec![2.0f32; KERNEL_N];
+    let b = vec![4.0f32; KERNEL_N];
+    let out = h
+        .exec(
+            "vecavg_1m",
+            vec![
+                HostTensor::f32(&[KERNEL_N as i64], a),
+                HostTensor::f32(&[KERNEL_N as i64], b),
+            ],
+        )
+        .unwrap();
+    assert!(out[0].as_f32().unwrap().iter().all(|x| (*x - 3.0).abs() < 1e-6));
+}
+
+#[test]
+fn quantize_artifacts_match_rust_codec() {
+    let h = service().handle();
+    let x = rand_vec(3, KERNEL_N, 8.0);
+    let enc = h
+        .exec("quant_int8_1m", vec![HostTensor::f32(&[KERNEL_N as i64], x.clone())])
+        .unwrap();
+    assert_eq!(enc.len(), 2, "quantize returns (scale, codes)");
+    let dec = h.exec("dequant_int8_1m", vec![enc[0].clone(), enc[1].clone()]).unwrap();
+    let xla_decoded = dec[0].as_f32().unwrap();
+
+    // rust codec on the same input.
+    let rust_enc = codecs::encode(CodecKind::Int8, &x, 0);
+    let rust_decoded = codecs::decode(CodecKind::Int8, &rust_enc, 0).unwrap();
+    // Both decode within one quantization step of the original and of
+    // each other (scale formulas differ by +1e-30 only).
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let step = max_abs / 127.0;
+    for i in 0..x.len() {
+        assert!((xla_decoded[i] - x[i]).abs() <= step * 0.5 + 1e-6);
+        assert!((xla_decoded[i] - rust_decoded[i]).abs() <= step + 1e-6);
+    }
+}
+
+#[test]
+fn topk_mask_artifact_zeroes_below_threshold() {
+    let h = service().handle();
+    let x = rand_vec(4, KERNEL_N, 1.0);
+    let thr = 0.5f32;
+    let out = h
+        .exec(
+            "topk_mask_1m",
+            vec![
+                HostTensor::f32(&[KERNEL_N as i64], x.clone()),
+                HostTensor::f32(&[1], vec![thr]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for (g, v) in got.iter().zip(&x) {
+        if v.abs() >= thr {
+            assert_eq!(g, v);
+        } else {
+            assert_eq!(*g, 0.0);
+        }
+    }
+}
+
+#[test]
+fn model_meta_matches_rust_formula() {
+    use netbn::trainer::xla::ModelMeta;
+    let meta = ModelMeta::load(&artifacts()).unwrap();
+    assert_eq!(meta.param_count, netbn::models::transformer::tiny_transformer_params());
+    let (vocab, _d, _l, _h, seq) = netbn::models::transformer::tiny_transformer_dims();
+    assert_eq!(meta.vocab, vocab);
+    assert_eq!(meta.seq, seq);
+}
+
+#[test]
+fn train_step_executes_and_loss_is_sane() {
+    use netbn::trainer::xla::{load_init_params, DataGen, ModelMeta, XlaTrainer};
+    let dir = artifacts();
+    let meta = ModelMeta::load(&dir).unwrap();
+    let init = load_init_params(&dir, meta.param_count).unwrap();
+    let trainer = XlaTrainer::new(service().handle(), meta.clone());
+    let mut gen = DataGen::new(7, meta.vocab, 0.1);
+    let tokens = gen.batch(meta.batch, meta.seq);
+    let (loss, grads) = trainer.grad_step(&init, &tokens).unwrap();
+    // Fresh model ≈ uniform predictions: loss ≈ ln(vocab).
+    let uniform = (meta.vocab as f64).ln();
+    assert!((loss - uniform).abs() < 1.0, "loss {loss} vs ln(vocab) {uniform}");
+    assert_eq!(grads.len(), meta.param_count);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let gnorm: f64 = grads.iter().map(|g| (*g as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(gnorm > 1e-3, "gradient is numerically dead: {gnorm}");
+
+    // SGD apply agrees with the arithmetic.
+    let updated = trainer.apply(&init, &grads, 0.1).unwrap();
+    for i in (0..updated.len()).step_by(50_000) {
+        let want = init[i] - 0.1 * grads[i];
+        assert!((updated[i] - want).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn distributed_training_keeps_replicas_identical_and_learns() {
+    use netbn::net::inproc::InProcFabric;
+    use netbn::trainer::xla::{load_init_params, ModelMeta, XlaTrainer};
+    let dir = artifacts();
+    let meta = ModelMeta::load(&dir).unwrap();
+    let init = load_init_params(&dir, meta.param_count).unwrap();
+    let trainer = XlaTrainer::new(service().handle(), meta.clone());
+    let fabric = InProcFabric::new(2);
+    let result = trainer
+        .train_distributed(
+            &fabric,
+            init,
+            6,
+            meta.batch,
+            0.2,
+            42,
+            netbn::config::FusionConfig::default(),
+        )
+        .unwrap();
+    assert_eq!(result.loss_curve.len(), 6);
+    assert!(
+        result.loss_curve[5] < result.loss_curve[0],
+        "loss did not decrease: {:?}",
+        result.loss_curve
+    );
+    assert!(result.final_params.iter().all(|p| p.is_finite()));
+}

@@ -1,0 +1,253 @@
+//! Cross-module property tests: invariants that must hold across
+//! algorithms, codecs, the simulator and the parsers — the "extensive
+//! tests" layer above per-module unit tests.
+
+use netbn::collectives::reduce::serial_sum;
+use netbn::collectives::{ps::ps_allreduce, ring::ring_allreduce, tree::tree_allreduce};
+use netbn::compress::{codecs, CodecKind};
+use netbn::models::timing::backward_trace;
+use netbn::models::ModelId;
+use netbn::net::{inproc::InProcFabric, Endpoint, Fabric};
+use netbn::sim::{simulate, SimParams};
+use netbn::topology::{Ring, Topology};
+use netbn::util::prop;
+
+type Collective = fn(&dyn Endpoint, &Ring, u32, u32, &mut [f32]) -> netbn::Result<()>;
+
+fn run_collective(inputs: Vec<Vec<f32>>, f: Collective) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let topo = Topology::new(n, 1);
+    let ring = topo.flat_ring();
+    let fabric = InProcFabric::new(n);
+    let eps = fabric.endpoints();
+    let mut handles = Vec::new();
+    for (ep, mut data) in eps.into_iter().zip(inputs) {
+        let ring = ring.clone();
+        handles.push(std::thread::spawn(move || {
+            f(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+            data
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn all_three_collectives_agree_with_each_other() {
+    prop::forall("ring == tree == ps == serial", 10, |rng| {
+        let n = prop::usize_in(rng, 2..=5);
+        let len = prop::usize_in(rng, 1..=200);
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| prop::vec_f32(rng, len..=len, 2.0)).collect();
+        let want = serial_sum(&inputs);
+        for (name, f) in [
+            ("ring", ring_allreduce as Collective),
+            ("tree", tree_allreduce as Collective),
+            ("ps", ps_allreduce as Collective),
+        ] {
+            for (w, r) in run_collective(inputs.clone(), f).into_iter().enumerate() {
+                for i in 0..want.len() {
+                    if (r[i] - want[i]).abs() > 1e-3 {
+                        return Err(format!("{name} worker {w} elem {i}: {} vs {}", r[i], want[i]));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_round_trip_structural_invariants() {
+    // Length preserved; decode(encode(x)) error bounded by codec class.
+    prop::forall("codec round-trip invariants", 40, |rng| {
+        let xs = prop::vec_f32(rng, 1..=2000, 5.0);
+        let norm = xs.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt().max(1e-9);
+        for kind in [
+            CodecKind::Fp16,
+            CodecKind::Int8,
+            CodecKind::TopK { k_fraction: 0.5 },
+            CodecKind::RandomK { k_fraction: 0.5 },
+            CodecKind::OneBit,
+        ] {
+            let enc = codecs::encode(kind, &xs, 11);
+            let dec = codecs::decode(kind, &enc, 11).map_err(|e| format!("{kind:?}: {e}"))?;
+            if dec.len() != xs.len() {
+                return Err(format!("{kind:?} changed length"));
+            }
+            let err =
+                xs.iter().zip(&dec).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+            // Generous class bound: quantizers ≤ 10% rel error, sparse/sign
+            // codecs never exceed ~2 norms (1-bit worst case flips values;
+            // randk scales kept coords by 1/k = 2×).
+            let bound = match kind {
+                CodecKind::Fp16 => 0.01 * norm,
+                CodecKind::Int8 => 0.10 * norm,
+                _ => 2.0 * norm,
+            };
+            if err > bound {
+                return Err(format!("{kind:?}: err {err} > bound {bound}"));
+            }
+            // Codecs with a real nominal ratio must actually be smaller
+            // for big buffers (topk@50% is nominally 1.0× — value+index
+            // per kept coordinate — and exempt).
+            if kind.nominal_ratio() >= 1.5 && xs.len() > 500 && enc.bytes.len() >= xs.len() * 4 {
+                return Err(format!("{kind:?} did not compress"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_rejects_corrupt_payloads() {
+    prop::forall("codec decode handles truncation", 30, |rng| {
+        let xs = prop::vec_f32(rng, 8..=256, 1.0);
+        for kind in [CodecKind::Fp16, CodecKind::Int8, CodecKind::TopK { k_fraction: 0.25 }] {
+            let mut enc = codecs::encode(kind, &xs, 0);
+            let cut = prop::usize_in(rng, 0..=enc.bytes.len().saturating_sub(1));
+            enc.bytes.truncate(cut);
+            // Must error, never panic or return wrong-length data.
+            if let Ok(dec) = codecs::decode(kind, &enc, 0) {
+                if dec.len() != xs.len() {
+                    return Err(format!("{kind:?}: truncated decode changed length"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_monotonicity_properties() {
+    prop::forall("sim monotone in bw / compression / servers", 25, |rng| {
+        let id = *rng.choose(&ModelId::paper_models());
+        let trace = backward_trace(&id.profile());
+        let servers = prop::usize_in(rng, 2..=8);
+        let bw = rng.range_f64(1.0, 100.0);
+
+        // More bandwidth never hurts.
+        let f_lo = simulate(&SimParams::whatif(trace.clone(), servers, 8, bw)).scaling_factor;
+        let f_hi =
+            simulate(&SimParams::whatif(trace.clone(), servers, 8, bw * 2.0)).scaling_factor;
+        if f_hi + 1e-9 < f_lo {
+            return Err(format!("{id} {servers}s: bw {bw}->{} lowered sf {f_lo}->{f_hi}", bw * 2.0));
+        }
+        // Compression never hurts (in the what-if model).
+        let mut p = SimParams::whatif(trace.clone(), servers, 8, bw);
+        p.compression_ratio = rng.range_f64(1.0, 50.0);
+        let f_c = simulate(&p).scaling_factor;
+        if f_c + 1e-9 < f_lo {
+            return Err(format!("compression lowered sf {f_lo}->{f_c}"));
+        }
+        // Scaling factor is a valid fraction and overhead non-negative.
+        let r = simulate(&SimParams::horovod_like(trace, servers, 8, bw));
+        if !(0.0..=1.0 + 1e-9).contains(&r.scaling_factor) || r.t_overhead < -1e-12 {
+            return Err(format!("invalid result {r:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_more_servers_never_scale_better() {
+    prop::forall("sim monotone in servers", 20, |rng| {
+        let id = *rng.choose(&ModelId::paper_models());
+        let trace = backward_trace(&id.profile());
+        let bw = rng.range_f64(1.0, 100.0);
+        let mut last = f64::INFINITY;
+        for servers in [2usize, 4, 8] {
+            let f = simulate(&SimParams::horovod_like(trace.clone(), servers, 8, bw))
+                .scaling_factor;
+            if f > last + 1e-9 {
+                return Err(format!("{id} @{bw}: {servers} servers scaled better ({f} > {last})"));
+            }
+            last = f;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn config_parser_never_panics_on_garbage() {
+    prop::forall("config parser total", 200, |rng| {
+        let len = prop::usize_in(rng, 0..=120);
+        let charset: Vec<char> =
+            "abcdefgh =[]#\"0123456789._-\n\tservers model fusion".chars().collect();
+        let text: String = (0..len).map(|_| *rng.choose(&charset)).collect();
+        // Must return Ok or Err, never panic.
+        let _ = netbn::config::parser::parse(&text);
+        let _ = netbn::config::parser::experiment_from_str(&text);
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_records_round_trip_through_jsonl() {
+    use netbn::measure::TraceRecord;
+    prop::forall("trace jsonl round-trip", 100, |rng| {
+        let rec = TraceRecord {
+            kind: ["grad_ready", "bucket_emit", "allreduce_done"][rng.next_below(3) as usize]
+                .to_string(),
+            step: rng.next_below(10_000) as u32,
+            worker: prop::usize_in(rng, 0..=63),
+            id: prop::usize_in(rng, 0..=400),
+            bytes: prop::usize_in(rng, 0..=1 << 30),
+            t: rng.range_f64(0.0, 1e4),
+        };
+        let back = TraceRecord::from_json_line(&rec.to_json_line())
+            .map_err(|e| format!("parse: {e}"))?;
+        if back != rec {
+            return Err(format!("{back:?} != {rec:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fusion_timeline_and_sim_agree_on_bucket_count() {
+    // The emulator's precomputed timeline and the simulator's internal
+    // fusion pass must make identical fusion decisions (same state
+    // machine, same trace) — this is the invariant that keeps the two
+    // clock domains comparable.
+    for id in ModelId::paper_models() {
+        let trace = backward_trace(&id.profile());
+        let timeline =
+            netbn::trainer::bucket_timeline(&trace, netbn::config::FusionConfig::default());
+        let sim = simulate(&SimParams::whatif(trace, 8, 8, 100.0));
+        assert_eq!(timeline.len(), sim.buckets, "{id}");
+    }
+}
+
+#[test]
+fn error_feedback_conserves_gradient_mass_exactly() {
+    // The error-feedback invariant: shipped + residual == Σ gradients,
+    // per coordinate, at every step (this is what makes the compression
+    // unbiased over time despite arbitrary per-step dropping).
+    use netbn::compress::ErrorFeedback;
+    prop::forall("error feedback conservation", 10, |rng| {
+        let n = 64;
+        let kind = CodecKind::TopK { k_fraction: 0.1 };
+        let mut ef = ErrorFeedback::new(kind, n);
+        let mut shipped = vec![0.0f64; n];
+        let mut fed = vec![0.0f64; n];
+        for step in 0..100 {
+            let grad = prop::vec_f32(rng, n..=n, 1.0);
+            for (f, g) in fed.iter_mut().zip(&grad) {
+                *f += *g as f64;
+            }
+            let enc = ef.compress(&grad, step).map_err(|e| e.to_string())?;
+            let dec = codecs::decode(kind, &enc, step).map_err(|e| e.to_string())?;
+            for (s, d) in shipped.iter_mut().zip(&dec) {
+                *s += *d as f64;
+            }
+        }
+        // Conservation: |fed - shipped| per coordinate is exactly the
+        // current residual (up to f32 accumulation noise).
+        let deficit: f64 =
+            fed.iter().zip(&shipped).map(|(f, s)| (f - s).powi(2)).sum::<f64>().sqrt();
+        let residual = ef.residual_norm();
+        if (deficit - residual).abs() > 1e-2 * residual.max(1.0) {
+            return Err(format!("deficit {deficit} vs residual norm {residual}"));
+        }
+        Ok(())
+    });
+}
