@@ -1,39 +1,49 @@
-//! Regenerate every figure of the paper's evaluation (Fig 1–8), write the
-//! CSVs to `out/`, and verify the paper-shape checks. Exits non-zero if
-//! any shape check fails — usable as a reproduction gate in CI.
+//! Regenerate every figure of the paper's evaluation (Fig 1–8) through
+//! the scenario engine, write the CSVs to `out/`, and verify the
+//! paper-shape checks. Exits non-zero if any shape check fails — usable
+//! as a reproduction gate in CI.
+//!
+//! This is the engine's idiom for "run every figure": enumerate the
+//! registry instead of hard-wiring a figure list — a scenario registered
+//! tomorrow with mode "figure" is picked up automatically.
 //!
 //! ```text
 //! cargo run --release --example whatif_sweep [out_dir]
 //! ```
 
+use netbn::engine::ScenarioRegistry;
 use std::path::PathBuf;
 
 fn main() {
     let out = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| PathBuf::from("out"));
+    let registry = ScenarioRegistry::builtin();
     let mut all_ok = true;
     let mut total_checks = 0;
-    for id in netbn::figures::FIGURE_IDS {
-        let run = match netbn::figures::run_figure(id) {
-            Ok(r) => r,
+    let mut figures = 0;
+    for scenario in registry.iter().filter(|s| s.mode() == "figure") {
+        let outcome = match scenario.run(&[]) {
+            Ok(o) => o,
             Err(e) => {
-                eprintln!("figure {id} failed: {e:#}");
+                eprintln!("scenario {} failed: {e:#}", scenario.name());
                 std::process::exit(2);
             }
         };
-        match run.emit(&out) {
+        match outcome.emit(Some(out.as_path())) {
             Ok(ok) => {
                 all_ok &= ok;
-                total_checks += run.checks.len();
+                total_checks += outcome.checks.len();
+                figures += 1;
             }
             Err(e) => {
-                eprintln!("figure {id} emit failed: {e:#}");
+                eprintln!("scenario {} emit failed: {e:#}", scenario.name());
                 std::process::exit(2);
             }
         }
     }
     println!(
-        "\n{} shape checks across 8 figures: {}",
+        "\n{} shape checks across {} figure scenarios: {}",
         total_checks,
+        figures,
         if all_ok { "ALL PASS" } else { "FAILURES" }
     );
     std::process::exit(if all_ok { 0 } else { 1 });

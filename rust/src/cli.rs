@@ -13,6 +13,31 @@ pub struct OptSpec {
     /// `true` if the option takes a value; `false` for boolean flags.
     pub takes_value: bool,
     pub default: Option<&'static str>,
+    /// `true` if the option may be given multiple times (`--param a=1
+    /// --param b=2`); values accumulate in [`Args::multi`].
+    pub multi: bool,
+}
+
+impl OptSpec {
+    /// A value-taking option with a default.
+    pub fn value(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: true, default: Some(default), multi: false }
+    }
+
+    /// A value-taking option without a default.
+    pub fn optional(name: &'static str, help: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: true, default: None, multi: false }
+    }
+
+    /// A boolean flag.
+    pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: false, default: None, multi: false }
+    }
+
+    /// A repeatable value-taking option.
+    pub fn repeated(name: &'static str, help: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: true, default: None, multi: true }
+    }
 }
 
 /// A subcommand spec.
@@ -28,6 +53,8 @@ pub struct CmdSpec {
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub options: BTreeMap<String, String>,
+    /// Accumulated values of repeatable options, in argv order.
+    pub multi: BTreeMap<String, Vec<String>>,
     pub flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -58,6 +85,23 @@ impl Args {
 
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// All values of a repeatable option, in argv order.
+    pub fn get_multi(&self, name: &str) -> &[String] {
+        self.multi.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Values of a repeatable `key=value` option, split at the first `=`.
+    pub fn get_kv_multi(&self, name: &str) -> Result<Vec<(String, String)>> {
+        self.get_multi(name)
+            .iter()
+            .map(|pair| {
+                pair.split_once('=')
+                    .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                    .ok_or_else(|| anyhow!("--{name} expects key=value, got {pair:?}"))
+            })
+            .collect()
     }
 
     /// Comma-separated list option → Vec<f64>.
@@ -137,7 +181,11 @@ impl App {
                                 .clone()
                         }
                     };
-                    args.options.insert(name.to_string(), val);
+                    if ospec.multi {
+                        args.multi.entry(name.to_string()).or_default().push(val);
+                    } else {
+                        args.options.insert(name.to_string(), val);
+                    }
                 } else {
                     if inline_val.is_some() {
                         bail!("flag --{name} does not take a value");
@@ -175,7 +223,8 @@ impl App {
         for o in &spec.opts {
             let val = if o.takes_value { " <value>" } else { "" };
             let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
-            s.push_str(&format!("  --{}{:<24} {}{}\n", o.name, val, o.help, def));
+            let rep = if o.multi { " (repeatable)" } else { "" };
+            s.push_str(&format!("  --{}{:<24} {}{}{}\n", o.name, val, o.help, def, rep));
         }
         for (p, h) in &spec.positional {
             s.push_str(&format!("  <{p}>  {h}\n"));
@@ -196,8 +245,9 @@ mod tests {
                 name: "fig",
                 about: "regenerate a figure",
                 opts: vec![
-                    OptSpec { name: "servers", help: "server count", takes_value: true, default: Some("2") },
-                    OptSpec { name: "fast", help: "quick mode", takes_value: false, default: None },
+                    OptSpec::value("servers", "server count", "2"),
+                    OptSpec::flag("fast", "quick mode"),
+                    OptSpec::repeated("param", "k=v override"),
                 ],
                 positional: vec![("n", "figure number")],
             }],
@@ -251,6 +301,36 @@ mod tests {
     fn help_paths() {
         assert!(matches!(app().parse(&argv(&["--help"])).unwrap(), Parsed::Help(_)));
         assert!(matches!(app().parse(&argv(&["fig", "--help"])).unwrap(), Parsed::Help(_)));
+    }
+
+    #[test]
+    fn repeatable_options_accumulate() {
+        match app()
+            .parse(&argv(&["fig", "--param", "a=1", "--param=b = 2", "--servers", "4"]))
+            .unwrap()
+        {
+            Parsed::Command(_, args) => {
+                assert_eq!(args.get_multi("param"), &["a=1".to_string(), "b = 2".to_string()]);
+                assert_eq!(
+                    args.get_kv_multi("param").unwrap(),
+                    vec![("a".to_string(), "1".to_string()), ("b".to_string(), "2".to_string())]
+                );
+                assert_eq!(args.get("servers"), Some("4"));
+                assert!(args.get_multi("absent").is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_kv_pair_rejected() {
+        match app().parse(&argv(&["fig", "--param", "novalue"])).unwrap() {
+            Parsed::Command(_, args) => {
+                let err = args.get_kv_multi("param").unwrap_err().to_string();
+                assert!(err.contains("key=value"), "{err}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -42,24 +42,32 @@ impl CodecKind {
         }
         // topk:0.01 / randk:0.05
         if let Some(rest) = lower.strip_prefix("topk:") {
-            return rest.parse().ok().map(|k_fraction| CodecKind::TopK { k_fraction });
+            return parse_k_fraction(rest).map(|k_fraction| CodecKind::TopK { k_fraction });
         }
         if let Some(rest) = lower.strip_prefix("randk:") {
-            return rest.parse().ok().map(|k_fraction| CodecKind::RandomK { k_fraction });
+            return parse_k_fraction(rest).map(|k_fraction| CodecKind::RandomK { k_fraction });
         }
         None
     }
 
     /// Nominal wire-size ratio (uncompressed / compressed) — what the
-    /// paper's §3.2 model divides the transit time by.
+    /// paper's §3.2 model divides the transit time by. [`CodecKind::parse`]
+    /// guarantees `0 < k <= 1`, so the division is well-defined (no silent
+    /// clamping); directly-constructed codecs must uphold the same bound.
     pub fn nominal_ratio(&self) -> f64 {
         match self {
             CodecKind::Fp16 => 2.0,
             CodecKind::Int8 => 4.0,
             // topk sends (f32 value + u32 index) per kept coordinate.
-            CodecKind::TopK { k_fraction } => 1.0 / (k_fraction * 2.0).max(1e-9),
+            CodecKind::TopK { k_fraction } => {
+                debug_assert!(*k_fraction > 0.0 && *k_fraction <= 1.0);
+                1.0 / (k_fraction * 2.0)
+            }
             // randk regenerates indices from the shared seed: values only.
-            CodecKind::RandomK { k_fraction } => 1.0 / k_fraction.max(1e-9),
+            CodecKind::RandomK { k_fraction } => {
+                debug_assert!(*k_fraction > 0.0 && *k_fraction <= 1.0);
+                1.0 / k_fraction
+            }
             CodecKind::OneBit => 32.0,
         }
     }
@@ -73,6 +81,13 @@ impl CodecKind {
             CodecKind::OneBit => "onebit".into(),
         }
     }
+}
+
+/// A sparsification `k` must be a real fraction: finite, `> 0` (k = 0
+/// keeps nothing and would divide `nominal_ratio` by zero) and `<= 1`.
+fn parse_k_fraction(s: &str) -> Option<f64> {
+    let k: f64 = s.parse().ok()?;
+    (k.is_finite() && k > 0.0 && k <= 1.0).then_some(k)
 }
 
 #[cfg(test)]
@@ -100,5 +115,24 @@ mod tests {
         assert_eq!(CodecKind::OneBit.nominal_ratio(), 32.0);
         // topk 1% → 50× (value+index doubles the per-coordinate cost).
         assert!((CodecKind::TopK { k_fraction: 0.01 }.nominal_ratio() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_k_fractions() {
+        for bad in [
+            "topk:0", "randk:0", "topk:0.0", "topk:-0.1", "randk:-1", "topk:1.5", "randk:2",
+            "topk:nan", "randk:nan", "topk:inf", "randk:-inf", "topk:", "randk:x",
+        ] {
+            assert_eq!(CodecKind::parse(bad), None, "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_boundary_k_fractions() {
+        assert_eq!(CodecKind::parse("randk:1"), Some(CodecKind::RandomK { k_fraction: 1.0 }));
+        assert_eq!(CodecKind::parse("topk:0.5"), Some(CodecKind::TopK { k_fraction: 0.5 }));
+        // k = 1e-9 is tiny but legal; the ratio stays finite.
+        let k = CodecKind::parse("randk:0.000000001").unwrap();
+        assert!(k.nominal_ratio().is_finite());
     }
 }

@@ -112,6 +112,50 @@ impl Compression {
             Compression::Codec(c) => c.nominal_ratio(),
         }
     }
+
+    /// Parse a compression spec: a plain wire-size ratio (`"1"`, `"4"`,
+    /// `"2.5"`), a named codec accepted by [`crate::compress::CodecKind::parse`]
+    /// (`"fp16"`, `"int8"`, `"onebit"`, `"topk:0.01"`, `"randk:0.05"`), or
+    /// `"none"`. This is the one entry point every ratio-accepting flag
+    /// and parameter goes through, so named codecs work anywhere a ratio
+    /// does; the derived wire ratio must be >= 1.
+    pub fn parse(s: &str) -> crate::Result<Compression> {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("none") {
+            return Ok(Compression::None);
+        }
+        if let Ok(r) = t.parse::<f64>() {
+            anyhow::ensure!(
+                r.is_finite() && r >= 1.0,
+                "compression ratio must be finite and >= 1, got {t:?}"
+            );
+            return Ok(if r == 1.0 { Compression::None } else { Compression::Ratio(r) });
+        }
+        if let Some(kind) = crate::compress::CodecKind::parse(t) {
+            let c = Compression::Codec(kind);
+            anyhow::ensure!(
+                c.ratio() >= 1.0,
+                "codec {t:?} has wire ratio {:.3} < 1 (value+index doubling would inflate \
+                 traffic); pick topk k <= 0.5",
+                c.ratio()
+            );
+            return Ok(c);
+        }
+        anyhow::bail!(
+            "unknown compression {t:?}: expected a ratio >= 1, \"none\", or a codec \
+             (fp16 | int8 | onebit | topk:<k> | randk:<k>)"
+        )
+    }
+}
+
+impl fmt::Display for Compression {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Compression::None => f.write_str("none"),
+            Compression::Ratio(r) => write!(f, "{r}x"),
+            Compression::Codec(c) => f.write_str(&c.name()),
+        }
+    }
 }
 
 /// One experiment: a (model, cluster, network, algorithm) point.
@@ -184,8 +228,9 @@ impl ExperimentConfig {
         if self.fusion.timeout_s < 0.0 {
             errs.push("fusion.timeout_s must be >= 0".into());
         }
-        if self.compression.ratio() < 1.0 {
-            errs.push("compression ratio must be >= 1".into());
+        let ratio = self.compression.ratio();
+        if !ratio.is_finite() || ratio < 1.0 {
+            errs.push("compression ratio must be finite and >= 1".into());
         }
         if self.steps == 0 {
             errs.push("steps must be >= 1".into());
@@ -238,5 +283,25 @@ mod tests {
     fn compression_ratio() {
         assert_eq!(Compression::None.ratio(), 1.0);
         assert_eq!(Compression::Ratio(5.0).ratio(), 5.0);
+    }
+
+    #[test]
+    fn compression_parse_accepts_ratios_and_codecs() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("1").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("4").unwrap(), Compression::Ratio(4.0));
+        assert_eq!(Compression::parse(" 2.5 ").unwrap(), Compression::Ratio(2.5));
+        assert_eq!(
+            Compression::parse("fp16").unwrap(),
+            Compression::Codec(crate::compress::CodecKind::Fp16)
+        );
+        assert!((Compression::parse("topk:0.01").unwrap().ratio() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_parse_rejects_bad_specs() {
+        for bad in ["0", "0.5", "-3", "nan", "inf", "topk:0", "randk:2", "bogus", "topk:0.9"] {
+            assert!(Compression::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
     }
 }

@@ -1,0 +1,37 @@
+//! The experiment engine: every way of running an experiment behind one
+//! API.
+//!
+//! The paper's method is running the *same* experiment point through
+//! multiple execution modes — what-if simulation, real-time emulation,
+//! figure regeneration — and comparing apples to apples. This module
+//! makes that a first-class, enumerable capability:
+//!
+//! * [`Scenario`] — a named, self-describing experiment spec: description,
+//!   typed [`ParamSchema`], and the [`Runner`] that executes it;
+//! * [`Runner`] — the execution-mode trait; built-in implementations wrap
+//!   [`crate::figures`], [`crate::sim`], [`crate::trainer`] and
+//!   [`crate::sim::ablation`];
+//! * [`Outcome`] — the uniform result record (series, tables, checks,
+//!   metrics, timing), renderable to the terminal, CSV (byte-identical to
+//!   the pre-engine paths) and JSON;
+//! * [`ScenarioRegistry`] — the catalogue behind `netbn list` / `netbn
+//!   run <scenario>`; [`ScenarioRegistry::builtin`] registers all 8 paper
+//!   figures, simulate, emulate, validate and the four ablation sweeps;
+//! * [`SweepBuilder`] — cartesian grids over any scenario's parameters,
+//!   executed serially or on a thread pool (`netbn sweep ... --parallel N`).
+//!
+//! Registering a new workload is additive: implement [`Runner`] (or use
+//! [`Scenario::from_fn`]), describe the parameters, and register — no
+//! dispatch code changes anywhere. See `ENGINE.md` for a worked example.
+
+pub mod outcome;
+pub mod params;
+pub mod registry;
+pub mod runner;
+pub mod sweep;
+
+pub use outcome::Outcome;
+pub use params::{ParamKind, ParamSchema, ParamSpec, ParamValues};
+pub use registry::{Scenario, ScenarioRegistry};
+pub use runner::Runner;
+pub use sweep::{SweepBuilder, SweepPoint};

@@ -1,0 +1,228 @@
+//! The uniform result record every scenario produces.
+//!
+//! An [`Outcome`] carries whatever a run generated — figure series,
+//! tables, paper-shape checks, scalar metrics — plus identity (scenario
+//! name, resolved parameters, execution mode) and timing metadata. One
+//! record type means one emission path: the same `Outcome` renders to the
+//! terminal, writes the CSVs the pre-engine commands wrote (byte-identical
+//! — `Figure::write_csv` is unchanged), and serializes to JSON for
+//! machine consumers (`netbn run <scenario> --json -`).
+
+use crate::report::{json_str, render_checks, Check, Figure, Table};
+use crate::Result;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Uniform result of one scenario execution.
+#[derive(Clone, Debug, Default)]
+pub struct Outcome {
+    /// Registered scenario name (filled by [`crate::engine::Scenario::run`]).
+    pub scenario: String,
+    /// Execution mode ("figure", "simulate", "emulate", "validate", "ablate", ...).
+    pub mode: String,
+    /// Resolved `(name, value)` parameters the run executed with.
+    pub params: Vec<(String, String)>,
+    /// Regenerated figure data series.
+    pub figures: Vec<Figure>,
+    /// Human-readable summary tables.
+    pub tables: Vec<Table>,
+    /// Paper-shape checks evaluated against the data.
+    pub checks: Vec<Check>,
+    /// Scalar results, e.g. `("scaling_factor", 0.71)`.
+    pub metrics: Vec<(String, f64)>,
+    /// Wall-clock seconds the runner took (filled by `Scenario::run`).
+    pub wall_s: f64,
+}
+
+impl Outcome {
+    pub fn new() -> Outcome {
+        Outcome::default()
+    }
+
+    /// An outcome holding figures + their shape checks (the old
+    /// `figures::FigureRun` payload).
+    pub fn from_figures(figures: Vec<Figure>, checks: Vec<Check>) -> Outcome {
+        Outcome { figures, checks, ..Outcome::default() }
+    }
+
+    /// Append a scalar metric.
+    pub fn metric(&mut self, name: impl Into<String>, value: f64) {
+        self.metrics.push((name.into(), value));
+    }
+
+    /// Look up a scalar metric.
+    pub fn metric_value(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// `true` when every check passed (vacuously true without checks).
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+
+    /// Write one CSV per figure into `out_dir`; returns the paths.
+    pub fn write_csvs(&self, out_dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut paths = Vec::with_capacity(self.figures.len());
+        for f in &self.figures {
+            paths.push(f.write_csv(out_dir)?);
+        }
+        Ok(paths)
+    }
+
+    /// Render everything to stdout; persist CSVs when `out_dir` is given.
+    /// Returns whether all checks passed. This reproduces the exact
+    /// emission sequence of the pre-engine `fig` command (figure render,
+    /// `  -> path` line per CSV, then the check block).
+    pub fn emit(&self, out_dir: Option<&Path>) -> Result<bool> {
+        for f in &self.figures {
+            println!("{}", f.render());
+            if let Some(dir) = out_dir {
+                let path = f.write_csv(dir)?;
+                println!("  -> {}", path.display());
+            }
+        }
+        for t in &self.tables {
+            println!("{}", t.render());
+        }
+        let mut ok = true;
+        if !self.checks.is_empty() {
+            let (text, all) = render_checks(&self.checks);
+            println!("paper-shape checks:\n{text}");
+            ok = all;
+        }
+        Ok(ok)
+    }
+
+    /// Hand-rolled JSON encoding (the offline build has no serde; same
+    /// approach as [`Figure::to_json`]).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"scenario\":{},\"mode\":{},\"passed\":{},\"wall_s\":{}",
+            json_str(&self.scenario),
+            json_str(&self.mode),
+            self.passed(),
+            json_num(self.wall_s)
+        );
+        s.push_str(",\"params\":{");
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}:{}", json_str(k), json_str(v));
+        }
+        s.push_str("},\"metrics\":{");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}:{}", json_str(k), json_num(*v));
+        }
+        s.push_str("},\"checks\":[");
+        for (i, c) in self.checks.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"desc\":{},\"pass\":{},\"detail\":{}}}",
+                json_str(&c.desc),
+                c.pass,
+                json_str(&c.detail)
+            );
+        }
+        s.push_str("],\"figures\":[");
+        for (i, f) in self.figures.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&f.to_json());
+        }
+        s.push_str("],\"tables\":[");
+        for (i, t) in self.tables.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&t.to_json());
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// JSON-safe number: finite floats print as-is, anything else as null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::Series;
+
+    fn sample() -> Outcome {
+        let mut fig = Figure::new("figX", "t", "x", "y");
+        fig.series.push(Series { name: "s".into(), points: vec![(1.0, 2.0)] });
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        Outcome {
+            scenario: "demo".into(),
+            mode: "figure".into(),
+            params: vec![("k".into(), "v".into())],
+            figures: vec![fig],
+            tables: vec![t],
+            checks: vec![Check::assert("c", true, "d")],
+            metrics: vec![("scaling_factor".into(), 0.5), ("bad".into(), f64::NAN)],
+            wall_s: 0.25,
+        }
+    }
+
+    #[test]
+    fn json_has_all_sections() {
+        let j = sample().to_json();
+        for needle in [
+            "\"scenario\":\"demo\"",
+            "\"mode\":\"figure\"",
+            "\"passed\":true",
+            "\"wall_s\":0.25",
+            "\"params\":{\"k\":\"v\"}",
+            "\"scaling_factor\":0.5",
+            "\"bad\":null",
+            "\"checks\":[{\"desc\":\"c\",\"pass\":true,\"detail\":\"d\"}]",
+            "\"points\":[[1,2]]",
+            "\"rows\":[[\"1\"]]",
+        ] {
+            assert!(j.contains(needle), "missing {needle} in {j}");
+        }
+    }
+
+    #[test]
+    fn passed_tracks_checks() {
+        let mut o = sample();
+        assert!(o.passed());
+        o.checks.push(Check::assert("f", false, ""));
+        assert!(!o.passed());
+        assert!(Outcome::new().passed());
+    }
+
+    #[test]
+    fn csvs_written_per_figure() {
+        let dir = std::env::temp_dir().join("netbn_outcome_csv_test");
+        let paths = sample().write_csvs(&dir).unwrap();
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].ends_with("figX.csv"));
+        assert!(paths[0].exists());
+    }
+
+    #[test]
+    fn metric_lookup() {
+        let o = sample();
+        assert_eq!(o.metric_value("scaling_factor"), Some(0.5));
+        assert_eq!(o.metric_value("nope"), None);
+    }
+}

@@ -1,0 +1,297 @@
+//! Typed parameter schemas for scenarios.
+//!
+//! Every [`crate::engine::Scenario`] declares its parameters as a
+//! [`ParamSchema`]: name, help, kind and default. CLI overrides
+//! (`--param k=v`) are validated against the schema *before* the runner
+//! executes, so runners only ever see well-formed values and `netbn run`
+//! can reject typos with an error that lists the legal parameters.
+
+use crate::config::{Compression, TransportKind};
+use crate::models::ModelId;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::collections::BTreeMap;
+
+/// What a parameter value must parse as.
+#[derive(Clone, Debug)]
+pub enum ParamKind {
+    /// Non-negative integer (`usize`).
+    Int,
+    /// Finite float.
+    Float,
+    /// Finite float strictly greater than zero.
+    PositiveFloat,
+    /// Free-form string.
+    Str,
+    /// A [`ModelId`] name (`resnet50 | resnet101 | vgg16 | transformer`).
+    Model,
+    /// A [`TransportKind`] name (`full | kernel-tcp | tcp`).
+    Transport,
+    /// A [`Compression`] spec: ratio >= 1 or codec name.
+    Compression,
+    /// Comma-separated list of positive floats.
+    FloatList,
+    /// One of a fixed set of strings.
+    Choice(&'static [&'static str]),
+}
+
+/// One declared parameter.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: ParamKind,
+    pub default: &'static str,
+}
+
+impl ParamSpec {
+    pub fn new(
+        name: &'static str,
+        help: &'static str,
+        kind: ParamKind,
+        default: &'static str,
+    ) -> ParamSpec {
+        ParamSpec { name, help, kind, default }
+    }
+
+    /// Validate one value against this spec's kind.
+    fn check(&self, v: &str) -> Result<()> {
+        let name = self.name;
+        match &self.kind {
+            ParamKind::Int => {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("parameter {name}: expected an integer, got {v:?}"))?;
+            }
+            ParamKind::Float => {
+                let f = v
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("parameter {name}: expected a number, got {v:?}"))?;
+                ensure!(f.is_finite(), "parameter {name}: must be finite, got {v:?}");
+            }
+            ParamKind::PositiveFloat => {
+                let f = v
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("parameter {name}: expected a number, got {v:?}"))?;
+                ensure!(f.is_finite() && f > 0.0, "parameter {name}: must be > 0, got {v:?}");
+            }
+            ParamKind::Str => {}
+            ParamKind::Model => {
+                ModelId::parse(v).ok_or_else(|| {
+                    anyhow!("parameter {name}: unknown model {v:?} (resnet50|resnet101|vgg16|transformer)")
+                })?;
+            }
+            ParamKind::Transport => {
+                TransportKind::parse(v).ok_or_else(|| {
+                    anyhow!("parameter {name}: unknown transport {v:?} (full|kernel-tcp|tcp)")
+                })?;
+            }
+            ParamKind::Compression => {
+                Compression::parse(v)
+                    .map_err(|e| anyhow!("parameter {name}: {e:#}"))?;
+            }
+            ParamKind::FloatList => {
+                for part in v.split(',') {
+                    let f = part.trim().parse::<f64>().map_err(|_| {
+                        anyhow!("parameter {name}: bad list element {part:?} in {v:?}")
+                    })?;
+                    ensure!(
+                        f.is_finite() && f > 0.0,
+                        "parameter {name}: list elements must be > 0, got {part:?}"
+                    );
+                }
+            }
+            ParamKind::Choice(choices) => {
+                ensure!(
+                    choices.contains(&v),
+                    "parameter {name}: {v:?} is not one of {}",
+                    choices.join("|")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A scenario's declared parameter set.
+#[derive(Clone, Debug, Default)]
+pub struct ParamSchema {
+    specs: Vec<ParamSpec>,
+}
+
+impl ParamSchema {
+    /// A schema with no parameters (figure scenarios).
+    pub fn empty() -> ParamSchema {
+        ParamSchema { specs: Vec::new() }
+    }
+
+    pub fn new(specs: Vec<ParamSpec>) -> ParamSchema {
+        ParamSchema { specs }
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    fn spec(&self, name: &str) -> Option<&ParamSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Merge defaults with overrides and validate everything; the result
+    /// is the complete, well-formed parameter set the runner executes
+    /// with. Unknown parameter names are rejected with the legal list.
+    pub fn resolve(&self, overrides: &[(String, String)]) -> Result<ParamValues> {
+        let mut vals = BTreeMap::new();
+        for s in &self.specs {
+            vals.insert(s.name.to_string(), s.default.to_string());
+        }
+        for (k, v) in overrides {
+            let spec = self.spec(k).ok_or_else(|| {
+                let known: Vec<&str> = self.specs.iter().map(|s| s.name).collect();
+                if known.is_empty() {
+                    anyhow!("unknown parameter {k:?}: this scenario takes no parameters")
+                } else {
+                    anyhow!("unknown parameter {k:?}; legal parameters: {}", known.join(", "))
+                }
+            })?;
+            spec.check(v)?;
+            vals.insert(k.clone(), v.clone());
+        }
+        // Defaults are compile-time constants, but validate them too so a
+        // mistyped default fails loudly at the first run, not in a runner.
+        for s in &self.specs {
+            s.check(&vals[s.name])?;
+        }
+        Ok(ParamValues { vals })
+    }
+}
+
+/// A fully resolved, validated parameter set (defaults + overrides).
+#[derive(Clone, Debug)]
+pub struct ParamValues {
+    vals: BTreeMap<String, String>,
+}
+
+impl ParamValues {
+    /// All resolved `(name, value)` pairs, sorted by name.
+    pub fn resolved(&self) -> Vec<(String, String)> {
+        self.vals.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.vals
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("runner asked for undeclared parameter {name:?}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get_str(name)?;
+        v.parse().map_err(|_| anyhow!("parameter {name}: expected an integer, got {v:?}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get_str(name)?;
+        v.parse().map_err(|_| anyhow!("parameter {name}: expected a number, got {v:?}"))
+    }
+
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>> {
+        let v = self.get_str(name)?;
+        v.split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("parameter {name}: bad list element {p:?}"))
+            })
+            .collect()
+    }
+
+    pub fn get_model(&self, name: &str) -> Result<ModelId> {
+        let v = self.get_str(name)?;
+        ModelId::parse(v).ok_or_else(|| anyhow!("parameter {name}: unknown model {v:?}"))
+    }
+
+    pub fn get_transport(&self, name: &str) -> Result<TransportKind> {
+        let v = self.get_str(name)?;
+        TransportKind::parse(v).ok_or_else(|| anyhow!("parameter {name}: unknown transport {v:?}"))
+    }
+
+    pub fn get_compression(&self, name: &str) -> Result<Compression> {
+        Compression::parse(self.get_str(name)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> ParamSchema {
+        ParamSchema::new(vec![
+            ParamSpec::new("workers", "worker count", ParamKind::Int, "4"),
+            ParamSpec::new("bandwidth", "Gbps", ParamKind::PositiveFloat, "25"),
+            ParamSpec::new("model", "model id", ParamKind::Model, "resnet50"),
+            ParamSpec::new("compression", "ratio or codec", ParamKind::Compression, "1"),
+            ParamSpec::new("mode", "choice", ParamKind::Choice(&["a", "b"]), "a"),
+        ])
+    }
+
+    fn kv(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn defaults_resolve() {
+        let p = schema().resolve(&[]).unwrap();
+        assert_eq!(p.get_usize("workers").unwrap(), 4);
+        assert_eq!(p.get_f64("bandwidth").unwrap(), 25.0);
+        assert_eq!(p.get_model("model").unwrap(), ModelId::ResNet50);
+        assert_eq!(p.get_compression("compression").unwrap().ratio(), 1.0);
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let p = schema()
+            .resolve(&kv(&[("workers", "8"), ("model", "vgg16"), ("compression", "topk:0.01")]))
+            .unwrap();
+        assert_eq!(p.get_usize("workers").unwrap(), 8);
+        assert_eq!(p.get_model("model").unwrap(), ModelId::Vgg16);
+        assert!((p.get_compression("compression").unwrap().ratio() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_parameter_lists_legal_names() {
+        let err = schema().resolve(&kv(&[("bogus", "1")])).unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(err.contains("workers"), "{err}");
+        assert!(err.contains("bandwidth"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for (k, v) in [
+            ("workers", "four"),
+            ("workers", "-1"),
+            ("bandwidth", "0"),
+            ("bandwidth", "nan"),
+            ("model", "alexnet"),
+            ("compression", "topk:0"),
+            ("compression", "0.5"),
+            ("mode", "c"),
+        ] {
+            assert!(schema().resolve(&kv(&[(k, v)])).is_err(), "{k}={v} should be rejected");
+        }
+    }
+
+    #[test]
+    fn float_list_parses() {
+        let s = ParamSchema::new(vec![ParamSpec::new(
+            "bandwidths",
+            "Gbps list",
+            ParamKind::FloatList,
+            "5,25,100",
+        )]);
+        let p = s.resolve(&[]).unwrap();
+        assert_eq!(p.get_f64_list("bandwidths").unwrap(), vec![5.0, 25.0, 100.0]);
+        assert!(s.resolve(&kv(&[("bandwidths", "5,x")])).is_err());
+        assert!(s.resolve(&kv(&[("bandwidths", "5,-1")])).is_err());
+    }
+}

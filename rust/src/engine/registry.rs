@@ -1,0 +1,319 @@
+//! Named, discoverable scenarios.
+//!
+//! A [`Scenario`] binds a name + description + [`ParamSchema`] to a
+//! [`Runner`]. The [`ScenarioRegistry`] is the single catalogue every
+//! entry point goes through: `netbn list` prints it, `netbn run` and
+//! `netbn sweep` look names up in it, and the legacy subcommands (`fig`,
+//! `simulate`, `emulate`, `validate`, `ablate`) are thin aliases over it.
+//! Later PRs register new workloads here instead of growing `main.rs`.
+
+use super::outcome::Outcome;
+use super::params::{ParamKind, ParamSchema, ParamSpec, ParamValues};
+use super::runner::{
+    AblateKind, AblateRunner, EmulateRunner, FigureRunner, Runner, SimulateRunner, ValidateRunner,
+};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::time::Instant;
+
+/// A named, self-describing experiment spec.
+pub struct Scenario {
+    name: &'static str,
+    about: &'static str,
+    schema: ParamSchema,
+    runner: Box<dyn Runner>,
+}
+
+impl Scenario {
+    pub fn new(
+        name: &'static str,
+        about: &'static str,
+        schema: ParamSchema,
+        runner: Box<dyn Runner>,
+    ) -> Scenario {
+        Scenario { name, about, schema, runner }
+    }
+
+    /// Build a scenario from a plain function — the lightest way to
+    /// register a custom experiment (see ENGINE.md for a worked example).
+    pub fn from_fn<F>(
+        name: &'static str,
+        about: &'static str,
+        schema: ParamSchema,
+        mode: &'static str,
+        f: F,
+    ) -> Scenario
+    where
+        F: Fn(&ParamValues) -> Result<Outcome> + Send + Sync + 'static,
+    {
+        Scenario::new(name, about, schema, Box::new(FnRunner { mode, f: Box::new(f) }))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn about(&self) -> &'static str {
+        self.about
+    }
+
+    pub fn schema(&self) -> &ParamSchema {
+        &self.schema
+    }
+
+    pub fn mode(&self) -> &'static str {
+        self.runner.mode()
+    }
+
+    /// `true` when this scenario measures real wall-clock behavior — see
+    /// [`Runner::realtime`]; concurrent points would distort its numbers.
+    pub fn realtime(&self) -> bool {
+        self.runner.realtime()
+    }
+
+    /// Validate `overrides` against the schema, execute the runner, and
+    /// stamp identity + timing metadata onto the outcome.
+    pub fn run(&self, overrides: &[(String, String)]) -> Result<Outcome> {
+        let vals = self.schema.resolve(overrides)?;
+        let t0 = Instant::now();
+        let mut out = self.runner.run(&vals)?;
+        out.scenario = self.name.to_string();
+        out.mode = self.runner.mode().to_string();
+        out.params = vals.resolved();
+        out.wall_s = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}
+
+/// Adapter: a closure as a [`Runner`].
+struct FnRunner {
+    mode: &'static str,
+    #[allow(clippy::type_complexity)]
+    f: Box<dyn Fn(&ParamValues) -> Result<Outcome> + Send + Sync>,
+}
+
+impl Runner for FnRunner {
+    fn mode(&self) -> &'static str {
+        self.mode
+    }
+
+    fn run(&self, params: &ParamValues) -> Result<Outcome> {
+        (self.f)(params)
+    }
+}
+
+/// The scenario catalogue.
+pub struct ScenarioRegistry {
+    scenarios: Vec<Scenario>,
+}
+
+impl ScenarioRegistry {
+    /// An empty registry (tests and embedders).
+    pub fn new() -> ScenarioRegistry {
+        ScenarioRegistry { scenarios: Vec::new() }
+    }
+
+    /// All built-in scenarios: the 8 paper figures, the three execution
+    /// modes (simulate / emulate / validate) and the four ablation sweeps.
+    pub fn builtin() -> ScenarioRegistry {
+        let mut r = ScenarioRegistry::new();
+        let figures: [(&'static str, &'static str, &'static str); 8] = [
+            ("fig1", "1", "paper Fig 1: scaling factor vs servers (measured-mode, 100 Gbps)"),
+            ("fig2", "2", "paper Fig 2: computation time vs servers"),
+            ("fig3", "3", "paper Fig 3: scaling factor vs bandwidth (ResNet50)"),
+            ("fig4", "4", "paper Fig 4: network utilization vs provisioned bandwidth"),
+            ("fig5", "5", "paper Fig 5: CPU utilization vs network speed"),
+            ("fig6", "6", "paper Fig 6: simulated vs measured scaling factor per model"),
+            ("fig7", "7", "paper Fig 7: simulated scaling under 100 Gbps vs workers"),
+            ("fig8", "8", "paper Fig 8: scaling factor vs compression ratio"),
+        ];
+        for (name, fig_id, about) in figures {
+            r.register(Scenario::new(
+                name,
+                about,
+                ParamSchema::empty(),
+                Box::new(FigureRunner { fig_id }),
+            ))
+            .expect("builtin registration");
+        }
+        r.register(Scenario::new(
+            "simulate",
+            "what-if simulator at one experiment point",
+            ParamSchema::new(vec![
+                ParamSpec::new("model", "resnet50|resnet101|vgg16|transformer", ParamKind::Model, "resnet50"),
+                ParamSpec::new("workers", "GPUs in the all-reduce", ParamKind::Int, "64"),
+                ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "100"),
+                ParamSpec::new("transport", "full|kernel-tcp", ParamKind::Transport, "full"),
+                ParamSpec::new("compression", "wire ratio or codec (fp16, topk:0.01, ...)", ParamKind::Compression, "1"),
+            ]),
+            Box::new(SimulateRunner),
+        ))
+        .expect("builtin registration");
+        r.register(Scenario::new(
+            "emulate",
+            "real-time emulator (modeled compute, shaped fabric)",
+            ParamSchema::new(vec![
+                ParamSpec::new("model", "resnet50|resnet101|vgg16", ParamKind::Model, "resnet50"),
+                ParamSpec::new("servers", "server count (1 worker each)", ParamKind::Int, "4"),
+                ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "25"),
+                ParamSpec::new("transport", "full|kernel-tcp", ParamKind::Transport, "full"),
+                ParamSpec::new("steps", "measured steps", ParamKind::Int, "5"),
+                ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "256"),
+                ParamSpec::new("compression", "wire ratio or codec", ParamKind::Compression, "1"),
+            ]),
+            Box::new(EmulateRunner),
+        ))
+        .expect("builtin registration");
+        r.register(Scenario::new(
+            "validate",
+            "cross-validate emulator vs simulator (the paper's Fig 6 logic)",
+            ParamSchema::new(vec![
+                ParamSpec::new("workers", "worker count", ParamKind::Int, "4"),
+                ParamSpec::new("bandwidths", "comma list of Gbps", ParamKind::FloatList, "5,25,100"),
+                ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "1024"),
+            ]),
+            Box::new(ValidateRunner),
+        ))
+        .expect("builtin registration");
+        let model_param =
+            || ParamSpec::new("model", "resnet50|resnet101|vgg16", ParamKind::Model, "vgg16");
+        r.register(Scenario::new(
+            "ablate-fusion-size",
+            "scaling factor vs fusion buffer size (measured-mode, 100 Gbps)",
+            ParamSchema::new(vec![model_param()]),
+            Box::new(AblateRunner { kind: AblateKind::FusionSize }),
+        ))
+        .expect("builtin registration");
+        r.register(Scenario::new(
+            "ablate-fusion-timeout",
+            "scaling factor vs fusion timeout (measured-mode, 100 Gbps)",
+            ParamSchema::new(vec![model_param()]),
+            Box::new(AblateRunner { kind: AblateKind::FusionTimeout }),
+        ))
+        .expect("builtin registration");
+        r.register(Scenario::new(
+            "ablate-collectives",
+            "analytic wire time of ring vs tree vs parameter-server",
+            ParamSchema::new(vec![
+                model_param(),
+                ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "100"),
+            ]),
+            Box::new(AblateRunner { kind: AblateKind::Collectives }),
+        ))
+        .expect("builtin registration");
+        r.register(Scenario::new(
+            "ablate-bw-compression",
+            "scaling factor across the bandwidth x compression grid",
+            ParamSchema::new(vec![model_param()]),
+            Box::new(AblateRunner { kind: AblateKind::BwCompression }),
+        ))
+        .expect("builtin registration");
+        r
+    }
+
+    /// Register a scenario; duplicate names are rejected.
+    pub fn register(&mut self, scenario: Scenario) -> Result<()> {
+        if self.scenarios.iter().any(|s| s.name == scenario.name) {
+            bail!("scenario {:?} is already registered", scenario.name);
+        }
+        self.scenarios.push(scenario);
+        Ok(())
+    }
+
+    /// Look a scenario up by name; the error lists every registered name.
+    pub fn get(&self, name: &str) -> Result<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name).ok_or_else(|| {
+            anyhow!(
+                "unknown scenario {name:?}; registered scenarios: {}",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.scenarios.iter().map(|s| s.name).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Scenario> {
+        self.scenarios.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+}
+
+impl Default for ScenarioRegistry {
+    fn default() -> Self {
+        ScenarioRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_covers_every_entry_point() {
+        let r = ScenarioRegistry::builtin();
+        assert!(r.len() >= 13, "only {} scenarios", r.len());
+        for name in [
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
+            "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
+            "ablate-collectives", "ablate-bw-compression",
+        ] {
+            assert!(r.get(name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let err = ScenarioRegistry::builtin().get("fig9").unwrap_err().to_string();
+        assert!(err.contains("fig9"), "{err}");
+        assert!(err.contains("fig1"), "{err}");
+        assert!(err.contains("simulate"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut r = ScenarioRegistry::new();
+        let mk = || {
+            Scenario::from_fn("dup", "", ParamSchema::empty(), "test", |_| Ok(Outcome::new()))
+        };
+        r.register(mk()).unwrap();
+        assert!(r.register(mk()).is_err());
+    }
+
+    #[test]
+    fn run_stamps_identity_params_and_timing() {
+        let r = ScenarioRegistry::builtin();
+        let out = r
+            .get("simulate")
+            .unwrap()
+            .run(&[("workers".to_string(), "8".to_string())])
+            .unwrap();
+        assert_eq!(out.scenario, "simulate");
+        assert_eq!(out.mode, "simulate");
+        assert!(out.wall_s >= 0.0);
+        assert!(out.params.iter().any(|(k, v)| k == "workers" && v == "8"));
+        // Defaults are present too.
+        assert!(out.params.iter().any(|(k, v)| k == "transport" && v == "full"));
+    }
+
+    #[test]
+    fn run_rejects_bad_overrides_before_executing() {
+        let r = ScenarioRegistry::builtin();
+        let err = r
+            .get("simulate")
+            .unwrap()
+            .run(&[("bandwidth".to_string(), "-5".to_string())])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bandwidth"), "{err}");
+    }
+}

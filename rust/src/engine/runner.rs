@@ -1,0 +1,327 @@
+//! Execution modes behind scenarios.
+//!
+//! A [`Runner`] turns validated [`ParamValues`] into an [`Outcome`]. The
+//! four built-in runners wrap the pre-existing subsystems — they own no
+//! experiment logic of their own:
+//!
+//! * [`FigureRunner`] → [`crate::figures`] (paper figure regeneration),
+//! * [`SimulateRunner`] → [`crate::sim`] (the §3 what-if simulator),
+//! * [`EmulateRunner`] → [`crate::trainer::run_emulated`] (real-time emulator),
+//! * [`ValidateRunner`] → emulator-vs-simulator cross-validation,
+//! * [`AblateRunner`] → [`crate::sim::ablation`] sweeps.
+
+use super::outcome::Outcome;
+use super::params::ParamValues;
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::models::timing::backward_trace;
+use crate::models::ModelId;
+use crate::report::Table;
+use crate::sim::{ablation, simulate, SimParams};
+use crate::trainer::{run_emulated, EmulatedRunConfig};
+use crate::util::fmt;
+use crate::Result;
+use anyhow::ensure;
+
+/// An execution mode: validated parameters in, uniform [`Outcome`] out.
+///
+/// Runners must be `Send + Sync` so sweeps can execute scenario points on
+/// a thread pool.
+pub trait Runner: Send + Sync {
+    /// Mode label surfaced in `netbn list` and in `Outcome::mode`.
+    fn mode(&self) -> &'static str;
+
+    /// `true` when the runner measures real wall-clock behavior (emulation
+    /// with real sleeps/threads). Running such points concurrently
+    /// oversubscribes the host and distorts the measurements, so sweeps
+    /// warn before parallelizing them; analytic runners stay `false`.
+    fn realtime(&self) -> bool {
+        false
+    }
+
+    /// Execute with a fully resolved parameter set.
+    fn run(&self, params: &ParamValues) -> Result<Outcome>;
+}
+
+/// Wraps [`crate::figures::run_figure`]: regenerates one paper figure and
+/// its paper-shape checks.
+pub struct FigureRunner {
+    /// The `figures` module id ("1".."8").
+    pub fig_id: &'static str,
+}
+
+impl Runner for FigureRunner {
+    fn mode(&self) -> &'static str {
+        "figure"
+    }
+
+    fn run(&self, _params: &ParamValues) -> Result<Outcome> {
+        Ok(crate::figures::run_figure(self.fig_id)?.into())
+    }
+}
+
+/// Wraps the what-if simulator at one experiment point.
+pub struct SimulateRunner;
+
+impl Runner for SimulateRunner {
+    fn mode(&self) -> &'static str {
+        "simulate"
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let model = p.get_model("model")?;
+        let workers = p.get_usize("workers")?;
+        ensure!(workers >= 1, "parameter workers: must be >= 1");
+        let bw = p.get_f64("bandwidth")?;
+        let transport = p.get_transport("transport")?;
+        let ratio = p.get_compression("compression")?.ratio();
+        let trace = backward_trace(&model.profile());
+        // Cluster shaping: up to 8 GPUs per server (p3dn), the rest as
+        // extra servers. Counts that don't decompose exactly are rejected
+        // rather than silently truncated — the Outcome stamps `workers`
+        // into structured output, so every requested worker must exist.
+        ensure!(
+            workers <= 8 || workers % 8 == 0,
+            "parameter workers: counts > 8 must be a multiple of 8 (8 GPUs per server), got {workers}"
+        );
+        let gpus = 8.min(workers);
+        let servers = workers / gpus;
+        let mut sp = match transport {
+            TransportKind::KernelTcp => SimParams::horovod_like(trace, servers, gpus, bw),
+            _ => SimParams::whatif(trace, servers, gpus, bw),
+        };
+        sp.compression_ratio = ratio;
+        let r = simulate(&sp);
+
+        let mut t = Table::new(
+            format!("what-if: {model}, {workers} workers, {bw} Gbps, {transport}, {ratio}x"),
+            &["metric", "value"],
+        );
+        t.row(vec!["t_batch".into(), fmt::secs(r.t_batch)]);
+        t.row(vec!["t_back".into(), fmt::secs(r.t_back)]);
+        t.row(vec!["t_sync".into(), fmt::secs(r.t_sync)]);
+        t.row(vec!["t_overhead".into(), fmt::secs(r.t_overhead)]);
+        t.row(vec!["scaling factor".into(), fmt::pct(r.scaling_factor)]);
+        t.row(vec!["buckets".into(), r.buckets.to_string()]);
+        t.row(vec!["wire bytes/worker".into(), fmt::bytes(r.wire_bytes_per_worker)]);
+        t.row(vec!["achieved rate".into(), format!("{:.2} Gbps", r.achieved_gbps)]);
+
+        let mut out = Outcome::new();
+        out.tables.push(t);
+        out.metric("t_batch_s", r.t_batch);
+        out.metric("t_back_s", r.t_back);
+        out.metric("t_sync_s", r.t_sync);
+        out.metric("t_overhead_s", r.t_overhead);
+        out.metric("scaling_factor", r.scaling_factor);
+        out.metric("buckets", r.buckets as f64);
+        out.metric("wire_bytes_per_worker", r.wire_bytes_per_worker);
+        out.metric("achieved_gbps", r.achieved_gbps);
+        Ok(out)
+    }
+}
+
+/// Wraps the real-time emulator (modeled compute, shaped fabric, real
+/// bytes).
+pub struct EmulateRunner;
+
+impl Runner for EmulateRunner {
+    fn mode(&self) -> &'static str {
+        "emulate"
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let model = p.get_model("model")?;
+        let servers = p.get_usize("servers")?;
+        ensure!(servers >= 1, "parameter servers: must be >= 1");
+        let bw = p.get_f64("bandwidth")?;
+        let steps = p.get_usize("steps")?;
+        ensure!(steps >= 1, "parameter steps: must be >= 1");
+        let payload_scale = p.get_f64("payload-scale")?;
+        let transport = p.get_transport("transport")?;
+        let compression = p.get_compression("compression")?;
+        let exp = ExperimentConfig {
+            model,
+            servers,
+            gpus_per_server: 1,
+            bandwidth_gbps: bw,
+            transport,
+            compression,
+            steps,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        let r = run_emulated(&EmulatedRunConfig { exp, payload_scale })?;
+
+        let mut t = Table::new(
+            format!("emulated: {model}, {servers} servers, {bw} Gbps, {transport}"),
+            &["metric", "value"],
+        );
+        t.row(vec!["step time".into(), fmt::secs(r.step_time_s)]);
+        t.row(vec!["throughput".into(), format!("{:.1} samples/s", r.throughput)]);
+        t.row(vec!["scaling factor".into(), fmt::pct(r.scaling_factor)]);
+        t.row(vec!["mean compute".into(), fmt::secs(r.mean_compute_s)]);
+        t.row(vec!["mean comm wait".into(), fmt::secs(r.mean_comm_wait_s)]);
+        t.row(vec!["network utilization".into(), fmt::pct(r.network_utilization)]);
+        t.row(vec!["buckets/step".into(), format!("{:.1}", r.buckets_per_step)]);
+
+        let mut out = Outcome::new();
+        out.tables.push(t);
+        out.metric("step_time_s", r.step_time_s);
+        out.metric("throughput", r.throughput);
+        out.metric("scaling_factor", r.scaling_factor);
+        out.metric("mean_compute_s", r.mean_compute_s);
+        out.metric("mean_comm_wait_s", r.mean_comm_wait_s);
+        out.metric("network_utilization", r.network_utilization);
+        out.metric("buckets_per_step", r.buckets_per_step);
+        Ok(out)
+    }
+}
+
+/// Cross-validates emulator against simulator across a bandwidth list
+/// (the paper's Fig 6 logic).
+pub struct ValidateRunner;
+
+impl Runner for ValidateRunner {
+    fn mode(&self) -> &'static str {
+        "validate"
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let workers = p.get_usize("workers")?;
+        ensure!(workers >= 1, "parameter workers: must be >= 1");
+        let bws = p.get_f64_list("bandwidths")?;
+        ensure!(!bws.is_empty(), "parameter bandwidths: list is empty");
+        let payload_scale = p.get_f64("payload-scale")?;
+        let mut out = Outcome::new();
+        let mut t = Table::new(
+            "emulator vs simulator (full-utilization transport)",
+            &["model", "Gbps", "emulated sf", "simulated sf"],
+        );
+        // Metric keys are by bandwidth; a repeated bandwidth gets a #n
+        // suffix so the JSON metrics object never carries duplicate keys.
+        let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+        for bw in bws {
+            let (e, s, check) = crate::figures::validate_emulator_against_sim(
+                ModelId::ResNet50,
+                workers,
+                bw,
+                payload_scale,
+            )?;
+            t.row(vec!["ResNet50".into(), format!("{bw}"), format!("{e:.3}"), format!("{s:.3}")]);
+            let n = seen.entry(format!("{bw}")).or_insert(0);
+            *n += 1;
+            let suffix = if *n > 1 { format!("#{n}") } else { String::new() };
+            out.metric(format!("emulated_sf@{bw}g{suffix}"), e);
+            out.metric(format!("simulated_sf@{bw}g{suffix}"), s);
+            out.checks.push(check);
+        }
+        out.tables.push(t);
+        Ok(out)
+    }
+}
+
+/// Which ablation sweep to run.
+#[derive(Clone, Copy, Debug)]
+pub enum AblateKind {
+    FusionSize,
+    FusionTimeout,
+    Collectives,
+    BwCompression,
+}
+
+/// Wraps one [`crate::sim::ablation`] sweep.
+pub struct AblateRunner {
+    pub kind: AblateKind,
+}
+
+impl Runner for AblateRunner {
+    fn mode(&self) -> &'static str {
+        "ablate"
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let model = p.get_model("model")?;
+        let fig = match self.kind {
+            AblateKind::FusionSize => ablation::ablate_fusion_size(model),
+            AblateKind::FusionTimeout => ablation::ablate_fusion_timeout(model),
+            AblateKind::Collectives => {
+                ablation::ablate_collective_cost(model, p.get_f64("bandwidth")?)
+            }
+            AblateKind::BwCompression => ablation::ablate_bw_compression_grid(model),
+        };
+        Ok(Outcome::from_figures(vec![fig], Vec::new()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::params::{ParamKind, ParamSchema, ParamSpec};
+
+    fn simulate_schema() -> ParamSchema {
+        ParamSchema::new(vec![
+            ParamSpec::new("model", "", ParamKind::Model, "resnet50"),
+            ParamSpec::new("workers", "", ParamKind::Int, "64"),
+            ParamSpec::new("bandwidth", "", ParamKind::PositiveFloat, "100"),
+            ParamSpec::new("transport", "", ParamKind::Transport, "full"),
+            ParamSpec::new("compression", "", ParamKind::Compression, "1"),
+        ])
+    }
+
+    #[test]
+    fn simulate_runner_produces_metrics_and_table() {
+        let p = simulate_schema().resolve(&[]).unwrap();
+        let out = SimulateRunner.run(&p).unwrap();
+        assert_eq!(out.tables.len(), 1);
+        let sf = out.metric_value("scaling_factor").unwrap();
+        assert!((0.0..=1.0).contains(&sf), "{sf}");
+        assert!(out.metric_value("t_sync_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn simulate_runner_named_codec_equals_its_ratio() {
+        // fp16 == ratio 2: the satellite unification in action.
+        let run = |compression: &str| {
+            let p = simulate_schema()
+                .resolve(&[("compression".to_string(), compression.to_string())])
+                .unwrap();
+            SimulateRunner.run(&p).unwrap().metric_value("scaling_factor").unwrap()
+        };
+        assert_eq!(run("fp16"), run("2"));
+    }
+
+    #[test]
+    fn figure_runner_wraps_figures() {
+        let p = ParamSchema::empty().resolve(&[]).unwrap();
+        let out = FigureRunner { fig_id: "1" }.run(&p).unwrap();
+        assert!(!out.figures.is_empty());
+        assert!(!out.checks.is_empty());
+        assert!(out.passed(), "fig1 shape checks should pass");
+    }
+
+    #[test]
+    fn ablate_runner_produces_figures() {
+        let schema = ParamSchema::new(vec![
+            ParamSpec::new("model", "", ParamKind::Model, "vgg16"),
+            ParamSpec::new("bandwidth", "", ParamKind::PositiveFloat, "100"),
+        ]);
+        let p = schema.resolve(&[]).unwrap();
+        for kind in [
+            AblateKind::FusionSize,
+            AblateKind::FusionTimeout,
+            AblateKind::Collectives,
+            AblateKind::BwCompression,
+        ] {
+            let out = AblateRunner { kind }.run(&p).unwrap();
+            assert_eq!(out.figures.len(), 1);
+            assert!(!out.figures[0].series.is_empty());
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Cartesian parameter sweeps over a scenario, with optional thread-pool
+//! execution.
+//!
+//! A [`SweepBuilder`] takes a base parameter set ([`SweepBuilder::fix`])
+//! plus any number of axes ([`SweepBuilder::axis`]); [`SweepBuilder::points`]
+//! expands the cartesian grid in a deterministic order (later axes vary
+//! fastest, like an odometer), and [`SweepBuilder::run`] executes every
+//! point — independently, so `parallel > 1` fans points out across worker
+//! threads. Each point yields its own [`Outcome`] (or error); one failing
+//! point never aborts the sweep.
+
+use super::outcome::Outcome;
+use super::registry::Scenario;
+use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executed grid point.
+pub struct SweepPoint {
+    /// Position in [`SweepBuilder::points`] order.
+    pub index: usize,
+    /// The overrides this point ran with (base + axis values).
+    pub params: Vec<(String, String)>,
+    /// The point's result; errors are contained per-point.
+    pub outcome: Result<Outcome>,
+}
+
+/// Builder for a cartesian sweep over one scenario.
+pub struct SweepBuilder<'a> {
+    scenario: &'a Scenario,
+    base: Vec<(String, String)>,
+    axes: Vec<(String, Vec<String>)>,
+}
+
+impl<'a> SweepBuilder<'a> {
+    pub fn new(scenario: &'a Scenario) -> SweepBuilder<'a> {
+        SweepBuilder { scenario, base: Vec::new(), axes: Vec::new() }
+    }
+
+    /// Fix one parameter for every point.
+    pub fn fix(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.base.push((key.into(), value.into()));
+        self
+    }
+
+    /// Add a swept axis with explicit values.
+    ///
+    /// Panics on a duplicate axis key: the later axis would silently win
+    /// every point (parameter resolution is last-write-wins) while the
+    /// point labels claimed both values. CLI callers pre-validate and
+    /// report this as a clean error instead.
+    pub fn axis(mut self, key: impl Into<String>, values: Vec<String>) -> Self {
+        let key = key.into();
+        assert!(
+            self.axes.iter().all(|(k, _)| *k != key),
+            "duplicate sweep axis {key:?}"
+        );
+        self.axes.push((key, values));
+        self
+    }
+
+    /// Add a swept axis from a comma-separated value list (the CLI's
+    /// `--grid key=v1,v2,...` form).
+    pub fn axis_csv(self, key: impl Into<String>, csv: &str) -> Self {
+        self.axis(key, csv.split(',').map(|v| v.trim().to_string()).collect())
+    }
+
+    /// Number of grid points (product of axis lengths; 1 with no axes).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|(_, vs)| vs.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian grid. Deterministic: the first axis varies
+    /// slowest, the last fastest.
+    pub fn points(&self) -> Vec<Vec<(String, String)>> {
+        let mut pts = vec![self.base.clone()];
+        for (key, values) in &self.axes {
+            let mut next = Vec::with_capacity(pts.len() * values.len());
+            for p in &pts {
+                for v in values {
+                    let mut q = p.clone();
+                    q.push((key.clone(), v.clone()));
+                    next.push(q);
+                }
+            }
+            pts = next;
+        }
+        pts
+    }
+
+    /// Execute every point on up to `parallel` worker threads (clamped to
+    /// the point count; `0` behaves as `1`). Results come back in
+    /// [`SweepBuilder::points`] order regardless of completion order.
+    pub fn run(&self, parallel: usize) -> Vec<SweepPoint> {
+        let pts = self.points();
+        if pts.is_empty() {
+            return Vec::new();
+        }
+        let workers = parallel.max(1).min(pts.len());
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SweepPoint>>> = pts.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= pts.len() {
+                        break;
+                    }
+                    let outcome = self.scenario.run(&pts[i]);
+                    *slots[i].lock().unwrap() =
+                        Some(SweepPoint { index: i, params: pts[i].clone(), outcome });
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every sweep point was executed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::params::{ParamKind, ParamSchema, ParamSpec};
+    use crate::engine::registry::Scenario;
+
+    fn echo_scenario() -> Scenario {
+        Scenario::from_fn(
+            "echo",
+            "returns its parameters as metrics",
+            ParamSchema::new(vec![
+                ParamSpec::new("a", "", ParamKind::Float, "0"),
+                ParamSpec::new("b", "", ParamKind::Float, "0"),
+                ParamSpec::new("c", "", ParamKind::Float, "0"),
+            ]),
+            "test",
+            |p| {
+                let mut out = Outcome::new();
+                out.metric("a", p.get_f64("a")?);
+                out.metric("b", p.get_f64("b")?);
+                out.metric("c", p.get_f64("c")?);
+                Ok(out)
+            },
+        )
+    }
+
+    fn vals(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn cartesian_counts_multiply() {
+        let sc = echo_scenario();
+        let sweep = SweepBuilder::new(&sc)
+            .axis("a", vals(&["1", "2", "3"]))
+            .axis("b", vals(&["10", "20"]));
+        assert_eq!(sweep.len(), 6);
+        assert_eq!(sweep.points().len(), 6);
+        let one_axis = SweepBuilder::new(&sc).axis("a", vals(&["1", "2"]));
+        assert_eq!(one_axis.len(), 2);
+        let no_axis = SweepBuilder::new(&sc);
+        assert_eq!(no_axis.points().len(), 1);
+    }
+
+    #[test]
+    fn expansion_order_is_odometer() {
+        let sc = echo_scenario();
+        let pts = SweepBuilder::new(&sc)
+            .axis("a", vals(&["1", "2"]))
+            .axis("b", vals(&["10", "20"]))
+            .points();
+        let flat: Vec<(f64, f64)> = pts
+            .iter()
+            .map(|p| {
+                let get = |k: &str| {
+                    p.iter().find(|(n, _)| n == k).unwrap().1.parse::<f64>().unwrap()
+                };
+                (get("a"), get("b"))
+            })
+            .collect();
+        assert_eq!(flat, vec![(1.0, 10.0), (1.0, 20.0), (2.0, 10.0), (2.0, 20.0)]);
+    }
+
+    #[test]
+    fn fixed_params_reach_every_point() {
+        let sc = echo_scenario();
+        let results =
+            SweepBuilder::new(&sc).fix("c", "7").axis("a", vals(&["1", "2"])).run(1);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            let out = r.outcome.as_ref().unwrap();
+            assert_eq!(out.metric_value("c"), Some(7.0));
+        }
+    }
+
+    #[test]
+    fn parallel_results_keep_point_order() {
+        let sc = echo_scenario();
+        let results = SweepBuilder::new(&sc)
+            .axis("a", vals(&["1", "2", "3", "4", "5", "6", "7", "8"]))
+            .run(4);
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i);
+            let out = r.outcome.as_ref().unwrap();
+            assert_eq!(out.metric_value("a"), Some((i + 1) as f64));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sweep axis")]
+    fn duplicate_axis_key_rejected() {
+        let sc = echo_scenario();
+        let _ = SweepBuilder::new(&sc)
+            .axis("a", vals(&["1", "2"]))
+            .axis("a", vals(&["3", "4"]));
+    }
+
+    #[test]
+    fn point_errors_are_contained() {
+        let sc = echo_scenario();
+        // "x" fails Float validation at resolve time: the point errors,
+        // the sweep completes.
+        let results = SweepBuilder::new(&sc).axis("a", vals(&["1", "x", "3"])).run(2);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].outcome.is_ok());
+        assert!(results[1].outcome.is_err());
+        assert!(results[2].outcome.is_ok());
+    }
+}

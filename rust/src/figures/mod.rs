@@ -4,28 +4,22 @@
 //! wins, by what factor, where the knees fall).
 
 use crate::models::ModelId;
-use crate::report::{render_checks, Check, Figure};
+use crate::report::{Check, Figure};
 use crate::sim::whatif;
 use crate::Result;
-use std::path::Path;
 
-/// Output of one figure run.
+/// Output of one figure run. Emission lives on the engine's uniform
+/// [`crate::engine::Outcome`] record (convert via `From`) so the figure
+/// path and `netbn run fig<n>` share one code path — and byte-identical
+/// CSVs.
 pub struct FigureRun {
     pub figures: Vec<Figure>,
     pub checks: Vec<Check>,
 }
 
-impl FigureRun {
-    /// Render everything (figures + checks) and persist CSVs.
-    pub fn emit(&self, out_dir: &Path) -> Result<bool> {
-        for f in &self.figures {
-            println!("{}", f.render());
-            let path = f.write_csv(out_dir)?;
-            println!("  -> {}", path.display());
-        }
-        let (text, ok) = render_checks(&self.checks);
-        println!("paper-shape checks:\n{text}");
-        Ok(ok)
+impl From<FigureRun> for crate::engine::Outcome {
+    fn from(run: FigureRun) -> crate::engine::Outcome {
+        crate::engine::Outcome::from_figures(run.figures, run.checks)
     }
 }
 

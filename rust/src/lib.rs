@@ -20,27 +20,35 @@
 //!
 //! ## Map of the crate
 //!
-//! | module | role |
-//! |---|---|
-//! | [`util`] | PRNG, statistics, microbench + property-test mini-frameworks, logging |
-//! | [`cli`] | subcommand/flag parser (no clap in the offline env) |
-//! | [`config`] | typed experiment configs + parser + paper presets |
-//! | [`topology`] | servers × GPUs, hierarchical ring construction |
-//! | [`net`] | `Transport` trait: real TCP, token-bucket shaper, kernel-TCP cost model, in-proc |
-//! | [`collectives`] | ring / tree / PS all-reduce + Horovod fusion buffer |
-//! | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
-//! | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap |
-//! | [`sim`] | the paper's §3 what-if simulator (backward + all-reduce processes) |
-//! | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
-//! | [`measure`] | CPU / link utilization sampling, white-box timing traces |
-//! | [`runtime`] | PJRT wrapper: load + execute AOT artifacts |
-//! | [`report`] | ASCII tables, CSV/JSON series, paper-shape checks |
-//! | [`figures`] | per-figure experiment drivers (Fig 1–8) |
+//! Layered bottom-up: substrates, domain models, execution modes, then
+//! the engine that unifies them behind one API.
+//!
+//! | layer | module | role |
+//! |---|---|---|
+//! | substrate | [`util`] | PRNG, statistics, microbench + property-test mini-frameworks, logging |
+//! | substrate | [`cli`] | subcommand/flag parser with repeatable options (no clap in the offline env) |
+//! | substrate | [`report`] | ASCII tables, figure series, CSV/JSON writers, paper-shape checks |
+//! | substrate | [`config`] | typed experiment configs, `Compression::parse` (ratio-or-codec), TOML-subset parser, paper presets |
+//! | domain | [`topology`] | servers × GPUs, hierarchical ring construction |
+//! | domain | [`net`] | `Transport` trait: real TCP, token-bucket shaper, kernel-TCP cost model, in-proc |
+//! | domain | [`collectives`] | ring / tree / PS all-reduce + Horovod fusion buffer |
+//! | domain | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
+//! | domain | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
+//! | domain | [`measure`] | CPU / link utilization sampling, white-box timing traces |
+//! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps |
+//! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap |
+//! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
+//! | mode | [`figures`] | per-figure experiment drivers (Fig 1–8) |
+//! | engine | [`engine`] | `Scenario` / `Runner` / `Outcome` / `ScenarioRegistry` / `SweepBuilder` — every experiment as a named, parameterized, sweepable scenario (see ENGINE.md) |
+//!
+//! New workloads register as [`engine`] scenarios rather than growing
+//! `main.rs`; the CLI (`netbn list` / `run` / `sweep`) is registry-driven.
 
 pub mod cli;
 pub mod collectives;
 pub mod compress;
 pub mod config;
+pub mod engine;
 pub mod figures;
 pub mod measure;
 pub mod models;

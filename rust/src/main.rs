@@ -1,10 +1,14 @@
-//! `netbn` — leader binary: regenerate paper figures, run emulated or real
-//! training, calibrate cost tables, validate emulator vs simulator.
+//! `netbn` — leader binary over the scenario engine: discover and run any
+//! registered experiment (`list` / `run` / `sweep`), regenerate paper
+//! figures, run emulated or real training, calibrate cost tables, validate
+//! emulator vs simulator. The pre-engine subcommands (`fig`, `simulate`,
+//! `emulate`, `validate`, `ablate`) remain as thin aliases over the
+//! [`netbn::engine::ScenarioRegistry`], with unchanged CSV output.
 
 use netbn::cli::{App, Args, CmdSpec, OptSpec, Parsed};
-use netbn::config::{Compression, ExperimentConfig, TransportKind};
+use netbn::engine::{ScenarioRegistry, SweepBuilder, SweepPoint};
 use netbn::models::ModelId;
-use netbn::report::Table;
+use netbn::report::{json_str, Table};
 use netbn::Result;
 use std::path::PathBuf;
 
@@ -14,79 +18,98 @@ fn app() -> App {
         about: "reproduction of 'Is Network the Bottleneck of Distributed Training?' (NetAI'20)",
         commands: vec![
             CmdSpec {
+                name: "list",
+                about: "enumerate every registered scenario",
+                opts: vec![],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "run",
+                about: "run one scenario by name",
+                opts: vec![
+                    OptSpec::repeated("param", "override one parameter (k=v)"),
+                    OptSpec::value("out", "CSV output directory", "out"),
+                    OptSpec::optional("json", "write the Outcome as JSON to a file, or '-' for stdout"),
+                ],
+                positional: vec![("scenario", "scenario name (see `netbn list`)")],
+            },
+            CmdSpec {
+                name: "sweep",
+                about: "run a cartesian parameter sweep over one scenario",
+                opts: vec![
+                    OptSpec::repeated("grid", "swept axis (k=v1,v2,...)"),
+                    OptSpec::repeated("param", "fixed parameter for every point (k=v)"),
+                    OptSpec::value("parallel", "worker threads", "1"),
+                    OptSpec::optional("json", "write all Outcomes as JSON to a file, or '-' for stdout"),
+                ],
+                positional: vec![("scenario", "scenario name (see `netbn list`)")],
+            },
+            CmdSpec {
                 name: "fig",
-                about: "regenerate a paper figure (1-8, or 'all')",
-                opts: vec![OptSpec {
-                    name: "out",
-                    help: "CSV output directory",
-                    takes_value: true,
-                    default: Some("out"),
-                }],
+                about: "regenerate a paper figure (1-8, or 'all') [alias for `run fig<n>`]",
+                opts: vec![OptSpec::value("out", "CSV output directory", "out")],
                 positional: vec![("n", "figure number 1-8 or 'all'")],
             },
             CmdSpec {
                 name: "simulate",
-                about: "run the what-if simulator at one experiment point",
+                about: "run the what-if simulator at one experiment point [alias for `run simulate`]",
                 opts: vec![
-                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16|transformer", takes_value: true, default: Some("resnet50") },
-                    OptSpec { name: "workers", help: "GPUs in the all-reduce", takes_value: true, default: Some("64") },
-                    OptSpec { name: "bandwidth", help: "provisioned Gbps", takes_value: true, default: Some("100") },
-                    OptSpec { name: "transport", help: "full|kernel-tcp", takes_value: true, default: Some("full") },
-                    OptSpec { name: "compression", help: "wire-size ratio", takes_value: true, default: Some("1") },
+                    OptSpec::optional("model", "resnet50|resnet101|vgg16|transformer (default resnet50)"),
+                    OptSpec::optional("workers", "GPUs in the all-reduce (default 64)"),
+                    OptSpec::optional("bandwidth", "provisioned Gbps (default 100)"),
+                    OptSpec::optional("transport", "full|kernel-tcp (default full)"),
+                    OptSpec::optional("compression", "wire ratio or codec, e.g. 4 | fp16 | topk:0.01 (default 1)"),
                 ],
                 positional: vec![],
             },
             CmdSpec {
                 name: "emulate",
-                about: "run the real-time emulator (modeled compute, shaped fabric)",
+                about: "run the real-time emulator (modeled compute, shaped fabric) [alias for `run emulate`]",
                 opts: vec![
-                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16", takes_value: true, default: Some("resnet50") },
-                    OptSpec { name: "servers", help: "server count (1 worker each)", takes_value: true, default: Some("4") },
-                    OptSpec { name: "bandwidth", help: "provisioned Gbps", takes_value: true, default: Some("25") },
-                    OptSpec { name: "transport", help: "full|kernel-tcp", takes_value: true, default: Some("full") },
-                    OptSpec { name: "steps", help: "measured steps", takes_value: true, default: Some("5") },
-                    OptSpec { name: "payload-scale", help: "byte/rate shrink factor", takes_value: true, default: Some("256") },
+                    OptSpec::optional("model", "resnet50|resnet101|vgg16 (default resnet50)"),
+                    OptSpec::optional("servers", "server count, 1 worker each (default 4)"),
+                    OptSpec::optional("bandwidth", "provisioned Gbps (default 25)"),
+                    OptSpec::optional("transport", "full|kernel-tcp (default full)"),
+                    OptSpec::optional("steps", "measured steps (default 5)"),
+                    OptSpec::optional("payload-scale", "byte/rate shrink factor (default 256)"),
+                    OptSpec::optional("compression", "wire ratio or codec (default 1)"),
                 ],
                 positional: vec![],
             },
             CmdSpec {
                 name: "validate",
-                about: "cross-validate emulator vs simulator (the paper's Fig 6 logic)",
+                about: "cross-validate emulator vs simulator [alias for `run validate`]",
                 opts: vec![
-                    OptSpec { name: "workers", help: "worker count", takes_value: true, default: Some("4") },
-                    OptSpec { name: "bandwidths", help: "comma list of Gbps", takes_value: true, default: Some("5,25,100") },
+                    OptSpec::optional("workers", "worker count (default 4)"),
+                    OptSpec::optional("bandwidths", "comma list of Gbps (default 5,25,100)"),
+                    OptSpec::optional("payload-scale", "byte/rate shrink factor (default 1024)"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "ablate",
+                about: "run the ablation sweeps [alias for the four ablate-* scenarios]",
+                opts: vec![
+                    OptSpec::optional("model", "resnet50|resnet101|vgg16 (default vgg16)"),
+                    OptSpec::value("out", "CSV output directory", "out"),
                 ],
                 positional: vec![],
             },
             CmdSpec {
                 name: "calibrate-add",
                 about: "measure AddEst(x) locally and print the table (§3.1)",
-                opts: vec![OptSpec {
-                    name: "max-elems",
-                    help: "largest vector size",
-                    takes_value: true,
-                    default: Some("4194304"),
-                }],
+                opts: vec![OptSpec::value("max-elems", "largest vector size", "4194304")],
                 positional: vec![],
             },
             CmdSpec {
                 name: "train",
                 about: "e2e: train the AOT transformer over N emulated workers",
                 opts: vec![
-                    OptSpec { name: "workers", help: "worker count", takes_value: true, default: Some("2") },
-                    OptSpec { name: "steps", help: "training steps", takes_value: true, default: Some("20") },
-                    OptSpec { name: "batch", help: "batch per worker", takes_value: true, default: Some("4") },
-                    OptSpec { name: "lr", help: "learning rate", takes_value: true, default: Some("0.05") },
-                    OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") },
-                ],
-                positional: vec![],
-            },
-            CmdSpec {
-                name: "ablate",
-                about: "run the ablation sweeps (fusion size/timeout, collectives, bw×compression)",
-                opts: vec![
-                    OptSpec { name: "model", help: "resnet50|resnet101|vgg16", takes_value: true, default: Some("vgg16") },
-                    OptSpec { name: "out", help: "CSV output directory", takes_value: true, default: Some("out") },
+                    OptSpec::value("workers", "worker count", "2"),
+                    OptSpec::value("steps", "training steps", "20"),
+                    OptSpec::value("batch", "batch per worker", "4"),
+                    OptSpec::value("lr", "learning rate", "0.05"),
+                    OptSpec::value("artifacts", "artifacts directory", "artifacts"),
                 ],
                 positional: vec![],
             },
@@ -114,31 +137,229 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<bool> {
+    let registry = ScenarioRegistry::builtin();
     match app().parse(argv)? {
         Parsed::Help(text) => {
             println!("{text}");
             Ok(true)
         }
         Parsed::Command(name, args) => match name.as_str() {
-            "fig" => cmd_fig(&args),
-            "simulate" => cmd_simulate(&args),
-            "emulate" => cmd_emulate(&args),
-            "validate" => cmd_validate(&args),
+            "list" => cmd_list(&registry),
+            "run" => cmd_run(&registry, &args),
+            "sweep" => cmd_sweep(&registry, &args),
+            "fig" => cmd_fig(&registry, &args),
+            "simulate" => cmd_alias(&registry, "simulate", &args),
+            "emulate" => cmd_alias(&registry, "emulate", &args),
+            "validate" => cmd_alias(&registry, "validate", &args),
+            "ablate" => cmd_ablate(&registry, &args),
             "calibrate-add" => cmd_calibrate(&args),
             "train" => cmd_train(&args),
-            "ablate" => cmd_ablate(&args),
             "info" => cmd_info(),
             other => anyhow::bail!("unhandled command {other}"),
         },
     }
 }
 
-fn parse_model(args: &Args) -> Result<ModelId> {
-    let s = args.get_or("model", "resnet50");
-    ModelId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown model {s:?}"))
+/// User-provided options as scenario parameter overrides (alias path:
+/// option names match parameter names one-to-one).
+fn overrides_from_options(args: &Args) -> Vec<(String, String)> {
+    args.options.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
 }
 
-fn cmd_fig(args: &Args) -> Result<bool> {
+/// Reject a repeated key in a `--param`/`--grid` list: parameter
+/// resolution is last-write-wins, so the earlier value would silently
+/// lose with no diagnostic.
+fn ensure_unique_keys(flag: &str, pairs: &[(String, String)]) -> Result<()> {
+    for (i, (k, _)) in pairs.iter().enumerate() {
+        anyhow::ensure!(
+            !pairs[..i].iter().any(|(prev, _)| prev == k),
+            "--{flag} {k} given twice; the later value would silently win"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list(registry: &ScenarioRegistry) -> Result<bool> {
+    let mut t = Table::new(
+        format!("registered scenarios ({})", registry.len()),
+        &["name", "mode", "parameters (defaults)", "description"],
+    );
+    for s in registry.iter() {
+        let params = s
+            .schema()
+            .specs()
+            .iter()
+            .map(|p| format!("{}={}", p.name, p.default))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(vec![
+            s.name().into(),
+            s.mode().into(),
+            if params.is_empty() { "-".into() } else { params },
+            s.about().into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("run one with: netbn run <scenario> [--param k=v ...] [--json -]");
+    println!("sweep one with: netbn sweep <scenario> --grid k=v1,v2,... [--parallel N]");
+    Ok(true)
+}
+
+fn cmd_run(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: netbn run <scenario> [--param k=v ...]"))?;
+    let scenario = registry.get(name)?;
+    let params = args.get_kv_multi("param")?;
+    ensure_unique_keys("param", &params)?;
+    let outcome = scenario.run(&params)?;
+    let out_dir = PathBuf::from(args.get_or("out", "out"));
+    let json_dest = args.get("json");
+    // `--json -` streams pure JSON to stdout: suppress human rendering but
+    // still persist CSVs.
+    let ok = if json_dest == Some("-") {
+        outcome.write_csvs(&out_dir)?;
+        outcome.passed()
+    } else {
+        outcome.emit(Some(out_dir.as_path()))?
+    };
+    match json_dest {
+        None => {}
+        Some("-") => println!("{}", outcome.to_json()),
+        Some(path) => {
+            std::fs::write(path, outcome.to_json())?;
+            println!("  -> {path}");
+        }
+    }
+    Ok(ok)
+}
+
+fn cmd_sweep(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
+    let name = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: netbn sweep <scenario> --grid k=v1,v2,... [--parallel N]")
+    })?;
+    let scenario = registry.get(name)?;
+    let mut sweep = SweepBuilder::new(scenario);
+    let params = args.get_kv_multi("param")?;
+    let grids = args.get_kv_multi("grid")?;
+    anyhow::ensure!(!grids.is_empty(), "sweep needs at least one --grid key=v1,v2,...");
+    // Reject key collisions up front: resolution is last-write-wins, so a
+    // silently overridden key would leave point labels contradicting what
+    // actually ran.
+    ensure_unique_keys("param", &params)?;
+    for (i, (k, _)) in grids.iter().enumerate() {
+        anyhow::ensure!(
+            !grids[..i].iter().any(|(prev, _)| prev == k),
+            "--grid {k} given twice; merge the values into one axis (--grid {k}=v1,v2,...)"
+        );
+        anyhow::ensure!(
+            !params.iter().any(|(p, _)| p == k),
+            "{k} is both --param and --grid; a parameter is either fixed or swept, not both"
+        );
+    }
+    for (k, v) in params {
+        sweep = sweep.fix(k, v);
+    }
+    for (k, csv) in grids {
+        sweep = sweep.axis_csv(k, &csv);
+    }
+    let parallel = args.get_usize("parallel", 1)?;
+    if parallel > 1 && scenario.realtime() {
+        eprintln!(
+            "warning: {} measures real wall-clock behavior; --parallel {parallel} \
+             oversubscribes the host and distorts per-point measurements — \
+             use --parallel 1 for numbers you intend to compare",
+            scenario.name()
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let points = sweep.run(parallel);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let json_dest = args.get("json");
+    if json_dest != Some("-") {
+        let mut t = Table::new(
+            format!(
+                "sweep: {} — {} points, --parallel {}, {}",
+                scenario.name(),
+                points.len(),
+                parallel.max(1),
+                netbn::util::fmt::secs(wall_s)
+            ),
+            &["#", "point", "status", "scaling factor", "wall"],
+        );
+        for p in &points {
+            let param_str =
+                p.params.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ");
+            match &p.outcome {
+                Ok(o) => t.row(vec![
+                    p.index.to_string(),
+                    param_str,
+                    if o.passed() { "ok".into() } else { "CHECKS FAILED".into() },
+                    o.metric_value("scaling_factor")
+                        .map(|v| format!("{v:.3}"))
+                        .unwrap_or_else(|| "-".into()),
+                    netbn::util::fmt::secs(o.wall_s),
+                ]),
+                Err(e) => t.row(vec![
+                    p.index.to_string(),
+                    param_str,
+                    format!("error: {e}"),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        println!("{}", t.render());
+    }
+    if let Some(dest) = json_dest {
+        let json = sweep_json(scenario.name(), parallel, wall_s, &points);
+        if dest == "-" {
+            println!("{json}");
+        } else {
+            std::fs::write(dest, json)?;
+            println!("  -> {dest}");
+        }
+    }
+    Ok(points.iter().all(|p| p.outcome.as_ref().map(|o| o.passed()).unwrap_or(false)))
+}
+
+fn sweep_json(scenario: &str, parallel: usize, wall_s: f64, points: &[SweepPoint]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\"scenario\":{},\"parallel\":{},\"wall_s\":{},\"points\":[",
+        json_str(scenario),
+        parallel.max(1),
+        wall_s
+    );
+    for (i, p) in points.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        match &p.outcome {
+            Ok(o) => {
+                let _ = write!(s, "{{\"index\":{},\"ok\":true,\"outcome\":{}}}", p.index, o.to_json());
+            }
+            Err(e) => {
+                let _ = write!(
+                    s,
+                    "{{\"index\":{},\"ok\":false,\"error\":{}}}",
+                    p.index,
+                    json_str(&format!("{e:#}"))
+                );
+            }
+        }
+    }
+    s.push_str("]}");
+    s
+}
+
+/// `fig <n|all>` alias: route through the `fig<n>` scenarios; emission and
+/// CSV bytes are identical to the pre-engine path.
+fn cmd_fig(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
     let out = PathBuf::from(args.get_or("out", "out"));
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
@@ -148,104 +369,38 @@ fn cmd_fig(args: &Args) -> Result<bool> {
     };
     let mut all_ok = true;
     for id in ids {
-        let run = netbn::figures::run_figure(id)?;
-        all_ok &= run.emit(&out)?;
+        let scenario_name = format!("fig{id}");
+        let outcome = registry.get(&scenario_name)?.run(&[])?;
+        all_ok &= outcome.emit(Some(out.as_path()))?;
     }
     Ok(all_ok)
 }
 
-fn cmd_simulate(args: &Args) -> Result<bool> {
-    use netbn::models::timing::backward_trace;
-    use netbn::sim::{simulate, SimParams};
-    let model = parse_model(args)?;
-    let workers = args.get_usize("workers", 64)?;
-    let bw = args.get_f64("bandwidth", 100.0)?;
-    let transport = TransportKind::parse(args.get_or("transport", "full"))
-        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
-    let ratio = args.get_f64("compression", 1.0)?;
-    let trace = backward_trace(&model.profile());
-    let gpus = 8.min(workers.max(1));
-    let servers = (workers / gpus).max(1);
-    let mut p = match transport {
-        TransportKind::KernelTcp => SimParams::horovod_like(trace, servers, gpus, bw),
-        _ => SimParams::whatif(trace, servers, gpus, bw),
-    };
-    p.compression_ratio = ratio;
-    let r = simulate(&p);
-    let mut t = Table::new(
-        format!("what-if: {model}, {workers} workers, {bw} Gbps, {transport}, {ratio}x"),
-        &["metric", "value"],
-    );
-    t.row(vec!["t_batch".into(), netbn::util::fmt::secs(r.t_batch)]);
-    t.row(vec!["t_back".into(), netbn::util::fmt::secs(r.t_back)]);
-    t.row(vec!["t_sync".into(), netbn::util::fmt::secs(r.t_sync)]);
-    t.row(vec!["t_overhead".into(), netbn::util::fmt::secs(r.t_overhead)]);
-    t.row(vec!["scaling factor".into(), netbn::util::fmt::pct(r.scaling_factor)]);
-    t.row(vec!["buckets".into(), r.buckets.to_string()]);
-    t.row(vec!["wire bytes/worker".into(), netbn::util::fmt::bytes(r.wire_bytes_per_worker)]);
-    t.row(vec!["achieved rate".into(), format!("{:.2} Gbps", r.achieved_gbps)]);
-    println!("{}", t.render());
-    Ok(true)
+/// `simulate` / `emulate` / `validate` aliases: the option names map
+/// one-to-one onto scenario parameters.
+fn cmd_alias(registry: &ScenarioRegistry, scenario: &str, args: &Args) -> Result<bool> {
+    let outcome = registry.get(scenario)?.run(&overrides_from_options(args))?;
+    outcome.emit(None)
 }
 
-fn cmd_emulate(args: &Args) -> Result<bool> {
-    use netbn::trainer::{run_emulated, EmulatedRunConfig};
-    let model = parse_model(args)?;
-    let servers = args.get_usize("servers", 4)?;
-    let bw = args.get_f64("bandwidth", 25.0)?;
-    let steps = args.get_usize("steps", 5)?;
-    let payload_scale = args.get_f64("payload-scale", 256.0)?;
-    let transport = TransportKind::parse(args.get_or("transport", "full"))
-        .ok_or_else(|| anyhow::anyhow!("bad transport"))?;
-    let exp = ExperimentConfig {
-        model,
-        servers,
-        gpus_per_server: 1,
-        bandwidth_gbps: bw,
-        transport,
-        compression: Compression::None,
-        steps,
-        warmup_steps: 1,
-        ..Default::default()
-    };
-    let r = run_emulated(&EmulatedRunConfig { exp, payload_scale })?;
-    let mut t = Table::new(
-        format!("emulated: {model}, {servers} servers, {bw} Gbps, {transport}"),
-        &["metric", "value"],
-    );
-    t.row(vec!["step time".into(), netbn::util::fmt::secs(r.step_time_s)]);
-    t.row(vec!["throughput".into(), format!("{:.1} samples/s", r.throughput)]);
-    t.row(vec!["scaling factor".into(), netbn::util::fmt::pct(r.scaling_factor)]);
-    t.row(vec!["mean compute".into(), netbn::util::fmt::secs(r.mean_compute_s)]);
-    t.row(vec!["mean comm wait".into(), netbn::util::fmt::secs(r.mean_comm_wait_s)]);
-    t.row(vec!["network utilization".into(), netbn::util::fmt::pct(r.network_utilization)]);
-    t.row(vec!["buckets/step".into(), format!("{:.1}", r.buckets_per_step)]);
-    println!("{}", t.render());
-    Ok(true)
-}
-
-fn cmd_validate(args: &Args) -> Result<bool> {
-    let workers = args.get_usize("workers", 4)?;
-    let bws = args.get_f64_list("bandwidths", &[5.0, 25.0, 100.0])?;
-    let mut checks = Vec::new();
-    let mut t = Table::new(
-        "emulator vs simulator (full-utilization transport)",
-        &["model", "Gbps", "emulated sf", "simulated sf"],
-    );
-    for bw in bws {
-        let (e, s, check) = netbn::figures::validate_emulator_against_sim(
-            ModelId::ResNet50,
-            workers,
-            bw,
-            1024.0,
-        )?;
-        t.row(vec!["ResNet50".into(), format!("{bw}"), format!("{e:.3}"), format!("{s:.3}")]);
-        checks.push(check);
+/// `ablate` alias: run all four ablation scenarios for one model.
+fn cmd_ablate(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
+    let out = PathBuf::from(args.get_or("out", "out"));
+    let mut overrides = Vec::new();
+    if let Some(model) = args.get("model") {
+        overrides.push(("model".to_string(), model.to_string()));
     }
-    println!("{}", t.render());
-    let (text, ok) = netbn::report::render_checks(&checks);
-    println!("{text}");
-    Ok(ok)
+    let mut all_ok = true;
+    for name in
+        ["ablate-fusion-size", "ablate-fusion-timeout", "ablate-collectives", "ablate-bw-compression"]
+    {
+        let scenario = registry.get(name)?;
+        // `ablate-collectives` takes an extra bandwidth parameter the
+        // legacy command never exposed; defaults cover it.
+        let outcome = scenario.run(&overrides)?;
+        all_ok &= outcome.emit(Some(out.as_path()))?;
+    }
+    Ok(all_ok)
 }
 
 fn cmd_calibrate(args: &Args) -> Result<bool> {
@@ -304,17 +459,6 @@ fn cmd_train(args: &Args) -> Result<bool> {
     let last = result.loss_curve.last().copied().unwrap_or(0.0);
     println!("loss: {first:.4} -> {last:.4}");
     Ok(last < first)
-}
-
-fn cmd_ablate(args: &Args) -> Result<bool> {
-    let model = parse_model(args)?;
-    let out = PathBuf::from(args.get_or("out", "out"));
-    for fig in netbn::sim::ablation::all(model) {
-        println!("{}", fig.render());
-        let path = fig.write_csv(&out)?;
-        println!("  -> {}", path.display());
-    }
-    Ok(true)
 }
 
 fn cmd_info() -> Result<bool> {

@@ -196,6 +196,35 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// Minimal JSON encoding, mirroring [`Figure::to_json`]:
+    /// `{"title":..,"headers":[..],"rows":[[..]]}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(s, "{{\"title\":{},\"headers\":[", json_str(&self.title));
+        for (i, h) in self.headers.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&json_str(h));
+        }
+        s.push_str("],\"rows\":[");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('[');
+            for (j, cell) in row.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&json_str(cell));
+            }
+            s.push(']');
+        }
+        s.push_str("]}");
+        s
+    }
+
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -306,6 +335,16 @@ mod tests {
         let r = t.render();
         assert!(r.contains("T"));
         assert!(r.contains("bb"));
+    }
+
+    #[test]
+    fn table_json() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "x\"y".into()]);
+        assert_eq!(
+            t.to_json(),
+            "{\"title\":\"T\",\"headers\":[\"a\",\"b\"],\"rows\":[[\"1\",\"x\\\"y\"]]}"
+        );
     }
 
     #[test]

@@ -97,15 +97,9 @@ pub fn ablate_bw_compression_grid(model: ModelId) -> Figure {
     fig
 }
 
-/// All ablations for a model, ready to emit.
-pub fn all(model: ModelId) -> Vec<Figure> {
-    vec![
-        ablate_fusion_size(model),
-        ablate_fusion_timeout(model),
-        ablate_collective_cost(model, 100.0),
-        ablate_bw_compression_grid(model),
-    ]
-}
+// NOTE: the authoritative "all ablations" enumeration is the registry's
+// four `ablate-*` scenarios (engine::ScenarioRegistry::builtin) — there is
+// deliberately no `all()` helper here to drift from it.
 
 #[cfg(test)]
 mod tests {

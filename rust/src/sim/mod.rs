@@ -139,7 +139,9 @@ pub struct SimResult {
 /// Run the two-process simulation once.
 pub fn simulate(p: &SimParams) -> SimResult {
     assert!(p.servers >= 1 && p.gpus_per_server >= 1);
-    assert!(p.compression_ratio >= 1.0);
+    // Finite too: a directly-constructed degenerate codec (k = 0) would
+    // otherwise divide transit time by inf and silently report zero sync.
+    assert!(p.compression_ratio.is_finite() && p.compression_ratio >= 1.0);
     assert!(p.compute_inflation >= 1.0);
     assert!((0.0..1.0).contains(&p.comm_contention));
     let n = p.workers() as f64;

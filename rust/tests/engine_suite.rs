@@ -1,0 +1,253 @@
+//! Integration suite for the scenario engine: registry discovery and
+//! lookup errors, parameter-schema validation, cartesian sweep expansion,
+//! thread-pool speedup, JSON output, and the golden guarantee that the
+//! engine's figure path writes byte-identical CSVs to the pre-engine
+//! `fig <n>` path.
+
+use netbn::engine::{
+    Outcome, ParamKind, ParamSchema, ParamSpec, Scenario, ScenarioRegistry, SweepBuilder,
+};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("netbn_engine_suite_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn kv(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+#[test]
+fn registry_enumerates_all_entry_points() {
+    let r = ScenarioRegistry::builtin();
+    // ISSUE acceptance: >= 13 scenarios — 8 figures + simulate + emulate +
+    // validate + >= 2 ablation sweeps.
+    assert!(r.len() >= 13, "registry has only {} scenarios", r.len());
+    let names = r.names();
+    for expected in [
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate", "emulate",
+        "validate",
+    ] {
+        assert!(names.contains(&expected), "missing scenario {expected}");
+    }
+    let ablations = names.iter().filter(|n| n.starts_with("ablate-")).count();
+    assert!(ablations >= 2, "only {ablations} ablation scenarios");
+}
+
+#[test]
+fn unknown_scenario_error_is_helpful() {
+    let r = ScenarioRegistry::builtin();
+    let err = r.get("gif1").unwrap_err().to_string();
+    assert!(err.contains("gif1"), "{err}");
+    // The error must list registered names so the user can self-correct.
+    for name in ["fig1", "simulate", "emulate", "validate"] {
+        assert!(err.contains(name), "error does not list {name}: {err}");
+    }
+}
+
+#[test]
+fn bad_params_are_rejected_before_execution() {
+    let r = ScenarioRegistry::builtin();
+    let sim = r.get("simulate").unwrap();
+    // Unknown key → lists legal parameter names.
+    let err = sim.run(&kv(&[("wrokers", "8")])).unwrap_err().to_string();
+    assert!(err.contains("wrokers"), "{err}");
+    assert!(err.contains("workers"), "{err}");
+    // Bad values per kind.
+    for (k, v) in [
+        ("workers", "eight"),
+        // > 8 workers must decompose into whole 8-GPU servers; silently
+        // truncating to 8 while stamping workers=12 into the Outcome
+        // would mislabel structured output.
+        ("workers", "12"),
+        ("bandwidth", "0"),
+        ("bandwidth", "-10"),
+        ("model", "alexnet"),
+        ("transport", "pigeon"),
+        ("compression", "0.25"),
+        ("compression", "topk:0"),
+    ] {
+        assert!(sim.run(&kv(&[(k, v)])).is_err(), "{k}={v} should be rejected");
+    }
+    // Figure scenarios take no parameters at all.
+    let err = r.get("fig1").unwrap().run(&kv(&[("x", "1")])).unwrap_err().to_string();
+    assert!(err.contains("no parameters"), "{err}");
+}
+
+#[test]
+fn simulate_accepts_named_codecs_wherever_ratios_go() {
+    let r = ScenarioRegistry::builtin();
+    let sim = r.get("simulate").unwrap();
+    let sf = |compression: &str| {
+        sim.run(&kv(&[("compression", compression), ("bandwidth", "10")]))
+            .unwrap()
+            .metric_value("scaling_factor")
+            .unwrap()
+    };
+    // fp16 is exactly a 2x wire ratio; onebit exactly 32x.
+    assert_eq!(sf("fp16"), sf("2"));
+    assert_eq!(sf("onebit"), sf("32"));
+}
+
+#[test]
+fn sweep_expansion_counts_and_determinism() {
+    let r = ScenarioRegistry::builtin();
+    let sim = r.get("simulate").unwrap();
+    let sweep = SweepBuilder::new(sim)
+        .fix("model", "vgg16")
+        .axis_csv("bandwidth", "1,10,25,100")
+        .axis_csv("compression", "1,2,10");
+    assert_eq!(sweep.len(), 12);
+    let pts = sweep.points();
+    assert_eq!(pts.len(), 12);
+    assert_eq!(pts, sweep.points(), "expansion must be deterministic");
+    // Every point carries the fixed override.
+    for p in &pts {
+        assert!(p.iter().any(|(k, v)| k == "model" && v == "vgg16"));
+    }
+}
+
+#[test]
+fn sweep_runs_simulate_grid_with_outcomes_per_point() {
+    let r = ScenarioRegistry::builtin();
+    let sim = r.get("simulate").unwrap();
+    let results = SweepBuilder::new(sim)
+        .fix("model", "resnet50")
+        .axis_csv("bandwidth", "1,10,25,100")
+        .axis_csv("compression", "1,10")
+        .run(4);
+    assert_eq!(results.len(), 8);
+    let mut sfs = Vec::new();
+    for p in &results {
+        let out = p.outcome.as_ref().expect("simulate points never fail");
+        sfs.push(out.metric_value("scaling_factor").unwrap());
+    }
+    // Sanity on the physics: at equal compression, more bandwidth never
+    // hurts; points are in odometer order (bw varies slowest).
+    assert!(sfs[0] <= sfs[6] + 1e-9, "1 Gbps {} vs 100 Gbps {}", sfs[0], sfs[6]);
+}
+
+#[test]
+fn parallel_sweep_is_measurably_faster_than_serial() {
+    // A scenario whose runner sleeps: 8 points x 120 ms. Serial needs
+    // >= 960 ms; four workers need ~240 ms. Sleeps (not spins) overlap
+    // even on a single-core host, so the margin is wide and stable.
+    let mut r = ScenarioRegistry::new();
+    r.register(Scenario::from_fn(
+        "nap",
+        "sleeps per point",
+        ParamSchema::new(vec![ParamSpec::new("point", "", ParamKind::Int, "0")]),
+        "test",
+        |p| {
+            std::thread::sleep(Duration::from_millis(120));
+            let mut out = Outcome::new();
+            out.metric("point", p.get_usize("point")? as f64);
+            Ok(out)
+        },
+    ))
+    .unwrap();
+    let nap = r.get("nap").unwrap();
+    let grid = |n: usize| {
+        SweepBuilder::new(nap)
+            .axis("point", (0..8).map(|i| i.to_string()).collect())
+            .run(n)
+    };
+
+    let t0 = Instant::now();
+    let serial = grid(1);
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let parallel = grid(4);
+    let parallel_s = t1.elapsed().as_secs_f64();
+
+    assert_eq!(serial.len(), 8);
+    assert_eq!(parallel.len(), 8);
+    for (i, p) in parallel.iter().enumerate() {
+        let out = p.outcome.as_ref().unwrap();
+        assert_eq!(out.metric_value("point"), Some(i as f64), "results keep point order");
+    }
+    assert!(serial_s >= 0.9, "serial sweep should take ~0.96s, took {serial_s}");
+    assert!(
+        parallel_s < serial_s * 0.7,
+        "--parallel 4 not measurably faster: {parallel_s}s vs {serial_s}s serial"
+    );
+}
+
+#[test]
+fn golden_fig1_csv_byte_identical_to_pre_engine_path() {
+    // Pre-engine path: figures::run_figure + Figure::write_csv (exactly
+    // what the old `fig 1` command did).
+    let old_dir = tmp_dir("old");
+    let run = netbn::figures::run_figure("1").unwrap();
+    for f in &run.figures {
+        f.write_csv(&old_dir).unwrap();
+    }
+    // Engine path: registry lookup + scenario run + Outcome CSVs.
+    let new_dir = tmp_dir("new");
+    let outcome = ScenarioRegistry::builtin().get("fig1").unwrap().run(&[]).unwrap();
+    let new_paths = outcome.write_csvs(&new_dir).unwrap();
+    assert_eq!(new_paths.len(), 1);
+
+    let old_bytes = std::fs::read(old_dir.join("fig1.csv")).unwrap();
+    let new_bytes = std::fs::read(new_dir.join("fig1.csv")).unwrap();
+    assert!(!old_bytes.is_empty());
+    assert_eq!(old_bytes, new_bytes, "engine fig1 CSV must be byte-identical");
+}
+
+#[test]
+fn outcome_json_is_machine_readable() {
+    let outcome = ScenarioRegistry::builtin()
+        .get("simulate")
+        .unwrap()
+        .run(&kv(&[("workers", "16")]))
+        .unwrap();
+    let j = outcome.to_json();
+    for needle in [
+        "\"scenario\":\"simulate\"",
+        "\"mode\":\"simulate\"",
+        "\"params\":{",
+        "\"workers\":\"16\"",
+        "\"metrics\":{",
+        "\"scaling_factor\":",
+        "\"wall_s\":",
+    ] {
+        assert!(j.contains(needle), "missing {needle} in {j}");
+    }
+    // Balanced braces/brackets — cheap structural sanity without a parser.
+    assert_eq!(j.matches('{').count(), j.matches('}').count());
+    assert_eq!(j.matches('[').count(), j.matches(']').count());
+}
+
+#[test]
+fn custom_scenario_registration_is_additive() {
+    // The ENGINE.md worked example, as a test: registering a scenario
+    // requires no dispatch changes anywhere.
+    let mut r = ScenarioRegistry::builtin();
+    let before = r.len();
+    r.register(Scenario::from_fn(
+        "wire-time",
+        "pure analytic wire time at one point",
+        ParamSchema::new(vec![
+            ParamSpec::new("model", "model id", ParamKind::Model, "resnet50"),
+            ParamSpec::new("bandwidth", "Gbps", ParamKind::PositiveFloat, "100"),
+        ]),
+        "analytic",
+        |p| {
+            let model = p.get_model("model")?;
+            let bw = p.get_f64("bandwidth")?;
+            let bytes = model.profile().total_bytes() as f64;
+            let mut out = Outcome::new();
+            out.metric("wire_s", bytes / netbn::gbps_to_bytes_per_sec(bw));
+            Ok(out)
+        },
+    ))
+    .unwrap();
+    assert_eq!(r.len(), before + 1);
+    let out = r.get("wire-time").unwrap().run(&[]).unwrap();
+    // §4: ResNet50 at 100 Gbps ≈ 7.8 ms.
+    let wire_ms = out.metric_value("wire_s").unwrap() * 1e3;
+    assert!((wire_ms - 7.8).abs() < 0.8, "{wire_ms} ms");
+}

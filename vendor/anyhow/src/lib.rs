@@ -1,0 +1,263 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the API subset `netbn` uses:
+//!
+//! * [`Error`] — a message + cause chain (`Display` prints the top message,
+//!   `{:#}` prints the whole chain, `Debug` prints an anyhow-style
+//!   "Caused by" listing);
+//! * [`Result<T>`] with the `E = Error` default;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (literal, formatted
+//!   and expression forms);
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//!   for any `Result` whose error converts into [`Error`] — which covers
+//!   both `std` errors and `Error` itself.
+//!
+//! Anything not listed here is intentionally absent; add it only when a
+//! caller needs it.
+
+use std::fmt;
+
+/// Error: a human-readable message plus an optional cause chain.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error` — that is what allows the blanket
+/// `From<E: std::error::Error>` conversion to coexist with `From<Error>`
+/// (the identity conversion used by `?`).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn wrap<M: fmt::Display>(self, msg: M) -> Error {
+        Error { msg: msg.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out.into_iter()
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+
+    #[doc(hidden)]
+    pub fn from_any<E: Into<Error>>(e: E) -> Error {
+        e.into()
+    }
+
+    fn from_msgs(msgs: Vec<String>) -> Error {
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error { msg: it.next().unwrap_or_default(), source: None };
+        for m in it {
+            err = Error { msg: m, source: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error::from_msgs(msgs)
+    }
+}
+
+/// `anyhow::Result`: plain `Result` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to any
+/// `Result` whose error converts into [`Error`].
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message literal, a format string, or an
+/// expression convertible into [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_any($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return ::std::result::Result::Err($crate::anyhow!($msg))
+    };
+    ($err:expr $(,)?) => {
+        return ::std::result::Result::Err($crate::anyhow!($err))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($err));
+        }
+    };
+    ($cond:expr, $fmt:literal, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($fmt, $($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_wraps_both_std_and_anyhow_errors() {
+        let e = fails_io().context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let base: Result<()> = Err(anyhow!("base"));
+        let e = base.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: base");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let x = 3;
+        assert_eq!(anyhow!("literal").to_string(), "literal");
+        assert_eq!(anyhow!("x = {x}").to_string(), "x = 3");
+        assert_eq!(anyhow!("x = {}", x + 1).to_string(), "x = 4");
+        assert_eq!(anyhow!(Error::msg("passthrough")).to_string(), "passthrough");
+
+        fn bails(n: i32) -> Result<()> {
+            ensure!(n < 10, "too big: {n}");
+            if n < 0 {
+                bail!("negative");
+            }
+            ensure!(n != 5);
+            Ok(())
+        }
+        assert!(bails(3).is_ok());
+        assert_eq!(bails(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(bails(-1).unwrap_err().to_string(), "negative");
+        assert!(bails(5).unwrap_err().to_string().contains("n != 5"));
+    }
+}
