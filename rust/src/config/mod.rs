@@ -16,31 +16,44 @@ pub enum TransportKind {
     FullUtilization,
     /// Mechanistic kernel-TCP model calibrated to the paper's Fig 4
     /// utilization measurements — reproduces Horovod's "measured" series.
+    /// `single` is an accepted alias: this *is* the single-stream path.
     KernelTcp,
     /// Real TCP sockets between local worker threads, shaped by a token
     /// bucket to the provisioned rate (the emulation path).
     Tcp,
+    /// Multi-stream striped transport: kernel-TCP-class software
+    /// pipelines × `streams` parallel connections (the §2.4 repair; see
+    /// [`crate::net::striped`]).
+    Striped { streams: usize },
 }
 
 impl TransportKind {
+    /// Accepted spellings: `full`/`ideal`, `kernel-tcp`/`horovod`/
+    /// `single`, `tcp`, `striped` (8 streams) or `striped:<n>`.
     pub fn parse(s: &str) -> Option<TransportKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "full" | "full-utilization" | "ideal" => Some(TransportKind::FullUtilization),
-            "kernel-tcp" | "kernel_tcp" | "horovod" => Some(TransportKind::KernelTcp),
-            "tcp" | "emulated" => Some(TransportKind::Tcp),
-            _ => None,
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "full" | "full-utilization" | "ideal" => return Some(TransportKind::FullUtilization),
+            "kernel-tcp" | "kernel_tcp" | "horovod" | "single" => {
+                return Some(TransportKind::KernelTcp)
+            }
+            "tcp" | "emulated" => return Some(TransportKind::Tcp),
+            "striped" => return Some(TransportKind::Striped { streams: 8 }),
+            _ => {}
         }
+        let n: usize = lower.strip_prefix("striped:")?.parse().ok()?;
+        (1..=256).contains(&n).then_some(TransportKind::Striped { streams: n })
     }
 }
 
 impl fmt::Display for TransportKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            TransportKind::FullUtilization => "full-utilization",
-            TransportKind::KernelTcp => "kernel-tcp",
-            TransportKind::Tcp => "tcp",
-        };
-        f.write_str(s)
+        match self {
+            TransportKind::FullUtilization => f.write_str("full-utilization"),
+            TransportKind::KernelTcp => f.write_str("kernel-tcp"),
+            TransportKind::Tcp => f.write_str("tcp"),
+            TransportKind::Striped { streams } => write!(f, "striped:{streams}"),
+        }
     }
 }
 
@@ -119,6 +132,23 @@ impl Compression {
     /// `"none"`. This is the one entry point every ratio-accepting flag
     /// and parameter goes through, so named codecs work anywhere a ratio
     /// does; the derived wire ratio must be >= 1.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use netbn::config::Compression;
+    ///
+    /// // A plain ratio divides wire bytes directly.
+    /// assert_eq!(Compression::parse("4").unwrap().ratio(), 4.0);
+    /// // Named codecs resolve through their nominal wire ratio.
+    /// assert_eq!(Compression::parse("fp16").unwrap().ratio(), 2.0);
+    /// // top-k ships (value, index) pairs: keeping 1% costs ~1/50th.
+    /// let topk = Compression::parse("topk:0.01").unwrap();
+    /// assert!((topk.ratio() - 50.0).abs() < 1e-9);
+    /// // Degenerate specs are rejected at parse time, never clamped.
+    /// assert!(Compression::parse("topk:0").is_err());
+    /// assert!(Compression::parse("0.5").is_err());
+    /// ```
     pub fn parse(s: &str) -> crate::Result<Compression> {
         let t = s.trim();
         if t.is_empty() || t.eq_ignore_ascii_case("none") {
@@ -228,6 +258,11 @@ impl ExperimentConfig {
         if self.fusion.timeout_s < 0.0 {
             errs.push("fusion.timeout_s must be >= 0".into());
         }
+        if let TransportKind::Striped { streams } = self.transport {
+            if !(1..=256).contains(&streams) {
+                errs.push("striped transport streams must be in 1..=256".into());
+            }
+        }
         let ratio = self.compression.ratio();
         if !ratio.is_finite() || ratio < 1.0 {
             errs.push("compression ratio must be finite and >= 1".into());
@@ -277,6 +312,22 @@ mod tests {
         assert_eq!(TransportKind::parse("ideal"), Some(TransportKind::FullUtilization));
         assert_eq!(TransportKind::parse("horovod"), Some(TransportKind::KernelTcp));
         assert_eq!(TransportKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn transport_parse_striped_and_single() {
+        // `single` is the kernel-TCP path by another name; `striped:N`
+        // is the repaired multi-connection transport.
+        assert_eq!(TransportKind::parse("single"), Some(TransportKind::KernelTcp));
+        assert_eq!(TransportKind::parse("striped"), Some(TransportKind::Striped { streams: 8 }));
+        assert_eq!(
+            TransportKind::parse("striped:16"),
+            Some(TransportKind::Striped { streams: 16 })
+        );
+        assert_eq!(TransportKind::parse("striped:0"), None);
+        assert_eq!(TransportKind::parse("striped:1000"), None);
+        assert_eq!(TransportKind::parse("striped:x"), None);
+        assert_eq!(TransportKind::Striped { streams: 4 }.to_string(), "striped:4");
     }
 
     #[test]

@@ -131,7 +131,7 @@ fn parse_value(s: &str) -> Result<Value> {
 /// gpus_per_server = 8
 /// batch_per_worker = 32
 /// bandwidth_gbps = 100.0
-/// transport = "kernel-tcp"   # full | kernel-tcp | tcp
+/// transport = "kernel-tcp"   # full | kernel-tcp | tcp | single | striped:N
 /// collective = "ring"        # ring | tree | ps
 /// steps = 30
 /// warmup_steps = 5

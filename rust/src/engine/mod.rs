@@ -16,7 +16,10 @@
 //!   the pre-engine paths) and JSON;
 //! * [`ScenarioRegistry`] — the catalogue behind `netbn list` / `netbn
 //!   run <scenario>`; [`ScenarioRegistry::builtin`] registers all 8 paper
-//!   figures, simulate, emulate, validate and the four ablation sweeps;
+//!   figures, simulate, emulate, validate, the four ablation sweeps and
+//!   the four transport scenarios (`transport_ablation`,
+//!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`);
+//!   `netbn list --markdown` renders it as `docs/SCENARIOS.md`;
 //! * [`SweepBuilder`] — cartesian grids over any scenario's parameters,
 //!   executed serially or on a thread pool (`netbn sweep ... --parallel N`).
 //!
@@ -28,6 +31,7 @@ pub mod outcome;
 pub mod params;
 pub mod registry;
 pub mod runner;
+pub(crate) mod scenarios_transport;
 pub mod sweep;
 
 pub use outcome::Outcome;

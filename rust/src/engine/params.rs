@@ -5,6 +5,22 @@
 //! (`--param k=v`) are validated against the schema *before* the runner
 //! executes, so runners only ever see well-formed values and `netbn run`
 //! can reject typos with an error that lists the legal parameters.
+//!
+//! ```
+//! use netbn::engine::{ParamKind, ParamSchema, ParamSpec};
+//!
+//! let schema = ParamSchema::new(vec![
+//!     ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "25"),
+//! ]);
+//! // Defaults merge with overrides into a fully validated set.
+//! let vals = schema
+//!     .resolve(&[("bandwidth".to_string(), "100".to_string())])
+//!     .unwrap();
+//! assert_eq!(vals.get_f64("bandwidth").unwrap(), 100.0);
+//! // Typos and ill-typed values are rejected before any runner executes.
+//! assert!(schema.resolve(&[("bandwdith".to_string(), "1".to_string())]).is_err());
+//! assert!(schema.resolve(&[("bandwidth".to_string(), "-5".to_string())]).is_err());
+//! ```
 
 use crate::config::{Compression, TransportKind};
 use crate::models::ModelId;
@@ -25,7 +41,7 @@ pub enum ParamKind {
     Str,
     /// A [`ModelId`] name (`resnet50 | resnet101 | vgg16 | transformer`).
     Model,
-    /// A [`TransportKind`] name (`full | kernel-tcp | tcp`).
+    /// A [`TransportKind`] name (`full | kernel-tcp | tcp | single | striped:N`).
     Transport,
     /// A [`Compression`] spec: ratio >= 1 or codec name.
     Compression,
@@ -33,6 +49,24 @@ pub enum ParamKind {
     FloatList,
     /// One of a fixed set of strings.
     Choice(&'static [&'static str]),
+}
+
+impl ParamKind {
+    /// Short human/markdown label for the catalog (`netbn list
+    /// --markdown`, docs/SCENARIOS.md).
+    pub fn label(&self) -> String {
+        match self {
+            ParamKind::Int => "int".into(),
+            ParamKind::Float => "float".into(),
+            ParamKind::PositiveFloat => "float > 0".into(),
+            ParamKind::Str => "string".into(),
+            ParamKind::Model => "model".into(),
+            ParamKind::Transport => "transport".into(),
+            ParamKind::Compression => "compression".into(),
+            ParamKind::FloatList => "float list".into(),
+            ParamKind::Choice(choices) => choices.join("\\|"),
+        }
+    }
 }
 
 /// One declared parameter.
@@ -82,7 +116,10 @@ impl ParamSpec {
             }
             ParamKind::Transport => {
                 TransportKind::parse(v).ok_or_else(|| {
-                    anyhow!("parameter {name}: unknown transport {v:?} (full|kernel-tcp|tcp)")
+                    anyhow!(
+                        "parameter {name}: unknown transport {v:?} \
+                         (full|kernel-tcp|tcp|single|striped:N)"
+                    )
                 })?;
             }
             ParamKind::Compression => {

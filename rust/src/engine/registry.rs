@@ -114,7 +114,9 @@ impl ScenarioRegistry {
     }
 
     /// All built-in scenarios: the 8 paper figures, the three execution
-    /// modes (simulate / emulate / validate) and the four ablation sweeps.
+    /// modes (simulate / emulate / validate), the four ablation sweeps
+    /// and the four transport scenarios (`transport_ablation`,
+    /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -143,7 +145,7 @@ impl ScenarioRegistry {
                 ParamSpec::new("model", "resnet50|resnet101|vgg16|transformer", ParamKind::Model, "resnet50"),
                 ParamSpec::new("workers", "GPUs in the all-reduce", ParamKind::Int, "64"),
                 ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "100"),
-                ParamSpec::new("transport", "full|kernel-tcp", ParamKind::Transport, "full"),
+                ParamSpec::new("transport", "full|kernel-tcp|striped:N", ParamKind::Transport, "full"),
                 ParamSpec::new("compression", "wire ratio or codec (fp16, topk:0.01, ...)", ParamKind::Compression, "1"),
             ]),
             Box::new(SimulateRunner),
@@ -156,7 +158,7 @@ impl ScenarioRegistry {
                 ParamSpec::new("model", "resnet50|resnet101|vgg16", ParamKind::Model, "resnet50"),
                 ParamSpec::new("servers", "server count (1 worker each)", ParamKind::Int, "4"),
                 ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "25"),
-                ParamSpec::new("transport", "full|kernel-tcp", ParamKind::Transport, "full"),
+                ParamSpec::new("transport", "full|kernel-tcp|striped:N", ParamKind::Transport, "full"),
                 ParamSpec::new("steps", "measured steps", ParamKind::Int, "5"),
                 ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "256"),
                 ParamSpec::new("compression", "wire ratio or codec", ParamKind::Compression, "1"),
@@ -208,6 +210,7 @@ impl ScenarioRegistry {
             Box::new(AblateRunner { kind: AblateKind::BwCompression }),
         ))
         .expect("builtin registration");
+        super::scenarios_transport::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -239,6 +242,55 @@ impl ScenarioRegistry {
         self.scenarios.iter()
     }
 
+    /// Render the catalogue as Markdown — the generator behind
+    /// `netbn list --markdown` and `docs/SCENARIOS.md` (CI regenerates
+    /// the file and fails on drift, so the catalog can never go stale).
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# Scenario catalog\n\n");
+        s.push_str(
+            "<!-- GENERATED FILE - do not edit by hand. Regenerate with:\n     \
+             netbn list --markdown > docs/SCENARIOS.md -->\n\n",
+        );
+        s.push_str(&format!(
+            "{} scenarios are registered. Run one with `netbn run <name> [--param k=v ...]`; \
+             sweep a grid with `netbn sweep <name> --grid k=v1,v2,... [--parallel N]`. \
+             See ENGINE.md for the engine API.\n\n",
+            self.len()
+        ));
+        // Pipes inside help/default strings would split table cells.
+        let esc = |s: &str| s.replace('|', "\\|");
+        s.push_str("| scenario | mode | description |\n|---|---|---|\n");
+        for sc in self.iter() {
+            s.push_str(&format!(
+                "| [`{}`](#{}) | {} | {} |\n",
+                sc.name(),
+                sc.name(),
+                sc.mode(),
+                esc(sc.about())
+            ));
+        }
+        for sc in self.iter() {
+            s.push_str(&format!("\n## {}\n\n{}\n\n", sc.name(), sc.about()));
+            let specs = sc.schema().specs();
+            if specs.is_empty() {
+                s.push_str("No parameters.\n");
+            } else {
+                s.push_str("| parameter | type | default | description |\n|---|---|---|---|\n");
+                for p in specs {
+                    s.push_str(&format!(
+                        "| `{}` | {} | `{}` | {} |\n",
+                        p.name,
+                        p.kind.label(),
+                        esc(p.default),
+                        esc(p.help)
+                    ));
+                }
+            }
+        }
+        s
+    }
+
     pub fn len(&self) -> usize {
         self.scenarios.len()
     }
@@ -261,13 +313,60 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 13, "only {} scenarios", r.len());
+        assert!(r.len() >= 19, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
-            "ablate-collectives", "ablate-bw-compression",
+            "ablate-collectives", "ablate-bw-compression", "transport_ablation",
+            "chunk_size_sweep", "fig4_recovered", "utilization_frontier",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn markdown_catalog_is_complete() {
+        let r = ScenarioRegistry::builtin();
+        let md = r.markdown();
+        assert!(md.starts_with("# Scenario catalog"));
+        assert!(md.contains("GENERATED FILE"));
+        for sc in r.iter() {
+            assert!(md.contains(&format!("\n## {}\n", sc.name())), "missing section {}", sc.name());
+            for p in sc.schema().specs() {
+                assert!(
+                    md.contains(&format!("| `{}` |", p.name)),
+                    "{}: missing parameter row {}",
+                    sc.name(),
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn docs_scenarios_md_tracks_registry() {
+        // docs/SCENARIOS.md is generated output; CI regenerates it via
+        // `netbn list --markdown` and diffs byte-for-byte. This test is
+        // the offline structural guard: registering a scenario (or a
+        // parameter) without regenerating the doc fails here too.
+        let on_disk = include_str!("../../../docs/SCENARIOS.md");
+        assert!(on_disk.contains("GENERATED FILE"), "docs/SCENARIOS.md lost its generated header");
+        let r = ScenarioRegistry::builtin();
+        for sc in r.iter() {
+            assert!(
+                on_disk.contains(&format!("\n## {}\n", sc.name())),
+                "docs/SCENARIOS.md is stale: missing {} (regenerate with `netbn list --markdown`)",
+                sc.name()
+            );
+            for p in sc.schema().specs() {
+                assert!(
+                    on_disk.contains(&format!("| `{}` |", p.name)),
+                    "docs/SCENARIOS.md is stale: {} lost parameter {} \
+                     (regenerate with `netbn list --markdown`)",
+                    sc.name(),
+                    p.name
+                );
+            }
         }
     }
 

@@ -87,6 +87,9 @@ impl Runner for SimulateRunner {
         let servers = workers / gpus;
         let mut sp = match transport {
             TransportKind::KernelTcp => SimParams::horovod_like(trace, servers, gpus, bw),
+            TransportKind::Striped { streams } => {
+                SimParams::striped_like(trace, servers, gpus, bw, streams)
+            }
             _ => SimParams::whatif(trace, servers, gpus, bw),
         };
         sp.compression_ratio = ratio;
@@ -295,6 +298,20 @@ mod tests {
             SimulateRunner.run(&p).unwrap().metric_value("scaling_factor").unwrap()
         };
         assert_eq!(run("fp16"), run("2"));
+    }
+
+    #[test]
+    fn simulate_runner_striped_beats_single_stream() {
+        let run = |transport: &str| {
+            let p = simulate_schema()
+                .resolve(&[("transport".to_string(), transport.to_string())])
+                .unwrap();
+            SimulateRunner.run(&p).unwrap().metric_value("scaling_factor").unwrap()
+        };
+        // Same point, repaired transport: scaling factor climbs.
+        assert!(run("striped:8") > run("kernel-tcp") + 0.05);
+        // `single` is the kernel-TCP path by another name.
+        assert_eq!(run("single"), run("kernel-tcp"));
     }
 
     #[test]

@@ -20,7 +20,10 @@ fn app() -> App {
             CmdSpec {
                 name: "list",
                 about: "enumerate every registered scenario",
-                opts: vec![],
+                opts: vec![OptSpec::flag(
+                    "markdown",
+                    "render the catalog as Markdown (the docs/SCENARIOS.md generator)",
+                )],
                 positional: vec![],
             },
             CmdSpec {
@@ -144,7 +147,7 @@ fn run(argv: &[String]) -> Result<bool> {
             Ok(true)
         }
         Parsed::Command(name, args) => match name.as_str() {
-            "list" => cmd_list(&registry),
+            "list" => cmd_list(&registry, &args),
             "run" => cmd_run(&registry, &args),
             "sweep" => cmd_sweep(&registry, &args),
             "fig" => cmd_fig(&registry, &args),
@@ -179,7 +182,13 @@ fn ensure_unique_keys(flag: &str, pairs: &[(String, String)]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list(registry: &ScenarioRegistry) -> Result<bool> {
+fn cmd_list(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
+    if args.has_flag("markdown") {
+        // Pure generated output: `netbn list --markdown > docs/SCENARIOS.md`.
+        // CI regenerates the file and fails on drift.
+        print!("{}", registry.markdown());
+        return Ok(true);
+    }
     let mut t = Table::new(
         format!("registered scenarios ({})", registry.len()),
         &["name", "mode", "parameters (defaults)", "description"],

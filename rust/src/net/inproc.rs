@@ -11,7 +11,7 @@ use std::sync::Arc;
 struct Shared {
     mailboxes: Vec<Mailbox>,
     /// Optional egress shaping (None = infinitely fast fabric).
-    shaper: Option<Shaper>,
+    shaper: Option<Arc<Shaper>>,
 }
 
 /// In-process fabric over `n` workers.
@@ -25,8 +25,10 @@ impl InProcFabric {
         Self::with_shaper(n, None)
     }
 
-    /// Fabric whose sends pass through `shaper` (the NIC model).
-    pub fn with_shaper(n: usize, shaper: Option<Shaper>) -> InProcFabric {
+    /// Fabric whose sends pass through `shaper` (the NIC model). The
+    /// shaper is shared — multiple fabric lanes of one striped transport
+    /// drain the same per-server token buckets.
+    pub fn with_shaper(n: usize, shaper: Option<Arc<Shaper>>) -> InProcFabric {
         assert!(n >= 1);
         let mailboxes = (0..n).map(|_| Mailbox::default()).collect();
         InProcFabric { shared: Arc::new(Shared { mailboxes, shaper }) }
@@ -69,7 +71,7 @@ impl Endpoint for InProcEndpoint {
 
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
         anyhow::ensure!(from.0 < self.world(), "recv from out-of-range worker {from}");
-        Ok(self.shared.mailboxes[self.me.0].take(from.0, tag))
+        self.shared.mailboxes[self.me.0].take(from.0, tag)
     }
 }
 

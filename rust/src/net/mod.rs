@@ -8,6 +8,12 @@
 //!   matching, in two implementations: [`inproc`] (lock+condvar mailboxes,
 //!   for tests and fast emulation) and [`tcp`] (real loopback sockets —
 //!   actual kernel TCP on the path, for the e2e example).
+//! * [`transport`] — the [`transport::Transport`] strategy layer: how a
+//!   logical message traverses the fabric — legacy single-stream or
+//!   striped across N parallel connections.
+//! * [`striped`] — the multi-stream striped transport (chunk pipelining +
+//!   credit flow control) and its analytic effective-bandwidth model: the
+//!   repair for the software bottleneck the paper diagnoses.
 //! * [`shaper`] — a token-bucket NIC model that throttles each server's
 //!   egress to the provisioned rate (1–100 Gbps, optionally time-scaled).
 //! * [`kernel_tcp`] — the mechanistic model of a kernel-TCP/Horovod-class
@@ -20,7 +26,9 @@ pub mod inproc;
 pub mod kernel_tcp;
 pub mod metrics;
 pub mod shaper;
+pub mod striped;
 pub mod tcp;
+pub mod transport;
 
 use crate::topology::WorkerId;
 use crate::Result;
@@ -65,35 +73,62 @@ pub trait Fabric {
 }
 
 /// Tag-matched mailbox shared by the fabric implementations:
-/// `(from, tag) -> FIFO of payloads`, blocking `take`.
+/// `(from, tag) -> FIFO of payloads`, blocking `take`. A mailbox can be
+/// **poisoned** (e.g. by a TCP reader that hit a truncated frame):
+/// already-delivered messages still drain, but a `take` that would block
+/// fails instead of hanging the collective forever.
 pub(crate) struct Mailbox {
-    queues: std::sync::Mutex<std::collections::HashMap<(usize, u64), std::collections::VecDeque<Vec<u8>>>>,
+    state: std::sync::Mutex<MailboxState>,
     cv: std::sync::Condvar,
+}
+
+struct MailboxState {
+    queues: std::collections::HashMap<(usize, u64), std::collections::VecDeque<Vec<u8>>>,
+    poison: Option<String>,
 }
 
 impl Default for Mailbox {
     fn default() -> Self {
-        Mailbox { queues: std::sync::Mutex::new(std::collections::HashMap::new()), cv: std::sync::Condvar::new() }
+        Mailbox {
+            state: std::sync::Mutex::new(MailboxState {
+                queues: std::collections::HashMap::new(),
+                poison: None,
+            }),
+            cv: std::sync::Condvar::new(),
+        }
     }
 }
 
 impl Mailbox {
     pub(crate) fn put(&self, from: usize, tag: u64, payload: Vec<u8>) {
-        let mut q = self.queues.lock().unwrap();
-        q.entry((from, tag)).or_default().push_back(payload);
+        let mut st = self.state.lock().unwrap();
+        st.queues.entry((from, tag)).or_default().push_back(payload);
         self.cv.notify_all();
     }
 
-    pub(crate) fn take(&self, from: usize, tag: u64) -> Vec<u8> {
-        let mut q = self.queues.lock().unwrap();
+    pub(crate) fn take(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(dq) = q.get_mut(&(from, tag)) {
+            if let Some(dq) = st.queues.get_mut(&(from, tag)) {
                 if let Some(p) = dq.pop_front() {
-                    return p;
+                    return Ok(p);
                 }
             }
-            q = self.cv.wait(q).unwrap();
+            if let Some(why) = &st.poison {
+                anyhow::bail!("mailbox poisoned: {why}");
+            }
+            st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// Mark the mailbox broken and wake every blocked `take`. The first
+    /// cause wins; queued messages remain consumable.
+    pub(crate) fn poison(&self, why: impl Into<String>) {
+        let mut st = self.state.lock().unwrap();
+        if st.poison.is_none() {
+            st.poison = Some(why.into());
+        }
+        self.cv.notify_all();
     }
 }
 
@@ -120,5 +155,27 @@ mod tests {
         // steps beyond 2^24 reuse tag space — documented behavior; just
         // check masking is what we think it is.
         assert_eq!(tag(1, 0x0100_0000, 0), tag(1, 0, 0));
+    }
+
+    #[test]
+    fn poisoned_mailbox_drains_then_fails() {
+        let mb = Mailbox::default();
+        mb.put(0, 1, b"ok".to_vec());
+        mb.poison("truncated frame");
+        // Messages delivered before the poison still drain...
+        assert_eq!(mb.take(0, 1).unwrap(), b"ok");
+        // ...but a take that would block fails instead of hanging.
+        let err = mb.take(0, 1).unwrap_err().to_string();
+        assert!(err.contains("truncated frame"), "{err}");
+    }
+
+    #[test]
+    fn poison_wakes_blocked_takers() {
+        let mb = std::sync::Arc::new(Mailbox::default());
+        let mb2 = std::sync::Arc::clone(&mb);
+        let t = std::thread::spawn(move || mb2.take(3, 9));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mb.poison("reader died");
+        assert!(t.join().unwrap().is_err());
     }
 }

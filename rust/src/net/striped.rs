@@ -1,0 +1,756 @@
+//! Multi-stream **striped** transport — the paper's §2.4 bottleneck,
+//! repaired.
+//!
+//! The paper's root cause: a kernel-TCP/Horovod-class transport is a
+//! *single* effective software pipeline that tops out near 32 Gbps of a
+//! 100 Gbps NIC. The known network-level fix (Sun et al., "ImageNet/
+//! AlexNet in 1.5 Minutes") is to stripe every large tensor across N
+//! parallel connections so N pipelines drain the same NIC. This module
+//! implements both sides of that argument:
+//!
+//! * **Mechanistic** — [`StripedTransport`] /
+//!   [`StripedEndpoint`](struct@StripedEndpoint): a real striping layer
+//!   over any [`Endpoint`] fabric (in-proc or TCP). Each logical message
+//!   is split into `streams` contiguous stripes, each stripe is pipelined
+//!   as fixed-size chunks on its own lane (= its own connection and
+//!   mailbox), and a credit window bounds the bytes in flight per lane.
+//!   Collectives run on it unchanged: it *is* an `Endpoint`.
+//! * **Analytic** — [`StripedModel`]: the [`KernelTcpModel`]-style
+//!   effective-bandwidth model of the same design, so the §3 simulator
+//!   and the emulator stay apples-to-apples (`fig4_recovered`,
+//!   `transport_ablation`, `chunk_size_sweep` scenarios).
+//!
+//! Wire protocol (per logical message, both ends derive the identical
+//! layout from the total length and the shared [`StripeConfig`]):
+//!
+//! ```text
+//! lane 0, frame 0: [total_len u64 LE][first chunk of stripe 0]
+//! lane 0, rest:    raw chunks of stripe 0
+//! lane l >= 1:     raw chunks of stripe l
+//! credits:         empty frames receiver -> sender, same tag with the
+//!                  high kind bit set (collective kinds stay < 0x80)
+//! ```
+//!
+//! Messages no larger than one chunk (and every message when
+//! `streams == 1`) travel fused on lane 0 as `[total_len][payload]`.
+//! Senders never block the caller: `send` validates, copies the stripes
+//! and enqueues them to per-lane sender threads (this is what keeps a
+//! symmetric ring — everyone sending before anyone receives — free of
+//! credit deadlock). A lane sender that fails records the fault; later
+//! `send`/`recv` calls on the endpoint report it.
+//!
+//! **Known limitation**: lane failures are reported per lane. If lanes
+//! fail *asymmetrically* mid-message (one lane's mailbox poisons while
+//! siblings saw clean closes), `recv` surfaces the failed lane's error
+//! only after its scoped sibling receivers return — siblings blocked on
+//! chunks that will never arrive keep the call pending. Single-fabric
+//! failure domains (loopback TCP, in-proc) poison whole-process-wise, so
+//! this arises only with genuinely independent per-lane links.
+//!
+//! **Ordering contract** (narrower than the raw fabrics): once a message
+//! is large enough to stripe past the credit window, the receiver must
+//! consume a peer's messages in send order — a stalled striped message
+//! holds its lane's FIFO queue, so receiving a *later* tag first would
+//! deadlock on credits. Fused (single-chunk) messages never wait for
+//! credits and stay fully order-free across tags. Every collective in
+//! [`crate::collectives`] consumes per-peer traffic in send order, so
+//! they all run unchanged on either transport.
+
+use super::Endpoint;
+use crate::collectives::split_points;
+use crate::net::kernel_tcp::KernelTcpModel;
+use crate::topology::WorkerId;
+use crate::Result;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Credits reuse the data tag with this kind bit set; collective tag kinds
+/// ([`crate::net::tags`]) stay below 0x80, so the spaces never collide.
+const CREDIT_KIND_BIT: u64 = 0x80 << 56;
+
+fn credit_tag(tag: u64) -> u64 {
+    tag | CREDIT_KIND_BIT
+}
+
+/// Striping knobs shared (and independently derived) by both endpoints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeConfig {
+    /// Parallel connections per peer pair.
+    pub streams: usize,
+    /// Fixed pipelining unit within one stripe.
+    pub chunk_bytes: usize,
+    /// Chunks in flight per lane before the sender waits for a credit.
+    pub credit_window: usize,
+}
+
+impl Default for StripeConfig {
+    fn default() -> Self {
+        StripeConfig { streams: 8, chunk_bytes: 256 << 10, credit_window: 4 }
+    }
+}
+
+impl StripeConfig {
+    /// Default chunking/credits with an explicit stream count.
+    pub fn with_streams(streams: usize) -> StripeConfig {
+        StripeConfig { streams, ..Default::default() }
+    }
+
+    /// Reject configurations the wire protocol cannot carry.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.streams >= 1, "stripe streams must be >= 1");
+        anyhow::ensure!(self.streams <= 256, "stripe streams capped at 256, got {}", self.streams);
+        anyhow::ensure!(
+            self.chunk_bytes >= self.streams,
+            "chunk_bytes ({}) must be >= streams ({}) so no stripe is ever empty",
+            self.chunk_bytes,
+            self.streams
+        );
+        anyhow::ensure!(self.credit_window >= 1, "credit window must be >= 1");
+        Ok(())
+    }
+
+    /// Rescale the chunk size for a payload-scaled emulation (see
+    /// [`crate::trainer`]) so the pipelining *shape* survives the byte
+    /// shrink. Any positive scale is accepted (schemas only guarantee
+    /// `payload-scale > 0`); floors keep chunks meaningful and stripes
+    /// non-empty.
+    pub fn scaled(&self, payload_scale: f64) -> StripeConfig {
+        assert!(payload_scale > 0.0 && payload_scale.is_finite());
+        let chunk = ((self.chunk_bytes as f64 / payload_scale) as usize)
+            .max(4096)
+            .max(self.streams);
+        StripeConfig { chunk_bytes: chunk, ..*self }
+    }
+}
+
+/// Per-lane egress pacing: the mechanistic stand-in for the kernel-TCP
+/// *per-pipeline* software ceiling (each stream is one pipeline; N
+/// streams escape it N-fold until the NIC shaper binds).
+struct RateGate {
+    rate_bytes_per_sec: f64,
+    next_free: Mutex<Instant>,
+}
+
+impl RateGate {
+    fn new(rate_bytes_per_sec: f64) -> RateGate {
+        assert!(rate_bytes_per_sec > 0.0);
+        RateGate { rate_bytes_per_sec, next_free: Mutex::new(Instant::now()) }
+    }
+
+    fn admit(&self, bytes: usize) {
+        let serialization = Duration::from_secs_f64(bytes as f64 / self.rate_bytes_per_sec);
+        let wake = {
+            let mut nf = self.next_free.lock().unwrap();
+            let now = Instant::now();
+            let begin = if *nf > now { *nf } else { now };
+            *nf = begin + serialization;
+            *nf
+        };
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+    }
+}
+
+/// One enqueued stripe: `prefix` is the logical-message length carried by
+/// lane 0's first frame.
+struct SendJob {
+    to: WorkerId,
+    tag: u64,
+    prefix: Option<u64>,
+    data: Vec<u8>,
+}
+
+/// The striped transport strategy (see module docs). Implements
+/// [`crate::net::transport::Transport`]; bind it over `streams` fabric
+/// lanes with [`crate::net::transport::TransportFabric`].
+pub struct StripedTransport {
+    cfg: StripeConfig,
+    per_stream_rate_bytes_per_sec: Option<f64>,
+}
+
+impl StripedTransport {
+    pub fn new(cfg: StripeConfig) -> StripedTransport {
+        StripedTransport { cfg, per_stream_rate_bytes_per_sec: None }
+    }
+
+    /// Cap each stream's egress at `rate_bytes_per_sec` — the mechanistic
+    /// counterpart of the kernel-TCP software ceiling, *per pipeline*.
+    /// With 1 stream this reproduces the broken single-stream transport;
+    /// with N it recovers up to N× until the NIC shaper binds.
+    pub fn with_stream_ceiling(cfg: StripeConfig, rate_bytes_per_sec: f64) -> StripedTransport {
+        StripedTransport { cfg, per_stream_rate_bytes_per_sec: Some(rate_bytes_per_sec) }
+    }
+
+    pub fn config(&self) -> StripeConfig {
+        self.cfg
+    }
+}
+
+impl crate::net::transport::Transport for StripedTransport {
+    fn name(&self) -> String {
+        format!("striped:{}", self.cfg.streams)
+    }
+
+    fn lanes(&self) -> usize {
+        self.cfg.streams
+    }
+
+    fn bind(&self, lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<dyn Endpoint>> {
+        self.cfg.validate()?;
+        anyhow::ensure!(
+            lanes.len() == self.cfg.streams,
+            "striped transport binds {} lanes, got {}",
+            self.cfg.streams,
+            lanes.len()
+        );
+        let me = lanes[0].me();
+        let world = lanes[0].world();
+        for (i, l) in lanes.iter().enumerate() {
+            anyhow::ensure!(
+                l.me() == me && l.world() == world,
+                "stripe lane {i} disagrees on identity ({} of {} vs {me} of {world})",
+                l.me(),
+                l.world()
+            );
+        }
+        let fault: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let mut tx = Vec::with_capacity(lanes.len());
+        for (i, lane) in lanes.iter().enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<SendJob>();
+            let ep = Arc::clone(lane);
+            let gate = self.per_stream_rate_bytes_per_sec.map(RateGate::new);
+            let cfg = self.cfg;
+            let fault = Arc::clone(&fault);
+            std::thread::spawn(move || lane_sender(i, job_rx, ep, gate, cfg, fault));
+            tx.push(Mutex::new(job_tx));
+        }
+        Ok(Arc::new(StripedEndpoint { me, world, lanes, cfg: self.cfg, tx, fault }))
+    }
+}
+
+/// Per-lane sender thread: drains jobs FIFO, paces through the optional
+/// stream gate, honors the credit window. Exits when the endpoint drops.
+fn lane_sender(
+    lane: usize,
+    rx: mpsc::Receiver<SendJob>,
+    ep: Arc<dyn Endpoint>,
+    gate: Option<RateGate>,
+    cfg: StripeConfig,
+    fault: Arc<Mutex<Option<String>>>,
+) {
+    while let Ok(job) = rx.recv() {
+        if let Err(e) = send_job(ep.as_ref(), gate.as_ref(), &cfg, &job) {
+            let why = format!("lane {lane} sender to {}: {e:#}", job.to);
+            crate::log_error!("net::striped", "{why}");
+            let mut f = fault.lock().unwrap();
+            if f.is_none() {
+                *f = Some(why);
+            }
+            return;
+        }
+    }
+}
+
+fn send_job(ep: &dyn Endpoint, gate: Option<&RateGate>, cfg: &StripeConfig, job: &SendJob) -> Result<()> {
+    if job.data.is_empty() && job.prefix.is_none() {
+        return Ok(());
+    }
+    let ct = credit_tag(job.tag);
+    let chunk = cfg.chunk_bytes;
+    let mut sent = 0usize;
+    let mut off = 0usize;
+    loop {
+        let end = (off + chunk).min(job.data.len());
+        if sent >= cfg.credit_window {
+            // Wait for the receiver to free a slot in the window.
+            ep.recv(job.to, ct)?;
+        }
+        if off == 0 && job.prefix.is_some() {
+            let mut frame = Vec::with_capacity(8 + end);
+            frame.extend_from_slice(&job.prefix.unwrap().to_le_bytes());
+            frame.extend_from_slice(&job.data[..end]);
+            if let Some(g) = gate {
+                g.admit(frame.len());
+            }
+            ep.send(job.to, job.tag, &frame)?;
+        } else {
+            if let Some(g) = gate {
+                g.admit(end - off);
+            }
+            ep.send(job.to, job.tag, &job.data[off..end])?;
+        }
+        sent += 1;
+        off = end;
+        if off >= job.data.len() {
+            return Ok(());
+        }
+    }
+}
+
+/// The endpoint collectives see: `send` stripes and enqueues, `recv`
+/// reassembles (spawning one scoped thread per extra lane).
+pub struct StripedEndpoint {
+    me: WorkerId,
+    world: usize,
+    lanes: Vec<Arc<dyn Endpoint>>,
+    cfg: StripeConfig,
+    tx: Vec<Mutex<mpsc::Sender<SendJob>>>,
+    fault: Arc<Mutex<Option<String>>>,
+}
+
+impl StripedEndpoint {
+    fn check_fault(&self) -> Result<()> {
+        if let Some(why) = self.fault.lock().unwrap().clone() {
+            anyhow::bail!("striped transport fault: {why}");
+        }
+        Ok(())
+    }
+
+    fn enqueue(&self, lane: usize, job: SendJob) -> Result<()> {
+        self.tx[lane]
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("stripe lane {lane} sender thread is gone"))
+    }
+
+    fn recv_stripe(
+        &self,
+        lane: usize,
+        from: WorkerId,
+        tag: u64,
+        out: &mut [u8],
+        lead_first: Option<&[u8]>,
+    ) -> Result<()> {
+        let ep = self.lanes[lane].as_ref();
+        let ct = credit_tag(tag);
+        let chunk = self.cfg.chunk_bytes;
+        let window = self.cfg.credit_window;
+        let n_chunks = out.len().div_ceil(chunk).max(1);
+        let mut off = 0usize;
+        let mut k = 0usize;
+        if let Some(first) = lead_first {
+            let want = chunk.min(out.len());
+            anyhow::ensure!(
+                first.len() == 8 + want,
+                "striped lead frame on lane {lane}: {} bytes, want {}",
+                first.len(),
+                8 + want
+            );
+            out[..want].copy_from_slice(&first[8..]);
+            off = want;
+            if k + window < n_chunks {
+                ep.send(from, ct, &[])?;
+            }
+            k = 1;
+        }
+        while off < out.len() {
+            let want = chunk.min(out.len() - off);
+            let data = ep.recv(from, tag)?;
+            anyhow::ensure!(
+                data.len() == want,
+                "striped chunk {k}/{n_chunks} on lane {lane}: {} bytes, want {want}",
+                data.len()
+            );
+            out[off..off + want].copy_from_slice(&data);
+            off += want;
+            if k + window < n_chunks {
+                ep.send(from, ct, &[])?;
+            }
+            k += 1;
+        }
+        Ok(())
+    }
+}
+
+impl Endpoint for StripedEndpoint {
+    fn me(&self) -> WorkerId {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, to: WorkerId, tag: u64, payload: &[u8]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world, "send to out-of-range worker {to}");
+        anyhow::ensure!(
+            tag & CREDIT_KIND_BIT == 0,
+            "tag kind bit 0x80 is reserved for stripe credits"
+        );
+        self.check_fault()?;
+        let total = payload.len();
+        if self.cfg.streams == 1 || total <= self.cfg.chunk_bytes {
+            return self.enqueue(
+                0,
+                SendJob { to, tag, prefix: Some(total as u64), data: payload.to_vec() },
+            );
+        }
+        // `split_points` is shared with the receive path (and the ring
+        // collective): both ends MUST derive the identical stripe layout.
+        for (lane, r) in split_points(total, self.cfg.streams).iter().enumerate() {
+            let prefix = (lane == 0).then_some(total as u64);
+            self.enqueue(lane, SendJob { to, tag, prefix, data: payload[r.clone()].to_vec() })?;
+        }
+        Ok(())
+    }
+
+    fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
+        anyhow::ensure!(
+            tag & CREDIT_KIND_BIT == 0,
+            "tag kind bit 0x80 is reserved for stripe credits"
+        );
+        self.check_fault()?;
+        let first = self.lanes[0].recv(from, tag)?;
+        anyhow::ensure!(
+            first.len() >= 8,
+            "striped frame missing length prefix ({} bytes)",
+            first.len()
+        );
+        let total = u64::from_le_bytes(first[..8].try_into().unwrap()) as usize;
+        if self.cfg.streams == 1 || total <= self.cfg.chunk_bytes {
+            anyhow::ensure!(
+                first.len() == 8 + total,
+                "fused striped frame: {} bytes, want {}",
+                first.len(),
+                8 + total
+            );
+            return Ok(first[8..].to_vec());
+        }
+        let stripes = split_points(total, self.cfg.streams);
+        let mut buf = vec![0u8; total];
+        let mut slices = Vec::with_capacity(stripes.len());
+        let mut rest = buf.as_mut_slice();
+        for r in &stripes {
+            let (head, tail) = rest.split_at_mut(r.len());
+            slices.push(head);
+            rest = tail;
+        }
+        let mut iter = slices.into_iter();
+        let lead = iter.next().expect("streams >= 1");
+        std::thread::scope(|sc| -> Result<()> {
+            let mut handles = Vec::new();
+            for (i, slice) in iter.enumerate() {
+                let lane = i + 1;
+                handles.push(sc.spawn(move || self.recv_stripe(lane, from, tag, slice, None)));
+            }
+            let lead_res = self.recv_stripe(0, from, tag, lead, Some(&first));
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("stripe receiver panicked"))??;
+            }
+            lead_res
+        })?;
+        Ok(buf)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic model
+// ---------------------------------------------------------------------------
+
+/// Effective-bandwidth model of the striped transport, mirroring
+/// [`KernelTcpModel`] so the §3 simulator can swap transports and stay
+/// comparable with the emulator.
+///
+/// Each stream is one kernel-TCP software pipeline; `n` streams raise the
+/// aggregate software ceiling to `n·C·(1 − loss·(n−1))` (stripe
+/// coordination and scheduler interference eat a little of each extra
+/// stream), composed with the provisioned rate by the same power-mean as
+/// the single-stream model. Chunk granularity enters through
+/// [`StripedModel::transfer_time_chunked`]: tiny chunks pay per-chunk
+/// software cost, huge chunks lose the store-and-forward overlap.
+#[derive(Clone, Copy, Debug)]
+pub struct StripedModel {
+    /// The single-pipeline software model each stream runs on.
+    pub per_stream: KernelTcpModel,
+    pub streams: usize,
+    /// Fractional aggregate-ceiling loss per extra stream.
+    pub coord_loss_per_stream: f64,
+    /// Fixed per-message stripe setup (scatter/gather bookkeeping).
+    pub setup_overhead_s: f64,
+    /// Per-chunk software cost on each stream's pipeline.
+    pub per_chunk_overhead_s: f64,
+    /// Fraction of the final chunk's serialization that cannot overlap
+    /// with delivery (store-and-forward tail at the receiver).
+    pub delivery_tail_frac: f64,
+    /// Default chunk size for [`StripedModel::transfer_time_s`].
+    pub chunk_bytes: f64,
+}
+
+impl StripedModel {
+    /// Calibrated default with `n` streams; `with_streams(1)` coincides
+    /// with the single-stream [`KernelTcpModel::default`] ceiling.
+    pub fn with_streams(n: usize) -> StripedModel {
+        StripedModel {
+            per_stream: KernelTcpModel::default(),
+            streams: n.max(1),
+            coord_loss_per_stream: 0.004,
+            setup_overhead_s: 20e-6,
+            per_chunk_overhead_s: 10e-6,
+            delivery_tail_frac: 0.5,
+            chunk_bytes: (256 << 10) as f64,
+        }
+    }
+
+    /// Aggregate software ceiling across all streams, Gbps.
+    pub fn aggregate_ceiling_gbps(&self) -> f64 {
+        let n = self.streams as f64;
+        let efficiency = (1.0 - self.coord_loss_per_stream * (n - 1.0)).max(0.25);
+        self.per_stream.ceiling_gbps * n * efficiency
+    }
+
+    /// Effective achievable throughput (Gbps) at a provisioned rate —
+    /// same power-mean composition as [`KernelTcpModel::effective_gbps`].
+    pub fn effective_gbps(&self, provisioned_gbps: f64) -> f64 {
+        assert!(provisioned_gbps > 0.0);
+        let p = self.per_stream.knee;
+        let c = self.aggregate_ceiling_gbps();
+        (provisioned_gbps.powf(-p) + c.powf(-p)).powf(-1.0 / p)
+    }
+
+    /// Utilization of the provisioned bandwidth (Fig 4's y-axis).
+    pub fn utilization(&self, provisioned_gbps: f64) -> f64 {
+        self.effective_gbps(provisioned_gbps) / provisioned_gbps
+    }
+
+    /// Time to move `bytes` once at the default chunk size.
+    pub fn transfer_time_s(&self, bytes: f64, provisioned_gbps: f64) -> f64 {
+        self.transfer_time_chunked(bytes, provisioned_gbps, self.chunk_bytes)
+    }
+
+    /// Time to move `bytes` once with an explicit chunk size (the
+    /// `chunk_size_sweep` scenario's x-axis).
+    pub fn transfer_time_chunked(&self, bytes: f64, provisioned_gbps: f64, chunk_bytes: f64) -> f64 {
+        assert!(chunk_bytes > 0.0 && bytes >= 0.0);
+        let n = self.streams as f64;
+        let rate = crate::gbps_to_bytes_per_sec(self.effective_gbps(provisioned_gbps));
+        let stripe = bytes / n;
+        let n_chunks = (stripe / chunk_bytes).ceil().max(1.0);
+        let stream_rate = rate / n;
+        let tail = self.delivery_tail_frac * stripe.min(chunk_bytes) / stream_rate;
+        self.setup_overhead_s
+            + self.per_stream.per_msg_overhead_s
+            + bytes / rate
+            + n_chunks * self.per_chunk_overhead_s
+            + tail
+    }
+
+    /// Effective one-shot throughput (Gbps) for a message of `bytes` at a
+    /// given chunk size.
+    pub fn effective_throughput_gbps(&self, bytes: f64, provisioned_gbps: f64, chunk_bytes: f64) -> f64 {
+        crate::bytes_per_sec_to_gbps(bytes / self.transfer_time_chunked(bytes, provisioned_gbps, chunk_bytes))
+    }
+
+    /// Collapse to the [`KernelTcpModel`] interface the simulator
+    /// consumes — this is what keeps simulator and emulator
+    /// apples-to-apples on the striped path.
+    pub fn to_kernel_model(&self) -> KernelTcpModel {
+        KernelTcpModel {
+            ceiling_gbps: self.aggregate_ceiling_gbps(),
+            knee: self.per_stream.knee,
+            per_msg_overhead_s: self.per_stream.per_msg_overhead_s + self.setup_overhead_s,
+            cpu_frac_per_gbps: self.per_stream.cpu_frac_per_gbps,
+            cpu_frac_base: self.per_stream.cpu_frac_base
+                * (1.0 + 0.05 * (self.streams as f64 - 1.0)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::{Transport, TransportFabric};
+    use std::sync::Arc;
+
+    fn striped_pair(cfg: StripeConfig) -> Vec<Arc<dyn Endpoint>> {
+        let t = StripedTransport::new(cfg);
+        TransportFabric::inproc(2, &t, None).unwrap().endpoints()
+    }
+
+    #[test]
+    fn small_message_fused_round_trip() {
+        let eps = striped_pair(StripeConfig::with_streams(4));
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = std::thread::spawn(move || b.recv(WorkerId(0), 7).unwrap());
+        a.send(WorkerId(1), 7, b"small").unwrap();
+        assert_eq!(t.join().unwrap(), b"small");
+    }
+
+    #[test]
+    fn empty_message_round_trip() {
+        let eps = striped_pair(StripeConfig::with_streams(3));
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = std::thread::spawn(move || b.recv(WorkerId(0), 1).unwrap());
+        a.send(WorkerId(1), 1, &[]).unwrap();
+        assert_eq!(t.join().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn large_message_striped_round_trip() {
+        // 1 MB across 4 streams with 32 KB chunks: 8 chunks per stripe,
+        // more than the credit window — exercises the credit path.
+        let cfg = StripeConfig { streams: 4, chunk_bytes: 32 << 10, credit_window: 2 };
+        let eps = striped_pair(cfg);
+        let payload: Vec<u8> = (0..1_000_003u32).map(|i| (i % 251) as u8).collect();
+        let want = payload.clone();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = std::thread::spawn(move || b.recv(WorkerId(0), 9).unwrap());
+        a.send(WorkerId(1), 9, &payload).unwrap();
+        assert_eq!(t.join().unwrap(), want);
+    }
+
+    #[test]
+    fn mixed_sizes_in_send_order() {
+        // A multi-chunk message followed by a fused one on the same peer
+        // pair, consumed in send order (the contract collectives follow).
+        let cfg = StripeConfig { streams: 2, chunk_bytes: 1 << 10, credit_window: 2 };
+        let eps = striped_pair(cfg);
+        let big: Vec<u8> = vec![0xAB; 10_000];
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let want = big.clone();
+        let t = std::thread::spawn(move || {
+            let big = b.recv(WorkerId(0), 1).unwrap();
+            let small = b.recv(WorkerId(0), 2).unwrap();
+            (big, small)
+        });
+        a.send(WorkerId(1), 1, &big).unwrap();
+        a.send(WorkerId(1), 2, b"tiny").unwrap();
+        let (got_big, small) = t.join().unwrap();
+        assert_eq!(small, b"tiny");
+        assert_eq!(got_big, want);
+    }
+
+    #[test]
+    fn fused_messages_allow_out_of_order_tags() {
+        // Single-chunk (fused) messages never wait for credits, so tag
+        // matching stays fully order-free for them — the inproc/tcp
+        // contract small control traffic (barriers) relies on.
+        let eps = striped_pair(StripeConfig::with_streams(4));
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        a.send(WorkerId(1), 1, b"first").unwrap();
+        a.send(WorkerId(1), 2, b"second").unwrap();
+        assert_eq!(b.recv(WorkerId(0), 2).unwrap(), b"second");
+        assert_eq!(b.recv(WorkerId(0), 1).unwrap(), b"first");
+    }
+
+    #[test]
+    fn symmetric_exchange_does_not_deadlock() {
+        // Both sides send a multi-window message before either receives —
+        // the ring pattern. Async lane senders make this safe.
+        let cfg = StripeConfig { streams: 2, chunk_bytes: 1 << 10, credit_window: 1 };
+        let eps = striped_pair(cfg);
+        let payload = vec![7u8; 50_000];
+        let mut handles = Vec::new();
+        for (i, ep) in eps.into_iter().enumerate() {
+            let p = payload.clone();
+            handles.push(std::thread::spawn(move || {
+                let peer = WorkerId(1 - i);
+                ep.send(peer, 5, &p).unwrap();
+                ep.recv(peer, 5).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn reserved_credit_bit_rejected() {
+        let eps = striped_pair(StripeConfig::with_streams(2));
+        assert!(eps[0].send(WorkerId(1), CREDIT_KIND_BIT | 3, b"x").is_err());
+    }
+
+    #[test]
+    fn stream_ceiling_paces_single_stream() {
+        // 1 stream gated at 1 MB/s: 100 KB takes >= ~80 ms.
+        let cfg = StripeConfig { streams: 1, chunk_bytes: 16 << 10, credit_window: 4 };
+        let t = StripedTransport::with_stream_ceiling(cfg, 1e6);
+        let eps = TransportFabric::inproc(2, &t, None).unwrap().endpoints();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let h = std::thread::spawn(move || b.recv(WorkerId(0), 1).unwrap());
+        let t0 = Instant::now();
+        a.send(WorkerId(1), 1, &vec![0u8; 100_000]).unwrap();
+        h.join().unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.08);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(StripeConfig::with_streams(0).validate().is_err());
+        assert!(StripeConfig { streams: 8, chunk_bytes: 4, credit_window: 1 }.validate().is_err());
+        assert!(StripeConfig { streams: 8, chunk_bytes: 1 << 20, credit_window: 0 }
+            .validate()
+            .is_err());
+        assert!(StripeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn scaled_config_keeps_floors() {
+        let c = StripeConfig::default().scaled(1024.0);
+        assert!(c.chunk_bytes >= 4096);
+        assert_eq!(c.streams, 8);
+    }
+
+    // ---- analytic model ----
+
+    #[test]
+    fn one_stream_matches_kernel_tcp_ceiling() {
+        let striped = StripedModel::with_streams(1);
+        let single = KernelTcpModel::default();
+        for bw in [1.0, 10.0, 100.0] {
+            let d = (striped.effective_gbps(bw) - single.effective_gbps(bw)).abs();
+            assert!(d < 1e-9, "bw={bw}: {d}");
+        }
+    }
+
+    #[test]
+    fn striped8_recovers_2x_at_100g() {
+        // The PR's acceptance criterion, at the model level.
+        let striped = StripedModel::with_streams(8);
+        let single = KernelTcpModel::default();
+        let speedup = striped.effective_gbps(100.0) / single.effective_gbps(100.0);
+        assert!(speedup >= 2.0, "speedup {speedup}");
+        assert!(striped.utilization(100.0) > 0.85, "{}", striped.utilization(100.0));
+    }
+
+    #[test]
+    fn effective_monotone_in_streams() {
+        let mut last = 0.0;
+        for n in [1usize, 2, 4, 8, 16] {
+            let e = StripedModel::with_streams(n).effective_gbps(100.0);
+            assert!(e >= last, "n={n}: {e} < {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn full_utilization_at_low_speed() {
+        let m = StripedModel::with_streams(8);
+        assert!(m.utilization(1.0) > 0.99);
+        assert!(m.utilization(10.0) > 0.99);
+    }
+
+    #[test]
+    fn chunk_sweep_has_interior_optimum() {
+        // Tiny chunks pay per-chunk overhead; huge chunks lose overlap.
+        let m = StripedModel::with_streams(8);
+        let bytes = 64e6;
+        let tp = |chunk: f64| m.effective_throughput_gbps(bytes, 100.0, chunk);
+        let tiny = tp(16.0 * 1024.0);
+        let best = tp(512.0 * 1024.0);
+        let huge = tp(16.0 * 1024.0 * 1024.0);
+        assert!(best > tiny, "best {best} vs tiny {tiny}");
+        assert!(best > huge, "best {best} vs huge {huge}");
+    }
+
+    #[test]
+    fn to_kernel_model_preserves_ceiling() {
+        let m = StripedModel::with_streams(8);
+        let k = m.to_kernel_model();
+        assert_eq!(k.ceiling_gbps, m.aggregate_ceiling_gbps());
+        assert!(k.per_msg_overhead_s > m.per_stream.per_msg_overhead_s);
+    }
+}

@@ -1,7 +1,9 @@
 //! Real-socket fabric: every worker owns a loopback `TcpListener`; peers
 //! connect lazily on first send. Frames are `[from u64][tag u64][len u64]
 //! [payload]`. One reader thread per accepted connection dispatches into
-//! the shared tag-matched [`Mailbox`].
+//! the shared tag-matched [`Mailbox`]. A reader that hits a truncated or
+//! garbage frame logs the cause and **poisons** its mailbox, so a broken
+//! connection fails the collective with an error instead of hanging it.
 //!
 //! This is the emulation path where actual kernel TCP sits on the
 //! communication phase — the same stack the paper measured (Horovod/NCCL
@@ -94,22 +96,63 @@ fn accept_loop(owner: usize, listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
+/// Largest frame a reader will accept — a generous multiple of the
+/// largest legitimate message (a full uncompressed VGG16 gradient is
+/// ~527 MB). A corrupt or hostile header beyond this poisons the mailbox
+/// instead of attempting a multi-GiB allocation that would abort the
+/// process.
+const MAX_FRAME_BYTES: usize = 1 << 30; // 1 GiB
+
 fn reader_loop(owner: usize, mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_nodelay(true);
-    let mut header = [0u8; 24];
     loop {
-        if stream.read_exact(&mut header).is_err() {
-            return; // peer closed
+        match read_frame(&mut stream, shared.addrs.len()) {
+            Ok(Some((from, tag, payload))) => shared.mailboxes[owner].put(from, tag, payload),
+            Ok(None) => return, // clean close at a frame boundary
+            Err(e) => {
+                // A truncated or garbage frame means bytes are gone for
+                // good: poison the mailbox so blocked recvs fail loudly
+                // instead of hanging the collective.
+                crate::log_error!(
+                    "net::tcp",
+                    "worker {owner}: frame decode failed: {e:#}; poisoning mailbox"
+                );
+                shared.mailboxes[owner].poison(format!("worker {owner} reader: {e:#}"));
+                return;
+            }
         }
-        let from = u64::from_le_bytes(header[0..8].try_into().unwrap()) as usize;
-        let tag = u64::from_le_bytes(header[8..16].try_into().unwrap());
-        let len = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
-        let mut payload = vec![0u8; len];
-        if stream.read_exact(&mut payload).is_err() {
-            return;
-        }
-        shared.mailboxes[owner].put(from, tag, payload);
     }
+}
+
+/// Read one `[from][tag][len][payload]` frame. `Ok(None)` means the peer
+/// closed cleanly *between* frames; a mid-frame EOF, an oversized length,
+/// or an out-of-range sender is a decode error.
+fn read_frame(stream: &mut TcpStream, world: usize) -> Result<Option<(usize, u64, Vec<u8>)>> {
+    let mut header = [0u8; 24];
+    let mut got = 0usize;
+    while got < header.len() {
+        match stream.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("connection closed mid-header after {got}/24 bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // Even at a frame boundary, an I/O error (vs a clean FIN) can
+            // mean a reset that discarded frames the kernel had already
+            // buffered — poison rather than risk a silent gap. Streams
+            // here are unidirectional, so healthy teardown always FINs.
+            Err(e) => anyhow::bail!("read failed after {got}/24 header bytes: {e}"),
+        }
+    }
+    let from = u64::from_le_bytes(header[0..8].try_into().unwrap()) as usize;
+    let tag = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let len = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    anyhow::ensure!(from < world, "frame claims sender {from} in a world of {world}");
+    anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame length {len} exceeds {MAX_FRAME_BYTES}");
+    let mut payload = vec![0u8; len];
+    stream
+        .read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("connection closed mid-payload ({len} bytes expected): {e}"))?;
+    Ok(Some((from, tag, payload)))
 }
 
 impl Fabric for TcpFabric {
@@ -175,7 +218,7 @@ impl Endpoint for TcpEndpoint {
 
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
         anyhow::ensure!(from.0 < self.world(), "recv from out-of-range worker {from}");
-        Ok(self.shared.mailboxes[self.me.0].take(from.0, tag))
+        self.shared.mailboxes[self.me.0].take(from.0, tag)
     }
 }
 
@@ -256,5 +299,54 @@ mod tests {
         let mut fab = TcpFabric::new(3, None).unwrap();
         fab.shutdown();
         fab.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn truncated_frame_poisons_recv_instead_of_hanging() {
+        let fab = TcpFabric::new(2, None).unwrap();
+        let eps = fab.endpoints();
+        // Raw connection to worker 0's listener: write a header promising
+        // 1000 bytes, deliver only 10, then close mid-payload.
+        let mut raw = TcpStream::connect(fab.shared.addrs[0]).unwrap();
+        let mut header = [0u8; 24];
+        header[0..8].copy_from_slice(&1u64.to_le_bytes()); // from worker 1
+        header[8..16].copy_from_slice(&42u64.to_le_bytes()); // tag
+        header[16..24].copy_from_slice(&1000u64.to_le_bytes()); // len
+        raw.write_all(&header).unwrap();
+        raw.write_all(&[0u8; 10]).unwrap();
+        drop(raw);
+        let err = eps[0].recv(WorkerId(1), 42).unwrap_err().to_string();
+        assert!(err.contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn garbage_length_poisons_recv() {
+        let fab = TcpFabric::new(2, None).unwrap();
+        let eps = fab.endpoints();
+        let mut raw = TcpStream::connect(fab.shared.addrs[0]).unwrap();
+        let mut header = [0u8; 24];
+        header[0..8].copy_from_slice(&1u64.to_le_bytes());
+        header[8..16].copy_from_slice(&7u64.to_le_bytes());
+        header[16..24].copy_from_slice(&u64::MAX.to_le_bytes()); // absurd len
+        raw.write_all(&header).unwrap();
+        let err = eps[0].recv(WorkerId(1), 7).unwrap_err().to_string();
+        assert!(err.contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn clean_close_between_frames_does_not_poison() {
+        let fab = TcpFabric::new(2, None).unwrap();
+        let eps = fab.endpoints();
+        // A full frame followed by a clean close: the frame is delivered
+        // and nothing is poisoned.
+        let mut raw = TcpStream::connect(fab.shared.addrs[0]).unwrap();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&1u64.to_le_bytes());
+        frame.extend_from_slice(&5u64.to_le_bytes());
+        frame.extend_from_slice(&3u64.to_le_bytes());
+        frame.extend_from_slice(b"abc");
+        raw.write_all(&frame).unwrap();
+        drop(raw);
+        assert_eq!(eps[0].recv(WorkerId(1), 5).unwrap(), b"abc");
     }
 }

@@ -1,0 +1,190 @@
+//! The transport layer: *how* a logical message traverses a fabric.
+//!
+//! A [`Transport`] is a strategy that binds one worker's per-lane
+//! [`Endpoint`]s (one lane = one independent fabric instance, i.e. one
+//! connection per peer pair) into the single endpoint the collectives
+//! use. Two strategies exist:
+//!
+//! * [`SingleStream`] — the legacy path: one lane, passed through
+//!   untouched. This is the kernel-TCP-class transport the paper measures.
+//! * [`crate::net::striped::StripedTransport`] — stripes each large
+//!   message across N lanes with chunk pipelining and credit flow
+//!   control: the repair that recovers the provisioned bandwidth.
+//!
+//! [`TransportFabric`] assembles the lanes: it builds `lanes()` inner
+//! fabrics (in-proc or TCP — anything implementing [`Fabric`]) and binds
+//! them per worker, so every collective runs on either path via the
+//! `--transport single|striped:N` config knob ([`for_kind`]).
+
+use super::{Endpoint, Fabric};
+use crate::config::TransportKind;
+use crate::net::inproc::InProcFabric;
+use crate::net::shaper::Shaper;
+use crate::net::striped::{StripeConfig, StripedTransport};
+use crate::net::tcp::TcpFabric;
+use crate::Result;
+use std::sync::Arc;
+
+/// A message-transport strategy over one or more fabric lanes.
+pub trait Transport: Send + Sync {
+    /// Human-readable name (`single`, `striped:8`).
+    fn name(&self) -> String;
+
+    /// Independent fabric lanes (connections per peer pair) required.
+    fn lanes(&self) -> usize;
+
+    /// Bind one worker's per-lane endpoints into the endpoint the
+    /// collectives use. `lanes.len() == self.lanes()`, all for the same
+    /// worker.
+    fn bind(&self, lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<dyn Endpoint>>;
+}
+
+/// The legacy single-stream path: one lane, passed through untouched.
+pub struct SingleStream;
+
+impl Transport for SingleStream {
+    fn name(&self) -> String {
+        "single".into()
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn bind(&self, mut lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<dyn Endpoint>> {
+        anyhow::ensure!(
+            lanes.len() == 1,
+            "single-stream transport binds exactly one lane, got {}",
+            lanes.len()
+        );
+        Ok(lanes.pop().expect("one lane"))
+    }
+}
+
+/// A fabric whose messages traverse a [`Transport`]: `lanes()` inner
+/// fabrics, one bound endpoint per worker. The inner fabrics are kept
+/// alive (and shut down) with the `TransportFabric`.
+pub struct TransportFabric {
+    _inner: Vec<Box<dyn Fabric>>,
+    endpoints: Vec<Arc<dyn Endpoint>>,
+}
+
+impl TransportFabric {
+    /// Build `transport.lanes()` lanes with `make_lane` and bind each
+    /// worker's lane endpoints through the transport.
+    pub fn new(
+        transport: &dyn Transport,
+        mut make_lane: impl FnMut() -> Result<Box<dyn Fabric>>,
+    ) -> Result<TransportFabric> {
+        let lanes = transport.lanes();
+        anyhow::ensure!(lanes >= 1, "transport {:?} needs >= 1 lane", transport.name());
+        let inner: Vec<Box<dyn Fabric>> =
+            (0..lanes).map(|_| make_lane()).collect::<Result<_>>()?;
+        let per_lane: Vec<Vec<Arc<dyn Endpoint>>> = inner.iter().map(|f| f.endpoints()).collect();
+        let world = per_lane[0].len();
+        for (l, eps) in per_lane.iter().enumerate() {
+            anyhow::ensure!(
+                eps.len() == world,
+                "lane {l} has {} endpoints, lane 0 has {world}",
+                eps.len()
+            );
+        }
+        let mut endpoints = Vec::with_capacity(world);
+        for w in 0..world {
+            let worker_lanes: Vec<Arc<dyn Endpoint>> =
+                per_lane.iter().map(|eps| Arc::clone(&eps[w])).collect();
+            endpoints.push(transport.bind(worker_lanes)?);
+        }
+        Ok(TransportFabric { _inner: inner, endpoints })
+    }
+
+    /// In-process lanes over `n` workers, all sharing one NIC shaper (the
+    /// per-server token bucket stays aggregate across lanes).
+    pub fn inproc(
+        n: usize,
+        transport: &dyn Transport,
+        shaper: Option<Arc<Shaper>>,
+    ) -> Result<TransportFabric> {
+        TransportFabric::new(transport, || {
+            Ok(Box::new(InProcFabric::with_shaper(n, shaper.clone())) as Box<dyn Fabric>)
+        })
+    }
+
+    /// Loopback-TCP lanes over `n` workers — each lane is a real set of
+    /// kernel-TCP connections — sharing one NIC shaper.
+    pub fn tcp(
+        n: usize,
+        transport: &dyn Transport,
+        shaper: Option<Arc<Shaper>>,
+    ) -> Result<TransportFabric> {
+        TransportFabric::new(transport, || {
+            Ok(Box::new(TcpFabric::new(n, shaper.clone())?) as Box<dyn Fabric>)
+        })
+    }
+}
+
+impl Fabric for TransportFabric {
+    fn endpoints(&self) -> Vec<Arc<dyn Endpoint>> {
+        self.endpoints.clone()
+    }
+}
+
+/// The transport strategy for a config [`TransportKind`]: `striped:N`
+/// stripes, every other kind is the legacy single-stream path (their
+/// differences are bandwidth *models*, not wire strategies).
+pub fn for_kind(kind: TransportKind) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Striped { streams } => {
+            Box::new(StripedTransport::new(StripeConfig::with_streams(streams)))
+        }
+        _ => Box::new(SingleStream),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::WorkerId;
+
+    #[test]
+    fn single_stream_passes_through() {
+        let fab = TransportFabric::inproc(2, &SingleStream, None).unwrap();
+        let eps = fab.endpoints();
+        assert_eq!(eps.len(), 2);
+        eps[0].send(WorkerId(1), 3, b"hello").unwrap();
+        assert_eq!(eps[1].recv(WorkerId(0), 3).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn striped_fabric_builds_n_lanes() {
+        let t = StripedTransport::new(StripeConfig::with_streams(3));
+        assert_eq!(t.lanes(), 3);
+        assert_eq!(t.name(), "striped:3");
+        let fab = TransportFabric::inproc(4, &t, None).unwrap();
+        assert_eq!(fab.endpoints().len(), 4);
+    }
+
+    #[test]
+    fn for_kind_maps_config() {
+        assert_eq!(for_kind(TransportKind::KernelTcp).name(), "single");
+        assert_eq!(for_kind(TransportKind::FullUtilization).name(), "single");
+        assert_eq!(for_kind(TransportKind::Striped { streams: 4 }).name(), "striped:4");
+    }
+
+    #[test]
+    fn tcp_lanes_round_trip() {
+        let t = StripedTransport::new(StripeConfig {
+            streams: 2,
+            chunk_bytes: 64 << 10,
+            credit_window: 4,
+        });
+        let fab = TransportFabric::tcp(2, &t, None).unwrap();
+        let eps = fab.endpoints();
+        let payload: Vec<u8> = (0..300_000u32).map(|i| (i % 253) as u8).collect();
+        let want = payload.clone();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let h = std::thread::spawn(move || b.recv(WorkerId(0), 1).unwrap());
+        a.send(WorkerId(1), 1, &payload).unwrap();
+        assert_eq!(h.join().unwrap(), want);
+    }
+}

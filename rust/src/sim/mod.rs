@@ -106,6 +106,27 @@ impl SimParams {
         }
     }
 
+    /// Striped-transport configuration: the same distributed-software
+    /// imperfections as [`SimParams::horovod_like`] (hooks still inflate
+    /// compute, negotiation still costs latency, backward kernels still
+    /// contend) — only the transport ceiling changes, because `streams`
+    /// kernel-TCP pipelines now drain the NIC in parallel (see
+    /// [`crate::net::striped::StripedModel`]). This is the simulator side
+    /// of the `--transport striped:N` knob, kept apples-to-apples with
+    /// the emulator's mechanistic striping.
+    pub fn striped_like(
+        trace: StepTrace,
+        servers: usize,
+        gpus_per_server: usize,
+        bandwidth_gbps: f64,
+        streams: usize,
+    ) -> SimParams {
+        SimParams {
+            transport: crate::net::striped::StripedModel::with_streams(streams).to_kernel_model(),
+            ..SimParams::horovod_like(trace, servers, gpus_per_server, bandwidth_gbps)
+        }
+    }
+
     /// Total GPUs.
     pub fn workers(&self) -> usize {
         self.servers * self.gpus_per_server
@@ -388,6 +409,33 @@ mod tests {
         let s = ModelId::ResNet50.profile().total_bytes() as f64;
         let want = 2.0 * s * 7.0 / 8.0; // M = 8 servers
         assert!((r.wire_bytes_per_worker - want).abs() / want < 1e-6);
+    }
+
+    #[test]
+    fn striped_recovers_scaling_at_100g() {
+        // The tentpole claim, at the simulator level: same hardware, same
+        // software imperfections, better transport — scaling factor moves
+        // from the measured band toward linear.
+        for id in ModelId::paper_models() {
+            let single = simulate(&SimParams::horovod_like(trace(id), 8, 8, 100.0));
+            let striped = simulate(&SimParams::striped_like(trace(id), 8, 8, 100.0, 8));
+            assert!(
+                striped.scaling_factor > single.scaling_factor + 0.08,
+                "{id}: striped {} vs single {}",
+                striped.scaling_factor,
+                single.scaling_factor
+            );
+        }
+    }
+
+    #[test]
+    fn striped_matches_single_when_wire_limited() {
+        // At 1 Gbps the wire, not the software, is the limit: striping
+        // cannot help (the paper's low-bandwidth regime).
+        let single = simulate(&SimParams::horovod_like(trace(ModelId::ResNet50), 8, 8, 1.0));
+        let striped = simulate(&SimParams::striped_like(trace(ModelId::ResNet50), 8, 8, 1.0, 8));
+        let rel = (single.scaling_factor - striped.scaling_factor).abs() / single.scaling_factor;
+        assert!(rel < 0.05, "{} vs {}", single.scaling_factor, striped.scaling_factor);
     }
 
     #[test]

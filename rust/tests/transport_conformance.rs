@@ -1,0 +1,183 @@
+//! Cross-fabric transport conformance: every collective × {inproc, tcp}
+//! × {single, striped} produces **bit-identical** reduced tensors, and
+//! the striped transport beats the single-stream one wall-clock on a
+//! shaped 10 Gbps emulation.
+//!
+//! The transport layer must be invisible to the math: striping changes
+//! *how* bytes traverse the fabric, never *which* bytes. Since every
+//! collective performs its additions in a deterministic order, the f32
+//! bit patterns must agree across all fabric × transport combinations.
+
+use netbn::collectives::{ps::ps_allreduce, ring::ring_allreduce, tree::tree_allreduce};
+use netbn::net::shaper::Shaper;
+use netbn::net::striped::{StripeConfig, StripedTransport};
+use netbn::net::transport::{SingleStream, Transport, TransportFabric};
+use netbn::net::{Endpoint, Fabric};
+use netbn::topology::{Ring, Topology, WorkerId};
+use netbn::util::Rng;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+const WORKERS: usize = 3;
+/// Uneven length: exercises ragged ring chunks and partial stripe chunks.
+const LEN: usize = 1003;
+
+/// A stripe config small enough that the test tensors genuinely stripe
+/// and (with a 1-chunk window) genuinely wait on credits.
+fn test_stripe_cfg() -> StripeConfig {
+    StripeConfig { streams: 4, chunk_bytes: 512, credit_window: 1 }
+}
+
+fn inputs() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0xc0f0);
+    (0..WORKERS)
+        .map(|_| {
+            let mut v = vec![0.0f32; LEN];
+            rng.fill_f32(&mut v, 2.0);
+            v
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+enum FabricKind {
+    Inproc,
+    Tcp,
+}
+
+fn build_fabric(kind: FabricKind, transport: &dyn Transport) -> Box<dyn Fabric> {
+    match kind {
+        FabricKind::Inproc => {
+            Box::new(TransportFabric::inproc(WORKERS, transport, None).unwrap())
+        }
+        FabricKind::Tcp => Box::new(TransportFabric::tcp(WORKERS, transport, None).unwrap()),
+    }
+}
+
+type CollectiveFn = fn(&dyn Endpoint, &Ring, u32, u32, &mut [f32]) -> netbn::Result<()>;
+
+/// Run one collective across the fabric and return every worker's result.
+fn run_collective(fabric: &dyn Fabric, f: CollectiveFn, fused: bool) -> Vec<Vec<f32>> {
+    let ring = Topology::new(WORKERS, 1).flat_ring();
+    let mut handles = Vec::new();
+    for (ep, mut data) in fabric.endpoints().into_iter().zip(inputs()) {
+        let ring = ring.clone();
+        handles.push(thread::spawn(move || {
+            if fused {
+                // The fused path: the fusion buffer splits a step's
+                // gradients into buckets, each all-reduced under its own
+                // bucket id. Two buckets stand in for that here.
+                let mid = data.len() / 2;
+                let (a, b) = data.split_at_mut(mid);
+                f(ep.as_ref(), &ring, 0, 0, a).unwrap();
+                f(ep.as_ref(), &ring, 0, 1, b).unwrap();
+            } else {
+                f(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+            }
+            data
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn collectives_bit_identical_across_fabrics_and_transports() {
+    let collectives: [(&str, CollectiveFn, bool); 4] = [
+        ("ring", ring_allreduce, false),
+        ("tree", tree_allreduce, false),
+        ("ps", ps_allreduce, false),
+        ("fused-ring", ring_allreduce, true),
+    ];
+    for (name, f, fused) in collectives {
+        let mut reference: Option<Vec<u32>> = None;
+        for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+            let single = SingleStream;
+            let striped = StripedTransport::new(test_stripe_cfg());
+            let transports: [(&str, &dyn Transport); 2] =
+                [("single", &single), ("striped:4", &striped)];
+            for (tname, transport) in transports {
+                let fabric = build_fabric(fabric_kind, transport);
+                let results = run_collective(fabric.as_ref(), f, fused);
+                // All ranks agree within one run...
+                let first = bits(&results[0]);
+                for (w, r) in results.iter().enumerate() {
+                    assert_eq!(
+                        bits(r),
+                        first,
+                        "{name} over {fabric_kind:?}/{tname}: rank {w} disagrees"
+                    );
+                }
+                // ...and every fabric × transport combination agrees with
+                // the first one, bit for bit.
+                match &reference {
+                    None => reference = Some(first),
+                    Some(want) => assert_eq!(
+                        &first, want,
+                        "{name} over {fabric_kind:?}/{tname}: differs from reference"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_tiny_payloads_conform() {
+    // Barrier-sized traffic must also be transport-invariant.
+    for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+        let striped = StripedTransport::new(test_stripe_cfg());
+        let fabric = build_fabric(fabric_kind, &striped);
+        let eps = fabric.endpoints();
+        let mut handles = Vec::new();
+        for ep in eps {
+            handles.push(thread::spawn(move || {
+                netbn::collectives::barrier(ep.as_ref(), 0).unwrap();
+                netbn::collectives::barrier(ep.as_ref(), 1).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// The satellite's wall-clock claim: on a shaped 10 Gbps emulation whose
+/// software pipeline caps each stream at a quarter of the NIC,
+/// striped:4 moves a bulk payload materially faster than single-stream.
+#[test]
+fn striped_beats_single_stream_on_shaped_10gbps() {
+    // 10 Gbps scaled down 1024x => ~1.22 MB/s NIC; per-stream software
+    // ceiling at a quarter of that, the regime the paper measured.
+    let scale = 1024.0;
+    let nic_rate = netbn::gbps_to_bytes_per_sec(10.0) / scale;
+    let per_stream = nic_rate / 4.0;
+    let payload = vec![42u8; 400_000];
+
+    let timed = |streams: usize| -> f64 {
+        let cfg = StripeConfig { streams, chunk_bytes: 16 << 10, credit_window: 4 };
+        let transport = StripedTransport::with_stream_ceiling(cfg, per_stream);
+        let shaper = Arc::new(Shaper::new(Topology::new(2, 1), nic_rate, 0.0));
+        let fabric = TransportFabric::inproc(2, &transport, Some(shaper)).unwrap();
+        let eps = fabric.endpoints();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let h = thread::spawn(move || b.recv(WorkerId(0), 1).unwrap());
+        let t0 = Instant::now();
+        a.send(WorkerId(1), 1, &payload).unwrap();
+        let got = h.join().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(got.len(), payload.len());
+        dt
+    };
+
+    let single_s = timed(1);
+    let striped_s = timed(4);
+    assert!(
+        striped_s < single_s * 0.7,
+        "striped:4 {striped_s:.2}s should beat single-stream {single_s:.2}s by >= 30%"
+    );
+}
