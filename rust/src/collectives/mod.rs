@@ -9,13 +9,42 @@
 //! compared apples-to-apples.
 
 pub mod fusion;
+pub mod hierarchical;
 pub mod ps;
 pub mod reduce;
 pub mod ring;
 pub mod tree;
 
+use crate::config::CollectiveKind;
 use crate::net::{tag, tags, Endpoint};
+use crate::topology::Cluster;
 use crate::Result;
+
+/// Dispatch one all-reduce through the configured algorithm. `ring`,
+/// `tree` and `ps` run over the flat rank ring; `hier:<g>` runs the
+/// two-phase leader-ring scheme over a [`Cluster`] grouping of the
+/// fabric's world. This is the single knob behind `--collective`.
+pub fn allreduce(
+    kind: CollectiveKind,
+    ep: &dyn Endpoint,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> Result<()> {
+    let flat = || crate::topology::Topology::new(ep.world(), 1).flat_ring();
+    match kind {
+        CollectiveKind::Ring => ring::ring_allreduce(ep, &flat(), step, bucket, data),
+        CollectiveKind::Tree => tree::tree_allreduce(ep, &flat(), step, bucket, data),
+        CollectiveKind::ParameterServer => ps::ps_allreduce(ep, &flat(), step, bucket, data),
+        CollectiveKind::Hierarchical { group_size } => hierarchical::hier_allreduce(
+            ep,
+            &Cluster::new(ep.world(), group_size),
+            step,
+            bucket,
+            data,
+        ),
+    }
+}
 
 /// Serialize an f32 slice to little-endian bytes (allocating copy; kept
 /// as the readable reference — the hot path uses [`f32s_as_bytes`]).
@@ -130,6 +159,31 @@ mod tests {
             let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
             let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
             assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn allreduce_dispatch_covers_every_kind() {
+        use crate::config::CollectiveKind;
+        use crate::net::{inproc::InProcFabric, Fabric};
+        for kind in [
+            CollectiveKind::Ring,
+            CollectiveKind::Tree,
+            CollectiveKind::ParameterServer,
+            CollectiveKind::Hierarchical { group_size: 2 },
+        ] {
+            let fab = InProcFabric::new(4);
+            let mut handles = Vec::new();
+            for (i, ep) in fab.endpoints().into_iter().enumerate() {
+                handles.push(std::thread::spawn(move || {
+                    let mut data = vec![i as f32; 11];
+                    allreduce(kind, ep.as_ref(), 0, 0, &mut data).unwrap();
+                    data
+                }));
+            }
+            for h in handles {
+                assert_eq!(h.join().unwrap(), vec![6.0; 11], "{kind:?}");
+            }
         }
     }
 

@@ -67,27 +67,46 @@ pub enum CollectiveKind {
     Tree,
     /// Central parameter-server baseline (paper §4 "future work" strategy).
     ParameterServer,
+    /// Two-phase leader-ring all-reduce (Sun et al., "ImageNet/AlexNet in
+    /// 1.5 Minutes"): intra-group ring, inter-group ring among the group
+    /// leaders, intra-group broadcast — the mechanism that keeps every
+    /// tier of an oversubscribed network busy. See
+    /// [`crate::collectives::hierarchical`].
+    Hierarchical {
+        /// Ranks per group (the last group may be smaller).
+        group_size: usize,
+    },
 }
 
 impl CollectiveKind {
+    /// Accepted spellings: `ring`, `tree`, `ps`/`parameter-server`,
+    /// `hier` (groups of 8) or `hier:<group_size>` /
+    /// `hierarchical:<group_size>`.
     pub fn parse(s: &str) -> Option<CollectiveKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "ring" => Some(CollectiveKind::Ring),
-            "tree" => Some(CollectiveKind::Tree),
-            "ps" | "parameter-server" => Some(CollectiveKind::ParameterServer),
-            _ => None,
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "ring" => return Some(CollectiveKind::Ring),
+            "tree" => return Some(CollectiveKind::Tree),
+            "ps" | "parameter-server" => return Some(CollectiveKind::ParameterServer),
+            "hier" | "hierarchical" => {
+                return Some(CollectiveKind::Hierarchical { group_size: 8 })
+            }
+            _ => {}
         }
+        let rest = lower.strip_prefix("hier:").or_else(|| lower.strip_prefix("hierarchical:"))?;
+        let g: usize = rest.parse().ok()?;
+        (1..=4096).contains(&g).then_some(CollectiveKind::Hierarchical { group_size: g })
     }
 }
 
 impl fmt::Display for CollectiveKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            CollectiveKind::Ring => "ring",
-            CollectiveKind::Tree => "tree",
-            CollectiveKind::ParameterServer => "parameter-server",
-        };
-        f.write_str(s)
+        match self {
+            CollectiveKind::Ring => f.write_str("ring"),
+            CollectiveKind::Tree => f.write_str("tree"),
+            CollectiveKind::ParameterServer => f.write_str("parameter-server"),
+            CollectiveKind::Hierarchical { group_size } => write!(f, "hier:{group_size}"),
+        }
     }
 }
 
@@ -263,6 +282,11 @@ impl ExperimentConfig {
                 errs.push("striped transport streams must be in 1..=256".into());
             }
         }
+        if let CollectiveKind::Hierarchical { group_size } = self.collective {
+            if group_size == 0 {
+                errs.push("hierarchical collective group_size must be >= 1".into());
+            }
+        }
         let ratio = self.compression.ratio();
         if !ratio.is_finite() || ratio < 1.0 {
             errs.push("compression ratio must be finite and >= 1".into());
@@ -328,6 +352,29 @@ mod tests {
         assert_eq!(TransportKind::parse("striped:1000"), None);
         assert_eq!(TransportKind::parse("striped:x"), None);
         assert_eq!(TransportKind::Striped { streams: 4 }.to_string(), "striped:4");
+    }
+
+    #[test]
+    fn collective_parse_hierarchical() {
+        assert_eq!(CollectiveKind::parse("ring"), Some(CollectiveKind::Ring));
+        assert_eq!(
+            CollectiveKind::parse("hier"),
+            Some(CollectiveKind::Hierarchical { group_size: 8 })
+        );
+        assert_eq!(
+            CollectiveKind::parse("hier:4"),
+            Some(CollectiveKind::Hierarchical { group_size: 4 })
+        );
+        assert_eq!(
+            CollectiveKind::parse("hierarchical:2"),
+            Some(CollectiveKind::Hierarchical { group_size: 2 })
+        );
+        assert_eq!(CollectiveKind::parse("hier:0"), None);
+        assert_eq!(CollectiveKind::parse("hier:x"), None);
+        assert_eq!(
+            CollectiveKind::Hierarchical { group_size: 4 }.to_string(),
+            "hier:4"
+        );
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! The perf-regression **bench gate**.
+//!
+//! `netbn bench` runs the throughput-bearing scenarios
+//! (`transport_ablation`, `hier_vs_flat`), extracts their
+//! effective-throughput metrics into a flat `name -> value` report, and
+//! compares it against a committed baseline (`bench/baseline.json`) with
+//! a fractional tolerance: any gated metric falling more than
+//! `tolerance` below its baseline fails the gate, with a delta table
+//! naming the regressed metrics. CI runs exactly this
+//! (`netbn bench --json BENCH_ci.json --compare bench/baseline.json`),
+//! and the same command reproduces the check locally.
+//!
+//! The baseline format is deliberately minimal — one flat JSON object of
+//! `"metric": number` pairs, written by [`BenchReport::to_json`] and
+//! parsed back by [`parse_flat_json`] (no serde in the offline build).
+//! Metrics *above* baseline don't fail the gate; a sustained improvement
+//! shows up in the delta table as a reminder to re-baseline.
+
+use super::registry::ScenarioRegistry;
+use crate::report::{json_str, Table};
+use crate::Result;
+use std::fmt::Write as _;
+
+/// Which metrics of which scenario the gate tracks. Effective-throughput
+/// fields only: these move when a transport or collective change alters
+/// delivered bandwidth, and stay put under refactors.
+const GATED: &[(&str, &[&str])] = &[
+    ("transport_ablation", &["single_effective_gbps", "effective_gbps@8", "speedup@8"]),
+    ("hier_vs_flat", &["flat_bus_gbps", "hier_bus_gbps", "hier_speedup"]),
+];
+
+/// A collected benchmark run: flat `scenario.metric -> value`.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Render as a human table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new("bench metrics (gated)", &["metric", "value"]);
+        for (k, v) in &self.metrics {
+            t.row(vec![k.clone(), format!("{v:.4}")]);
+        }
+        t.render()
+    }
+
+    /// Flat JSON object, keys in collection order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            let _ = write!(s, "  {}: {v}", json_str(k));
+            if i + 1 < self.metrics.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Run the gated scenarios (with default parameters — the baseline's
+/// contract) and collect their throughput metrics.
+pub fn collect(registry: &ScenarioRegistry) -> Result<BenchReport> {
+    let mut metrics = Vec::new();
+    for &(scenario, keys) in GATED {
+        let out = registry.get(scenario)?.run(&[])?;
+        anyhow::ensure!(
+            out.passed(),
+            "bench scenario {scenario} failed its own shape checks"
+        );
+        for &key in keys {
+            let v = out.metric_value(key).ok_or_else(|| {
+                anyhow::anyhow!("bench scenario {scenario} no longer emits metric {key:?}")
+            })?;
+            metrics.push((format!("{scenario}.{key}"), v));
+        }
+    }
+    Ok(BenchReport { metrics })
+}
+
+/// Parse a flat `{"key": number, ...}` JSON object — the only shape the
+/// bench baseline uses. Whitespace/newlines anywhere; no nesting, no
+/// arrays, no escapes beyond `\"` and `\\` in keys.
+pub fn parse_flat_json(s: &str) -> Result<Vec<(String, f64)>> {
+    fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+        while chars.peek().is_some_and(|c| c.is_whitespace()) {
+            chars.next();
+        }
+    }
+    let mut out = Vec::new();
+    let mut chars = s.chars().peekable();
+    skip_ws(&mut chars);
+    anyhow::ensure!(chars.next() == Some('{'), "baseline must be a JSON object");
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        return Ok(out);
+    }
+    loop {
+        skip_ws(&mut chars);
+        anyhow::ensure!(chars.next() == Some('"'), "expected a quoted key");
+        let mut key = String::new();
+        loop {
+            match chars.next() {
+                Some('\\') => match chars.next() {
+                    Some(c @ ('"' | '\\')) => key.push(c),
+                    other => anyhow::bail!("unsupported escape {other:?} in key"),
+                },
+                Some('"') => break,
+                Some(c) => key.push(c),
+                None => anyhow::bail!("unterminated key"),
+            }
+        }
+        skip_ws(&mut chars);
+        anyhow::ensure!(chars.next() == Some(':'), "expected ':' after key {key:?}");
+        skip_ws(&mut chars);
+        let mut num = String::new();
+        while chars
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+        {
+            num.push(chars.next().expect("peeked"));
+        }
+        let v: f64 =
+            num.parse().map_err(|_| anyhow::anyhow!("bad number {num:?} for key {key:?}"))?;
+        out.push((key, v));
+        skip_ws(&mut chars);
+        match chars.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            other => anyhow::bail!("expected ',' or '}}', got {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// One gated metric's baseline-vs-current delta.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub key: String,
+    pub baseline: f64,
+    pub current: Option<f64>,
+    /// `current / baseline - 1`; `None` when the metric disappeared.
+    pub rel: Option<f64>,
+    pub regressed: bool,
+}
+
+/// The full comparison: per-metric deltas plus metrics the baseline has
+/// never seen (informational, never failing).
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub deltas: Vec<Delta>,
+    pub new_metrics: Vec<String>,
+    pub tolerance: f64,
+}
+
+impl Comparison {
+    /// The gate verdict: every baselined metric present and within
+    /// tolerance of (or above) its baseline.
+    pub fn ok(&self) -> bool {
+        self.deltas.iter().all(|d| !d.regressed)
+    }
+
+    /// Human delta table (printed by `netbn bench --compare`).
+    pub fn render(&self, baseline_path: &str, tolerance: f64) -> String {
+        let mut t = Table::new(
+            format!("bench gate vs {baseline_path} (tolerance -{:.0}%)", tolerance * 100.0),
+            &["metric", "baseline", "current", "delta", "status"],
+        );
+        for d in &self.deltas {
+            let (current, delta) = match (d.current, d.rel) {
+                (Some(c), Some(r)) => (format!("{c:.4}"), format!("{:+.1}%", r * 100.0)),
+                _ => ("MISSING".into(), "-".into()),
+            };
+            let status = if d.regressed {
+                "REGRESSED"
+            } else if d.rel.is_some_and(|r| r > tolerance) {
+                "improved (re-baseline?)"
+            } else {
+                "ok"
+            };
+            t.row(vec![
+                d.key.clone(),
+                format!("{:.4}", d.baseline),
+                current,
+                delta,
+                status.into(),
+            ]);
+        }
+        let mut s = t.render();
+        if !self.new_metrics.is_empty() {
+            s.push_str(&format!(
+                "\nnot in baseline (informational): {}\n",
+                self.new_metrics.join(", ")
+            ));
+        }
+        s.push_str(if self.ok() {
+            "\nbench gate: PASS\n"
+        } else {
+            "\nbench gate: FAIL (throughput regression beyond tolerance)\n"
+        });
+        s
+    }
+}
+
+/// Compare a collected report against a baseline. A metric regresses when
+/// `current < baseline * (1 - tolerance)` or when it vanished from the
+/// current run; extra current-only metrics are reported but never fail.
+pub fn compare(
+    current: &[(String, f64)],
+    baseline: &[(String, f64)],
+    tolerance: f64,
+) -> Comparison {
+    assert!((0.0..1.0).contains(&tolerance), "tolerance in [0, 1)");
+    let mut deltas = Vec::new();
+    for (key, base) in baseline {
+        let cur = current.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        let rel = cur.map(|c| if *base != 0.0 { c / base - 1.0 } else { 0.0 });
+        let regressed = match cur {
+            None => true,
+            Some(c) => c < base * (1.0 - tolerance),
+        };
+        deltas.push(Delta { key: key.clone(), baseline: *base, current: cur, rel, regressed });
+    }
+    let new_metrics = current
+        .iter()
+        .filter(|(k, _)| !baseline.iter().any(|(b, _)| b == k))
+        .map(|(k, _)| k.clone())
+        .collect();
+    Comparison { deltas, new_metrics, tolerance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(pairs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn collect_produces_every_gated_metric() {
+        let report = collect(&ScenarioRegistry::builtin()).unwrap();
+        assert_eq!(
+            report.metrics.len(),
+            GATED.iter().map(|(_, ks)| ks.len()).sum::<usize>()
+        );
+        for (k, v) in &report.metrics {
+            assert!(v.is_finite() && *v > 0.0, "{k} = {v}");
+        }
+        assert!(report
+            .metrics
+            .iter()
+            .any(|(k, _)| k == "transport_ablation.effective_gbps@8"));
+        assert!(report.metrics.iter().any(|(k, _)| k == "hier_vs_flat.hier_bus_gbps"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let report = BenchReport { metrics: kv(&[("a.x", 1.5), ("b.y@8", 30.25)]) };
+        let parsed = parse_flat_json(&report.to_json()).unwrap();
+        assert_eq!(parsed, report.metrics);
+        assert_eq!(parse_flat_json("{}").unwrap(), vec![]);
+        assert_eq!(
+            parse_flat_json(" { \"k\" : -2.5e-1 } ").unwrap(),
+            vec![("k".to_string(), -0.25)]
+        );
+        assert!(parse_flat_json("[1,2]").is_err());
+        assert!(parse_flat_json("{\"k\": }").is_err());
+        assert!(parse_flat_json("{\"k\": 1").is_err());
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = kv(&[("m.a", 100.0), ("m.b", 2.0)]);
+        let cur = kv(&[("m.a", 85.0), ("m.b", 2.3), ("m.new", 1.0)]);
+        let cmp = compare(&cur, &base, 0.2);
+        assert!(cmp.ok(), "{cmp:?}");
+        assert_eq!(cmp.new_metrics, vec!["m.new".to_string()]);
+        let rendered = cmp.render("bench/baseline.json", 0.2);
+        assert!(rendered.contains("PASS"), "{rendered}");
+    }
+
+    #[test]
+    fn compare_fails_on_injected_regression() {
+        // The CI acceptance test, inverted locally: inflate the baseline
+        // >= 25% above current and the +/-20% gate must fail.
+        let cur = kv(&[("m.a", 100.0)]);
+        let base = kv(&[("m.a", 130.0)]);
+        let cmp = compare(&cur, &base, 0.2);
+        assert!(!cmp.ok());
+        let rendered = cmp.render("baseline", 0.2);
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("FAIL"), "{rendered}");
+    }
+
+    #[test]
+    fn compare_fails_on_vanished_metric() {
+        let cur = kv(&[("m.a", 100.0)]);
+        let base = kv(&[("m.a", 100.0), ("m.gone", 5.0)]);
+        let cmp = compare(&cur, &base, 0.2);
+        assert!(!cmp.ok());
+        assert!(cmp.render("b", 0.2).contains("MISSING"));
+    }
+
+    #[test]
+    fn committed_baseline_matches_current_build() {
+        // bench/baseline.json is the CI gate's contract: the numbers this
+        // build produces must sit within the gate's own tolerance of it.
+        // (Analytic scenarios are deterministic, so in practice they match
+        // near-exactly; the tolerance absorbs model recalibrations small
+        // enough not to matter.)
+        let committed = parse_flat_json(include_str!("../../../bench/baseline.json")).unwrap();
+        let current = collect(&ScenarioRegistry::builtin()).unwrap();
+        let cmp = compare(&current.metrics, &committed, 0.2);
+        assert!(
+            cmp.ok(),
+            "committed bench/baseline.json regressed vs this build:\n{}",
+            cmp.render("bench/baseline.json", 0.2)
+        );
+        // And the reverse direction: the current build must not sit far
+        // ABOVE the baseline either, or the baseline is stale enough to
+        // hide future regressions.
+        let reverse = compare(&committed, &current.metrics, 0.2);
+        assert!(
+            reverse.ok(),
+            "bench/baseline.json is stale (current far above it):\n{}",
+            reverse.render("current build", 0.2)
+        );
+    }
+
+    #[test]
+    fn injected_regression_fails_against_committed_baseline() {
+        // End-to-end version of the CI criterion: take the committed
+        // baseline, simulate a 25% throughput loss, and the gate fails.
+        let committed = parse_flat_json(include_str!("../../../bench/baseline.json")).unwrap();
+        let regressed: Vec<(String, f64)> =
+            committed.iter().map(|(k, v)| (k.clone(), v * 0.75)).collect();
+        let cmp = compare(&regressed, &committed, 0.2);
+        assert!(!cmp.ok(), "a 25% regression must trip the 20% gate");
+    }
+}

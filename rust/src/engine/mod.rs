@@ -16,10 +16,15 @@
 //!   the pre-engine paths) and JSON;
 //! * [`ScenarioRegistry`] — the catalogue behind `netbn list` / `netbn
 //!   run <scenario>`; [`ScenarioRegistry::builtin`] registers all 8 paper
-//!   figures, simulate, emulate, validate, the four ablation sweeps and
+//!   figures, simulate, emulate, validate, the four ablation sweeps,
 //!   the four transport scenarios (`transport_ablation`,
-//!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`);
-//!   `netbn list --markdown` renders it as `docs/SCENARIOS.md`;
+//!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`) and
+//!   the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
+//!   `e2e_tcp_smoke`); `netbn list --markdown` renders it as
+//!   `docs/SCENARIOS.md`;
+//! * [`bench`] — the perf-regression gate: collect throughput metrics
+//!   from the gated scenarios and compare against `bench/baseline.json`
+//!   (`netbn bench --compare`);
 //! * [`SweepBuilder`] — cartesian grids over any scenario's parameters,
 //!   executed serially or on a thread pool (`netbn sweep ... --parallel N`).
 //!
@@ -27,10 +32,12 @@
 //! [`Scenario::from_fn`]), describe the parameters, and register — no
 //! dispatch code changes anywhere. See `ENGINE.md` for a worked example.
 
+pub mod bench;
 pub mod outcome;
 pub mod params;
 pub mod registry;
 pub mod runner;
+pub(crate) mod scenarios_hier;
 pub(crate) mod scenarios_transport;
 pub mod sweep;
 

@@ -22,7 +22,7 @@
 //! assert!(schema.resolve(&[("bandwidth".to_string(), "-5".to_string())]).is_err());
 //! ```
 
-use crate::config::{Compression, TransportKind};
+use crate::config::{CollectiveKind, Compression, TransportKind};
 use crate::models::ModelId;
 use crate::Result;
 use anyhow::{anyhow, ensure};
@@ -43,6 +43,8 @@ pub enum ParamKind {
     Model,
     /// A [`TransportKind`] name (`full | kernel-tcp | tcp | single | striped:N`).
     Transport,
+    /// A [`CollectiveKind`] name (`ring | tree | ps | hier:<group_size>`).
+    Collective,
     /// A [`Compression`] spec: ratio >= 1 or codec name.
     Compression,
     /// Comma-separated list of positive floats.
@@ -62,6 +64,7 @@ impl ParamKind {
             ParamKind::Str => "string".into(),
             ParamKind::Model => "model".into(),
             ParamKind::Transport => "transport".into(),
+            ParamKind::Collective => "collective".into(),
             ParamKind::Compression => "compression".into(),
             ParamKind::FloatList => "float list".into(),
             ParamKind::Choice(choices) => choices.join("\\|"),
@@ -119,6 +122,14 @@ impl ParamSpec {
                     anyhow!(
                         "parameter {name}: unknown transport {v:?} \
                          (full|kernel-tcp|tcp|single|striped:N)"
+                    )
+                })?;
+            }
+            ParamKind::Collective => {
+                CollectiveKind::parse(v).ok_or_else(|| {
+                    anyhow!(
+                        "parameter {name}: unknown collective {v:?} \
+                         (ring|tree|ps|hier:<group_size>)"
                     )
                 })?;
             }
@@ -252,6 +263,12 @@ impl ParamValues {
         TransportKind::parse(v).ok_or_else(|| anyhow!("parameter {name}: unknown transport {v:?}"))
     }
 
+    pub fn get_collective(&self, name: &str) -> Result<CollectiveKind> {
+        let v = self.get_str(name)?;
+        CollectiveKind::parse(v)
+            .ok_or_else(|| anyhow!("parameter {name}: unknown collective {v:?}"))
+    }
+
     pub fn get_compression(&self, name: &str) -> Result<Compression> {
         Compression::parse(self.get_str(name)?)
     }
@@ -267,6 +284,7 @@ mod tests {
             ParamSpec::new("bandwidth", "Gbps", ParamKind::PositiveFloat, "25"),
             ParamSpec::new("model", "model id", ParamKind::Model, "resnet50"),
             ParamSpec::new("compression", "ratio or codec", ParamKind::Compression, "1"),
+            ParamSpec::new("collective", "allreduce algorithm", ParamKind::Collective, "ring"),
             ParamSpec::new("mode", "choice", ParamKind::Choice(&["a", "b"]), "a"),
         ])
     }
@@ -287,11 +305,20 @@ mod tests {
     #[test]
     fn overrides_apply_and_validate() {
         let p = schema()
-            .resolve(&kv(&[("workers", "8"), ("model", "vgg16"), ("compression", "topk:0.01")]))
+            .resolve(&kv(&[
+                ("workers", "8"),
+                ("model", "vgg16"),
+                ("compression", "topk:0.01"),
+                ("collective", "hier:4"),
+            ]))
             .unwrap();
         assert_eq!(p.get_usize("workers").unwrap(), 8);
         assert_eq!(p.get_model("model").unwrap(), ModelId::Vgg16);
         assert!((p.get_compression("compression").unwrap().ratio() - 50.0).abs() < 1e-9);
+        assert_eq!(
+            p.get_collective("collective").unwrap(),
+            CollectiveKind::Hierarchical { group_size: 4 }
+        );
     }
 
     #[test]
@@ -312,6 +339,8 @@ mod tests {
             ("model", "alexnet"),
             ("compression", "topk:0"),
             ("compression", "0.5"),
+            ("collective", "butterfly"),
+            ("collective", "hier:0"),
             ("mode", "c"),
         ] {
             assert!(schema().resolve(&kv(&[(k, v)])).is_err(), "{k}={v} should be rejected");

@@ -114,9 +114,11 @@ impl ScenarioRegistry {
     }
 
     /// All built-in scenarios: the 8 paper figures, the three execution
-    /// modes (simulate / emulate / validate), the four ablation sweeps
-    /// and the four transport scenarios (`transport_ablation`,
-    /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`).
+    /// modes (simulate / emulate / validate), the four ablation sweeps,
+    /// the four transport scenarios (`transport_ablation`,
+    /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`) and
+    /// the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
+    /// `e2e_tcp_smoke`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -159,6 +161,7 @@ impl ScenarioRegistry {
                 ParamSpec::new("servers", "server count (1 worker each)", ParamKind::Int, "4"),
                 ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "25"),
                 ParamSpec::new("transport", "full|kernel-tcp|striped:N", ParamKind::Transport, "full"),
+                ParamSpec::new("collective", "ring|tree|ps|hier:<g>", ParamKind::Collective, "ring"),
                 ParamSpec::new("steps", "measured steps", ParamKind::Int, "5"),
                 ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "256"),
                 ParamSpec::new("compression", "wire ratio or codec", ParamKind::Compression, "1"),
@@ -211,6 +214,7 @@ impl ScenarioRegistry {
         ))
         .expect("builtin registration");
         super::scenarios_transport::register(&mut r).expect("builtin registration");
+        super::scenarios_hier::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -313,12 +317,13 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 19, "only {} scenarios", r.len());
+        assert!(r.len() >= 22, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
             "ablate-collectives", "ablate-bw-compression", "transport_ablation",
-            "chunk_size_sweep", "fig4_recovered", "utilization_frontier",
+            "chunk_size_sweep", "fig4_recovered", "utilization_frontier", "hier_vs_flat",
+            "oversub_sweep", "e2e_tcp_smoke",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

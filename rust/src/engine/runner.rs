@@ -144,6 +144,7 @@ impl Runner for EmulateRunner {
         ensure!(steps >= 1, "parameter steps: must be >= 1");
         let payload_scale = p.get_f64("payload-scale")?;
         let transport = p.get_transport("transport")?;
+        let collective = p.get_collective("collective")?;
         let compression = p.get_compression("compression")?;
         let exp = ExperimentConfig {
             model,
@@ -151,6 +152,7 @@ impl Runner for EmulateRunner {
             gpus_per_server: 1,
             bandwidth_gbps: bw,
             transport,
+            collective,
             compression,
             steps,
             warmup_steps: 1,

@@ -29,14 +29,14 @@
 //! | substrate | [`cli`] | subcommand/flag parser with repeatable options (no clap in the offline env) |
 //! | substrate | [`report`] | ASCII tables, figure series, CSV/JSON writers, paper-shape checks |
 //! | substrate | [`config`] | typed experiment configs, `Compression::parse` (ratio-or-codec), TOML-subset parser, paper presets |
-//! | domain | [`topology`] | servers × GPUs, hierarchical ring construction |
-//! | domain | [`net`] | fabrics (in-proc, real TCP), the `Transport` strategy layer (single-stream vs striped:N), token-bucket shaper, kernel-TCP + striped cost models |
-//! | domain | [`collectives`] | ring / tree / PS all-reduce + Horovod fusion buffer |
+//! | domain | [`topology`] | servers × GPUs, ring construction, two-tier `Cluster` grouping |
+//! | domain | [`net`] | fabrics (in-proc, real TCP, multi-process mesh), the `Transport` strategy layer (single-stream vs striped:N), token-bucket shaper, kernel-TCP + striped cost models |
+//! | domain | [`collectives`] | ring / tree / PS / hierarchical leader-ring all-reduce + Horovod fusion buffer |
 //! | domain | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
 //! | domain | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
 //! | domain | [`measure`] | CPU / link utilization sampling, white-box timing traces |
-//! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps |
-//! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap |
+//! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps + hierarchical cost model |
+//! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap; `launch` runs real worker processes over loopback TCP |
 //! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
 //! | mode | [`figures`] | per-figure experiment drivers (Fig 1–8) |
 //! | engine | [`engine`] | `Scenario` / `Runner` / `Outcome` / `ScenarioRegistry` / `SweepBuilder` — every experiment as a named, parameterized, sweepable scenario (see ENGINE.md) |

@@ -73,6 +73,7 @@ fn app() -> App {
                     OptSpec::optional("servers", "server count, 1 worker each (default 4)"),
                     OptSpec::optional("bandwidth", "provisioned Gbps (default 25)"),
                     OptSpec::optional("transport", "full|kernel-tcp (default full)"),
+                    OptSpec::optional("collective", "ring|tree|ps|hier:<g> (default ring)"),
                     OptSpec::optional("steps", "measured steps (default 5)"),
                     OptSpec::optional("payload-scale", "byte/rate shrink factor (default 256)"),
                     OptSpec::optional("compression", "wire ratio or codec (default 1)"),
@@ -117,6 +118,45 @@ fn app() -> App {
                 positional: vec![],
             },
             CmdSpec {
+                name: "launch",
+                about: "e2e: spawn N real worker processes on loopback TCP and train synchronously",
+                opts: vec![
+                    OptSpec::value("workers", "worker process count", "4"),
+                    OptSpec::value("steps", "synchronous steps", "2"),
+                    OptSpec::value("elems", "gradient tensor length (f32 elements)", "262144"),
+                    OptSpec::value("transport", "single|tcp|striped:N", "striped:4"),
+                    OptSpec::value("collective", "ring|tree|ps|hier:<group_size>", "hier:2"),
+                    OptSpec::value("spawn", "process|thread (thread = in-test smoke mode)", "process"),
+                    OptSpec::value("seed", "gradient RNG seed", "3735928559"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "_worker",
+                about: "(internal) one rank of a `netbn launch` run",
+                opts: vec![
+                    OptSpec::optional("rank", "this worker's rank"),
+                    OptSpec::optional("world", "total worker count"),
+                    OptSpec::optional("coordinator", "coordinator host:port"),
+                    OptSpec::value("steps", "synchronous steps", "2"),
+                    OptSpec::value("elems", "gradient tensor length", "262144"),
+                    OptSpec::value("transport", "single|tcp|striped:N", "striped:4"),
+                    OptSpec::value("collective", "ring|tree|ps|hier:<g>", "hier:2"),
+                    OptSpec::value("seed", "gradient RNG seed", "3735928559"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "bench",
+                about: "run the benchmark scenarios and optionally gate against a baseline",
+                opts: vec![
+                    OptSpec::optional("json", "write the collected metrics as flat JSON"),
+                    OptSpec::optional("compare", "baseline JSON to gate against (bench/baseline.json)"),
+                    OptSpec::value("tolerance", "allowed fractional regression", "0.2"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
                 name: "info",
                 about: "print model profiles and environment",
                 opts: vec![],
@@ -157,6 +197,9 @@ fn run(argv: &[String]) -> Result<bool> {
             "ablate" => cmd_ablate(&registry, &args),
             "calibrate-add" => cmd_calibrate(&args),
             "train" => cmd_train(&args),
+            "launch" => cmd_launch(&args),
+            "_worker" => cmd_worker(&args),
+            "bench" => cmd_bench(&registry, &args),
             "info" => cmd_info(),
             other => anyhow::bail!("unhandled command {other}"),
         },
@@ -468,6 +511,94 @@ fn cmd_train(args: &Args) -> Result<bool> {
     let last = result.loss_curve.last().copied().unwrap_or(0.0);
     println!("loss: {first:.4} -> {last:.4}");
     Ok(last < first)
+}
+
+/// Shared parsing of the launch/_worker knobs.
+fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::WorkerParams> {
+    use netbn::config::{CollectiveKind, TransportKind};
+    let transport_s = args.get_or("transport", "striped:4");
+    let transport = TransportKind::parse(transport_s)
+        .ok_or_else(|| anyhow::anyhow!("--transport: unknown transport {transport_s:?}"))?;
+    let collective_s = args.get_or("collective", "hier:2");
+    let collective = CollectiveKind::parse(collective_s)
+        .ok_or_else(|| anyhow::anyhow!("--collective: unknown collective {collective_s:?}"))?;
+    Ok(netbn::trainer::launch::WorkerParams {
+        world,
+        steps: args.get_usize("steps", 2)?,
+        elems: args.get_usize("elems", 1 << 18)?,
+        transport,
+        collective,
+        seed: args.get_usize("seed", 0xdeadbeef)? as u64,
+    })
+}
+
+fn cmd_launch(args: &Args) -> Result<bool> {
+    use netbn::trainer::launch::{launch, LaunchConfig, SpawnMode};
+    let workers = args.get_usize("workers", 4)?;
+    let spawn_s = args.get_or("spawn", "process");
+    let spawn = SpawnMode::parse(spawn_s)
+        .ok_or_else(|| anyhow::anyhow!("--spawn: expected process|thread, got {spawn_s:?}"))?;
+    let params = worker_params(args, workers)?;
+    println!(
+        "launch: {workers} workers ({}), {} steps, {} elems, transport {}, collective {}",
+        if spawn == SpawnMode::Process { "processes" } else { "threads" },
+        params.steps,
+        params.elems,
+        params.transport,
+        params.collective,
+    );
+    let r = launch(&LaunchConfig { params, spawn })?;
+    println!("{}", r.step_table().render());
+    println!("effective bus bandwidth: {:.3} Gbps", r.effective_bus_gbps);
+    println!(
+        "final tensors: {} (checksums {})",
+        if r.identical { "bit-identical across all workers" } else { "MISMATCH" },
+        r.checksums.iter().map(|c| format!("{c:x}")).collect::<Vec<_>>().join(" ")
+    );
+    Ok(r.passed())
+}
+
+fn cmd_worker(args: &Args) -> Result<bool> {
+    let rank = args
+        .get("rank")
+        .and_then(|s| s.parse::<usize>().ok())
+        .ok_or_else(|| anyhow::anyhow!("_worker needs --rank"))?;
+    let world = args
+        .get("world")
+        .and_then(|s| s.parse::<usize>().ok())
+        .ok_or_else(|| anyhow::anyhow!("_worker needs --world"))?;
+    let coordinator = args
+        .get("coordinator")
+        .and_then(|s| s.parse::<std::net::SocketAddr>().ok())
+        .ok_or_else(|| anyhow::anyhow!("_worker needs --coordinator host:port"))?;
+    let params = worker_params(args, world)?;
+    netbn::trainer::launch::worker_entry(rank, coordinator, &params)?;
+    Ok(true)
+}
+
+fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
+    use netbn::engine::bench;
+    let report = bench::collect(registry)?;
+    println!("{}", report.render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json())?;
+        println!("  -> {path}");
+    }
+    let Some(baseline_path) = args.get("compare") else {
+        return Ok(true);
+    };
+    let tolerance = args.get_f64("tolerance", 0.2)?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "--tolerance must be in [0, 1), got {tolerance}"
+    );
+    let baseline_raw = std::fs::read_to_string(baseline_path)
+        .map_err(|e| anyhow::anyhow!("read baseline {baseline_path}: {e}"))?;
+    let baseline = bench::parse_flat_json(&baseline_raw)
+        .map_err(|e| anyhow::anyhow!("parse baseline {baseline_path}: {e:#}"))?;
+    let cmp = bench::compare(&report.metrics, &baseline, tolerance);
+    println!("{}", cmp.render(baseline_path, tolerance));
+    Ok(cmp.ok())
 }
 
 fn cmd_info() -> Result<bool> {

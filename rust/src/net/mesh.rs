@@ -1,0 +1,277 @@
+//! Multi-**process** loopback TCP fabric.
+//!
+//! [`crate::net::tcp::TcpFabric`] owns every worker's listener and
+//! mailbox in one process — right for the threaded emulator, useless for
+//! real worker processes. A [`MeshNode`] is the per-process half of the
+//! same fabric: it owns *one* worker's listener and mailbox, learns the
+//! peers' addresses out of band (the `netbn launch` coordinator's
+//! rendezvous — see [`crate::trainer::launch`]), and dials peers lazily
+//! with the bounded-retry connect ([`crate::net::tcp::connect_retry`]) so
+//! a racing worker whose peer has not bound yet waits instead of failing
+//! the collective.
+//!
+//! The wire format is byte-identical to `TcpFabric`'s
+//! (`[from u64][tag u64][len u64][payload]`, same reader loop, same
+//! poison-on-garbage semantics), so everything layered on [`Endpoint`] —
+//! collectives, the striped transport — runs unchanged across process
+//! boundaries. Striped transports bind one `MeshNode` per lane: each
+//! lane is its own listener and its own set of peer connections, exactly
+//! like a `TransportFabric` lane in process.
+
+use super::tcp::{connect_retry, reader_loop_into, write_frame, CONNECT_TIMEOUT};
+use super::{Endpoint, Mailbox};
+use crate::topology::WorkerId;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// One worker's bound-but-not-yet-connected half of a mesh fabric: a
+/// listener plus the mailbox its reader threads dispatch into. Create
+/// with [`MeshNode::bind`], exchange [`MeshNode::addr`] with the peers,
+/// then [`MeshNode::connect`] into an [`Endpoint`].
+///
+/// A node dropped *without* reaching `connect` (a failed rendezvous)
+/// stops its accept thread and releases the port; after a successful
+/// `connect`, that cleanup transfers to the endpoint's own `Drop`.
+pub struct MeshNode {
+    me: WorkerId,
+    world: usize,
+    addr: SocketAddr,
+    mailbox: Arc<Mailbox>,
+    closed: Arc<AtomicBool>,
+    /// Set by `connect`: cleanup responsibility has moved to the endpoint.
+    defused: std::cell::Cell<bool>,
+}
+
+impl Drop for MeshNode {
+    fn drop(&mut self) {
+        if !self.defused.get() && !self.closed.swap(true, Ordering::SeqCst) {
+            // Wake the accept loop so its thread exits and the port frees.
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+}
+
+impl MeshNode {
+    /// Bind a loopback listener for rank `me` of `world` and start its
+    /// accept loop.
+    pub fn bind(me: WorkerId, world: usize) -> Result<MeshNode> {
+        anyhow::ensure!(world >= 1 && me.0 < world, "rank {me} out of a world of {world}");
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind mesh listener")?;
+        let addr = listener.local_addr()?;
+        let mailbox = Arc::new(Mailbox::default());
+        let closed = Arc::new(AtomicBool::new(false));
+        {
+            let mailbox = Arc::clone(&mailbox);
+            let closed = Arc::clone(&closed);
+            thread::spawn(move || loop {
+                let (stream, _) = match listener.accept() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                if closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                let mailbox = Arc::clone(&mailbox);
+                let owner = me.0;
+                thread::spawn(move || reader_loop_into(owner, stream, world, &mailbox));
+            });
+        }
+        Ok(MeshNode { me, world, addr, mailbox, closed, defused: std::cell::Cell::new(false) })
+    }
+
+    /// The address peers must dial to reach this node.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Bind the node to the full peer address table (rank-ordered; entry
+    /// `me` must be this node's own address) and return the endpoint the
+    /// collectives use. Outgoing connections are dialed lazily on first
+    /// send, with retry while a peer is still binding.
+    pub fn connect(self, addrs: Vec<SocketAddr>) -> Result<Arc<MeshEndpoint>> {
+        anyhow::ensure!(
+            addrs.len() == self.world,
+            "peer table has {} entries for a world of {}",
+            addrs.len(),
+            self.world
+        );
+        anyhow::ensure!(
+            addrs[self.me.0] == self.addr,
+            "peer table entry {} is {}, but this node bound {}",
+            self.me.0,
+            addrs[self.me.0],
+            self.addr
+        );
+        // Cleanup responsibility moves to the endpoint's Drop.
+        self.defused.set(true);
+        Ok(Arc::new(MeshEndpoint {
+            me: self.me,
+            world: self.world,
+            addrs,
+            self_addr: self.addr,
+            mailbox: Arc::clone(&self.mailbox),
+            closed: Arc::clone(&self.closed),
+            senders: Mutex::new(HashMap::new()),
+        }))
+    }
+}
+
+/// The connected endpoint of one mesh worker. Dropping it stops the
+/// accept loop; reader threads exit when peer streams close.
+pub struct MeshEndpoint {
+    me: WorkerId,
+    world: usize,
+    addrs: Vec<SocketAddr>,
+    self_addr: SocketAddr,
+    mailbox: Arc<Mailbox>,
+    closed: Arc<AtomicBool>,
+    /// Lazily-opened outgoing streams, one per destination.
+    senders: Mutex<HashMap<usize, Arc<Mutex<TcpStream>>>>,
+}
+
+impl MeshEndpoint {
+    fn sender_to(&self, to: usize) -> Result<Arc<Mutex<TcpStream>>> {
+        if let Some(s) = self.senders.lock().unwrap().get(&to) {
+            return Ok(Arc::clone(s));
+        }
+        // Dial OUTSIDE the lock: a slow or dead peer must not stall sends
+        // to healthy peers for the whole retry window.
+        let stream = connect_retry(self.addrs[to], CONNECT_TIMEOUT)
+            .context("connect to mesh peer")?;
+        let arc = Arc::new(Mutex::new(stream));
+        let mut senders = self.senders.lock().unwrap();
+        // A concurrent dial may have won the race; keep the first stream
+        // (ours closes cleanly, which the peer reads as EOF, not poison).
+        Ok(Arc::clone(senders.entry(to).or_insert(arc)))
+    }
+}
+
+impl Drop for MeshEndpoint {
+    fn drop(&mut self) {
+        if !self.closed.swap(true, Ordering::SeqCst) {
+            // Wake the accept loop so its thread exits.
+            let _ = TcpStream::connect(self.self_addr);
+        }
+    }
+}
+
+impl Endpoint for MeshEndpoint {
+    fn me(&self) -> WorkerId {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, to: WorkerId, tag: u64, payload: &[u8]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world, "send to out-of-range worker {to}");
+        let sender = self.sender_to(to.0)?;
+        let mut stream = sender.lock().unwrap();
+        write_frame(&mut stream, self.me.0, tag, payload)
+    }
+
+    fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
+        self.mailbox.take(from.0, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ring::ring_allreduce;
+    use crate::net::striped::{StripeConfig, StripedTransport};
+    use crate::net::transport::Transport;
+    use crate::topology::Topology;
+
+    /// Bind `world` nodes, exchange addresses, connect all endpoints —
+    /// the same dance the launch rendezvous performs across processes.
+    fn mesh(world: usize) -> Vec<Arc<MeshEndpoint>> {
+        let nodes: Vec<MeshNode> =
+            (0..world).map(|i| MeshNode::bind(WorkerId(i), world).unwrap()).collect();
+        let addrs: Vec<SocketAddr> = nodes.iter().map(|n| n.addr()).collect();
+        nodes.into_iter().map(|n| n.connect(addrs.clone()).unwrap()).collect()
+    }
+
+    #[test]
+    fn ping_pong_across_nodes() {
+        let eps = mesh(2);
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = thread::spawn(move || {
+            let m = b.recv(WorkerId(0), 1).unwrap();
+            b.send(WorkerId(0), 2, &m).unwrap();
+        });
+        a.send(WorkerId(1), 1, b"mesh").unwrap();
+        assert_eq!(a.recv(WorkerId(1), 2).unwrap(), b"mesh");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ring_allreduce_over_mesh() {
+        let world = 3;
+        let eps = mesh(world);
+        let ring = Topology::new(world, 1).flat_ring();
+        let mut handles = Vec::new();
+        for (i, ep) in eps.into_iter().enumerate() {
+            let ring = ring.clone();
+            handles.push(thread::spawn(move || {
+                let mut data = vec![i as f32; 101];
+                ring_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![3.0; 101]); // 0+1+2
+        }
+    }
+
+    #[test]
+    fn striped_transport_binds_mesh_lanes() {
+        // Two lanes per worker, each its own listener — the launch path's
+        // shape, in miniature.
+        let world = 2;
+        let lanes = 2;
+        let cfg = StripeConfig { streams: lanes, chunk_bytes: 4 << 10, credit_window: 2 };
+        let transport = StripedTransport::new(cfg);
+        // nodes[w][l]
+        let nodes: Vec<Vec<MeshNode>> = (0..world)
+            .map(|w| (0..lanes).map(|_| MeshNode::bind(WorkerId(w), world).unwrap()).collect())
+            .collect();
+        let lane_addrs: Vec<Vec<SocketAddr>> = (0..lanes)
+            .map(|l| nodes.iter().map(|ws| ws[l].addr()).collect())
+            .collect();
+        let mut eps = Vec::new();
+        for ws in nodes {
+            let mut lane_eps: Vec<Arc<dyn Endpoint>> = Vec::new();
+            for (l, node) in ws.into_iter().enumerate() {
+                lane_eps.push(node.connect(lane_addrs[l].clone()).unwrap() as Arc<dyn Endpoint>);
+            }
+            eps.push(transport.bind(lane_eps).unwrap());
+        }
+        let payload: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        let want = payload.clone();
+        let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+        let t = thread::spawn(move || b.recv(WorkerId(0), 5).unwrap());
+        a.send(WorkerId(1), 5, &payload).unwrap();
+        assert_eq!(t.join().unwrap(), want);
+        drop(eps);
+    }
+
+    #[test]
+    fn bad_peer_table_rejected() {
+        let node = MeshNode::bind(WorkerId(0), 2).unwrap();
+        let wrong_len = vec![node.addr()];
+        // Too few entries.
+        let node2 = MeshNode::bind(WorkerId(0), 2).unwrap();
+        assert!(node2.connect(wrong_len).is_err());
+        // Own entry mismatched.
+        let other: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        assert!(node.connect(vec![other, other]).is_err());
+    }
+}

@@ -5,9 +5,10 @@
 //! provides the pieces to express both sides:
 //!
 //! * [`Endpoint`]/[`Fabric`] — point-to-point message transport with tag
-//!   matching, in two implementations: [`inproc`] (lock+condvar mailboxes,
-//!   for tests and fast emulation) and [`tcp`] (real loopback sockets —
-//!   actual kernel TCP on the path, for the e2e example).
+//!   matching, in three implementations: [`inproc`] (lock+condvar
+//!   mailboxes, for tests and fast emulation), [`tcp`] (real loopback
+//!   sockets owned by one process) and [`mesh`] (the per-*process* half
+//!   of the TCP fabric, for `netbn launch`'s real worker processes).
 //! * [`transport`] — the [`transport::Transport`] strategy layer: how a
 //!   logical message traverses the fabric — legacy single-stream or
 //!   striped across N parallel connections.
@@ -24,6 +25,7 @@
 
 pub mod inproc;
 pub mod kernel_tcp;
+pub mod mesh;
 pub mod metrics;
 pub mod shaper;
 pub mod striped;
@@ -50,6 +52,8 @@ pub mod tags {
     pub const PS_PULL: u8 = 6;
     pub const CONTROL: u8 = 7;
     pub const BARRIER: u8 = 8;
+    /// Leader-to-member broadcast in the hierarchical all-reduce.
+    pub const HIER_BCAST: u8 = 9;
 }
 
 /// A worker's handle onto the fabric. Clone-able and thread-safe so the

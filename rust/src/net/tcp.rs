@@ -20,6 +20,45 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
+
+/// Connect to `addr`, retrying with exponential backoff until `timeout`
+/// elapses. At startup a racing worker can dial a peer that has not
+/// finished binding; without the retry that one refused connection used
+/// to fail the whole collective. Every dial error is retried (loopback
+/// cannot distinguish "not bound yet" from "never will be" at dial
+/// time); the last underlying error is returned once the deadline
+/// passes.
+pub fn connect_retry(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(1);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(anyhow::anyhow!(
+                        "connect to {addr} failed after retrying for {:.1}s: {e}",
+                        timeout.as_secs_f64()
+                    ));
+                }
+                // Never sleep past the deadline: a listener that binds
+                // inside the caller's budget gets one final attempt.
+                thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(Duration::from_millis(250));
+            }
+        }
+    }
+}
+
+/// Default patience for [`connect_retry`] on the lazy send path: long
+/// enough for a slow peer process to bind, short enough that a genuinely
+/// dead peer fails the collective promptly.
+pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
 struct Shared {
     addrs: Vec<SocketAddr>,
@@ -103,31 +142,61 @@ fn accept_loop(owner: usize, listener: TcpListener, shared: Arc<Shared>) {
 /// process.
 const MAX_FRAME_BYTES: usize = 1 << 30; // 1 GiB
 
-fn reader_loop(owner: usize, mut stream: TcpStream, shared: Arc<Shared>) {
+pub(crate) fn reader_loop_into(
+    owner: usize,
+    mut stream: TcpStream,
+    world: usize,
+    mailbox: &Mailbox,
+) {
     let _ = stream.set_nodelay(true);
     loop {
-        match read_frame(&mut stream, shared.addrs.len()) {
-            Ok(Some((from, tag, payload))) => shared.mailboxes[owner].put(from, tag, payload),
+        match read_frame(&mut stream, world) {
+            Ok(Some((from, tag, payload))) => mailbox.put(from, tag, payload),
             Ok(None) => return, // clean close at a frame boundary
             Err(e) => {
-                // A truncated or garbage frame means bytes are gone for
-                // good: poison the mailbox so blocked recvs fail loudly
-                // instead of hanging the collective.
                 crate::log_error!(
                     "net::tcp",
                     "worker {owner}: frame decode failed: {e:#}; poisoning mailbox"
                 );
-                shared.mailboxes[owner].poison(format!("worker {owner} reader: {e:#}"));
+                mailbox.poison(format!("worker {owner} reader: {e:#}"));
                 return;
             }
         }
     }
 }
 
+/// A truncated or garbage frame means bytes are gone for good:
+/// [`reader_loop_into`] poisons the mailbox so blocked recvs fail loudly
+/// instead of hanging the collective. The multi-process mesh fabric
+/// ([`crate::net::mesh`]) shares the same loop over its own mailbox.
+fn reader_loop(owner: usize, stream: TcpStream, shared: Arc<Shared>) {
+    reader_loop_into(owner, stream, shared.addrs.len(), &shared.mailboxes[owner]);
+}
+
+/// Write one `[from u64][tag u64][len u64][payload]` frame — the wire
+/// format shared by [`TcpFabric`] and the multi-process mesh fabric.
+pub(crate) fn write_frame(
+    stream: &mut TcpStream,
+    from: usize,
+    tag: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let mut header = [0u8; 24];
+    header[0..8].copy_from_slice(&(from as u64).to_le_bytes());
+    header[8..16].copy_from_slice(&tag.to_le_bytes());
+    header[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
 /// Read one `[from][tag][len][payload]` frame. `Ok(None)` means the peer
 /// closed cleanly *between* frames; a mid-frame EOF, an oversized length,
 /// or an out-of-range sender is a decode error.
-fn read_frame(stream: &mut TcpStream, world: usize) -> Result<Option<(usize, u64, Vec<u8>)>> {
+pub(crate) fn read_frame(
+    stream: &mut TcpStream,
+    world: usize,
+) -> Result<Option<(usize, u64, Vec<u8>)>> {
     let mut header = [0u8; 24];
     let mut got = 0usize;
     while got < header.len() {
@@ -178,16 +247,19 @@ struct TcpEndpoint {
 
 impl TcpEndpoint {
     fn sender_to(&self, to: usize) -> Result<Arc<Mutex<TcpStream>>> {
-        let mut senders = self.senders.lock().unwrap();
-        if let Some(s) = senders.get(&to) {
+        if let Some(s) = self.senders.lock().unwrap().get(&to) {
             return Ok(Arc::clone(s));
         }
-        let stream =
-            TcpStream::connect(self.shared.addrs[to]).context("connect to peer listener")?;
-        stream.set_nodelay(true).ok();
+        // Bounded retry: a racing peer may not have finished binding yet
+        // (multi-process startup); a refused dial must not fail the whole
+        // collective. Dialed OUTSIDE the lock so one slow peer cannot
+        // stall sends to healthy ones.
+        let stream = connect_retry(self.shared.addrs[to], CONNECT_TIMEOUT)
+            .context("connect to peer listener")?;
         let arc = Arc::new(Mutex::new(stream));
-        senders.insert(to, Arc::clone(&arc));
-        Ok(arc)
+        let mut senders = self.senders.lock().unwrap();
+        // First dial wins a concurrent race; the loser closes cleanly.
+        Ok(Arc::clone(senders.entry(to).or_insert(arc)))
     }
 }
 
@@ -207,13 +279,7 @@ impl Endpoint for TcpEndpoint {
         }
         let sender = self.sender_to(to.0)?;
         let mut stream = sender.lock().unwrap();
-        let mut header = [0u8; 24];
-        header[0..8].copy_from_slice(&(self.me.0 as u64).to_le_bytes());
-        header[8..16].copy_from_slice(&tag.to_le_bytes());
-        header[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-        stream.write_all(&header)?;
-        stream.write_all(payload)?;
-        Ok(())
+        write_frame(&mut stream, self.me.0, tag, payload)
     }
 
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
@@ -331,6 +397,41 @@ mod tests {
         raw.write_all(&header).unwrap();
         let err = eps[0].recv(WorkerId(1), 7).unwrap_err().to_string();
         assert!(err.contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn connector_before_listener_retries_until_bound() {
+        // The startup race: the connector dials BEFORE the listener
+        // exists. Reserve a port by binding and dropping, start the
+        // connector, then bind the real listener after a delay — the
+        // bounded retry must bridge the gap.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let connector = thread::spawn(move || {
+            connect_retry(addr, Duration::from_secs(5)).map(|mut s| {
+                write_frame(&mut s, 0, 7, b"late-bind").unwrap();
+            })
+        });
+        thread::sleep(Duration::from_millis(150));
+        let listener = TcpListener::bind(addr).unwrap();
+        let (mut conn, _) = listener.accept().unwrap();
+        let got = read_frame(&mut conn, 1).unwrap().unwrap();
+        assert_eq!(got, (0, 7, b"late-bind".to_vec()));
+        connector.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_timeout() {
+        // Nothing ever listens: the retry must return the underlying
+        // error once the deadline passes, not spin forever.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let t0 = Instant::now();
+        let err = connect_retry(addr, Duration::from_millis(200)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(3));
+        assert!(err.to_string().contains("after retrying"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Analytic mirror of the hierarchical (leader-ring) all-reduce —
+//! [`crate::collectives::hierarchical`] as a cost model, the same way
+//! [`crate::net::striped::StripedModel`] mirrors the striped transport.
+//!
+//! The question it answers is the paper's, one tier up: on a cluster
+//! whose *aggregation* tier is oversubscribed, which all-reduce keeps the
+//! provisioned hardware busy? A flat ring drags the full
+//! `2·S·(N−1)/N` per-rank wire volume across the slowest link; the
+//! pipelined ring's completion time is that volume over the bottleneck
+//! rate. The hierarchical scheme pays three sequential phases instead —
+//! intra-group ring at the fast tier, leader ring at the oversubscribed
+//! tier (with only `2·S·(G−1)/G` crossing it), and an intra-group
+//! broadcast:
+//!
+//! ```text
+//! t_flat = 2·S·(N−1)/N / R_inter
+//! t_hier = 2·S·(g−1)/g / R_intra  +  2·S·(G−1)/G / R_inter  +  S / R_intra
+//! ```
+//!
+//! where `R_inter` is the *per-flow* rate through the oversubscribed tier
+//! after the striped-transport software model
+//! ([`StripedModel::effective_gbps`] at
+//! [`Cluster::effective_inter_gbps`]), and `R_intra` is the intra-group
+//! tier rate (NVLink-class — no kernel-TCP software ceiling). Both
+//! strategies get the *same* transport on the inter tier, so the
+//! comparison isolates the collective's topology-awareness: under full
+//! bisection the extra phases make the hierarchy a slight loss, and as
+//! oversubscription grows the leader ring's smaller inter-tier volume
+//! wins — exactly the `hier_vs_flat` / `oversub_sweep` scenarios' shape.
+
+use crate::net::striped::StripedModel;
+use crate::topology::Cluster;
+
+/// Cost model of flat vs hierarchical all-reduce on a two-tier cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct HierModel {
+    pub cluster: Cluster,
+    /// Striped streams on the inter-group tier (1 = single kernel-TCP
+    /// pipeline, the paper's broken transport).
+    pub streams: usize,
+}
+
+impl HierModel {
+    pub fn new(cluster: Cluster, streams: usize) -> HierModel {
+        HierModel { cluster, streams: streams.max(1) }
+    }
+
+    /// Per-flow rate through the oversubscribed inter tier, after the
+    /// striped transport's software model.
+    pub fn inter_rate_gbps(&self) -> f64 {
+        StripedModel::with_streams(self.streams)
+            .effective_gbps(self.cluster.effective_inter_gbps())
+    }
+
+    /// Intra-group tier rate: NVLink-class, no kernel-TCP stack on the
+    /// path, so the provisioned rate is the achieved rate.
+    pub fn intra_rate_gbps(&self) -> f64 {
+        self.cluster.intra_gbps
+    }
+
+    /// Ring-formula wire volume per rank over `parties`, seconds-free.
+    fn ring_bytes(s_bytes: f64, parties: usize) -> f64 {
+        crate::collectives::ring::wire_bytes_per_worker(s_bytes, parties)
+    }
+
+    /// Flat ring all-reduce time for `s_bytes`: the pipelined ring
+    /// completes at its slowest link — the oversubscribed inter tier
+    /// whenever the ring crosses groups.
+    pub fn flat_time_s(&self, s_bytes: f64) -> f64 {
+        let n = self.cluster.workers;
+        if n <= 1 {
+            return 0.0;
+        }
+        let rate = if self.cluster.n_groups() > 1 {
+            self.inter_rate_gbps()
+        } else {
+            self.intra_rate_gbps()
+        };
+        Self::ring_bytes(s_bytes, n) / crate::gbps_to_bytes_per_sec(rate)
+    }
+
+    /// Hierarchical all-reduce time: intra ring + leader ring + broadcast
+    /// (phases are sequential — the wire algorithm's structure).
+    pub fn hier_time_s(&self, s_bytes: f64) -> f64 {
+        let g = self.cluster.group_size.min(self.cluster.workers);
+        let groups = self.cluster.n_groups();
+        let intra_rate = crate::gbps_to_bytes_per_sec(self.intra_rate_gbps());
+        let inter_rate = crate::gbps_to_bytes_per_sec(self.inter_rate_gbps());
+        let mut t = Self::ring_bytes(s_bytes, g) / intra_rate;
+        if groups > 1 {
+            t += Self::ring_bytes(s_bytes, groups) / inter_rate;
+            if g > 1 {
+                t += s_bytes / intra_rate; // leader -> members broadcast
+            }
+        }
+        t
+    }
+
+    /// NCCL-convention bus bandwidth: the ring-equivalent wire volume
+    /// over the measured time, regardless of which algorithm ran — the
+    /// normalization that makes strategies comparable.
+    pub fn bus_gbps(&self, s_bytes: f64, time_s: f64) -> f64 {
+        if time_s <= 0.0 {
+            return 0.0;
+        }
+        crate::bytes_per_sec_to_gbps(Self::ring_bytes(s_bytes, self.cluster.workers) / time_s)
+    }
+
+    /// Flat-ring bus bandwidth at `s_bytes`.
+    pub fn flat_bus_gbps(&self, s_bytes: f64) -> f64 {
+        self.bus_gbps(s_bytes, self.flat_time_s(s_bytes))
+    }
+
+    /// Hierarchical bus bandwidth at `s_bytes`.
+    pub fn hier_bus_gbps(&self, s_bytes: f64) -> f64 {
+        self.bus_gbps(s_bytes, self.hier_time_s(s_bytes))
+    }
+
+    /// `t_flat / t_hier` — > 1 when the leader ring wins.
+    pub fn speedup(&self, s_bytes: f64) -> f64 {
+        let hier = self.hier_time_s(s_bytes);
+        if hier <= 0.0 {
+            return 1.0;
+        }
+        self.flat_time_s(s_bytes) / hier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The ISSUE's acceptance topology: 4 groups x 4 ranks, 100 Gbps
+    /// uplinks behind a 1:4-oversubscribed aggregation tier.
+    fn four_by_four_oversub() -> HierModel {
+        HierModel::new(Cluster::with_tiers(16, 4, 300.0, 100.0, 4.0), 8)
+    }
+
+    const S: f64 = 527e6; // VGG16-sized gradient
+
+    #[test]
+    fn hier_beats_flat_under_oversubscription() {
+        let m = four_by_four_oversub();
+        assert!(
+            m.hier_time_s(S) < m.flat_time_s(S),
+            "hier {} vs flat {}",
+            m.hier_time_s(S),
+            m.flat_time_s(S)
+        );
+        assert!(m.speedup(S) > 1.05, "{}", m.speedup(S));
+        assert!(m.hier_bus_gbps(S) > m.flat_bus_gbps(S));
+    }
+
+    #[test]
+    fn full_bisection_slightly_favors_flat() {
+        // With no oversubscription the extra phases cost more than the
+        // smaller leader-ring volume saves — hierarchy is a repair for
+        // oversubscribed tiers, not a free win.
+        let m = HierModel::new(Cluster::with_tiers(16, 4, 300.0, 100.0, 1.0), 8);
+        assert!(m.speedup(S) < 1.0, "{}", m.speedup(S));
+    }
+
+    #[test]
+    fn speedup_grows_with_oversubscription() {
+        let mut last = 0.0;
+        for oversub in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            let m = HierModel::new(Cluster::with_tiers(16, 4, 300.0, 100.0, oversub), 8);
+            let s = m.speedup(S);
+            assert!(s >= last, "oversub {oversub}: speedup {s} < {last}");
+            last = s;
+        }
+        // The asymptote: wire(N)/wire(G) = (2·15/16)/(2·3/4) = 1.25.
+        assert!(last < 1.25 + 1e-9);
+        assert!(last > 1.15);
+    }
+
+    #[test]
+    fn single_group_and_single_rank_degenerate() {
+        let one_group = HierModel::new(Cluster::with_tiers(4, 8, 300.0, 100.0, 4.0), 8);
+        // One group: hier == flat == an intra-tier ring.
+        assert!((one_group.hier_time_s(S) - one_group.flat_time_s(S)).abs() < 1e-12);
+        let solo = HierModel::new(Cluster::with_tiers(1, 1, 300.0, 100.0, 1.0), 8);
+        assert_eq!(solo.flat_time_s(S), 0.0);
+        assert_eq!(solo.hier_time_s(S), 0.0);
+        assert_eq!(solo.speedup(S), 1.0);
+    }
+
+    #[test]
+    fn bus_bandwidth_is_size_invariant() {
+        // Pure rate model: time is linear in bytes, so busbw is flat
+        // across message sizes (per-message overheads live in the
+        // mechanistic path, not this mirror).
+        let m = four_by_four_oversub();
+        let a = m.hier_bus_gbps(1e6);
+        let b = m.hier_bus_gbps(512e6);
+        assert!((a - b).abs() / a < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn striping_raises_both_strategies() {
+        let single = HierModel::new(Cluster::with_tiers(16, 4, 300.0, 100.0, 1.0), 1);
+        let striped = HierModel::new(Cluster::with_tiers(16, 4, 300.0, 100.0, 1.0), 8);
+        assert!(striped.hier_bus_gbps(S) > single.hier_bus_gbps(S));
+        assert!(striped.flat_bus_gbps(S) > single.flat_bus_gbps(S));
+    }
+}

@@ -24,6 +24,7 @@
 //! `f_sim = t_batch / (t_batch + t_overhead)` (§3.1).
 
 pub mod ablation;
+pub mod hier_model;
 pub mod whatif;
 
 use crate::collectives::fusion::{Bucket, FusionBuffer, GradTensor};

@@ -1,7 +1,10 @@
 //! Cluster topology: servers × GPUs-per-server worker addressing, ring
-//! orders for all-reduce, and the intra-node (NVLink) vs inter-node
-//! (network) distinction the p3dn testbed has.
+//! orders for all-reduce, the intra-node (NVLink) vs inter-node
+//! (network) distinction the p3dn testbed has, and the two-tier
+//! [`Cluster`] description the hierarchical (leader-ring) collective is
+//! parameterized by.
 
+use crate::Result;
 use std::fmt;
 
 /// Global worker (GPU) rank, `0..workers()`.
@@ -151,6 +154,129 @@ impl Ring {
     }
 }
 
+/// A two-tier cluster for hierarchical collectives: `workers` ranks
+/// partitioned into consecutive **groups** of (at most) `group_size`,
+/// with a fast intra-group tier (NVLink / intra-rack) and a potentially
+/// oversubscribed inter-group tier (the aggregation/core network).
+///
+/// The grouping rule is rank-major, mirroring [`Topology::server_of`]:
+/// group `g` holds ranks `g·group_size .. min((g+1)·group_size, workers)`,
+/// so the last group may be smaller when `group_size` does not divide
+/// `workers` — the hierarchical collective handles ragged groups.
+/// Rank `g·group_size` is group `g`'s **leader**.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cluster {
+    /// Total ranks.
+    pub workers: usize,
+    /// Maximum ranks per group (the last group may be smaller).
+    pub group_size: usize,
+    /// Intra-group link bandwidth, Gbps (NVLink-class: fast).
+    pub intra_gbps: f64,
+    /// Provisioned per-leader uplink into the inter-group tier, Gbps.
+    pub inter_gbps: f64,
+    /// Oversubscription of the inter-group tier: 1 = full bisection,
+    /// 4 = a 1:4 oversubscribed aggregation layer. Divides the bandwidth
+    /// each concurrent inter-group flow actually sees.
+    pub oversubscription: f64,
+}
+
+impl Cluster {
+    /// Grouping-only constructor with the p3dn-flavored tier defaults
+    /// (300 Gbps NVLink-class intra tier, 100 Gbps uplinks, full
+    /// bisection). The wire algorithm in
+    /// [`crate::collectives::hierarchical`] only reads the grouping.
+    pub fn new(workers: usize, group_size: usize) -> Cluster {
+        Cluster {
+            workers,
+            group_size,
+            intra_gbps: 300.0,
+            inter_gbps: 100.0,
+            oversubscription: 1.0,
+        }
+    }
+
+    /// Full constructor: grouping plus per-tier bandwidths and
+    /// inter-tier oversubscription (the analytic model's knobs).
+    pub fn with_tiers(
+        workers: usize,
+        group_size: usize,
+        intra_gbps: f64,
+        inter_gbps: f64,
+        oversubscription: f64,
+    ) -> Cluster {
+        Cluster { workers, group_size, intra_gbps, inter_gbps, oversubscription }
+    }
+
+    /// Reject degenerate shapes.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1, "cluster needs >= 1 worker");
+        anyhow::ensure!(self.group_size >= 1, "group size must be >= 1");
+        anyhow::ensure!(
+            self.intra_gbps > 0.0 && self.intra_gbps.is_finite(),
+            "intra-tier bandwidth must be finite and > 0, got {}",
+            self.intra_gbps
+        );
+        anyhow::ensure!(
+            self.inter_gbps > 0.0 && self.inter_gbps.is_finite(),
+            "inter-tier bandwidth must be finite and > 0, got {}",
+            self.inter_gbps
+        );
+        anyhow::ensure!(
+            self.oversubscription >= 1.0 && self.oversubscription.is_finite(),
+            "oversubscription must be finite and >= 1, got {}",
+            self.oversubscription
+        );
+        Ok(())
+    }
+
+    /// Number of groups (the last may be ragged).
+    pub fn n_groups(&self) -> usize {
+        self.workers.div_ceil(self.group_size)
+    }
+
+    /// Group index of a rank.
+    pub fn group_of(&self, w: WorkerId) -> usize {
+        assert!(w.0 < self.workers, "worker {w} out of range");
+        w.0 / self.group_size
+    }
+
+    /// Ranks of one group, in ring order.
+    pub fn members_of(&self, g: usize) -> Vec<WorkerId> {
+        assert!(g < self.n_groups(), "group {g} out of range");
+        let base = g * self.group_size;
+        let end = (base + self.group_size).min(self.workers);
+        (base..end).map(WorkerId).collect()
+    }
+
+    /// The leader (lowest rank) of a group.
+    pub fn group_leader(&self, g: usize) -> WorkerId {
+        assert!(g < self.n_groups(), "group {g} out of range");
+        WorkerId(g * self.group_size)
+    }
+
+    /// Whether a rank leads its group.
+    pub fn is_leader(&self, w: WorkerId) -> bool {
+        assert!(w.0 < self.workers, "worker {w} out of range");
+        w.0 % self.group_size == 0
+    }
+
+    /// Ring over one group's members (the intra tier of the hierarchy).
+    pub fn group_ring(&self, g: usize) -> Ring {
+        Ring::new(self.members_of(g))
+    }
+
+    /// Ring over the group leaders (the inter tier of the hierarchy).
+    pub fn leader_ring(&self) -> Ring {
+        Ring::new((0..self.n_groups()).map(|g| self.group_leader(g)).collect())
+    }
+
+    /// Per-flow bandwidth an inter-group transfer actually sees once the
+    /// oversubscribed tier is shared: `inter_gbps / oversubscription`.
+    pub fn effective_inter_gbps(&self) -> f64 {
+        self.inter_gbps / self.oversubscription
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +336,72 @@ mod tests {
     fn workers_on_server() {
         let t = Topology::new(2, 4);
         assert_eq!(t.workers_on(ServerId(1)), vec![WorkerId(4), WorkerId(5), WorkerId(6), WorkerId(7)]);
+    }
+
+    #[test]
+    fn cluster_even_groups() {
+        let c = Cluster::new(16, 4);
+        c.validate().unwrap();
+        assert_eq!(c.n_groups(), 4);
+        assert_eq!(c.group_of(WorkerId(7)), 1);
+        assert_eq!(c.group_leader(2), WorkerId(8));
+        assert!(c.is_leader(WorkerId(12)));
+        assert!(!c.is_leader(WorkerId(13)));
+        assert_eq!(c.members_of(3), vec![WorkerId(12), WorkerId(13), WorkerId(14), WorkerId(15)]);
+        assert_eq!(
+            c.leader_ring().members(),
+            &[WorkerId(0), WorkerId(4), WorkerId(8), WorkerId(12)]
+        );
+    }
+
+    #[test]
+    fn cluster_ragged_last_group() {
+        // 7 workers in groups of 3: groups {0,1,2}, {3,4,5}, {6}.
+        let c = Cluster::new(7, 3);
+        assert_eq!(c.n_groups(), 3);
+        assert_eq!(c.members_of(2), vec![WorkerId(6)]);
+        assert_eq!(c.group_of(WorkerId(6)), 2);
+        assert!(c.is_leader(WorkerId(6)));
+        assert_eq!(c.group_ring(2).len(), 1);
+    }
+
+    #[test]
+    fn cluster_degenerate_shapes() {
+        // group_size >= workers collapses to one group; group_size 1 makes
+        // everyone a leader.
+        let one_group = Cluster::new(4, 8);
+        assert_eq!(one_group.n_groups(), 1);
+        assert_eq!(one_group.members_of(0).len(), 4);
+        let all_leaders = Cluster::new(4, 1);
+        assert_eq!(all_leaders.n_groups(), 4);
+        for w in 0..4 {
+            assert!(all_leaders.is_leader(WorkerId(w)));
+        }
+        assert!(Cluster::new(0, 1).validate().is_err());
+        assert!(Cluster::new(4, 0).validate().is_err());
+        assert!(Cluster::with_tiers(4, 2, 100.0, 25.0, 0.5).validate().is_err());
+    }
+
+    #[test]
+    fn cluster_effective_inter_rate() {
+        let c = Cluster::with_tiers(16, 4, 300.0, 100.0, 4.0);
+        assert_eq!(c.effective_inter_gbps(), 25.0);
+    }
+
+    #[test]
+    fn cluster_groups_partition_all_workers() {
+        for (workers, gs) in [(16usize, 4usize), (7, 3), (5, 5), (9, 2), (1, 1)] {
+            let c = Cluster::new(workers, gs);
+            let mut seen = Vec::new();
+            for g in 0..c.n_groups() {
+                let members = c.members_of(g);
+                assert_eq!(members[0], c.group_leader(g));
+                for m in &members {
+                    assert_eq!(c.group_of(*m), g);
+                }
+                seen.extend(members);
+            }
+            assert_eq!(seen, (0..workers).map(WorkerId).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,0 +1,596 @@
+//! `netbn launch` — the end-to-end **multi-process** TCP trainer driver.
+//!
+//! Everything before this module emulates a cluster inside one process.
+//! Here the full trainer path runs over *real* process and socket
+//! boundaries: a coordinator binds a loopback rendezvous port, spawns `N`
+//! worker processes (`netbn _worker`, or threads for in-test smoke runs —
+//! same code path either way), and each worker:
+//!
+//! 1. binds one [`crate::net::mesh::MeshNode`] per transport lane
+//!    (`striped:K` ⇒ `K` listeners, i.e. `K` real connections per peer
+//!    pair),
+//! 2. registers its lane addresses with the coordinator and receives the
+//!    full rank-ordered peer table back (the rendezvous),
+//! 3. runs `steps` synchronous data-parallel steps — barrier, local
+//!    gradient, all-reduce over the configured collective
+//!    (`ring`/`tree`/`ps`/`hier:<g>`), parameter update — timing the
+//!    all-reduce separately from the step,
+//! 4. reports per-step timings and an FNV-1a checksum of its final
+//!    parameter bits.
+//!
+//! The coordinator aggregates: per-step wall clock (slowest worker),
+//! effective **bus bandwidth** (NCCL's convention — the ring-equivalent
+//! wire volume `2·S·(N−1)/N` over the measured all-reduce time,
+//! whichever algorithm ran), and the **bit-identity** of the final
+//! tensors across workers, which is the e2e correctness gate: one flipped
+//! bit anywhere in transport, striping or collective shows up as a
+//! checksum mismatch.
+//!
+//! **Known limitation**: a worker that dies *mid-step* after rendezvous
+//! closes its sockets cleanly, which peers see as EOF-between-frames
+//! (not poison), so survivors block inside the collective and the launch
+//! wedges rather than failing fast. The rendezvous phase itself is
+//! deadline-bounded, process exits are checked after the run, and the CI
+//! jobs carry `timeout-minutes`, so a wedged run is bounded in practice;
+//! liveness-tracking per worker stream is future work.
+
+use crate::collectives::{allreduce, barrier, ring};
+use crate::config::{CollectiveKind, TransportKind};
+use crate::net::mesh::MeshNode;
+use crate::net::striped::{StripeConfig, StripedTransport};
+use crate::net::tcp::connect_retry;
+use crate::net::transport::{SingleStream, Transport};
+use crate::net::Endpoint;
+use crate::topology::WorkerId;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How workers are brought up: real OS processes (the `netbn launch`
+/// default — the point of the driver) or threads running the identical
+/// worker code (the in-test smoke path; rendezvous and data still cross
+/// real loopback sockets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpawnMode {
+    Process,
+    Thread,
+}
+
+impl SpawnMode {
+    pub fn parse(s: &str) -> Option<SpawnMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "process" => Some(SpawnMode::Process),
+            "thread" => Some(SpawnMode::Thread),
+            _ => None,
+        }
+    }
+}
+
+/// Per-worker parameters, identical on every rank (and serialized onto
+/// the `netbn _worker` command line in process mode).
+#[derive(Clone, Debug)]
+pub struct WorkerParams {
+    pub world: usize,
+    pub steps: usize,
+    /// Gradient tensor length (f32 elements).
+    pub elems: usize,
+    pub transport: TransportKind,
+    pub collective: CollectiveKind,
+    pub seed: u64,
+}
+
+/// One `netbn launch` invocation.
+#[derive(Clone, Debug)]
+pub struct LaunchConfig {
+    pub params: WorkerParams,
+    pub spawn: SpawnMode,
+}
+
+impl LaunchConfig {
+    pub fn validate(&self) -> Result<()> {
+        let p = &self.params;
+        anyhow::ensure!(p.world >= 1, "launch needs >= 1 worker");
+        anyhow::ensure!(p.steps >= 1, "launch needs >= 1 step");
+        anyhow::ensure!(p.elems >= 1, "launch needs >= 1 gradient element");
+        if let CollectiveKind::Hierarchical { group_size } = p.collective {
+            anyhow::ensure!(group_size >= 1, "hier group size must be >= 1");
+        }
+        if let TransportKind::Striped { streams } = p.transport {
+            anyhow::ensure!((1..=64).contains(&streams), "launch striped streams in 1..=64");
+        }
+        Ok(())
+    }
+}
+
+/// What the coordinator learned from a finished run.
+#[derive(Clone, Debug)]
+pub struct LaunchReport {
+    pub workers: usize,
+    pub steps: usize,
+    /// Per step: wall clock of the slowest worker (post-barrier).
+    pub step_wall_s: Vec<f64>,
+    /// Per step: all-reduce time of the slowest worker.
+    pub allreduce_s: Vec<f64>,
+    /// NCCL-convention bus bandwidth over the measured all-reduce times.
+    pub effective_bus_gbps: f64,
+    /// FNV-1a checksum of each rank's final parameter bits.
+    pub checksums: Vec<u64>,
+    /// All ranks ended bit-identical.
+    pub identical: bool,
+}
+
+impl LaunchReport {
+    /// The e2e pass criterion: bit-identical tensors and a non-zero
+    /// effective bandwidth (for a multi-worker run — a single worker
+    /// moves no wire bytes by construction).
+    pub fn passed(&self) -> bool {
+        self.identical && (self.workers == 1 || self.effective_bus_gbps > 0.0)
+    }
+
+    /// The per-step timing table both `netbn launch` and the
+    /// `e2e_tcp_smoke` scenario render — one formatter, two surfaces.
+    pub fn step_table(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            format!(
+                "e2e launch: {} workers, {} steps over loopback TCP",
+                self.workers, self.steps
+            ),
+            &["step", "wall (slowest)", "all-reduce (slowest)"],
+        );
+        for (i, (w, a)) in self.step_wall_s.iter().zip(&self.allreduce_s).enumerate() {
+            t.row(vec![
+                i.to_string(),
+                crate::util::fmt::secs(*w),
+                crate::util::fmt::secs(*a),
+            ]);
+        }
+        t
+    }
+}
+
+/// The transport each worker binds over its mesh lanes. Striped lanes use
+/// a smaller chunk than the in-process default so smoke-test-sized
+/// tensors (hundreds of KB) genuinely pipeline instead of traveling
+/// fused.
+fn launch_transport(kind: TransportKind) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Striped { streams } => Box::new(StripedTransport::new(StripeConfig {
+            streams,
+            chunk_bytes: 32 << 10,
+            credit_window: 4,
+        })),
+        _ => Box::new(SingleStream),
+    }
+}
+
+/// FNV-1a over a parameter vector's exact bit patterns (little-endian,
+/// the wire byte order — so the checksum IS the bytes a peer would see).
+pub fn tensor_checksum(xs: &[f32]) -> u64 {
+    crate::util::prop::fnv1a(crate::collectives::f32s_as_bytes(xs))
+}
+
+/// Run a full launch: bind the rendezvous port, bring up the workers,
+/// serve the rendezvous + collection protocol, aggregate the report.
+pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
+    cfg.validate()?;
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator port")?;
+    let addr = listener.local_addr()?;
+    let p = cfg.params.clone();
+    match cfg.spawn {
+        SpawnMode::Thread => {
+            let mut workers = Vec::new();
+            for rank in 0..p.world {
+                let p = p.clone();
+                workers.push(std::thread::spawn(move || worker_entry(rank, addr, &p)));
+            }
+            let report = coordinator_serve(&listener, &p, None);
+            for (rank, h) in workers.into_iter().enumerate() {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("worker {rank} panicked"))?
+                    .with_context(|| format!("worker {rank} failed"))?;
+            }
+            report
+        }
+        SpawnMode::Process => {
+            let exe = std::env::current_exe().context("locate the netbn binary")?;
+            let mut children = Vec::new();
+            for rank in 0..p.world {
+                let child = std::process::Command::new(&exe)
+                    .arg("_worker")
+                    .arg("--rank")
+                    .arg(rank.to_string())
+                    .arg("--world")
+                    .arg(p.world.to_string())
+                    .arg("--coordinator")
+                    .arg(addr.to_string())
+                    .arg("--steps")
+                    .arg(p.steps.to_string())
+                    .arg("--elems")
+                    .arg(p.elems.to_string())
+                    .arg("--transport")
+                    .arg(p.transport.to_string())
+                    .arg("--collective")
+                    .arg(p.collective.to_string())
+                    .arg("--seed")
+                    .arg(p.seed.to_string())
+                    .spawn()
+                    .with_context(|| format!("spawn worker process {rank}"))?;
+                children.push(child);
+            }
+            let report = coordinator_serve(&listener, &p, Some(&mut children));
+            if let Err(e) = report {
+                // The coordinator's error is the root cause; kill and reap
+                // the children without letting their (killed) exit
+                // statuses mask it.
+                for c in &mut children {
+                    let _ = c.kill();
+                }
+                for mut c in children {
+                    let _ = c.wait();
+                }
+                return Err(e);
+            }
+            for (rank, mut c) in children.into_iter().enumerate() {
+                let status = c.wait().with_context(|| format!("wait for worker {rank}"))?;
+                anyhow::ensure!(status.success(), "worker process {rank} exited with {status}");
+            }
+            report
+        }
+    }
+}
+
+/// Accept `world` workers, run the rendezvous, collect the results. In
+/// process mode `children` lets the rendezvous loop detect a worker that
+/// died before registering and fail fast with its exit status instead of
+/// waiting out the deadline.
+fn coordinator_serve(
+    listener: &TcpListener,
+    p: &WorkerParams,
+    mut children: Option<&mut Vec<std::process::Child>>,
+) -> Result<LaunchReport> {
+    let lanes = launch_transport(p.transport).lanes();
+    let mut streams: Vec<Option<TcpStream>> = (0..p.world).map(|_| None).collect();
+    let mut readers: Vec<Option<BufReader<TcpStream>>> = (0..p.world).map(|_| None).collect();
+    // lane_addrs[rank][lane]
+    let mut lane_addrs: Vec<Vec<SocketAddr>> = vec![Vec::new(); p.world];
+    // Non-blocking accept with a deadline: a worker that dies before
+    // registering must fail the launch, not hang it (a blocking accept
+    // would wait forever for the hello that never comes).
+    listener.set_nonblocking(true).context("set rendezvous listener non-blocking")?;
+    let rendezvous_deadline = Instant::now() + Duration::from_secs(60);
+    for _ in 0..p.world {
+        let stream = loop {
+            match listener.accept() {
+                Ok((stream, _)) => break stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(children) = children.as_deref_mut() {
+                        for (rank, c) in children.iter_mut().enumerate() {
+                            if let Ok(Some(status)) = c.try_wait() {
+                                anyhow::ensure!(
+                                    status.success(),
+                                    "worker process {rank} exited with {status} before registering"
+                                );
+                            }
+                        }
+                    }
+                    let missing = streams.iter().filter(|s| s.is_none()).count();
+                    anyhow::ensure!(
+                        Instant::now() < rendezvous_deadline,
+                        "rendezvous timed out: {missing} of {} workers never registered",
+                        p.world
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accept worker rendezvous"),
+            }
+        };
+        // Accepted sockets may inherit non-blocking on some platforms;
+        // the protocol below wants plain blocking reads.
+        stream.set_nonblocking(false).context("restore blocking rendezvous stream")?;
+        stream.set_read_timeout(Some(Duration::from_secs(120))).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line).context("read worker hello")?;
+        let mut it = line.split_whitespace();
+        anyhow::ensure!(it.next() == Some("hello"), "bad rendezvous greeting {line:?}");
+        let rank: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("hello without a rank: {line:?}"))?;
+        anyhow::ensure!(rank < p.world, "hello from rank {rank} in a world of {}", p.world);
+        anyhow::ensure!(streams[rank].is_none(), "rank {rank} registered twice");
+        let addrs: Vec<SocketAddr> = it
+            .map(|s| s.parse().context("bad lane address in hello"))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(
+            addrs.len() == lanes,
+            "rank {rank} registered {} lane addresses, transport needs {lanes}",
+            addrs.len()
+        );
+        lane_addrs[rank] = addrs;
+        streams[rank] = Some(stream);
+        readers[rank] = Some(reader);
+    }
+    // Broadcast the full rank-major peer table.
+    let mut peers = format!("peers {lanes} {}", p.world);
+    for rank_addrs in &lane_addrs {
+        for a in rank_addrs {
+            peers.push(' ');
+            peers.push_str(&a.to_string());
+        }
+    }
+    peers.push('\n');
+    for s in streams.iter_mut().flatten() {
+        s.write_all(peers.as_bytes()).context("send peer table")?;
+    }
+    // Collect results. The training loop runs for as long as steps ×
+    // tensor size dictate, so the rendezvous-phase read timeout must not
+    // apply here — a dead worker is detected by EOF (its socket closes),
+    // not by a clock.
+    for s in streams.iter().flatten() {
+        s.set_read_timeout(None).ok();
+    }
+    let mut step_wall = vec![0.0f64; p.steps];
+    let mut ar = vec![0.0f64; p.steps];
+    let mut checksums = vec![0u64; p.world];
+    for rank in 0..p.world {
+        let reader = readers[rank].as_mut().expect("registered above");
+        let mut line = String::new();
+        reader.read_line(&mut line).with_context(|| format!("read done from rank {rank}"))?;
+        let mut it = line.split_whitespace();
+        anyhow::ensure!(it.next() == Some("done"), "bad completion line {line:?}");
+        let done_rank: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("done without a rank: {line:?}"))?;
+        anyhow::ensure!(done_rank == rank, "rank {rank} stream reported rank {done_rank}");
+        let checksum = it
+            .next()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow::anyhow!("done without a checksum: {line:?}"))?;
+        let ar_times = parse_csv_f64(it.next().unwrap_or(""), p.steps)
+            .with_context(|| format!("rank {rank} all-reduce timings"))?;
+        let walls = parse_csv_f64(it.next().unwrap_or(""), p.steps)
+            .with_context(|| format!("rank {rank} step timings"))?;
+        checksums[rank] = checksum;
+        for s in 0..p.steps {
+            ar[s] = ar[s].max(ar_times[s]);
+            step_wall[s] = step_wall[s].max(walls[s]);
+        }
+    }
+    // Release the workers (they hold their fabrics open until everyone is
+    // done, so no rank tears down lanes a peer still needs).
+    for s in streams.iter_mut().flatten() {
+        let _ = s.write_all(b"bye\n");
+    }
+    let identical = checksums.windows(2).all(|w| w[0] == w[1]);
+    let s_bytes = (p.elems * 4) as f64;
+    let wire = ring::wire_bytes_per_worker(s_bytes, p.world);
+    let mean_ar = ar.iter().sum::<f64>() / p.steps as f64;
+    let effective_bus_gbps = if wire > 0.0 && mean_ar > 0.0 {
+        crate::bytes_per_sec_to_gbps(wire / mean_ar)
+    } else {
+        0.0
+    };
+    Ok(LaunchReport {
+        workers: p.world,
+        steps: p.steps,
+        step_wall_s: step_wall,
+        allreduce_s: ar,
+        effective_bus_gbps,
+        checksums,
+        identical,
+    })
+}
+
+fn parse_csv_f64(s: &str, want: usize) -> Result<Vec<f64>> {
+    let v: Vec<f64> = s
+        .split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<f64>().map_err(|_| anyhow::anyhow!("bad timing {p:?}")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(v.len() == want, "expected {want} timings, got {}", v.len());
+    Ok(v)
+}
+
+/// One worker's whole life, process or thread: rendezvous, fabric, the
+/// synchronous training loop, the completion report. This is what
+/// `netbn _worker` calls.
+pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> Result<()> {
+    anyhow::ensure!(rank < p.world, "rank {rank} out of a world of {}", p.world);
+    let transport = launch_transport(p.transport);
+    let lanes = transport.lanes();
+    // One mesh listener per lane: `striped:K` really is K connections per
+    // peer pair across process boundaries.
+    let mut nodes = Vec::with_capacity(lanes);
+    for _ in 0..lanes {
+        nodes.push(MeshNode::bind(WorkerId(rank), p.world)?);
+    }
+    // Rendezvous: register lane addresses, receive everyone's.
+    let mut coord = connect_retry(coordinator, Duration::from_secs(10))
+        .context("connect to coordinator")?;
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let mut hello = format!("hello {rank}");
+    for n in &nodes {
+        hello.push(' ');
+        hello.push_str(&n.addr().to_string());
+    }
+    hello.push('\n');
+    coord.write_all(hello.as_bytes()).context("send hello")?;
+    let mut reader = BufReader::new(coord.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read peer table")?;
+    let mut it = line.split_whitespace();
+    anyhow::ensure!(it.next() == Some("peers"), "bad peer table line {line:?}");
+    let got_lanes: usize = it
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("peer table missing lane count: {line:?}"))?;
+    let got_world: usize = it
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("peer table missing world size: {line:?}"))?;
+    anyhow::ensure!(
+        got_lanes == lanes && got_world == p.world,
+        "peer table shape {got_world}x{got_lanes}, expected {}x{lanes}",
+        p.world
+    );
+    let flat: Vec<SocketAddr> =
+        it.map(|s| s.parse().context("bad peer address")).collect::<Result<_>>()?;
+    anyhow::ensure!(flat.len() == p.world * lanes, "peer table truncated");
+    // flat is rank-major: entry w*lanes + l.
+    let mut lane_eps: Vec<Arc<dyn Endpoint>> = Vec::with_capacity(lanes);
+    for (l, node) in nodes.into_iter().enumerate() {
+        let addrs: Vec<SocketAddr> = (0..p.world).map(|w| flat[w * lanes + l]).collect();
+        lane_eps.push(node.connect(addrs)? as Arc<dyn Endpoint>);
+    }
+    let ep = transport.bind(lane_eps)?;
+
+    // ---- The synchronous data-parallel loop. ----
+    let mut params = vec![0.0f32; p.elems];
+    let mut rng = Rng::new(p.seed ^ ((rank as u64) << 32));
+    let mut ar_times = Vec::with_capacity(p.steps);
+    let mut walls = Vec::with_capacity(p.steps);
+    let inv_world = 1.0f32 / p.world as f32;
+    for step in 0..p.steps {
+        barrier(ep.as_ref(), step as u32)?;
+        let t_step = Instant::now();
+        // Local gradient: different on every rank (seeded), summed by the
+        // collective — the data-parallel contract.
+        let mut grad = vec![0.0f32; p.elems];
+        rng.fill_f32(&mut grad, 1.0);
+        let t_ar = Instant::now();
+        allreduce(p.collective, ep.as_ref(), step as u32, 0, &mut grad)?;
+        ar_times.push(t_ar.elapsed().as_secs_f64());
+        // Averaged-gradient step: identical arithmetic on identical sums
+        // keeps every rank's parameters bit-identical.
+        for (w, g) in params.iter_mut().zip(&grad) {
+            *w -= 0.05 * g * inv_world;
+        }
+        walls.push(t_step.elapsed().as_secs_f64());
+    }
+    let checksum = tensor_checksum(&params);
+
+    // Report and wait for the global release before tearing down lanes.
+    let mut done = format!("done {rank} {checksum:x} ");
+    done.push_str(&join_csv(&ar_times));
+    done.push(' ');
+    done.push_str(&join_csv(&walls));
+    done.push('\n');
+    // The release only arrives once the SLOWEST worker reports done, an
+    // unbounded wait for fast ranks — no read timeout here; a dead
+    // coordinator surfaces as EOF.
+    coord.set_read_timeout(None).ok();
+    coord.write_all(done.as_bytes()).context("send done")?;
+    let mut bye = String::new();
+    reader.read_line(&mut bye).context("read release")?;
+    anyhow::ensure!(bye.trim() == "bye", "bad release line {bye:?}");
+    Ok(())
+}
+
+fn join_csv(xs: &[f64]) -> String {
+    xs.iter().map(|x| format!("{x:.9}")).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn thread_cfg(world: usize, collective: CollectiveKind, transport: TransportKind) -> LaunchConfig {
+        LaunchConfig {
+            params: WorkerParams {
+                world,
+                steps: 2,
+                elems: 20_000,
+                transport,
+                collective,
+                seed: 0xe2e,
+            },
+            spawn: SpawnMode::Thread,
+        }
+    }
+
+    #[test]
+    fn launch_ring_over_single_stream() {
+        let r = launch(&thread_cfg(3, CollectiveKind::Ring, TransportKind::Tcp)).unwrap();
+        assert_eq!(r.workers, 3);
+        assert_eq!(r.steps, 2);
+        assert!(r.identical, "checksums {:?}", r.checksums);
+        assert!(r.effective_bus_gbps > 0.0);
+        assert!(r.passed());
+        assert_eq!(r.step_wall_s.len(), 2);
+        assert!(r.step_wall_s.iter().all(|t| *t > 0.0));
+        assert!(r.allreduce_s.iter().all(|t| *t > 0.0));
+    }
+
+    #[test]
+    fn launch_hier_over_striped() {
+        // The tentpole combination: leader-ring collective over striped
+        // lanes, real sockets between workers.
+        let r = launch(&thread_cfg(
+            4,
+            CollectiveKind::Hierarchical { group_size: 2 },
+            TransportKind::Striped { streams: 2 },
+        ))
+        .unwrap();
+        assert!(r.identical, "checksums {:?}", r.checksums);
+        assert!(r.effective_bus_gbps > 0.0);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn launch_deterministic_checksum_across_runs() {
+        // Same seed, same world -> the same final bits, run to run; and
+        // ring vs hier agree within tolerance but need not be bit-equal
+        // (different summation order).
+        let a = launch(&thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp)).unwrap();
+        let b = launch(&thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp)).unwrap();
+        assert_eq!(a.checksums, b.checksums);
+    }
+
+    #[test]
+    fn launch_single_worker_degenerates() {
+        let r = launch(&thread_cfg(1, CollectiveKind::Ring, TransportKind::Tcp)).unwrap();
+        assert!(r.identical);
+        assert_eq!(r.effective_bus_gbps, 0.0);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn launch_rejects_degenerate_configs() {
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.steps = 0;
+        assert!(launch(&cfg).is_err());
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.elems = 0;
+        assert!(launch(&cfg).is_err());
+    }
+
+    #[test]
+    fn spawn_mode_parse() {
+        assert_eq!(SpawnMode::parse("process"), Some(SpawnMode::Process));
+        assert_eq!(SpawnMode::parse("Thread"), Some(SpawnMode::Thread));
+        assert_eq!(SpawnMode::parse("fork"), None);
+    }
+
+    #[test]
+    fn checksum_is_bit_sensitive() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1);
+        assert_ne!(tensor_checksum(&a), tensor_checksum(&b));
+        assert_eq!(tensor_checksum(&a), tensor_checksum(&a));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let xs = vec![0.001, 2.5, 0.0];
+        assert_eq!(parse_csv_f64(&join_csv(&xs), 3).unwrap(), xs);
+        assert!(parse_csv_f64("1,2", 3).is_err());
+        assert!(parse_csv_f64("1,x,3", 3).is_err());
+    }
+}

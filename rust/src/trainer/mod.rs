@@ -16,12 +16,18 @@
 //! Payload scaling: emulated runs shrink gradient *bytes* and NIC *rate*
 //! by the same factor `payload_scale`, leaving every time ratio intact
 //! while fitting hundreds of MB of model on loopback.
+//!
+//! A third engine, [`launch`], drops the emulation entirely: `netbn
+//! launch` spawns real worker *processes* on loopback TCP (rendezvous
+//! via a coordinator port) and runs synchronous data-parallel steps over
+//! the striped transport end to end.
 
+pub mod launch;
 pub mod xla;
 
 use crate::collectives::fusion::{FusionBuffer, GradTensor};
-use crate::collectives::{barrier, ring::ring_allreduce};
-use crate::config::{ExperimentConfig, TransportKind};
+use crate::collectives::{allreduce, barrier};
+use crate::config::{CollectiveKind, ExperimentConfig, TransportKind};
 use crate::measure::PhaseTimes;
 use crate::models::timing::{backward_trace, StepTrace};
 use crate::net::kernel_tcp::KernelTcpModel;
@@ -70,8 +76,12 @@ pub struct RunReport {
 }
 
 /// A worker's view of one emulated step: sleeps through the trace, pushes
-/// tensors to the comm thread, then waits for sync completion.
+/// tensors to the comm thread, then waits for sync completion. The flat
+/// ring is prebuilt once per run so the per-bucket comm path allocates
+/// nothing for the common ring collective; other collectives go through
+/// the [`allreduce`] dispatcher.
 struct CommPlan {
+    collective: CollectiveKind,
     ring: Ring,
     compression_ratio: f64,
 }
@@ -183,7 +193,6 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
     };
     let endpoints = fabric.endpoints();
 
-    let ring = topo.flat_ring();
     let steps_total = exp.warmup_steps + exp.steps;
     // The striped transport is still the same software stack (hooks,
     // negotiation): only its ceiling changes.
@@ -198,9 +207,14 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
     let timeline = Arc::new(bucket_timeline(&trace, exp.fusion));
 
     let mut handles = Vec::new();
+    let ring = topo.flat_ring();
     for ep in endpoints {
         let trace = trace.clone();
-        let plan = CommPlan { ring: ring.clone(), compression_ratio: exp.compression.ratio() };
+        let plan = CommPlan {
+            collective: exp.collective,
+            ring: ring.clone(),
+            compression_ratio: exp.compression.ratio(),
+        };
         let payload_scale = cfg.payload_scale;
         let bucket_count = Arc::clone(&bucket_count);
         let timeline = Arc::clone(&timeline);
@@ -302,7 +316,18 @@ fn worker_main(
                     if coord_latency > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(coord_latency));
                     }
-                    ring_allreduce(comm_ep.as_ref(), &plan.ring, step, seq, &mut data)?;
+                    match plan.collective {
+                        CollectiveKind::Ring => {
+                            crate::collectives::ring::ring_allreduce(
+                                comm_ep.as_ref(),
+                                &plan.ring,
+                                step,
+                                seq,
+                                &mut data,
+                            )?;
+                        }
+                        other => allreduce(other, comm_ep.as_ref(), step, seq, &mut data)?,
+                    }
                     std::hint::black_box(&data);
                 }
                 CommMsg::EndStep { reply } => {
@@ -459,6 +484,18 @@ mod tests {
         assert!(r.step_time_s > 0.0);
         assert!(r.scaling_factor > 0.2 && r.scaling_factor <= 1.05, "{}", r.scaling_factor);
         assert!(r.buckets_per_step >= 1.0);
+    }
+
+    #[test]
+    fn hierarchical_emulation_completes_and_reports() {
+        // The leader-ring collective over the emulated fabric: 4 workers
+        // in groups of 2 (`--collective hier:2`).
+        let mut cfg = quick_cfg(4, 25.0, TransportKind::FullUtilization);
+        cfg.exp.collective = crate::config::CollectiveKind::Hierarchical { group_size: 2 };
+        let r = run_emulated(&cfg).unwrap();
+        assert_eq!(r.workers, 4);
+        assert!(r.step_time_s > 0.0);
+        assert!(r.scaling_factor > 0.1 && r.scaling_factor <= 1.05, "{}", r.scaling_factor);
     }
 
     #[test]

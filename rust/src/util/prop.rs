@@ -42,8 +42,9 @@ where
     prop(&mut rng)
 }
 
-/// FNV-1a hash for stable name→seed derivation.
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a hash — stable name→seed derivation here, and the tensor
+/// bit-pattern checksum in [`crate::trainer::launch`].
+pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;

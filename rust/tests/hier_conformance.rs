@@ -1,0 +1,242 @@
+//! Hierarchical-collective conformance: `hier:<g>` must be invisible to
+//! the math across every fabric × transport combination, and — under
+//! exact arithmetic — indistinguishable from the flat collectives.
+//!
+//! Float addition is not associative, so hier (group sums, then a leader
+//! ring) and a flat ring (one sequential ring) may legitimately differ in
+//! the last ulp on arbitrary inputs. The cross-check therefore uses
+//! **integer-valued** f32 inputs whose sums stay far below 2^24: every
+//! summation order is then exact, and bit-identity across *algorithms*
+//! (ring / tree / ps / hier:g) is a hard requirement, not a tolerance.
+//! On arbitrary float inputs, the suite still requires bit-identity
+//! across fabrics and transports *for the same algorithm* (each
+//! algorithm's reduction order is deterministic), plus agreement with the
+//! serial sum within float tolerance.
+
+use netbn::collectives::hierarchical::hier_allreduce;
+use netbn::collectives::reduce::serial_sum;
+use netbn::collectives::ring::ring_allreduce;
+use netbn::collectives::{ps::ps_allreduce, tree::tree_allreduce};
+use netbn::net::striped::{StripeConfig, StripedTransport};
+use netbn::net::transport::{SingleStream, Transport, TransportFabric};
+use netbn::net::Fabric;
+use netbn::topology::{Cluster, Topology};
+use netbn::util::{prop, Rng};
+use std::thread;
+
+const WORKERS: usize = 4;
+/// Uneven length: ragged chunks in both the group and leader rings.
+const LEN: usize = 1003;
+
+fn test_stripe_cfg() -> StripeConfig {
+    StripeConfig { streams: 4, chunk_bytes: 512, credit_window: 1 }
+}
+
+/// Integer-valued inputs: every f32 holds a small integer, so sums are
+/// exact in any order and bit-identity across algorithms is well-defined.
+fn integer_inputs() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x41e9);
+    (0..WORKERS)
+        .map(|_| (0..LEN).map(|_| (rng.next_below(2001) as i64 - 1000) as f32).collect())
+        .collect()
+}
+
+fn float_inputs() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0xf10a7);
+    (0..WORKERS)
+        .map(|_| {
+            let mut v = vec![0.0f32; LEN];
+            rng.fill_f32(&mut v, 2.0);
+            v
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+enum FabricKind {
+    Inproc,
+    Tcp,
+}
+
+fn build_fabric(kind: FabricKind, transport: &dyn Transport) -> Box<dyn Fabric> {
+    match kind {
+        FabricKind::Inproc => {
+            Box::new(TransportFabric::inproc(WORKERS, transport, None).unwrap())
+        }
+        FabricKind::Tcp => Box::new(TransportFabric::tcp(WORKERS, transport, None).unwrap()),
+    }
+}
+
+/// Run one algorithm over the fabric and return every worker's result.
+fn run_algo(fabric: &dyn Fabric, algo: Algo, inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let mut handles = Vec::new();
+    for (ep, mut data) in fabric.endpoints().into_iter().zip(inputs) {
+        handles.push(thread::spawn(move || {
+            match algo {
+                Algo::Ring => {
+                    let ring = Topology::new(WORKERS, 1).flat_ring();
+                    ring_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                }
+                Algo::Tree => {
+                    let ring = Topology::new(WORKERS, 1).flat_ring();
+                    tree_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                }
+                Algo::Ps => {
+                    let ring = Topology::new(WORKERS, 1).flat_ring();
+                    ps_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                }
+                Algo::Hier(g) => {
+                    let cluster = Cluster::new(WORKERS, g);
+                    hier_allreduce(ep.as_ref(), &cluster, 0, 0, &mut data).unwrap();
+                }
+            }
+            data
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Algo {
+    Ring,
+    Tree,
+    Ps,
+    Hier(usize),
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Exact-arithmetic cross-check: with integer-valued inputs, hier:g is
+/// bit-identical to flat ring (and tree and ps) across {inproc, tcp} ×
+/// {single, striped:4} for every group size.
+#[test]
+fn hier_bit_identical_to_flat_collectives_on_exact_inputs() {
+    let inputs = integer_inputs();
+    let mut reference: Option<Vec<u32>> = None;
+    let algos = [
+        Algo::Ring,
+        Algo::Tree,
+        Algo::Ps,
+        Algo::Hier(1),
+        Algo::Hier(2),
+        Algo::Hier(3), // ragged: groups {0,1,2} {3}
+        Algo::Hier(WORKERS),
+    ];
+    for algo in algos {
+        for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+            let single = SingleStream;
+            let striped = StripedTransport::new(test_stripe_cfg());
+            let transports: [(&str, &dyn Transport); 2] =
+                [("single", &single), ("striped:4", &striped)];
+            for (tname, transport) in transports {
+                let fabric = build_fabric(fabric_kind, transport);
+                let results = run_algo(fabric.as_ref(), algo, inputs.clone());
+                let first = bits(&results[0]);
+                for (w, r) in results.iter().enumerate() {
+                    assert_eq!(
+                        bits(r),
+                        first,
+                        "{algo:?} over {fabric_kind:?}/{tname}: rank {w} disagrees"
+                    );
+                }
+                match &reference {
+                    None => reference = Some(first),
+                    Some(want) => assert_eq!(
+                        &first, want,
+                        "{algo:?} over {fabric_kind:?}/{tname}: differs from flat ring bits"
+                    ),
+                }
+            }
+        }
+    }
+    // The reference really is the sum.
+    let want: Vec<u32> = bits(&serial_sum(&integer_inputs()));
+    assert_eq!(reference.unwrap(), want);
+}
+
+/// On arbitrary floats, hier's reduction order is deterministic, so for a
+/// FIXED group size the result is bit-identical across every fabric ×
+/// transport — and close to the serial sum.
+#[test]
+fn hier_transport_invariant_on_float_inputs() {
+    let inputs = float_inputs();
+    let want = serial_sum(&inputs);
+    for g in [2usize, 3] {
+        let mut reference: Option<Vec<u32>> = None;
+        for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+            let single = SingleStream;
+            let striped = StripedTransport::new(test_stripe_cfg());
+            let transports: [(&str, &dyn Transport); 2] =
+                [("single", &single), ("striped:4", &striped)];
+            for (tname, transport) in transports {
+                let fabric = build_fabric(fabric_kind, transport);
+                let results = run_algo(fabric.as_ref(), Algo::Hier(g), inputs.clone());
+                let first = bits(&results[0]);
+                for r in &results {
+                    assert_eq!(bits(r), first, "hier:{g} {fabric_kind:?}/{tname}");
+                }
+                match &reference {
+                    None => reference = Some(first),
+                    Some(wantb) => {
+                        assert_eq!(&first, wantb, "hier:{g} {fabric_kind:?}/{tname} drifted")
+                    }
+                }
+                for (a, b) in results[0].iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-3, "hier:{g}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+/// Property test over odd/uneven group sizes and world sizes: hier always
+/// matches the serial sum, all ranks bitwise-agree, and with integer
+/// inputs it is bit-identical to the flat ring.
+#[test]
+fn property_hier_over_uneven_groups() {
+    prop::forall("hier conformance over ragged shapes", 10, |rng| {
+        let n = prop::usize_in(rng, 2..=5);
+        let g = prop::usize_in(rng, 1..=n + 2); // deliberately allows g > n
+        let len = prop::usize_in(rng, 1..=300);
+        // Integer-valued inputs keep every summation order exact.
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| (rng.next_below(201) as i64 - 100) as f32).collect())
+            .collect();
+
+        let fab = netbn::net::inproc::InProcFabric::new(n);
+        let cluster = Cluster::new(n, g);
+        let mut handles = Vec::new();
+        for (ep, mut data) in fab.endpoints().into_iter().zip(inputs.clone()) {
+            handles.push(thread::spawn(move || {
+                hier_allreduce(ep.as_ref(), &cluster, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        let hier: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        let fab2 = netbn::net::inproc::InProcFabric::new(n);
+        let ring = Topology::new(n, 1).flat_ring();
+        let mut handles = Vec::new();
+        for (ep, mut data) in fab2.endpoints().into_iter().zip(inputs) {
+            let ring = ring.clone();
+            handles.push(thread::spawn(move || {
+                ring_allreduce(ep.as_ref(), &ring, 0, 0, &mut data).unwrap();
+                data
+            }));
+        }
+        let flat: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        let first = bits(&hier[0]);
+        for (w, r) in hier.iter().enumerate() {
+            if bits(r) != first {
+                return Err(format!("n={n} g={g}: rank {w} bitwise-disagrees"));
+            }
+        }
+        if first != bits(&flat[0]) {
+            return Err(format!("n={n} g={g}: hier bits differ from flat ring"));
+        }
+        Ok(())
+    });
+}
