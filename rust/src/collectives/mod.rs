@@ -17,13 +17,16 @@ pub mod tree;
 
 use crate::config::CollectiveKind;
 use crate::net::{tag, tags, Endpoint};
-use crate::topology::Cluster;
+use crate::topology::{Cluster, Ring};
 use crate::Result;
+use anyhow::Context as _;
 
 /// Dispatch one all-reduce through the configured algorithm. `ring`,
 /// `tree` and `ps` run over the flat rank ring; `hier:<g>` runs the
 /// two-phase leader-ring scheme over a [`Cluster`] grouping of the
 /// fabric's world. This is the single knob behind `--collective`.
+/// Builds the topology per call — hot paths that run many buckets use
+/// [`allreduce_prepared`] instead.
 pub fn allreduce(
     kind: CollectiveKind,
     ep: &dyn Endpoint,
@@ -31,18 +34,38 @@ pub fn allreduce(
     bucket: u32,
     data: &mut [f32],
 ) -> Result<()> {
-    let flat = || crate::topology::Topology::new(ep.world(), 1).flat_ring();
+    let flat = crate::topology::Topology::new(ep.world(), 1).flat_ring();
+    let cluster = match kind {
+        CollectiveKind::Hierarchical { group_size } => {
+            Some(Cluster::new(ep.world(), group_size))
+        }
+        _ => None,
+    };
+    allreduce_prepared(kind, ep, &flat, cluster.as_ref(), step, bucket, data)
+}
+
+/// [`allreduce`] with caller-prebuilt topology, so a per-bucket comm path
+/// (the async collective engine runs one of these per bucket) allocates
+/// nothing. `cluster` is required for — and only read by — the
+/// hierarchical kind.
+pub fn allreduce_prepared(
+    kind: CollectiveKind,
+    ep: &dyn Endpoint,
+    flat: &Ring,
+    cluster: Option<&Cluster>,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> Result<()> {
     match kind {
-        CollectiveKind::Ring => ring::ring_allreduce(ep, &flat(), step, bucket, data),
-        CollectiveKind::Tree => tree::tree_allreduce(ep, &flat(), step, bucket, data),
-        CollectiveKind::ParameterServer => ps::ps_allreduce(ep, &flat(), step, bucket, data),
-        CollectiveKind::Hierarchical { group_size } => hierarchical::hier_allreduce(
-            ep,
-            &Cluster::new(ep.world(), group_size),
-            step,
-            bucket,
-            data,
-        ),
+        CollectiveKind::Ring => ring::ring_allreduce(ep, flat, step, bucket, data),
+        CollectiveKind::Tree => tree::tree_allreduce(ep, flat, step, bucket, data),
+        CollectiveKind::ParameterServer => ps::ps_allreduce(ep, flat, step, bucket, data),
+        CollectiveKind::Hierarchical { .. } => {
+            let cluster =
+                cluster.context("hierarchical all-reduce needs a prebuilt Cluster")?;
+            hierarchical::hier_allreduce(ep, cluster, step, bucket, data)
+        }
     }
 }
 

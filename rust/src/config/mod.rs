@@ -110,6 +110,44 @@ impl fmt::Display for CollectiveKind {
     }
 }
 
+/// Whether gradient aggregation overlaps backward compute — the knob the
+/// overlap scheduler ([`crate::sched`]) adds next to `--transport` and
+/// `--collective`. `Off` is the serialized compute-then-all-reduce
+/// baseline the paper measures against; `Buckets` flushes size-threshold
+/// buckets into the async collective engine as backward layers complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Blocking: every bucket's all-reduce starts only after backward
+    /// finishes. Same bucket decomposition and collective order as
+    /// `Buckets`, so the two modes are bit-identical — only *when* the
+    /// communication runs differs.
+    Off,
+    /// Overlapped: buckets are submitted to the background collective
+    /// engine the moment their last layer's gradient is ready.
+    #[default]
+    Buckets,
+}
+
+impl OverlapMode {
+    /// Accepted spellings: `off`/`blocking`/`none`, `buckets`/`on`.
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "blocking" | "none" => Some(OverlapMode::Off),
+            "buckets" | "on" | "bucketized" => Some(OverlapMode::Buckets),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OverlapMode::Off => f.write_str("off"),
+            OverlapMode::Buckets => f.write_str("buckets"),
+        }
+    }
+}
+
 /// Horovod-style gradient fusion ("tensor fusion") parameters. Paper §3.1:
 /// "a timeout window of 5 ms and a gradients buffer size of 64 MB".
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -221,6 +259,13 @@ pub struct ExperimentConfig {
     pub bandwidth_gbps: f64,
     pub transport: TransportKind,
     pub collective: CollectiveKind,
+    /// Compute/communication overlap policy (see [`crate::sched`]).
+    pub overlap: OverlapMode,
+    /// Bucketizer size threshold in MB. `<= 0` keeps the paper's fusion
+    /// buffer (64 MB / 5 ms) as the bucket source; `> 0` switches to the
+    /// DDP-style reverse-order size-threshold bucketizer
+    /// ([`crate::sched::bucket`]).
+    pub bucket_mb: f64,
     pub fusion: FusionConfig,
     pub compression: Compression,
     /// Measured steps (after warmup).
@@ -239,6 +284,8 @@ impl Default for ExperimentConfig {
             bandwidth_gbps: 100.0,
             transport: TransportKind::KernelTcp,
             collective: CollectiveKind::Ring,
+            overlap: OverlapMode::Buckets,
+            bucket_mb: 0.0,
             fusion: FusionConfig::default(),
             compression: Compression::None,
             steps: 30,
@@ -286,6 +333,9 @@ impl ExperimentConfig {
             if group_size == 0 {
                 errs.push("hierarchical collective group_size must be >= 1".into());
             }
+        }
+        if !self.bucket_mb.is_finite() {
+            errs.push("bucket_mb must be finite (0 = fusion-buffer bucketing)".into());
         }
         let ratio = self.compression.ratio();
         if !ratio.is_finite() || ratio < 1.0 {
@@ -375,6 +425,29 @@ mod tests {
             CollectiveKind::Hierarchical { group_size: 4 }.to_string(),
             "hier:4"
         );
+    }
+
+    #[test]
+    fn overlap_parse_and_display() {
+        assert_eq!(OverlapMode::parse("off"), Some(OverlapMode::Off));
+        assert_eq!(OverlapMode::parse("blocking"), Some(OverlapMode::Off));
+        assert_eq!(OverlapMode::parse("Buckets"), Some(OverlapMode::Buckets));
+        assert_eq!(OverlapMode::parse("on"), Some(OverlapMode::Buckets));
+        assert_eq!(OverlapMode::parse("pipelined"), None);
+        assert_eq!(OverlapMode::Off.to_string(), "off");
+        assert_eq!(OverlapMode::Buckets.to_string(), "buckets");
+        assert_eq!(OverlapMode::default(), OverlapMode::Buckets);
+    }
+
+    #[test]
+    fn validation_rejects_non_finite_bucket_mb() {
+        let mut c = ExperimentConfig::default();
+        c.bucket_mb = f64::NAN;
+        assert!(c.validate().is_err());
+        c.bucket_mb = 0.0;
+        c.validate().unwrap();
+        c.bucket_mb = 25.0;
+        c.validate().unwrap();
     }
 
     #[test]

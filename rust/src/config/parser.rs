@@ -7,7 +7,7 @@
 //! This deliberately covers only what our config files need — it is a
 //! substrate standing in for `toml`+`serde` in the offline build.
 
-use super::{Compression, ExperimentConfig, FusionConfig, TransportKind};
+use super::{Compression, ExperimentConfig, FusionConfig, OverlapMode, TransportKind};
 use crate::config::CollectiveKind;
 use crate::models::ModelId;
 use anyhow::{anyhow, bail, Context, Result};
@@ -133,6 +133,8 @@ fn parse_value(s: &str) -> Result<Value> {
 /// bandwidth_gbps = 100.0
 /// transport = "kernel-tcp"   # full | kernel-tcp | tcp | single | striped:N
 /// collective = "ring"        # ring | tree | ps
+/// overlap = "buckets"        # off | buckets
+/// bucket_mb = 25.0           # 0 = fusion-buffer bucketing
 /// steps = 30
 /// warmup_steps = 5
 /// seed = 1234
@@ -166,6 +168,12 @@ pub fn experiment_from_doc(doc: &Doc) -> Result<ExperimentConfig> {
                 c.collective =
                     CollectiveKind::parse(s).ok_or_else(|| anyhow!("unknown collective {s:?}"))?;
             }
+            "overlap" => {
+                let s = val.as_str().ok_or_else(|| anyhow!("overlap must be a string"))?;
+                c.overlap =
+                    OverlapMode::parse(s).ok_or_else(|| anyhow!("unknown overlap mode {s:?}"))?;
+            }
+            "bucket_mb" => c.bucket_mb = get_f64(val, key)?,
             "steps" => c.steps = get_usize(val, key)?,
             "warmup_steps" => c.warmup_steps = get_usize(val, key)?,
             "seed" => c.seed = get_usize(val, key)? as u64,
@@ -251,6 +259,8 @@ servers = 8
 bandwidth_gbps = 10
 transport = "full"
 collective = "tree"
+overlap = "off"
+bucket_mb = 25.0
 [fusion]
 buffer_mb = 64
 timeout_ms = 5.0
@@ -264,6 +274,8 @@ ratio = 4.0
         assert_eq!(c.bandwidth_gbps, 10.0);
         assert_eq!(c.transport, TransportKind::FullUtilization);
         assert_eq!(c.collective, CollectiveKind::Tree);
+        assert_eq!(c.overlap, OverlapMode::Off);
+        assert_eq!(c.bucket_mb, 25.0);
         assert_eq!(c.compression.ratio(), 4.0);
     }
 

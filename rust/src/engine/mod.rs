@@ -18,9 +18,11 @@
 //!   run <scenario>`; [`ScenarioRegistry::builtin`] registers all 8 paper
 //!   figures, simulate, emulate, validate, the four ablation sweeps,
 //!   the four transport scenarios (`transport_ablation`,
-//!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`) and
+//!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`),
 //!   the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
-//!   `e2e_tcp_smoke`); `netbn list --markdown` renders it as
+//!   `e2e_tcp_smoke`) and the three overlap scenarios
+//!   (`overlap_ablation`, `bucket_size_sweep`,
+//!   `scaling_factor_recovered`); `netbn list --markdown` renders it as
 //!   `docs/SCENARIOS.md`;
 //! * [`bench`] — the perf-regression gate: collect throughput metrics
 //!   from the gated scenarios and compare against `bench/baseline.json`
@@ -38,6 +40,7 @@ pub mod params;
 pub mod registry;
 pub mod runner;
 pub(crate) mod scenarios_hier;
+pub(crate) mod scenarios_overlap;
 pub(crate) mod scenarios_transport;
 pub mod sweep;
 

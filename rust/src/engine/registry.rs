@@ -116,9 +116,11 @@ impl ScenarioRegistry {
     /// All built-in scenarios: the 8 paper figures, the three execution
     /// modes (simulate / emulate / validate), the four ablation sweeps,
     /// the four transport scenarios (`transport_ablation`,
-    /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`) and
+    /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`),
     /// the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
-    /// `e2e_tcp_smoke`).
+    /// `e2e_tcp_smoke`) and the three overlap scenarios
+    /// (`overlap_ablation`, `bucket_size_sweep`,
+    /// `scaling_factor_recovered`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -162,6 +164,18 @@ impl ScenarioRegistry {
                 ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "25"),
                 ParamSpec::new("transport", "full|kernel-tcp|striped:N", ParamKind::Transport, "full"),
                 ParamSpec::new("collective", "ring|tree|ps|hier:<g>", ParamKind::Collective, "ring"),
+                ParamSpec::new(
+                    "overlap",
+                    "submit buckets during backward (buckets) or after (off)",
+                    ParamKind::Choice(&["off", "buckets"]),
+                    "buckets",
+                ),
+                ParamSpec::new(
+                    "bucket-mb",
+                    "DDP-style bucket threshold MB (0 = fusion buffer)",
+                    ParamKind::Float,
+                    "0",
+                ),
                 ParamSpec::new("steps", "measured steps", ParamKind::Int, "5"),
                 ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "256"),
                 ParamSpec::new("compression", "wire ratio or codec", ParamKind::Compression, "1"),
@@ -215,6 +229,7 @@ impl ScenarioRegistry {
         .expect("builtin registration");
         super::scenarios_transport::register(&mut r).expect("builtin registration");
         super::scenarios_hier::register(&mut r).expect("builtin registration");
+        super::scenarios_overlap::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -317,13 +332,14 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 22, "only {} scenarios", r.len());
+        assert!(r.len() >= 25, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
             "ablate-collectives", "ablate-bw-compression", "transport_ablation",
             "chunk_size_sweep", "fig4_recovered", "utilization_frontier", "hier_vs_flat",
-            "oversub_sweep", "e2e_tcp_smoke",
+            "oversub_sweep", "e2e_tcp_smoke", "overlap_ablation", "bucket_size_sweep",
+            "scaling_factor_recovered",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

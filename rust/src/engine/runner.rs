@@ -146,6 +146,9 @@ impl Runner for EmulateRunner {
         let transport = p.get_transport("transport")?;
         let collective = p.get_collective("collective")?;
         let compression = p.get_compression("compression")?;
+        let overlap = crate::config::OverlapMode::parse(p.get_str("overlap")?)
+            .expect("schema-validated choice");
+        let bucket_mb = p.get_f64("bucket-mb")?;
         let exp = ExperimentConfig {
             model,
             servers,
@@ -153,6 +156,8 @@ impl Runner for EmulateRunner {
             bandwidth_gbps: bw,
             transport,
             collective,
+            overlap,
+            bucket_mb,
             compression,
             steps,
             warmup_steps: 1,

@@ -65,11 +65,18 @@ pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
             ParamSpec::new("transport", "single|tcp|striped:N", ParamKind::Transport, "striped:4"),
             ParamSpec::new("collective", "ring|tree|ps|hier:<g>", ParamKind::Collective, "hier:2"),
             ParamSpec::new(
+                "overlap",
+                "submit buckets during backward (buckets) or after (off)",
+                ParamKind::Choice(&["off", "buckets"]),
+                "off",
+            ),
+            ParamSpec::new(
                 "spawn",
                 "thread (in-test) or process (real `netbn _worker` processes)",
                 ParamKind::Choice(&["thread", "process"]),
                 "thread",
             ),
+            ParamSpec::new("seed", "gradient RNG seed", ParamKind::Int, "3735928559"),
         ]),
         Box::new(E2eSmokeRunner),
     ))?;
@@ -247,6 +254,8 @@ impl super::runner::Runner for E2eSmokeRunner {
             "process" => SpawnMode::Process,
             _ => SpawnMode::Thread,
         };
+        let overlap = crate::config::OverlapMode::parse(p.get_str("overlap")?)
+            .expect("schema-validated choice");
         let cfg = LaunchConfig {
             params: WorkerParams {
                 world: workers,
@@ -254,7 +263,11 @@ impl super::runner::Runner for E2eSmokeRunner {
                 elems,
                 transport: p.get_transport("transport")?,
                 collective: p.get_collective("collective")?,
-                seed: 0xe2e,
+                overlap,
+                bucket_mb: 0.0,
+                layers: 1,
+                compute_us: 0,
+                seed: p.get_usize("seed")? as u64,
             },
             spawn,
         };

@@ -8,6 +8,16 @@
 //! point — independently, so `parallel > 1` fans points out across worker
 //! threads. Each point yields its own [`Outcome`] (or error); one failing
 //! point never aborts the sweep.
+//!
+//! **Per-point seeds.** A scenario that declares a `seed` parameter is
+//! stochastic; if every grid point ran its schema default, each point
+//! would reuse one process-global seed path while its labels claimed an
+//! independent run. [`SweepBuilder::points`] therefore derives a
+//! deterministic per-point seed — a pure function of the scenario name
+//! and the point's grid index, never of thread scheduling — so `--parallel
+//! N` and serial sweeps emit identical CSVs/JSON, point for point, while
+//! distinct points get independent streams. Fixing or sweeping `seed`
+//! explicitly disables the injection.
 
 use super::outcome::Outcome;
 use super::registry::Scenario;
@@ -75,7 +85,9 @@ impl<'a> SweepBuilder<'a> {
     }
 
     /// Expand the cartesian grid. Deterministic: the first axis varies
-    /// slowest, the last fastest.
+    /// slowest, the last fastest. Scenarios declaring a `seed` parameter
+    /// get a derived per-point seed appended (see the module docs) unless
+    /// the caller fixed or swept `seed` themselves.
     pub fn points(&self) -> Vec<Vec<(String, String)>> {
         let mut pts = vec![self.base.clone()];
         for (key, values) in &self.axes {
@@ -88,6 +100,23 @@ impl<'a> SweepBuilder<'a> {
                 }
             }
             pts = next;
+        }
+        let seed_declared =
+            self.scenario.schema().specs().iter().any(|s| s.name == "seed");
+        let seed_pinned = self.base.iter().any(|(k, _)| k == "seed")
+            || self.axes.iter().any(|(k, _)| k == "seed");
+        if seed_declared && !seed_pinned {
+            // Index-derived, not execution-order-derived: point i gets the
+            // same seed whether the sweep runs on 1 thread or N.
+            let name_seed = crate::util::prop::fnv1a(self.scenario.name().as_bytes());
+            for (i, p) in pts.iter_mut().enumerate() {
+                let mut rng = crate::util::Rng::new(
+                    name_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                // Masked to 32 bits: `ParamKind::Int` parses `usize`, and
+                // u32 fits usize on every target.
+                p.push(("seed".to_string(), (rng.next_u64() & 0xFFFF_FFFF).to_string()));
+            }
         }
         pts
     }
@@ -209,6 +238,82 @@ mod tests {
             assert_eq!(r.index, i);
             let out = r.outcome.as_ref().unwrap();
             assert_eq!(out.metric_value("a"), Some((i + 1) as f64));
+        }
+    }
+
+    fn seeded_scenario() -> Scenario {
+        Scenario::from_fn(
+            "seeded-echo",
+            "stochastic scenario: echoes its seed",
+            ParamSchema::new(vec![
+                ParamSpec::new("a", "", ParamKind::Float, "0"),
+                ParamSpec::new("seed", "RNG seed", ParamKind::Int, "1234"),
+            ]),
+            "test",
+            |p| {
+                let mut out = Outcome::new();
+                out.metric("a", p.get_f64("a")?);
+                out.metric("seed", p.get_usize("seed")? as f64);
+                Ok(out)
+            },
+        )
+    }
+
+    #[test]
+    fn per_point_seeds_are_derived_and_distinct() {
+        let sc = seeded_scenario();
+        let pts = SweepBuilder::new(&sc).axis("a", vals(&["1", "2", "3"])).points();
+        let seeds: Vec<&String> = pts
+            .iter()
+            .map(|p| &p.iter().find(|(k, _)| k == "seed").expect("seed injected").1)
+            .collect();
+        assert_eq!(seeds.len(), 3);
+        assert!(seeds[0] != seeds[1] && seeds[1] != seeds[2], "{seeds:?}");
+        // And never the schema default: every point is an independent run.
+        assert!(seeds.iter().all(|s| *s != "1234"), "{seeds:?}");
+    }
+
+    #[test]
+    fn parallel_and_serial_sweeps_emit_identical_results() {
+        // The satellite's contract: same points, same seeds, same
+        // outcomes regardless of --parallel (seeds derive from the point
+        // index, not from thread scheduling).
+        let sc = seeded_scenario();
+        let build = || SweepBuilder::new(&sc).axis("a", vals(&["1", "2", "3", "4"]));
+        let serial = build().run(1);
+        let parallel = build().run(4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.params, p.params);
+            let (so, po) = (s.outcome.as_ref().unwrap(), p.outcome.as_ref().unwrap());
+            assert_eq!(so.metric_value("seed"), po.metric_value("seed"));
+            assert_eq!(so.metric_value("a"), po.metric_value("a"));
+        }
+    }
+
+    #[test]
+    fn explicit_seed_suppresses_injection() {
+        let sc = seeded_scenario();
+        let fixed = SweepBuilder::new(&sc).fix("seed", "42").axis("a", vals(&["1", "2"]));
+        for p in fixed.points() {
+            let seeds: Vec<&str> =
+                p.iter().filter(|(k, _)| k == "seed").map(|(_, v)| v.as_str()).collect();
+            assert_eq!(seeds, vec!["42"]);
+        }
+        let swept = SweepBuilder::new(&sc).axis("seed", vals(&["7", "8"]));
+        let seeds: Vec<String> = swept
+            .points()
+            .iter()
+            .map(|p| p.iter().find(|(k, _)| k == "seed").unwrap().1.clone())
+            .collect();
+        assert_eq!(seeds, vec!["7".to_string(), "8".to_string()]);
+    }
+
+    #[test]
+    fn unseeded_scenarios_get_no_injection() {
+        let sc = echo_scenario();
+        for p in SweepBuilder::new(&sc).axis("a", vals(&["1", "2"])).points() {
+            assert!(p.iter().all(|(k, _)| k != "seed"));
         }
     }
 

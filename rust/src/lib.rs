@@ -35,7 +35,8 @@
 //! | domain | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
 //! | domain | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
 //! | domain | [`measure`] | CPU / link utilization sampling, white-box timing traces |
-//! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps + hierarchical cost model |
+//! | domain | [`sched`] | overlap scheduling: async collective engine (non-blocking handles), DDP-style bucketizer, compute/comm overlap scheduler (`--overlap off\|buckets`, `--bucket-mb`) |
+//! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps + hierarchical and overlap cost models |
 //! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap; `launch` runs real worker processes over loopback TCP |
 //! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
 //! | mode | [`figures`] | per-figure experiment drivers (Fig 1–8) |
@@ -55,6 +56,7 @@ pub mod models;
 pub mod net;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod topology;
 pub mod trainer;

@@ -74,6 +74,8 @@ fn app() -> App {
                     OptSpec::optional("bandwidth", "provisioned Gbps (default 25)"),
                     OptSpec::optional("transport", "full|kernel-tcp (default full)"),
                     OptSpec::optional("collective", "ring|tree|ps|hier:<g> (default ring)"),
+                    OptSpec::optional("overlap", "off|buckets (default buckets)"),
+                    OptSpec::optional("bucket-mb", "DDP bucket threshold MB, 0 = fusion buffer (default 0)"),
                     OptSpec::optional("steps", "measured steps (default 5)"),
                     OptSpec::optional("payload-scale", "byte/rate shrink factor (default 256)"),
                     OptSpec::optional("compression", "wire ratio or codec (default 1)"),
@@ -126,6 +128,10 @@ fn app() -> App {
                     OptSpec::value("elems", "gradient tensor length (f32 elements)", "262144"),
                     OptSpec::value("transport", "single|tcp|striped:N", "striped:4"),
                     OptSpec::value("collective", "ring|tree|ps|hier:<group_size>", "hier:2"),
+                    OptSpec::value("overlap", "off|buckets (submit buckets during backward?)", "off"),
+                    OptSpec::value("bucket-mb", "bucketizer threshold MB (0 = one bucket)", "0"),
+                    OptSpec::value("layers", "synthetic backward layers", "1"),
+                    OptSpec::value("compute-us", "modeled backward compute per step (us)", "0"),
                     OptSpec::value("spawn", "process|thread (thread = in-test smoke mode)", "process"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
                 ],
@@ -142,6 +148,10 @@ fn app() -> App {
                     OptSpec::value("elems", "gradient tensor length", "262144"),
                     OptSpec::value("transport", "single|tcp|striped:N", "striped:4"),
                     OptSpec::value("collective", "ring|tree|ps|hier:<g>", "hier:2"),
+                    OptSpec::value("overlap", "off|buckets", "off"),
+                    OptSpec::value("bucket-mb", "bucketizer threshold MB (0 = one bucket)", "0"),
+                    OptSpec::value("layers", "synthetic backward layers", "1"),
+                    OptSpec::value("compute-us", "modeled backward compute per step (us)", "0"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
                 ],
                 positional: vec![],
@@ -515,19 +525,26 @@ fn cmd_train(args: &Args) -> Result<bool> {
 
 /// Shared parsing of the launch/_worker knobs.
 fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::WorkerParams> {
-    use netbn::config::{CollectiveKind, TransportKind};
+    use netbn::config::{CollectiveKind, OverlapMode, TransportKind};
     let transport_s = args.get_or("transport", "striped:4");
     let transport = TransportKind::parse(transport_s)
         .ok_or_else(|| anyhow::anyhow!("--transport: unknown transport {transport_s:?}"))?;
     let collective_s = args.get_or("collective", "hier:2");
     let collective = CollectiveKind::parse(collective_s)
         .ok_or_else(|| anyhow::anyhow!("--collective: unknown collective {collective_s:?}"))?;
+    let overlap_s = args.get_or("overlap", "off");
+    let overlap = OverlapMode::parse(overlap_s)
+        .ok_or_else(|| anyhow::anyhow!("--overlap: expected off|buckets, got {overlap_s:?}"))?;
     Ok(netbn::trainer::launch::WorkerParams {
         world,
         steps: args.get_usize("steps", 2)?,
         elems: args.get_usize("elems", 1 << 18)?,
         transport,
         collective,
+        overlap,
+        bucket_mb: args.get_f64("bucket-mb", 0.0)?,
+        layers: args.get_usize("layers", 1)?,
+        compute_us: args.get_usize("compute-us", 0)? as u64,
         seed: args.get_usize("seed", 0xdeadbeef)? as u64,
     })
 }
@@ -540,12 +557,17 @@ fn cmd_launch(args: &Args) -> Result<bool> {
         .ok_or_else(|| anyhow::anyhow!("--spawn: expected process|thread, got {spawn_s:?}"))?;
     let params = worker_params(args, workers)?;
     println!(
-        "launch: {workers} workers ({}), {} steps, {} elems, transport {}, collective {}",
+        "launch: {workers} workers ({}), {} steps, {} elems, transport {}, collective {}, \
+         overlap {} (bucket-mb {}, {} layers, {} us compute)",
         if spawn == SpawnMode::Process { "processes" } else { "threads" },
         params.steps,
         params.elems,
         params.transport,
         params.collective,
+        params.overlap,
+        params.bucket_mb,
+        params.layers,
+        params.compute_us,
     );
     let r = launch(&LaunchConfig { params, spawn })?;
     println!("{}", r.step_table().render());
@@ -578,7 +600,9 @@ fn cmd_worker(args: &Args) -> Result<bool> {
 
 fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
     use netbn::engine::bench;
-    let report = bench::collect(registry)?;
+    // The e2e busbw ride-along is informational: absent from the gate
+    // list and the baseline, it can be characterized but never fail.
+    let report = bench::collect_with_e2e(registry)?;
     println!("{}", report.render());
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json())?;

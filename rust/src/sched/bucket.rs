@@ -1,0 +1,274 @@
+//! PyTorch-DDP-style gradient bucketizer.
+//!
+//! Layers are assigned to buckets in **gradient-ready order** — reverse
+//! forward order, because the output layer's gradient materializes first —
+//! accumulating until a size threshold (`--bucket-mb`) is crossed, then
+//! cutting. The plan is a pure function of the layer sizes and the
+//! threshold, so every rank derives the identical plan and the per-bucket
+//! collectives stay matched without a negotiation round (the same trick
+//! [`crate::trainer::bucket_timeline`] plays with the fusion buffer).
+//!
+//! Unlike the Horovod fusion buffer (64 MB + 5 ms timeout, a *runtime*
+//! state machine), this bucketizer is *static*: the threshold trades
+//! per-bucket overhead (too many small buckets) against lost overlap (one
+//! huge bucket ships only when backward ends) — the trade
+//! `bucket_size_sweep` measures and [`crate::sim::overlap_model`] mirrors.
+
+/// One layer's contribution, in gradient-ready order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerGrad {
+    /// Forward-order layer index.
+    pub layer: usize,
+    /// Gradient bytes.
+    pub bytes: usize,
+}
+
+/// One planned bucket: a contiguous run of gradient-ready-order layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketSpec {
+    /// Submission sequence number (0 = flushed first).
+    pub seq: u32,
+    /// Member layers, in gradient-ready order.
+    pub layers: Vec<LayerGrad>,
+    /// Total gradient bytes in the bucket.
+    pub bytes: usize,
+}
+
+/// A deterministic bucket assignment for one backward pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketPlan {
+    pub buckets: Vec<BucketSpec>,
+    /// The size threshold the plan was cut with.
+    pub threshold_bytes: usize,
+}
+
+impl BucketPlan {
+    /// Total bytes across all buckets (conservation checks).
+    pub fn total_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.bytes).sum()
+    }
+}
+
+/// Assign layers (given in gradient-ready order) to buckets: accumulate
+/// until the running total reaches `threshold_bytes`, then cut. An
+/// oversized layer closes the current bucket immediately — including any
+/// smaller layers already accumulated in front of it; the final bucket
+/// may be smaller (the head of the model rarely fills a whole bucket).
+/// `threshold_bytes == 0` is treated as unbounded: one bucket holding
+/// everything — the blocking baseline's decomposition.
+pub fn plan_buckets(layers_ready_order: &[LayerGrad], threshold_bytes: usize) -> BucketPlan {
+    let threshold = if threshold_bytes == 0 { usize::MAX } else { threshold_bytes };
+    let mut buckets = Vec::new();
+    let mut cur: Vec<LayerGrad> = Vec::new();
+    let mut cur_bytes = 0usize;
+    for &lg in layers_ready_order {
+        cur.push(lg);
+        cur_bytes += lg.bytes;
+        if cur_bytes >= threshold {
+            buckets.push(BucketSpec {
+                seq: buckets.len() as u32,
+                layers: std::mem::take(&mut cur),
+                bytes: cur_bytes,
+            });
+            cur_bytes = 0;
+        }
+    }
+    if !cur.is_empty() {
+        buckets.push(BucketSpec { seq: buckets.len() as u32, layers: cur, bytes: cur_bytes });
+    }
+    BucketPlan { buckets, threshold_bytes }
+}
+
+/// Gradient-ready-order layer list for contiguous forward-order f32
+/// gradient `ranges` (reverse order, 4 bytes per element) — the map every
+/// caller of [`plan_buckets`] over a sliced tensor needs; keeping it here
+/// keeps the ready-order convention in one place.
+pub fn ready_order_from_ranges(ranges: &[std::ops::Range<usize>]) -> Vec<LayerGrad> {
+    (0..ranges.len())
+        .rev()
+        .map(|l| LayerGrad { layer: l, bytes: ranges[l].len() * 4 })
+        .collect()
+}
+
+/// Convenience: megabytes → the byte threshold `plan_buckets` takes
+/// (`<= 0` MB ⇒ 0 ⇒ unbounded single bucket).
+pub fn mb_to_threshold(bucket_mb: f64) -> usize {
+    if bucket_mb <= 0.0 {
+        0
+    } else {
+        (bucket_mb * (1 << 20) as f64) as usize
+    }
+}
+
+/// The emulator's `(emit time rel. backward start, bucket bytes)` timeline
+/// derived from a white-box trace with this bucketizer instead of the
+/// fusion buffer: a bucket's emit time is its *last* member layer's
+/// gradient-ready instant (the bucket cannot ship earlier). Drop-in
+/// replacement for [`crate::trainer::bucket_timeline`] when `--bucket-mb`
+/// is set.
+pub fn bucket_timeline_from_trace(
+    trace: &crate::models::timing::StepTrace,
+    threshold_bytes: usize,
+) -> Vec<(f64, usize)> {
+    let layers: Vec<LayerGrad> =
+        trace.events.iter().map(|e| LayerGrad { layer: e.layer, bytes: e.bytes }).collect();
+    let plan = plan_buckets(&layers, threshold_bytes);
+    // Buckets partition the ready-order event sequence contiguously, so
+    // bucket i ships at its last member's t_ready. Walking by position
+    // (not by layer id) keeps this correct for any trace — recorded
+    // whitebox traces carry arbitrary, non-dense layer ids.
+    let mut out = Vec::with_capacity(plan.buckets.len());
+    let mut end = 0usize;
+    for b in &plan.buckets {
+        end += b.layers.len();
+        out.push((trace.events[end - 1].t_ready, b.bytes));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::timing::backward_trace;
+    use crate::models::ModelId;
+    use crate::util::prop;
+
+    fn layers(sizes: &[usize]) -> Vec<LayerGrad> {
+        // Ready order = reverse forward order, like a real backward pass.
+        sizes
+            .iter()
+            .enumerate()
+            .rev()
+            .map(|(layer, &bytes)| LayerGrad { layer, bytes })
+            .collect()
+    }
+
+    #[test]
+    fn threshold_cuts_and_conserves() {
+        let ls = layers(&[10, 20, 30, 40, 50]);
+        let plan = plan_buckets(&ls, 60);
+        assert_eq!(plan.total_bytes(), 150);
+        // Ready order: 50,40,30,20,10 → [50+40], [30+20+10].
+        assert_eq!(plan.buckets.len(), 2);
+        assert_eq!(plan.buckets[0].bytes, 90);
+        assert_eq!(plan.buckets[1].bytes, 60);
+        assert_eq!(plan.buckets[0].seq, 0);
+        assert_eq!(plan.buckets[1].seq, 1);
+    }
+
+    #[test]
+    fn zero_threshold_means_one_bucket() {
+        let ls = layers(&[10, 20, 30]);
+        let plan = plan_buckets(&ls, 0);
+        assert_eq!(plan.buckets.len(), 1);
+        assert_eq!(plan.buckets[0].bytes, 60);
+        assert_eq!(mb_to_threshold(0.0), 0);
+        assert_eq!(mb_to_threshold(-1.0), 0);
+        assert_eq!(mb_to_threshold(1.0), 1 << 20);
+    }
+
+    #[test]
+    fn ready_order_reverses_ranges() {
+        let ranges = vec![0..10, 10..25, 25..30];
+        let ready = ready_order_from_ranges(&ranges);
+        assert_eq!(
+            ready,
+            vec![
+                LayerGrad { layer: 2, bytes: 20 },
+                LayerGrad { layer: 1, bytes: 60 },
+                LayerGrad { layer: 0, bytes: 40 },
+            ]
+        );
+    }
+
+    #[test]
+    fn oversized_layer_closes_current_bucket() {
+        let ls = layers(&[5, 1000, 5]);
+        let plan = plan_buckets(&ls, 100);
+        // Ready order: 5, 1000, 5 → [5+1000] (cut over threshold), [5].
+        assert_eq!(plan.buckets.len(), 2);
+        assert!(plan.buckets[0].bytes >= 100);
+        assert_eq!(plan.total_bytes(), 1010);
+    }
+
+    #[test]
+    fn property_conservation_order_and_bounds() {
+        prop::forall("bucket plan conserves bytes and ready order", 200, |rng| {
+            let n = prop::usize_in(rng, 1..=40);
+            let sizes: Vec<usize> = (0..n).map(|_| prop::usize_in(rng, 1..=5000)).collect();
+            let ls = layers(&sizes);
+            let threshold = prop::usize_in(rng, 1..=8000);
+            let plan = plan_buckets(&ls, threshold);
+            let total: usize = sizes.iter().sum();
+            if plan.total_bytes() != total {
+                return Err(format!("bytes {} != {total}", plan.total_bytes()));
+            }
+            // Flattened layer order must equal the input ready order.
+            let flat: Vec<usize> =
+                plan.buckets.iter().flat_map(|b| b.layers.iter().map(|l| l.layer)).collect();
+            let want: Vec<usize> = ls.iter().map(|l| l.layer).collect();
+            if flat != want {
+                return Err(format!("order {flat:?} != {want:?}"));
+            }
+            // Every bucket except the last reaches the threshold; every
+            // multi-layer bucket stayed under threshold before its final
+            // member arrived.
+            for (i, b) in plan.buckets.iter().enumerate() {
+                if i + 1 < plan.buckets.len() && b.bytes < threshold {
+                    return Err(format!("bucket {i} under threshold: {}", b.bytes));
+                }
+                let before_last: usize =
+                    b.layers[..b.layers.len() - 1].iter().map(|l| l.bytes).sum();
+                if before_last >= threshold {
+                    return Err(format!("bucket {i} should have been cut earlier"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_timeline_conserves_and_is_sorted() {
+        for id in [ModelId::ResNet50, ModelId::Vgg16] {
+            let trace = backward_trace(&id.profile());
+            let tl = bucket_timeline_from_trace(&trace, 25 << 20);
+            let total: usize = tl.iter().map(|(_, b)| *b).sum();
+            assert_eq!(total, id.profile().total_bytes(), "{id}");
+            for w in tl.windows(2) {
+                assert!(w[0].0 <= w[1].0, "{id}: timeline not sorted");
+            }
+            assert!(tl.last().unwrap().0 <= trace.t_backward + 1e-12);
+            assert!(tl.len() > 1, "{id}: 25 MB threshold must cut a {id} model");
+        }
+    }
+
+    #[test]
+    fn trace_timeline_tolerates_sparse_layer_ids() {
+        // Recorded whitebox traces carry arbitrary layer ids; the
+        // timeline must key on ready-order position, not on the id.
+        use crate::models::timing::{StepTrace, TraceEvent};
+        let trace = StepTrace {
+            t_forward: 0.01,
+            events: vec![
+                TraceEvent { layer: 30, bytes: 100, t_ready: 0.001 },
+                TraceEvent { layer: 10, bytes: 100, t_ready: 0.002 },
+                TraceEvent { layer: 20, bytes: 100, t_ready: 0.003 },
+            ],
+            t_backward: 0.003,
+            t_batch: 0.013,
+        };
+        let tl = bucket_timeline_from_trace(&trace, 150);
+        assert_eq!(tl, vec![(0.002, 200), (0.003, 100)]);
+    }
+
+    #[test]
+    fn smaller_threshold_never_fewer_buckets() {
+        let trace = backward_trace(&ModelId::ResNet101.profile());
+        let mut last = usize::MAX;
+        for mb in [1.0, 4.0, 16.0, 64.0, 256.0] {
+            let n = bucket_timeline_from_trace(&trace, mb_to_threshold(mb)).len();
+            assert!(n <= last, "{mb} MB: {n} buckets > {last}");
+            last = n;
+        }
+    }
+}

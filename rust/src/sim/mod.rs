@@ -25,6 +25,7 @@
 
 pub mod ablation;
 pub mod hier_model;
+pub mod overlap_model;
 pub mod whatif;
 
 use crate::collectives::fusion::{Bucket, FusionBuffer, GradTensor};
@@ -158,6 +159,93 @@ pub struct SimResult {
     pub achieved_gbps: f64,
 }
 
+/// The all-reduce process's per-bucket cost parameters, shared by
+/// [`simulate`] and [`overlap_model`]: coordination latency + `(N−1)`
+/// vector adds + piecewise wire transit, with the transport's software
+/// ceiling contended (reduced) while backward kernels still run.
+pub(crate) struct DrainCost<'a> {
+    /// Total GPUs `N` (vector-add parties).
+    pub n: f64,
+    /// Per-bucket wire-byte multiplier (`2(M−1)/M` for the inter-node ring).
+    pub ring_factor: f64,
+    pub inter_node: bool,
+    pub multi_gpu: bool,
+    /// Achieved bytes/s once backward has finished.
+    pub rate_full: f64,
+    /// Achieved bytes/s while backward still runs (contended ceiling).
+    pub rate_backward: f64,
+    pub per_msg_overhead_s: f64,
+    pub coord_latency_s: f64,
+    pub compression_ratio: f64,
+    pub add_est: &'a AddEst,
+}
+
+impl<'a> DrainCost<'a> {
+    pub(crate) fn from_sim(p: &'a SimParams) -> DrainCost<'a> {
+        let m = p.servers as f64;
+        let contended = KernelTcpModel {
+            ceiling_gbps: p.transport.ceiling_gbps * (1.0 - p.comm_contention),
+            ..p.transport
+        };
+        DrainCost {
+            n: p.workers() as f64,
+            ring_factor: if p.servers > 1 { 2.0 * (m - 1.0) / m } else { 0.0 },
+            inter_node: p.servers > 1,
+            multi_gpu: p.workers() > 1,
+            rate_full: crate::gbps_to_bytes_per_sec(
+                p.transport.effective_gbps(p.bandwidth_gbps),
+            ),
+            rate_backward: crate::gbps_to_bytes_per_sec(
+                contended.effective_gbps(p.bandwidth_gbps),
+            ),
+            per_msg_overhead_s: p.transport.per_msg_overhead_s,
+            coord_latency_s: p.coord_latency_s,
+            compression_ratio: p.compression_ratio,
+            add_est: &p.add_est,
+        }
+    }
+}
+
+/// Drain `(emit time, bucket bytes)` pairs FIFO through the all-reduce
+/// process; returns `(finish time, wire bytes per worker)`. Wire bytes
+/// drain piecewise across the backward/no-backward boundary at `t_back`.
+pub(crate) fn drain_fifo(queue: &[(f64, f64)], t_back: f64, c: &DrainCost) -> (f64, f64) {
+    let mut t_done = 0.0f64;
+    let mut wire_bytes = 0.0f64;
+    for (emit_t, bucket_bytes) in queue {
+        let mut t = t_done.max(*emit_t);
+        if !c.multi_gpu {
+            t_done = t;
+            continue;
+        }
+        // Coordination (negotiation) + vector adds: pure time.
+        let elems_per_shard = bucket_bytes / 4.0 / c.n;
+        t += c.coord_latency_s + (c.n - 1.0) * c.add_est.seconds(elems_per_shard);
+        if c.inter_node {
+            t += c.per_msg_overhead_s;
+            let mut bytes = c.ring_factor * bucket_bytes / c.compression_ratio;
+            wire_bytes += bytes;
+            while bytes > 0.0 {
+                if t < t_back {
+                    let can = (t_back - t) * c.rate_backward;
+                    if can >= bytes {
+                        t += bytes / c.rate_backward;
+                        bytes = 0.0;
+                    } else {
+                        bytes -= can;
+                        t = t_back;
+                    }
+                } else {
+                    t += bytes / c.rate_full;
+                    bytes = 0.0;
+                }
+            }
+        }
+        t_done = t;
+    }
+    (t_done, wire_bytes)
+}
+
 /// Run the two-process simulation once.
 pub fn simulate(p: &SimParams) -> SimResult {
     assert!(p.servers >= 1 && p.gpus_per_server >= 1);
@@ -166,8 +254,6 @@ pub fn simulate(p: &SimParams) -> SimResult {
     assert!(p.compression_ratio.is_finite() && p.compression_ratio >= 1.0);
     assert!(p.compute_inflation >= 1.0);
     assert!((0.0..1.0).contains(&p.comm_contention));
-    let n = p.workers() as f64;
-    let m = p.servers as f64;
 
     // ---- Backward process: replay trace through the fusion buffer. ----
     let infl = p.compute_inflation;
@@ -206,54 +292,10 @@ pub fn simulate(p: &SimParams) -> SimResult {
     }
 
     // ---- All-reduce process: FIFO over the message queue. ----
-    // Wire rate is phase-dependent: while backward runs, the transport's
-    // software ceiling is reduced by `comm_contention`.
-    let rate_full = crate::gbps_to_bytes_per_sec(p.transport.effective_gbps(p.bandwidth_gbps));
-    let contended = KernelTcpModel {
-        ceiling_gbps: p.transport.ceiling_gbps * (1.0 - p.comm_contention),
-        ..p.transport
-    };
-    let rate_backward =
-        crate::gbps_to_bytes_per_sec(contended.effective_gbps(p.bandwidth_gbps));
-    let ring_factor = if p.servers > 1 { 2.0 * (m - 1.0) / m } else { 0.0 };
-    let inter_node = p.servers > 1;
-    let multi_gpu = p.workers() > 1;
-    let mut t_done = 0.0f64;
-    let mut wire_bytes = 0.0f64;
-    for (emit_t, bucket) in &queue {
-        let mut t = t_done.max(*emit_t);
-        if !multi_gpu {
-            t_done = t;
-            continue;
-        }
-        // Coordination (negotiation) + vector adds: pure time.
-        let elems_per_shard = bucket.bytes as f64 / 4.0 / n;
-        t += p.coord_latency_s + (n - 1.0) * p.add_est.seconds(elems_per_shard);
-        if inter_node {
-            t += p.transport.per_msg_overhead_s;
-            // Bytes through the NIC, drained piecewise across the
-            // backward/no-backward phase boundary.
-            let mut bytes = ring_factor * bucket.bytes as f64 / p.compression_ratio;
-            wire_bytes += bytes;
-            while bytes > 0.0 {
-                let rate = if t < t_back { rate_backward } else { rate_full };
-                if t < t_back {
-                    let can = (t_back - t) * rate;
-                    if can >= bytes {
-                        t += bytes / rate;
-                        bytes = 0.0;
-                    } else {
-                        bytes -= can;
-                        t = t_back;
-                    }
-                } else {
-                    t += bytes / rate;
-                    bytes = 0.0;
-                }
-            }
-        }
-        t_done = t;
-    }
+    let timeline: Vec<(f64, f64)> =
+        queue.iter().map(|(t, b)| (*t, b.bytes as f64)).collect();
+    let cost = DrainCost::from_sim(p);
+    let (t_done, wire_bytes) = drain_fifo(&timeline, t_back, &cost);
     let t_sync = t_done.max(t_back);
     let t_overhead = t_sync - t_back;
     // Distributed compute inflation is itself overhead relative to the
@@ -261,7 +303,7 @@ pub fn simulate(p: &SimParams) -> SimResult {
     let t_batch = p.trace.t_batch;
     let denom = t_batch + t_overhead + (infl - 1.0) * t_batch;
     let scaling_factor = t_batch / denom;
-    let achieved_gbps = if t_sync > 0.0 && inter_node {
+    let achieved_gbps = if t_sync > 0.0 && p.servers > 1 {
         crate::bytes_per_sec_to_gbps(wire_bytes / t_sync)
     } else {
         0.0

@@ -12,9 +12,12 @@
 //! 2. registers its lane addresses with the coordinator and receives the
 //!    full rank-ordered peer table back (the rendezvous),
 //! 3. runs `steps` synchronous data-parallel steps — barrier, local
-//!    gradient, all-reduce over the configured collective
-//!    (`ring`/`tree`/`ps`/`hier:<g>`), parameter update — timing the
-//!    all-reduce separately from the step,
+//!    gradient, then the overlap scheduler ([`crate::sched`]): per-layer
+//!    modeled backward compute with bucketized all-reduce over the
+//!    configured collective (`ring`/`tree`/`ps`/`hier:<g>`), overlapped
+//!    (`--overlap buckets`) or serialized (`--overlap off`), then the
+//!    parameter update — timing collective-busy seconds separately from
+//!    the step,
 //! 4. reports per-step timings and an FNV-1a checksum of its final
 //!    parameter bits.
 //!
@@ -34,13 +37,15 @@
 //! jobs carry `timeout-minutes`, so a wedged run is bounded in practice;
 //! liveness-tracking per worker stream is future work.
 
-use crate::collectives::{allreduce, barrier, ring};
-use crate::config::{CollectiveKind, TransportKind};
+use crate::collectives::{barrier, ring};
+use crate::config::{CollectiveKind, OverlapMode, TransportKind};
 use crate::net::mesh::MeshNode;
 use crate::net::striped::{StripeConfig, StripedTransport};
 use crate::net::tcp::connect_retry;
 use crate::net::transport::{SingleStream, Transport};
 use crate::net::Endpoint;
+use crate::sched::bucket::{mb_to_threshold, plan_buckets, ready_order_from_ranges};
+use crate::sched::{layer_ranges, run_step, AsyncCollectiveEngine};
 use crate::topology::WorkerId;
 use crate::util::Rng;
 use crate::Result;
@@ -80,6 +85,22 @@ pub struct WorkerParams {
     pub elems: usize,
     pub transport: TransportKind,
     pub collective: CollectiveKind,
+    /// Compute/communication overlap policy: `Off` submits every bucket
+    /// after the modeled backward finishes (the serialized baseline);
+    /// `Buckets` flushes each bucket into the async engine as its last
+    /// layer completes. Bit-identical either way (same buckets, same
+    /// collective order).
+    pub overlap: OverlapMode,
+    /// Bucketizer threshold in MB (`<= 0` = one bucket for the whole
+    /// gradient).
+    pub bucket_mb: f64,
+    /// Synthetic backward layers the gradient is split across (the
+    /// overlap scheduler's emission granularity).
+    pub layers: usize,
+    /// Total modeled backward compute per step, microseconds, spread
+    /// evenly across the layers (0 = no modeled compute — pure wire
+    /// benchmark, nothing to overlap under).
+    pub compute_us: u64,
     pub seed: u64,
 }
 
@@ -96,6 +117,14 @@ impl LaunchConfig {
         anyhow::ensure!(p.world >= 1, "launch needs >= 1 worker");
         anyhow::ensure!(p.steps >= 1, "launch needs >= 1 step");
         anyhow::ensure!(p.elems >= 1, "launch needs >= 1 gradient element");
+        anyhow::ensure!(p.layers >= 1, "launch needs >= 1 backward layer");
+        anyhow::ensure!(
+            p.layers <= p.elems,
+            "more layers ({}) than gradient elements ({})",
+            p.layers,
+            p.elems
+        );
+        anyhow::ensure!(p.bucket_mb.is_finite(), "bucket-mb must be finite");
         if let CollectiveKind::Hierarchical { group_size } = p.collective {
             anyhow::ensure!(group_size >= 1, "hier group size must be >= 1");
         }
@@ -113,7 +142,10 @@ pub struct LaunchReport {
     pub steps: usize,
     /// Per step: wall clock of the slowest worker (post-barrier).
     pub step_wall_s: Vec<f64>,
-    /// Per step: all-reduce time of the slowest worker.
+    /// Per step: collective-busy time of the slowest worker — the seconds
+    /// its engine thread spent inside all-reduces, including spans
+    /// overlapped under compute (so the figure is comparable across
+    /// `--overlap` modes).
     pub allreduce_s: Vec<f64>,
     /// NCCL-convention bus bandwidth over the measured all-reduce times.
     pub effective_bus_gbps: f64,
@@ -215,6 +247,14 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     .arg(p.transport.to_string())
                     .arg("--collective")
                     .arg(p.collective.to_string())
+                    .arg("--overlap")
+                    .arg(p.overlap.to_string())
+                    .arg("--bucket-mb")
+                    .arg(p.bucket_mb.to_string())
+                    .arg("--layers")
+                    .arg(p.layers.to_string())
+                    .arg("--compute-us")
+                    .arg(p.compute_us.to_string())
                     .arg("--seed")
                     .arg(p.seed.to_string())
                     .spawn()
@@ -300,7 +340,7 @@ fn coordinator_serve(
         let rank: usize = it
             .next()
             .and_then(|s| s.parse().ok())
-            .ok_or_else(|| anyhow::anyhow!("hello without a rank: {line:?}"))?;
+            .with_context(|| format!("hello without a rank: {line:?}"))?;
         anyhow::ensure!(rank < p.world, "hello from rank {rank} in a world of {}", p.world);
         anyhow::ensure!(streams[rank].is_none(), "rank {rank} registered twice");
         let addrs: Vec<SocketAddr> = it
@@ -346,12 +386,12 @@ fn coordinator_serve(
         let done_rank: usize = it
             .next()
             .and_then(|s| s.parse().ok())
-            .ok_or_else(|| anyhow::anyhow!("done without a rank: {line:?}"))?;
+            .with_context(|| format!("done without a rank: {line:?}"))?;
         anyhow::ensure!(done_rank == rank, "rank {rank} stream reported rank {done_rank}");
         let checksum = it
             .next()
             .and_then(|s| u64::from_str_radix(s, 16).ok())
-            .ok_or_else(|| anyhow::anyhow!("done without a checksum: {line:?}"))?;
+            .with_context(|| format!("done without a checksum: {line:?}"))?;
         let ar_times = parse_csv_f64(it.next().unwrap_or(""), p.steps)
             .with_context(|| format!("rank {rank} all-reduce timings"))?;
         let walls = parse_csv_f64(it.next().unwrap_or(""), p.steps)
@@ -429,11 +469,11 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     let got_lanes: usize = it
         .next()
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow::anyhow!("peer table missing lane count: {line:?}"))?;
+        .with_context(|| format!("peer table missing lane count: {line:?}"))?;
     let got_world: usize = it
         .next()
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow::anyhow!("peer table missing world size: {line:?}"))?;
+        .with_context(|| format!("peer table missing world size: {line:?}"))?;
     anyhow::ensure!(
         got_lanes == lanes && got_world == p.world,
         "peer table shape {got_world}x{got_lanes}, expected {}x{lanes}",
@@ -450,7 +490,16 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     }
     let ep = transport.bind(lane_eps)?;
 
-    // ---- The synchronous data-parallel loop. ----
+    // ---- The synchronous data-parallel loop, driven by the overlap
+    // scheduler: per-layer modeled compute (reverse order, like a real
+    // backward pass), deterministic bucket plan, async collective engine.
+    // Every rank derives the identical plan from the shared params, so
+    // the per-bucket collectives stay matched. ----
+    let ranges = layer_ranges(p.elems, p.layers);
+    let plan = plan_buckets(&ready_order_from_ranges(&ranges), mb_to_threshold(p.bucket_mb));
+    let layer_compute_s = p.compute_us as f64 * 1e-6 / p.layers as f64;
+    let engine = AsyncCollectiveEngine::new(Arc::clone(&ep), p.collective);
+
     let mut params = vec![0.0f32; p.elems];
     let mut rng = Rng::new(p.seed ^ ((rank as u64) << 32));
     let mut ar_times = Vec::with_capacity(p.steps);
@@ -460,12 +509,23 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
         barrier(ep.as_ref(), step as u32)?;
         let t_step = Instant::now();
         // Local gradient: different on every rank (seeded), summed by the
-        // collective — the data-parallel contract.
+        // collective — the data-parallel contract. Generated up front in
+        // both overlap modes so the wire bytes are identical either way.
         let mut grad = vec![0.0f32; p.elems];
         rng.fill_f32(&mut grad, 1.0);
-        let t_ar = Instant::now();
-        allreduce(p.collective, ep.as_ref(), step as u32, 0, &mut grad)?;
-        ar_times.push(t_ar.elapsed().as_secs_f64());
+        let stats = run_step(
+            &engine,
+            p.overlap,
+            step as u32,
+            &mut grad,
+            &ranges,
+            &plan,
+            |_layer| super::spin_sleep(layer_compute_s),
+        )?;
+        // Comm-busy time of the engine's worker (includes any span
+        // overlapped under compute) — keeps the effective-bus-bandwidth
+        // figure comparable across overlap modes.
+        ar_times.push(stats.comm_busy_s);
         // Averaged-gradient step: identical arithmetic on identical sums
         // keeps every rank's parameters bit-identical.
         for (w, g) in params.iter_mut().zip(&grad) {
@@ -473,6 +533,7 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
         }
         walls.push(t_step.elapsed().as_secs_f64());
     }
+    drop(engine);
     let checksum = tensor_checksum(&params);
 
     // Report and wait for the global release before tearing down lanes.
@@ -508,6 +569,10 @@ mod tests {
                 elems: 20_000,
                 transport,
                 collective,
+                overlap: OverlapMode::Off,
+                bucket_mb: 0.0,
+                layers: 1,
+                compute_us: 0,
                 seed: 0xe2e,
             },
             spawn: SpawnMode::Thread,
@@ -568,6 +633,47 @@ mod tests {
         let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
         cfg.params.elems = 0;
         assert!(launch(&cfg).is_err());
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.layers = 0;
+        assert!(launch(&cfg).is_err());
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.layers = cfg.params.elems + 1;
+        assert!(launch(&cfg).is_err());
+    }
+
+    #[test]
+    fn overlap_modes_are_bit_identical_end_to_end() {
+        // The overlap conformance contract at the launch level: same
+        // seeds, same bucket plan, different submission policy — the
+        // final parameter checksums must agree bit for bit.
+        let mut base = thread_cfg(3, CollectiveKind::Ring, TransportKind::Tcp);
+        base.params.layers = 6;
+        base.params.bucket_mb = 0.02; // ~5 KB buckets over an 80 KB tensor
+        base.params.compute_us = 2_000;
+        let mut overlapped = base.clone();
+        overlapped.params.overlap = OverlapMode::Buckets;
+        let a = launch(&base).unwrap();
+        let b = launch(&overlapped).unwrap();
+        assert!(a.identical && b.identical);
+        assert_eq!(a.checksums, b.checksums, "overlap changed the arithmetic");
+        assert!(b.effective_bus_gbps > 0.0);
+    }
+
+    #[test]
+    fn bucketized_hier_over_striped_launch() {
+        // Everything at once: leader-ring collective, striped lanes,
+        // DDP-style buckets, overlapped submission — over real sockets.
+        let mut cfg = thread_cfg(
+            4,
+            CollectiveKind::Hierarchical { group_size: 2 },
+            TransportKind::Striped { streams: 2 },
+        );
+        cfg.params.overlap = OverlapMode::Buckets;
+        cfg.params.layers = 5;
+        cfg.params.bucket_mb = 0.03;
+        let r = launch(&cfg).unwrap();
+        assert!(r.identical, "checksums {:?}", r.checksums);
+        assert!(r.passed());
     }
 
     #[test]

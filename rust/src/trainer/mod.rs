@@ -1,7 +1,11 @@
 //! The data-parallel trainer.
 //!
-//! Two engines share the same communication machinery (fusion buffer →
-//! ring all-reduce over a [`crate::net::Fabric`]):
+//! Two engines share the same communication machinery (bucketizer →
+//! [`crate::sched::AsyncCollectiveEngine`] → all-reduce over a
+//! [`crate::net::Fabric`]; `--overlap off|buckets` decides whether
+//! buckets enter the engine as backward emits them or only after
+//! backward ends, and `--bucket-mb` swaps the Horovod fusion buffer for
+//! the DDP-style size-threshold bucketizer):
 //!
 //! * [`run_emulated`] — **modeled compute**: each worker replays the
 //!   device timing trace (sleeping through forward/backward and emitting
@@ -25,20 +29,21 @@
 pub mod launch;
 pub mod xla;
 
+use crate::collectives::barrier;
 use crate::collectives::fusion::{FusionBuffer, GradTensor};
-use crate::collectives::{allreduce, barrier};
-use crate::config::{CollectiveKind, ExperimentConfig, TransportKind};
+use crate::config::{ExperimentConfig, OverlapMode, TransportKind};
 use crate::measure::PhaseTimes;
 use crate::models::timing::{backward_trace, StepTrace};
 use crate::net::kernel_tcp::KernelTcpModel;
 use crate::net::metrics::UtilizationSampler;
 use crate::net::shaper::Shaper;
 use crate::net::{inproc::InProcFabric, Endpoint, Fabric};
-use crate::topology::{Ring, Topology};
+use crate::sched::{AllReduceHandle, AsyncCollectiveEngine};
+use crate::topology::Topology;
 use crate::util::Rng;
 use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Emulated-run configuration on top of the experiment point.
@@ -73,17 +78,6 @@ pub struct RunReport {
     pub buckets_per_step: f64,
     pub steps: usize,
     pub workers: usize,
-}
-
-/// A worker's view of one emulated step: sleeps through the trace, pushes
-/// tensors to the comm thread, then waits for sync completion. The flat
-/// ring is prebuilt once per run so the per-bucket comm path allocates
-/// nothing for the common ring collective; other collectives go through
-/// the [`allreduce`] dispatcher.
-struct CommPlan {
-    collective: CollectiveKind,
-    ring: Ring,
-    compression_ratio: f64,
 }
 
 /// Precomputed deterministic bucket schedule: `(emit time rel. backward
@@ -127,11 +121,6 @@ pub fn bucket_timeline(
         out.push((trace.t_backward, b.bytes));
     }
     out
-}
-
-enum CommMsg {
-    Bucket { step: u32, seq: u32, data: Vec<f32> },
-    EndStep { reply: mpsc::Sender<()> },
 }
 
 /// Run an emulated data-parallel training experiment.
@@ -202,19 +191,22 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
     let coord_latency = if software_stack { 2.0e-3 } else { 0.0 };
     let bucket_count = Arc::new(AtomicU64::new(0));
 
-    // Deterministic bucket schedule shared by every worker (see
-    // `bucket_timeline` — this is what keeps the collectives matched).
-    let timeline = Arc::new(bucket_timeline(&trace, exp.fusion));
+    // Deterministic bucket schedule shared by every worker (this is what
+    // keeps the collectives matched): the Horovod fusion buffer by
+    // default, or the DDP-style size-threshold bucketizer when
+    // `--bucket-mb` is set.
+    let timeline = Arc::new(if exp.bucket_mb > 0.0 {
+        crate::sched::bucket::bucket_timeline_from_trace(
+            &trace,
+            crate::sched::bucket::mb_to_threshold(exp.bucket_mb),
+        )
+    } else {
+        bucket_timeline(&trace, exp.fusion)
+    });
 
     let mut handles = Vec::new();
-    let ring = topo.flat_ring();
     for ep in endpoints {
         let trace = trace.clone();
-        let plan = CommPlan {
-            collective: exp.collective,
-            ring: ring.clone(),
-            compression_ratio: exp.compression.ratio(),
-        };
         let payload_scale = cfg.payload_scale;
         let bucket_count = Arc::clone(&bucket_count);
         let timeline = Arc::clone(&timeline);
@@ -224,7 +216,6 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
                 ep,
                 &exp,
                 trace,
-                plan,
                 timeline,
                 payload_scale,
                 steps_total,
@@ -295,7 +286,6 @@ fn worker_main(
     ep: Arc<dyn Endpoint>,
     exp: &ExperimentConfig,
     trace: StepTrace,
-    plan: CommPlan,
     timeline: Arc<Vec<(f64, usize)>>,
     payload_scale: f64,
     steps_total: usize,
@@ -305,41 +295,17 @@ fn worker_main(
 ) -> Result<WorkerOutcome> {
     let me = ep.me();
     let mut rng = Rng::new(exp.seed ^ (me.0 as u64) << 32);
+    let compression_ratio = exp.compression.ratio();
 
-    // Comm thread: drains buckets and runs the collective.
-    let (tx, rx) = mpsc::channel::<CommMsg>();
-    let comm_ep = Arc::clone(&ep);
-    let comm = std::thread::spawn(move || -> Result<()> {
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                CommMsg::Bucket { step, seq, mut data } => {
-                    if coord_latency > 0.0 {
-                        std::thread::sleep(Duration::from_secs_f64(coord_latency));
-                    }
-                    match plan.collective {
-                        CollectiveKind::Ring => {
-                            crate::collectives::ring::ring_allreduce(
-                                comm_ep.as_ref(),
-                                &plan.ring,
-                                step,
-                                seq,
-                                &mut data,
-                            )?;
-                        }
-                        other => allreduce(other, comm_ep.as_ref(), step, seq, &mut data)?,
-                    }
-                    std::hint::black_box(&data);
-                }
-                CommMsg::EndStep { reply } => {
-                    let _ = reply.send(());
-                }
-            }
-        }
-        Ok(())
-    });
+    // The async collective engine replaces the ad-hoc comm thread: FIFO
+    // background execution of the configured collective, with the
+    // per-bucket negotiation latency charged on the worker thread.
+    let engine = AsyncCollectiveEngine::new(Arc::clone(&ep), exp.collective);
 
     let mut phase = PhaseTimes::default();
     let mut measured_wall = 0.0f64;
+    let mut handles: Vec<AllReduceHandle> = Vec::with_capacity(timeline.len());
+    let mut deferred: Vec<(u32, Vec<f32>)> = Vec::new();
     for step in 0..steps_total {
         let measured = step >= exp.warmup_steps;
         let step_start = Instant::now();
@@ -350,7 +316,10 @@ fn worker_main(
         spin_sleep(t_fwd);
 
         // ---- Backward (modeled): replay the deterministic bucket
-        // timeline, sleeping to each emission instant. ----
+        // timeline, sleeping to each emission instant. Under `--overlap
+        // buckets` each bucket enters the engine the moment it is
+        // emitted; under `--overlap off` the identical buckets are held
+        // back until backward finishes (the serialized baseline). ----
         let backward_start = Instant::now();
         for (seq, (t_emit, bytes)) in timeline.iter().enumerate() {
             let target = t_emit * compute_inflation;
@@ -360,14 +329,21 @@ fn worker_main(
             }
             // Wire size: scaled + compressed. A tiny floor keeps zero-byte
             // buckets representable.
-            let wire_elems = ((*bytes as f64 / payload_scale / plan.compression_ratio / 4.0)
+            let wire_elems = ((*bytes as f64 / payload_scale / compression_ratio / 4.0)
                 as usize)
                 .max(1);
             let mut data = vec![0.0f32; wire_elems];
             rng.fill_f32(&mut data, 1.0);
             bucket_count.fetch_add(1, Ordering::Relaxed);
-            tx.send(CommMsg::Bucket { step: step as u32, seq: seq as u32, data })
-                .map_err(|_| anyhow::anyhow!("comm thread died"))?;
+            match exp.overlap {
+                OverlapMode::Buckets => handles.push(engine.submit_after(
+                    step as u32,
+                    seq as u32,
+                    data,
+                    coord_latency,
+                )),
+                OverlapMode::Off => deferred.push((seq as u32, data)),
+            }
         }
         // Finish out the backward pass (tail after the last emission).
         {
@@ -379,12 +355,16 @@ fn worker_main(
         }
         let compute_s = step_start.elapsed().as_secs_f64();
 
+        // Blocking mode: the buckets only reach the wire now.
+        for (seq, data) in deferred.drain(..) {
+            handles.push(engine.submit_after(step as u32, seq, data, coord_latency));
+        }
+
         // ---- Wait for the all-reduce process to drain (t_sync). ----
-        let (done_tx, done_rx) = mpsc::channel();
-        tx.send(CommMsg::EndStep { reply: done_tx })
-            .map_err(|_| anyhow::anyhow!("comm thread died"))?;
         let wait_start = Instant::now();
-        done_rx.recv().map_err(|_| anyhow::anyhow!("comm thread died mid-step"))?;
+        for h in handles.drain(..) {
+            std::hint::black_box(h.wait()?);
+        }
         let comm_wait = wait_start.elapsed().as_secs_f64();
 
         if measured {
@@ -394,8 +374,6 @@ fn worker_main(
             measured_wall += step_start.elapsed().as_secs_f64();
         }
     }
-    drop(tx);
-    comm.join().map_err(|_| anyhow::anyhow!("comm thread panicked"))??;
     Ok(WorkerOutcome { phase, measured_wall_s: measured_wall })
 }
 
@@ -496,6 +474,45 @@ mod tests {
         assert_eq!(r.workers, 4);
         assert!(r.step_time_s > 0.0);
         assert!(r.scaling_factor > 0.1 && r.scaling_factor <= 1.05, "{}", r.scaling_factor);
+    }
+
+    #[test]
+    fn blocking_overlap_never_beats_bucketized() {
+        // Same experiment, only the submission policy differs: blocking
+        // serializes comm after backward, so its step time must not be
+        // (meaningfully) shorter. A compute-heavy model at a modest rate
+        // keeps the gap visible over scheduler noise.
+        let mut on = quick_cfg(2, 5.0, TransportKind::FullUtilization);
+        on.exp.model = ModelId::Vgg16;
+        on.exp.overlap = crate::config::OverlapMode::Buckets;
+        let mut off = on.clone();
+        off.exp.overlap = crate::config::OverlapMode::Off;
+        let a = run_emulated(&on).unwrap();
+        let b = run_emulated(&off).unwrap();
+        assert!(
+            b.step_time_s > a.step_time_s * 0.9,
+            "blocking {} vs overlapped {}",
+            b.step_time_s,
+            a.step_time_s
+        );
+        assert!(b.mean_comm_wait_s >= a.mean_comm_wait_s * 0.5);
+    }
+
+    #[test]
+    fn bucket_mb_switches_the_bucket_source() {
+        // A 4 MB threshold on ResNet50 produces many more buckets than
+        // the 64 MB fusion buffer.
+        let fused = quick_cfg(2, 100.0, TransportKind::FullUtilization);
+        let mut ddp = fused.clone();
+        ddp.exp.bucket_mb = 4.0;
+        let a = run_emulated(&fused).unwrap();
+        let b = run_emulated(&ddp).unwrap();
+        assert!(
+            b.buckets_per_step > a.buckets_per_step,
+            "ddp {} vs fusion {}",
+            b.buckets_per_step,
+            a.buckets_per_step
+        );
     }
 
     #[test]

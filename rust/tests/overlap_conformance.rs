@@ -1,0 +1,181 @@
+//! Overlap-scheduler conformance: `--overlap buckets` must be
+//! **bit-identical** to `--overlap off` for every collective × fabric ×
+//! transport combination — overlap changes when communication happens,
+//! never the arithmetic. The scheduler guarantees this by construction
+//! (same deterministic bucket plan, same FIFO collective order on the
+//! engine thread); this suite is the cross-stack proof, mirroring
+//! `transport_conformance.rs` one layer up.
+
+use netbn::config::{CollectiveKind, OverlapMode};
+use netbn::net::striped::{StripeConfig, StripedTransport};
+use netbn::net::transport::{SingleStream, Transport, TransportFabric};
+use netbn::net::Fabric;
+use netbn::sched::bucket::{plan_buckets, ready_order_from_ranges, BucketPlan};
+use netbn::sched::{layer_ranges, run_step, AsyncCollectiveEngine};
+use netbn::util::{prop, Rng};
+use std::ops::Range;
+use std::thread;
+
+const WORKERS: usize = 4;
+/// Uneven length: ragged ring chunks, partial stripe chunks, uneven
+/// layer ranges.
+const LEN: usize = 1003;
+const LAYERS: usize = 5;
+
+/// A stripe config small enough that the test tensors genuinely stripe.
+fn test_stripe_cfg() -> StripeConfig {
+    StripeConfig { streams: 4, chunk_bytes: 512, credit_window: 1 }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum FabricKind {
+    Inproc,
+    Tcp,
+}
+
+fn build_fabric(kind: FabricKind, transport: &dyn Transport) -> Box<dyn Fabric> {
+    match kind {
+        FabricKind::Inproc => {
+            Box::new(TransportFabric::inproc(WORKERS, transport, None).unwrap())
+        }
+        FabricKind::Tcp => Box::new(TransportFabric::tcp(WORKERS, transport, None).unwrap()),
+    }
+}
+
+/// Deterministic per-rank input, shared by every combination.
+fn input(rank: usize, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    Rng::new(0x0f0f ^ rank as u64).fill_f32(&mut v, 2.0);
+    v
+}
+
+/// Run one overlap-scheduled step on every rank; returns each rank's
+/// final (reduced) gradient.
+fn run_world(
+    fabric: &dyn Fabric,
+    kind: CollectiveKind,
+    mode: OverlapMode,
+    ranges: &[Range<usize>],
+    plan: &BucketPlan,
+    len: usize,
+) -> Vec<Vec<f32>> {
+    let mut handles = Vec::new();
+    for (rank, ep) in fabric.endpoints().into_iter().enumerate() {
+        let ranges = ranges.to_vec();
+        let plan = plan.clone();
+        handles.push(thread::spawn(move || {
+            let engine = AsyncCollectiveEngine::new(ep, kind);
+            let mut grad = input(rank, len);
+            run_step(&engine, mode, 0, &mut grad, &ranges, &plan, |_| {}).unwrap();
+            grad
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The plan every combination shares: uneven layer ranges, a threshold
+/// that genuinely cuts (several buckets, ragged final bucket).
+fn shared_plan() -> (Vec<Range<usize>>, BucketPlan) {
+    let ranges = layer_ranges(LEN, LAYERS);
+    let plan = plan_buckets(&ready_order_from_ranges(&ranges), 2 * (LEN / LAYERS) * 4);
+    assert!(plan.buckets.len() >= 2, "threshold must cut: {}", plan.buckets.len());
+    (ranges, plan)
+}
+
+#[test]
+fn overlap_bit_identical_across_collectives_fabrics_transports() {
+    let (ranges, plan) = shared_plan();
+    for kind in [CollectiveKind::Ring, CollectiveKind::Hierarchical { group_size: 2 }] {
+        // The reference is per-collective: ring and leader-ring legally
+        // differ in summation order, but within one collective every
+        // fabric × transport × overlap combination must agree bit for bit.
+        let mut reference: Option<Vec<u32>> = None;
+        for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+            let single = SingleStream;
+            let striped = StripedTransport::new(test_stripe_cfg());
+            let transports: [(&str, &dyn Transport); 2] =
+                [("single", &single), ("striped:4", &striped)];
+            for (tname, transport) in transports {
+                for mode in [OverlapMode::Off, OverlapMode::Buckets] {
+                    let fabric = build_fabric(fabric_kind, transport);
+                    let results =
+                        run_world(fabric.as_ref(), kind, mode, &ranges, &plan, LEN);
+                    let first = bits(&results[0]);
+                    for (w, r) in results.iter().enumerate() {
+                        assert_eq!(
+                            bits(r),
+                            first,
+                            "{kind:?}/{fabric_kind:?}/{tname}/{mode:?}: rank {w} disagrees"
+                        );
+                    }
+                    match &reference {
+                        None => reference = Some(first),
+                        Some(want) => assert_eq!(
+                            &first, want,
+                            "{kind:?}/{fabric_kind:?}/{tname}/{mode:?}: differs from reference"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_matches_reference_sum() {
+    // Not just self-consistent: the reduced values equal a directly
+    // computed elementwise sum of the inputs, within f32 tolerance.
+    let (ranges, plan) = shared_plan();
+    let mut want = vec![0.0f32; LEN];
+    for rank in 0..WORKERS {
+        for (w, x) in want.iter_mut().zip(&input(rank, LEN)) {
+            *w += *x;
+        }
+    }
+    let fabric = build_fabric(FabricKind::Inproc, &SingleStream);
+    let results = run_world(
+        fabric.as_ref(),
+        CollectiveKind::Ring,
+        OverlapMode::Buckets,
+        &ranges,
+        &plan,
+        LEN,
+    );
+    for r in &results {
+        for (a, b) in r.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn property_uneven_boundaries_stay_bit_identical() {
+    // Random layer counts, random (ragged) gradient lengths, random
+    // thresholds — including thresholds smaller than one layer and larger
+    // than the whole tensor: blocking and overlapped must agree bitwise.
+    prop::forall("overlap == blocking over uneven bucket/layer boundaries", 12, |rng| {
+        let len = prop::usize_in(rng, 64..=1500);
+        let layers = prop::usize_in(rng, 1..=len.min(9));
+        let ranges = layer_ranges(len, layers);
+        let threshold = prop::usize_in(rng, 1..=len * 8);
+        let plan = plan_buckets(&ready_order_from_ranges(&ranges), threshold);
+        let run = |mode: OverlapMode| {
+            let fabric = build_fabric(FabricKind::Inproc, &SingleStream);
+            run_world(fabric.as_ref(), CollectiveKind::Ring, mode, &ranges, &plan, len)
+        };
+        let off = run(OverlapMode::Off);
+        let on = run(OverlapMode::Buckets);
+        for (rank, (a, b)) in off.iter().zip(&on).enumerate() {
+            if bits(a) != bits(b) {
+                return Err(format!(
+                    "rank {rank} differs (len {len}, layers {layers}, threshold {threshold})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -11,7 +11,9 @@
 //!   and expression forms);
 //! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
 //!   for any `Result` whose error converts into [`Error`] — which covers
-//!   both `std` errors and `Error` itself.
+//!   both `std` errors and `Error` itself — and for `Option<T>` (a `None`
+//!   becomes an error carrying the context message, like real anyhow's
+//!   `impl Context for Option`).
 //!
 //! Anything not listed here is intentionally absent; add it only when a
 //! caller needs it.
@@ -148,6 +150,27 @@ impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
     }
 }
 
+/// `Option` support, mirroring real anyhow: `None.context("msg")` yields
+/// `Err(Error::msg("msg"))` — no more `ok_or_else(|| anyhow!(..))`
+/// workarounds. The phantom error type is [`std::convert::Infallible`],
+/// exactly as upstream declares it.
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
 /// Construct an [`Error`] from a message literal, a format string, or an
 /// expression convertible into [`Error`].
 #[macro_export]
@@ -237,6 +260,21 @@ mod tests {
         let base: Result<()> = Err(anyhow!("base"));
         let e = base.with_context(|| format!("step {}", 2)).unwrap_err();
         assert_eq!(format!("{e:#}"), "step 2: base");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let some: Option<i32> = Some(7);
+        assert_eq!(some.context("missing").unwrap(), 7);
+        let none: Option<i32> = None;
+        assert_eq!(none.context("missing value").unwrap_err().to_string(), "missing value");
+        let none: Option<i32> = None;
+        let e = none.with_context(|| format!("no entry for {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "no entry for k");
+        // The lazy form must not evaluate on Some.
+        let some: Option<i32> = Some(1);
+        let r = some.with_context(|| -> String { panic!("must not run") });
+        assert_eq!(r.unwrap(), 1);
     }
 
     #[test]
