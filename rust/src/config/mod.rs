@@ -245,6 +245,60 @@ impl fmt::Display for Compression {
     }
 }
 
+/// Online autotuning on the emulated trainer (see [`crate::tune`]): when
+/// enabled, worker 0 runs the warmup→probe→exploit controller over the
+/// axes the emulator can reconfigure per step — bucket threshold and
+/// compression — and every worker applies the shared knob decision at the
+/// next step boundary. The other three knob axes (stripes, chunk,
+/// collective) are frozen at the config's values: the emulated fabric and
+/// collective engine are built once per run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutotuneConfig {
+    pub enabled: bool,
+    /// Candidate bucket thresholds, MB (all > 0; the trainer additionally
+    /// keeps the config's own `bucket_mb` — including `0`, the
+    /// fusion-buffer timeline — as a candidate, so the configured
+    /// operating point is always exactly representable).
+    pub bucket_mbs: Vec<f64>,
+    /// Candidate compression settings.
+    pub compressions: Vec<Compression>,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            enabled: false,
+            bucket_mbs: vec![1.0, 4.0, 16.0, 64.0],
+            compressions: vec![Compression::None, Compression::Ratio(4.0)],
+        }
+    }
+}
+
+impl AutotuneConfig {
+    /// Invariants checked by [`ExperimentConfig::validate`] when enabled.
+    fn errors(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.bucket_mbs.is_empty() {
+            errs.push("autotune.bucket_mbs must be non-empty".into());
+        }
+        for &mb in &self.bucket_mbs {
+            if !(mb.is_finite() && mb > 0.0) {
+                errs.push(format!("autotune bucket_mb {mb} must be > 0 and finite"));
+            }
+        }
+        if self.compressions.is_empty() {
+            errs.push("autotune.compressions must be non-empty".into());
+        }
+        for c in &self.compressions {
+            let r = c.ratio();
+            if !(r.is_finite() && r >= 1.0) {
+                errs.push(format!("autotune compression ratio {r} must be >= 1"));
+            }
+        }
+        errs
+    }
+}
+
 /// One experiment: a (model, cluster, network, algorithm) point.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -268,6 +322,8 @@ pub struct ExperimentConfig {
     pub bucket_mb: f64,
     pub fusion: FusionConfig,
     pub compression: Compression,
+    /// Online autotuning of the per-step knobs (emulated trainer).
+    pub autotune: AutotuneConfig,
     /// Measured steps (after warmup).
     pub steps: usize,
     pub warmup_steps: usize,
@@ -288,6 +344,7 @@ impl Default for ExperimentConfig {
             bucket_mb: 0.0,
             fusion: FusionConfig::default(),
             compression: Compression::None,
+            autotune: AutotuneConfig::default(),
             steps: 30,
             warmup_steps: 5,
             seed: 0x5eed,
@@ -340,6 +397,9 @@ impl ExperimentConfig {
         let ratio = self.compression.ratio();
         if !ratio.is_finite() || ratio < 1.0 {
             errs.push("compression ratio must be finite and >= 1".into());
+        }
+        if self.autotune.enabled {
+            errs.extend(self.autotune.errors());
         }
         if self.steps == 0 {
             errs.push("steps must be >= 1".into());
@@ -447,6 +507,23 @@ mod tests {
         c.bucket_mb = 0.0;
         c.validate().unwrap();
         c.bucket_mb = 25.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn autotune_defaults_off_and_validates_when_on() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.autotune.enabled);
+        c.validate().unwrap();
+        c.autotune.enabled = true;
+        c.validate().unwrap();
+        c.autotune.bucket_mbs = vec![0.0];
+        assert!(c.validate().is_err(), "zero bucket candidates must be rejected");
+        c.autotune.bucket_mbs = vec![4.0];
+        c.autotune.compressions = vec![];
+        assert!(c.validate().is_err());
+        // Disabled autotune never blocks validation, whatever it holds.
+        c.autotune.enabled = false;
         c.validate().unwrap();
     }
 

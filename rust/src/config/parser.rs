@@ -138,6 +138,11 @@ fn parse_value(s: &str) -> Result<Value> {
 /// steps = 30
 /// warmup_steps = 5
 /// seed = 1234
+/// autotune = true             # or [autotune] enabled = true
+/// [autotune]
+/// enabled = true
+/// bucket_mbs = "1,4,16,64"
+/// compressions = "none,fp16,4"  # any ratio-or-codec spec
 /// [fusion]
 /// buffer_mb = 64
 /// timeout_ms = 5.0
@@ -174,6 +179,34 @@ pub fn experiment_from_doc(doc: &Doc) -> Result<ExperimentConfig> {
                     OverlapMode::parse(s).ok_or_else(|| anyhow!("unknown overlap mode {s:?}"))?;
             }
             "bucket_mb" => c.bucket_mb = get_f64(val, key)?,
+            "autotune" | "autotune.enabled" => {
+                c.autotune.enabled =
+                    val.as_bool().ok_or_else(|| anyhow!("{key} must be a bool"))?
+            }
+            "autotune.bucket_mbs" => {
+                let s = val.as_str().ok_or_else(|| {
+                    anyhow!("{key} must be a string of comma-separated MB values")
+                })?;
+                c.autotune.bucket_mbs = s
+                    .split(',')
+                    .map(|p| {
+                        p.trim()
+                            .parse::<f64>()
+                            .map_err(|_| anyhow!("{key}: bad MB value {p:?}"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            "autotune.compressions" => {
+                // Reuses the one ratio-or-codec entry point, so every
+                // codec spelling works here too.
+                let s = val.as_str().ok_or_else(|| {
+                    anyhow!("{key} must be a string of comma-separated compression specs")
+                })?;
+                c.autotune.compressions = s
+                    .split(',')
+                    .map(|p| Compression::parse(p.trim()))
+                    .collect::<Result<_>>()?;
+            }
             "steps" => c.steps = get_usize(val, key)?,
             "warmup_steps" => c.warmup_steps = get_usize(val, key)?,
             "seed" => c.seed = get_usize(val, key)? as u64,
@@ -282,6 +315,36 @@ ratio = 4.0
     #[test]
     fn unknown_key_is_an_error() {
         assert!(experiment_from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn autotune_keys_parse() {
+        let c = experiment_from_str(
+            r#"
+autotune = true
+[autotune]
+bucket_mbs = "2,8,32"
+compressions = "none,fp16,4"
+"#,
+        )
+        .unwrap();
+        assert!(c.autotune.enabled);
+        assert_eq!(c.autotune.bucket_mbs, vec![2.0, 8.0, 32.0]);
+        assert_eq!(c.autotune.compressions.len(), 3);
+        assert_eq!(c.autotune.compressions[1].ratio(), 2.0); // fp16 via CodecKind
+        assert_eq!(c.autotune.compressions[2].ratio(), 4.0);
+
+        // The section spelling alone also enables it.
+        let c = experiment_from_str("[autotune]\nenabled = true").unwrap();
+        assert!(c.autotune.enabled);
+
+        // Bad values fail through the shared parsers, with validation on
+        // top (a 0 MB candidate passes parsing but fails validate()).
+        assert!(experiment_from_str("[autotune]\ncompressions = \"topk:0\"").is_err());
+        assert!(experiment_from_str("autotune = 1").is_err());
+        assert!(
+            experiment_from_str("[autotune]\nenabled = true\nbucket_mbs = \"0\"").is_err()
+        );
     }
 
     #[test]

@@ -20,10 +20,11 @@
 //!   the four transport scenarios (`transport_ablation`,
 //!   `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`),
 //!   the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
-//!   `e2e_tcp_smoke`) and the three overlap scenarios
+//!   `e2e_tcp_smoke`), the three overlap scenarios
 //!   (`overlap_ablation`, `bucket_size_sweep`,
-//!   `scaling_factor_recovered`); `netbn list --markdown` renders it as
-//!   `docs/SCENARIOS.md`;
+//!   `scaling_factor_recovered`) and the three autotune scenarios
+//!   (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`);
+//!   `netbn list --markdown` renders it as `docs/SCENARIOS.md`;
 //! * [`bench`] — the perf-regression gate: collect throughput metrics
 //!   from the gated scenarios and compare against `bench/baseline.json`
 //!   (`netbn bench --compare`);
@@ -42,6 +43,7 @@ pub mod runner;
 pub(crate) mod scenarios_hier;
 pub(crate) mod scenarios_overlap;
 pub(crate) mod scenarios_transport;
+pub(crate) mod scenarios_tune;
 pub mod sweep;
 
 pub use outcome::Outcome;

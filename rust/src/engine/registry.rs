@@ -118,9 +118,10 @@ impl ScenarioRegistry {
     /// the four transport scenarios (`transport_ablation`,
     /// `chunk_size_sweep`, `fig4_recovered`, `utilization_frontier`),
     /// the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
-    /// `e2e_tcp_smoke`) and the three overlap scenarios
+    /// `e2e_tcp_smoke`), the three overlap scenarios
     /// (`overlap_ablation`, `bucket_size_sweep`,
-    /// `scaling_factor_recovered`).
+    /// `scaling_factor_recovered`) and the three autotune scenarios
+    /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -176,6 +177,12 @@ impl ScenarioRegistry {
                     ParamKind::Float,
                     "0",
                 ),
+                ParamSpec::new(
+                    "autotune",
+                    "tune bucket-mb x compression online from step feedback",
+                    ParamKind::Choice(&["off", "on"]),
+                    "off",
+                ),
                 ParamSpec::new("steps", "measured steps", ParamKind::Int, "5"),
                 ParamSpec::new("payload-scale", "byte/rate shrink factor", ParamKind::PositiveFloat, "256"),
                 ParamSpec::new("compression", "wire ratio or codec", ParamKind::Compression, "1"),
@@ -230,6 +237,7 @@ impl ScenarioRegistry {
         super::scenarios_transport::register(&mut r).expect("builtin registration");
         super::scenarios_hier::register(&mut r).expect("builtin registration");
         super::scenarios_overlap::register(&mut r).expect("builtin registration");
+        super::scenarios_tune::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -332,14 +340,15 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 25, "only {} scenarios", r.len());
+        assert!(r.len() >= 28, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
             "ablate-collectives", "ablate-bw-compression", "transport_ablation",
             "chunk_size_sweep", "fig4_recovered", "utilization_frontier", "hier_vs_flat",
             "oversub_sweep", "e2e_tcp_smoke", "overlap_ablation", "bucket_size_sweep",
-            "scaling_factor_recovered",
+            "scaling_factor_recovered", "autotune_convergence", "autotune_vs_static",
+            "autotune_adapt",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

@@ -149,7 +149,7 @@ impl Runner for EmulateRunner {
         let overlap = crate::config::OverlapMode::parse(p.get_str("overlap")?)
             .expect("schema-validated choice");
         let bucket_mb = p.get_f64("bucket-mb")?;
-        let exp = ExperimentConfig {
+        let mut exp = ExperimentConfig {
             model,
             servers,
             gpus_per_server: 1,
@@ -163,6 +163,7 @@ impl Runner for EmulateRunner {
             warmup_steps: 1,
             ..Default::default()
         };
+        exp.autotune.enabled = p.get_str("autotune")? == "on";
         let r = run_emulated(&EmulatedRunConfig { exp, payload_scale })?;
 
         let mut t = Table::new(
@@ -186,6 +187,19 @@ impl Runner for EmulateRunner {
         out.metric("mean_comm_wait_s", r.mean_comm_wait_s);
         out.metric("network_utilization", r.network_utilization);
         out.metric("buckets_per_step", r.buckets_per_step);
+        if let Some(summary) = &r.autotune {
+            out.metric("knob_changes", summary.changes as f64);
+            out.metric("final_bucket_mb", summary.final_knobs.bucket_mb);
+            out.metric("final_compression_ratio", summary.final_knobs.compression.ratio());
+            let mut tt = Table::new(
+                format!("autotune trajectory ({} applied points)", summary.trajectory.len()),
+                &["from step", "knobs"],
+            );
+            for (step, point) in &summary.trajectory {
+                tt.row(vec![step.to_string(), point.spec()]);
+            }
+            out.tables.push(tt);
+        }
         Ok(out)
     }
 }

@@ -267,9 +267,15 @@ impl super::runner::Runner for E2eSmokeRunner {
                 bucket_mb: 0.0,
                 layers: 1,
                 compute_us: 0,
+                autotune: false,
+                chunk_kbs: Vec::new(),
+                gate_gbps: 0.0,
+                drop_at_step: 0,
+                drop_gbps: 0.0,
                 seed: p.get_usize("seed")? as u64,
             },
             spawn,
+            feedback_out: None,
         };
         let r = launch(&cfg)?;
         let t = r.step_table();

@@ -117,12 +117,22 @@ impl super::runner::Runner for OverlapAblationRunner {
             bucket_mb: p.get_f64("bucket-mb")?,
             layers,
             compute_us: p.get_usize("compute-us")? as u64,
+            autotune: false,
+            chunk_kbs: Vec::new(),
+            gate_gbps: 0.0,
+            drop_at_step: 0,
+            drop_gbps: 0.0,
             seed: p.get_usize("seed")? as u64,
         };
-        let blocking = launch(&LaunchConfig { params: params.clone(), spawn: SpawnMode::Thread })?;
+        let blocking = launch(&LaunchConfig {
+            params: params.clone(),
+            spawn: SpawnMode::Thread,
+            feedback_out: None,
+        })?;
         let overlapped = launch(&LaunchConfig {
             params: WorkerParams { overlap: OverlapMode::Buckets, ..params },
             spawn: SpawnMode::Thread,
+            feedback_out: None,
         })?;
 
         let off_s = mean_steady_step(&blocking);

@@ -1,0 +1,675 @@
+//! Autotuning scenarios: the control plane's measurable claims.
+//!
+//! * `autotune_convergence` — drive the [`AutoTuner`] against the
+//!   analytic oracle at one rate (default 10 Gbps, seeded measurement
+//!   noise) and check the chosen operating point lands within tolerance
+//!   (default 10%) of the **exhaustive sweep** over the same knob space —
+//!   the same objective on both sides, so the gap is pure controller
+//!   suboptimality. A ride-along thread-spawn `netbn launch` pair
+//!   (autotuned vs static, same seeds) checks the e2e safety property:
+//!   FNV-bit-identical final tensors;
+//! * `autotune_vs_static` — at every swept rate, the tuned operating
+//!   point must beat the repo's default-static configuration
+//!   (single-stream kernel-TCP, 25 MB buckets, no compression): the
+//!   "configuration, not capacity" thesis as one check;
+//! * `autotune_adapt` — the environment moves mid-run. `harness=model`:
+//!   the oracle's rate drops after convergence; the tuner must detect the
+//!   sustained regression, re-probe, and land within tolerance of the
+//!   *post-drop* optimum. `harness=launch`: a real two-worker launch over
+//!   loopback TCP with a per-stream rate gate that drops 10× mid-run —
+//!   rank 0's re-probe shows up as knob broadcasts after the drop step,
+//!   and the run stays bit-identical to the equivalent static launch.
+
+use super::outcome::Outcome;
+use super::params::{ParamKind, ParamSchema, ParamSpec, ParamValues};
+use super::registry::{Scenario, ScenarioRegistry};
+use crate::config::{CollectiveKind, OverlapMode, TransportKind};
+use crate::report::{Check, Figure, Series, Table};
+use crate::trainer::launch::{launch, LaunchConfig, SpawnMode, WorkerParams};
+use crate::tune::{
+    drive_until_exploit, noisy_oracle_step, AutoTuner, KnobPoint, KnobSpace, OracleEnv,
+    TunerConfig, TunerState,
+};
+use crate::util::Rng;
+use crate::Result;
+use anyhow::ensure;
+
+/// Register the three autotune scenarios (called from
+/// [`ScenarioRegistry::builtin`]).
+pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
+    r.register(Scenario::new(
+        "autotune_convergence",
+        "tuner lands within tolerance of the exhaustive-sweep optimum; autotuned launch stays FNV-identical",
+        ParamSchema::new(vec![
+            ParamSpec::new("model", "resnet50|resnet101|vgg16", ParamKind::Model, "resnet50"),
+            ParamSpec::new("servers", "server count", ParamKind::Int, "8"),
+            ParamSpec::new("gpus", "GPUs per server", ParamKind::Int, "8"),
+            ParamSpec::new("bandwidth", "provisioned Gbps", ParamKind::PositiveFloat, "10"),
+            ParamSpec::new("tolerance", "allowed fraction above the sweep optimum", ParamKind::PositiveFloat, "0.1"),
+            ParamSpec::new("noise", "relative measurement noise fed to the tuner", ParamKind::Float, "0.01"),
+            ParamSpec::new("knobs", "knob-space overrides (name=v1,v2;... — empty = default grid)", ParamKind::Str, ""),
+            ParamSpec::new("max-steps", "tuning step budget", ParamKind::Int, "400"),
+            ParamSpec::new("fnv-check", "also run the autotuned-vs-static launch FNV check", ParamKind::Choice(&["on", "off"]), "on"),
+            ParamSpec::new("seed", "controller + noise seed", ParamKind::Int, "271828"),
+        ]),
+        Box::new(ConvergenceRunner),
+    ))?;
+    r.register(Scenario::from_fn(
+        "autotune_vs_static",
+        "tuned operating point beats the default-static config at every swept rate",
+        ParamSchema::new(vec![
+            ParamSpec::new("model", "resnet50|resnet101|vgg16", ParamKind::Model, "resnet50"),
+            ParamSpec::new("servers", "server count", ParamKind::Int, "8"),
+            ParamSpec::new("gpus", "GPUs per server", ParamKind::Int, "8"),
+            ParamSpec::new("bandwidths", "comma list of provisioned Gbps", ParamKind::FloatList, "1,10,25,100"),
+            ParamSpec::new("noise", "relative measurement noise fed to the tuner", ParamKind::Float, "0.01"),
+            ParamSpec::new("knobs", "knob-space overrides (empty = default grid)", ParamKind::Str, ""),
+            ParamSpec::new("max-steps", "tuning step budget per rate", ParamKind::Int, "400"),
+            ParamSpec::new("seed", "controller + noise seed", ParamKind::Int, "271828"),
+        ]),
+        "tune",
+        run_vs_static,
+    ))?;
+    r.register(Scenario::new(
+        "autotune_adapt",
+        "rate drops mid-run: the tuner re-probes and recovers (model oracle or real launch)",
+        ParamSchema::new(vec![
+            ParamSpec::new("harness", "model (analytic oracle) or launch (real sockets)", ParamKind::Choice(&["model", "launch"]), "model"),
+            ParamSpec::new("model", "resnet50|resnet101|vgg16 (model harness)", ParamKind::Model, "resnet50"),
+            ParamSpec::new("servers", "server count (model harness)", ParamKind::Int, "8"),
+            ParamSpec::new("gpus", "GPUs per server (model harness)", ParamKind::Int, "8"),
+            ParamSpec::new("rate0", "pre-drop Gbps (model harness)", ParamKind::PositiveFloat, "25"),
+            ParamSpec::new("rate1", "post-drop Gbps (model harness)", ParamKind::PositiveFloat, "1"),
+            ParamSpec::new("tolerance", "allowed fraction above the post-drop optimum", ParamKind::PositiveFloat, "0.15"),
+            ParamSpec::new("noise", "relative measurement noise", ParamKind::Float, "0.01"),
+            ParamSpec::new("knobs", "knob-space overrides (model harness)", ParamKind::Str, ""),
+            ParamSpec::new("max-steps", "tuning step budget per phase", ParamKind::Int, "600"),
+            ParamSpec::new("steady-steps", "exploit steps before the drop (model harness)", ParamKind::Int, "6"),
+            ParamSpec::new("workers", "worker count (launch harness)", ParamKind::Int, "2"),
+            ParamSpec::new("steps", "synchronous steps (launch harness)", ParamKind::Int, "40"),
+            ParamSpec::new("elems", "gradient tensor length, f32 (launch harness)", ParamKind::Int, "262144"),
+            ParamSpec::new("gate-gbps", "per-stream ceiling Gbps (launch harness)", ParamKind::PositiveFloat, "0.4"),
+            ParamSpec::new("drop-at-step", "step at which the gate drops (launch harness)", ParamKind::Int, "18"),
+            ParamSpec::new("drop-gbps", "post-drop per-stream Gbps (launch harness)", ParamKind::PositiveFloat, "0.04"),
+            ParamSpec::new("chunk-kbs", "tuner chunk axis, KB (launch harness)", ParamKind::Str, "4,32,256"),
+            ParamSpec::new("seed", "controller + gradient seed", ParamKind::Int, "271828"),
+        ]),
+        Box::new(AdaptRunner),
+    ))?;
+    Ok(())
+}
+
+/// Parse the shared oracle-harness parameters.
+fn oracle_from(p: &ParamValues) -> Result<(OracleEnv, KnobSpace)> {
+    let model = p.get_model("model")?;
+    let servers = p.get_usize("servers")?;
+    ensure!((2..=1024).contains(&servers), "parameter servers: must be in 2..=1024, got {servers}");
+    let gpus = p.get_usize("gpus")?;
+    ensure!((1..=64).contains(&gpus), "parameter gpus: must be in 1..=64, got {gpus}");
+    let space = KnobSpace::parse_spec(p.get_str("knobs")?)
+        .map_err(|e| anyhow::anyhow!("parameter knobs: {e:#}"))?;
+    Ok((OracleEnv::new(model, servers, gpus), space))
+}
+
+fn noise_from(p: &ParamValues) -> Result<f64> {
+    let noise = p.get_f64("noise")?;
+    ensure!((0.0..0.5).contains(&noise), "parameter noise: must be in [0, 0.5), got {noise}");
+    Ok(noise)
+}
+
+/// Stamp the chosen point's coordinates as metrics.
+fn knob_metrics(out: &mut Outcome, prefix: &str, k: &KnobPoint) {
+    out.metric(format!("{prefix}_bucket_mb"), k.bucket_mb);
+    out.metric(format!("{prefix}_stripes"), k.stripes as f64);
+    out.metric(format!("{prefix}_chunk_kb"), k.chunk_kb as f64);
+    out.metric(format!("{prefix}_compression_ratio"), k.compression.ratio());
+}
+
+/// The trajectory as a table (step, knobs, modeled step time).
+fn trajectory_table(env: &OracleEnv, bw: f64, tuner: &AutoTuner) -> Table {
+    let mut t = Table::new(
+        format!("knob trajectory ({} applied points)", tuner.trajectory().len()),
+        &["from step", "knobs", "modeled step"],
+    );
+    for (step, p) in tuner.trajectory() {
+        t.row(vec![
+            step.to_string(),
+            p.spec(),
+            crate::util::fmt::secs(env.step_time_s(bw, p)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// autotune_convergence
+// ---------------------------------------------------------------------------
+
+struct ConvergenceRunner;
+
+impl super::runner::Runner for ConvergenceRunner {
+    fn mode(&self) -> &'static str {
+        "tune"
+    }
+
+    fn realtime(&self) -> bool {
+        // The FNV leg runs real thread-spawned launches.
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let (env, space) = oracle_from(p)?;
+        let bw = p.get_f64("bandwidth")?;
+        let tolerance = p.get_f64("tolerance")?;
+        ensure!(tolerance < 1.0, "parameter tolerance: must be < 1, got {tolerance}");
+        let noise = noise_from(p)?;
+        let max_steps = p.get_usize("max-steps")?;
+        ensure!(max_steps >= 10, "parameter max-steps: must be >= 10, got {max_steps}");
+        let seed = p.get_usize("seed")? as u64;
+
+        let cfg = TunerConfig { seed, ..TunerConfig::default() };
+        let mut tuner = AutoTuner::new(space.clone(), cfg, &KnobPoint::default_static())?;
+        let mut rng = Rng::new(seed ^ 0x0c1e);
+        let converged = drive_until_exploit(&mut tuner, &env, bw, noise, &mut rng, max_steps);
+
+        let tuned = tuner.chosen();
+        let tuned_t = env.step_time_s(bw, &tuned);
+        let (best_p, best_t) = env.best(bw, &space);
+        let ratio = tuned_t / best_t;
+        let static_t = env.step_time_s(bw, &KnobPoint::default_static());
+
+        let mut out = Outcome::new();
+        out.metric("tuned_step_s", tuned_t);
+        out.metric("sweep_best_step_s", best_t);
+        out.metric("ratio_to_optimum", ratio);
+        out.metric("static_step_s", static_t);
+        out.metric("steps_to_converge", converged.unwrap_or(max_steps) as f64);
+        out.metric("knob_changes", tuner.trajectory().len().saturating_sub(1) as f64);
+        out.metric("space_points", space.len() as f64);
+        knob_metrics(&mut out, "final", &tuned);
+        out.checks.push(Check::assert(
+            "tuner reached the exploit phase within the step budget",
+            converged.is_some(),
+            format!("{} steps of {max_steps}", converged.unwrap_or(max_steps)),
+        ));
+        out.checks.push(Check::assert(
+            "tuner-selected config within tolerance of the exhaustive-sweep optimum",
+            ratio <= 1.0 + tolerance,
+            format!(
+                "tuned {} vs sweep best {} over {} points ({:.1}% above; tolerance {:.0}%; best: {})",
+                crate::util::fmt::secs(tuned_t),
+                crate::util::fmt::secs(best_t),
+                space.len(),
+                (ratio - 1.0) * 100.0,
+                tolerance * 100.0,
+                best_p.spec()
+            ),
+        ));
+        out.tables.push(trajectory_table(&env, bw, &tuner));
+
+        let mut fig = Figure::new(
+            "autotune_convergence",
+            format!("Tuner trajectory at {bw} Gbps ({})", env.model),
+            "step",
+            "modeled step seconds",
+        );
+        let mut s = Series::new("applied operating point");
+        for (step, point) in tuner.trajectory() {
+            s.push(*step as f64, env.step_time_s(bw, point));
+        }
+        fig.series.push(s);
+        let mut bound = Series::new("exhaustive-sweep optimum");
+        bound.push(0.0, best_t);
+        bound.push(tuner.steps_seen() as f64, best_t);
+        fig.series.push(bound);
+        out.figures.push(fig);
+
+        if p.get_str("fnv-check")? == "on" {
+            run_fnv_leg(&mut out, seed)?;
+        }
+        Ok(out)
+    }
+}
+
+/// The e2e safety leg: an autotuned thread-spawn launch must end
+/// bit-identical to the static run with the same seeds.
+fn run_fnv_leg(out: &mut Outcome, seed: u64) -> Result<()> {
+    let params = WorkerParams {
+        world: 2,
+        steps: 8,
+        elems: 65_536,
+        transport: TransportKind::Striped { streams: 2 },
+        collective: CollectiveKind::Ring,
+        overlap: OverlapMode::Off,
+        bucket_mb: 0.0,
+        layers: 1,
+        compute_us: 0,
+        autotune: false,
+        chunk_kbs: Vec::new(),
+        gate_gbps: 0.0,
+        drop_at_step: 0,
+        drop_gbps: 0.0,
+        seed,
+    };
+    let static_run = launch(&LaunchConfig {
+        params: params.clone(),
+        spawn: SpawnMode::Thread,
+        feedback_out: None,
+    })?;
+    let tuned_run = launch(&LaunchConfig {
+        params: WorkerParams {
+            autotune: true,
+            chunk_kbs: vec![4, 16, 64],
+            ..params
+        },
+        spawn: SpawnMode::Thread,
+        feedback_out: None,
+    })?;
+    out.metric("fnv_knob_changes", tuned_run.knob_trajectory.len().saturating_sub(1) as f64);
+    out.checks.push(Check::assert(
+        "autotuned launch FNV-bit-identical to the static-config run",
+        static_run.identical
+            && tuned_run.identical
+            && static_run.checksums == tuned_run.checksums,
+        format!("static {:x?} vs tuned {:x?}", static_run.checksums, tuned_run.checksums),
+    ));
+    out.checks.push(Check::assert(
+        "the autotuned launch actually retuned (knob broadcasts happened)",
+        tuned_run.knob_trajectory.len() >= 2,
+        format!("trajectory {:?}", tuned_run.knob_trajectory),
+    ));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// autotune_vs_static
+// ---------------------------------------------------------------------------
+
+fn run_vs_static(p: &ParamValues) -> Result<Outcome> {
+    let (env, space) = oracle_from(p)?;
+    let noise = noise_from(p)?;
+    let max_steps = p.get_usize("max-steps")?;
+    ensure!(max_steps >= 10, "parameter max-steps: must be >= 10, got {max_steps}");
+    let seed = p.get_usize("seed")? as u64;
+    let mut bws = p.get_f64_list("bandwidths")?;
+    ensure!(!bws.is_empty(), "parameter bandwidths: list is empty");
+    bws.sort_by(f64::total_cmp);
+
+    let static_point = KnobPoint::default_static();
+    let mut fig = Figure::new(
+        "autotune_vs_static",
+        format!("Tuned vs default-static step time ({})", env.model),
+        "Gbps",
+        "step seconds",
+    );
+    let mut s_tuned = Series::new("autotuned");
+    let mut s_static = Series::new("default static");
+    let mut t = Table::new(
+        format!("autotune vs static: {}", env.model),
+        &["Gbps", "static step", "tuned step", "speedup", "tuned knobs"],
+    );
+    let mut all_beat = true;
+    let mut all_converged = true;
+    let mut min_speedup = f64::INFINITY;
+    let mut out = Outcome::new();
+    for (i, &bw) in bws.iter().enumerate() {
+        let cfg = TunerConfig { seed: seed ^ (i as u64) << 8, ..TunerConfig::default() };
+        let mut tuner = AutoTuner::new(space.clone(), cfg, &static_point)?;
+        let mut rng = Rng::new(seed ^ 0x57a7 ^ (i as u64));
+        let converged =
+            drive_until_exploit(&mut tuner, &env, bw, noise, &mut rng, max_steps).is_some();
+        all_converged &= converged;
+        let tuned = tuner.chosen();
+        let tuned_t = env.step_time_s(bw, &tuned);
+        let static_t = env.step_time_s(bw, &static_point);
+        let speedup = static_t / tuned_t;
+        all_beat &= tuned_t < static_t;
+        min_speedup = min_speedup.min(speedup);
+        s_tuned.push(bw, tuned_t);
+        s_static.push(bw, static_t);
+        t.row(vec![
+            format!("{bw}"),
+            crate::util::fmt::secs(static_t),
+            crate::util::fmt::secs(tuned_t),
+            format!("{speedup:.2}x"),
+            tuned.spec(),
+        ]);
+        out.metric(format!("tuned_step_s@{bw}g"), tuned_t);
+        out.metric(format!("static_step_s@{bw}g"), static_t);
+        out.metric(format!("speedup@{bw}g"), speedup);
+    }
+    fig.series.push(s_static);
+    fig.series.push(s_tuned);
+    out.metric("min_speedup", min_speedup);
+    out.checks.push(Check::assert(
+        "tuner reached exploit at every swept rate",
+        all_converged,
+        format!("{} rates", bws.len()),
+    ));
+    out.checks.push(Check::assert(
+        "tuned operating point beats default-static at every swept rate",
+        all_beat,
+        format!("min speedup {min_speedup:.2}x across {} rates", bws.len()),
+    ));
+    out.figures.push(fig);
+    out.tables.push(t);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// autotune_adapt
+// ---------------------------------------------------------------------------
+
+struct AdaptRunner;
+
+impl super::runner::Runner for AdaptRunner {
+    fn mode(&self) -> &'static str {
+        "tune"
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        match p.get_str("harness")? {
+            "launch" => run_adapt_launch(p),
+            _ => run_adapt_model(p),
+        }
+    }
+}
+
+fn run_adapt_model(p: &ParamValues) -> Result<Outcome> {
+    let (env, space) = oracle_from(p)?;
+    let rate0 = p.get_f64("rate0")?;
+    let rate1 = p.get_f64("rate1")?;
+    let tolerance = p.get_f64("tolerance")?;
+    ensure!(tolerance < 1.0, "parameter tolerance: must be < 1, got {tolerance}");
+    let noise = noise_from(p)?;
+    let max_steps = p.get_usize("max-steps")?;
+    ensure!(max_steps >= 20, "parameter max-steps: must be >= 20, got {max_steps}");
+    let steady = p.get_usize("steady-steps")?;
+    let seed = p.get_usize("seed")? as u64;
+
+    let cfg = TunerConfig { seed, ..TunerConfig::default() };
+    let mut tuner = AutoTuner::new(space.clone(), cfg, &KnobPoint::default_static())?;
+    let mut rng = Rng::new(seed ^ 0xada7);
+
+    // Phase 1: converge at rate0, then exploit for a steady window.
+    let converged0 =
+        drive_until_exploit(&mut tuner, &env, rate0, noise, &mut rng, max_steps).is_some();
+    for _ in 0..steady {
+        noisy_oracle_step(&mut tuner, &env, rate0, noise, &mut rng);
+    }
+    let pre_chosen = tuner.chosen();
+    let pre_t = env.step_time_s(rate0, &pre_chosen);
+    let drop_step = tuner.steps_seen();
+
+    // Phase 2: the rate drops. The tuner must notice and re-probe.
+    let mut reprobe_used = 0usize;
+    while tuner.state() != TunerState::Probe && reprobe_used < max_steps {
+        noisy_oracle_step(&mut tuner, &env, rate1, noise, &mut rng);
+        reprobe_used += 1;
+    }
+    let reprobed = tuner.state() == TunerState::Probe;
+
+    // Phase 3: recover at the new rate.
+    let recovered =
+        drive_until_exploit(&mut tuner, &env, rate1, noise, &mut rng, max_steps).is_some();
+    let final_chosen = tuner.chosen();
+    let final_t = env.step_time_s(rate1, &final_chosen);
+    let (best1, best1_t) = env.best(rate1, &space);
+    let ratio = final_t / best1_t;
+    let pre_at_rate1 = env.step_time_s(rate1, &pre_chosen);
+
+    let mut out = Outcome::new();
+    out.metric("pre_drop_step_s", pre_t);
+    out.metric("pre_config_at_new_rate_s", pre_at_rate1);
+    out.metric("recovered_step_s", final_t);
+    out.metric("post_drop_best_s", best1_t);
+    out.metric("recovery_ratio", ratio);
+    out.metric("reprobe_detect_steps", reprobe_used as f64);
+    out.metric("probe_phases", tuner.probe_phases() as f64);
+    out.metric("drop_at_step", drop_step as f64);
+    knob_metrics(&mut out, "final", &final_chosen);
+    out.checks.push(Check::assert(
+        "tuner converged before the drop",
+        converged0,
+        format!("rate0 {rate0} Gbps"),
+    ));
+    out.checks.push(Check::assert(
+        "sustained regression triggered a re-probe",
+        reprobed && tuner.probe_phases() >= 2,
+        format!(
+            "detected in {reprobe_used} steps after the {rate0}→{rate1} Gbps drop; \
+             {} probe phases",
+            tuner.probe_phases()
+        ),
+    ));
+    out.checks.push(Check::assert(
+        "recovered within tolerance of the post-drop optimum",
+        recovered && ratio <= 1.0 + tolerance,
+        format!(
+            "recovered {} vs post-drop best {} ({:.1}% above; tolerance {:.0}%; best: {})",
+            crate::util::fmt::secs(final_t),
+            crate::util::fmt::secs(best1_t),
+            (ratio - 1.0) * 100.0,
+            tolerance * 100.0,
+            best1.spec()
+        ),
+    ));
+    // Price each applied point at the rate it actually ran under —
+    // pre-drop entries at rate0, post-drop at rate1.
+    let mut tt = Table::new(
+        format!(
+            "knob trajectory ({} applied points; rate drops {rate0} -> {rate1} Gbps at step {drop_step})",
+            tuner.trajectory().len()
+        ),
+        &["from step", "knobs", "Gbps", "modeled step"],
+    );
+    for (step, point) in tuner.trajectory() {
+        let rate = if *step < drop_step { rate0 } else { rate1 };
+        tt.row(vec![
+            step.to_string(),
+            point.spec(),
+            format!("{rate}"),
+            crate::util::fmt::secs(env.step_time_s(rate, point)),
+        ]);
+    }
+    out.tables.push(tt);
+    Ok(out)
+}
+
+fn run_adapt_launch(p: &ParamValues) -> Result<Outcome> {
+    let workers = p.get_usize("workers")?;
+    ensure!((2..=16).contains(&workers), "parameter workers: must be in 2..=16, got {workers}");
+    let steps = p.get_usize("steps")?;
+    let elems = p.get_usize("elems")?;
+    ensure!(elems >= 1024, "parameter elems: must be >= 1024, got {elems}");
+    let drop_at = p.get_usize("drop-at-step")?;
+    ensure!(
+        (6..steps.saturating_sub(6)).contains(&drop_at),
+        "parameter drop-at-step: must leave >= 6 steps on each side of the drop, got {drop_at} of {steps}"
+    );
+    let chunk_kbs: Vec<usize> = p
+        .get_str("chunk-kbs")?
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("parameter chunk-kbs: bad value {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let seed = p.get_usize("seed")? as u64;
+
+    let params = WorkerParams {
+        world: workers,
+        steps,
+        elems,
+        transport: TransportKind::Striped { streams: 2 },
+        collective: CollectiveKind::Ring,
+        overlap: OverlapMode::Off,
+        bucket_mb: 0.0,
+        layers: 1,
+        compute_us: 0,
+        autotune: true,
+        chunk_kbs,
+        gate_gbps: p.get_f64("gate-gbps")?,
+        drop_at_step: drop_at,
+        drop_gbps: p.get_f64("drop-gbps")?,
+        seed,
+    };
+    let tuned = launch(&LaunchConfig {
+        params: params.clone(),
+        spawn: SpawnMode::Thread,
+        feedback_out: None,
+    })?;
+    let static_run = launch(&LaunchConfig {
+        params: WorkerParams { autotune: false, chunk_kbs: Vec::new(), ..params },
+        spawn: SpawnMode::Thread,
+        feedback_out: None,
+    })?;
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let pre = mean(&tuned.step_wall_s[drop_at - 3..drop_at]);
+    let post = mean(&tuned.step_wall_s[drop_at + 1..drop_at + 4]);
+    let reprobed_after_drop =
+        tuned.knob_trajectory.iter().any(|(step, _)| *step > drop_at as u64);
+
+    let mut out = Outcome::new();
+    out.metric("pre_drop_mean_wall_s", pre);
+    out.metric("post_drop_mean_wall_s", post);
+    out.metric("effective_bus_gbps", tuned.effective_bus_gbps);
+    out.metric("knob_changes", tuned.knob_trajectory.len().saturating_sub(1) as f64);
+    out.checks.push(Check::assert(
+        "the gate drop is visible in step walls",
+        post > pre * 2.0,
+        format!("pre {} vs post {}", crate::util::fmt::secs(pre), crate::util::fmt::secs(post)),
+    ));
+    out.checks.push(Check::assert(
+        "rank 0 re-probed after the drop (knob broadcasts past the drop step)",
+        reprobed_after_drop,
+        format!("trajectory {:?} (drop at {drop_at})", tuned.knob_trajectory),
+    ));
+    out.checks.push(Check::assert(
+        "autotuned launch FNV-bit-identical to the static run under the same drop",
+        tuned.identical && static_run.identical && tuned.checksums == static_run.checksums,
+        format!("tuned {:x?} vs static {:x?}", tuned.checksums, static_run.checksums),
+    ));
+    let mut t = tuned.step_table();
+    t.row(vec!["(gate drop)".into(), format!("step {drop_at}"), "-".into()]);
+    out.tables.push(t);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> ScenarioRegistry {
+        ScenarioRegistry::builtin()
+    }
+
+    fn kv(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn convergence_meets_acceptance_at_10g() {
+        // The ISSUE's criterion verbatim: within 10% of the exhaustive
+        // sweep at 10 Gbps, FNV leg included.
+        let out = registry().get("autotune_convergence").unwrap().run(&[]).unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert!(out.metric_value("ratio_to_optimum").unwrap() <= 1.1);
+        assert!(out.metric_value("knob_changes").unwrap() >= 1.0);
+        assert!(out.metric_value("fnv_knob_changes").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn convergence_without_fnv_leg_is_pure_analytic() {
+        let out = registry()
+            .get("autotune_convergence")
+            .unwrap()
+            .run(&kv(&[("fnv-check", "off"), ("bandwidth", "25")]))
+            .unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert!(out.metric_value("fnv_knob_changes").is_none());
+    }
+
+    #[test]
+    fn vs_static_dominates_across_rates() {
+        let out = registry().get("autotune_vs_static").unwrap().run(&[]).unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert!(out.metric_value("min_speedup").unwrap() > 1.0);
+    }
+
+    #[test]
+    fn adapt_model_recovers_after_the_drop() {
+        let out = registry().get("autotune_adapt").unwrap().run(&[]).unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert!(out.metric_value("probe_phases").unwrap() >= 2.0);
+        assert!(
+            out.metric_value("recovery_ratio").unwrap() <= 1.15,
+            "{:?}",
+            out.metric_value("recovery_ratio")
+        );
+    }
+
+    #[test]
+    fn adapt_launch_reprobes_and_stays_bit_identical() {
+        // Shrunk launch variant: short gate windows keep it in test time.
+        let out = registry()
+            .get("autotune_adapt")
+            .unwrap()
+            .run(&kv(&[
+                ("harness", "launch"),
+                ("steps", "30"),
+                ("elems", "131072"),
+                ("drop-at-step", "16"),
+                ("gate-gbps", "0.8"),
+                ("drop-gbps", "0.08"),
+                ("chunk-kbs", "8,64"),
+            ]))
+            .unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+    }
+
+    #[test]
+    fn unknown_knob_override_is_actionable() {
+        let err = registry()
+            .get("autotune_convergence")
+            .unwrap()
+            .run(&kv(&[("knobs", "chunk_bytes=1,2"), ("fnv-check", "off")]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chunk_bytes"), "{err}");
+        assert!(err.contains("chunk_kb"), "{err}");
+        assert!(err.contains("bucket_mb"), "{err}");
+    }
+
+    #[test]
+    fn tune_scenarios_are_sweepable_with_injected_seeds() {
+        // The determinism satellite's engine face: the scenarios declare
+        // `seed`, so sweeps inject per-point seeds and serial == parallel.
+        let reg = registry();
+        let scenario = reg.get("autotune_vs_static").unwrap();
+        let build = || {
+            crate::engine::SweepBuilder::new(scenario)
+                .fix("bandwidths", "5,50")
+                .fix("max-steps", "200")
+                .axis_csv("model", "resnet50,vgg16")
+        };
+        let serial = build().run(1);
+        let parallel = build().run(2);
+        assert_eq!(serial.len(), 2);
+        for (s, q) in serial.iter().zip(&parallel) {
+            assert_eq!(s.params, q.params);
+            let (so, qo) = (s.outcome.as_ref().unwrap(), q.outcome.as_ref().unwrap());
+            assert_eq!(so.metric_value("min_speedup"), qo.metric_value("min_speedup"));
+            assert_eq!(
+                so.metric_value("tuned_step_s@5g"),
+                qo.metric_value("tuned_step_s@5g")
+            );
+        }
+    }
+}

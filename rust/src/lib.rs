@@ -36,6 +36,7 @@
 //! | domain | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |
 //! | domain | [`measure`] | CPU / link utilization sampling, white-box timing traces |
 //! | domain | [`sched`] | overlap scheduling: async collective engine (non-blocking handles), DDP-style bucketizer, compute/comm overlap scheduler (`--overlap off\|buckets`, `--bucket-mb`) |
+//! | domain | [`tune`] | online autotuning control plane: per-step feedback, the typed knob space (bucket × stripes × chunk × collective × compression), the warmup→probe→exploit `AutoTuner`, and the analytic oracle (`--autotune`, `netbn tune`) |
 //! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps + hierarchical and overlap cost models |
 //! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap; `launch` runs real worker processes over loopback TCP |
 //! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
@@ -60,6 +61,7 @@ pub mod sched;
 pub mod sim;
 pub mod topology;
 pub mod trainer;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result type.

@@ -132,6 +132,12 @@ fn app() -> App {
                     OptSpec::value("bucket-mb", "bucketizer threshold MB (0 = one bucket)", "0"),
                     OptSpec::value("layers", "synthetic backward layers", "1"),
                     OptSpec::value("compute-us", "modeled backward compute per step (us)", "0"),
+                    OptSpec::value("autotune", "true|false: rank 0 tunes the stripe chunk online and broadcasts knob changes", "false"),
+                    OptSpec::value("chunk-kbs", "autotune chunk-size candidates, KB (comma list)", "4,32,256"),
+                    OptSpec::value("gate-gbps", "modeled per-stream ceiling Gbps (0 = unshaped)", "0"),
+                    OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
+                    OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
+                    OptSpec::optional("feedback-out", "write per-step step_feedback JSONL here"),
                     OptSpec::value("spawn", "process|thread (thread = in-test smoke mode)", "process"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
                 ],
@@ -152,7 +158,27 @@ fn app() -> App {
                     OptSpec::value("bucket-mb", "bucketizer threshold MB (0 = one bucket)", "0"),
                     OptSpec::value("layers", "synthetic backward layers", "1"),
                     OptSpec::value("compute-us", "modeled backward compute per step (us)", "0"),
+                    OptSpec::value("autotune", "true|false", "false"),
+                    OptSpec::value("chunk-kbs", "autotune chunk-size candidates, KB", "4,32,256"),
+                    OptSpec::value("gate-gbps", "modeled per-stream ceiling Gbps", "0"),
+                    OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
+                    OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "tune",
+                about: "the autotuning control plane, offline: replay recorded feedback and/or query the analytic oracle",
+                opts: vec![
+                    OptSpec::optional("from-trace", "JSONL trace with step_feedback records to replay"),
+                    OptSpec::flag("oracle", "print the oracle's best knob point per rate"),
+                    OptSpec::value("model", "resnet50|resnet101|vgg16|transformer", "resnet50"),
+                    OptSpec::value("servers", "server count", "8"),
+                    OptSpec::value("gpus", "GPUs per server", "8"),
+                    OptSpec::value("bandwidths", "comma list of Gbps for --oracle", "1,10,25,100"),
+                    OptSpec::repeated("knobs", "knob-space override (name=v1,v2,...)"),
+                    OptSpec::optional("json", "write the result as JSON, or '-' for stdout"),
                 ],
                 positional: vec![],
             },
@@ -163,6 +189,7 @@ fn app() -> App {
                     OptSpec::optional("json", "write the collected metrics as flat JSON"),
                     OptSpec::optional("compare", "baseline JSON to gate against (bench/baseline.json)"),
                     OptSpec::value("tolerance", "allowed fractional regression", "0.2"),
+                    OptSpec::value("e2e-runs", "launch-probe repetitions for e2e.busbw mean/stddev", "3"),
                 ],
                 positional: vec![],
             },
@@ -209,6 +236,7 @@ fn run(argv: &[String]) -> Result<bool> {
             "train" => cmd_train(&args),
             "launch" => cmd_launch(&args),
             "_worker" => cmd_worker(&args),
+            "tune" => cmd_tune(&args),
             "bench" => cmd_bench(&registry, &args),
             "info" => cmd_info(),
             other => anyhow::bail!("unhandled command {other}"),
@@ -535,6 +563,22 @@ fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::Wo
     let overlap_s = args.get_or("overlap", "off");
     let overlap = OverlapMode::parse(overlap_s)
         .ok_or_else(|| anyhow::anyhow!("--overlap: expected off|buckets, got {overlap_s:?}"))?;
+    let autotune_s = args.get_or("autotune", "false");
+    let autotune = match autotune_s {
+        "true" | "on" | "1" => true,
+        "false" | "off" | "0" => false,
+        other => anyhow::bail!("--autotune: expected true|false, got {other:?}"),
+    };
+    let chunk_kbs = args
+        .get_or("chunk-kbs", "4,32,256")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--chunk-kbs: bad value {s:?}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
     Ok(netbn::trainer::launch::WorkerParams {
         world,
         steps: args.get_usize("steps", 2)?,
@@ -545,6 +589,11 @@ fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::Wo
         bucket_mb: args.get_f64("bucket-mb", 0.0)?,
         layers: args.get_usize("layers", 1)?,
         compute_us: args.get_usize("compute-us", 0)? as u64,
+        autotune,
+        chunk_kbs,
+        gate_gbps: args.get_f64("gate-gbps", 0.0)?,
+        drop_at_step: args.get_usize("drop-at-step", 0)?,
+        drop_gbps: args.get_f64("drop-gbps", 0.0)?,
         seed: args.get_usize("seed", 0xdeadbeef)? as u64,
     })
 }
@@ -558,7 +607,7 @@ fn cmd_launch(args: &Args) -> Result<bool> {
     let params = worker_params(args, workers)?;
     println!(
         "launch: {workers} workers ({}), {} steps, {} elems, transport {}, collective {}, \
-         overlap {} (bucket-mb {}, {} layers, {} us compute)",
+         overlap {} (bucket-mb {}, {} layers, {} us compute{})",
         if spawn == SpawnMode::Process { "processes" } else { "threads" },
         params.steps,
         params.elems,
@@ -568,16 +617,163 @@ fn cmd_launch(args: &Args) -> Result<bool> {
         params.bucket_mb,
         params.layers,
         params.compute_us,
+        if params.autotune { ", autotune on" } else { "" },
     );
-    let r = launch(&LaunchConfig { params, spawn })?;
+    let feedback_out = args.get("feedback-out").map(PathBuf::from);
+    let r = launch(&LaunchConfig { params, spawn, feedback_out: feedback_out.clone() })?;
     println!("{}", r.step_table().render());
     println!("effective bus bandwidth: {:.3} Gbps", r.effective_bus_gbps);
+    if !r.knob_trajectory.is_empty() {
+        println!(
+            "knob trajectory (step:chunk KB): {}",
+            r.knob_trajectory
+                .iter()
+                .map(|(s, kb)| format!("{s}:{kb}"))
+                .collect::<Vec<_>>()
+                .join(" -> ")
+        );
+    }
+    if let Some(path) = feedback_out {
+        println!("  -> {} (step_feedback JSONL)", path.display());
+    }
     println!(
         "final tensors: {} (checksums {})",
         if r.identical { "bit-identical across all workers" } else { "MISMATCH" },
         r.checksums.iter().map(|c| format!("{c:x}")).collect::<Vec<_>>().join(" ")
     );
     Ok(r.passed())
+}
+
+/// `netbn tune` — the control plane's offline face: summarize a recorded
+/// feedback trace and/or print the oracle's best operating point per
+/// rate.
+fn cmd_tune(args: &Args) -> Result<bool> {
+    use netbn::tune::knobs;
+    use netbn::tune::OracleEnv;
+    let overrides = args
+        .get_multi("knobs")
+        .iter()
+        .map(|pair| knobs::parse_knob_override(pair))
+        .collect::<Result<Vec<_>>>()?;
+    let space = knobs::space_from_overrides(&overrides)?;
+
+    let from_trace = args.get("from-trace");
+    let oracle = args.has_flag("oracle");
+    anyhow::ensure!(
+        from_trace.is_some() || oracle,
+        "netbn tune needs --from-trace <file> and/or --oracle (see `netbn tune --help`)"
+    );
+
+    let mut json = String::from("{");
+    if let Some(path) = from_trace {
+        let records = netbn::measure::trace::load_step_feedback(std::path::Path::new(path))?;
+        anyhow::ensure!(
+            !records.is_empty(),
+            "{path}: no step_feedback records (capture one with `netbn launch --feedback-out`)"
+        );
+        let walls: Vec<f64> = records.iter().map(|r| r.wall_s).collect();
+        let busy: Vec<f64> = records.iter().map(|r| r.comm_busy_s).collect();
+        let busbw: Vec<f64> = records.iter().map(|r| r.busbw_gbps).collect();
+        let (w, b, bw) = (
+            netbn::util::stats::Summary::of(&walls),
+            netbn::util::stats::Summary::of(&busy),
+            netbn::util::stats::Summary::of(&busbw),
+        );
+        let mut t = Table::new(
+            format!("recorded feedback: {} steps from {path}", records.len()),
+            &["signal", "mean", "std", "min", "max"],
+        );
+        let fmt_s = netbn::util::fmt::secs;
+        t.row(vec!["step wall".into(), fmt_s(w.mean), fmt_s(w.std), fmt_s(w.min), fmt_s(w.max)]);
+        t.row(vec!["comm busy".into(), fmt_s(b.mean), fmt_s(b.std), fmt_s(b.min), fmt_s(b.max)]);
+        t.row(vec![
+            "bus bandwidth".into(),
+            format!("{:.3} Gbps", bw.mean),
+            format!("{:.3}", bw.std),
+            format!("{:.3}", bw.min),
+            format!("{:.3}", bw.max),
+        ]);
+        println!("{}", t.render());
+        println!(
+            "comm-busy fraction of the step: {:.1}% — {}",
+            100.0 * b.mean / w.mean.max(1e-12),
+            if b.mean > 0.5 * w.mean {
+                "communication-bound; the oracle below is worth consulting"
+            } else {
+                "mostly hidden under compute"
+            }
+        );
+        json.push_str(&format!(
+            "\"trace\":{{\"steps\":{},\"wall_mean_s\":{},\"wall_std_s\":{},\
+             \"comm_busy_mean_s\":{},\"busbw_mean_gbps\":{}}}",
+            records.len(),
+            w.mean,
+            w.std,
+            b.mean,
+            bw.mean
+        ));
+    }
+
+    if oracle {
+        let model_s = args.get_or("model", "resnet50");
+        let model = netbn::models::ModelId::parse(model_s)
+            .ok_or_else(|| anyhow::anyhow!("--model: unknown model {model_s:?}"))?;
+        let servers = args.get_usize("servers", 8)?;
+        let gpus = args.get_usize("gpus", 8)?;
+        anyhow::ensure!(servers >= 1 && gpus >= 1, "--servers and --gpus must be >= 1");
+        let bws = args.get_f64_list("bandwidths", &[1.0, 10.0, 25.0, 100.0])?;
+        let env = OracleEnv::new(model, servers, gpus);
+        let mut t = Table::new(
+            format!(
+                "oracle: best of {} knob points ({model}, {servers}x{gpus})",
+                space.len()
+            ),
+            &["Gbps", "best step", "static step", "speedup", "best knobs"],
+        );
+        let static_point = netbn::tune::KnobPoint::default_static();
+        if !json.ends_with('{') {
+            json.push(',');
+        }
+        json.push_str("\"oracle\":[");
+        for (i, &bw) in bws.iter().enumerate() {
+            anyhow::ensure!(bw > 0.0, "--bandwidths entries must be > 0");
+            let (best, best_t) = env.best(bw, &space);
+            let static_t = env.step_time_s(bw, &static_point);
+            t.row(vec![
+                format!("{bw}"),
+                netbn::util::fmt::secs(best_t),
+                netbn::util::fmt::secs(static_t),
+                format!("{:.2}x", static_t / best_t),
+                best.spec(),
+            ]);
+            if i > 0 {
+                json.push(',');
+            }
+            json.push_str(&format!(
+                "{{\"gbps\":{bw},\"best_step_s\":{best_t},\"static_step_s\":{static_t},\
+                 \"knobs\":{}}}",
+                json_str(&best.spec())
+            ));
+        }
+        json.push(']');
+        println!("{}", t.render());
+    }
+    json.push('}');
+
+    match args.get("json") {
+        None => {}
+        Some("-") => println!("{json}"),
+        Some(path) => {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(path, json)?;
+            println!("  -> {path}");
+        }
+    }
+    Ok(true)
 }
 
 fn cmd_worker(args: &Args) -> Result<bool> {
@@ -600,9 +796,11 @@ fn cmd_worker(args: &Args) -> Result<bool> {
 
 fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
     use netbn::engine::bench;
-    // The e2e busbw ride-along is informational: absent from the gate
-    // list and the baseline, it can be characterized but never fail.
-    let report = bench::collect_with_e2e(registry)?;
+    // The launch probe runs N times so e2e.busbw_gbps carries a measured
+    // mean + stddev; the gate for that pair is variance-aware (3σ slack
+    // on top of the fractional tolerance).
+    let e2e_runs = args.get_usize("e2e-runs", 3)?;
+    let report = bench::collect_with_e2e(registry, e2e_runs)?;
     println!("{}", report.render());
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json())?;

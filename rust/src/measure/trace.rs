@@ -22,6 +22,21 @@ pub struct TraceRecord {
     pub t: f64,
 }
 
+/// Extract the raw text of one `"key":value` field from a JSONL record
+/// line (shared by [`TraceRecord`] and [`StepFeedbackRecord`]).
+fn json_field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line
+        .find(&pat)
+        .ok_or_else(|| anyhow::anyhow!("missing key {key} in {line:?}"))?
+        + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find([',', '}'])
+        .ok_or_else(|| anyhow::anyhow!("unterminated value for {key}"))?;
+    Ok(rest[..end].trim())
+}
+
 impl TraceRecord {
     pub fn to_json_line(&self) -> String {
         format!(
@@ -35,20 +50,11 @@ impl TraceRecord {
         )
     }
 
-    /// Parse a record from the exact format `to_json_line` writes.
+    /// Parse a record from the exact format `to_json_line` writes. Extra
+    /// keys (e.g. a `step_feedback` record's timing fields) are ignored,
+    /// so one reader loop handles mixed traces.
     pub fn from_json_line(line: &str) -> Result<TraceRecord> {
-        let get = |key: &str| -> Result<&str> {
-            let pat = format!("\"{key}\":");
-            let start = line
-                .find(&pat)
-                .ok_or_else(|| anyhow::anyhow!("missing key {key} in {line:?}"))?
-                + pat.len();
-            let rest = &line[start..];
-            let end = rest
-                .find([',', '}'])
-                .ok_or_else(|| anyhow::anyhow!("unterminated value for {key}"))?;
-            Ok(rest[..end].trim())
-        };
+        let get = |key: &str| json_field(line, key);
         let kind_raw = get("kind")?;
         let kind = kind_raw.trim_matches('"').to_string();
         Ok(TraceRecord {
@@ -60,6 +66,79 @@ impl TraceRecord {
             t: get("t")?.parse()?,
         })
     }
+}
+
+/// The `kind` string of a per-step feedback record.
+pub const STEP_FEEDBACK_KIND: &str = "step_feedback";
+
+/// One step's timing summary in a trace — the record kind that lets
+/// traces captured today drive `netbn tune --from-trace` later. The JSON
+/// line carries the standard `id`/`bytes`/`t` fields too (`t` = wall
+/// seconds), so a generic [`TraceRecord`] reader parses it unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepFeedbackRecord {
+    pub step: u32,
+    pub worker: usize,
+    /// Wall-clock seconds of the whole step.
+    pub wall_s: f64,
+    /// Seconds of the compute/emission phase.
+    pub compute_s: f64,
+    /// Seconds the collective engine was busy.
+    pub comm_busy_s: f64,
+    /// Effective bus bandwidth, Gbps (0 when unknown).
+    pub busbw_gbps: f64,
+}
+
+impl StepFeedbackRecord {
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"kind\":{},\"step\":{},\"worker\":{},\"id\":0,\"bytes\":0,\"t\":{},\
+             \"compute_s\":{},\"comm_busy_s\":{},\"busbw_gbps\":{}}}",
+            json_str(STEP_FEEDBACK_KIND),
+            self.step,
+            self.worker,
+            self.wall_s,
+            self.compute_s,
+            self.comm_busy_s,
+            self.busbw_gbps
+        )
+    }
+
+    /// Parse the exact format `to_json_line` writes; rejects lines of any
+    /// other kind.
+    pub fn from_json_line(line: &str) -> Result<StepFeedbackRecord> {
+        let kind = json_field(line, "kind")?.trim_matches('"');
+        anyhow::ensure!(
+            kind == STEP_FEEDBACK_KIND,
+            "expected a {STEP_FEEDBACK_KIND} record, got kind {kind:?}"
+        );
+        Ok(StepFeedbackRecord {
+            step: json_field(line, "step")?.parse()?,
+            worker: json_field(line, "worker")?.parse()?,
+            wall_s: json_field(line, "t")?.parse()?,
+            compute_s: json_field(line, "compute_s")?.parse()?,
+            comm_busy_s: json_field(line, "comm_busy_s")?.parse()?,
+            busbw_gbps: json_field(line, "busbw_gbps")?.parse()?,
+        })
+    }
+}
+
+/// Load every `step_feedback` record from a (possibly mixed) trace file,
+/// in file order.
+pub fn load_step_feedback(path: &Path) -> Result<Vec<StepFeedbackRecord>> {
+    let f = std::fs::File::open(path)?;
+    let mut out = Vec::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if json_field(trimmed, "kind")?.trim_matches('"') == STEP_FEEDBACK_KIND {
+            out.push(StepFeedbackRecord::from_json_line(trimmed)?);
+        }
+    }
+    Ok(out)
 }
 
 /// Appending JSONL writer.
@@ -192,5 +271,54 @@ mod tests {
     #[test]
     fn malformed_line_is_error() {
         assert!(TraceRecord::from_json_line("{\"nope\":1}").is_err());
+    }
+
+    fn feedback_rec() -> StepFeedbackRecord {
+        StepFeedbackRecord {
+            step: 7,
+            worker: 1,
+            wall_s: 0.125,
+            compute_s: 0.08,
+            comm_busy_s: 0.03,
+            busbw_gbps: 12.5,
+        }
+    }
+
+    #[test]
+    fn step_feedback_round_trip() {
+        let r = feedback_rec();
+        let line = r.to_json_line();
+        assert_eq!(StepFeedbackRecord::from_json_line(&line).unwrap(), r);
+        // Wrong kind is rejected.
+        assert!(StepFeedbackRecord::from_json_line(&rec().to_json_line()).is_err());
+        // A generic TraceRecord reader consumes the same line (t = wall).
+        let generic = TraceRecord::from_json_line(&line).unwrap();
+        assert_eq!(generic.kind, STEP_FEEDBACK_KIND);
+        assert_eq!(generic.step, 7);
+        assert!((generic.t - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_feedback_file_round_trip_in_a_mixed_trace() {
+        let path = std::env::temp_dir().join("netbn_step_feedback_test.jsonl");
+        {
+            let mut l = TraceLogger::create(&path).unwrap();
+            l.log(&rec()).unwrap(); // a grad_ready record interleaves
+            l.flush().unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{}", feedback_rec().to_json_line()).unwrap();
+            let mut second = feedback_rec();
+            second.step = 8;
+            writeln!(f, "{}", second.to_json_line()).unwrap();
+        }
+        let fb = load_step_feedback(&path).unwrap();
+        assert_eq!(fb.len(), 2);
+        assert_eq!(fb[0], feedback_rec());
+        assert_eq!(fb[1].step, 8);
+        // The generic loader still reads the whole mixed file.
+        assert_eq!(load_trace(&path).unwrap().len(), 3);
     }
 }

@@ -61,6 +61,7 @@ use crate::collectives::split_points;
 use crate::net::kernel_tcp::KernelTcpModel;
 use crate::topology::WorkerId;
 use crate::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -125,20 +126,22 @@ impl StripeConfig {
 
 /// Per-lane egress pacing: the mechanistic stand-in for the kernel-TCP
 /// *per-pipeline* software ceiling (each stream is one pipeline; N
-/// streams escape it N-fold until the NIC shaper binds).
+/// streams escape it N-fold until the NIC shaper binds). The rate lives
+/// in a shared atomic (f64 bits) so the endpoint can retune it mid-run —
+/// the autotuning scenarios use this to model a NIC rate change.
 struct RateGate {
-    rate_bytes_per_sec: f64,
+    rate_bits: Arc<AtomicU64>,
     next_free: Mutex<Instant>,
 }
 
 impl RateGate {
-    fn new(rate_bytes_per_sec: f64) -> RateGate {
-        assert!(rate_bytes_per_sec > 0.0);
-        RateGate { rate_bytes_per_sec, next_free: Mutex::new(Instant::now()) }
+    fn new(rate_bits: Arc<AtomicU64>) -> RateGate {
+        RateGate { rate_bits, next_free: Mutex::new(Instant::now()) }
     }
 
     fn admit(&self, bytes: usize) {
-        let serialization = Duration::from_secs_f64(bytes as f64 / self.rate_bytes_per_sec);
+        let rate = f64::from_bits(self.rate_bits.load(Ordering::SeqCst));
+        let serialization = Duration::from_secs_f64(bytes as f64 / rate);
         let wake = {
             let mut nf = self.next_free.lock().unwrap();
             let now = Instant::now();
@@ -180,6 +183,10 @@ impl StripedTransport {
     /// With 1 stream this reproduces the broken single-stream transport;
     /// with N it recovers up to N× until the NIC shaper binds.
     pub fn with_stream_ceiling(cfg: StripeConfig, rate_bytes_per_sec: f64) -> StripedTransport {
+        assert!(
+            rate_bytes_per_sec > 0.0 && rate_bytes_per_sec.is_finite(),
+            "stream ceiling must be a positive rate"
+        );
         StripedTransport { cfg, per_stream_rate_bytes_per_sec: Some(rate_bytes_per_sec) }
     }
 
@@ -188,16 +195,13 @@ impl StripedTransport {
     }
 }
 
-impl crate::net::transport::Transport for StripedTransport {
-    fn name(&self) -> String {
-        format!("striped:{}", self.cfg.streams)
-    }
-
-    fn lanes(&self) -> usize {
-        self.cfg.streams
-    }
-
-    fn bind(&self, lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<dyn Endpoint>> {
+impl StripedTransport {
+    /// [`crate::net::transport::Transport::bind`] with the concrete
+    /// endpoint type — callers that need the runtime tuning surface
+    /// ([`StripedEndpoint::set_chunk_bytes`],
+    /// [`StripedEndpoint::set_stream_rate_bytes_per_sec`]) bind through
+    /// here; the trait object path delegates to it.
+    pub fn bind_striped(&self, lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<StripedEndpoint>> {
         self.cfg.validate()?;
         anyhow::ensure!(
             lanes.len() == self.cfg.streams,
@@ -216,32 +220,65 @@ impl crate::net::transport::Transport for StripedTransport {
             );
         }
         let fault: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let chunk_bytes = Arc::new(AtomicUsize::new(self.cfg.chunk_bytes));
+        let stream_rate = self
+            .per_stream_rate_bytes_per_sec
+            .map(|r| Arc::new(AtomicU64::new(r.to_bits())));
         let mut tx = Vec::with_capacity(lanes.len());
         for (i, lane) in lanes.iter().enumerate() {
             let (job_tx, job_rx) = mpsc::channel::<SendJob>();
             let ep = Arc::clone(lane);
-            let gate = self.per_stream_rate_bytes_per_sec.map(RateGate::new);
+            let gate = stream_rate.as_ref().map(|r| RateGate::new(Arc::clone(r)));
             let cfg = self.cfg;
             let fault = Arc::clone(&fault);
-            std::thread::spawn(move || lane_sender(i, job_rx, ep, gate, cfg, fault));
+            let chunk = Arc::clone(&chunk_bytes);
+            std::thread::spawn(move || lane_sender(i, job_rx, ep, gate, cfg, chunk, fault));
             tx.push(Mutex::new(job_tx));
         }
-        Ok(Arc::new(StripedEndpoint { me, world, lanes, cfg: self.cfg, tx, fault }))
+        Ok(Arc::new(StripedEndpoint {
+            me,
+            world,
+            lanes,
+            cfg: self.cfg,
+            chunk_bytes,
+            stream_rate,
+            tx,
+            fault,
+        }))
+    }
+}
+
+impl crate::net::transport::Transport for StripedTransport {
+    fn name(&self) -> String {
+        format!("striped:{}", self.cfg.streams)
+    }
+
+    fn lanes(&self) -> usize {
+        self.cfg.streams
+    }
+
+    fn bind(&self, lanes: Vec<Arc<dyn Endpoint>>) -> Result<Arc<dyn Endpoint>> {
+        let ep = self.bind_striped(lanes)?;
+        Ok(ep as Arc<dyn Endpoint>)
     }
 }
 
 /// Per-lane sender thread: drains jobs FIFO, paces through the optional
 /// stream gate, honors the credit window. Exits when the endpoint drops.
+/// The chunk size is re-read per job from the endpoint's shared atomic —
+/// see [`StripedEndpoint::set_chunk_bytes`].
 fn lane_sender(
     lane: usize,
     rx: mpsc::Receiver<SendJob>,
     ep: Arc<dyn Endpoint>,
     gate: Option<RateGate>,
     cfg: StripeConfig,
+    chunk_bytes: Arc<AtomicUsize>,
     fault: Arc<Mutex<Option<String>>>,
 ) {
     while let Ok(job) = rx.recv() {
-        if let Err(e) = send_job(ep.as_ref(), gate.as_ref(), &cfg, &job) {
+        let chunk = chunk_bytes.load(Ordering::SeqCst);
+        if let Err(e) = send_job(ep.as_ref(), gate.as_ref(), &cfg, chunk, &job) {
             let why = format!("lane {lane} sender to {}: {e:#}", job.to);
             crate::log_error!("net::striped", "{why}");
             let mut f = fault.lock().unwrap();
@@ -253,12 +290,17 @@ fn lane_sender(
     }
 }
 
-fn send_job(ep: &dyn Endpoint, gate: Option<&RateGate>, cfg: &StripeConfig, job: &SendJob) -> Result<()> {
+fn send_job(
+    ep: &dyn Endpoint,
+    gate: Option<&RateGate>,
+    cfg: &StripeConfig,
+    chunk: usize,
+    job: &SendJob,
+) -> Result<()> {
     if job.data.is_empty() && job.prefix.is_none() {
         return Ok(());
     }
     let ct = credit_tag(job.tag);
-    let chunk = cfg.chunk_bytes;
     let mut sent = 0usize;
     let mut off = 0usize;
     loop {
@@ -296,6 +338,12 @@ pub struct StripedEndpoint {
     world: usize,
     lanes: Vec<Arc<dyn Endpoint>>,
     cfg: StripeConfig,
+    /// Live chunk size — all send/recv paths read this instead of
+    /// `cfg.chunk_bytes`, so the autotuner can retune it at quiesced step
+    /// boundaries (see [`StripedEndpoint::set_chunk_bytes`]).
+    chunk_bytes: Arc<AtomicUsize>,
+    /// Live per-stream gate rate (f64 bits), when a ceiling is modeled.
+    stream_rate: Option<Arc<AtomicU64>>,
     tx: Vec<Mutex<mpsc::Sender<SendJob>>>,
     fault: Arc<Mutex<Option<String>>>,
 }
@@ -306,6 +354,46 @@ impl StripedEndpoint {
             anyhow::bail!("striped transport fault: {why}");
         }
         Ok(())
+    }
+
+    /// The chunk size currently in force.
+    pub fn chunk_bytes(&self) -> usize {
+        self.chunk_bytes.load(Ordering::SeqCst)
+    }
+
+    /// Retune the pipelining chunk size. **Safety contract**: both ends
+    /// of every peer pair must apply the same value while no striped
+    /// message is in flight — sender and receiver derive the chunk layout
+    /// independently, so a mid-message change would surface as a loud
+    /// frame-size mismatch. The launch loop guarantees this by applying
+    /// knob changes only at barrier-synchronized step boundaries after
+    /// all collectives have drained.
+    pub fn set_chunk_bytes(&self, bytes: usize) -> Result<()> {
+        // streams >= 1 is validated at bind, so this also implies >= 1.
+        anyhow::ensure!(
+            bytes >= self.cfg.streams,
+            "chunk_bytes ({bytes}) must be >= streams ({})",
+            self.cfg.streams
+        );
+        self.chunk_bytes.store(bytes, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Retune the modeled per-stream software ceiling (no-op when the
+    /// endpoint was built without a gate). Takes effect on the next
+    /// admitted chunk — the `autotune_adapt` launch scenario drops this
+    /// mid-run to model a NIC rate change.
+    pub fn set_stream_rate_bytes_per_sec(&self, rate: f64) -> Result<()> {
+        anyhow::ensure!(rate > 0.0 && rate.is_finite(), "stream rate must be positive");
+        if let Some(bits) = &self.stream_rate {
+            bits.store(rate.to_bits(), Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Whether a per-stream rate gate is active.
+    pub fn has_stream_gate(&self) -> bool {
+        self.stream_rate.is_some()
     }
 
     fn enqueue(&self, lane: usize, job: SendJob) -> Result<()> {
@@ -322,11 +410,11 @@ impl StripedEndpoint {
         from: WorkerId,
         tag: u64,
         out: &mut [u8],
+        chunk: usize,
         lead_first: Option<&[u8]>,
     ) -> Result<()> {
         let ep = self.lanes[lane].as_ref();
         let ct = credit_tag(tag);
-        let chunk = self.cfg.chunk_bytes;
         let window = self.cfg.credit_window;
         let n_chunks = out.len().div_ceil(chunk).max(1);
         let mut off = 0usize;
@@ -382,7 +470,7 @@ impl Endpoint for StripedEndpoint {
         );
         self.check_fault()?;
         let total = payload.len();
-        if self.cfg.streams == 1 || total <= self.cfg.chunk_bytes {
+        if self.cfg.streams == 1 || total <= self.chunk_bytes() {
             return self.enqueue(
                 0,
                 SendJob { to, tag, prefix: Some(total as u64), data: payload.to_vec() },
@@ -404,6 +492,9 @@ impl Endpoint for StripedEndpoint {
             "tag kind bit 0x80 is reserved for stripe credits"
         );
         self.check_fault()?;
+        // One consistent chunk size for the whole message (the set_chunk
+        // contract guarantees sender and receiver agree on it).
+        let chunk = self.chunk_bytes();
         let first = self.lanes[0].recv(from, tag)?;
         anyhow::ensure!(
             first.len() >= 8,
@@ -411,7 +502,7 @@ impl Endpoint for StripedEndpoint {
             first.len()
         );
         let total = u64::from_le_bytes(first[..8].try_into().unwrap()) as usize;
-        if self.cfg.streams == 1 || total <= self.cfg.chunk_bytes {
+        if self.cfg.streams == 1 || total <= chunk {
             anyhow::ensure!(
                 first.len() == 8 + total,
                 "fused striped frame: {} bytes, want {}",
@@ -435,9 +526,10 @@ impl Endpoint for StripedEndpoint {
             let mut handles = Vec::new();
             for (i, slice) in iter.enumerate() {
                 let lane = i + 1;
-                handles.push(sc.spawn(move || self.recv_stripe(lane, from, tag, slice, None)));
+                handles
+                    .push(sc.spawn(move || self.recv_stripe(lane, from, tag, slice, chunk, None)));
             }
-            let lead_res = self.recv_stripe(0, from, tag, lead, Some(&first));
+            let lead_res = self.recv_stripe(0, from, tag, lead, chunk, Some(&first));
             for h in handles {
                 h.join().map_err(|_| anyhow::anyhow!("stripe receiver panicked"))??;
             }
@@ -655,6 +747,81 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), payload);
         }
+    }
+
+    #[test]
+    fn chunk_size_retunes_between_messages() {
+        // The autotune surface: both ends retune at a quiesced boundary,
+        // traffic keeps flowing and reassembling bit-exactly. One
+        // InProcFabric per lane keeps the lanes independent, exactly like
+        // TransportFabric::inproc builds them.
+        let cfg = StripeConfig { streams: 2, chunk_bytes: 8 << 10, credit_window: 2 };
+        let t = StripedTransport::new(cfg);
+        let lane_fabs =
+            [crate::net::inproc::InProcFabric::new(2), crate::net::inproc::InProcFabric::new(2)];
+        let mut pairs: Vec<Vec<Arc<dyn Endpoint>>> = vec![Vec::new(), Vec::new()];
+        for fab in &lane_fabs {
+            for (w, ep) in inner_lane(fab).into_iter().enumerate() {
+                pairs[w].push(ep);
+            }
+        }
+        let b = t.bind_striped(pairs.pop().unwrap()).unwrap();
+        let a = t.bind_striped(pairs.pop().unwrap()).unwrap();
+        assert_eq!(a.chunk_bytes(), 8 << 10);
+        let payload: Vec<u8> = (0..60_000u32).map(|i| (i % 253) as u8).collect();
+        let want = payload.clone();
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.recv(WorkerId(0), 1).unwrap());
+        a.send(WorkerId(1), 1, &payload).unwrap();
+        assert_eq!(h.join().unwrap(), want);
+        // Retune both ends, then move the same payload again.
+        a.set_chunk_bytes(2 << 10).unwrap();
+        b.set_chunk_bytes(2 << 10).unwrap();
+        assert_eq!(a.chunk_bytes(), 2 << 10);
+        let want2 = payload.clone();
+        let b3 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b3.recv(WorkerId(0), 2).unwrap());
+        a.send(WorkerId(1), 2, &payload).unwrap();
+        assert_eq!(h.join().unwrap(), want2);
+        // Degenerate chunk sizes are rejected.
+        assert!(a.set_chunk_bytes(1).is_err());
+    }
+
+    #[test]
+    fn stream_rate_retunes_live() {
+        // Gate starts punitive (1 KB/s would take ~100 s for 1 KB×100);
+        // raising it before any traffic means the send completes fast.
+        let cfg = StripeConfig { streams: 1, chunk_bytes: 16 << 10, credit_window: 4 };
+        let t = StripedTransport::with_stream_ceiling(cfg, 1e3);
+        let inner = crate::net::inproc::InProcFabric::new(2);
+        let mut eps = inner_lane(&inner);
+        let b_lane = eps.pop().unwrap();
+        let a_lane = eps.pop().unwrap();
+        let a = t.bind_striped(vec![a_lane]).unwrap();
+        let b = t.bind_striped(vec![b_lane]).unwrap();
+        assert!(a.has_stream_gate());
+        a.set_stream_rate_bytes_per_sec(1e9).unwrap();
+        b.set_stream_rate_bytes_per_sec(1e9).unwrap();
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.recv(WorkerId(0), 3).unwrap());
+        let t0 = Instant::now();
+        a.send(WorkerId(1), 3, &vec![9u8; 100_000]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![9u8; 100_000]);
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "gate retune did not take effect");
+        assert!(a.set_stream_rate_bytes_per_sec(-1.0).is_err());
+        // Without a gate, setting the rate is a tolerated no-op.
+        let ungated = StripedTransport::new(StripeConfig::with_streams(1));
+        let inner2 = crate::net::inproc::InProcFabric::new(2);
+        let ep = inner_lane(&inner2).remove(0);
+        let u = ungated.bind_striped(vec![ep]).unwrap();
+        assert!(!u.has_stream_gate());
+        u.set_stream_rate_bytes_per_sec(1e6).unwrap();
+    }
+
+    /// Endpoints of an in-proc fabric as trait objects (test helper).
+    fn inner_lane(fab: &crate::net::inproc::InProcFabric) -> Vec<Arc<dyn Endpoint>> {
+        use crate::net::Fabric as _;
+        fab.endpoints()
     }
 
     #[test]

@@ -126,6 +126,45 @@ pub fn bucket_timeline_from_trace(
     out
 }
 
+/// Memoized `threshold_bytes → bucket timeline` over one backward trace —
+/// the lookup the autotuned emulator does at every step boundary (the
+/// tuner may revisit a bucket size many times per probe phase; replanning
+/// each step would put a plan computation on the step path).
+///
+/// Thread-safe and shared (`Arc<TimelineCache>`) across all worker
+/// threads of a run, which also guarantees every rank draws the *same*
+/// timeline object for the same knob — the determinism the matched
+/// collectives rely on.
+pub struct TimelineCache {
+    trace: crate::models::timing::StepTrace,
+    map: std::sync::Mutex<
+        std::collections::HashMap<usize, std::sync::Arc<Vec<(f64, usize)>>>,
+    >,
+}
+
+impl TimelineCache {
+    pub fn new(trace: crate::models::timing::StepTrace) -> TimelineCache {
+        TimelineCache { trace, map: std::sync::Mutex::new(std::collections::HashMap::new()) }
+    }
+
+    /// The timeline for one threshold, computed at most once.
+    pub fn get(&self, threshold_bytes: usize) -> std::sync::Arc<Vec<(f64, usize)>> {
+        let mut map = self.map.lock().unwrap();
+        std::sync::Arc::clone(map.entry(threshold_bytes).or_insert_with(|| {
+            std::sync::Arc::new(bucket_timeline_from_trace(&self.trace, threshold_bytes))
+        }))
+    }
+
+    /// Distinct thresholds planned so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +298,21 @@ mod tests {
         };
         let tl = bucket_timeline_from_trace(&trace, 150);
         assert_eq!(tl, vec![(0.002, 200), (0.003, 100)]);
+    }
+
+    #[test]
+    fn timeline_cache_memoizes_and_matches_direct_planning() {
+        let trace = backward_trace(&ModelId::ResNet50.profile());
+        let cache = TimelineCache::new(trace.clone());
+        assert!(cache.is_empty());
+        let a = cache.get(mb_to_threshold(16.0));
+        let b = cache.get(mb_to_threshold(16.0));
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same threshold must hit the cache");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(*a, bucket_timeline_from_trace(&trace, mb_to_threshold(16.0)));
+        let c = cache.get(mb_to_threshold(4.0));
+        assert_eq!(cache.len(), 2);
+        assert!(c.len() > a.len(), "smaller buckets, more of them");
     }
 
     #[test]

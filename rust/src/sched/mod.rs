@@ -28,6 +28,6 @@ pub mod bucket;
 pub mod handle;
 pub mod scheduler;
 
-pub use bucket::{plan_buckets, BucketPlan, BucketSpec, LayerGrad};
+pub use bucket::{plan_buckets, BucketPlan, BucketSpec, LayerGrad, TimelineCache};
 pub use handle::{AllReduceHandle, AsyncCollectiveEngine};
 pub use scheduler::{layer_ranges, run_step, StepStats};

@@ -178,6 +178,17 @@ pub(crate) struct DrainCost<'a> {
     pub coord_latency_s: f64,
     pub compression_ratio: f64,
     pub add_est: &'a AddEst,
+    /// Aggregate wire bytes moved per chunk round across all stripes
+    /// (`INFINITY` = unchunked: the pre-autotune behavior, charging no
+    /// per-chunk cost).
+    pub aggregate_chunk_bytes: f64,
+    /// Software cost per stream-chunk (streams run in parallel, so this is
+    /// charged once per chunk *round*).
+    pub per_chunk_overhead_s: f64,
+    /// Fraction of the final chunk's serialization that cannot overlap
+    /// with delivery (store-and-forward tail; see
+    /// [`crate::net::striped::StripedModel`]).
+    pub chunk_tail_frac: f64,
 }
 
 impl<'a> DrainCost<'a> {
@@ -202,6 +213,9 @@ impl<'a> DrainCost<'a> {
             coord_latency_s: p.coord_latency_s,
             compression_ratio: p.compression_ratio,
             add_est: &p.add_est,
+            aggregate_chunk_bytes: f64::INFINITY,
+            per_chunk_overhead_s: 0.0,
+            chunk_tail_frac: 0.0,
         }
     }
 }
@@ -225,6 +239,14 @@ pub(crate) fn drain_fifo(queue: &[(f64, f64)], t_back: f64, c: &DrainCost) -> (f
             t += c.per_msg_overhead_s;
             let mut bytes = c.ring_factor * bucket_bytes / c.compression_ratio;
             wire_bytes += bytes;
+            // Chunk-granularity costs (no-ops at the unchunked defaults):
+            // every chunk round pays a fixed software cost, and the final
+            // chunk's serialization partially fails to overlap delivery.
+            if bytes > 0.0 {
+                let rounds = (bytes / c.aggregate_chunk_bytes).ceil().max(1.0);
+                t += rounds * c.per_chunk_overhead_s;
+                t += c.chunk_tail_frac * bytes.min(c.aggregate_chunk_bytes) / c.rate_full;
+            }
             while bytes > 0.0 {
                 if t < t_back {
                     let can = (t_back - t) * c.rate_backward;

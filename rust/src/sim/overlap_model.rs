@@ -28,6 +28,36 @@ use crate::models::timing::{AddEst, StepTrace};
 use crate::net::kernel_tcp::KernelTcpModel;
 use crate::sched::bucket::{bucket_timeline_from_trace, mb_to_threshold};
 
+/// Chunk-granularity cost model for the striped transport's pipelining
+/// unit — the analytic face of the `chunk_kb` knob the autotuner turns.
+/// Tiny chunks pay `per_chunk_s` once per chunk round; huge chunks lose
+/// store-and-forward overlap through `tail_frac` (mirroring
+/// [`crate::net::striped::StripedModel::transfer_time_chunked`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Chunking {
+    /// Wire bytes per chunk round, aggregated across all stripes
+    /// (`per-stream chunk × streams`).
+    pub aggregate_chunk_bytes: f64,
+    /// Fixed software cost per chunk round.
+    pub per_chunk_s: f64,
+    /// Fraction of the final chunk's serialization that cannot overlap
+    /// with delivery.
+    pub tail_frac: f64,
+}
+
+impl Chunking {
+    /// The striped transport's calibrated chunk costs at a given
+    /// per-stream chunk size (see [`crate::net::striped::StripedModel`]).
+    pub fn striped(streams: usize, chunk_bytes: usize) -> Chunking {
+        let m = crate::net::striped::StripedModel::with_streams(streams.max(1));
+        Chunking {
+            aggregate_chunk_bytes: (chunk_bytes * streams.max(1)) as f64,
+            per_chunk_s: m.per_chunk_overhead_s,
+            tail_frac: m.delivery_tail_frac,
+        }
+    }
+}
+
 /// Inputs of one overlap-model evaluation.
 #[derive(Clone, Debug)]
 pub struct OverlapModelParams {
@@ -52,6 +82,14 @@ pub struct OverlapModelParams {
     pub coord_latency_s: f64,
     /// Fractional transport-ceiling loss while backward kernels run.
     pub comm_contention: f64,
+    /// Chunk-granularity costs (`None` = unchunked, the pre-autotune
+    /// behavior). The autotuning oracle sets this from the `chunk_kb`
+    /// knob.
+    pub chunking: Option<Chunking>,
+    /// Per-bucket wire-byte multiplier override (`None` = the inter-node
+    /// ring's `2(M−1)/M`). Lets the oracle price non-ring collectives
+    /// without changing the drain loop.
+    pub wire_factor: Option<f64>,
 }
 
 impl OverlapModelParams {
@@ -78,6 +116,8 @@ impl OverlapModelParams {
             compute_inflation: 1.0,
             coord_latency_s: 0.0,
             comm_contention: 0.0,
+            chunking: None,
+            wire_factor: None,
         }
     }
 
@@ -175,7 +215,20 @@ pub fn overlap_step(p: &OverlapModelParams) -> OverlapModelResult {
         coord_latency_s: p.coord_latency_s,
         comm_contention: p.comm_contention,
     };
-    let cost = DrainCost::from_sim(&sim);
+    let mut cost = DrainCost::from_sim(&sim);
+    if let Some(ch) = p.chunking {
+        assert!(ch.aggregate_chunk_bytes > 0.0 && ch.per_chunk_s >= 0.0);
+        assert!((0.0..=1.0).contains(&ch.tail_frac));
+        cost.aggregate_chunk_bytes = ch.aggregate_chunk_bytes;
+        cost.per_chunk_overhead_s = ch.per_chunk_s;
+        cost.chunk_tail_frac = ch.tail_frac;
+    }
+    if let Some(f) = p.wire_factor {
+        assert!(f.is_finite() && f >= 0.0);
+        if cost.inter_node {
+            cost.ring_factor = f;
+        }
+    }
     let (t_done, _) = drain_fifo(&queue, t_back, &cost);
     let t_sync = t_done.max(t_back);
     let t_overhead = t_sync - t_back;
@@ -326,6 +379,61 @@ mod tests {
             .map(|(i, _)| i)
             .unwrap();
         assert!(best != 0 && best != sweep.len() - 1, "optimum at boundary: {sweep:?}");
+    }
+
+    #[test]
+    fn chunking_has_an_interior_optimum() {
+        // The chunk_kb knob's analytic face: tiny chunks drown in
+        // per-chunk software cost, huge chunks lose delivery overlap.
+        let step = |chunk_kb: usize| {
+            let mut p = OverlapModelParams::engine(
+                trace(ModelId::ResNet50),
+                8,
+                8,
+                10.0,
+                StripedModel::with_streams(8).to_kernel_model(),
+                16.0,
+            );
+            p.chunking = Some(Chunking::striped(8, chunk_kb << 10));
+            overlap_step(&p).step_time_s
+        };
+        let tiny = step(4);
+        let mid = step(256);
+        let huge = step(16384);
+        assert!(mid < tiny, "mid {mid} vs tiny {tiny}");
+        assert!(mid < huge, "mid {mid} vs huge {huge}");
+        // And the unchunked model is a lower bound on all of them.
+        let mut p = OverlapModelParams::engine(
+            trace(ModelId::ResNet50),
+            8,
+            8,
+            10.0,
+            StripedModel::with_streams(8).to_kernel_model(),
+            16.0,
+        );
+        p.chunking = None;
+        assert!(overlap_step(&p).step_time_s <= mid + 1e-12);
+    }
+
+    #[test]
+    fn wire_factor_override_scales_comm() {
+        let base = OverlapModelParams::engine(
+            trace(ModelId::Vgg16),
+            8,
+            8,
+            5.0,
+            KernelTcpModel::default(),
+            16.0,
+        );
+        let mut heavy = base.clone();
+        heavy.wire_factor = Some(4.0); // > ring's 2·7/8 = 1.75
+        let a = overlap_step(&base);
+        let b = overlap_step(&heavy);
+        assert!(b.step_time_s > a.step_time_s, "{} vs {}", b.step_time_s, a.step_time_s);
+        // Zero wire factor degenerates to a no-wire run.
+        let mut none = base.clone();
+        none.wire_factor = Some(0.0);
+        assert!(overlap_step(&none).step_time_s < a.step_time_s);
     }
 
     #[test]

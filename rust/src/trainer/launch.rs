@@ -38,15 +38,16 @@
 //! liveness-tracking per worker stream is future work.
 
 use crate::collectives::{barrier, ring};
-use crate::config::{CollectiveKind, OverlapMode, TransportKind};
+use crate::config::{CollectiveKind, Compression, OverlapMode, TransportKind};
 use crate::net::mesh::MeshNode;
-use crate::net::striped::{StripeConfig, StripedTransport};
+use crate::net::striped::{StripeConfig, StripedEndpoint, StripedTransport};
 use crate::net::tcp::connect_retry;
 use crate::net::transport::{SingleStream, Transport};
-use crate::net::Endpoint;
+use crate::net::{tag, tags, Endpoint};
 use crate::sched::bucket::{mb_to_threshold, plan_buckets, ready_order_from_ranges};
 use crate::sched::{layer_ranges, run_step, AsyncCollectiveEngine};
 use crate::topology::WorkerId;
+use crate::tune::{AutoTuner, KnobPoint, KnobSpace, StepFeedback, TunerConfig};
 use crate::util::Rng;
 use crate::Result;
 use anyhow::Context;
@@ -101,6 +102,23 @@ pub struct WorkerParams {
     /// evenly across the layers (0 = no modeled compute — pure wire
     /// benchmark, nothing to overlap under).
     pub compute_us: u64,
+    /// Online autotuning: rank 0 runs the [`AutoTuner`] over the stripe
+    /// chunk size and broadcasts knob changes to every rank at step
+    /// boundaries over the mesh control channel ([`tags::CONTROL`]).
+    /// Chunking is arithmetic-neutral (it changes how bytes move, never
+    /// what they sum to), so autotuned runs stay FNV-bit-identical to
+    /// static runs — requires a striped transport.
+    pub autotune: bool,
+    /// The tuner's chunk-size axis, KB (only read when `autotune`).
+    pub chunk_kbs: Vec<usize>,
+    /// Modeled per-stream software ceiling, Gbps (0 = unshaped). Only
+    /// meaningful with a striped transport.
+    pub gate_gbps: f64,
+    /// Scripted mid-run NIC event: at this step every rank drops its
+    /// per-stream gate to `drop_gbps` (0 = never) — the environment
+    /// change `autotune_adapt` recovers from.
+    pub drop_at_step: usize,
+    pub drop_gbps: f64,
     pub seed: u64,
 }
 
@@ -109,6 +127,10 @@ pub struct WorkerParams {
 pub struct LaunchConfig {
     pub params: WorkerParams,
     pub spawn: SpawnMode,
+    /// When set, the coordinator writes one `step_feedback` JSONL record
+    /// per step (slowest-worker timings) — the trace `netbn tune
+    /// --from-trace` replays.
+    pub feedback_out: Option<std::path::PathBuf>,
 }
 
 impl LaunchConfig {
@@ -130,6 +152,42 @@ impl LaunchConfig {
         }
         if let TransportKind::Striped { streams } = p.transport {
             anyhow::ensure!((1..=64).contains(&streams), "launch striped streams in 1..=64");
+        }
+        anyhow::ensure!(
+            p.gate_gbps >= 0.0 && p.gate_gbps.is_finite(),
+            "gate-gbps must be >= 0 and finite"
+        );
+        if p.gate_gbps > 0.0 || p.autotune {
+            anyhow::ensure!(
+                matches!(p.transport, TransportKind::Striped { .. }),
+                "--autotune and --gate-gbps act on the striped transport's \
+                 per-stream pipelines; use --transport striped:N"
+            );
+        }
+        if p.autotune {
+            anyhow::ensure!(!p.chunk_kbs.is_empty(), "autotune needs >= 1 chunk-kb candidate");
+            for &kb in &p.chunk_kbs {
+                // Same bound as every other chunk_kb surface (one knob,
+                // one range — see crate::tune::knobs).
+                anyhow::ensure!(
+                    crate::tune::knobs::CHUNK_KB_RANGE.contains(&kb),
+                    "chunk-kb candidate {kb} must be in {}..={}",
+                    crate::tune::knobs::CHUNK_KB_RANGE.start(),
+                    crate::tune::knobs::CHUNK_KB_RANGE.end()
+                );
+            }
+        }
+        if p.drop_at_step > 0 {
+            anyhow::ensure!(
+                p.gate_gbps > 0.0 && p.drop_gbps > 0.0 && p.drop_gbps.is_finite(),
+                "a scripted rate drop needs --gate-gbps and --drop-gbps > 0"
+            );
+            anyhow::ensure!(
+                p.drop_at_step < p.steps,
+                "drop-at-step ({}) must fall inside the run ({} steps)",
+                p.drop_at_step,
+                p.steps
+            );
         }
         Ok(())
     }
@@ -153,6 +211,9 @@ pub struct LaunchReport {
     pub checksums: Vec<u64>,
     /// All ranks ended bit-identical.
     pub identical: bool,
+    /// Rank 0's applied chunk-size trajectory when `--autotune` was on:
+    /// `(first step the value was active, chunk KB)`; empty otherwise.
+    pub knob_trajectory: Vec<(u64, usize)>,
 }
 
 impl LaunchReport {
@@ -184,18 +245,60 @@ impl LaunchReport {
     }
 }
 
-/// The transport each worker binds over its mesh lanes. Striped lanes use
-/// a smaller chunk than the in-process default so smoke-test-sized
-/// tensors (hundreds of KB) genuinely pipeline instead of traveling
-/// fused.
-fn launch_transport(kind: TransportKind) -> Box<dyn Transport> {
-    match kind {
-        TransportKind::Striped { streams } => Box::new(StripedTransport::new(StripeConfig {
-            streams,
-            chunk_bytes: 32 << 10,
-            credit_window: 4,
-        })),
-        _ => Box::new(SingleStream),
+/// Striped lanes use a smaller chunk than the in-process default so
+/// smoke-test-sized tensors (hundreds of KB) genuinely pipeline instead
+/// of traveling fused.
+fn launch_stripe_config(streams: usize) -> StripeConfig {
+    StripeConfig { streams, chunk_bytes: 32 << 10, credit_window: 4 }
+}
+
+/// The striped transport a launch run binds (gate included). ONE
+/// construction site: both the lane count and the bound endpoint derive
+/// from here, so they cannot desynchronize.
+fn launch_striped_transport(p: &WorkerParams, streams: usize) -> StripedTransport {
+    let cfg = launch_stripe_config(streams);
+    if p.gate_gbps > 0.0 {
+        StripedTransport::with_stream_ceiling(cfg, crate::gbps_to_bytes_per_sec(p.gate_gbps))
+    } else {
+        StripedTransport::new(cfg)
+    }
+}
+
+/// Mesh listeners (= real connections) per peer pair — the coordinator's
+/// and the workers' shared lane count.
+fn launch_lanes(p: &WorkerParams) -> usize {
+    match p.transport {
+        TransportKind::Striped { streams } => {
+            launch_striped_transport(p, streams).lanes()
+        }
+        _ => SingleStream.lanes(),
+    }
+}
+
+/// The knob grid the launch tuner searches: only the chunk axis is open —
+/// every other knob is frozen at the run's static value. Chunking is the
+/// one knob the striped endpoint can retune at a step boundary without
+/// touching the arithmetic (stripes are physical listeners fixed at
+/// rendezvous; bucket plan and collective pick the summation order, which
+/// must match the static run bit for bit).
+fn launch_knob_space(p: &WorkerParams, streams: usize) -> KnobSpace {
+    KnobSpace {
+        bucket_mbs: vec![p.bucket_mb.max(0.0)],
+        stripes: vec![streams],
+        chunk_kbs: p.chunk_kbs.clone(),
+        collectives: vec![p.collective],
+        compressions: vec![Compression::None],
+    }
+}
+
+/// The static starting point (the endpoint's bound chunk size).
+fn launch_initial_point(p: &WorkerParams, streams: usize) -> KnobPoint {
+    KnobPoint {
+        bucket_mb: p.bucket_mb.max(0.0),
+        stripes: streams,
+        chunk_kb: launch_stripe_config(streams).chunk_bytes >> 10,
+        collective: p.collective,
+        compression: Compression::None,
     }
 }
 
@@ -212,7 +315,7 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator port")?;
     let addr = listener.local_addr()?;
     let p = cfg.params.clone();
-    match cfg.spawn {
+    let report = match cfg.spawn {
         SpawnMode::Thread => {
             let mut workers = Vec::new();
             for rank in 0..p.world {
@@ -255,6 +358,22 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     .arg(p.layers.to_string())
                     .arg("--compute-us")
                     .arg(p.compute_us.to_string())
+                    .arg("--autotune")
+                    .arg(if p.autotune { "true" } else { "false" })
+                    .arg("--chunk-kbs")
+                    .arg(
+                        p.chunk_kbs
+                            .iter()
+                            .map(|k| k.to_string())
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    )
+                    .arg("--gate-gbps")
+                    .arg(p.gate_gbps.to_string())
+                    .arg("--drop-at-step")
+                    .arg(p.drop_at_step.to_string())
+                    .arg("--drop-gbps")
+                    .arg(p.drop_gbps.to_string())
                     .arg("--seed")
                     .arg(p.seed.to_string())
                     .spawn()
@@ -280,7 +399,62 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
             }
             report
         }
+    }?;
+    if let Some(path) = &cfg.feedback_out {
+        write_feedback(path, &p, &report)
+            .with_context(|| format!("write step feedback to {}", path.display()))?;
     }
+    Ok(report)
+}
+
+/// One step's feedback derivation — the SINGLE definition of the
+/// wire-bytes/busbw formula, shared by rank 0's online tuning loop and
+/// the coordinator's `--feedback-out` writer. Note the *inputs* differ
+/// by design: the online tuner observes rank 0's own per-step timings,
+/// while the recorded trace carries the coordinator's slowest-worker
+/// aggregates — same formula, cluster-level view.
+fn step_feedback(
+    p: &WorkerParams,
+    step: u64,
+    wall_s: f64,
+    compute_s: f64,
+    comm_busy_s: f64,
+) -> StepFeedback {
+    let wire = ring::wire_bytes_per_worker((p.elems * 4) as f64, p.world);
+    StepFeedback {
+        step,
+        wall_s,
+        compute_s,
+        comm_busy_s,
+        busbw_gbps: if comm_busy_s > 0.0 {
+            crate::bytes_per_sec_to_gbps(wire / comm_busy_s)
+        } else {
+            0.0
+        },
+    }
+}
+
+/// One `step_feedback` record per step (slowest-worker figures), the
+/// producer side of `netbn tune --from-trace`.
+fn write_feedback(
+    path: &std::path::Path,
+    p: &WorkerParams,
+    r: &LaunchReport,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for s in 0..r.steps {
+        let wall = r.step_wall_s[s];
+        let busy = r.allreduce_s[s];
+        let fb = step_feedback(p, s as u64, wall, (wall - busy).max(0.0), busy);
+        writeln!(out, "{}", fb.to_record(0).to_json_line())?;
+    }
+    out.flush()?;
+    Ok(())
 }
 
 /// Accept `world` workers, run the rendezvous, collect the results. In
@@ -292,7 +466,7 @@ fn coordinator_serve(
     p: &WorkerParams,
     mut children: Option<&mut Vec<std::process::Child>>,
 ) -> Result<LaunchReport> {
-    let lanes = launch_transport(p.transport).lanes();
+    let lanes = launch_lanes(p);
     let mut streams: Vec<Option<TcpStream>> = (0..p.world).map(|_| None).collect();
     let mut readers: Vec<Option<BufReader<TcpStream>>> = (0..p.world).map(|_| None).collect();
     // lane_addrs[rank][lane]
@@ -377,6 +551,7 @@ fn coordinator_serve(
     let mut step_wall = vec![0.0f64; p.steps];
     let mut ar = vec![0.0f64; p.steps];
     let mut checksums = vec![0u64; p.world];
+    let mut knob_trajectory: Vec<(u64, usize)> = Vec::new();
     for rank in 0..p.world {
         let reader = readers[rank].as_mut().expect("registered above");
         let mut line = String::new();
@@ -396,6 +571,12 @@ fn coordinator_serve(
             .with_context(|| format!("rank {rank} all-reduce timings"))?;
         let walls = parse_csv_f64(it.next().unwrap_or(""), p.steps)
             .with_context(|| format!("rank {rank} step timings"))?;
+        // Rank 0 appends its knob trajectory ("-" when not autotuning).
+        let traj_field = it.next().unwrap_or("-");
+        if rank == 0 && traj_field != "-" {
+            knob_trajectory = parse_trajectory(traj_field)
+                .with_context(|| format!("rank 0 knob trajectory {traj_field:?}"))?;
+        }
         checksums[rank] = checksum;
         for s in 0..p.steps {
             ar[s] = ar[s].max(ar_times[s]);
@@ -424,7 +605,35 @@ fn coordinator_serve(
         effective_bus_gbps,
         checksums,
         identical,
+        knob_trajectory,
     })
+}
+
+/// Serialize/parse rank 0's chunk trajectory for the done line:
+/// whitespace-free `step:chunk_kb;step:chunk_kb` pairs.
+fn format_trajectory(traj: &[(u64, KnobPoint)]) -> String {
+    if traj.is_empty() {
+        return "-".to_string();
+    }
+    traj.iter()
+        .map(|(step, p)| format!("{step}:{}", p.chunk_kb))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+fn parse_trajectory(s: &str) -> Result<Vec<(u64, usize)>> {
+    s.split(';')
+        .filter(|part| !part.is_empty())
+        .map(|part| {
+            let (step, kb) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad trajectory entry {part:?}"))?;
+            Ok((
+                step.parse().map_err(|_| anyhow::anyhow!("bad trajectory step {step:?}"))?,
+                kb.parse().map_err(|_| anyhow::anyhow!("bad trajectory chunk {kb:?}"))?,
+            ))
+        })
+        .collect()
 }
 
 fn parse_csv_f64(s: &str, want: usize) -> Result<Vec<f64>> {
@@ -442,8 +651,7 @@ fn parse_csv_f64(s: &str, want: usize) -> Result<Vec<f64>> {
 /// `netbn _worker` calls.
 pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> Result<()> {
     anyhow::ensure!(rank < p.world, "rank {rank} out of a world of {}", p.world);
-    let transport = launch_transport(p.transport);
-    let lanes = transport.lanes();
+    let lanes = launch_lanes(p);
     // One mesh listener per lane: `striped:K` really is K connections per
     // peer pair across process boundaries.
     let mut nodes = Vec::with_capacity(lanes);
@@ -488,7 +696,43 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
         let addrs: Vec<SocketAddr> = (0..p.world).map(|w| flat[w * lanes + l]).collect();
         lane_eps.push(node.connect(addrs)? as Arc<dyn Endpoint>);
     }
-    let ep = transport.bind(lane_eps)?;
+    // Bind the lanes. The striped path keeps the concrete endpoint so the
+    // control plane can retune its chunk size (and gate rate) mid-run.
+    let (ep, striped): (Arc<dyn Endpoint>, Option<Arc<StripedEndpoint>>) = match p.transport {
+        TransportKind::Striped { streams } => {
+            let sep = launch_striped_transport(p, streams).bind_striped(lane_eps)?;
+            (Arc::clone(&sep) as Arc<dyn Endpoint>, Some(sep))
+        }
+        _ => (SingleStream.bind(lane_eps)?, None),
+    };
+
+    // ---- Autotune bring-up: every rank deterministically derives the
+    // same snapped starting point and applies it before any data flows;
+    // rank 0 additionally owns the controller. ----
+    let streams = match p.transport {
+        TransportKind::Striped { streams } => streams,
+        _ => 1,
+    };
+    let mut tuner: Option<AutoTuner> = None;
+    if p.autotune {
+        let sep = striped.as_ref().expect("validated: autotune requires a striped transport");
+        let space = launch_knob_space(p, streams);
+        let initial = launch_initial_point(p, streams);
+        let start = space.point_at(space.nearest_index(&initial));
+        sep.set_chunk_bytes(start.chunk_kb << 10)?;
+        if rank == 0 {
+            let cfg = TunerConfig {
+                warmup_steps: 2,
+                probe_steps: 2,
+                hysteresis: 0.05,
+                regress_threshold: 0.25,
+                regress_patience: 3,
+                max_passes: 2,
+                seed: p.seed ^ 0x5EED_C4A0,
+            };
+            tuner = Some(AutoTuner::new(space, cfg, &initial)?);
+        }
+    }
 
     // ---- The synchronous data-parallel loop, driven by the overlap
     // scheduler: per-layer modeled compute (reverse order, like a real
@@ -505,8 +749,28 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     let mut ar_times = Vec::with_capacity(p.steps);
     let mut walls = Vec::with_capacity(p.steps);
     let inv_world = 1.0f32 / p.world as f32;
+    // A knob decision exchanged at the end of step s is APPLIED only
+    // after barrier(s+1): a rank enters that barrier only once it has
+    // consumed every step-s stripe addressed to it, so barrier completion
+    // proves every lane-sender queue has fully drained — the only moment
+    // a chunk-layout change cannot race an in-flight message.
+    let mut pending_knobs: Option<KnobPoint> = None;
     for step in 0..p.steps {
         barrier(ep.as_ref(), step as u32)?;
+        if let Some(k) = pending_knobs.take() {
+            if let Some(sep) = &striped {
+                sep.set_chunk_bytes(k.chunk_kb << 10)?;
+            }
+        }
+        // Scripted NIC event: every rank drops its per-stream gate at the
+        // same (barrier-aligned) step — the environment change the
+        // autotune_adapt scenario recovers from. (Pacing only: gates need
+        // no cross-rank layout agreement.)
+        if p.drop_at_step > 0 && step == p.drop_at_step {
+            if let Some(sep) = &striped {
+                sep.set_stream_rate_bytes_per_sec(crate::gbps_to_bytes_per_sec(p.drop_gbps))?;
+            }
+        }
         let t_step = Instant::now();
         // Local gradient: different on every rank (seeded), summed by the
         // collective — the data-parallel contract. Generated up front in
@@ -532,6 +796,36 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
             *w -= 0.05 * g * inv_world;
         }
         walls.push(t_step.elapsed().as_secs_f64());
+
+        // ---- The control round: rank 0 feeds the tuner and broadcasts
+        // the decision over the mesh control channel; every rank applies
+        // it here — after all of this step's collectives drained and
+        // before the next barrier, so sender and receiver chunk layouts
+        // can never disagree mid-message. ----
+        if p.autotune {
+            let ctrl = tag(tags::CONTROL, step as u32, 0);
+            if rank == 0 {
+                let wall = *walls.last().expect("pushed above");
+                let fb =
+                    step_feedback(p, step as u64, wall, stats.compute_s, stats.comm_busy_s);
+                let decision = tuner.as_mut().expect("rank 0 owns the tuner").observe(&fb);
+                let msg = match &decision {
+                    Some(next) => next.spec(),
+                    None => "keep".to_string(),
+                };
+                for w in 1..p.world {
+                    ep.send(WorkerId(w), ctrl, msg.as_bytes())?;
+                }
+                pending_knobs = decision;
+            } else {
+                let raw = ep.recv(WorkerId(0), ctrl)?;
+                let msg = String::from_utf8(raw)
+                    .map_err(|_| anyhow::anyhow!("knob broadcast is not UTF-8"))?;
+                if msg != "keep" {
+                    pending_knobs = Some(KnobPoint::parse_spec(&msg)?);
+                }
+            }
+        }
     }
     drop(engine);
     let checksum = tensor_checksum(&params);
@@ -541,6 +835,22 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     done.push_str(&join_csv(&ar_times));
     done.push(' ');
     done.push_str(&join_csv(&walls));
+    done.push(' ');
+    match &tuner {
+        Some(t) => {
+            // A decision exchanged at the final step's control round was
+            // never applied (there is no next barrier): report only the
+            // points that genuinely ran.
+            let applied: Vec<(u64, KnobPoint)> = t
+                .trajectory()
+                .iter()
+                .filter(|(step, _)| *step < p.steps as u64)
+                .copied()
+                .collect();
+            done.push_str(&format_trajectory(&applied));
+        }
+        None => done.push('-'),
+    }
     done.push('\n');
     // The release only arrives once the SLOWEST worker reports done, an
     // unbounded wait for fast ranks — no read timeout here; a dead
@@ -573,9 +883,15 @@ mod tests {
                 bucket_mb: 0.0,
                 layers: 1,
                 compute_us: 0,
+                autotune: false,
+                chunk_kbs: Vec::new(),
+                gate_gbps: 0.0,
+                drop_at_step: 0,
+                drop_gbps: 0.0,
                 seed: 0xe2e,
             },
             spawn: SpawnMode::Thread,
+            feedback_out: None,
         }
     }
 
@@ -674,6 +990,96 @@ mod tests {
         let r = launch(&cfg).unwrap();
         assert!(r.identical, "checksums {:?}", r.checksums);
         assert!(r.passed());
+    }
+
+    #[test]
+    fn autotuned_launch_is_bit_identical_to_static() {
+        // The control plane's safety gate: same seeds, knob broadcasts
+        // retuning the chunk size mid-run — and the final parameter bits
+        // must equal the static run's exactly, rank for rank.
+        let static_cfg =
+            thread_cfg(2, CollectiveKind::Ring, TransportKind::Striped { streams: 2 });
+        let mut tuned = static_cfg.clone();
+        tuned.params.autotune = true;
+        tuned.params.chunk_kbs = vec![4, 16, 64];
+        tuned.params.steps = 8;
+        let mut static_long = static_cfg.clone();
+        static_long.params.steps = 8;
+        let a = launch(&static_long).unwrap();
+        let b = launch(&tuned).unwrap();
+        assert!(a.identical && b.identical);
+        assert_eq!(a.checksums, b.checksums, "autotuning changed the arithmetic");
+        // The tuner genuinely ran: rank 0 reported a trajectory whose
+        // first entry is the snapped starting chunk.
+        assert!(!b.knob_trajectory.is_empty());
+        assert!(a.knob_trajectory.is_empty());
+        // 8 steps = 2 warmup + 3 candidates × 2 probe steps: the probe
+        // visited at least one non-initial chunk size.
+        assert!(b.knob_trajectory.len() >= 2, "{:?}", b.knob_trajectory);
+        for (_, kb) in &b.knob_trajectory {
+            assert!(tuned.params.chunk_kbs.contains(kb), "{kb} not a candidate");
+        }
+    }
+
+    #[test]
+    fn gated_launch_with_mid_run_drop_completes() {
+        // The adapt scenario's mechanism in miniature: a per-stream gate
+        // drops 10x mid-run; the run completes, stays bit-identical, and
+        // the post-drop steps are visibly slower.
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Striped { streams: 2 });
+        cfg.params.elems = 60_000;
+        cfg.params.steps = 6;
+        cfg.params.gate_gbps = 0.5;
+        cfg.params.drop_at_step = 3;
+        cfg.params.drop_gbps = 0.05;
+        let r = launch(&cfg).unwrap();
+        assert!(r.identical);
+        assert!(r.passed());
+        let pre = r.step_wall_s[1].min(r.step_wall_s[2]);
+        let post = r.step_wall_s[4].max(r.step_wall_s[5]);
+        assert!(post > pre * 2.0, "drop not visible: pre {pre} post {post}");
+    }
+
+    #[test]
+    fn feedback_out_writes_replayable_records() {
+        let path = std::env::temp_dir().join("netbn_launch_feedback_test.jsonl");
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.steps = 3;
+        cfg.feedback_out = Some(path.clone());
+        let r = launch(&cfg).unwrap();
+        assert!(r.passed());
+        let recs = crate::measure::trace::load_step_feedback(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        for (s, rec) in recs.iter().enumerate() {
+            assert_eq!(rec.step as usize, s);
+            assert!(rec.wall_s > 0.0);
+            assert!(rec.busbw_gbps > 0.0);
+        }
+    }
+
+    #[test]
+    fn autotune_validation_requires_striped() {
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.params.autotune = true;
+        cfg.params.chunk_kbs = vec![32];
+        assert!(launch(&cfg).is_err());
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Striped { streams: 2 });
+        cfg.params.autotune = true;
+        assert!(launch(&cfg).is_err(), "empty chunk axis must be rejected");
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Striped { streams: 2 });
+        cfg.params.drop_at_step = 1;
+        assert!(launch(&cfg).is_err(), "drop without a gate must be rejected");
+    }
+
+    #[test]
+    fn trajectory_wire_format_round_trips() {
+        let p = |kb: usize| KnobPoint { chunk_kb: kb, ..KnobPoint::default_static() };
+        let traj = vec![(0u64, p(32)), (6u64, p(4))];
+        let s = format_trajectory(&traj);
+        assert!(!s.contains(' '), "done-line fields are whitespace-delimited");
+        assert_eq!(parse_trajectory(&s).unwrap(), vec![(0, 32), (6, 4)]);
+        assert_eq!(format_trajectory(&[]), "-");
+        assert!(parse_trajectory("3:x").is_err());
     }
 
     #[test]

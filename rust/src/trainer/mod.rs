@@ -38,12 +38,13 @@ use crate::net::kernel_tcp::KernelTcpModel;
 use crate::net::metrics::UtilizationSampler;
 use crate::net::shaper::Shaper;
 use crate::net::{inproc::InProcFabric, Endpoint, Fabric};
-use crate::sched::{AllReduceHandle, AsyncCollectiveEngine};
+use crate::sched::{AllReduceHandle, AsyncCollectiveEngine, TimelineCache};
 use crate::topology::Topology;
+use crate::tune::{AutoTuner, KnobPoint, KnobSpace, StepFeedback, TunerConfig, TuningSummary};
 use crate::util::Rng;
 use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Emulated-run configuration on top of the experiment point.
@@ -78,6 +79,75 @@ pub struct RunReport {
     pub buckets_per_step: f64,
     pub steps: usize,
     pub workers: usize,
+    /// Worker 0's tuning decisions when `--autotune` was on.
+    pub autotune: Option<TuningSummary>,
+}
+
+/// Shared per-run tuning state: worker 0 writes the knob decision at the
+/// end of a step; every worker reads it right after the next step's
+/// barrier — the barrier orders the write before every read, so all
+/// ranks derive the identical bucket timeline and stay matched.
+struct EmuTuning {
+    current: Mutex<KnobPoint>,
+    cache: TimelineCache,
+}
+
+/// The axes the emulator can retune per step (bucket threshold and
+/// compression); the rest are frozen at the config's values because the
+/// fabric and the collective engine are built once per run. The
+/// experiment's OWN bucket threshold and compression always join the
+/// candidate sets: the configured operating point must be exactly
+/// representable, so the run starts on what the user asked for and only
+/// moves away when a candidate measures better.
+fn emu_knob_space(exp: &ExperimentConfig) -> KnobSpace {
+    let stripes = match exp.transport {
+        TransportKind::Striped { streams } => streams,
+        _ => 1,
+    };
+    // `bucket_mb == 0` is a real candidate value: it selects the
+    // fusion-buffer timeline (the worker's per-step knob read falls back
+    // to the precomputed default timeline for it), so a `bucket_mb = 0`
+    // config genuinely starts on its own fused schedule.
+    let configured_bucket = exp.bucket_mb.max(0.0);
+    let mut bucket_mbs = exp.autotune.bucket_mbs.clone();
+    if !bucket_mbs.contains(&configured_bucket) {
+        bucket_mbs.push(configured_bucket);
+    }
+    let mut compressions = exp.autotune.compressions.clone();
+    if !compressions.contains(&exp.compression) {
+        compressions.push(exp.compression);
+    }
+    KnobSpace {
+        bucket_mbs,
+        stripes: vec![stripes],
+        chunk_kbs: vec![256],
+        collectives: vec![exp.collective],
+        compressions,
+    }
+}
+
+/// The config's own operating point, as a knob point (snapped onto the
+/// space by the tuner).
+fn emu_initial_point(exp: &ExperimentConfig) -> KnobPoint {
+    let stripes = match exp.transport {
+        TransportKind::Striped { streams } => streams,
+        _ => 1,
+    };
+    KnobPoint {
+        bucket_mb: exp.bucket_mb.max(0.0),
+        stripes,
+        chunk_kb: 256,
+        collective: exp.collective,
+        compression: exp.compression,
+    }
+}
+
+fn emu_tuner_config(exp: &ExperimentConfig) -> TunerConfig {
+    TunerConfig {
+        warmup_steps: exp.warmup_steps.max(1),
+        seed: exp.seed ^ 0xA070_70DE,
+        ..TunerConfig::default()
+    }
 }
 
 /// Precomputed deterministic bucket schedule: `(emit time rel. backward
@@ -204,12 +274,29 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
         bucket_timeline(&trace, exp.fusion)
     });
 
+    // Autotune: shared knob cell + timeline cache. The starting point is
+    // the config's own operating point snapped onto the knob grid — the
+    // same snap the tuner performs, so worker 0's controller and the
+    // shared cell agree from step 0.
+    let tuning: Option<Arc<EmuTuning>> = if exp.autotune.enabled {
+        let space = emu_knob_space(exp);
+        space.validate().map_err(|e| anyhow::anyhow!("invalid autotune space: {e:#}"))?;
+        let start = space.point_at(space.nearest_index(&emu_initial_point(exp)));
+        Some(Arc::new(EmuTuning {
+            current: Mutex::new(start),
+            cache: TimelineCache::new(trace.clone()),
+        }))
+    } else {
+        None
+    };
+
     let mut handles = Vec::new();
     for ep in endpoints {
         let trace = trace.clone();
         let payload_scale = cfg.payload_scale;
         let bucket_count = Arc::clone(&bucket_count);
         let timeline = Arc::clone(&timeline);
+        let tuning = tuning.clone();
         let exp = exp.clone();
         handles.push(std::thread::spawn(move || {
             worker_main(
@@ -217,6 +304,7 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
                 &exp,
                 trace,
                 timeline,
+                tuning,
                 payload_scale,
                 steps_total,
                 compute_inflation,
@@ -241,6 +329,8 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
     for h in pending.drain(..) {
         phases.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
     }
+    // Worker 0 (spawn order = endpoint order) owns the tuner.
+    let autotune_summary = phases.get_mut(0).and_then(|p| p.tuning.take());
 
     // Aggregate: all workers ran the same number of steps in lockstep; the
     // slowest worker's wall time defines the cluster step time.
@@ -272,6 +362,7 @@ pub fn run_emulated(cfg: &EmulatedRunConfig) -> Result<RunReport> {
             / (workers as f64 * steps_total as f64),
         steps: exp.steps,
         workers,
+        autotune: autotune_summary,
     })
 }
 
@@ -279,6 +370,8 @@ struct WorkerOutcome {
     phase: PhaseTimes,
     /// Wall seconds spent in the measured (post-warmup) window.
     measured_wall_s: f64,
+    /// Worker 0's tuner summary when autotuning.
+    tuning: Option<TuningSummary>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -287,6 +380,7 @@ fn worker_main(
     exp: &ExperimentConfig,
     trace: StepTrace,
     timeline: Arc<Vec<(f64, usize)>>,
+    tuning: Option<Arc<EmuTuning>>,
     payload_scale: f64,
     steps_total: usize,
     compute_inflation: f64,
@@ -302,6 +396,17 @@ fn worker_main(
     // per-bucket negotiation latency charged on the worker thread.
     let engine = AsyncCollectiveEngine::new(Arc::clone(&ep), exp.collective);
 
+    // Worker 0 owns the controller when autotuning; everyone else only
+    // reads the shared knob cell.
+    let mut tuner: Option<AutoTuner> = match &tuning {
+        Some(_) if me.0 == 0 => Some(AutoTuner::new(
+            emu_knob_space(exp),
+            emu_tuner_config(exp),
+            &emu_initial_point(exp),
+        )?),
+        _ => None,
+    };
+
     let mut phase = PhaseTimes::default();
     let mut measured_wall = 0.0f64;
     let mut handles: Vec<AllReduceHandle> = Vec::with_capacity(timeline.len());
@@ -310,6 +415,22 @@ fn worker_main(
         let measured = step >= exp.warmup_steps;
         let step_start = Instant::now();
         barrier(ep.as_ref(), step as u32)?;
+
+        // Knobs for this step: the barrier above orders worker 0's
+        // end-of-previous-step write before this read on every rank, so
+        // all workers bucket identically.
+        let (step_timeline, step_ratio) = match &tuning {
+            Some(t) => {
+                let k = *t.current.lock().unwrap();
+                let tl = if k.bucket_mb > 0.0 {
+                    t.cache.get(crate::sched::bucket::mb_to_threshold(k.bucket_mb))
+                } else {
+                    Arc::clone(&timeline)
+                };
+                (tl, k.compression.ratio())
+            }
+            None => (Arc::clone(&timeline), compression_ratio),
+        };
 
         // ---- Forward (modeled). ----
         let t_fwd = trace.t_forward * compute_inflation;
@@ -321,7 +442,7 @@ fn worker_main(
         // emitted; under `--overlap off` the identical buckets are held
         // back until backward finishes (the serialized baseline). ----
         let backward_start = Instant::now();
-        for (seq, (t_emit, bytes)) in timeline.iter().enumerate() {
+        for (seq, (t_emit, bytes)) in step_timeline.iter().enumerate() {
             let target = t_emit * compute_inflation;
             let elapsed = backward_start.elapsed().as_secs_f64();
             if target > elapsed {
@@ -329,7 +450,7 @@ fn worker_main(
             }
             // Wire size: scaled + compressed. A tiny floor keeps zero-byte
             // buckets representable.
-            let wire_elems = ((*bytes as f64 / payload_scale / compression_ratio / 4.0)
+            let wire_elems = ((*bytes as f64 / payload_scale / step_ratio / 4.0)
                 as usize)
                 .max(1);
             let mut data = vec![0.0f32; wire_elems];
@@ -373,8 +494,34 @@ fn worker_main(
             phase.end_step();
             measured_wall += step_start.elapsed().as_secs_f64();
         }
+
+        // Close the loop: worker 0 feeds the controller and publishes any
+        // knob change for every rank to pick up after the next barrier.
+        if let (Some(shared), Some(tu)) = (&tuning, tuner.as_mut()) {
+            let fb = StepFeedback {
+                step: step as u64,
+                wall_s: step_start.elapsed().as_secs_f64(),
+                compute_s,
+                comm_busy_s: comm_wait,
+                busbw_gbps: 0.0,
+            };
+            if let Some(next) = tu.observe(&fb) {
+                *shared.current.lock().unwrap() = next;
+            }
+        }
     }
-    Ok(WorkerOutcome { phase, measured_wall_s: measured_wall })
+    Ok(WorkerOutcome {
+        phase,
+        measured_wall_s: measured_wall,
+        tuning: tuner.map(|t| {
+            let mut s = t.summary();
+            // A decision made at the final step never took effect (no
+            // next step read it): count only points that genuinely ran.
+            s.trajectory.retain(|(step, _)| *step < steps_total as u64);
+            s.changes = s.trajectory.len().saturating_sub(1);
+            s
+        }),
+    })
 }
 
 /// Sleep that tolerates the coarse scheduler on a busy 1-core box: OS
@@ -513,6 +660,55 @@ mod tests {
             b.buckets_per_step,
             a.buckets_per_step
         );
+    }
+
+    #[test]
+    fn autotuned_emulation_reports_a_trajectory() {
+        // The control loop end to end on the emulated bed: worker 0 runs
+        // the controller, every rank follows the shared knob cell, the
+        // run completes and reports the trajectory.
+        let mut cfg = quick_cfg(2, 25.0, TransportKind::FullUtilization);
+        cfg.exp.autotune.enabled = true;
+        cfg.exp.autotune.bucket_mbs = vec![4.0, 32.0];
+        cfg.exp.autotune.compressions =
+            vec![crate::config::Compression::None, crate::config::Compression::Ratio(4.0)];
+        cfg.exp.steps = 10;
+        cfg.exp.warmup_steps = 1;
+        let r = run_emulated(&cfg).unwrap();
+        assert_eq!(r.workers, 2);
+        assert!(r.step_time_s > 0.0);
+        let summary = r.autotune.expect("autotuned run must carry a summary");
+        assert!(!summary.trajectory.is_empty());
+        assert_eq!(summary.trajectory[0].0, 0, "entry 0 is the initial point");
+        assert_eq!(summary.changes, summary.trajectory.len() - 1);
+        assert!(summary.probe_phases >= 1);
+        // The probing actually happened: with an 11-step run and a
+        // 2+2-step probe cadence, at least one candidate was applied.
+        assert!(summary.changes >= 1, "{summary:?}");
+    }
+
+    #[test]
+    fn autotune_space_preserves_the_configured_operating_point() {
+        // The user's own compression/bucket settings must be exactly
+        // representable in the tuner's grid — autotune may move away from
+        // them, never silently replace them with a default candidate.
+        let mut exp = ExperimentConfig::default();
+        exp.autotune.enabled = true;
+        exp.compression = Compression::Ratio(50.0);
+        exp.bucket_mb = 7.0;
+        let space = emu_knob_space(&exp);
+        space.validate().unwrap();
+        assert!(space.compressions.contains(&Compression::Ratio(50.0)));
+        assert!(space.bucket_mbs.contains(&7.0));
+        let start = space.point_at(space.nearest_index(&emu_initial_point(&exp)));
+        assert_eq!(start.compression.ratio(), 50.0);
+        assert_eq!(start.bucket_mb, 7.0);
+    }
+
+    #[test]
+    fn static_runs_carry_no_tuning_summary() {
+        let r = run_emulated(&quick_cfg(2, 100.0, TransportKind::FullUtilization)).unwrap();
+        assert!(r.autotune.is_none());
     }
 
     #[test]

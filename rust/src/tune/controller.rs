@@ -1,0 +1,626 @@
+//! The **AutoTuner** — a seeded warmup → probe → exploit state machine
+//! that closes the measure→adapt loop.
+//!
+//! The tuner owns a [`KnobSpace`] coordinate and improves it by
+//! **coordinate descent**: each probe phase sweeps every value on one
+//! axis (holding the others fixed), measures each candidate for
+//! `probe_steps` steps, and moves to the best value only when it beats
+//! the incumbent by more than the `hysteresis` margin — small wins are
+//! noise, and flapping between near-equal knobs costs reconfigurations.
+//! After `max_passes` over the (seeded, shuffled) axis order — or a full
+//! pass with no movement — the tuner **exploits**: it pins the chosen
+//! point and watches a rolling window of step walls. A window slower
+//! than the exploit baseline by more than `regress_threshold`, sustained
+//! for `regress_patience` consecutive windows, means the environment
+//! moved (a NIC rate change, a neighbor stealing bandwidth): the tuner
+//! re-enters probe and finds the new operating point.
+//!
+//! Determinism: decisions are a pure function of the seed and the
+//! feedback values. Identical seeds and identical feedback sequences
+//! yield identical knob trajectories — the property the tuner-determinism
+//! suite (and serial ≡ `--parallel` sweep equality) pins down.
+//!
+//! The driver contract is [`AutoTuner::observe`]: call it once per
+//! completed step with that step's [`StepFeedback`] (measured under
+//! [`AutoTuner::current`]); when it returns `Some(point)`, reconfigure to
+//! `point` before the next step begins. Harnesses that can only
+//! reconfigure a subset of the axes online (the launch path tunes
+//! `chunk_kb`; the emulated trainer tunes `bucket_mb` × `compression`)
+//! freeze the other axes by building a space with single-valued axes.
+
+use super::feedback::{FeedbackRing, StepFeedback};
+use super::knobs::{KnobIndex, KnobPoint, KnobSpace, AXES};
+use crate::util::Rng;
+use crate::Result;
+use anyhow::ensure;
+
+/// Controller parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TunerConfig {
+    /// Steps discarded before the first probe (connection caches, JIT).
+    /// At least one step is always discarded — the first observation
+    /// arrives only after a step has already run.
+    pub warmup_steps: usize,
+    /// Steps measured per candidate, and the exploit window length.
+    pub probe_steps: usize,
+    /// Minimum relative improvement required to move along an axis.
+    pub hysteresis: f64,
+    /// Relative slowdown vs the exploit baseline that counts as a
+    /// regression.
+    pub regress_threshold: f64,
+    /// Consecutive regressed windows before a re-probe.
+    pub regress_patience: usize,
+    /// Maximum coordinate-descent passes per probe phase.
+    pub max_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for TunerConfig {
+    fn default() -> TunerConfig {
+        TunerConfig {
+            warmup_steps: 2,
+            probe_steps: 2,
+            hysteresis: 0.03,
+            regress_threshold: 0.25,
+            regress_patience: 3,
+            max_passes: 3,
+            seed: 0x7a0e,
+        }
+    }
+}
+
+impl TunerConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.probe_steps >= 1, "tuner probe_steps must be >= 1");
+        ensure!(self.max_passes >= 1, "tuner max_passes must be >= 1");
+        ensure!(self.regress_patience >= 1, "tuner regress_patience must be >= 1");
+        ensure!(
+            self.hysteresis.is_finite() && (0.0..1.0).contains(&self.hysteresis),
+            "tuner hysteresis must be in [0, 1)"
+        );
+        ensure!(
+            self.regress_threshold.is_finite() && self.regress_threshold > 0.0,
+            "tuner regress_threshold must be > 0"
+        );
+        Ok(())
+    }
+}
+
+/// Which phase the controller is in (surfaced for reporting/tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerState {
+    Warmup,
+    Probe,
+    Exploit,
+}
+
+/// What a finished tuning run decided — the report both trainer paths
+/// attach to their results.
+#[derive(Clone, Debug)]
+pub struct TuningSummary {
+    /// Applied knob changes (trajectory entries beyond the initial point).
+    pub changes: usize,
+    /// The chosen operating point.
+    pub final_knobs: KnobPoint,
+    /// Probe phases entered (≥ 2 means at least one re-probe fired).
+    pub probe_phases: usize,
+    /// `(first step the point was active, point)`, initial point first.
+    pub trajectory: Vec<(u64, KnobPoint)>,
+}
+
+/// Probe-phase bookkeeping: one axis sweep at a time.
+#[derive(Clone, Debug)]
+struct ProbeState {
+    /// Seeded shuffle of the axis indices for this phase.
+    axis_order: Vec<usize>,
+    /// Position in `axis_order`.
+    axis_pos: usize,
+    /// Completed passes over the whole order.
+    pass: usize,
+    /// Did any axis move during the current pass?
+    moved_this_pass: bool,
+    /// Candidate value indices on the current axis.
+    candidates: Vec<usize>,
+    cand_pos: usize,
+    /// Wall samples for the current candidate.
+    samples: Vec<f64>,
+    /// `(value index, mean wall)` for finished candidates on this axis.
+    cand_means: Vec<(usize, f64)>,
+}
+
+/// The online autotuner (see module docs).
+pub struct AutoTuner {
+    space: KnobSpace,
+    cfg: TunerConfig,
+    /// The coordinate the harness currently runs.
+    applied: KnobIndex,
+    /// The best-known coordinate (what exploit pins).
+    chosen: KnobIndex,
+    state: TunerState,
+    warmup_left: usize,
+    probe: Option<ProbeState>,
+    /// Exploit baseline: mean wall of the chosen point when it was last
+    /// probed.
+    baseline: f64,
+    /// Every observation lands here; the exploit-phase regression watch
+    /// reads its rolling window back out (`window_fill` counts samples
+    /// since the last window boundary).
+    ring: FeedbackRing,
+    window_fill: usize,
+    slow_windows: usize,
+    rng: Rng,
+    steps_seen: u64,
+    /// Applied knob changes: `(step index at which the change took
+    /// effect, point)`. Entry 0 is the initial point.
+    trajectory: Vec<(u64, KnobPoint)>,
+    /// Probe phases entered (1 after the initial probe; +1 per re-probe).
+    probe_phases: usize,
+}
+
+impl AutoTuner {
+    /// Create a tuner over `space`, starting at the grid point nearest to
+    /// `initial` (a harness's static config).
+    pub fn new(space: KnobSpace, cfg: TunerConfig, initial: &KnobPoint) -> Result<AutoTuner> {
+        space.validate()?;
+        cfg.validate()?;
+        let start = space.nearest_index(initial);
+        let start_point = space.point_at(start);
+        Ok(AutoTuner {
+            space,
+            cfg,
+            applied: start,
+            chosen: start,
+            state: TunerState::Warmup,
+            warmup_left: cfg.warmup_steps.max(1),
+            probe: None,
+            baseline: f64::INFINITY,
+            ring: FeedbackRing::new(cfg.probe_steps.max(8) * 8),
+            window_fill: 0,
+            slow_windows: 0,
+            rng: Rng::new(cfg.seed),
+            steps_seen: 0,
+            trajectory: vec![(0, start_point)],
+            probe_phases: 0,
+        })
+    }
+
+    /// The point the harness should be running right now.
+    pub fn current(&self) -> KnobPoint {
+        self.space.point_at(self.applied)
+    }
+
+    /// The best point found so far (what exploit runs).
+    pub fn chosen(&self) -> KnobPoint {
+        self.space.point_at(self.chosen)
+    }
+
+    pub fn state(&self) -> TunerState {
+        self.state
+    }
+
+    /// Knob decisions, `(first step the point takes effect, point)`. A
+    /// decision made while observing the run's final step never actually
+    /// runs — harness reports filter entries whose step is past the run
+    /// horizon (which the controller cannot know).
+    pub fn trajectory(&self) -> &[(u64, KnobPoint)] {
+        &self.trajectory
+    }
+
+    /// Steps observed so far.
+    pub fn steps_seen(&self) -> u64 {
+        self.steps_seen
+    }
+
+    /// Probe phases entered so far (≥ 2 once a re-probe has happened).
+    pub fn probe_phases(&self) -> usize {
+        self.probe_phases
+    }
+
+    /// Exploit-phase baseline (mean step wall of the chosen point).
+    pub fn baseline_s(&self) -> f64 {
+        self.baseline
+    }
+
+    /// The bounded window of recent observations (every feedback sample
+    /// ever passed to [`AutoTuner::observe`] lands here; reporters read
+    /// recent means/dispersion from it).
+    pub fn feedback(&self) -> &FeedbackRing {
+        &self.ring
+    }
+
+    /// Summarize the run so far.
+    pub fn summary(&self) -> TuningSummary {
+        TuningSummary {
+            changes: self.trajectory.len().saturating_sub(1),
+            final_knobs: self.chosen(),
+            probe_phases: self.probe_phases,
+            trajectory: self.trajectory.clone(),
+        }
+    }
+
+    /// Feed one completed step's feedback (measured under
+    /// [`AutoTuner::current`]); returns the point to apply before the
+    /// next step when a change is wanted.
+    pub fn observe(&mut self, fb: &StepFeedback) -> Option<KnobPoint> {
+        self.steps_seen += 1;
+        self.ring.push(*fb);
+        match self.state {
+            TunerState::Warmup => {
+                if self.warmup_left > 1 {
+                    self.warmup_left -= 1;
+                    return None;
+                }
+                self.enter_probe()
+            }
+            TunerState::Probe => self.observe_probe(fb.wall_s),
+            TunerState::Exploit => self.observe_exploit(fb.wall_s),
+        }
+    }
+
+    /// Start a (re-)probe phase: fresh seeded axis order, first axis
+    /// sweep armed. Returns the first candidate to apply.
+    fn enter_probe(&mut self) -> Option<KnobPoint> {
+        self.state = TunerState::Probe;
+        self.probe_phases += 1;
+        // Axes with one value can never move; dropping them up front keeps
+        // probe phases short on heavily frozen spaces (the launch path).
+        let mut order: Vec<usize> =
+            (0..AXES.len()).filter(|a| self.space.axis_len(*a) > 1).collect();
+        self.rng.shuffle(&mut order);
+        if order.is_empty() {
+            // Degenerate space: nothing to probe, exploit immediately. The
+            // baseline stays infinite, so regressions never fire either —
+            // a singleton space is a monitoring-only tuner.
+            self.probe = None;
+            self.state = TunerState::Exploit;
+            self.window_fill = 0;
+            self.slow_windows = 0;
+            return None;
+        }
+        self.probe = Some(ProbeState {
+            axis_order: order,
+            axis_pos: 0,
+            pass: 0,
+            moved_this_pass: false,
+            candidates: Vec::new(),
+            cand_pos: 0,
+            samples: Vec::new(),
+            cand_means: Vec::new(),
+        });
+        self.arm_axis()
+    }
+
+    /// Arm the sweep of the current axis; returns the first candidate.
+    fn arm_axis(&mut self) -> Option<KnobPoint> {
+        let (axis, first) = {
+            let p = self.probe.as_mut().expect("probe state armed");
+            let axis = p.axis_order[p.axis_pos];
+            p.candidates = (0..self.space.axis_len(axis)).collect();
+            p.cand_pos = 0;
+            p.samples.clear();
+            p.cand_means.clear();
+            (axis, p.candidates[0])
+        };
+        self.apply_axis_value(axis, first)
+    }
+
+    /// Point the harness at value `value` on `axis`, keeping the chosen
+    /// coordinate elsewhere. Returns `Some` when this actually changes
+    /// the applied point.
+    fn apply_axis_value(&mut self, axis: usize, value: usize) -> Option<KnobPoint> {
+        let mut target = self.chosen;
+        target[axis] = value;
+        self.set_applied(target)
+    }
+
+    fn set_applied(&mut self, target: KnobIndex) -> Option<KnobPoint> {
+        if target == self.applied {
+            return None;
+        }
+        self.applied = target;
+        let point = self.space.point_at(target);
+        // The change takes effect from the next step on.
+        self.trajectory.push((self.steps_seen, point));
+        Some(point)
+    }
+
+    fn observe_probe(&mut self, wall_s: f64) -> Option<KnobPoint> {
+        let cfg = self.cfg;
+        // Record the sample; decide whether the candidate is finished.
+        let finished = {
+            let p = self.probe.as_mut().expect("probe state present in Probe");
+            p.samples.push(wall_s);
+            p.samples.len() >= cfg.probe_steps
+        };
+        if !finished {
+            return None;
+        }
+        // Candidate finished: log its mean, move to the next candidate or
+        // settle the axis.
+        let (axis, next_candidate) = {
+            let p = self.probe.as_mut().expect("probe state present");
+            let axis = p.axis_order[p.axis_pos];
+            let mean = p.samples.iter().sum::<f64>() / p.samples.len() as f64;
+            p.samples.clear();
+            let value = p.candidates[p.cand_pos];
+            p.cand_means.push((value, mean));
+            p.cand_pos += 1;
+            let next = p.candidates.get(p.cand_pos).copied();
+            (axis, next)
+        };
+        if let Some(value) = next_candidate {
+            return self.apply_axis_value(axis, value);
+        }
+        self.settle_axis(axis)
+    }
+
+    /// All candidates on `axis` are measured: move with hysteresis, then
+    /// advance to the next axis / pass / exploit.
+    fn settle_axis(&mut self, axis: usize) -> Option<KnobPoint> {
+        let cfg = self.cfg;
+        let (best_value, best_mean, incumbent_mean) = {
+            let p = self.probe.as_ref().expect("probe state present");
+            let (bv, bm) = p
+                .cand_means
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(v, m)| (*v, *m))
+                .expect("axis sweep measured >= 1 candidate");
+            let incumbent = self.chosen[axis];
+            let im = p
+                .cand_means
+                .iter()
+                .find(|(v, _)| *v == incumbent)
+                .map(|(_, m)| *m)
+                .expect("incumbent value is always among the candidates");
+            (bv, bm, im)
+        };
+        let moved = best_value != self.chosen[axis]
+            && best_mean < incumbent_mean * (1.0 - cfg.hysteresis);
+        let settled_mean = if moved {
+            self.chosen[axis] = best_value;
+            best_mean
+        } else {
+            incumbent_mean
+        };
+        {
+            let p = self.probe.as_mut().expect("probe state present");
+            p.moved_this_pass |= moved;
+        }
+        // Track the best mean seen for the chosen point: the exploit
+        // baseline is the settled mean of the last axis swept.
+        self.baseline = settled_mean;
+
+        let (pass_finished, more_passes) = {
+            let p = self.probe.as_mut().expect("probe state present");
+            p.axis_pos += 1;
+            if p.axis_pos < p.axis_order.len() {
+                (false, true)
+            } else {
+                p.pass += 1;
+                let more = p.moved_this_pass && p.pass < cfg.max_passes;
+                (true, more)
+            }
+        };
+        if !pass_finished {
+            return self.arm_axis();
+        }
+        if more_passes {
+            let mut order = {
+                let p = self.probe.as_mut().expect("probe state present");
+                p.axis_pos = 0;
+                p.moved_this_pass = false;
+                std::mem::take(&mut p.axis_order)
+            };
+            self.rng.shuffle(&mut order);
+            self.probe.as_mut().expect("probe state present").axis_order = order;
+            return self.arm_axis();
+        }
+        // Enter exploit on the chosen point.
+        self.state = TunerState::Exploit;
+        self.probe = None;
+        self.window_fill = 0;
+        self.slow_windows = 0;
+        self.set_applied(self.chosen)
+    }
+
+    fn observe_exploit(&mut self, _wall_s: f64) -> Option<KnobPoint> {
+        let cfg = self.cfg;
+        self.window_fill += 1;
+        if self.window_fill < cfg.probe_steps {
+            return None;
+        }
+        // The sample already landed in the ring (observe pushes first);
+        // the window is simply its newest `probe_steps` entries.
+        let mean = self.ring.mean_wall(cfg.probe_steps);
+        self.window_fill = 0;
+        if self.baseline.is_finite() && mean > self.baseline * (1.0 + cfg.regress_threshold) {
+            self.slow_windows += 1;
+        } else {
+            self.slow_windows = 0;
+        }
+        if self.slow_windows >= cfg.regress_patience {
+            self.slow_windows = 0;
+            return self.enter_probe();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CollectiveKind, Compression};
+
+    fn tiny_space() -> KnobSpace {
+        KnobSpace {
+            bucket_mbs: vec![1.0, 4.0, 16.0],
+            stripes: vec![1, 8],
+            chunk_kbs: vec![256],
+            collectives: vec![CollectiveKind::Ring],
+            compressions: vec![Compression::None],
+        }
+    }
+
+    fn fb(step: u64, wall: f64) -> StepFeedback {
+        StepFeedback { step, wall_s: wall, compute_s: 0.0, comm_busy_s: 0.0, busbw_gbps: 0.0 }
+    }
+
+    /// A smooth synthetic objective with a unique optimum at
+    /// (bucket 4 MB, stripes 8).
+    fn objective(p: &KnobPoint) -> f64 {
+        let b = (p.bucket_mb.log2() - 2.0).abs(); // min at 4 MB
+        let s = if p.stripes == 8 { 0.0 } else { 0.5 };
+        0.1 + 0.02 * b + s
+    }
+
+    /// Drive a tuner against the objective until exploit (or `max` steps).
+    fn drive(tuner: &mut AutoTuner, max: usize) {
+        for step in 0..max {
+            let wall = objective(&tuner.current());
+            tuner.observe(&fb(step as u64, wall));
+            if tuner.state() == TunerState::Exploit {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn converges_to_the_synthetic_optimum() {
+        let mut t = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap();
+        drive(&mut t, 200);
+        assert_eq!(t.state(), TunerState::Exploit);
+        let chosen = t.chosen();
+        assert_eq!(chosen.bucket_mb, 4.0, "{chosen}");
+        assert_eq!(chosen.stripes, 8, "{chosen}");
+        assert!(t.trajectory().len() >= 2, "probing must have moved the applied point");
+    }
+
+    #[test]
+    fn same_seed_same_feedback_identical_trajectory() {
+        let mk = |seed| {
+            let cfg = TunerConfig { seed, ..TunerConfig::default() };
+            AutoTuner::new(tiny_space(), cfg, &KnobPoint::default_static()).unwrap()
+        };
+        let mut a = mk(42);
+        let mut b = mk(42);
+        for step in 0..120u64 {
+            let wa = objective(&a.current());
+            let wb = objective(&b.current());
+            assert_eq!(wa, wb, "applied points diverged at step {step}");
+            a.observe(&fb(step, wa));
+            b.observe(&fb(step, wb));
+        }
+        assert_eq!(a.trajectory(), b.trajectory());
+        // A different seed may (and here does) visit axes in another
+        // order; the destination still matches.
+        let mut c = mk(7);
+        drive(&mut c, 200);
+        assert_eq!(c.chosen().bucket_mb, 4.0);
+        assert_eq!(c.chosen().stripes, 8);
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_moves() {
+        // Two bucket values within 1% of each other: the tuner must stay
+        // on the incumbent rather than flap.
+        let space = KnobSpace {
+            bucket_mbs: vec![4.0, 16.0],
+            stripes: vec![1],
+            chunk_kbs: vec![256],
+            collectives: vec![CollectiveKind::Ring],
+            compressions: vec![Compression::None],
+        };
+        let cfg = TunerConfig { hysteresis: 0.05, ..TunerConfig::default() };
+        let start = KnobPoint { bucket_mb: 16.0, ..KnobPoint::default_static() };
+        let mut t = AutoTuner::new(space, cfg, &start).unwrap();
+        for step in 0..60u64 {
+            // 4 MB is 1% faster than 16 MB — inside the hysteresis band.
+            let wall = if t.current().bucket_mb == 4.0 { 0.099 } else { 0.1 };
+            t.observe(&fb(step, wall));
+            if t.state() == TunerState::Exploit {
+                break;
+            }
+        }
+        assert_eq!(t.state(), TunerState::Exploit);
+        assert_eq!(t.chosen().bucket_mb, 16.0, "1% is inside the 5% hysteresis band");
+    }
+
+    #[test]
+    fn sustained_regression_triggers_reprobe() {
+        let mut t = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap();
+        drive(&mut t, 200);
+        assert_eq!(t.state(), TunerState::Exploit);
+        assert_eq!(t.probe_phases(), 1);
+        let baseline = t.baseline_s();
+        assert!(baseline.is_finite() && baseline > 0.0);
+        // The environment degrades 10x: within patience × window steps the
+        // tuner must re-enter probe.
+        let cfg = t.cfg;
+        let budget = cfg.regress_patience * cfg.probe_steps + 1;
+        let mut reprobed = false;
+        for step in 0..budget as u64 {
+            t.observe(&fb(step, baseline * 10.0));
+            if t.state() == TunerState::Probe {
+                reprobed = true;
+                break;
+            }
+        }
+        assert!(reprobed, "10x sustained slowdown must trigger a re-probe");
+        assert_eq!(t.probe_phases(), 2);
+    }
+
+    #[test]
+    fn transient_spike_does_not_reprobe() {
+        let mut t = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap();
+        drive(&mut t, 200);
+        let baseline = t.baseline_s();
+        // One slow window, then recovery: patience must absorb it.
+        for step in 0..2u64 {
+            t.observe(&fb(step, baseline * 10.0));
+        }
+        for step in 2..12u64 {
+            t.observe(&fb(step, baseline));
+            assert_eq!(t.state(), TunerState::Exploit, "step {step}");
+        }
+    }
+
+    #[test]
+    fn singleton_space_is_monitoring_only() {
+        let p = KnobPoint::default_static();
+        let mut t =
+            AutoTuner::new(KnobSpace::singleton(p), TunerConfig::default(), &p).unwrap();
+        for step in 0..20u64 {
+            assert_eq!(t.observe(&fb(step, 0.1)), None);
+        }
+        assert_eq!(t.state(), TunerState::Exploit);
+        assert_eq!(t.current(), p);
+        assert_eq!(t.trajectory().len(), 1);
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        let p = KnobPoint::default_static();
+        let bad = TunerConfig { probe_steps: 0, ..TunerConfig::default() };
+        assert!(AutoTuner::new(KnobSpace::default(), bad, &p).is_err());
+        let bad = TunerConfig { hysteresis: 1.5, ..TunerConfig::default() };
+        assert!(AutoTuner::new(KnobSpace::default(), bad, &p).is_err());
+        let empty = KnobSpace { bucket_mbs: vec![], ..KnobSpace::default() };
+        assert!(AutoTuner::new(empty, TunerConfig::default(), &p).is_err());
+    }
+}

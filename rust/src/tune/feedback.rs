@@ -1,0 +1,193 @@
+//! Per-step measurement feedback — the sensor half of the control loop.
+//!
+//! A [`StepFeedback`] is one training step's timing summary (wall,
+//! compute, collective-busy seconds, effective bus bandwidth); a
+//! [`FeedbackRing`] is the bounded window the controller reads its
+//! decisions from. Both trainer paths produce feedback — the emulated
+//! trainer from its per-step phase timers, the `netbn launch` worker
+//! from [`crate::sched::StepStats`] — and recorded runs replay through
+//! the same types: `netbn tune --from-trace` loads the `step_feedback`
+//! records [`crate::measure::trace`] writes and feeds them back in.
+
+use crate::measure::trace::StepFeedbackRecord;
+
+/// One step's timing summary, as the tuner sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepFeedback {
+    pub step: u64,
+    /// Wall-clock seconds of the whole step (the tuner's objective).
+    pub wall_s: f64,
+    /// Seconds of the compute/emission phase.
+    pub compute_s: f64,
+    /// Seconds the collective engine was busy (includes overlapped spans).
+    pub comm_busy_s: f64,
+    /// NCCL-convention effective bus bandwidth, Gbps (0 when unknown).
+    pub busbw_gbps: f64,
+}
+
+impl StepFeedback {
+    /// Build from a recorded trace record (worker identity is dropped —
+    /// the replay path tunes on one worker's stream).
+    pub fn from_record(r: &StepFeedbackRecord) -> StepFeedback {
+        StepFeedback {
+            step: r.step as u64,
+            wall_s: r.wall_s,
+            compute_s: r.compute_s,
+            comm_busy_s: r.comm_busy_s,
+            busbw_gbps: r.busbw_gbps,
+        }
+    }
+
+    /// The corresponding trace record for `worker`.
+    pub fn to_record(&self, worker: usize) -> StepFeedbackRecord {
+        StepFeedbackRecord {
+            step: self.step as u32,
+            worker,
+            wall_s: self.wall_s,
+            compute_s: self.compute_s,
+            comm_busy_s: self.comm_busy_s,
+            busbw_gbps: self.busbw_gbps,
+        }
+    }
+}
+
+/// Bounded ring of the most recent [`StepFeedback`] samples.
+#[derive(Clone, Debug)]
+pub struct FeedbackRing {
+    cap: usize,
+    buf: Vec<StepFeedback>,
+    /// Index of the oldest element once the ring is full.
+    head: usize,
+    /// Total samples ever pushed (not capped).
+    total: u64,
+}
+
+impl FeedbackRing {
+    /// A ring holding up to `cap` samples (`cap >= 1`).
+    pub fn new(cap: usize) -> FeedbackRing {
+        assert!(cap >= 1, "feedback ring capacity must be >= 1");
+        FeedbackRing { cap, buf: Vec::with_capacity(cap), head: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, fb: StepFeedback) {
+        if self.buf.len() < self.cap {
+            self.buf.push(fb);
+        } else {
+            self.buf[self.head] = fb;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total samples ever pushed.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The most recent sample.
+    pub fn last(&self) -> Option<&StepFeedback> {
+        if self.buf.is_empty() {
+            None
+        } else if self.buf.len() < self.cap {
+            self.buf.last()
+        } else {
+            Some(&self.buf[(self.head + self.cap - 1) % self.cap])
+        }
+    }
+
+    /// Samples oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &StepFeedback> {
+        let (wrapped, start) = self.buf.split_at(self.head);
+        start.iter().chain(wrapped.iter())
+    }
+
+    /// Mean wall seconds over the newest `n` samples (all when `n` exceeds
+    /// the held count); 0 when empty.
+    pub fn mean_wall(&self, n: usize) -> f64 {
+        let walls: Vec<f64> = self.iter().map(|f| f.wall_s).collect();
+        let take = n.min(walls.len());
+        if take == 0 {
+            return 0.0;
+        }
+        walls[walls.len() - take..].iter().sum::<f64>() / take as f64
+    }
+
+    /// Population standard deviation of wall seconds over the newest `n`.
+    pub fn stddev_wall(&self, n: usize) -> f64 {
+        let walls: Vec<f64> = self.iter().map(|f| f.wall_s).collect();
+        let take = n.min(walls.len());
+        if take == 0 {
+            return 0.0;
+        }
+        let tail = &walls[walls.len() - take..];
+        let mean = tail.iter().sum::<f64>() / take as f64;
+        (tail.iter().map(|w| (w - mean) * (w - mean)).sum::<f64>() / take as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(step: u64, wall: f64) -> StepFeedback {
+        StepFeedback {
+            step,
+            wall_s: wall,
+            compute_s: wall * 0.6,
+            comm_busy_s: wall * 0.3,
+            busbw_gbps: 1.0,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_cap_samples() {
+        let mut r = FeedbackRing::new(3);
+        assert!(r.is_empty());
+        for i in 0..5u64 {
+            r.push(fb(i, i as f64));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total(), 5);
+        let steps: Vec<u64> = r.iter().map(|f| f.step).collect();
+        assert_eq!(steps, vec![2, 3, 4]);
+        assert_eq!(r.last().unwrap().step, 4);
+    }
+
+    #[test]
+    fn ring_before_wraparound() {
+        let mut r = FeedbackRing::new(4);
+        r.push(fb(0, 1.0));
+        r.push(fb(1, 3.0));
+        assert_eq!(r.last().unwrap().step, 1);
+        let steps: Vec<u64> = r.iter().map(|f| f.step).collect();
+        assert_eq!(steps, vec![0, 1]);
+    }
+
+    #[test]
+    fn window_stats() {
+        let mut r = FeedbackRing::new(8);
+        for (i, w) in [1.0, 2.0, 3.0, 7.0].iter().enumerate() {
+            r.push(fb(i as u64, *w));
+        }
+        assert!((r.mean_wall(2) - 5.0).abs() < 1e-12);
+        assert!((r.mean_wall(100) - 3.25).abs() < 1e-12);
+        assert!((r.stddev_wall(2) - 2.0).abs() < 1e-12);
+        assert_eq!(FeedbackRing::new(2).mean_wall(3), 0.0);
+    }
+
+    #[test]
+    fn record_round_trip() {
+        let f = fb(9, 0.25);
+        let back = StepFeedback::from_record(&f.to_record(2));
+        assert_eq!(back, f);
+    }
+}

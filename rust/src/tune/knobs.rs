@@ -1,0 +1,539 @@
+//! The typed **knob space** the autotuner searches.
+//!
+//! A [`KnobPoint`] is one full configuration of the communication stack —
+//! bucket threshold × stripe count × stripe chunk size × collective ×
+//! compression — and a [`KnobSpace`] is a finite grid over those five
+//! axes with validity constraints and a deterministic enumeration order.
+//! Everything downstream (the coordinate-descent controller, the analytic
+//! oracle's exhaustive sweep, the launch-time knob broadcast) speaks in
+//! `KnobPoint`s, so the five axis names and their value parsers live in
+//! exactly one place.
+//!
+//! Values reuse the repo's existing parsers — [`CollectiveKind::parse`]
+//! and [`Compression::parse`] (which itself accepts every
+//! [`crate::compress::CodecKind`] spelling) — so `collective=hier:4` and
+//! `compression=topk:0.01` work anywhere a knob is written down, and an
+//! unknown knob *name* fails with an error that lists the legal names.
+
+use crate::config::{CollectiveKind, Compression};
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::fmt;
+
+/// The five knob axis names, in enumeration order. This is the contract
+/// behind every `name=value` knob spec and every actionable error.
+pub const AXES: [&str; 5] = ["bucket_mb", "stripes", "chunk_kb", "collective", "compression"];
+
+/// One full configuration of the communication stack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KnobPoint {
+    /// DDP-style bucketizer threshold in MB (`0` = one bucket).
+    pub bucket_mb: f64,
+    /// Parallel transport streams per peer pair.
+    pub stripes: usize,
+    /// Per-stream pipelining chunk in KB.
+    pub chunk_kb: usize,
+    pub collective: CollectiveKind,
+    pub compression: Compression,
+}
+
+/// Serialize a [`Compression`] so [`Compression::parse`] reads it back:
+/// `Display` writes ratios as `"4x"`, which the parser rejects.
+fn compression_spec(c: &Compression) -> String {
+    match c {
+        Compression::None => "none".into(),
+        Compression::Ratio(r) => format!("{r}"),
+        Compression::Codec(k) => k.name(),
+    }
+}
+
+impl KnobPoint {
+    /// The repo's static default operating point: the single-stream
+    /// kernel-TCP configuration the paper measures (and the baseline the
+    /// `autotune_vs_static` scenario compares against).
+    pub fn default_static() -> KnobPoint {
+        KnobPoint {
+            bucket_mb: 25.0,
+            stripes: 1,
+            chunk_kb: 256,
+            collective: CollectiveKind::Ring,
+            compression: Compression::None,
+        }
+    }
+
+    /// Canonical `name=value;...` spec — the wire format of the launch
+    /// coordinator's knob broadcast. Round-trips through
+    /// [`KnobPoint::parse_spec`].
+    pub fn spec(&self) -> String {
+        format!(
+            "bucket_mb={};stripes={};chunk_kb={};collective={};compression={}",
+            self.bucket_mb,
+            self.stripes,
+            self.chunk_kb,
+            self.collective,
+            compression_spec(&self.compression)
+        )
+    }
+
+    /// Parse the [`KnobPoint::spec`] format. Every axis must appear
+    /// exactly once; unknown names fail with the legal list.
+    pub fn parse_spec(s: &str) -> Result<KnobPoint> {
+        let mut p = KnobPoint::default_static();
+        let mut seen = [false; AXES.len()];
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("knob spec needs name=value, got {part:?}"))?;
+            let (name, value) = (name.trim(), value.trim());
+            let axis = axis_index(name)?;
+            ensure!(!seen[axis], "knob {name:?} given twice in {s:?}");
+            seen[axis] = true;
+            match axis {
+                0 => p.bucket_mb = parse_bucket_mb(value)?,
+                1 => p.stripes = parse_stripes(value)?,
+                2 => p.chunk_kb = parse_chunk_kb(value)?,
+                3 => {
+                    p.collective = CollectiveKind::parse(value)
+                        .ok_or_else(|| anyhow!("knob collective: unknown value {value:?}"))?
+                }
+                _ => p.compression = Compression::parse(value)?,
+            }
+        }
+        for (axis, seen) in seen.iter().enumerate() {
+            ensure!(*seen, "knob spec {s:?} is missing {}", AXES[axis]);
+        }
+        Ok(p)
+    }
+}
+
+impl fmt::Display for KnobPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "bucket {} MB, striped:{} @ {} KB chunks, {}, compression {}",
+            self.bucket_mb, self.stripes, self.chunk_kb, self.collective, self.compression
+        )
+    }
+}
+
+/// Resolve an axis name, or fail with the actionable list — the one error
+/// every `--knobs`/spec path funnels through.
+pub fn axis_index(name: &str) -> Result<usize> {
+    AXES.iter().position(|a| *a == name).ok_or_else(|| {
+        anyhow!("unknown knob {name:?}; valid knobs: {}", AXES.join(", "))
+    })
+}
+
+fn parse_bucket_mb(v: &str) -> Result<f64> {
+    let mb: f64 =
+        v.parse().map_err(|_| anyhow!("knob bucket_mb: expected a number, got {v:?}"))?;
+    ensure!(mb.is_finite() && mb >= 0.0, "knob bucket_mb: must be >= 0 and finite, got {v:?}");
+    Ok(mb)
+}
+
+/// Legal `stripes` values — the one range every surface enforces.
+pub const STRIPES_RANGE: std::ops::RangeInclusive<usize> = 1..=64;
+
+fn parse_stripes(v: &str) -> Result<usize> {
+    let n: usize =
+        v.parse().map_err(|_| anyhow!("knob stripes: expected an integer, got {v:?}"))?;
+    ensure!(
+        STRIPES_RANGE.contains(&n),
+        "knob stripes: must be in {}..={}, got {v:?}",
+        STRIPES_RANGE.start(),
+        STRIPES_RANGE.end()
+    );
+    Ok(n)
+}
+
+/// Legal `chunk_kb` values — the ONE range every surface (knob specs,
+/// `--knobs` overrides, `netbn launch --chunk-kbs` validation) enforces.
+pub const CHUNK_KB_RANGE: std::ops::RangeInclusive<usize> = 1..=65536;
+
+fn parse_chunk_kb(v: &str) -> Result<usize> {
+    let kb: usize =
+        v.parse().map_err(|_| anyhow!("knob chunk_kb: expected an integer, got {v:?}"))?;
+    ensure!(
+        CHUNK_KB_RANGE.contains(&kb),
+        "knob chunk_kb: must be in {}..={}, got {v:?}",
+        CHUNK_KB_RANGE.start(),
+        CHUNK_KB_RANGE.end()
+    );
+    Ok(kb)
+}
+
+/// A finite grid over the five knob axes.
+#[derive(Clone, Debug)]
+pub struct KnobSpace {
+    pub bucket_mbs: Vec<f64>,
+    pub stripes: Vec<usize>,
+    pub chunk_kbs: Vec<usize>,
+    pub collectives: Vec<CollectiveKind>,
+    pub compressions: Vec<Compression>,
+}
+
+/// A coordinate into a [`KnobSpace`]: one value index per axis.
+pub type KnobIndex = [usize; 5];
+
+impl Default for KnobSpace {
+    /// The calibrated default grid the scenarios search: wide enough that
+    /// the optimum moves with the network rate (compression wins at
+    /// 1 Gbps, striping at 100 Gbps), small enough that an exhaustive
+    /// sweep stays instant.
+    fn default() -> KnobSpace {
+        KnobSpace {
+            bucket_mbs: vec![1.0, 4.0, 16.0, 64.0],
+            stripes: vec![1, 2, 4, 8, 16],
+            chunk_kbs: vec![64, 256, 1024],
+            collectives: vec![CollectiveKind::Ring, CollectiveKind::Hierarchical { group_size: 8 }],
+            compressions: vec![Compression::None, Compression::Ratio(4.0)],
+        }
+    }
+}
+
+impl KnobSpace {
+    /// A space with exactly one point — the degenerate grid harnesses use
+    /// to freeze every axis they cannot reconfigure online.
+    pub fn singleton(p: KnobPoint) -> KnobSpace {
+        KnobSpace {
+            bucket_mbs: vec![p.bucket_mb],
+            stripes: vec![p.stripes],
+            chunk_kbs: vec![p.chunk_kb],
+            collectives: vec![p.collective],
+            compressions: vec![p.compression],
+        }
+    }
+
+    /// Validity constraints for the whole grid.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.bucket_mbs.is_empty(), "knob space: bucket_mb axis is empty");
+        ensure!(!self.stripes.is_empty(), "knob space: stripes axis is empty");
+        ensure!(!self.chunk_kbs.is_empty(), "knob space: chunk_kb axis is empty");
+        ensure!(!self.collectives.is_empty(), "knob space: collective axis is empty");
+        ensure!(!self.compressions.is_empty(), "knob space: compression axis is empty");
+        for &mb in &self.bucket_mbs {
+            ensure!(mb.is_finite() && mb >= 0.0, "knob space: bucket_mb {mb} must be >= 0");
+        }
+        for &n in &self.stripes {
+            ensure!(
+                STRIPES_RANGE.contains(&n),
+                "knob space: stripes {n} must be in {}..={}",
+                STRIPES_RANGE.start(),
+                STRIPES_RANGE.end()
+            );
+        }
+        for &kb in &self.chunk_kbs {
+            ensure!(
+                CHUNK_KB_RANGE.contains(&kb),
+                "knob space: chunk_kb {kb} must be in {}..={}",
+                CHUNK_KB_RANGE.start(),
+                CHUNK_KB_RANGE.end()
+            );
+        }
+        for c in &self.compressions {
+            let r = c.ratio();
+            ensure!(r.is_finite() && r >= 1.0, "knob space: compression ratio {r} must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Override one axis from a comma-separated value list. Unknown axis
+    /// names fail with the actionable list; values go through the same
+    /// parsers as [`KnobPoint::parse_spec`].
+    pub fn set_axis_csv(&mut self, name: &str, csv: &str) -> Result<()> {
+        let axis = axis_index(name)?;
+        let parts: Vec<&str> =
+            csv.split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
+        ensure!(!parts.is_empty(), "knob {name}: empty value list {csv:?}");
+        match axis {
+            0 => self.bucket_mbs = parts.iter().map(|v| parse_bucket_mb(v)).collect::<Result<_>>()?,
+            1 => self.stripes = parts.iter().map(|v| parse_stripes(v)).collect::<Result<_>>()?,
+            2 => self.chunk_kbs = parts.iter().map(|v| parse_chunk_kb(v)).collect::<Result<_>>()?,
+            3 => {
+                self.collectives = parts
+                    .iter()
+                    .map(|v| {
+                        CollectiveKind::parse(v)
+                            .ok_or_else(|| anyhow!("knob collective: unknown value {v:?}"))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            _ => {
+                self.compressions =
+                    parts.iter().map(|v| Compression::parse(v)).collect::<Result<_>>()?
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a space from a `name=v1,v2;name=v1` spec, starting from the
+    /// default grid. An empty spec is the default grid.
+    pub fn parse_spec(spec: &str) -> Result<KnobSpace> {
+        let mut space = KnobSpace::default();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, csv) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("knob space spec needs name=v1,v2,..., got {part:?}"))?;
+            space.set_axis_csv(name.trim(), csv)?;
+        }
+        space.validate()?;
+        Ok(space)
+    }
+
+    /// Number of values on axis `a` (index into [`AXES`]).
+    pub fn axis_len(&self, a: usize) -> usize {
+        match a {
+            0 => self.bucket_mbs.len(),
+            1 => self.stripes.len(),
+            2 => self.chunk_kbs.len(),
+            3 => self.collectives.len(),
+            _ => self.compressions.len(),
+        }
+    }
+
+    /// Total grid points (product of axis lengths).
+    pub fn len(&self) -> usize {
+        (0..AXES.len()).map(|a| self.axis_len(a)).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The point at a coordinate. Panics on an out-of-range index — the
+    /// controller only ever constructs in-range coordinates.
+    pub fn point_at(&self, idx: KnobIndex) -> KnobPoint {
+        KnobPoint {
+            bucket_mb: self.bucket_mbs[idx[0]],
+            stripes: self.stripes[idx[1]],
+            chunk_kb: self.chunk_kbs[idx[2]],
+            collective: self.collectives[idx[3]],
+            compression: self.compressions[idx[4]],
+        }
+    }
+
+    /// Deterministic enumeration of the whole grid: axis 0 varies slowest,
+    /// the compression axis fastest (odometer order) — the order the
+    /// oracle's exhaustive sweep reports.
+    pub fn points(&self) -> Vec<KnobPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx: KnobIndex = [0; 5];
+        loop {
+            out.push(self.point_at(idx));
+            // Odometer increment, last axis fastest.
+            let mut a = AXES.len();
+            loop {
+                if a == 0 {
+                    return out;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < self.axis_len(a) {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+
+    /// The grid coordinate nearest to an arbitrary point: numeric axes
+    /// snap to the closest value, enum axes to an exact match or value 0.
+    /// This is how a harness's *current* static config becomes the
+    /// tuner's starting coordinate.
+    pub fn nearest_index(&self, p: &KnobPoint) -> KnobIndex {
+        let nearest_f64 = |vals: &[f64], x: f64| {
+            vals.iter()
+                .enumerate()
+                .min_by(|a, b| (a.1 - x).abs().total_cmp(&(b.1 - x).abs()))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        let nearest_usize = |vals: &[usize], x: usize| {
+            vals.iter()
+                .enumerate()
+                .min_by_key(|(_, v)| v.abs_diff(x))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        [
+            nearest_f64(&self.bucket_mbs, p.bucket_mb),
+            nearest_usize(&self.stripes, p.stripes),
+            nearest_usize(&self.chunk_kbs, p.chunk_kb),
+            self.collectives.iter().position(|c| *c == p.collective).unwrap_or(0),
+            nearest_f64(
+                &self.compressions.iter().map(|c| c.ratio()).collect::<Vec<_>>(),
+                p.compression.ratio(),
+            ),
+        ]
+    }
+}
+
+/// Parse a repeatable `--knobs name=v1,v2,...` override list into a space
+/// (CLI surface of [`KnobSpace::set_axis_csv`]).
+pub fn space_from_overrides(overrides: &[(String, String)]) -> Result<KnobSpace> {
+    let mut space = KnobSpace::default();
+    for (name, csv) in overrides {
+        space.set_axis_csv(name, csv)?;
+    }
+    space.validate().map_err(|e| anyhow!("invalid knob space: {e:#}"))?;
+    Ok(space)
+}
+
+/// Bail helper shared by the CLI: reject an empty override value early so
+/// the error names the knob rather than a parser detail.
+pub fn parse_knob_override(pair: &str) -> Result<(String, String)> {
+    match pair.split_once('=') {
+        Some((k, v)) if !v.trim().is_empty() => Ok((k.trim().to_string(), v.trim().to_string())),
+        Some((k, _)) => bail!("knob {:?} has an empty value list", k.trim()),
+        None => bail!("knob override needs name=v1,v2,..., got {pair:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips() {
+        let points = [
+            KnobPoint::default_static(),
+            KnobPoint {
+                bucket_mb: 4.0,
+                stripes: 8,
+                chunk_kb: 64,
+                collective: CollectiveKind::Hierarchical { group_size: 4 },
+                compression: Compression::Ratio(4.0),
+            },
+            KnobPoint {
+                bucket_mb: 0.0,
+                stripes: 2,
+                chunk_kb: 1024,
+                collective: CollectiveKind::Tree,
+                compression: Compression::Codec(crate::compress::CodecKind::TopK {
+                    k_fraction: 0.01,
+                }),
+            },
+        ];
+        for p in points {
+            let back = KnobPoint::parse_spec(&p.spec()).unwrap();
+            assert_eq!(back, p, "{}", p.spec());
+        }
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        assert!(KnobPoint::parse_spec("bucket_mb=1").is_err()); // missing axes
+        assert!(KnobPoint::parse_spec(
+            "bucket_mb=1;stripes=2;chunk_kb=64;collective=ring;compression=none;stripes=4"
+        )
+        .is_err()); // duplicate
+        assert!(KnobPoint::parse_spec(
+            "bucket_mb=1;stripes=2;chunk_kb=64;collective=butterfly;compression=none"
+        )
+        .is_err()); // bad collective
+    }
+
+    #[test]
+    fn unknown_knob_error_lists_valid_names() {
+        let err = axis_index("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        for a in AXES {
+            assert!(err.contains(a), "{err} missing {a}");
+        }
+        let mut s = KnobSpace::default();
+        let err = s.set_axis_csv("chunk_bytes", "1,2").unwrap_err().to_string();
+        assert!(err.contains("chunk_bytes") && err.contains("chunk_kb"), "{err}");
+    }
+
+    #[test]
+    fn knob_values_reuse_existing_parsers() {
+        // Codec spellings accepted by Compression::parse work as knob
+        // values; degenerate ones are rejected by the same rules.
+        let mut s = KnobSpace::default();
+        s.set_axis_csv("compression", "none,fp16,topk:0.01,8").unwrap();
+        assert_eq!(s.compressions.len(), 4);
+        assert!((s.compressions[2].ratio() - 50.0).abs() < 1e-9);
+        assert!(s.set_axis_csv("compression", "topk:0").is_err());
+        assert!(s.set_axis_csv("compression", "0.5").is_err());
+        s.set_axis_csv("collective", "ring,hier:4,tree").unwrap();
+        assert_eq!(s.collectives[1], CollectiveKind::Hierarchical { group_size: 4 });
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_odometer() {
+        let s = KnobSpace {
+            bucket_mbs: vec![1.0, 2.0],
+            stripes: vec![1],
+            chunk_kbs: vec![64],
+            collectives: vec![CollectiveKind::Ring],
+            compressions: vec![Compression::None, Compression::Ratio(4.0)],
+        };
+        assert_eq!(s.len(), 4);
+        let pts = s.points();
+        assert_eq!(pts.len(), 4);
+        // Last axis (compression) varies fastest.
+        assert_eq!(pts[0].bucket_mb, 1.0);
+        assert_eq!(pts[0].compression, Compression::None);
+        assert_eq!(pts[1].compression, Compression::Ratio(4.0));
+        assert_eq!(pts[2].bucket_mb, 2.0);
+        assert_eq!(s.points(), pts, "enumeration must be reproducible");
+    }
+
+    #[test]
+    fn default_space_is_valid_and_sized() {
+        let s = KnobSpace::default();
+        s.validate().unwrap();
+        assert_eq!(s.len(), 4 * 5 * 3 * 2 * 2);
+        assert_eq!(s.points().len(), s.len());
+    }
+
+    #[test]
+    fn nearest_index_snaps() {
+        let s = KnobSpace::default();
+        let idx = s.nearest_index(&KnobPoint::default_static());
+        let snapped = s.point_at(idx);
+        assert_eq!(snapped.stripes, 1);
+        assert_eq!(snapped.bucket_mb, 16.0); // 25 snaps to 16 on {1,4,16,64}
+        assert_eq!(snapped.collective, CollectiveKind::Ring);
+        assert_eq!(snapped.compression, Compression::None);
+    }
+
+    #[test]
+    fn singleton_space_has_one_point() {
+        let p = KnobPoint::default_static();
+        let s = KnobSpace::singleton(p);
+        s.validate().unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.points(), vec![p]);
+        assert_eq!(s.nearest_index(&p), [0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn space_spec_parses_and_validates() {
+        let s = KnobSpace::parse_spec("bucket_mb=2,8;stripes=4").unwrap();
+        assert_eq!(s.bucket_mbs, vec![2.0, 8.0]);
+        assert_eq!(s.stripes, vec![4]);
+        assert_eq!(s.chunk_kbs, KnobSpace::default().chunk_kbs);
+        assert!(KnobSpace::parse_spec("bogus=1").is_err());
+        assert!(KnobSpace::parse_spec("stripes=0").is_err());
+        assert_eq!(KnobSpace::parse_spec("").unwrap().len(), KnobSpace::default().len());
+    }
+
+    #[test]
+    fn knob_override_parsing() {
+        assert_eq!(
+            parse_knob_override("stripes=1,2").unwrap(),
+            ("stripes".to_string(), "1,2".to_string())
+        );
+        assert!(parse_knob_override("stripes").is_err());
+        assert!(parse_knob_override("stripes=").is_err());
+    }
+}

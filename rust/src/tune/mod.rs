@@ -1,0 +1,53 @@
+//! The online **autotuning control plane** — close the measure→adapt loop
+//! across transport, scheduler and collectives.
+//!
+//! The paper's thesis is that the *configuration* of the communication
+//! stack, not raw link capacity, decides whether training scales — and
+//! this repo now has five first-class knobs (bucket threshold, stripe
+//! count, stripe chunk size, collective, compression) whose optimum
+//! moves with the network rate (`bucket_size_sweep` and
+//! `utilization_frontier` show exactly that). Agarwal et al. ("On the
+//! Utility of Gradient Compression…") make the general point: the best
+//! communication strategy is setup-dependent and should be *chosen from
+//! measurement*. This module does that online instead of by offline
+//! sweep:
+//!
+//! * [`feedback`] — [`StepFeedback`] / [`FeedbackRing`]: per-step
+//!   wall/compute/comm-busy/busbw samples, produced by both trainer
+//!   paths and replayable from recorded `step_feedback` JSONL traces
+//!   (`netbn tune --from-trace`);
+//! * [`knobs`] — [`KnobPoint`] / [`KnobSpace`]: the typed five-axis
+//!   grid, with validity constraints, deterministic enumeration and
+//!   `name=value` specs that reuse the existing
+//!   [`crate::config::Compression`] / [`crate::config::CollectiveKind`]
+//!   parsers;
+//! * [`controller`] — [`AutoTuner`]: the seeded warmup → probe → exploit
+//!   state machine (coordinate descent with hysteresis, re-probe on
+//!   sustained regression); identical seeds + identical feedback ⇒
+//!   identical knob trajectories;
+//! * [`oracle`] — [`OracleEnv`]: the analytic objective (the calibrated
+//!   transport/overlap cost models evaluated per knob point) and its
+//!   exhaustive sweep, the ground truth the `autotune_convergence` /
+//!   `autotune_vs_static` / `autotune_adapt` scenarios check the tuner
+//!   against.
+//!
+//! Harness wiring: the emulated trainer
+//! ([`crate::trainer::run_emulated`], `--autotune`) tunes `bucket_mb` ×
+//! `compression` per step; `netbn launch --autotune` tunes the stripe
+//! `chunk_kb` — rank 0 runs the tuner and broadcasts knob changes to
+//! every worker at step boundaries over the mesh control channel
+//! ([`crate::net::tags::CONTROL`]), so all ranks reconfigure
+//! consistently. The launch path deliberately tunes only
+//! arithmetic-neutral knobs (chunking changes how bytes move, never
+//! what they sum to), which is why autotuned runs stay FNV-bit-identical
+//! to static runs — the e2e safety gate.
+
+pub mod controller;
+pub mod feedback;
+pub mod knobs;
+pub mod oracle;
+
+pub use controller::{AutoTuner, TunerConfig, TunerState, TuningSummary};
+pub use feedback::{FeedbackRing, StepFeedback};
+pub use knobs::{KnobPoint, KnobSpace};
+pub use oracle::{drive_until_exploit, noisy_oracle_step, OracleEnv};
