@@ -36,6 +36,7 @@ use super::registry::ScenarioRegistry;
 use crate::report::{json_str, Table};
 use crate::Result;
 use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
 
 /// Which metrics of which scenario the gate tracks. Effective-throughput
 /// fields only: these move when a transport or collective change alters
@@ -74,6 +75,37 @@ impl BenchReport {
         s.push_str("}\n");
         s
     }
+}
+
+/// One bench run as a single JSONL record: the flat metric object of
+/// [`BenchReport::to_json`] collapsed to one line, stamped with
+/// `unix_ts` so a history file orders itself. Parseable back with
+/// [`parse_flat_json`].
+pub fn history_line(report: &BenchReport, unix_ts: u64) -> String {
+    let mut s = format!("{{\"unix_ts\":{unix_ts}");
+    for (k, v) in &report.metrics {
+        let _ = write!(s, ",{}:{v}", json_str(k));
+    }
+    s.push('}');
+    s
+}
+
+/// Append this run to `<store_dir>/bench_history.jsonl` (creating the
+/// directory and file as needed) — `netbn bench --store <dir>` writes
+/// the same store a `netbn serve` daemon uses, so one directory carries
+/// both job history and the perf trend line. Returns the file path.
+pub fn append_history(report: &BenchReport, store_dir: &Path) -> Result<PathBuf> {
+    use std::io::Write as _;
+    std::fs::create_dir_all(store_dir)
+        .map_err(|e| anyhow::anyhow!("create store dir {}: {e}", store_dir.display()))?;
+    let path = store_dir.join("bench_history.jsonl");
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    writeln!(f, "{}", history_line(report, ts))?;
+    Ok(path)
 }
 
 /// Run the gated scenarios (with default parameters — the baseline's
@@ -419,6 +451,26 @@ mod tests {
         // Metrics without a companion keep the plain sharp gate.
         let sharp = compare(&kv(&[("m.a", 7.9)]), &kv(&[("m.a", 10.0)]), 0.2);
         assert!(!sharp.ok());
+    }
+
+    #[test]
+    fn bench_history_appends_one_parseable_line_per_run() {
+        let dir = std::env::temp_dir().join(format!("netbn_bench_hist_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let report = BenchReport { metrics: kv(&[("a.x", 1.5), ("b.y@8", 30.25)]) };
+        let p1 = append_history(&report, &dir).unwrap();
+        let p2 = append_history(&report, &dir).unwrap();
+        assert_eq!(p1, p2);
+        let text = std::fs::read_to_string(&p1).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one line per run:\n{text}");
+        for line in lines {
+            let parsed = parse_flat_json(line).unwrap();
+            assert!(parsed.iter().any(|(k, _)| k == "unix_ts"), "{line}");
+            assert!(parsed.iter().any(|(k, v)| k == "a.x" && *v == 1.5), "{line}");
+            assert!(parsed.iter().any(|(k, v)| k == "b.y@8" && *v == 30.25), "{line}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

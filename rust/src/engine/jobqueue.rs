@@ -1,0 +1,226 @@
+//! Job-queue adapter: the registry as a *backend* for queued execution.
+//!
+//! ROADMAP item 4 asks for the engine to serve as a job-queue backend —
+//! this module is the seam. A [`JobRequest`] is a wire-friendly
+//! submission (scenario name + string overrides + priority) that any
+//! frontend can produce: `netbn serve`'s HTTP `POST /jobs` bodies decode
+//! straight into it, and the `serve_throughput` scenario drives the same
+//! type in-process. [`validate`] rejects bad submissions *at admission*
+//! (unknown scenario, overrides the schema refuses) so queues never hold
+//! doomed work, and [`execute`] is the single choke point where a queued
+//! request becomes a [`ScenarioRegistry`] run. Warm starts are plain
+//! parameter injection ([`warm_start_overrides`]): a persisted
+//! [`TunerCheckpoint`] turns into `bucket-mb`/`compression` overrides on
+//! scenarios that declare both knobs, never overriding what the
+//! submitter pinned.
+
+use super::outcome::Outcome;
+use super::params::ParamSchema;
+use super::registry::ScenarioRegistry;
+use crate::config::Compression;
+use crate::report::json_str;
+use crate::tune::TunerCheckpoint;
+use crate::util::json;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// One queued unit of work, as submitted by a frontend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    /// Registered scenario name.
+    pub scenario: String,
+    /// `(name, value)` parameter overrides, exactly as `netbn run
+    /// --param` would pass them.
+    pub params: Vec<(String, String)>,
+    /// Scheduling priority, 0–9 (higher drains first).
+    pub priority: u8,
+}
+
+impl JobRequest {
+    /// Decode a submission body:
+    /// `{"scenario": "...", "params": {"k": "v", ...}, "priority": 5}`
+    /// (`params` and `priority` optional; priority defaults to 5).
+    pub fn from_json(body: &str) -> Result<JobRequest> {
+        let fields = json::object_fields(body).context("malformed job submission")?;
+        let scenario = json::parse_string(json::require(&fields, "scenario")?)?;
+        let params = match json::get(&fields, "params") {
+            Some(raw) => json::parse_str_map(raw).context("malformed params object")?,
+            None => Vec::new(),
+        };
+        let priority = match json::get(&fields, "priority") {
+            Some(raw) => {
+                let p = json::parse_u64(raw).context("priority must be an integer")?;
+                ensure!(p <= 9, "priority must be 0..=9, got {p}");
+                p as u8
+            }
+            None => 5,
+        };
+        Ok(JobRequest { scenario, params, priority })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"scenario\":{},\"priority\":{},\"params\":{{",
+            json_str(&self.scenario),
+            self.priority
+        );
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{}:{}", json_str(k), json_str(v)));
+        }
+        s.push_str("}}");
+        s
+    }
+
+    /// Is `key` explicitly pinned by the submitter?
+    pub fn has_param(&self, key: &str) -> bool {
+        self.params.iter().any(|(k, _)| k == key)
+    }
+}
+
+/// Admission-time validation: the scenario must exist and the overrides
+/// must resolve against its schema. Queues reject here, not at run time.
+pub fn validate(registry: &ScenarioRegistry, req: &JobRequest) -> Result<()> {
+    let scenario = registry.get(&req.scenario)?;
+    scenario.schema().resolve(&req.params)?;
+    Ok(())
+}
+
+/// Run a queued request to its [`Outcome`] — the one place queue
+/// frontends hand work to the engine.
+pub fn execute(registry: &ScenarioRegistry, req: &JobRequest) -> Result<Outcome> {
+    registry.get(&req.scenario)?.run(&req.params)
+}
+
+/// The warm-start overrides a persisted checkpoint implies for `schema`:
+/// `bucket-mb`/`compression` from the checkpoint's chosen point, only
+/// when the schema declares *both* knobs (the emulated-trainer contract)
+/// and the submitter pinned neither. Empty means "no warm start".
+pub fn warm_start_overrides(
+    schema: &ParamSchema,
+    req: &JobRequest,
+    ck: &TunerCheckpoint,
+) -> Vec<(String, String)> {
+    let declares = |key: &str| schema.specs().iter().any(|p| p.name == key);
+    if !declares("bucket-mb") || !declares("compression") {
+        return Vec::new();
+    }
+    if req.has_param("bucket-mb") || req.has_param("compression") {
+        return Vec::new();
+    }
+    vec![
+        ("bucket-mb".to_string(), format!("{}", ck.chosen.bucket_mb)),
+        ("compression".to_string(), compression_value(ck)),
+    ]
+}
+
+/// The `compression` parameter value for a checkpoint ("1" — the
+/// identity ratio — for none, since the param parser has no "none").
+fn compression_value(ck: &TunerCheckpoint) -> String {
+    match &ck.chosen.compression {
+        Compression::None => "1".to_string(),
+        Compression::Ratio(r) => format!("{r}"),
+        Compression::Codec(k) => k.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::KnobPoint;
+
+    #[test]
+    fn submission_body_round_trips() {
+        let req = JobRequest::from_json(
+            r#"{"scenario":"simulate","params":{"workers":"8","model":"vgg16"},"priority":7}"#,
+        )
+        .unwrap();
+        assert_eq!(req.scenario, "simulate");
+        assert_eq!(req.priority, 7);
+        assert!(req.has_param("workers") && !req.has_param("bandwidth"));
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn submission_defaults_and_rejections() {
+        let req = JobRequest::from_json(r#"{"scenario":"fig1"}"#).unwrap();
+        assert_eq!(req.priority, 5);
+        assert!(req.params.is_empty());
+        assert!(JobRequest::from_json(r#"{"params":{}}"#).is_err(), "scenario is required");
+        assert!(JobRequest::from_json(r#"{"scenario":"x","priority":12}"#).is_err());
+        assert!(JobRequest::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_at_admission() {
+        let r = ScenarioRegistry::builtin();
+        let ok = JobRequest {
+            scenario: "simulate".into(),
+            params: vec![("workers".into(), "8".into())],
+            priority: 5,
+        };
+        validate(&r, &ok).unwrap();
+        let unknown = JobRequest { scenario: "nope".into(), params: vec![], priority: 5 };
+        assert!(validate(&r, &unknown).is_err());
+        let bad = JobRequest {
+            scenario: "simulate".into(),
+            params: vec![("bandwidth".into(), "-1".into())],
+            priority: 5,
+        };
+        assert!(validate(&r, &bad).is_err());
+    }
+
+    #[test]
+    fn execute_matches_a_direct_registry_run() {
+        let r = ScenarioRegistry::builtin();
+        let req = JobRequest {
+            scenario: "simulate".into(),
+            params: vec![("workers".into(), "8".into())],
+            priority: 5,
+        };
+        let via_queue = execute(&r, &req).unwrap();
+        let direct = r
+            .get("simulate")
+            .unwrap()
+            .run(&[("workers".to_string(), "8".to_string())])
+            .unwrap();
+        // Identical up to the run's own wall clock.
+        assert_eq!(via_queue.scenario, direct.scenario);
+        assert_eq!(via_queue.params, direct.params);
+        assert_eq!(via_queue.metrics, direct.metrics);
+    }
+
+    #[test]
+    fn warm_start_injects_only_unpinned_declared_knobs() {
+        let r = ScenarioRegistry::builtin();
+        let emulate = r.get("emulate").unwrap();
+        let ck = TunerCheckpoint::from_point(KnobPoint {
+            bucket_mb: 4.0,
+            ..KnobPoint::default_static()
+        });
+        let free = JobRequest { scenario: "emulate".into(), params: vec![], priority: 5 };
+        let inj = warm_start_overrides(emulate.schema(), &free, &ck);
+        assert!(
+            inj.iter().any(|(k, v)| k == "bucket-mb" && v == "4"),
+            "expected bucket-mb=4 in {inj:?}"
+        );
+        assert!(inj.iter().any(|(k, _)| k == "compression"));
+        // Pinning either knob suppresses injection entirely.
+        let pinned = JobRequest {
+            scenario: "emulate".into(),
+            params: vec![("bucket-mb".into(), "16".into())],
+            priority: 5,
+        };
+        assert!(warm_start_overrides(emulate.schema(), &pinned, &ck).is_empty());
+        // A schema without the knobs never warm-starts.
+        let sim = r.get("simulate").unwrap();
+        assert!(warm_start_overrides(sim.schema(), &free, &ck).is_empty());
+        // The injected overrides must actually resolve.
+        let mut warmed = free.clone();
+        warmed.params.extend(warm_start_overrides(emulate.schema(), &free, &ck));
+        validate(&r, &warmed).unwrap();
+    }
+}

@@ -22,9 +22,14 @@
 //!   the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
 //!   `e2e_tcp_smoke`), the three overlap scenarios
 //!   (`overlap_ablation`, `bucket_size_sweep`,
-//!   `scaling_factor_recovered`) and the three autotune scenarios
-//!   (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`);
-//!   `netbn list --markdown` renders it as `docs/SCENARIOS.md`;
+//!   `scaling_factor_recovered`), the three autotune scenarios
+//!   (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`)
+//!   and the two service scenarios (`multi_tenant_contention`,
+//!   `serve_throughput`); `netbn list --markdown` renders it as
+//!   `docs/SCENARIOS.md`;
+//! * [`jobqueue`] — the registry as a job-queue backend: wire-friendly
+//!   [`jobqueue::JobRequest`] submissions, admission-time validation,
+//!   and tuner-checkpoint warm starts (`netbn serve` drives this);
 //! * [`bench`] — the perf-regression gate: collect throughput metrics
 //!   from the gated scenarios and compare against `bench/baseline.json`
 //!   (`netbn bench --compare`);
@@ -36,12 +41,14 @@
 //! dispatch code changes anywhere. See `ENGINE.md` for a worked example.
 
 pub mod bench;
+pub mod jobqueue;
 pub mod outcome;
 pub mod params;
 pub mod registry;
 pub mod runner;
 pub(crate) mod scenarios_hier;
 pub(crate) mod scenarios_overlap;
+pub(crate) mod scenarios_serve;
 pub(crate) mod scenarios_transport;
 pub(crate) mod scenarios_tune;
 pub mod sweep;

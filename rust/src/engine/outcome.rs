@@ -32,6 +32,12 @@ pub struct Outcome {
     pub metrics: Vec<(String, f64)>,
     /// Wall-clock seconds the runner took (filled by `Scenario::run`).
     pub wall_s: f64,
+    /// The autotuner's chosen operating point in [`crate::tune::KnobPoint::spec`]
+    /// form, when the run tuned one. Consumers that persist tuner state
+    /// (`netbn serve`'s results store) read it back via
+    /// `KnobPoint::parse_spec` — unlike the lossy `final_*` metrics, the
+    /// spec round-trips every axis.
+    pub tuned_knobs: Option<String>,
 }
 
 impl Outcome {
@@ -105,6 +111,9 @@ impl Outcome {
             self.passed(),
             json_num(self.wall_s)
         );
+        if let Some(spec) = &self.tuned_knobs {
+            let _ = write!(s, ",\"tuned_knobs\":{}", json_str(spec));
+        }
         s.push_str(",\"params\":{");
         for (i, (k, v)) in self.params.iter().enumerate() {
             if i > 0 {
@@ -179,6 +188,7 @@ mod tests {
             checks: vec![Check::assert("c", true, "d")],
             metrics: vec![("scaling_factor".into(), 0.5), ("bad".into(), f64::NAN)],
             wall_s: 0.25,
+            tuned_knobs: None,
         }
     }
 
@@ -199,6 +209,14 @@ mod tests {
         ] {
             assert!(j.contains(needle), "missing {needle} in {j}");
         }
+    }
+
+    #[test]
+    fn tuned_knobs_serialize_only_when_present() {
+        let mut o = sample();
+        assert!(!o.to_json().contains("tuned_knobs"));
+        o.tuned_knobs = Some("bucket_mb=4;stripes=1".into());
+        assert!(o.to_json().contains("\"tuned_knobs\":\"bucket_mb=4;stripes=1\""));
     }
 
     #[test]

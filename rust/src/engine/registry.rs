@@ -120,8 +120,10 @@ impl ScenarioRegistry {
     /// the three hierarchical scenarios (`hier_vs_flat`, `oversub_sweep`,
     /// `e2e_tcp_smoke`), the three overlap scenarios
     /// (`overlap_ablation`, `bucket_size_sweep`,
-    /// `scaling_factor_recovered`) and the three autotune scenarios
-    /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`).
+    /// `scaling_factor_recovered`), the three autotune scenarios
+    /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`)
+    /// and the two service scenarios (`multi_tenant_contention`,
+    /// `serve_throughput`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -238,6 +240,7 @@ impl ScenarioRegistry {
         super::scenarios_hier::register(&mut r).expect("builtin registration");
         super::scenarios_overlap::register(&mut r).expect("builtin registration");
         super::scenarios_tune::register(&mut r).expect("builtin registration");
+        super::scenarios_serve::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -340,7 +343,7 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 28, "only {} scenarios", r.len());
+        assert!(r.len() >= 30, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
@@ -348,7 +351,7 @@ mod tests {
             "chunk_size_sweep", "fig4_recovered", "utilization_frontier", "hier_vs_flat",
             "oversub_sweep", "e2e_tcp_smoke", "overlap_ablation", "bucket_size_sweep",
             "scaling_factor_recovered", "autotune_convergence", "autotune_vs_static",
-            "autotune_adapt",
+            "autotune_adapt", "multi_tenant_contention", "serve_throughput",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

@@ -188,6 +188,7 @@ impl Runner for EmulateRunner {
         out.metric("network_utilization", r.network_utilization);
         out.metric("buckets_per_step", r.buckets_per_step);
         if let Some(summary) = &r.autotune {
+            out.tuned_knobs = Some(summary.final_knobs.spec());
             out.metric("knob_changes", summary.changes as f64);
             out.metric("final_bucket_mb", summary.final_knobs.bucket_mb);
             out.metric("final_compression_ratio", summary.final_knobs.compression.ratio());

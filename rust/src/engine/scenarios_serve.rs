@@ -1,0 +1,512 @@
+//! Service scenarios: multi-tenant contention and queue throughput.
+//!
+//! * `multi_tenant_contention` — N emulated jobs share one NIC
+//!   ([`Shaper`]) under weighted fair sharing. The claim: priority
+//!   weights protect the high-priority tenant (its step-time degradation
+//!   vs running alone stays within a bound) *while* total NIC
+//!   utilization stays at least the single-job level — contention packs
+//!   the link instead of wasting it. `harness=model` is the analytic
+//!   fluid model (fast, deterministic); `harness=emulate` runs real
+//!   threads against a shared shaper and checks the same two properties
+//!   on measured wall clock;
+//! * `serve_throughput` — a burst of M jobs against W workers through
+//!   the same [`crate::engine::jobqueue`] adapter + [`JobQueue`] the
+//!   daemon uses: submission→completion latency percentiles, makespan,
+//!   jobs/s, and the ordering claim that a single worker drains
+//!   strictly by priority.
+
+use super::outcome::Outcome;
+use super::params::{ParamKind, ParamSchema, ParamSpec, ParamValues};
+use super::registry::{Scenario, ScenarioRegistry};
+use crate::engine::jobqueue::{self, JobRequest};
+use crate::net::shaper::Shaper;
+use crate::report::{Check, Table};
+use crate::serve::queue::JobQueue;
+use crate::topology::{Topology, WorkerId};
+use crate::Result;
+use anyhow::ensure;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Register the service scenarios (called from
+/// [`ScenarioRegistry::builtin`]).
+pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
+    r.register(Scenario::new(
+        "multi_tenant_contention",
+        "N tenants share one NIC: weighted fairness protects the hi-pri tenant without idling the link",
+        ParamSchema::new(vec![
+            ParamSpec::new("harness", "model (analytic fluid shares) or emulate (real threads on a shared Shaper)", ParamKind::Choice(&["model", "emulate"]), "model"),
+            ParamSpec::new("tenants", "concurrent jobs sharing the NIC", ParamKind::Int, "3"),
+            ParamSpec::new("steps", "training steps per tenant", ParamKind::Int, "6"),
+            ParamSpec::new("weights", "per-tenant fair-share weights (first = hi-pri by convention)", ParamKind::FloatList, "4,1,1"),
+            ParamSpec::new("rate-gbps", "shared NIC rate, Gbps", ParamKind::PositiveFloat, "1"),
+            ParamSpec::new("payload-mb", "gradient payload per step, MB", ParamKind::PositiveFloat, "4"),
+            ParamSpec::new("compute-ms", "compute phase per step, ms", ParamKind::PositiveFloat, "20"),
+            ParamSpec::new("max-degradation", "hi-pri step-time bound, × its solo step time", ParamKind::PositiveFloat, "1.6"),
+            ParamSpec::new("min-utilization-frac", "contended aggregate NIC utilization floor, × the solo level", ParamKind::PositiveFloat, "0.9"),
+        ]),
+        Box::new(ContentionRunner),
+    ))?;
+    r.register(Scenario::new(
+        "serve_throughput",
+        "burst of M jobs vs W workers through the job queue: latency percentiles, makespan, priority order",
+        ParamSchema::new(vec![
+            ParamSpec::new("jobs", "burst size M", ParamKind::Int, "8"),
+            ParamSpec::new("workers", "worker threads W", ParamKind::Int, "2"),
+            ParamSpec::new("queue-cap", "queue capacity (must admit the whole burst)", ParamKind::Int, "32"),
+            ParamSpec::new("scenario", "inner scenario each job runs", ParamKind::Str, "simulate"),
+        ]),
+        Box::new(ThroughputRunner),
+    ))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// multi_tenant_contention
+// ---------------------------------------------------------------------------
+
+struct ContentionRunner;
+
+/// Shared, validated parameters for both harnesses.
+struct Contention {
+    tenants: usize,
+    steps: usize,
+    weights: Vec<f64>,
+    /// Shared NIC rate, bytes/second.
+    rate_bps: f64,
+    payload_bytes: u64,
+    compute_s: f64,
+    max_degradation: f64,
+    min_util_frac: f64,
+    /// Index of the high-priority tenant (largest weight).
+    hi: usize,
+}
+
+impl Contention {
+    fn from(p: &ParamValues) -> Result<Contention> {
+        let tenants = p.get_usize("tenants")?;
+        ensure!((2..=16).contains(&tenants), "parameter tenants: must be in 2..=16, got {tenants}");
+        let steps = p.get_usize("steps")?;
+        ensure!(steps >= 2, "parameter steps: must be >= 2, got {steps}");
+        let weights = p.get_f64_list("weights")?;
+        ensure!(
+            weights.len() == tenants,
+            "parameter weights: {} values for {tenants} tenants",
+            weights.len()
+        );
+        let hi = weights
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("non-empty weights");
+        Ok(Contention {
+            tenants,
+            steps,
+            rate_bps: p.get_f64("rate-gbps")? * 1e9 / 8.0,
+            payload_bytes: (p.get_f64("payload-mb")? * 1e6) as u64,
+            compute_s: p.get_f64("compute-ms")? / 1e3,
+            max_degradation: p.get_f64("max-degradation")?,
+            min_util_frac: p.get_f64("min-utilization-frac")?,
+            weights,
+            hi,
+        })
+    }
+
+    /// A tenant's solo step time: compute + full-rate serialization.
+    fn solo_step_s(&self) -> f64 {
+        self.compute_s + self.payload_bytes as f64 / self.rate_bps
+    }
+}
+
+impl super::runner::Runner for ContentionRunner {
+    fn mode(&self) -> &'static str {
+        "serve"
+    }
+
+    fn realtime(&self) -> bool {
+        // The emulate harness sleeps through real compute + wire time.
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let c = Contention::from(p)?;
+        match p.get_str("harness")? {
+            "emulate" => run_contention_emulate(&c),
+            _ => run_contention_model(&c),
+        }
+    }
+}
+
+/// Analytic fluid model: every tenant is always active, so tenant `i`
+/// holds share `w_i / Σw` of the NIC for the whole run.
+fn run_contention_model(c: &Contention) -> Result<Outcome> {
+    let total_w: f64 = c.weights.iter().sum();
+    let solo_step = c.solo_step_s();
+    let solo_util = (c.payload_bytes as f64 / solo_step) / c.rate_bps;
+
+    let mut t = Table::new(
+        format!("{} tenants on one NIC (fluid shares)", c.tenants),
+        &["tenant", "weight", "share", "step s", "degradation", "goodput MB/s"],
+    );
+    let mut agg_bps = 0.0;
+    let mut steps_s = Vec::with_capacity(c.tenants);
+    for (i, w) in c.weights.iter().enumerate() {
+        let share = w / total_w;
+        let step = c.compute_s + c.payload_bytes as f64 / (c.rate_bps * share);
+        let goodput = c.payload_bytes as f64 / step;
+        agg_bps += goodput;
+        steps_s.push(step);
+        t.row(vec![
+            format!("{i}{}", if i == c.hi { " (hi)" } else { "" }),
+            format!("{w}"),
+            format!("{share:.3}"),
+            crate::util::fmt::secs(step),
+            format!("{:.2}x", step / solo_step),
+            format!("{:.1}", goodput / 1e6),
+        ]);
+    }
+    let degradation = steps_s[c.hi] / solo_step;
+    let agg_util = (agg_bps / c.rate_bps).min(1.0);
+
+    let mut out = Outcome::new();
+    contention_outcome(&mut out, c, solo_step, solo_util, degradation, agg_util);
+    out.tables.push(t);
+    Ok(out)
+}
+
+/// Real-thread harness: a solo baseline run, then all tenants together
+/// on one shared [`Shaper`] with per-flow weights, both measured on the
+/// wall clock. Same two checks as the model, on measured numbers.
+fn run_contention_emulate(c: &Contention) -> Result<Outcome> {
+    const LATENCY_S: f64 = 50e-6;
+    let topo = Topology::new(2, 1);
+
+    // Solo baseline: one tenant, the whole NIC.
+    let solo_shaper = Arc::new(Shaper::new(topo, c.rate_bps, LATENCY_S));
+    let flow = solo_shaper.register_flow(c.weights[c.hi]);
+    let t0 = Instant::now();
+    for _ in 0..c.steps {
+        spin_compute(c.compute_s);
+        solo_shaper.admit_weighted(flow, WorkerId(0), WorkerId(1), c.payload_bytes);
+    }
+    let solo_elapsed = t0.elapsed().as_secs_f64();
+    let solo_step = solo_elapsed / c.steps as f64;
+    let solo_util =
+        solo_shaper.counters().total_egress() as f64 / solo_elapsed / c.rate_bps;
+
+    // Contended: every tenant on one fresh shaper, one flow each.
+    let shaper = Arc::new(Shaper::new(topo, c.rate_bps, LATENCY_S));
+    let flows: Vec<_> = c.weights.iter().map(|w| shaper.register_flow(*w)).collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = flows
+        .into_iter()
+        .map(|flow| {
+            let shaper = Arc::clone(&shaper);
+            let (steps, compute_s, payload) = (c.steps, c.compute_s, c.payload_bytes);
+            std::thread::spawn(move || {
+                let start = Instant::now();
+                for _ in 0..steps {
+                    spin_compute(compute_s);
+                    shaper.admit_weighted(flow, WorkerId(0), WorkerId(1), payload);
+                }
+                start.elapsed().as_secs_f64()
+            })
+        })
+        .collect();
+    let elapsed: Vec<f64> =
+        handles.into_iter().map(|h| h.join().expect("tenant thread")).collect();
+    let makespan = t0.elapsed().as_secs_f64();
+    let agg_util = shaper.counters().total_egress() as f64 / makespan / c.rate_bps;
+    let degradation = (elapsed[c.hi] / c.steps as f64) / solo_step;
+
+    let mut t = Table::new(
+        format!("{} tenants on one emulated NIC (measured)", c.tenants),
+        &["tenant", "weight", "steps", "elapsed", "step s", "degradation"],
+    );
+    for (i, e) in elapsed.iter().enumerate() {
+        t.row(vec![
+            format!("{i}{}", if i == c.hi { " (hi)" } else { "" }),
+            format!("{}", c.weights[i]),
+            c.steps.to_string(),
+            crate::util::fmt::secs(*e),
+            crate::util::fmt::secs(e / c.steps as f64),
+            format!("{:.2}x", (e / c.steps as f64) / solo_step),
+        ]);
+    }
+
+    let mut out = Outcome::new();
+    contention_outcome(&mut out, c, solo_step, solo_util, degradation, agg_util);
+    out.metric("makespan_s", makespan);
+    out.tables.push(t);
+    Ok(out)
+}
+
+/// Busy-wait compute stand-in. Sleeping would free the core, but the
+/// emulate harness wants the compute phase on the wall clock regardless
+/// of scheduler granularity; a spin keeps short phases honest.
+fn spin_compute(seconds: f64) {
+    if seconds <= 0.0 {
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}
+
+/// The metrics + the two CHECKED claims, shared by both harnesses.
+fn contention_outcome(
+    out: &mut Outcome,
+    c: &Contention,
+    solo_step: f64,
+    solo_util: f64,
+    degradation: f64,
+    agg_util: f64,
+) {
+    out.metric("solo_step_s", solo_step);
+    out.metric("solo_utilization", solo_util);
+    out.metric("hi_pri_degradation", degradation);
+    out.metric("aggregate_utilization", agg_util);
+    out.metric("tenants", c.tenants as f64);
+    out.checks.push(Check::assert(
+        "hi-pri tenant's step-time degradation stays within the bound",
+        degradation <= c.max_degradation,
+        format!(
+            "hi-pri {:.2}x its solo step {} (bound {:.2}x; weights {:?})",
+            degradation,
+            crate::util::fmt::secs(solo_step),
+            c.max_degradation,
+            c.weights
+        ),
+    ));
+    out.checks.push(Check::assert(
+        "contended aggregate NIC utilization at least the single-job level",
+        agg_util >= c.min_util_frac * solo_util,
+        format!(
+            "aggregate {:.1}% vs solo {:.1}% (floor {:.0}% of solo): sharing must pack the link, not idle it",
+            agg_util * 100.0,
+            solo_util * 100.0,
+            c.min_util_frac * 100.0
+        ),
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// serve_throughput
+// ---------------------------------------------------------------------------
+
+struct ThroughputRunner;
+
+impl super::runner::Runner for ThroughputRunner {
+    fn mode(&self) -> &'static str {
+        "serve"
+    }
+
+    fn realtime(&self) -> bool {
+        // Latencies are wall-clock measurements over real threads.
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let jobs = p.get_usize("jobs")?;
+        ensure!((2..=256).contains(&jobs), "parameter jobs: must be in 2..=256, got {jobs}");
+        let workers = p.get_usize("workers")?;
+        ensure!((1..=32).contains(&workers), "parameter workers: must be in 1..=32, got {workers}");
+        let cap = p.get_usize("queue-cap")?;
+        ensure!(cap >= jobs, "parameter queue-cap: must admit the burst ({cap} < {jobs})");
+        let inner = p.get_str("scenario")?.to_string();
+        ensure!(
+            inner != "serve_throughput" && inner != "multi_tenant_contention",
+            "parameter scenario: {inner:?} would recurse into the service scenarios"
+        );
+        let registry = ScenarioRegistry::builtin();
+        let request = |priority: u8| JobRequest {
+            scenario: inner.clone(),
+            params: Vec::new(),
+            priority,
+        };
+        jobqueue::validate(&registry, &request(5))?;
+
+        // Burst phase: M jobs land at t0, W workers drain them. Each
+        // completion records (job id, submission→done latency).
+        let queue = Arc::new(JobQueue::new(cap, workers));
+        let done: Arc<Mutex<Vec<(u64, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let t0 = Instant::now();
+        let pool: Vec<_> = (0..workers)
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let done = Arc::clone(&done);
+                let inner = inner.clone();
+                std::thread::spawn(move || {
+                    let registry = ScenarioRegistry::builtin();
+                    let req =
+                        JobRequest { scenario: inner, params: Vec::new(), priority: 5 };
+                    while let Some(id) = queue.pop() {
+                        let outcome = jobqueue::execute(&registry, &req);
+                        let ok = outcome.is_ok();
+                        done.lock().unwrap().push((id, t0.elapsed().as_secs_f64()));
+                        assert!(ok, "inner scenario failed mid-burst");
+                    }
+                })
+            })
+            .collect();
+        for id in 0..jobs as u64 {
+            queue
+                .push(id, (id % 10) as u8)
+                .map_err(|e| anyhow::anyhow!("burst admission failed: {e:?}"))?;
+        }
+        while done.lock().unwrap().len() < jobs {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        queue.close();
+        for h in pool {
+            h.join().expect("worker thread");
+        }
+        let mut latencies: Vec<f64> =
+            done.lock().unwrap().iter().map(|(_, l)| *l).collect();
+        let completed = latencies.len();
+        latencies.sort_by(f64::total_cmp);
+        let makespan = latencies.last().copied().unwrap_or(0.0);
+        let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+
+        // Ordering phase: pre-fill, then let ONE worker drain — the pops
+        // must come out in strict priority order (FIFO within a level).
+        let q2 = JobQueue::new(cap, 1);
+        let priorities: Vec<u8> = (0..jobs).map(|i| ((i * 7 + 3) % 10) as u8).collect();
+        for (id, pri) in priorities.iter().enumerate() {
+            q2.push(id as u64, *pri).map_err(|e| anyhow::anyhow!("admission failed: {e:?}"))?;
+        }
+        let mut drained_pri = Vec::with_capacity(jobs);
+        while let Some(id) = {
+            if q2.is_empty() {
+                None
+            } else {
+                q2.pop()
+            }
+        } {
+            drained_pri.push(priorities[id as usize]);
+        }
+        let ordered = drained_pri.windows(2).all(|w| w[0] >= w[1]);
+
+        let mut out = Outcome::new();
+        out.metric("jobs", jobs as f64);
+        out.metric("workers", workers as f64);
+        out.metric("p50_latency_s", pct(0.50));
+        out.metric("p95_latency_s", pct(0.95));
+        out.metric("makespan_s", makespan);
+        out.metric("jobs_per_s", completed as f64 / makespan.max(1e-9));
+        out.checks.push(Check::assert(
+            "every burst job completed (none lost, none failed)",
+            completed == jobs,
+            format!("{completed} of {jobs} jobs finished in {}", crate::util::fmt::secs(makespan)),
+        ));
+        out.checks.push(Check::assert(
+            "a single worker drains strictly in priority order",
+            ordered && drained_pri.len() == jobs,
+            format!("drain order {drained_pri:?}"),
+        ));
+        let mut t = Table::new(
+            format!("burst of {jobs} '{inner}' jobs over {workers} workers"),
+            &["percentile", "latency"],
+        );
+        for (label, q) in [("p50", 0.50), ("p90", 0.90), ("p95", 0.95), ("max", 1.0)] {
+            t.row(vec![label.to_string(), crate::util::fmt::secs(pct(q))]);
+        }
+        out.tables.push(t);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn contention_model_passes_with_defaults() {
+        let out =
+            ScenarioRegistry::builtin().get("multi_tenant_contention").unwrap().run(&[]).unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        // With weights 4,1,1 the hi tenant holds 2/3 of the NIC: visibly
+        // degraded vs solo but far under an even 3-way split.
+        let d = out.metric_value("hi_pri_degradation").unwrap();
+        assert!(d > 1.0 && d < 1.6, "degradation {d}");
+        // Contention must *raise* aggregate utilization over one job.
+        assert!(
+            out.metric_value("aggregate_utilization").unwrap()
+                > out.metric_value("solo_utilization").unwrap()
+        );
+    }
+
+    #[test]
+    fn contention_model_flags_a_starved_hi_tenant() {
+        // Equal weights across 8 tenants: the "hi" tenant gets 1/8 of the
+        // NIC and blows any reasonable degradation bound.
+        let out = ScenarioRegistry::builtin()
+            .get("multi_tenant_contention")
+            .unwrap()
+            .run(&kv(&[
+                ("tenants", "8"),
+                ("weights", "1,1,1,1,1,1,1,1"),
+                ("max-degradation", "1.5"),
+            ]))
+            .unwrap();
+        assert!(!out.passed(), "equal 8-way sharing must violate the hi-pri bound");
+    }
+
+    #[test]
+    fn contention_emulate_measures_the_same_claims() {
+        // Small real run: 2 tenants, 3:1 weights, ~1 MB payloads.
+        let out = ScenarioRegistry::builtin()
+            .get("multi_tenant_contention")
+            .unwrap()
+            .run(&kv(&[
+                ("harness", "emulate"),
+                ("tenants", "2"),
+                ("steps", "4"),
+                ("weights", "3,1"),
+                ("payload-mb", "1"),
+                ("compute-ms", "5"),
+                ("max-degradation", "1.7"),
+                ("min-utilization-frac", "0.8"),
+            ]))
+            .unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert!(out.metric_value("makespan_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn contention_rejects_mismatched_weights() {
+        let err = ScenarioRegistry::builtin()
+            .get("multi_tenant_contention")
+            .unwrap()
+            .run(&kv(&[("tenants", "3"), ("weights", "1,2")]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("weights"), "{err}");
+    }
+
+    #[test]
+    fn throughput_burst_completes_and_orders() {
+        let out = ScenarioRegistry::builtin()
+            .get("serve_throughput")
+            .unwrap()
+            .run(&kv(&[("jobs", "6"), ("workers", "2")]))
+            .unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert_eq!(out.metric_value("jobs").unwrap(), 6.0);
+        assert!(out.metric_value("p95_latency_s").unwrap() >= out.metric_value("p50_latency_s").unwrap());
+    }
+
+    #[test]
+    fn throughput_rejects_recursion_and_tiny_queues() {
+        let r = ScenarioRegistry::builtin();
+        let s = r.get("serve_throughput").unwrap();
+        assert!(s.run(&kv(&[("scenario", "serve_throughput")])).is_err());
+        assert!(s.run(&kv(&[("jobs", "8"), ("queue-cap", "4")])).is_err());
+    }
+}

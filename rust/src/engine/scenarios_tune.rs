@@ -186,6 +186,7 @@ impl super::runner::Runner for ConvergenceRunner {
         out.metric("steps_to_converge", converged.unwrap_or(max_steps) as f64);
         out.metric("knob_changes", tuner.trajectory().len().saturating_sub(1) as f64);
         out.metric("space_points", space.len() as f64);
+        out.tuned_knobs = Some(tuned.spec());
         knob_metrics(&mut out, "final", &tuned);
         out.checks.push(Check::assert(
             "tuner reached the exploit phase within the step budget",
@@ -431,6 +432,7 @@ fn run_adapt_model(p: &ParamValues) -> Result<Outcome> {
     out.metric("reprobe_detect_steps", reprobe_used as f64);
     out.metric("probe_phases", tuner.probe_phases() as f64);
     out.metric("drop_at_step", drop_step as f64);
+    out.tuned_knobs = Some(final_chosen.spec());
     knob_metrics(&mut out, "final", &final_chosen);
     out.checks.push(Check::assert(
         "tuner converged before the drop",

@@ -42,6 +42,7 @@
 //! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
 //! | mode | [`figures`] | per-figure experiment drivers (Fig 1–8) |
 //! | engine | [`engine`] | `Scenario` / `Runner` / `Outcome` / `ScenarioRegistry` / `SweepBuilder` — every experiment as a named, parameterized, sweepable scenario (see ENGINE.md) |
+//! | service | [`serve`] | `netbn serve`: persistent multi-tenant experiment daemon — std-only HTTP/1.1, bounded priority queue with admission control, worker pool over the engine, live telemetry, store-backed restart + tuner warm starts |
 //!
 //! New workloads register as [`engine`] scenarios rather than growing
 //! `main.rs`; the CLI (`netbn list` / `run` / `sweep`) is registry-driven.
@@ -58,6 +59,7 @@ pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod topology;
 pub mod trainer;

@@ -3,7 +3,9 @@
 //! figures, run emulated or real training, calibrate cost tables, validate
 //! emulator vs simulator. The pre-engine subcommands (`fig`, `simulate`,
 //! `emulate`, `validate`, `ablate`) remain as thin aliases over the
-//! [`netbn::engine::ScenarioRegistry`], with unchanged CSV output.
+//! [`netbn::engine::ScenarioRegistry`], with unchanged CSV output. The
+//! service face (`serve` / `submit` / `jobs` / `watch`) runs the same
+//! registry behind a persistent HTTP daemon ([`netbn::serve`]).
 
 use netbn::cli::{App, Args, CmdSpec, OptSpec, Parsed};
 use netbn::engine::{ScenarioRegistry, SweepBuilder, SweepPoint};
@@ -190,8 +192,42 @@ fn app() -> App {
                     OptSpec::optional("compare", "baseline JSON to gate against (bench/baseline.json)"),
                     OptSpec::value("tolerance", "allowed fractional regression", "0.2"),
                     OptSpec::value("e2e-runs", "launch-probe repetitions for e2e.busbw mean/stddev", "3"),
+                    OptSpec::optional("store", "append this run to <store>/bench_history.jsonl"),
                 ],
                 positional: vec![],
+            },
+            CmdSpec {
+                name: "serve",
+                about: "run the persistent experiment daemon (HTTP job queue over the engine)",
+                opts: vec![
+                    OptSpec::value("port", "TCP port to listen on (0 = pick a free port)", "7070"),
+                    OptSpec::value("workers", "worker threads draining the job queue", "2"),
+                    OptSpec::value("queue-cap", "max queued jobs before submissions get 429", "32"),
+                    OptSpec::value("store", "job-record + tuner-checkpoint store directory", ".netbn-store"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "submit",
+                about: "submit one scenario to a running `netbn serve` daemon",
+                opts: vec![
+                    OptSpec::repeated("param", "override one parameter (k=v)"),
+                    OptSpec::value("priority", "scheduling priority 0-9 (higher drains first)", "5"),
+                    OptSpec::value("host", "daemon address", "127.0.0.1:7070"),
+                ],
+                positional: vec![("scenario", "scenario name (see `netbn list`)")],
+            },
+            CmdSpec {
+                name: "jobs",
+                about: "list the jobs a running `netbn serve` daemon knows about",
+                opts: vec![OptSpec::value("host", "daemon address", "127.0.0.1:7070")],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "watch",
+                about: "stream one job's live telemetry until it finishes",
+                opts: vec![OptSpec::value("host", "daemon address", "127.0.0.1:7070")],
+                positional: vec![("id", "job id (from `netbn submit`)")],
             },
             CmdSpec {
                 name: "info",
@@ -238,6 +274,10 @@ fn run(argv: &[String]) -> Result<bool> {
             "_worker" => cmd_worker(&args),
             "tune" => cmd_tune(&args),
             "bench" => cmd_bench(&registry, &args),
+            "serve" => cmd_serve(&args),
+            "submit" => cmd_submit(&args),
+            "jobs" => cmd_jobs(&args),
+            "watch" => cmd_watch(&args),
             "info" => cmd_info(),
             other => anyhow::bail!("unhandled command {other}"),
         },
@@ -806,6 +846,12 @@ fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
         std::fs::write(path, report.to_json())?;
         println!("  -> {path}");
     }
+    // Record the run before gating: a regressed run is exactly the one
+    // worth having in the trend line.
+    if let Some(store) = args.get("store") {
+        let path = bench::append_history(&report, std::path::Path::new(store))?;
+        println!("  -> {} (history appended)", path.display());
+    }
     let Some(baseline_path) = args.get("compare") else {
         return Ok(true);
     };
@@ -821,6 +867,89 @@ fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
     let cmp = bench::compare(&report.metrics, &baseline, tolerance);
     println!("{}", cmp.render(baseline_path, tolerance));
     Ok(cmp.ok())
+}
+
+fn cmd_serve(args: &Args) -> Result<bool> {
+    let port = args.get_usize("port", 7070)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port must fit in 16 bits, got {port}");
+    let workers = args.get_usize("workers", 2)?;
+    anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+    let queue_capacity = args.get_usize("queue-cap", 32)?;
+    anyhow::ensure!(queue_capacity >= 1, "--queue-cap must be >= 1");
+    let cfg = netbn::serve::ServeConfig {
+        port: port as u16,
+        workers,
+        queue_capacity,
+        store_dir: PathBuf::from(args.get_or("store", ".netbn-store")),
+    };
+    netbn::serve::run_serve(&cfg)?;
+    Ok(true)
+}
+
+fn cmd_submit(args: &Args) -> Result<bool> {
+    use netbn::engine::jobqueue::JobRequest;
+    let scenario = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: netbn submit <scenario> [--param k=v ...] [--host h:p]")
+    })?;
+    let params = args.get_kv_multi("param")?;
+    ensure_unique_keys("param", &params)?;
+    let priority = args.get_usize("priority", 5)?;
+    anyhow::ensure!(priority <= 9, "--priority must be 0..=9, got {priority}");
+    let req = JobRequest { scenario: scenario.clone(), params, priority: priority as u8 };
+    let host = args.get_or("host", "127.0.0.1:7070");
+    let (status, body) = netbn::serve::http::request(host, "POST", "/jobs", Some(&req.to_json()))?;
+    println!("{body}");
+    if status != 202 {
+        eprintln!("submit rejected: HTTP {status}");
+    }
+    Ok(status == 202)
+}
+
+fn cmd_jobs(args: &Args) -> Result<bool> {
+    let host = args.get_or("host", "127.0.0.1:7070");
+    let (status, body) = netbn::serve::http::request(host, "GET", "/jobs", None)?;
+    anyhow::ensure!(status == 200, "GET /jobs: HTTP {status}: {body}");
+    println!("{body}");
+    Ok(true)
+}
+
+/// Long-poll `/jobs/<id>/feedback`, printing each telemetry sample as it
+/// lands, then print the final record. Passes when the job reached
+/// `done` (not cancelled/failed).
+fn cmd_watch(args: &Args) -> Result<bool> {
+    use netbn::util::json;
+    let id_s = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: netbn watch <job-id> [--host h:p]"))?;
+    let id: u64 = id_s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("job id must be an integer, got {id_s:?}"))?;
+    let host = args.get_or("host", "127.0.0.1:7070");
+    let mut since = 0u64;
+    loop {
+        let path = format!("/jobs/{id}/feedback?since={since}&timeout=10");
+        let (status, body) = netbn::serve::http::request(host, "GET", &path, None)?;
+        anyhow::ensure!(status == 200, "GET {path}: HTTP {status}: {body}");
+        // Samples arrive one per line (the daemon formats them that way
+        // for exactly this consumer and `curl -N`).
+        for line in body.lines() {
+            let line = line.trim().trim_end_matches(|c| c == ',' || c == ']');
+            if line.starts_with('{') && line.contains("\"step\"") {
+                println!("{line}");
+            }
+        }
+        let fields = json::object_fields(&body)?;
+        since = json::parse_u64(json::require(&fields, "next")?)?;
+        if json::parse_bool(json::require(&fields, "done")?)? {
+            break;
+        }
+    }
+    let (status, body) = netbn::serve::http::request(host, "GET", &format!("/jobs/{id}"), None)?;
+    anyhow::ensure!(status == 200, "GET /jobs/{id}: HTTP {status}: {body}");
+    println!("{body}");
+    let state = json::parse_string(json::require(&json::object_fields(&body)?, "state")?)?;
+    Ok(state == "done")
 }
 
 fn cmd_info() -> Result<bool> {

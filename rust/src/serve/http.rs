@@ -1,0 +1,344 @@
+//! Minimal HTTP/1.1 over `std::net` — just enough protocol for the job
+//! service, since the offline build has no axum/hyper/tokio.
+//!
+//! This is a deliberate sibling of the length-prefixed frame codec in
+//! [`crate::net::tcp`], not a layer over it: the service speaks plain
+//! HTTP so `curl` works against it. Scope: one request per connection
+//! (`Connection: close`), `Content-Length` bodies in both directions,
+//! chunked transfer encoding on responses (used by the long-poll
+//! feedback route), no pipelining, no TLS. The client half
+//! ([`request`]) is what `netbn submit|jobs|watch` and the test suite
+//! use; it decodes both body framings.
+
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Caps keep a misbehaving peer from ballooning memory.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/jobs/3/feedback`.
+    pub path: String,
+    /// Decoded `k=v` query pairs (no percent-decoding — the API's query
+    /// values are plain numbers).
+    pub query: Vec<(String, String)>,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn query_u64(&self, key: &str) -> Option<u64> {
+        self.query.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.parse().ok())
+    }
+
+    pub fn query_f64(&self, key: &str) -> Option<f64> {
+        self.query.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.parse().ok())
+    }
+
+    fn header(&self, key: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(key))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Path segments, e.g. `/jobs/3/feedback` → `["jobs", "3", "feedback"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// Read and parse one request from `stream` (which should carry a read
+/// timeout so a stalled peer cannot pin a handler thread forever).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("reading request head")?;
+        ensure!(n > 0, "connection closed before a full request head");
+        head.push_str(&line);
+        ensure!(head.len() <= MAX_HEADER_BYTES, "request head exceeds {MAX_HEADER_BYTES} bytes");
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let mut lines = head.lines();
+    let request_line = lines.next().context("empty request")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing request target")?;
+    let version = parts.next().context("missing HTTP version")?;
+    ensure!(version.starts_with("HTTP/1."), "unsupported protocol {version:?}");
+
+    let (path, query_raw) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.to_string(), ""),
+    };
+    let query = query_raw
+        .split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (pair.to_string(), String::new()),
+        })
+        .collect();
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let mut req = Request { method, path, query, headers, body: String::new() };
+    let content_length = match req.header("content-length") {
+        Some(v) => v.parse::<usize>().context("bad Content-Length")?,
+        None => 0,
+    };
+    ensure!(content_length <= MAX_BODY_BYTES, "request body exceeds {MAX_BODY_BYTES} bytes");
+    if content_length > 0 {
+        let mut buf = vec![0u8; content_length];
+        reader.read_exact(&mut buf).context("reading request body")?;
+        req.body = String::from_utf8(buf).context("request body is not UTF-8")?;
+    }
+    Ok(req)
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+/// One response, always `Connection: close`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+    /// Send the body with chunked transfer encoding (one chunk per line)
+    /// instead of `Content-Length`.
+    pub chunked: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, headers: Vec::new(), body: body.into(), chunked: false }
+    }
+
+    /// A JSON error payload `{"error": …}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(status, format!("{{\"error\":{}}}", crate::report::json_str(message)))
+    }
+
+    pub fn header(mut self, key: &str, value: impl Into<String>) -> Response {
+        self.headers.push((key.to_string(), value.into()));
+        self
+    }
+
+    pub fn chunked(mut self) -> Response {
+        self.chunked = true;
+        self
+    }
+
+    pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status)
+        );
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        if self.chunked {
+            head.push_str("Transfer-Encoding: chunked\r\n\r\n");
+            stream.write_all(head.as_bytes())?;
+            // One chunk per body line keeps the framing observable in
+            // tests without fragmenting tiny payloads byte-by-byte.
+            for line in self.body.split_inclusive('\n') {
+                stream
+                    .write_all(format!("{:x}\r\n{line}\r\n", line.len()).as_bytes())?;
+            }
+            stream.write_all(b"0\r\n\r\n")?;
+        } else {
+            head.push_str(&format!("Content-Length: {}\r\n\r\n", self.body.len()));
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(self.body.as_bytes())?;
+        }
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+/// Blocking HTTP client for the service API: send `method path` with an
+/// optional JSON body to `addr` (`host:port`), return `(status, body)`.
+/// Decodes both `Content-Length` and chunked response bodies.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {status_line:?}"))?;
+
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.parse().context("bad Content-Length")?);
+            } else if k.eq_ignore_ascii_case("transfer-encoding")
+                && v.eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+
+    let body = if chunked {
+        let mut out = Vec::new();
+        loop {
+            let mut size_line = String::new();
+            ensure!(reader.read_line(&mut size_line)? > 0, "truncated chunked body");
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .with_context(|| format!("bad chunk size {size_line:?}"))?;
+            if size == 0 {
+                break;
+            }
+            ensure!(out.len() + size <= MAX_BODY_BYTES, "chunked body too large");
+            let mut chunk = vec![0u8; size + 2]; // data + trailing CRLF
+            reader.read_exact(&mut chunk)?;
+            out.extend_from_slice(&chunk[..size]);
+        }
+        out
+    } else if let Some(len) = content_length {
+        ensure!(len <= MAX_BODY_BYTES, "response body too large");
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        buf
+    } else {
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        ensure!(buf.len() <= MAX_BODY_BYTES, "response body too large");
+        buf
+    };
+    match String::from_utf8(body) {
+        Ok(s) => Ok((status, s)),
+        Err(_) => bail!("response body is not UTF-8"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run `server` against one accepted connection while the client
+    /// half of the test drives `request` against it.
+    fn with_server<F>(server: F) -> String
+    where
+        F: FnOnce(&mut TcpStream) + Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            server(&mut s);
+        });
+        format!("{addr}")
+    }
+
+    #[test]
+    fn parses_request_line_query_headers_and_body() {
+        let addr = with_server(|s| {
+            let req = read_request(s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/jobs/7/feedback");
+            assert_eq!(req.segments(), vec!["jobs", "7", "feedback"]);
+            assert_eq!(req.query_u64("since"), Some(42));
+            assert_eq!(req.query_f64("timeout"), Some(1.5));
+            assert_eq!(req.body, "{\"k\":\"v\"}");
+            Response::json(200, "{}").write_to(s).unwrap();
+        });
+        let (status, body) =
+            request(&addr, "POST", "/jobs/7/feedback?since=42&timeout=1.5", Some("{\"k\":\"v\"}"))
+                .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{}");
+    }
+
+    #[test]
+    fn chunked_responses_reassemble() {
+        let payload = "{\"a\":1,\n\"b\":[2,3],\n\"c\":\"end\"}";
+        let addr = with_server(move |s| {
+            read_request(s).unwrap();
+            Response::json(200, payload).chunked().write_to(s).unwrap();
+        });
+        let (status, body) = request(&addr, "GET", "/stream", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload);
+    }
+
+    #[test]
+    fn error_responses_carry_status_and_header() {
+        let addr = with_server(|s| {
+            read_request(s).unwrap();
+            Response::error(429, "queue full").header("Retry-After", "2").write_to(s).unwrap();
+        });
+        let (status, body) = request(&addr, "POST", "/jobs", Some("{}")).unwrap();
+        assert_eq!(status, 429);
+        assert!(body.contains("queue full"), "{body}");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_request(&mut s).is_err()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        drop(c);
+        assert!(h.join().unwrap(), "garbage must not parse as a request");
+    }
+}

@@ -1,0 +1,189 @@
+//! The job model: what one submission is, through its whole lifecycle.
+//!
+//! State machine: `Queued → Running → Done | Failed`, with `Cancelled`
+//! reachable only from `Queued` (a running scenario has no preemption
+//! point — `DELETE /jobs/<id>` on a running job is a 409). Records
+//! serialize to the same JSON the HTTP API serves and the store
+//! persists, so a daemon restart reloads exactly what a client saw.
+
+use crate::engine::jobqueue::JobRequest;
+use crate::report::json_str;
+use crate::util::json;
+use crate::Result;
+use anyhow::{bail, Context};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            other => bail!("unknown job state {other:?}"),
+        })
+    }
+
+    /// Terminal states never change again (what a poller waits for).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One job, from submission to terminal state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    pub id: u64,
+    pub request: JobRequest,
+    pub state: JobState,
+    /// Did the service inject warm-start overrides from a persisted
+    /// tuner checkpoint?
+    pub warm_started: bool,
+    /// Failure message (state == Failed) or cancellation note.
+    pub error: Option<String>,
+    /// The finished run's `Outcome::to_json` output, verbatim.
+    pub outcome_json: Option<String>,
+}
+
+impl JobRecord {
+    pub fn new(id: u64, request: JobRequest) -> JobRecord {
+        JobRecord {
+            id,
+            request,
+            state: JobState::Queued,
+            warm_started: false,
+            error: None,
+            outcome_json: None,
+        }
+    }
+
+    /// Full record JSON — the `GET /jobs/<id>` body and the store's
+    /// on-disk format. The outcome is embedded raw (it is already JSON).
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"id\":{},\"scenario\":{},\"state\":{},\"priority\":{},\"warm_started\":{}",
+            self.id,
+            json_str(&self.request.scenario),
+            json_str(self.state.as_str()),
+            self.request.priority,
+            self.warm_started
+        );
+        s.push_str(",\"params\":{");
+        for (i, (k, v)) in self.request.params.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{}:{}", json_str(k), json_str(v)));
+        }
+        s.push('}');
+        if let Some(e) = &self.error {
+            s.push_str(&format!(",\"error\":{}", json_str(e)));
+        }
+        if let Some(o) = &self.outcome_json {
+            s.push_str(&format!(",\"outcome\":{o}"));
+        }
+        s.push('}');
+        s
+    }
+
+    /// One-line summary for `GET /jobs` listings.
+    pub fn to_json_brief(&self) -> String {
+        format!(
+            "{{\"id\":{},\"scenario\":{},\"state\":{},\"priority\":{}}}",
+            self.id,
+            json_str(&self.request.scenario),
+            json_str(self.state.as_str()),
+            self.request.priority
+        )
+    }
+
+    pub fn from_json(text: &str) -> Result<JobRecord> {
+        let fields = json::object_fields(text).context("malformed job record")?;
+        let params = match json::get(&fields, "params") {
+            Some(raw) => json::parse_str_map(raw)?,
+            None => Vec::new(),
+        };
+        Ok(JobRecord {
+            id: json::parse_u64(json::require(&fields, "id")?)?,
+            request: JobRequest {
+                scenario: json::parse_string(json::require(&fields, "scenario")?)?,
+                params,
+                priority: json::parse_u64(json::require(&fields, "priority")?)? as u8,
+            },
+            state: JobState::parse(&json::parse_string(json::require(&fields, "state")?)?)?,
+            warm_started: json::parse_bool(json::require(&fields, "warm_started")?)?,
+            error: match json::get(&fields, "error") {
+                Some(raw) => Some(json::parse_string(raw)?),
+                None => None,
+            },
+            outcome_json: json::get(&fields, "outcome").map(|s| s.to_string()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_round_trips_with_embedded_outcome() {
+        let mut r = JobRecord::new(
+            12,
+            JobRequest {
+                scenario: "emulate".into(),
+                params: vec![("servers".into(), "2".into())],
+                priority: 9,
+            },
+        );
+        r.state = JobState::Done;
+        r.warm_started = true;
+        r.outcome_json =
+            Some("{\"scenario\":\"emulate\",\"passed\":true,\"metrics\":{\"x\":1}}".into());
+        let back = JobRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // The embedded outcome comes back byte-for-byte.
+        assert_eq!(back.outcome_json, r.outcome_json);
+    }
+
+    #[test]
+    fn states_round_trip_and_classify() {
+        for s in
+            [JobState::Queued, JobState::Running, JobState::Done, JobState::Failed, JobState::Cancelled]
+        {
+            assert_eq!(JobState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(JobState::parse("zombie").is_err());
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+    }
+
+    #[test]
+    fn error_strings_survive_escaping() {
+        let mut r = JobRecord::new(1, JobRequest { scenario: "x".into(), params: vec![], priority: 0 });
+        r.state = JobState::Failed;
+        r.error = Some("line1\nline2 \"quoted\" \\ backslash".into());
+        let back = JobRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.error, r.error);
+    }
+}

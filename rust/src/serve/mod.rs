@@ -1,0 +1,391 @@
+//! `netbn serve` — a persistent, multi-tenant experiment service.
+//!
+//! The daemon accepts scenario submissions over HTTP, runs them on a
+//! bounded worker pool with admission control and per-job priorities,
+//! streams live telemetry, and persists results + tuner state so a
+//! restarted daemon picks up where it left off (resubmitted jobs
+//! warm-start from the stored [`crate::tune::TunerCheckpoint`]).
+//!
+//! ```text
+//! POST   /jobs               submit {"scenario","params","priority"} → 202 | 429
+//! GET    /jobs               list all job records (brief)
+//! GET    /jobs/<id>          one full record (embedded outcome when done)
+//! GET    /jobs/<id>/outcome  the raw Outcome JSON alone → 200 | 409 | 404
+//! GET    /jobs/<id>/feedback?since=N&timeout=S   long-poll telemetry (chunked)
+//! DELETE /jobs/<id>          cancel a still-queued job → 200 | 409 | 404
+//! GET    /healthz            liveness + load
+//! ```
+//!
+//! Module map: [`http`] is the std-only HTTP/1.1 layer, [`queue`] the
+//! bounded priority queue, [`state`] the job table + lifecycle,
+//! [`workers`] the pool draining into [`crate::engine::jobqueue`],
+//! [`telemetry`] the per-job feedback rings, [`store`] the on-disk
+//! results + tuner persistence, [`job`] the record model.
+
+pub mod http;
+pub mod job;
+pub mod queue;
+pub mod state;
+pub mod store;
+pub mod telemetry;
+pub mod workers;
+
+pub use job::{JobRecord, JobState};
+pub use queue::{JobQueue, QueueFull};
+pub use state::{CancelError, ServeState};
+pub use store::Store;
+pub use telemetry::TelemetryHub;
+pub use workers::WorkerPool;
+
+use crate::engine::jobqueue::{self, JobRequest};
+use crate::engine::ScenarioRegistry;
+use crate::tune::StepFeedback;
+use crate::util::signal;
+use crate::Result;
+use anyhow::Context;
+use http::{Request, Response};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How the daemon is wired up (`netbn serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP port to listen on (0 picks a free port — used by tests).
+    pub port: u16,
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Max jobs waiting in the queue before admissions get a 429.
+    pub queue_capacity: usize,
+    /// Store directory for job records + tuner checkpoints.
+    pub store_dir: PathBuf,
+}
+
+/// Poll cadence of the (non-blocking) accept loop and the signal loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Per-connection read timeout so a stalled peer cannot pin a handler.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Long-poll ceiling for the feedback route.
+const MAX_POLL_S: f64 = 30.0;
+
+/// A running daemon: accept loop + worker pool over one [`ServeState`].
+pub struct Daemon {
+    state: Arc<ServeState>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pool: Option<WorkerPool>,
+}
+
+impl Daemon {
+    /// Bind, reload the store, spawn workers, start accepting.
+    pub fn start(cfg: &ServeConfig) -> Result<Daemon> {
+        let store = Store::open(&cfg.store_dir)?;
+        let state = Arc::new(ServeState::new(store, cfg.queue_capacity, cfg.workers)?);
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding port {}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let pool = WorkerPool::start(cfg.workers, Arc::clone(&state));
+        let accept_thread = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("serve-accept".to_string())
+                .spawn(move || accept_loop(&listener, &state, &stop))
+                .context("spawning accept loop")?
+        };
+        Ok(Daemon { state, addr, stop, accept_thread: Some(accept_thread), pool: Some(pool) })
+    }
+
+    /// Where the daemon is listening (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Graceful shutdown: stop accepting, cancel everything still
+    /// queued, drain running jobs, flush the store. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.state.begin_shutdown();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, state: &Arc<ServeState>, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = Arc::clone(state);
+                // Handlers are short-lived (bounded by READ_TIMEOUT and
+                // the long-poll ceiling); detach rather than track.
+                let _ = std::thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || handle_connection(stream, &state));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServeState) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let response = match http::read_request(&mut stream) {
+        Ok(req) => route(&req, state),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    let _ = response.write_to(&mut stream);
+}
+
+/// Dispatch one request. Pure request → response; all state transitions
+/// go through [`ServeState`].
+fn route(req: &Request, state: &ServeState) -> Response {
+    let segments = req.segments();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("POST", ["jobs"]) => submit(req, state),
+        ("GET", ["jobs"]) => list(state),
+        ("GET", ["jobs", id]) => with_id(id, |id| get_job(state, id)),
+        ("DELETE", ["jobs", id]) => with_id(id, |id| cancel(state, id)),
+        ("GET", ["jobs", id, "outcome"]) => with_id(id, |id| outcome(state, id)),
+        ("GET", ["jobs", id, "feedback"]) => with_id(id, |id| feedback(req, state, id)),
+        (_, ["healthz" | "jobs", ..]) => Response::error(405, "method not allowed"),
+        _ => Response::error(404, "no such route"),
+    }
+}
+
+fn with_id(raw: &str, f: impl FnOnce(u64) -> Response) -> Response {
+    match raw.parse::<u64>() {
+        Ok(id) => f(id),
+        Err(_) => Response::error(400, &format!("job id must be an integer, got {raw:?}")),
+    }
+}
+
+fn healthz(state: &ServeState) -> Response {
+    let (queued, running) = state.counts();
+    Response::json(
+        200,
+        format!(
+            "{{\"status\":\"ok\",\"queued\":{queued},\"running\":{running},\
+             \"workers\":{},\"capacity\":{}}}",
+            state.workers,
+            state.queue.capacity()
+        ),
+    )
+}
+
+fn submit(req: &Request, state: &ServeState) -> Response {
+    let job = match JobRequest::from_json(&req.body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    // Validate at admission so the queue never holds doomed work.
+    let registry = ScenarioRegistry::builtin();
+    let scenario = match registry.get(&job.scenario) {
+        Ok(s) => s,
+        Err(e) => return Response::error(404, &format!("{e:#}")),
+    };
+    if let Err(e) = scenario.schema().resolve(&job.params) {
+        return Response::error(400, &format!("{e:#}"));
+    }
+    // Advisory warm-start hint (the worker injects the real overrides
+    // at claim time, against the then-current checkpoint).
+    let warm_hint = state
+        .store
+        .load_tuner(&job.scenario)
+        .map(|ck| !jobqueue::warm_start_overrides(scenario.schema(), &job, &ck).is_empty())
+        .unwrap_or(false);
+    match state.submit(job) {
+        Ok(record) => Response::json(
+            202,
+            format!("{{\"id\":{},\"state\":\"queued\",\"warm_start\":{warm_hint}}}", record.id),
+        ),
+        Err(full) => Response::error(
+            429,
+            &format!("queue full ({} waiting); retry after {:.0}s", full.queued, full.retry_after_s),
+        )
+        .header("Retry-After", format!("{:.0}", full.retry_after_s.ceil())),
+    }
+}
+
+fn list(state: &ServeState) -> Response {
+    let briefs: Vec<String> = state.list().iter().map(JobRecord::to_json_brief).collect();
+    Response::json(200, format!("{{\"jobs\":[{}]}}", briefs.join(",")))
+}
+
+fn get_job(state: &ServeState, id: u64) -> Response {
+    match state.get(id) {
+        Some(record) => Response::json(200, record.to_json()),
+        None => Response::error(404, &format!("no job {id}")),
+    }
+}
+
+/// The finished run's `Outcome` JSON, verbatim — exactly what a direct
+/// `ScenarioRegistry` run would have produced.
+fn outcome(state: &ServeState, id: u64) -> Response {
+    match state.get(id) {
+        Some(record) => match record.outcome_json {
+            Some(json) => Response::json(200, json),
+            None => Response::error(
+                409,
+                &format!("job {id} is {} — no outcome", record.state.as_str()),
+            ),
+        },
+        None => Response::error(404, &format!("no job {id}")),
+    }
+}
+
+fn cancel(state: &ServeState, id: u64) -> Response {
+    match state.cancel(id) {
+        Ok(record) => Response::json(200, record.to_json_brief()),
+        Err(CancelError::NotFound) => Response::error(404, &format!("no job {id}")),
+        Err(CancelError::NotCancellable(s)) => Response::error(
+            409,
+            &format!("job {id} is {} — only queued jobs can be cancelled", s.as_str()),
+        ),
+    }
+}
+
+/// Long-poll the job's telemetry feed. Chunked so `netbn watch` (and
+/// `curl -N`) see samples line by line.
+fn feedback(req: &Request, state: &ServeState, id: u64) -> Response {
+    let Some(feed) = state.telemetry.get(id) else {
+        return match state.get(id) {
+            // Reloaded history from a previous daemon life has no feed.
+            Some(_) => Response::json(200, feedback_json(&[], 0, true)).chunked(),
+            None => Response::error(404, &format!("no job {id}")),
+        };
+    };
+    let since = req.query_u64("since").unwrap_or(0);
+    let timeout = req.query_f64("timeout").unwrap_or(10.0).clamp(0.0, MAX_POLL_S);
+    let (samples, next, done) = feed.poll_since(since, Duration::from_secs_f64(timeout));
+    Response::json(200, feedback_json(&samples, next, done)).chunked()
+}
+
+/// `{"samples":[…],"next":N,"done":b}`, one sample per line.
+fn feedback_json(samples: &[StepFeedback], next: u64, done: bool) -> String {
+    let mut s = String::from("{\"samples\":[");
+    for (i, fb) in samples.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('\n');
+        s.push_str(&format!(
+            "{{\"step\":{},\"wall_s\":{},\"compute_s\":{},\"comm_busy_s\":{},\"busbw_gbps\":{}}}",
+            fb.step, fb.wall_s, fb.compute_s, fb.comm_busy_s, fb.busbw_gbps
+        ));
+    }
+    s.push_str(&format!("],\n\"next\":{next},\"done\":{done}}}"));
+    s
+}
+
+/// `netbn serve` entry point: run the daemon until SIGINT/SIGTERM, then
+/// drain gracefully (cancel queued, finish running, flush the store).
+pub fn run_serve(cfg: &ServeConfig) -> Result<()> {
+    signal::install();
+    let mut daemon = Daemon::start(cfg)?;
+    println!(
+        "netbn serve: listening on http://{} ({} workers, queue capacity {}, store {})",
+        daemon.addr(),
+        cfg.workers,
+        cfg.queue_capacity,
+        cfg.store_dir.display()
+    );
+    while !signal::triggered() {
+        std::thread::sleep(ACCEPT_POLL);
+    }
+    let (queued, running) = daemon.state().counts();
+    eprintln!(
+        "netbn serve: shutdown requested — cancelling {queued} queued, draining {running} running"
+    );
+    daemon.stop();
+    eprintln!("netbn serve: store flushed to {}", cfg.store_dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn test_daemon(workers: usize, queue_capacity: usize) -> Daemon {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "netbn_daemon_{}_{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        Daemon::start(&ServeConfig { port: 0, workers, queue_capacity, store_dir: dir }).unwrap()
+    }
+
+    #[test]
+    fn healthz_reports_shape() {
+        let daemon = test_daemon(2, 8);
+        let (status, body) =
+            http::request(&daemon.addr().to_string(), "GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"workers\":2"), "{body}");
+        assert!(body.contains("\"capacity\":8"), "{body}");
+    }
+
+    #[test]
+    fn bad_routes_and_methods_are_refused() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        assert_eq!(http::request(&addr, "GET", "/nope", None).unwrap().0, 404);
+        assert_eq!(http::request(&addr, "DELETE", "/healthz", None).unwrap().0, 405);
+        assert_eq!(http::request(&addr, "GET", "/jobs/abc", None).unwrap().0, 400);
+        assert_eq!(http::request(&addr, "POST", "/jobs", Some("not json")).unwrap().0, 400);
+        assert_eq!(
+            http::request(&addr, "POST", "/jobs", Some("{\"scenario\":\"nope\"}")).unwrap().0,
+            404
+        );
+        assert_eq!(
+            http::request(
+                &addr,
+                "POST",
+                "/jobs",
+                Some("{\"scenario\":\"simulate\",\"params\":{\"bandwidth\":\"-1\"}}")
+            )
+            .unwrap()
+            .0,
+            400,
+            "schema violations must be rejected at admission"
+        );
+    }
+
+    #[test]
+    fn feedback_for_reloaded_history_is_done_and_empty() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        let (status, _) = http::request(&addr, "GET", "/jobs/42/feedback", None).unwrap();
+        assert_eq!(status, 404, "unknown job has no feedback");
+    }
+}

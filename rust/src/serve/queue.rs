@@ -1,0 +1,224 @@
+//! Bounded priority queue with admission control — the backpressure
+//! half of the job service.
+//!
+//! Submissions carry a priority (higher drains first; FIFO within a
+//! priority level). The queue is bounded: when full, [`JobQueue::push`]
+//! *rejects* instead of blocking, and the HTTP layer turns that into
+//! `429 Too Many Requests` + `Retry-After` — a loaded service should
+//! shed work at the door, not accumulate unbounded latency. The hint is
+//! the queue's own estimate: pending work / workers × a recent
+//! mean job duration.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueueFull {
+    /// Entries currently queued (== capacity).
+    pub queued: usize,
+    /// Suggested client back-off, seconds (the `Retry-After` header).
+    pub retry_after_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    job_id: u64,
+    priority: u8,
+    /// Admission order, for FIFO within a priority level.
+    seq: u64,
+}
+
+struct Inner {
+    entries: VecDeque<Entry>,
+    next_seq: u64,
+    closed: bool,
+    /// Rolling mean job duration (seconds), fed by the worker pool; the
+    /// retry-after estimate's clock.
+    mean_job_s: f64,
+}
+
+/// The shared queue between the HTTP handlers and the worker pool.
+pub struct JobQueue {
+    capacity: usize,
+    workers: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    /// A queue admitting at most `capacity` waiting jobs, drained by
+    /// `workers` workers (the worker count only shapes the retry-after
+    /// estimate; zero is allowed and means "nothing drains").
+    pub fn new(capacity: usize, workers: usize) -> JobQueue {
+        assert!(capacity >= 1, "queue capacity must be >= 1");
+        JobQueue {
+            capacity,
+            workers,
+            inner: Mutex::new(Inner {
+                entries: VecDeque::new(),
+                next_seq: 0,
+                closed: false,
+                mean_job_s: 1.0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Admit `job_id` at `priority` (higher drains first), or reject
+    /// with a back-off hint when at capacity or shut down.
+    pub fn push(&self, job_id: u64, priority: u8) -> Result<(), QueueFull> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.entries.len() >= self.capacity {
+            let queued = inner.entries.len();
+            let per_worker = queued as f64 / self.workers.max(1) as f64;
+            let retry = (per_worker * inner.mean_job_s).clamp(1.0, 60.0);
+            return Err(QueueFull { queued, retry_after_s: retry });
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.entries.push_back(Entry { job_id, priority, seq });
+        drop(inner);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until a job is available (highest priority first, FIFO
+    /// within a priority) or the queue is closed. `None` means shutdown:
+    /// once closed, remaining entries are *not* handed out — the daemon
+    /// cancels them so a SIGTERM drains running work only.
+    pub fn pop(&self) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return None;
+            }
+            // Highest priority, then lowest seq: a stable selection that
+            // starves nothing *within* a priority level.
+            let best = inner
+                .entries
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, e)| (e.priority, u64::MAX - e.seq))
+                .map(|(i, _)| i);
+            if let Some(i) = best {
+                let e = inner.entries.remove(i).expect("index from enumerate");
+                return Some(e.job_id);
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Remove a still-queued job; `false` when it already left the queue
+    /// (running, finished, or never admitted).
+    pub fn cancel(&self, job_id: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.entries.len();
+        inner.entries.retain(|e| e.job_id != job_id);
+        inner.entries.len() != before
+    }
+
+    /// Stop admissions and wake all poppers; queued entries stay for the
+    /// daemon to cancel. Returns the job ids that were still queued.
+    pub fn close(&self) -> Vec<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        let leftover = inner.entries.drain(..).map(|e| e.job_id).collect();
+        drop(inner);
+        self.ready.notify_all();
+        leftover
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fold one finished job's duration into the retry-after estimate
+    /// (exponential moving average, α = 0.3).
+    pub fn observe_job_duration(&self, d: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.mean_job_s = 0.7 * inner.mean_job_s + 0.3 * d.as_secs_f64();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn drains_by_priority_then_fifo() {
+        let q = JobQueue::new(8, 1);
+        q.push(1, 5).unwrap();
+        q.push(2, 9).unwrap();
+        q.push(3, 5).unwrap();
+        q.push(4, 9).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn rejects_at_capacity_with_a_backoff_hint() {
+        let q = JobQueue::new(2, 1);
+        q.push(1, 5).unwrap();
+        q.push(2, 5).unwrap();
+        let err = q.push(3, 5).unwrap_err();
+        assert_eq!(err.queued, 2);
+        assert!(err.retry_after_s >= 1.0 && err.retry_after_s <= 60.0);
+        // Draining one slot re-opens admission.
+        assert_eq!(q.pop(), Some(1));
+        q.push(3, 5).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn cancel_removes_only_queued_entries() {
+        let q = JobQueue::new(4, 1);
+        q.push(1, 5).unwrap();
+        q.push(2, 5).unwrap();
+        assert!(q.cancel(1));
+        assert!(!q.cancel(1), "already cancelled");
+        assert!(!q.cancel(99), "never queued");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers_and_returns_leftovers() {
+        let q = Arc::new(JobQueue::new(4, 1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        // Give the popper time to block, then close.
+        std::thread::sleep(Duration::from_millis(50));
+        q.push(7, 5).unwrap();
+        q.push(8, 5).unwrap();
+        // The popper may have grabbed 7 already; close returns the rest.
+        std::thread::sleep(Duration::from_millis(50));
+        let leftover = q.close();
+        assert!(leftover.contains(&8) || h.join().unwrap() == Some(8));
+        assert!(q.pop().is_none(), "closed queue must not hand out jobs");
+        assert!(q.push(9, 5).is_err(), "closed queue must reject admissions");
+    }
+
+    #[test]
+    fn retry_hint_tracks_observed_durations() {
+        let q = JobQueue::new(1, 2);
+        for _ in 0..20 {
+            q.observe_job_duration(Duration::from_secs(10));
+        }
+        q.push(1, 5).unwrap();
+        let err = q.push(2, 5).unwrap_err();
+        // 1 queued / 2 workers × ~10 s ≈ 5 s.
+        assert!(err.retry_after_s > 2.0, "hint {} ignores durations", err.retry_after_s);
+    }
+}

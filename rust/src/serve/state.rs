@@ -1,0 +1,304 @@
+//! Shared daemon state: the job table and its lifecycle transitions.
+//!
+//! One `Arc<ServeState>` is held by the accept loop, every connection
+//! handler, and every worker. All transitions (submit, claim, finish,
+//! cancel, shutdown) live here so the locking story stays in one file:
+//! the job table is one mutex, the queue and telemetry hub have their
+//! own, and no code path holds two of them across a blocking call.
+
+use super::job::{JobRecord, JobState};
+use super::queue::{JobQueue, QueueFull};
+use super::store::Store;
+use super::telemetry::TelemetryHub;
+use crate::engine::jobqueue::JobRequest;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Why a cancellation was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CancelError {
+    /// No such job id.
+    NotFound,
+    /// The job already left the queue (running or terminal) — there is
+    /// no preemption point inside a scenario run.
+    NotCancellable(JobState),
+}
+
+pub struct ServeState {
+    pub queue: JobQueue,
+    pub telemetry: TelemetryHub,
+    pub store: Store,
+    /// Worker pool size (surfaced by `/healthz`).
+    pub workers: usize,
+    jobs: Mutex<BTreeMap<u64, JobRecord>>,
+    next_id: AtomicU64,
+    running: AtomicUsize,
+}
+
+impl ServeState {
+    /// Build the state over an opened store, reloading persisted
+    /// history. Jobs that were queued or running when the previous
+    /// daemon died are marked cancelled (their work is gone; the record
+    /// says so) — everything terminal is queryable history again.
+    pub fn new(store: Store, queue_capacity: usize, workers: usize) -> Result<ServeState> {
+        let mut jobs = BTreeMap::new();
+        let mut max_id = 0u64;
+        for mut record in store.load_jobs()? {
+            max_id = max_id.max(record.id);
+            if !record.state.is_terminal() {
+                record.state = JobState::Cancelled;
+                record.error = Some("daemon restarted while the job was pending".to_string());
+                store.save_job(&record)?;
+            }
+            jobs.insert(record.id, record);
+        }
+        Ok(ServeState {
+            queue: JobQueue::new(queue_capacity, workers),
+            telemetry: TelemetryHub::new(),
+            store,
+            workers,
+            jobs: Mutex::new(jobs),
+            next_id: AtomicU64::new(max_id + 1),
+            running: AtomicUsize::new(0),
+        })
+    }
+
+    /// Admit a validated request: allocate an id, persist the queued
+    /// record, enqueue. On a full queue nothing survives (record and
+    /// file are rolled back) and the caller turns the hint into a 429.
+    pub fn submit(&self, request: JobRequest) -> std::result::Result<JobRecord, QueueFull> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let record = JobRecord::new(id, request);
+        let priority = record.request.priority;
+        self.jobs.lock().unwrap().insert(id, record.clone());
+        // Persist before enqueueing: once a worker can see the job, the
+        // on-disk record must already exist (a fast worker's Done write
+        // must never race a later Queued write).
+        if let Err(e) = self.store.save_job(&record) {
+            eprintln!("serve: failed to persist job {id}: {e:#}");
+        }
+        self.telemetry.feed(id); // pollers can attach while queued
+        if let Err(full) = self.queue.push(id, priority) {
+            self.jobs.lock().unwrap().remove(&id);
+            self.store.delete_job(id);
+            self.telemetry.remove(id);
+            return Err(full);
+        }
+        Ok(record)
+    }
+
+    /// Worker claim: `Queued → Running`; `None` when the job vanished
+    /// (cancelled in the pop window).
+    pub fn claim_running(&self, id: u64) -> Option<JobRequest> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let record = jobs.get_mut(&id)?;
+        if record.state != JobState::Queued {
+            return None;
+        }
+        record.state = JobState::Running;
+        self.running.fetch_add(1, Ordering::Relaxed);
+        Some(record.request.clone())
+    }
+
+    /// Record that warm-start overrides were injected (the persisted
+    /// record carries the resolved view).
+    pub fn mark_warm_started(&self, id: u64) {
+        if let Some(r) = self.jobs.lock().unwrap().get_mut(&id) {
+            r.warm_started = true;
+        }
+    }
+
+    /// Worker completion: move to a terminal state and persist.
+    pub fn finish(
+        &self,
+        id: u64,
+        state: JobState,
+        error: Option<String>,
+        outcome_json: Option<String>,
+    ) {
+        debug_assert!(state.is_terminal());
+        let mut jobs = self.jobs.lock().unwrap();
+        let Some(record) = jobs.get_mut(&id) else {
+            return;
+        };
+        if record.state == JobState::Running {
+            self.running.fetch_sub(1, Ordering::Relaxed);
+        }
+        record.state = state;
+        record.error = error;
+        record.outcome_json = outcome_json;
+        let snapshot = record.clone();
+        drop(jobs);
+        if let Err(e) = self.store.save_job(&snapshot) {
+            eprintln!("serve: failed to persist job {id}: {e:#}");
+        }
+    }
+
+    /// Cancel a still-queued job.
+    pub fn cancel(&self, id: u64) -> std::result::Result<JobRecord, CancelError> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let record = jobs.get_mut(&id).ok_or(CancelError::NotFound)?;
+        if record.state != JobState::Queued || !self.queue.cancel(id) {
+            return Err(CancelError::NotCancellable(record.state));
+        }
+        record.state = JobState::Cancelled;
+        record.error = Some("cancelled by client".to_string());
+        let snapshot = record.clone();
+        drop(jobs);
+        if let Err(e) = self.store.save_job(&snapshot) {
+            eprintln!("serve: failed to persist job {id}: {e:#}");
+        }
+        if let Some(feed) = self.telemetry.get(id) {
+            feed.close();
+        }
+        Ok(snapshot)
+    }
+
+    pub fn get(&self, id: u64) -> Option<JobRecord> {
+        self.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// All records, id order.
+    pub fn list(&self) -> Vec<JobRecord> {
+        self.jobs.lock().unwrap().values().cloned().collect()
+    }
+
+    /// `(queued, running)` — the `/healthz` load numbers.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.queue.len(), self.running.load(Ordering::Relaxed))
+    }
+
+    /// Graceful shutdown step one: stop admissions, cancel everything
+    /// still queued (persisting each), and wake blocked workers. Running
+    /// jobs keep going — the caller joins the pool to drain them.
+    pub fn begin_shutdown(&self) {
+        for id in self.queue.close() {
+            let mut jobs = self.jobs.lock().unwrap();
+            if let Some(record) = jobs.get_mut(&id) {
+                if record.state == JobState::Queued {
+                    record.state = JobState::Cancelled;
+                    record.error = Some("daemon shutting down".to_string());
+                    let snapshot = record.clone();
+                    drop(jobs);
+                    if let Err(e) = self.store.save_job(&snapshot) {
+                        eprintln!("serve: failed to persist job {id}: {e:#}");
+                    }
+                    if let Some(feed) = self.telemetry.get(id) {
+                        feed.close();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    fn tmp_state(tag: &str, capacity: usize, workers: usize) -> ServeState {
+        static N: TestCounter = TestCounter::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "netbn_state_{tag}_{}_{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ServeState::new(Store::open(&dir).unwrap(), capacity, workers).unwrap()
+    }
+
+    fn req(scenario: &str) -> JobRequest {
+        JobRequest { scenario: scenario.into(), params: vec![], priority: 5 }
+    }
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let s = tmp_state("life", 4, 1);
+        let r = s.submit(req("simulate")).unwrap();
+        assert_eq!(r.state, JobState::Queued);
+        assert_eq!(s.counts(), (1, 0));
+        let popped = s.queue.pop().unwrap();
+        assert_eq!(popped, r.id);
+        assert!(s.claim_running(popped).is_some());
+        assert_eq!(s.counts(), (0, 1));
+        assert!(s.claim_running(popped).is_none(), "double claim must fail");
+        s.finish(popped, JobState::Done, None, Some("{}".into()));
+        assert_eq!(s.counts(), (0, 0));
+        let done = s.get(popped).unwrap();
+        assert_eq!(done.state, JobState::Done);
+        // Persisted too.
+        assert_eq!(s.store.load_jobs().unwrap()[0].state, JobState::Done);
+    }
+
+    #[test]
+    fn submit_rolls_back_cleanly_on_a_full_queue() {
+        let s = tmp_state("full", 1, 1);
+        let a = s.submit(req("simulate")).unwrap();
+        let full = s.submit(req("simulate")).unwrap_err();
+        assert_eq!(full.queued, 1);
+        assert_eq!(s.list().len(), 1, "rejected submission must leave no record");
+        assert_eq!(s.store.load_jobs().unwrap().len(), 1);
+        // Ids keep increasing; the rolled-back id is simply skipped.
+        s.queue.cancel(a.id);
+        let b = s.submit(req("simulate")).unwrap();
+        assert!(b.id > a.id + 1);
+    }
+
+    #[test]
+    fn cancel_only_touches_queued_jobs() {
+        let s = tmp_state("cancel", 4, 1);
+        let a = s.submit(req("simulate")).unwrap();
+        let cancelled = s.cancel(a.id).unwrap();
+        assert_eq!(cancelled.state, JobState::Cancelled);
+        assert_eq!(s.cancel(a.id), Err(CancelError::NotCancellable(JobState::Cancelled)));
+        assert_eq!(s.cancel(999), Err(CancelError::NotFound));
+        // A claimed (running) job is not cancellable.
+        let b = s.submit(req("simulate")).unwrap();
+        assert_eq!(s.queue.pop(), Some(b.id));
+        s.claim_running(b.id);
+        assert_eq!(s.cancel(b.id), Err(CancelError::NotCancellable(JobState::Running)));
+    }
+
+    #[test]
+    fn restart_reload_cancels_interrupted_jobs_and_resumes_ids() {
+        let dir = std::env::temp_dir().join(format!(
+            "netbn_state_reload_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ServeState::new(Store::open(&dir).unwrap(), 4, 1).unwrap();
+        let a = s.submit(req("simulate")).unwrap();
+        let b = s.submit(req("fig1")).unwrap();
+        s.queue.pop();
+        s.claim_running(a.id);
+        s.finish(a.id, JobState::Done, None, Some("{\"passed\":true}".into()));
+        drop(s); // "crash" with b still queued
+
+        let s2 = ServeState::new(Store::open(&dir).unwrap(), 4, 1).unwrap();
+        let a2 = s2.get(a.id).unwrap();
+        assert_eq!(a2.state, JobState::Done);
+        assert_eq!(a2.outcome_json.as_deref(), Some("{\"passed\":true}"));
+        let b2 = s2.get(b.id).unwrap();
+        assert_eq!(b2.state, JobState::Cancelled, "interrupted job must be cancelled on reload");
+        let c = s2.submit(req("simulate")).unwrap();
+        assert!(c.id > b.id, "ids must not be reused across restarts");
+    }
+
+    #[test]
+    fn begin_shutdown_cancels_queued_and_persists() {
+        let s = tmp_state("shutdown", 4, 1);
+        let a = s.submit(req("simulate")).unwrap();
+        let b = s.submit(req("fig1")).unwrap();
+        s.begin_shutdown();
+        assert_eq!(s.get(a.id).unwrap().state, JobState::Cancelled);
+        assert_eq!(s.get(b.id).unwrap().state, JobState::Cancelled);
+        assert!(s.queue.pop().is_none(), "closed queue releases workers");
+        assert!(s.submit(req("simulate")).is_err(), "no admissions after shutdown");
+        let on_disk = s.store.load_jobs().unwrap();
+        assert!(on_disk.iter().all(|r| r.state == JobState::Cancelled));
+    }
+}

@@ -1,0 +1,181 @@
+//! The on-disk results + tuner-state store behind `netbn serve --store`.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! <store>/jobs/<id>.json    one JobRecord per submitted job
+//! <store>/tuner/<key>.json  one TunerCheckpoint per scenario
+//! ```
+//!
+//! Every write goes through a temp-file + rename so a daemon killed
+//! mid-write never leaves a torn record. On restart the daemon reloads
+//! both trees: finished jobs become queryable history, and checkpoints
+//! warm-start resubmitted jobs ([`crate::engine::jobqueue::warm_start_overrides`])
+//! — the first slice of the ROADMAP's "persist and reuse tuner state".
+
+use super::job::JobRecord;
+use crate::tune::TunerCheckpoint;
+use crate::Result;
+use anyhow::Context;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<Store> {
+        fs::create_dir_all(root.join("jobs"))
+            .with_context(|| format!("creating store at {}", root.display()))?;
+        fs::create_dir_all(root.join("tuner"))?;
+        Ok(Store { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn write_atomic(&self, path: &Path, contents: &str) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        fs::write(&tmp, contents).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Persist (or overwrite) one job record.
+    pub fn save_job(&self, record: &JobRecord) -> Result<()> {
+        let path = self.root.join("jobs").join(format!("{}.json", record.id));
+        self.write_atomic(&path, &record.to_json())
+    }
+
+    /// Remove one job record (submission rollback after an admission
+    /// failure); missing files are fine.
+    pub fn delete_job(&self, id: u64) {
+        let _ = fs::remove_file(self.root.join("jobs").join(format!("{id}.json")));
+    }
+
+    /// All persisted job records, ordered by id.
+    pub fn load_jobs(&self) -> Result<Vec<JobRecord>> {
+        let mut records = Vec::new();
+        for entry in fs::read_dir(self.root.join("jobs"))? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            records.push(
+                JobRecord::from_json(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?,
+            );
+        }
+        records.sort_by_key(|r| r.id);
+        Ok(records)
+    }
+
+    /// Persist the tuner checkpoint for `scenario`.
+    pub fn save_tuner(&self, scenario: &str, ck: &TunerCheckpoint) -> Result<()> {
+        let path = self.root.join("tuner").join(format!("{}.json", file_key(scenario)));
+        self.write_atomic(&path, &ck.to_json())
+    }
+
+    /// The persisted checkpoint for `scenario`, if any. A corrupt file
+    /// reads as `None` — a warm start is an optimization, never a
+    /// reason to refuse a job.
+    pub fn load_tuner(&self, scenario: &str) -> Option<TunerCheckpoint> {
+        let path = self.root.join("tuner").join(format!("{}.json", file_key(scenario)));
+        let text = fs::read_to_string(path).ok()?;
+        TunerCheckpoint::from_json(&text).ok()
+    }
+}
+
+/// Scenario name → safe file stem.
+fn file_key(scenario: &str) -> String {
+    scenario
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::jobqueue::JobRequest;
+    use crate::serve::job::JobState;
+    use crate::tune::KnobPoint;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_store(tag: &str) -> Store {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "netbn_store_{tag}_{}_{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        Store::open(&dir).unwrap()
+    }
+
+    fn record(id: u64, state: JobState) -> JobRecord {
+        JobRecord {
+            id,
+            request: JobRequest {
+                scenario: "simulate".into(),
+                params: vec![("workers".into(), "8".into())],
+                priority: 7,
+            },
+            state,
+            warm_started: id % 2 == 0,
+            error: None,
+            outcome_json: None,
+        }
+    }
+
+    #[test]
+    fn jobs_round_trip_across_reopen() {
+        let store = tmp_store("jobs");
+        let mut done = record(3, JobState::Done);
+        done.outcome_json = Some("{\"scenario\":\"simulate\",\"passed\":true}".into());
+        let mut failed = record(1, JobState::Failed);
+        failed.error = Some("boom: \"quoted\"\nsecond line".into());
+        store.save_job(&done).unwrap();
+        store.save_job(&failed).unwrap();
+
+        let reopened = Store::open(store.root()).unwrap();
+        let loaded = reopened.load_jobs().unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0], failed, "sorted by id, exact round trip");
+        assert_eq!(loaded[1], done);
+    }
+
+    #[test]
+    fn save_overwrites_in_place() {
+        let store = tmp_store("overwrite");
+        let mut r = record(5, JobState::Queued);
+        store.save_job(&r).unwrap();
+        r.state = JobState::Done;
+        store.save_job(&r).unwrap();
+        let loaded = store.load_jobs().unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].state, JobState::Done);
+    }
+
+    #[test]
+    fn tuner_checkpoints_round_trip_and_tolerate_corruption() {
+        let store = tmp_store("tuner");
+        assert!(store.load_tuner("emulate").is_none());
+        let ck = TunerCheckpoint {
+            chosen: KnobPoint { bucket_mb: 4.0, ..KnobPoint::default_static() },
+            baseline_s: 0.25,
+            steps_seen: 40,
+            probe_phases: 1,
+        };
+        store.save_tuner("emulate", &ck).unwrap();
+        assert_eq!(Store::open(store.root()).unwrap().load_tuner("emulate"), Some(ck));
+        // Corruption degrades to a cold start, not an error.
+        fs::write(store.root().join("tuner").join("emulate.json"), "garbage").unwrap();
+        assert!(store.load_tuner("emulate").is_none());
+    }
+}

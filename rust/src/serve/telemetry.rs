@@ -1,0 +1,177 @@
+//! Live per-job telemetry: a bounded [`FeedbackRing`] per job plus a
+//! long-poll wait, behind `GET /jobs/<id>/feedback?since=<seq>`.
+//!
+//! Publishers are the worker pool's per-job monitors (heartbeat samples
+//! while a scenario runs — scenarios are black boxes to the service, so
+//! the heartbeat reports elapsed wall clock at a fixed cadence rather
+//! than inventing per-step numbers the runner never exposed). The ring
+//! keeps only recent samples; [`FeedbackRing::snapshot_since`]'s
+//! monotonic cursors mean a poller never re-copies what it has seen and
+//! a slow poller loses old samples silently instead of blocking the
+//! publisher.
+
+use crate::tune::{FeedbackRing, StepFeedback};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Samples retained per job.
+const RING_CAP: usize = 256;
+
+/// One job's live feed.
+pub struct JobFeed {
+    ring: Mutex<FeedbackRing>,
+    /// Signaled on every publish and on close.
+    changed: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl JobFeed {
+    fn new() -> JobFeed {
+        JobFeed {
+            ring: Mutex::new(FeedbackRing::new(RING_CAP)),
+            changed: Condvar::new(),
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Append one sample and wake pollers.
+    pub fn publish(&self, fb: StepFeedback) {
+        self.ring.lock().unwrap().push(fb);
+        self.changed.notify_all();
+    }
+
+    /// Mark the feed finished (job left the running state) and wake
+    /// pollers so they can observe `done`.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.changed.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        *self.closed.lock().unwrap()
+    }
+
+    /// Long-poll: samples with sequence `>= since` (oldest → newest),
+    /// the next cursor, and whether the feed is finished. Blocks up to
+    /// `timeout` waiting for news when the delta would be empty.
+    pub fn poll_since(
+        &self,
+        since: u64,
+        timeout: Duration,
+    ) -> (Vec<StepFeedback>, u64, bool) {
+        let deadline = Instant::now() + timeout;
+        // The wait is keyed on the closed flag's mutex so close() can
+        // wake us; the ring has its own shorter-held lock.
+        let mut closed = self.closed.lock().unwrap();
+        loop {
+            let (samples, next) = self.ring.lock().unwrap().snapshot_since(since);
+            if !samples.is_empty() || *closed {
+                return (samples, next, *closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (samples, next, *closed);
+            }
+            let (guard, _timeout_result) =
+                self.changed.wait_timeout(closed, deadline - now).unwrap();
+            closed = guard;
+        }
+    }
+}
+
+/// The registry of live feeds, keyed by job id. Feeds for finished jobs
+/// stay until [`TelemetryHub::remove`] (the daemon keeps them so late
+/// watchers still see the tail + `done`).
+#[derive(Default)]
+pub struct TelemetryHub {
+    feeds: Mutex<BTreeMap<u64, Arc<JobFeed>>>,
+}
+
+impl TelemetryHub {
+    pub fn new() -> TelemetryHub {
+        TelemetryHub::default()
+    }
+
+    /// Create (or return) the feed for `job_id`.
+    pub fn feed(&self, job_id: u64) -> Arc<JobFeed> {
+        Arc::clone(
+            self.feeds
+                .lock()
+                .unwrap()
+                .entry(job_id)
+                .or_insert_with(|| Arc::new(JobFeed::new())),
+        )
+    }
+
+    /// The feed for `job_id` if one was ever created.
+    pub fn get(&self, job_id: u64) -> Option<Arc<JobFeed>> {
+        self.feeds.lock().unwrap().get(&job_id).cloned()
+    }
+
+    pub fn remove(&self, job_id: u64) {
+        self.feeds.lock().unwrap().remove(&job_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(step: u64, wall: f64) -> StepFeedback {
+        StepFeedback { step, wall_s: wall, compute_s: 0.0, comm_busy_s: 0.0, busbw_gbps: 0.0 }
+    }
+
+    #[test]
+    fn poll_returns_immediately_when_samples_exist() {
+        let hub = TelemetryHub::new();
+        let feed = hub.feed(1);
+        feed.publish(fb(0, 0.1));
+        feed.publish(fb(1, 0.2));
+        let (samples, next, done) = feed.poll_since(0, Duration::from_secs(5));
+        assert_eq!(samples.len(), 2);
+        assert_eq!(next, 2);
+        assert!(!done);
+        // Cursor resume: nothing new → times out empty, quickly.
+        let t0 = Instant::now();
+        let (samples, next, _) = feed.poll_since(next, Duration::from_millis(30));
+        assert!(samples.is_empty());
+        assert_eq!(next, 2);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn poll_wakes_on_publish_from_another_thread() {
+        let hub = Arc::new(TelemetryHub::new());
+        let feed = hub.feed(7);
+        let publisher = {
+            let feed = Arc::clone(&feed);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(40));
+                feed.publish(fb(0, 0.5));
+            })
+        };
+        let (samples, next, done) = feed.poll_since(0, Duration::from_secs(5));
+        publisher.join().unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(next, 1);
+        assert!(!done);
+    }
+
+    #[test]
+    fn close_unblocks_pollers_with_done() {
+        let feed = TelemetryHub::new().feed(3);
+        let closer = {
+            let feed = Arc::clone(&feed);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(40));
+                feed.close();
+            })
+        };
+        let (samples, _, done) = feed.poll_since(0, Duration::from_secs(5));
+        closer.join().unwrap();
+        assert!(samples.is_empty());
+        assert!(done);
+        assert!(feed.is_closed());
+    }
+}

@@ -1,0 +1,152 @@
+//! The worker pool: W threads draining the [`JobQueue`] into the engine
+//! via the job-queue adapter ([`crate::engine::jobqueue`]).
+//!
+//! Each worker owns its own [`ScenarioRegistry`] (registries hold boxed
+//! runners; building one per thread is cheap and sidesteps sharing), and
+//! each running job gets a heartbeat monitor thread feeding the
+//! telemetry hub: scenarios are black boxes to the service, so the
+//! monitor publishes elapsed-wall-clock samples at a fixed cadence — an
+//! honest liveness signal on the same [`crate::tune::StepFeedback`]
+//! type the tuner consumes — plus one final sample at completion.
+//! Before running, a worker consults the store for a persisted tuner
+//! checkpoint and injects warm-start overrides; after a run that tuned
+//! knobs, it persists the refreshed checkpoint.
+
+use super::state::ServeState;
+use crate::engine::jobqueue::{self, JobRequest};
+use crate::engine::ScenarioRegistry;
+use crate::serve::job::JobState;
+use crate::tune::{KnobPoint, StepFeedback, TunerCheckpoint};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Heartbeat cadence for the per-job telemetry monitor.
+const MONITOR_PERIOD: Duration = Duration::from_millis(100);
+
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads draining `state.queue` until it closes.
+    pub fn start(workers: usize, state: Arc<ServeState>) -> WorkerPool {
+        let handles = (0..workers)
+            .map(|i| {
+                let state = Arc::clone(&state);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_main(&state))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Wait for every worker to finish (the queue must be closed first,
+    /// or this blocks forever).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(state: &ServeState) {
+    let registry = ScenarioRegistry::builtin();
+    while let Some(job_id) = state.queue.pop() {
+        run_one(state, &registry, job_id);
+    }
+}
+
+/// Execute one popped job end to end: claim → warm-start → run (with a
+/// heartbeat monitor) → record + persist.
+fn run_one(state: &ServeState, registry: &ScenarioRegistry, job_id: u64) {
+    // Claim: Queued → Running. A record can be missing or cancelled if
+    // the daemon raced a cancellation; skip silently.
+    let Some(mut request) = state.claim_running(job_id) else {
+        return;
+    };
+
+    let warm = warm_start(state, registry, &mut request);
+    if warm {
+        state.mark_warm_started(job_id);
+    }
+
+    let feed = state.telemetry.feed(job_id);
+    let t0 = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let feed = Arc::clone(&feed);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut tick = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(MONITOR_PERIOD);
+                feed.publish(heartbeat(tick, t0));
+                tick += 1;
+            }
+        })
+    };
+
+    let result = jobqueue::execute(registry, &request);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = monitor.join();
+    feed.publish(heartbeat(u64::MAX, t0)); // final sample: total elapsed
+    state.queue.observe_job_duration(t0.elapsed());
+
+    match result {
+        Ok(outcome) => {
+            if let Some(spec) = &outcome.tuned_knobs {
+                persist_tuner(state, &request.scenario, spec);
+            }
+            state.finish(job_id, JobState::Done, None, Some(outcome.to_json()));
+        }
+        Err(e) => {
+            state.finish(job_id, JobState::Failed, Some(format!("{e:#}")), None);
+        }
+    }
+    feed.close();
+}
+
+fn heartbeat(tick: u64, t0: Instant) -> StepFeedback {
+    StepFeedback {
+        step: tick,
+        wall_s: t0.elapsed().as_secs_f64(),
+        compute_s: 0.0,
+        comm_busy_s: 0.0,
+        busbw_gbps: 0.0,
+    }
+}
+
+/// Inject warm-start overrides from the store's checkpoint, if the
+/// scenario is eligible. Returns whether anything was injected.
+fn warm_start(state: &ServeState, registry: &ScenarioRegistry, request: &mut JobRequest) -> bool {
+    let Some(ck) = state.store.load_tuner(&request.scenario) else {
+        return false;
+    };
+    let Ok(scenario) = registry.get(&request.scenario) else {
+        return false;
+    };
+    let overrides = jobqueue::warm_start_overrides(scenario.schema(), request, &ck);
+    if overrides.is_empty() {
+        return false;
+    }
+    request.params.extend(overrides);
+    true
+}
+
+/// Persist the run's chosen knobs as the scenario's new checkpoint.
+fn persist_tuner(state: &ServeState, scenario: &str, spec: &str) {
+    match KnobPoint::parse_spec(spec) {
+        Ok(point) => {
+            let ck = TunerCheckpoint::from_point(point);
+            if let Err(e) = state.store.save_tuner(scenario, &ck) {
+                eprintln!("serve: failed to persist tuner state for {scenario}: {e:#}");
+            }
+        }
+        Err(e) => eprintln!("serve: unparseable tuned_knobs from {scenario}: {e:#}"),
+    }
+}

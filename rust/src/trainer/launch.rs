@@ -312,6 +312,10 @@ pub fn tensor_checksum(xs: &[f32]) -> u64 {
 /// serve the rendezvous + collection protocol, aggregate the report.
 pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     cfg.validate()?;
+    // SIGINT/SIGTERM flip the shutdown flag; the coordinator loops poll
+    // it and bail, and the process-mode error path below kills + reaps
+    // every `_worker` child instead of orphaning them.
+    crate::util::signal::install();
     let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator port")?;
     let addr = listener.local_addr()?;
     let p = cfg.params.clone();
@@ -481,6 +485,10 @@ fn coordinator_serve(
             match listener.accept() {
                 Ok((stream, _)) => break stream,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        !crate::util::signal::triggered(),
+                        "interrupted (SIGINT/SIGTERM) during worker rendezvous"
+                    );
                     if let Some(children) = children.as_deref_mut() {
                         for (rank, c) in children.iter_mut().enumerate() {
                             if let Ok(Some(status)) = c.try_wait() {
@@ -553,6 +561,10 @@ fn coordinator_serve(
     let mut checksums = vec![0u64; p.world];
     let mut knob_trajectory: Vec<(u64, usize)> = Vec::new();
     for rank in 0..p.world {
+        anyhow::ensure!(
+            !crate::util::signal::triggered(),
+            "interrupted (SIGINT/SIGTERM) while collecting worker results"
+        );
         let reader = readers[rank].as_mut().expect("registered above");
         let mut line = String::new();
         reader.read_line(&mut line).with_context(|| format!("read done from rank {rank}"))?;

@@ -30,9 +30,10 @@
 
 use super::feedback::{FeedbackRing, StepFeedback};
 use super::knobs::{KnobIndex, KnobPoint, KnobSpace, AXES};
-use crate::util::Rng;
+use crate::report::json_str;
+use crate::util::{json, Rng};
 use crate::Result;
-use anyhow::ensure;
+use anyhow::{ensure, Context};
 
 /// Controller parameters.
 #[derive(Clone, Copy, Debug)]
@@ -106,6 +107,55 @@ pub struct TuningSummary {
     pub probe_phases: usize,
     /// `(first step the point was active, point)`, initial point first.
     pub trajectory: Vec<(u64, KnobPoint)>,
+}
+
+/// A tuner's learned state, reduced to what is worth carrying across
+/// process restarts: the chosen operating point and the evidence behind
+/// it. `netbn serve` persists one per scenario under `<store>/tuner/`
+/// and warm-starts resubmitted jobs from it — the first slice of the
+/// ROADMAP's "persist tuner state" item. The wire format is JSON built
+/// on [`KnobPoint::spec`]/[`KnobPoint::parse_spec`], so checkpoints stay
+/// readable and diffable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunerCheckpoint {
+    /// The chosen operating point at save time.
+    pub chosen: KnobPoint,
+    /// Exploit baseline (mean step wall of the chosen point), seconds;
+    /// NaN when the tuner never finished a probe.
+    pub baseline_s: f64,
+    /// Steps observed when the checkpoint was taken.
+    pub steps_seen: u64,
+    /// Probe phases entered when the checkpoint was taken.
+    pub probe_phases: usize,
+}
+
+impl TunerCheckpoint {
+    /// A checkpoint holding only a chosen point (e.g. recovered from a
+    /// finished run's report rather than a live tuner).
+    pub fn from_point(chosen: KnobPoint) -> TunerCheckpoint {
+        TunerCheckpoint { chosen, baseline_s: f64::NAN, steps_seen: 0, probe_phases: 0 }
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"chosen\":{},\"baseline_s\":{},\"steps_seen\":{},\"probe_phases\":{}}}",
+            json_str(&self.chosen.spec()),
+            if self.baseline_s.is_finite() { format!("{}", self.baseline_s) } else { "null".to_string() },
+            self.steps_seen,
+            self.probe_phases
+        )
+    }
+
+    pub fn from_json(s: &str) -> Result<TunerCheckpoint> {
+        let fields = json::object_fields(s).context("malformed tuner checkpoint")?;
+        let chosen = KnobPoint::parse_spec(&json::parse_string(json::require(&fields, "chosen")?)?)?;
+        Ok(TunerCheckpoint {
+            chosen,
+            baseline_s: json::parse_f64(json::require(&fields, "baseline_s")?)?,
+            steps_seen: json::parse_u64(json::require(&fields, "steps_seen")?)?,
+            probe_phases: json::parse_u64(json::require(&fields, "probe_phases")?)? as usize,
+        })
+    }
 }
 
 /// Probe-phase bookkeeping: one axis sweep at a time.
@@ -236,6 +286,30 @@ impl AutoTuner {
             probe_phases: self.probe_phases,
             trajectory: self.trajectory.clone(),
         }
+    }
+
+    /// Snapshot the learned state for persistence (see
+    /// [`TunerCheckpoint`]).
+    pub fn checkpoint(&self) -> TunerCheckpoint {
+        TunerCheckpoint {
+            chosen: self.chosen(),
+            baseline_s: if self.baseline.is_finite() { self.baseline } else { f64::NAN },
+            steps_seen: self.steps_seen,
+            probe_phases: self.probe_phases,
+        }
+    }
+
+    /// A tuner warm-started from a persisted checkpoint: the coordinate
+    /// descent begins at the previously chosen point (snapped to the
+    /// nearest grid point of `space`) instead of the harness default, so
+    /// a resubmitted job re-probes *around* the known-good operating
+    /// point rather than from scratch.
+    pub fn from_checkpoint(
+        space: KnobSpace,
+        cfg: TunerConfig,
+        ck: &TunerCheckpoint,
+    ) -> Result<AutoTuner> {
+        AutoTuner::new(space, cfg, &ck.chosen)
     }
 
     /// Feed one completed step's feedback (measured under
@@ -611,6 +685,52 @@ mod tests {
         assert_eq!(t.state(), TunerState::Exploit);
         assert_eq!(t.current(), p);
         assert_eq!(t.trajectory().len(), 1);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_through_json() {
+        let mut t = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap();
+        drive(&mut t, 200);
+        let ck = t.checkpoint();
+        assert_eq!(ck.chosen, t.chosen());
+        assert!(ck.baseline_s.is_finite());
+        assert!(ck.steps_seen > 0);
+        let back = TunerCheckpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back, ck);
+        // A fresh (never-probed) tuner serializes its infinite baseline
+        // as null and reads back as NaN.
+        let fresh = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap()
+        .checkpoint();
+        let j = fresh.to_json();
+        assert!(j.contains("\"baseline_s\":null"), "{j}");
+        assert!(TunerCheckpoint::from_json(&j).unwrap().baseline_s.is_nan());
+        assert!(TunerCheckpoint::from_json("{\"chosen\":42}").is_err());
+    }
+
+    #[test]
+    fn from_checkpoint_starts_at_the_chosen_point() {
+        let mut t = AutoTuner::new(
+            tiny_space(),
+            TunerConfig::default(),
+            &KnobPoint::default_static(),
+        )
+        .unwrap();
+        drive(&mut t, 200);
+        let ck = t.checkpoint();
+        let warm =
+            AutoTuner::from_checkpoint(tiny_space(), TunerConfig::default(), &ck).unwrap();
+        assert_eq!(warm.current(), ck.chosen, "warm start must begin at the learned point");
+        assert_eq!(warm.state(), TunerState::Warmup);
     }
 
     #[test]

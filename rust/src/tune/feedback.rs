@@ -110,6 +110,21 @@ impl FeedbackRing {
         start.iter().chain(wrapped.iter())
     }
 
+    /// Samples with all-time sequence number `>= seq` that are still in
+    /// the ring (oldest → newest), plus the next cursor to poll from.
+    ///
+    /// Sequence numbers are the 0-based all-time push index, so
+    /// [`FeedbackRing::total`] is always the next unseen sequence. A
+    /// long-poller passes back the returned cursor and only ever copies
+    /// the samples it has not seen; a reader that fell more than one
+    /// capacity behind silently loses the overwritten prefix (it gets
+    /// the oldest retained samples instead — no error, no duplicates).
+    pub fn snapshot_since(&self, seq: u64) -> (Vec<StepFeedback>, u64) {
+        let first_retained = self.total - self.buf.len() as u64;
+        let skip = seq.saturating_sub(first_retained).min(self.buf.len() as u64) as usize;
+        (self.iter().skip(skip).copied().collect(), self.total)
+    }
+
     /// Mean wall seconds over the newest `n` samples (all when `n` exceeds
     /// the held count); 0 when empty.
     pub fn mean_wall(&self, n: usize) -> f64 {
@@ -182,6 +197,44 @@ mod tests {
         assert!((r.mean_wall(100) - 3.25).abs() < 1e-12);
         assert!((r.stddev_wall(2) - 2.0).abs() < 1e-12);
         assert_eq!(FeedbackRing::new(2).mean_wall(3), 0.0);
+    }
+
+    #[test]
+    fn snapshot_since_tracks_sequence_numbers() {
+        let mut r = FeedbackRing::new(4);
+        let (got, next) = r.snapshot_since(0);
+        assert!(got.is_empty());
+        assert_eq!(next, 0);
+        r.push(fb(0, 1.0));
+        r.push(fb(1, 2.0));
+        let (got, next) = r.snapshot_since(0);
+        assert_eq!(got.iter().map(|f| f.step).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(next, 2);
+        // Resuming from the returned cursor yields only the delta.
+        r.push(fb(2, 3.0));
+        let (got, next) = r.snapshot_since(next);
+        assert_eq!(got.iter().map(|f| f.step).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(next, 3);
+        // Cursor at (or past) the tip: empty delta, cursor unchanged.
+        assert_eq!(r.snapshot_since(3).0.len(), 0);
+        assert_eq!(r.snapshot_since(100), (vec![], 3));
+    }
+
+    #[test]
+    fn snapshot_since_survives_wraparound() {
+        let mut r = FeedbackRing::new(3);
+        for i in 0..7u64 {
+            r.push(fb(i, i as f64));
+        }
+        // Seqs 0..7 pushed; only 4, 5, 6 are retained.
+        let (got, next) = r.snapshot_since(5);
+        assert_eq!(got.iter().map(|f| f.step).collect::<Vec<_>>(), vec![5, 6]);
+        assert_eq!(next, 7);
+        // A reader that fell behind the ring gets the oldest retained
+        // samples (the overwritten prefix is gone, not an error).
+        let (got, next) = r.snapshot_since(1);
+        assert_eq!(got.iter().map(|f| f.step).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(next, 7);
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod feedback;
 pub mod knobs;
 pub mod oracle;
 
-pub use controller::{AutoTuner, TunerConfig, TunerState, TuningSummary};
+pub use controller::{AutoTuner, TunerCheckpoint, TunerConfig, TunerState, TuningSummary};
 pub use feedback::{FeedbackRing, StepFeedback};
 pub use knobs::{KnobPoint, KnobSpace};
 pub use oracle::{drive_until_exploit, noisy_oracle_step, OracleEnv};

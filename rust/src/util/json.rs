@@ -1,0 +1,246 @@
+//! Minimal JSON *reading* for the offline build (no `serde`).
+//!
+//! The repo already hand-rolls JSON emission ([`crate::report::json_str`],
+//! `Outcome::to_json`, `BenchReport::to_json`); this is the matching
+//! decode half, sized for the shapes we actually exchange: flat-ish
+//! objects of strings, numbers, booleans and nested objects. It is a
+//! tokenizer, not a validator — it walks one object's top level
+//! respecting string escapes and brace/bracket nesting, hands back raw
+//! value slices, and offers typed parsers for the leaves. Consumers:
+//! the `netbn serve` HTTP API bodies, the results/tuner store, and
+//! [`crate::tune::TunerCheckpoint`].
+
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+/// Split the top-level entries of a JSON object into `(key, raw value)`
+/// pairs. `src` must be one object (surrounding whitespace is fine);
+/// values come back as raw JSON text (strings still quoted, nested
+/// objects/arrays intact) for a typed parser below.
+pub fn object_fields(src: &str) -> Result<Vec<(String, String)>> {
+    let s = src.trim();
+    ensure!(
+        s.starts_with('{') && s.ends_with('}'),
+        "expected a JSON object, got {:?}",
+        truncate(s)
+    );
+    let inner = &s[1..s.len() - 1];
+    let bytes = inner.as_bytes();
+    let mut fields = Vec::new();
+    let mut i = skip_ws(bytes, 0);
+    while i < bytes.len() {
+        ensure!(bytes[i] == b'"', "expected a key string at byte {i} of {:?}", truncate(inner));
+        let key_end = string_end(bytes, i)?;
+        let key = parse_string(&inner[i..key_end])?;
+        i = skip_ws(bytes, key_end);
+        ensure!(
+            i < bytes.len() && bytes[i] == b':',
+            "expected ':' after key {key:?} in {:?}",
+            truncate(inner)
+        );
+        i = skip_ws(bytes, i + 1);
+        let value_end = value_end(bytes, i)
+            .with_context(|| format!("unterminated value for key {key:?}"))?;
+        fields.push((key, inner[i..value_end].trim().to_string()));
+        i = skip_ws(bytes, value_end);
+        if i < bytes.len() {
+            ensure!(bytes[i] == b',', "expected ',' at byte {i} of {:?}", truncate(inner));
+            i = skip_ws(bytes, i + 1);
+        }
+    }
+    Ok(fields)
+}
+
+/// The raw value for `key` among [`object_fields`] output.
+pub fn get<'a>(fields: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Like [`get`] but an error naming the key when absent.
+pub fn require<'a>(fields: &'a [(String, String)], key: &str) -> Result<&'a str> {
+    get(fields, key).with_context(|| format!("missing JSON field {key:?}"))
+}
+
+/// Decode one raw JSON string token (quotes included) to its text.
+pub fn parse_string(raw: &str) -> Result<String> {
+    let s = raw.trim();
+    ensure!(
+        s.len() >= 2 && s.starts_with('"') && s.ends_with('"'),
+        "expected a JSON string, got {:?}",
+        truncate(s)
+    );
+    let mut out = String::with_capacity(s.len() - 2);
+    let mut chars = s[1..s.len() - 1].chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('/') => out.push('/'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('b') => out.push('\u{8}'),
+            Some('f') => out.push('\u{c}'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                ensure!(hex.len() == 4, "truncated \\u escape in {:?}", truncate(s));
+                let code = u32::from_str_radix(&hex, 16)
+                    .with_context(|| format!("bad \\u escape {hex:?}"))?;
+                out.push(char::from_u32(code).with_context(|| format!("bad code point {code}"))?);
+            }
+            other => bail!("bad escape {other:?} in {:?}", truncate(s)),
+        }
+    }
+    Ok(out)
+}
+
+pub fn parse_f64(raw: &str) -> Result<f64> {
+    let s = raw.trim();
+    if s == "null" {
+        return Ok(f64::NAN);
+    }
+    s.parse::<f64>().with_context(|| format!("expected a number, got {:?}", truncate(s)))
+}
+
+pub fn parse_u64(raw: &str) -> Result<u64> {
+    raw.trim().parse::<u64>().with_context(|| format!("expected an integer, got {:?}", truncate(raw)))
+}
+
+pub fn parse_bool(raw: &str) -> Result<bool> {
+    match raw.trim() {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => bail!("expected a boolean, got {:?}", truncate(other)),
+    }
+}
+
+/// Decode an object whose values are all strings (e.g. a `params` map)
+/// into ordered pairs.
+pub fn parse_str_map(raw: &str) -> Result<Vec<(String, String)>> {
+    object_fields(raw)?
+        .into_iter()
+        .map(|(k, v)| Ok((k, parse_string(&v)?)))
+        .collect()
+}
+
+fn skip_ws(bytes: &[u8], mut i: usize) -> usize {
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Index one past the closing quote of the string starting at `i`.
+fn string_end(bytes: &[u8], i: usize) -> Result<usize> {
+    debug_assert_eq!(bytes[i], b'"');
+    let mut j = i + 1;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'\\' => j += 2,
+            b'"' => return Ok(j + 1),
+            _ => j += 1,
+        }
+    }
+    bail!("unterminated string");
+}
+
+/// Index one past the end of the value starting at `i`: a string, a
+/// balanced object/array, or a scalar running to the next top-level
+/// `,`/`}`/`]`.
+fn value_end(bytes: &[u8], i: usize) -> Result<usize> {
+    ensure!(i < bytes.len(), "missing value");
+    match bytes[i] {
+        b'"' => string_end(bytes, i),
+        b'{' | b'[' => {
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'"' => j = string_end(bytes, j)?.saturating_sub(1),
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Ok(j + 1);
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            bail!("unbalanced object/array");
+        }
+        _ => {
+            let mut j = i;
+            while j < bytes.len() && !matches!(bytes[j], b',' | b'}' | b']') {
+                j += 1;
+            }
+            Ok(j)
+        }
+    }
+}
+
+fn truncate(s: &str) -> String {
+    if s.len() <= 60 {
+        s.to_string()
+    } else {
+        let cut = (0..=60).rev().find(|c| s.is_char_boundary(*c)).unwrap_or(0);
+        format!("{}…", &s[..cut])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_top_level_fields() {
+        let f = object_fields(
+            r#"{"a":"x","n":1.5,"flag":true,"obj":{"inner":[1,2]},"list":[{"b":"}"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_string(get(&f, "a").unwrap()).unwrap(), "x");
+        assert_eq!(parse_f64(get(&f, "n").unwrap()).unwrap(), 1.5);
+        assert!(parse_bool(get(&f, "flag").unwrap()).unwrap());
+        assert_eq!(get(&f, "obj").unwrap(), r#"{"inner":[1,2]}"#);
+        // Braces inside strings don't confuse the nesting walk.
+        assert_eq!(get(&f, "list").unwrap(), r#"[{"b":"}"}]"#);
+        assert!(get(&f, "missing").is_none());
+        assert!(require(&f, "missing").is_err());
+    }
+
+    #[test]
+    fn round_trips_report_escapes() {
+        // Everything crate::report::json_str emits must decode back.
+        let original = "a \"quoted\" line\nwith\ttabs \\ and \u{1} control";
+        let encoded = crate::report::json_str(original);
+        assert_eq!(parse_string(&encoded).unwrap(), original);
+    }
+
+    #[test]
+    fn parses_string_maps_in_order() {
+        let m = parse_str_map(r#"{"model":"resnet50","workers":"8"}"#).unwrap();
+        assert_eq!(
+            m,
+            vec![
+                ("model".to_string(), "resnet50".to_string()),
+                ("workers".to_string(), "8".to_string())
+            ]
+        );
+        assert_eq!(parse_str_map("{}").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn null_number_is_nan_and_garbage_errors() {
+        assert!(parse_f64("null").unwrap().is_nan());
+        assert!(parse_f64("zebra").is_err());
+        assert!(parse_u64("1.5").is_err());
+        assert!(object_fields("[1,2]").is_err());
+        assert!(object_fields(r#"{"a":"#).is_err());
+        assert!(parse_string("nope").is_err());
+    }
+}

@@ -1,13 +1,16 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! PRNG (no `rand`), statistics, a criterion-style microbench harness, a
 //! miniature property-testing framework (no `proptest`), leveled logging,
-//! and human-readable formatting helpers.
+//! cooperative shutdown signals (no `ctrlc`), and human-readable
+//! formatting helpers.
 
 pub mod bench;
 pub mod fmt;
+pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 pub use rng::Rng;

@@ -1,0 +1,78 @@
+//! Process shutdown signals without a `libc` crate.
+//!
+//! The offline build has no `signal-hook`/`ctrlc`, so this binds the C
+//! `signal(2)` entry point directly (std already links libc on the
+//! platforms we run on). The handler is async-signal-safe by
+//! construction: it performs exactly one relaxed atomic store. Long
+//! loops (`netbn serve`'s accept loop, `netbn launch`'s rendezvous and
+//! wait loops) poll [`triggered`] and unwind cooperatively — draining
+//! running jobs, reaping `_worker` children and flushing stores instead
+//! of leaking them on Ctrl-C.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set (never cleared) by the handler on SIGINT/SIGTERM.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+const SIGINT: i32 = 2;
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" {
+    /// `sighandler_t signal(int signum, sighandler_t handler)` — carried
+    /// as `usize` because the two special handlers (`SIG_DFL`/`SIG_IGN`)
+    /// are integer constants, not function pointers.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    SHUTDOWN.store(true, Ordering::Relaxed);
+}
+
+/// Install the SIGINT/SIGTERM handler. Idempotent; safe to call from
+/// any thread before the loops that poll [`triggered`] start.
+pub fn install() {
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+}
+
+/// Has a shutdown signal arrived since the last [`reset`]?
+pub fn triggered() -> bool {
+    SHUTDOWN.load(Ordering::Relaxed)
+}
+
+/// Clear the flag (tests, and re-entrant embedders that survive one
+/// drain and want to watch for the next signal).
+pub fn reset() {
+    SHUTDOWN.store(false, Ordering::Relaxed);
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    extern "C" {
+        fn raise(signum: i32) -> i32;
+    }
+
+    #[test]
+    fn handler_sets_flag_without_killing_the_process() {
+        install();
+        reset();
+        assert!(!triggered());
+        // With the handler installed, SIGTERM must be swallowed into the
+        // flag instead of taking the default (terminate) disposition.
+        unsafe {
+            raise(SIGTERM);
+        }
+        assert!(triggered());
+        reset();
+        assert!(!triggered());
+    }
+}
