@@ -328,6 +328,10 @@ pub struct ExperimentConfig {
     pub steps: usize,
     pub warmup_steps: usize,
     pub seed: u64,
+    /// Bound on the launch paths' worker rendezvous, seconds (`netbn
+    /// launch --rendezvous-timeout`; also each elastic membership-epoch
+    /// formation).
+    pub rendezvous_timeout_s: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -348,6 +352,7 @@ impl Default for ExperimentConfig {
             steps: 30,
             warmup_steps: 5,
             seed: 0x5eed,
+            rendezvous_timeout_s: 60.0,
         }
     }
 }
@@ -403,6 +408,9 @@ impl ExperimentConfig {
         }
         if self.steps == 0 {
             errs.push("steps must be >= 1".into());
+        }
+        if !(self.rendezvous_timeout_s.is_finite() && self.rendezvous_timeout_s > 0.0) {
+            errs.push("rendezvous_timeout_s must be finite and > 0".into());
         }
         if errs.is_empty() {
             Ok(())
@@ -524,6 +532,18 @@ mod tests {
         assert!(c.validate().is_err());
         // Disabled autotune never blocks validation, whatever it holds.
         c.autotune.enabled = false;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_rendezvous_timeout() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.rendezvous_timeout_s, 60.0);
+        c.rendezvous_timeout_s = 0.0;
+        assert!(c.validate().is_err());
+        c.rendezvous_timeout_s = f64::NAN;
+        assert!(c.validate().is_err());
+        c.rendezvous_timeout_s = 0.5;
         c.validate().unwrap();
     }
 

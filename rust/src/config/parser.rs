@@ -138,6 +138,7 @@ fn parse_value(s: &str) -> Result<Value> {
 /// steps = 30
 /// warmup_steps = 5
 /// seed = 1234
+/// rendezvous_timeout_s = 60.0  # launch worker-registration deadline
 /// autotune = true             # or [autotune] enabled = true
 /// [autotune]
 /// enabled = true
@@ -210,6 +211,7 @@ pub fn experiment_from_doc(doc: &Doc) -> Result<ExperimentConfig> {
             "steps" => c.steps = get_usize(val, key)?,
             "warmup_steps" => c.warmup_steps = get_usize(val, key)?,
             "seed" => c.seed = get_usize(val, key)? as u64,
+            "rendezvous_timeout_s" => c.rendezvous_timeout_s = get_f64(val, key)?,
             "fusion.buffer_mb" => {
                 c.fusion = FusionConfig {
                     buffer_bytes: (get_f64(val, key)? * 1e6) as usize,
@@ -345,6 +347,18 @@ compressions = "none,fp16,4"
         assert!(
             experiment_from_str("[autotune]\nenabled = true\nbucket_mbs = \"0\"").is_err()
         );
+    }
+
+    #[test]
+    fn rendezvous_timeout_parses_and_validates() {
+        let c = experiment_from_str("rendezvous_timeout_s = 7.5").unwrap();
+        assert_eq!(c.rendezvous_timeout_s, 7.5);
+        // Integers coerce like every other float key.
+        let c = experiment_from_str("rendezvous_timeout_s = 10").unwrap();
+        assert_eq!(c.rendezvous_timeout_s, 10.0);
+        // Zero and strings are rejected (validation and type check).
+        assert!(experiment_from_str("rendezvous_timeout_s = 0").is_err());
+        assert!(experiment_from_str("rendezvous_timeout_s = \"fast\"").is_err());
     }
 
     #[test]

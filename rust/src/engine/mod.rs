@@ -46,6 +46,7 @@ pub mod outcome;
 pub mod params;
 pub mod registry;
 pub mod runner;
+pub(crate) mod scenarios_chaos;
 pub(crate) mod scenarios_hier;
 pub(crate) mod scenarios_overlap;
 pub(crate) mod scenarios_serve;

@@ -121,9 +121,11 @@ impl ScenarioRegistry {
     /// `e2e_tcp_smoke`), the three overlap scenarios
     /// (`overlap_ablation`, `bucket_size_sweep`,
     /// `scaling_factor_recovered`), the three autotune scenarios
-    /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`)
-    /// and the two service scenarios (`multi_tenant_contention`,
-    /// `serve_throughput`).
+    /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`),
+    /// the two service scenarios (`multi_tenant_contention`,
+    /// `serve_throughput`) and the three chaos scenarios
+    /// (`elastic_scaleout`, `straggler_injection`,
+    /// `worker_crash_recovery`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -241,6 +243,7 @@ impl ScenarioRegistry {
         super::scenarios_overlap::register(&mut r).expect("builtin registration");
         super::scenarios_tune::register(&mut r).expect("builtin registration");
         super::scenarios_serve::register(&mut r).expect("builtin registration");
+        super::scenarios_chaos::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -343,7 +346,7 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 30, "only {} scenarios", r.len());
+        assert!(r.len() >= 33, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
@@ -352,6 +355,7 @@ mod tests {
             "oversub_sweep", "e2e_tcp_smoke", "overlap_ablation", "bucket_size_sweep",
             "scaling_factor_recovered", "autotune_convergence", "autotune_vs_static",
             "autotune_adapt", "multi_tenant_contention", "serve_throughput",
+            "elastic_scaleout", "straggler_injection", "worker_crash_recovery",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

@@ -276,6 +276,8 @@ impl super::runner::Runner for E2eSmokeRunner {
             },
             spawn,
             feedback_out: None,
+            rendezvous_timeout: std::time::Duration::from_secs(60),
+            bind: "127.0.0.1:0".parse().unwrap(),
         };
         let r = launch(&cfg)?;
         let t = r.step_table();

@@ -128,11 +128,15 @@ impl super::runner::Runner for OverlapAblationRunner {
             params: params.clone(),
             spawn: SpawnMode::Thread,
             feedback_out: None,
+            rendezvous_timeout: std::time::Duration::from_secs(60),
+            bind: "127.0.0.1:0".parse().unwrap(),
         })?;
         let overlapped = launch(&LaunchConfig {
             params: WorkerParams { overlap: OverlapMode::Buckets, ..params },
             spawn: SpawnMode::Thread,
             feedback_out: None,
+            rendezvous_timeout: std::time::Duration::from_secs(60),
+            bind: "127.0.0.1:0".parse().unwrap(),
         })?;
 
         let off_s = mean_steady_step(&blocking);

@@ -256,6 +256,8 @@ fn run_fnv_leg(out: &mut Outcome, seed: u64) -> Result<()> {
         params: params.clone(),
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })?;
     let tuned_run = launch(&LaunchConfig {
         params: WorkerParams {
@@ -265,6 +267,8 @@ fn run_fnv_leg(out: &mut Outcome, seed: u64) -> Result<()> {
         },
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })?;
     out.metric("fnv_knob_changes", tuned_run.knob_trajectory.len().saturating_sub(1) as f64);
     out.checks.push(Check::assert(
@@ -525,11 +529,15 @@ fn run_adapt_launch(p: &ParamValues) -> Result<Outcome> {
         params: params.clone(),
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })?;
     let static_run = launch(&LaunchConfig {
         params: WorkerParams { autotune: false, chunk_kbs: Vec::new(), ..params },
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })?;
 
     let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;

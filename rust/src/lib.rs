@@ -38,7 +38,7 @@
 //! | domain | [`sched`] | overlap scheduling: async collective engine (non-blocking handles), DDP-style bucketizer, compute/comm overlap scheduler (`--overlap off\|buckets`, `--bucket-mb`) |
 //! | domain | [`tune`] | online autotuning control plane: per-step feedback, the typed knob space (bucket × stripes × chunk × collective × compression), the warmup→probe→exploit `AutoTuner`, and the analytic oracle (`--autotune`, `netbn tune`) |
 //! | mode | [`sim`] | the paper's §3 what-if simulator + ablation sweeps + hierarchical and overlap cost models |
-//! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap; `launch` runs real worker processes over loopback TCP |
+//! | mode | [`trainer`] | data-parallel worker loop with backward/all-reduce overlap; `launch` runs real worker processes over host-addressable TCP rendezvous (loopback default); `elastic` adds membership churn, checkpoint/replay crash recovery and straggler detection |
 //! | mode | [`runtime`] | PJRT wrapper: load + execute AOT artifacts (vendored stub offline) |
 //! | mode | [`figures`] | per-figure experiment drivers (Fig 1–8) |
 //! | engine | [`engine`] | `Scenario` / `Runner` / `Outcome` / `ScenarioRegistry` / `SweepBuilder` — every experiment as a named, parameterized, sweepable scenario (see ENGINE.md) |

@@ -140,7 +140,18 @@ fn app() -> App {
                     OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
                     OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
                     OptSpec::optional("feedback-out", "write per-step step_feedback JSONL here"),
-                    OptSpec::value("spawn", "process|thread (thread = in-test smoke mode)", "process"),
+                    OptSpec::value(
+                        "spawn",
+                        "process|thread|external (external = serve the rendezvous only; start \
+                         workers yourself with `netbn _worker --coordinator host:port`)",
+                        "process",
+                    ),
+                    OptSpec::value("rendezvous-timeout", "seconds to wait for all workers to register", "60"),
+                    OptSpec::value(
+                        "bind",
+                        "coordinator bind address (a routable IP for multi-host cohorts)",
+                        "127.0.0.1:0",
+                    ),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
                 ],
                 positional: vec![],
@@ -166,6 +177,16 @@ fn app() -> App {
                     OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
                     OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "_eworker",
+                about: "(internal) one elastic worker of an elastic/chaos launch",
+                opts: vec![
+                    OptSpec::optional("uid", "this worker's unique id"),
+                    OptSpec::optional("coordinator", "coordinator host:port"),
+                    OptSpec::optional("die-at", "(fault injection) drop dead at this step"),
                 ],
                 positional: vec![],
             },
@@ -272,6 +293,7 @@ fn run(argv: &[String]) -> Result<bool> {
             "train" => cmd_train(&args),
             "launch" => cmd_launch(&args),
             "_worker" => cmd_worker(&args),
+            "_eworker" => cmd_eworker(&args),
             "tune" => cmd_tune(&args),
             "bench" => cmd_bench(&registry, &args),
             "serve" => cmd_serve(&args),
@@ -642,13 +664,27 @@ fn cmd_launch(args: &Args) -> Result<bool> {
     use netbn::trainer::launch::{launch, LaunchConfig, SpawnMode};
     let workers = args.get_usize("workers", 4)?;
     let spawn_s = args.get_or("spawn", "process");
-    let spawn = SpawnMode::parse(spawn_s)
-        .ok_or_else(|| anyhow::anyhow!("--spawn: expected process|thread, got {spawn_s:?}"))?;
+    let spawn = SpawnMode::parse(spawn_s).ok_or_else(|| {
+        anyhow::anyhow!("--spawn: expected process|thread|external, got {spawn_s:?}")
+    })?;
+    let timeout_s = args.get_f64("rendezvous-timeout", 60.0)?;
+    anyhow::ensure!(
+        timeout_s.is_finite() && timeout_s > 0.0,
+        "--rendezvous-timeout must be a positive number of seconds, got {timeout_s}"
+    );
+    let bind_s = args.get_or("bind", "127.0.0.1:0");
+    let bind: std::net::SocketAddr = bind_s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--bind: expected ip:port, got {bind_s:?}"))?;
     let params = worker_params(args, workers)?;
     println!(
         "launch: {workers} workers ({}), {} steps, {} elems, transport {}, collective {}, \
          overlap {} (bucket-mb {}, {} layers, {} us compute{})",
-        if spawn == SpawnMode::Process { "processes" } else { "threads" },
+        match spawn {
+            SpawnMode::Process => "processes",
+            SpawnMode::Thread => "threads",
+            SpawnMode::External => "externally started",
+        },
         params.steps,
         params.elems,
         params.transport,
@@ -660,7 +696,13 @@ fn cmd_launch(args: &Args) -> Result<bool> {
         if params.autotune { ", autotune on" } else { "" },
     );
     let feedback_out = args.get("feedback-out").map(PathBuf::from);
-    let r = launch(&LaunchConfig { params, spawn, feedback_out: feedback_out.clone() })?;
+    let r = launch(&LaunchConfig {
+        params,
+        spawn,
+        feedback_out: feedback_out.clone(),
+        rendezvous_timeout: std::time::Duration::from_secs_f64(timeout_s),
+        bind,
+    })?;
     println!("{}", r.step_table().render());
     println!("effective bus bandwidth: {:.3} Gbps", r.effective_bus_gbps);
     if !r.knob_trajectory.is_empty() {
@@ -831,6 +873,26 @@ fn cmd_worker(args: &Args) -> Result<bool> {
         .ok_or_else(|| anyhow::anyhow!("_worker needs --coordinator host:port"))?;
     let params = worker_params(args, world)?;
     netbn::trainer::launch::worker_entry(rank, coordinator, &params)?;
+    Ok(true)
+}
+
+fn cmd_eworker(args: &Args) -> Result<bool> {
+    let uid = args
+        .get("uid")
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| anyhow::anyhow!("_eworker needs --uid"))?;
+    let coordinator = args
+        .get("coordinator")
+        .and_then(|s| s.parse::<std::net::SocketAddr>().ok())
+        .ok_or_else(|| anyhow::anyhow!("_eworker needs --coordinator host:port"))?;
+    let die_at = args
+        .get("die-at")
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--die-at: expected a step number, got {s:?}"))
+        })
+        .transpose()?;
+    netbn::trainer::elastic::elastic_worker_entry(uid, coordinator, die_at)?;
     Ok(true)
 }
 

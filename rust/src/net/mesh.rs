@@ -24,10 +24,11 @@ use crate::topology::WorkerId;
 use crate::Result;
 use anyhow::Context;
 use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 /// One worker's bound-but-not-yet-connected half of a mesh fabric: a
 /// listener plus the mailbox its reader threads dispatch into. Create
@@ -60,8 +61,15 @@ impl MeshNode {
     /// Bind a loopback listener for rank `me` of `world` and start its
     /// accept loop.
     pub fn bind(me: WorkerId, world: usize) -> Result<MeshNode> {
+        MeshNode::bind_on(IpAddr::V4(Ipv4Addr::LOCALHOST), me, world)
+    }
+
+    /// Bind a listener on a specific interface — the one routing to the
+    /// coordinator in a multi-host launch — for rank `me` of `world`, and
+    /// start its accept loop.
+    pub fn bind_on(ip: IpAddr, me: WorkerId, world: usize) -> Result<MeshNode> {
         anyhow::ensure!(world >= 1 && me.0 < world, "rank {me} out of a world of {world}");
-        let listener = TcpListener::bind("127.0.0.1:0").context("bind mesh listener")?;
+        let listener = TcpListener::bind((ip, 0)).context("bind mesh listener")?;
         let addr = listener.local_addr()?;
         let mailbox = Arc::new(Mailbox::default());
         let closed = Arc::new(AtomicBool::new(false));
@@ -117,6 +125,7 @@ impl MeshNode {
             mailbox: Arc::clone(&self.mailbox),
             closed: Arc::clone(&self.closed),
             senders: Mutex::new(HashMap::new()),
+            recv_timeout_ms: AtomicU64::new(0),
         }))
     }
 }
@@ -132,9 +141,36 @@ pub struct MeshEndpoint {
     closed: Arc<AtomicBool>,
     /// Lazily-opened outgoing streams, one per destination.
     senders: Mutex<HashMap<usize, Arc<Mutex<TcpStream>>>>,
+    /// Deadline applied to every `recv`, in milliseconds; 0 = block forever.
+    recv_timeout_ms: AtomicU64,
 }
 
 impl MeshEndpoint {
+    /// Bound every subsequent `recv`: a receive still blocked after
+    /// `timeout` fails naming the absent rank instead of wedging the
+    /// collective behind a dead peer. `None` restores unbounded blocking.
+    pub fn set_recv_timeout(&self, timeout: Option<Duration>) {
+        let ms = timeout.map_or(0, |t| t.as_millis().max(1) as u64);
+        self.recv_timeout_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Mark this endpoint's mailbox broken: every blocked and future
+    /// `recv` fails with `why`. Used when a co-dependent lane or shard has
+    /// observed a dead peer, so sibling threads unwind instead of hanging.
+    pub fn poison(&self, why: impl Into<String>) {
+        self.mailbox.poison(why);
+    }
+
+    /// Tear down outgoing connections (epoch change): shut down every
+    /// cached sender stream so peers observe EOF promptly, and forget
+    /// them so any later send would re-dial.
+    pub fn reap(&self) {
+        let mut senders = self.senders.lock().unwrap();
+        for (_, s) in senders.drain() {
+            let _ = s.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        }
+    }
+
     fn sender_to(&self, to: usize) -> Result<Arc<Mutex<TcpStream>>> {
         if let Some(s) = self.senders.lock().unwrap().get(&to) {
             return Ok(Arc::clone(s));
@@ -178,7 +214,9 @@ impl Endpoint for MeshEndpoint {
 
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
         anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
-        self.mailbox.take(from.0, tag)
+        let ms = self.recv_timeout_ms.load(Ordering::SeqCst);
+        let timeout = (ms > 0).then(|| Duration::from_millis(ms));
+        self.mailbox.take_deadline(from.0, tag, timeout)
     }
 }
 
@@ -261,6 +299,48 @@ mod tests {
         a.send(WorkerId(1), 5, &payload).unwrap();
         assert_eq!(t.join().unwrap(), want);
         drop(eps);
+    }
+
+    #[test]
+    fn recv_timeout_names_the_dead_rank() {
+        let eps = mesh(2);
+        eps[0].set_recv_timeout(Some(Duration::from_millis(40)));
+        let err = eps[0].recv(WorkerId(1), 9).unwrap_err().to_string();
+        assert!(err.contains("rank 1"), "{err}");
+        // Clearing the deadline restores unbounded blocking semantics for
+        // messages that do arrive.
+        eps[0].set_recv_timeout(None);
+        eps[1].send(WorkerId(0), 9, b"alive").unwrap();
+        assert_eq!(eps[0].recv(WorkerId(1), 9).unwrap(), b"alive");
+    }
+
+    #[test]
+    fn poison_fails_pending_recvs() {
+        let eps = mesh(2);
+        let a = Arc::clone(&eps[0]);
+        let t = thread::spawn(move || a.recv(WorkerId(1), 3));
+        thread::sleep(Duration::from_millis(20));
+        eps[0].poison("peer 1 declared dead");
+        let err = t.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("peer 1 declared dead"), "{err}");
+    }
+
+    #[test]
+    fn reap_closes_outgoing_streams() {
+        let eps = mesh(2);
+        eps[0].send(WorkerId(1), 4, b"pre-reap").unwrap();
+        assert_eq!(eps[1].recv(WorkerId(0), 4).unwrap(), b"pre-reap");
+        eps[0].reap();
+        // A later send re-dials transparently.
+        eps[0].send(WorkerId(1), 5, b"post-reap").unwrap();
+        assert_eq!(eps[1].recv(WorkerId(0), 5).unwrap(), b"post-reap");
+    }
+
+    #[test]
+    fn bind_on_explicit_loopback_interface() {
+        let node =
+            MeshNode::bind_on(IpAddr::V4(Ipv4Addr::LOCALHOST), WorkerId(0), 1).unwrap();
+        assert!(node.addr().ip().is_loopback());
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub mod tags {
     pub const BARRIER: u8 = 8;
     /// Leader-to-member broadcast in the hierarchical all-reduce.
     pub const HIER_BCAST: u8 = 9;
+    /// Per-shard gradient blob all-gather in the elastic trainer
+    /// ([`crate::trainer::elastic`]).
+    pub const SHARD_GATHER: u8 = 10;
 }
 
 /// A worker's handle onto the fabric. Clone-able and thread-safe so the
@@ -111,6 +114,19 @@ impl Mailbox {
     }
 
     pub(crate) fn take(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        self.take_deadline(from, tag, None)
+    }
+
+    /// Like `take`, but with an optional deadline: a take that would still
+    /// be blocked after `timeout` fails with an error naming the absent
+    /// peer, instead of hanging the collective forever behind a dead rank.
+    pub(crate) fn take_deadline(
+        &self,
+        from: usize,
+        tag: u64,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<Vec<u8>> {
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(dq) = st.queues.get_mut(&(from, tag)) {
@@ -121,7 +137,20 @@ impl Mailbox {
             if let Some(why) = &st.poison {
                 anyhow::bail!("mailbox poisoned: {why}");
             }
-            st = self.cv.wait(st).unwrap();
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let now = std::time::Instant::now();
+                    if now >= d {
+                        anyhow::bail!(
+                            "recv deadline expired waiting on rank {from} (tag {tag:#x}): \
+                             peer is dead or stalled"
+                        );
+                    }
+                    let (guard, _timed_out) = self.cv.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+            }
         }
     }
 
@@ -171,6 +200,29 @@ mod tests {
         // ...but a take that would block fails instead of hanging.
         let err = mb.take(0, 1).unwrap_err().to_string();
         assert!(err.contains("truncated frame"), "{err}");
+    }
+
+    #[test]
+    fn take_deadline_expires_naming_the_absent_rank() {
+        let mb = Mailbox::default();
+        let err = mb
+            .take_deadline(4, 7, Some(std::time::Duration::from_millis(30)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank 4"), "{err}");
+        assert!(err.contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn take_deadline_delivers_when_message_arrives_in_time() {
+        let mb = std::sync::Arc::new(Mailbox::default());
+        let mb2 = std::sync::Arc::clone(&mb);
+        let t = std::thread::spawn(move || {
+            mb2.take_deadline(1, 2, Some(std::time::Duration::from_secs(5)))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mb.put(1, 2, b"late but in time".to_vec());
+        assert_eq!(t.join().unwrap().unwrap(), b"late but in time");
     }
 
     #[test]

@@ -1,0 +1,1304 @@
+//! Elastic multi-process training with fault injection and recovery.
+//!
+//! `netbn launch` (see [`super::launch`]) drives a *fixed* cohort: the
+//! world size is decided before rendezvous and a dead worker fails the
+//! run. This module closes ROADMAP item 1's robustness half: membership
+//! is **elastic** — workers join and leave at step boundaries, a killed
+//! worker's shard is replayed from a checkpoint — and yet the final
+//! parameter bits are provably identical to an uninterrupted run.
+//!
+//! The determinism scheme: the data-parallel work is split over a fixed
+//! **logical shard count** `L` that never changes, only the assignment of
+//! shards to live workers does. Shard `s`'s gradient stream is a private
+//! RNG seeded from `(seed, s)`, advanced once per step — any worker can
+//! (re)compute shard `s` at step `t` by fast-forwarding the stream, which
+//! is how a crashed worker's shard is replayed. Each step every worker
+//! computes its owned shards, all-gathers the raw per-shard gradient
+//! blobs (tag [`crate::net::tags::SHARD_GATHER`]), and sums them **in
+//! logical shard order `0..L`**. Floating-point addition is not
+//! associative, but a fixed summation order makes the result independent
+//! of which physical worker computed what — so an elastic run, a
+//! fixed-membership run, and the single-process oracle
+//! ([`expected_params`]) all produce the same bits, FNV-checkable with
+//! [`super::launch::tensor_checksum`].
+//!
+//! Failure handling: every collective recv carries a deadline
+//! ([`crate::net::mesh::MeshEndpoint::set_recv_timeout`]), so a dead peer
+//! surfaces as an error naming the absent rank instead of a wedge.
+//! Survivors poison their mailbox, abort to the coordinator, and rejoin;
+//! the coordinator forms a new membership **epoch** — re-sharding over
+//! the survivors, rolling laggards forward from the max-step survivor's
+//! checkpoint — and the run completes. With recovery disabled the first
+//! death fails the launch fast, naming the dead worker.
+
+use super::launch::{tensor_checksum, SpawnMode};
+use crate::net::mesh::MeshNode;
+use crate::net::tcp::connect_retry;
+use crate::net::{tag, tags, Endpoint};
+use crate::topology::WorkerId;
+use crate::tune::{straggler_scores, FeedbackRing, StepFeedback, StragglerScore};
+use crate::util::Rng;
+use crate::Result;
+use anyhow::Context;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Shared experiment shape — identical on every participant.
+#[derive(Clone, Debug)]
+pub struct ElasticParams {
+    /// Fixed logical shard count `L` (the data-parallel width that never
+    /// changes; physical workers own contiguous shard ranges).
+    pub shards: usize,
+    /// Parameter/gradient tensor length (f32 elements).
+    pub elems: usize,
+    /// Total training steps.
+    pub steps: usize,
+    pub seed: u64,
+    /// Modeled compute per step, microseconds (plus any injected skew).
+    pub compute_us: u64,
+    /// Bound on rendezvous and on each membership-epoch formation.
+    pub rendezvous_timeout: Duration,
+    /// Straggler scoring window (newest steps per worker).
+    pub straggler_window: usize,
+    /// Flag a worker whose mean compute exceeds `threshold x` the cohort
+    /// median (see [`crate::tune::straggler_scores`]).
+    pub straggler_threshold: f64,
+}
+
+impl Default for ElasticParams {
+    fn default() -> Self {
+        ElasticParams {
+            shards: 8,
+            elems: 4096,
+            steps: 6,
+            seed: 0xe1a5,
+            compute_us: 0,
+            rendezvous_timeout: Duration::from_secs(60),
+            straggler_window: 8,
+            straggler_threshold: 2.0,
+        }
+    }
+}
+
+/// Scheduled membership: which workers exist, and when they enter or
+/// leave the cohort (always at a step boundary).
+#[derive(Clone, Debug, Default)]
+pub struct MembershipPlan {
+    /// Worker uids active from step 0.
+    pub initial: Vec<u64>,
+    /// `(uid, step)`: uid starts participating at `step`.
+    pub joins: Vec<(u64, usize)>,
+    /// `(uid, step)`: uid stops participating at `step`.
+    pub leaves: Vec<(u64, usize)>,
+}
+
+impl MembershipPlan {
+    /// Every uid the plan ever references (spawn set).
+    pub fn all_uids(&self) -> Vec<u64> {
+        let mut set: BTreeSet<u64> = self.initial.iter().copied().collect();
+        set.extend(self.joins.iter().map(|(u, _)| *u));
+        set.into_iter().collect()
+    }
+
+    /// The cohort that should be training at step `at` (sorted by uid —
+    /// the rank order of every epoch).
+    pub fn active_at(&self, at: usize) -> BTreeSet<u64> {
+        let mut set: BTreeSet<u64> = self.initial.iter().copied().collect();
+        for (u, s) in &self.joins {
+            if *s <= at {
+                set.insert(*u);
+            }
+        }
+        for (u, s) in &self.leaves {
+            if *s <= at {
+                set.remove(u);
+            }
+        }
+        set
+    }
+
+    /// The next scheduled membership change strictly after `at`, capped
+    /// at `steps` — the end of the epoch that starts at `at`.
+    fn next_boundary(&self, at: usize, steps: usize) -> usize {
+        self.joins
+            .iter()
+            .chain(self.leaves.iter())
+            .map(|(_, s)| *s)
+            .filter(|s| *s > at)
+            .min()
+            .unwrap_or(steps)
+            .min(steps)
+    }
+}
+
+/// Scripted faults the coordinator injects or expects.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// `(uid, step)`: the worker abruptly exits (socket drops, no
+    /// goodbye) when it reaches `step` — a crash simulated in-process,
+    /// works in thread and process mode.
+    pub die: Option<(u64, usize)>,
+    /// `(uid, step)`: the coordinator SIGKILLs the worker's real OS
+    /// process once it reports reaching `step` (process mode only).
+    pub kill: Option<(u64, usize)>,
+    /// `(uid, extra_us)`: added per-step compute skew — the straggler.
+    pub straggle: Vec<(u64, u64)>,
+    /// Replay the dead worker's shards from a checkpoint and finish the
+    /// run (`true`), or fail fast naming the dead worker (`false`).
+    pub recovery: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { die: None, kill: None, straggle: Vec::new(), recovery: true }
+    }
+}
+
+/// One elastic launch invocation.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    pub params: ElasticParams,
+    pub plan: MembershipPlan,
+    pub fault: FaultPlan,
+    pub spawn: SpawnMode,
+    /// Coordinator bind address (`127.0.0.1:0` for loopback runs; a
+    /// routable interface for multi-host cohorts).
+    pub bind: SocketAddr,
+}
+
+impl ElasticConfig {
+    pub fn loopback(params: ElasticParams, plan: MembershipPlan) -> ElasticConfig {
+        ElasticConfig {
+            params,
+            plan,
+            fault: FaultPlan::default(),
+            spawn: SpawnMode::Thread,
+            bind: "127.0.0.1:0".parse().expect("loopback literal"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let p = &self.params;
+        anyhow::ensure!(p.shards >= 1, "elastic needs >= 1 logical shard");
+        anyhow::ensure!(p.elems >= 1, "elastic needs >= 1 tensor element");
+        anyhow::ensure!(p.steps >= 1, "elastic needs >= 1 step");
+        anyhow::ensure!(
+            p.rendezvous_timeout > Duration::ZERO,
+            "rendezvous timeout must be > 0"
+        );
+        anyhow::ensure!(p.straggler_window >= 1, "straggler window must be >= 1");
+        anyhow::ensure!(
+            p.straggler_threshold.is_finite() && p.straggler_threshold > 1.0,
+            "straggler threshold must be finite and > 1"
+        );
+        anyhow::ensure!(!self.plan.initial.is_empty(), "initial membership is empty");
+        let mut seen = BTreeSet::new();
+        for u in &self.plan.initial {
+            anyhow::ensure!(seen.insert(*u), "uid {u} listed twice in initial membership");
+        }
+        for (u, s) in &self.plan.joins {
+            anyhow::ensure!(seen.insert(*u), "joining uid {u} already a member");
+            anyhow::ensure!(
+                (1..p.steps).contains(s),
+                "join step {s} for uid {u} must be inside the run (1..{})",
+                p.steps
+            );
+        }
+        let mut left = BTreeSet::new();
+        for (u, s) in &self.plan.leaves {
+            anyhow::ensure!(seen.contains(u), "leaving uid {u} is not a member");
+            anyhow::ensure!(left.insert(*u), "uid {u} leaves twice");
+            anyhow::ensure!(
+                (1..p.steps).contains(s),
+                "leave step {s} for uid {u} must be inside the run (1..{})",
+                p.steps
+            );
+            if let Some((_, joined)) = self.plan.joins.iter().find(|(ju, _)| ju == u) {
+                anyhow::ensure!(*s > *joined, "uid {u} leaves at {s} before joining");
+            }
+        }
+        anyhow::ensure!(
+            !self.plan.active_at(p.steps).is_empty(),
+            "no member remains at the end of the schedule"
+        );
+        // Every epoch's world must be covered by the shard count, so no
+        // rank ever owns zero shards.
+        let max_world = (0..=p.steps)
+            .map(|s| self.plan.active_at(s).len())
+            .max()
+            .unwrap_or(0);
+        anyhow::ensure!(
+            p.shards >= max_world,
+            "{} logical shards cannot cover a cohort of {max_world}",
+            p.shards
+        );
+        let member = |u: u64| seen.contains(&u);
+        if let Some((u, s)) = self.fault.die {
+            anyhow::ensure!(member(u), "die target uid {u} is not a member");
+            anyhow::ensure!(s < p.steps, "die step {s} past the run");
+        }
+        if let Some((u, s)) = self.fault.kill {
+            anyhow::ensure!(member(u), "kill target uid {u} is not a member");
+            anyhow::ensure!(s < p.steps, "kill step {s} past the run");
+            anyhow::ensure!(
+                self.spawn == SpawnMode::Process,
+                "SIGKILL injection needs real worker processes (--spawn process)"
+            );
+        }
+        for (u, extra) in &self.fault.straggle {
+            anyhow::ensure!(member(*u), "straggle target uid {u} is not a member");
+            anyhow::ensure!(*extra > 0, "straggle extra_us must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// What the coordinator learned from a finished elastic run.
+#[derive(Clone, Debug)]
+pub struct ElasticReport {
+    /// The cohort-identical FNV-1a checksum of the final parameters.
+    pub checksum: u64,
+    pub steps: usize,
+    /// Membership epochs formed (>= 1).
+    pub epochs: usize,
+    /// Worker deaths survived via checkpoint replay.
+    pub recoveries: usize,
+    /// Cohort size at the final step.
+    pub final_world: usize,
+    /// `(resume step, rank-ordered uids)` per epoch.
+    pub membership: Vec<(usize, Vec<u64>)>,
+    /// Per-worker straggler verdicts (sorted by uid).
+    pub stragglers: Vec<StragglerScore>,
+}
+
+// ------------------------------------------------------------ determinism
+
+/// Contiguous shard range owned by `rank` of `world` over `shards`
+/// logical shards (first `shards % world` ranks take one extra).
+pub fn shard_range(rank: usize, world: usize, shards: usize) -> Range<usize> {
+    assert!(rank < world, "rank {rank} out of world {world}");
+    let base = shards / world;
+    let rem = shards % world;
+    let start = rank * base + rank.min(rem);
+    let len = base + usize::from(rank < rem);
+    start..start + len
+}
+
+/// Shard `s`'s private gradient stream — any worker reconstructs it from
+/// the run seed alone (the replay property).
+fn shard_rng(seed: u64, shard: usize) -> Rng {
+    Rng::new(seed ^ 0xE1A5_71C0 ^ ((shard as u64) << 32))
+}
+
+/// Single-process oracle: the exact final parameters of an uninterrupted
+/// run, summing shard gradients in logical order `0..L` — the bit
+/// pattern every elastic run must reproduce.
+pub fn expected_params(p: &ElasticParams) -> Vec<f32> {
+    let mut streams: Vec<Rng> = (0..p.shards).map(|s| shard_rng(p.seed, s)).collect();
+    let mut params = vec![0.0f32; p.elems];
+    let mut g = vec![0.0f32; p.elems];
+    let inv = 1.0f32 / p.shards as f32;
+    for _ in 0..p.steps {
+        let mut acc = vec![0.0f32; p.elems];
+        for stream in streams.iter_mut() {
+            stream.fill_f32(&mut g, 1.0);
+            for (a, x) in acc.iter_mut().zip(&g) {
+                *a += *x;
+            }
+        }
+        for (w, a) in params.iter_mut().zip(&acc) {
+            *w -= 0.05 * a * inv;
+        }
+    }
+    params
+}
+
+/// FNV checksum of [`expected_params`] — the oracle the scenarios and
+/// the fault suite compare elastic runs against.
+pub fn expected_checksum(p: &ElasticParams) -> u64 {
+    tensor_checksum(&expected_params(p))
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    anyhow::ensure!(b.len() % 4 == 0, "f32 blob length {} not a multiple of 4", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------------ worker side
+
+/// How long a worker waits on a peer's shard blob before declaring it
+/// dead: generous against scheduler noise, small against the rendezvous
+/// timeout so a no-recovery failure is visibly "fast".
+fn recv_deadline(compute_us: u64) -> Duration {
+    Duration::from_millis(2_000) + Duration::from_micros(50 * compute_us)
+}
+
+/// One elastic worker's whole life: join, serve membership epochs until
+/// the coordinator says goodbye. `die_at` simulates a crash — reaching
+/// that global step the worker drops its sockets and exits without a
+/// word. This is what `netbn _eworker` calls.
+pub fn elastic_worker_entry(
+    uid: u64,
+    coordinator: SocketAddr,
+    die_at: Option<usize>,
+) -> Result<()> {
+    let coord = connect_retry(coordinator, Duration::from_secs(10))
+        .context("connect to elastic coordinator")?;
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let bind_ip = coord.local_addr()?.ip();
+    let mut writer = coord.try_clone()?;
+    let mut reader = BufReader::new(coord);
+    let pid = std::process::id();
+    writeln!(writer, "ejoin {uid} {pid} 0").context("send ejoin")?;
+
+    let mut params: Vec<f32> = Vec::new();
+    // Pending prep: (epoch, rank, world, extra_us, bound node).
+    let mut prep: Option<(usize, usize, usize, u64, MeshNode)> = None;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("read coordinator line")?;
+        anyhow::ensure!(n > 0, "coordinator closed the connection");
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("eprep") => {
+                let epoch: usize = parse_field(it.next(), "eprep epoch")?;
+                let rank: usize = parse_field(it.next(), "eprep rank")?;
+                let world: usize = parse_field(it.next(), "eprep world")?;
+                let extra_us: u64 = parse_field(it.next(), "eprep extra_us")?;
+                // Fresh node per epoch: the old peer table (and any
+                // half-dead connections) is torn down wholesale.
+                let node = MeshNode::bind_on(bind_ip, WorkerId(rank), world)?;
+                writeln!(writer, "eaddr {uid} {}", node.addr()).context("send eaddr")?;
+                prep = Some((epoch, rank, world, extra_us, node));
+            }
+            Some("epoch") => {
+                let (_epoch, rank, world, extra_us, node) =
+                    prep.take().context("epoch line without a preceding eprep")?;
+                let resume: usize = parse_field(it.next(), "epoch resume")?;
+                let until: usize = parse_field(it.next(), "epoch until")?;
+                let steps: usize = parse_field(it.next(), "epoch steps")?;
+                let shards: usize = parse_field(it.next(), "epoch shards")?;
+                let elems: usize = parse_field(it.next(), "epoch elems")?;
+                let seed: u64 = parse_field(it.next(), "epoch seed")?;
+                let compute_us: u64 = parse_field(it.next(), "epoch compute_us")?;
+                let wire_world: usize = parse_field(it.next(), "epoch world")?;
+                anyhow::ensure!(
+                    wire_world == world,
+                    "epoch world {wire_world} disagrees with prepped world {world}"
+                );
+                let addrs: Vec<SocketAddr> = (0..world)
+                    .map(|_| parse_field(it.next(), "epoch peer address"))
+                    .collect::<Result<_>>()?;
+                let plen: usize = parse_field(it.next(), "epoch checkpoint length")?;
+                if plen > 0 {
+                    let mut blob = vec![0u8; plen];
+                    reader.read_exact(&mut blob).context("read checkpoint blob")?;
+                    params = bytes_to_f32s(&blob)?;
+                    anyhow::ensure!(params.len() == elems, "checkpoint length mismatch");
+                } else if params.is_empty() {
+                    params = vec![0.0f32; elems];
+                }
+                let seg = run_segment(
+                    &mut params,
+                    SegmentSpec {
+                        rank,
+                        world,
+                        shards,
+                        elems,
+                        seed,
+                        resume,
+                        until,
+                        compute_us: compute_us + extra_us,
+                        die_at,
+                        addrs,
+                        node,
+                        uid,
+                        feedback: writer.try_clone()?,
+                    },
+                );
+                match seg {
+                    Ok(SegmentEnd::Died) => return Ok(()),
+                    Ok(SegmentEnd::Completed) => {
+                        if until == steps {
+                            let checksum = tensor_checksum(&params);
+                            writeln!(writer, "edone {uid} {checksum:x}")
+                                .context("send edone")?;
+                        } else {
+                            writeln!(writer, "ejoin {uid} {pid} {until}")
+                                .context("send ejoin")?;
+                        }
+                    }
+                    Err(e) => {
+                        // The failed epoch's progress is discarded; the
+                        // coordinator rolls us forward from a checkpoint.
+                        let reason = flatten_reason(&e);
+                        writeln!(writer, "eabort {uid} {resume} {reason}")
+                            .context("send eabort")?;
+                    }
+                }
+            }
+            Some("eparams?") => {
+                let blob = crate::collectives::f32s_as_bytes(&params).to_vec();
+                writeln!(writer, "eparams {}", blob.len()).context("send eparams header")?;
+                writer.write_all(&blob).context("send eparams blob")?;
+            }
+            Some("ebye") => return Ok(()),
+            Some("efail") => {
+                let reason: String = it.collect::<Vec<_>>().join(" ");
+                anyhow::bail!("coordinator failed the launch: {reason}");
+            }
+            other => anyhow::bail!("unexpected coordinator line {other:?}"),
+        }
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(field: Option<&str>, what: &str) -> Result<T> {
+    field
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad or missing field: {what}"))
+}
+
+fn flatten_reason(e: &anyhow::Error) -> String {
+    format!("{e:#}").replace('\n', " ")
+}
+
+enum SegmentEnd {
+    /// Ran every step in `resume..until`.
+    Completed,
+    /// Simulated crash: exit without a word.
+    Died,
+}
+
+struct SegmentSpec {
+    rank: usize,
+    world: usize,
+    shards: usize,
+    elems: usize,
+    seed: u64,
+    resume: usize,
+    until: usize,
+    compute_us: u64,
+    die_at: Option<usize>,
+    addrs: Vec<SocketAddr>,
+    node: MeshNode,
+    uid: u64,
+    /// Coordinator stream for live `estep` heartbeats.
+    feedback: TcpStream,
+}
+
+/// Run one epoch's steps `resume..until` of the elastic loop over a
+/// fresh mesh. The epoch is all-or-nothing: updates accumulate on a
+/// working copy and `params` is only overwritten after every step
+/// completed — on error the caller's parameters are untouched, which is
+/// what makes the coordinator's checkpoint/rollback sound.
+fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
+    let SegmentSpec {
+        rank,
+        world,
+        shards,
+        elems,
+        seed,
+        resume,
+        until,
+        compute_us,
+        die_at,
+        addrs,
+        node,
+        uid,
+        mut feedback,
+    } = spec;
+    let own = shard_range(rank, world, shards);
+    // Fast-forward the owned shard streams to `resume` by replaying
+    // their fills — the crash-replay mechanism.
+    let mut scratch = vec![0.0f32; elems];
+    let mut streams: Vec<Rng> = own
+        .clone()
+        .map(|s| {
+            let mut r = shard_rng(seed, s);
+            for _ in 0..resume {
+                r.fill_f32(&mut scratch, 1.0);
+            }
+            r
+        })
+        .collect();
+    let ep = node.connect(addrs)?;
+    ep.set_recv_timeout(Some(recv_deadline(compute_us)));
+    let compute_s = compute_us as f64 * 1e-6;
+    let mut working = params.clone();
+    let result = (|| -> Result<SegmentEnd> {
+        for step in resume..until {
+            if die_at == Some(step) {
+                ep.poison("simulated crash");
+                return Ok(SegmentEnd::Died);
+            }
+            let t_step = Instant::now();
+            // Own shards: fill from the per-shard streams, modeled
+            // compute, then one concatenated blob for the all-gather.
+            let mut own_grads: Vec<Vec<f32>> = Vec::with_capacity(own.len());
+            for stream in streams.iter_mut() {
+                let mut g = vec![0.0f32; elems];
+                stream.fill_f32(&mut g, 1.0);
+                own_grads.push(g);
+            }
+            let t_compute = Instant::now();
+            if compute_s > 0.0 {
+                super::spin_sleep(compute_s);
+            }
+            let compute_elapsed = t_compute.elapsed().as_secs_f64();
+            let mut blob = Vec::with_capacity(own.len() * elems * 4);
+            for g in &own_grads {
+                blob.extend_from_slice(crate::collectives::f32s_as_bytes(g));
+            }
+            let t = tag(tags::SHARD_GATHER, step as u32, 0);
+            for peer in 0..world {
+                if peer != rank {
+                    ep.send(WorkerId(peer), t, &blob)?;
+                }
+            }
+            let mut peer_blobs: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
+            for peer in 0..world {
+                if peer != rank {
+                    let raw = ep.recv(WorkerId(peer), t).map_err(|e| {
+                        ep.poison(format!("step {step}: {e}"));
+                        e.context(format!("all-gather at step {step}"))
+                    })?;
+                    peer_blobs[peer] = Some(bytes_to_f32s(&raw)?);
+                }
+            }
+            // Sum in logical shard order 0..L — the bit-identity pivot.
+            let mut acc = vec![0.0f32; elems];
+            for s in 0..shards {
+                let owner = (0..world)
+                    .find(|r| shard_range(*r, world, shards).contains(&s))
+                    .expect("every shard has an owner");
+                let range = shard_range(owner, world, shards);
+                let idx = s - range.start;
+                if owner == rank {
+                    for (a, x) in acc.iter_mut().zip(&own_grads[idx]) {
+                        *a += *x;
+                    }
+                } else {
+                    let flat = peer_blobs[owner].as_ref().expect("received above");
+                    anyhow::ensure!(
+                        flat.len() == range.len() * elems,
+                        "rank {owner} sent a blob of {} f32s, expected {}",
+                        flat.len(),
+                        range.len() * elems
+                    );
+                    let slice = &flat[idx * elems..(idx + 1) * elems];
+                    for (a, x) in acc.iter_mut().zip(slice) {
+                        *a += *x;
+                    }
+                }
+            }
+            let inv = 1.0f32 / shards as f32;
+            for (w, a) in working.iter_mut().zip(&acc) {
+                *w -= 0.05 * a * inv;
+            }
+            writeln!(
+                feedback,
+                "estep {uid} {step} {:.9} {:.9}",
+                t_step.elapsed().as_secs_f64(),
+                compute_elapsed
+            )
+            .context("send estep heartbeat")?;
+        }
+        Ok(SegmentEnd::Completed)
+    })();
+    if matches!(result, Ok(SegmentEnd::Completed)) {
+        *params = working;
+    }
+    result
+}
+
+// --------------------------------------------------------- coordinator side
+
+enum Ev {
+    Line(usize, String),
+    Blob(usize, Vec<u8>),
+    Eof(usize),
+}
+
+struct Member {
+    conn: usize,
+    writer: TcpStream,
+    pid: u32,
+    completed: usize,
+    /// Has an unanswered (e)join/abort — ready for the next epoch.
+    pending: bool,
+    /// Released with `ebye` (a scheduled leaver or a finished worker);
+    /// its EOF is expected, not a death.
+    byed: bool,
+    done: Option<u64>,
+    ring: FeedbackRing,
+    addr: Option<SocketAddr>,
+}
+
+struct PrepState {
+    resume: usize,
+    until: usize,
+    ranks: Vec<u64>,
+    need_blob: bool,
+    blob: Option<Vec<u8>>,
+    blob_from: Option<u64>,
+}
+
+/// Run a full elastic launch: bind the coordinator, bring up every
+/// scheduled worker, serve membership epochs through joins, leaves,
+/// crashes and recoveries, and aggregate the report.
+pub fn elastic_launch(cfg: &ElasticConfig) -> Result<ElasticReport> {
+    cfg.validate()?;
+    crate::util::signal::install();
+    let listener = TcpListener::bind(cfg.bind).context("bind elastic coordinator")?;
+    let addr = listener.local_addr()?;
+    let uids = cfg.plan.all_uids();
+    let die_of = |u: u64| cfg.fault.die.and_then(|(du, ds)| (du == u).then_some(ds));
+    let expected_dead: BTreeSet<u64> = cfg
+        .fault
+        .die
+        .iter()
+        .chain(cfg.fault.kill.iter())
+        .map(|(u, _)| *u)
+        .collect();
+
+    match cfg.spawn {
+        SpawnMode::Thread => {
+            let mut handles = Vec::new();
+            for &u in &uids {
+                let die = die_of(u);
+                handles.push((u, std::thread::spawn(move || elastic_worker_entry(u, addr, die))));
+            }
+            let report = coordinator_loop(&listener, cfg);
+            for (u, h) in handles {
+                let joined = h.join().map_err(|_| anyhow::anyhow!("worker {u} panicked"));
+                if report.is_ok() {
+                    joined?.with_context(|| format!("worker {u} failed"))?;
+                }
+            }
+            report
+        }
+        SpawnMode::Process => {
+            let exe = std::env::var_os("NETBN_WORKER_EXE")
+                .map(std::path::PathBuf::from)
+                .map_or_else(std::env::current_exe, Ok)
+                .context("locate the netbn binary")?;
+            let mut children = Vec::new();
+            for &u in &uids {
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("_eworker")
+                    .arg("--uid")
+                    .arg(u.to_string())
+                    .arg("--coordinator")
+                    .arg(addr.to_string());
+                if let Some(ds) = die_of(u) {
+                    cmd.arg("--die-at").arg(ds.to_string());
+                }
+                let child =
+                    cmd.spawn().with_context(|| format!("spawn elastic worker {u}"))?;
+                children.push((u, child));
+            }
+            let report = coordinator_loop(&listener, cfg);
+            if report.is_err() {
+                for (_, c) in &mut children {
+                    let _ = c.kill();
+                }
+            }
+            for (u, mut c) in children {
+                let status = c.wait().with_context(|| format!("wait for worker {u}"))?;
+                if report.is_ok() && !expected_dead.contains(&u) {
+                    anyhow::ensure!(status.success(), "worker {u} exited with {status}");
+                }
+            }
+            report
+        }
+        SpawnMode::External => {
+            // Workers are started by hand (`netbn _eworker --coordinator ...`).
+            coordinator_loop(&listener, cfg)
+        }
+    }
+}
+
+fn coordinator_loop(listener: &TcpListener, cfg: &ElasticConfig) -> Result<ElasticReport> {
+    let p = &cfg.params;
+    listener.set_nonblocking(true).context("set elastic listener non-blocking")?;
+    let (tx, rx) = mpsc::channel::<Ev>();
+    let mut next_conn = 0usize;
+    let mut conn_uid: HashMap<usize, u64> = HashMap::new();
+    // Writer halves parked until the worker identifies itself via ejoin.
+    let mut conn_writers: HashMap<usize, TcpStream> = HashMap::new();
+    let mut members: BTreeMap<u64, Member> = BTreeMap::new();
+    let mut dead: BTreeSet<u64> = BTreeSet::new();
+    let mut killed = false;
+    let mut epochs = 0usize;
+    let mut recoveries = 0usize;
+    let mut membership: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut prep: Option<PrepState> = None;
+    let mut deadline = Instant::now() + p.rendezvous_timeout;
+
+    let fail_all = |members: &mut BTreeMap<u64, Member>, why: &str| {
+        for m in members.values_mut() {
+            let _ = writeln!(m.writer, "efail {why}");
+        }
+    };
+    let uid_rank = |membership: &[(usize, Vec<u64>)], uid: u64| -> String {
+        membership
+            .last()
+            .and_then(|(_, ranks)| ranks.iter().position(|u| *u == uid))
+            .map_or_else(|| "unranked".to_string(), |r| format!("rank {r}"))
+    };
+
+    loop {
+        anyhow::ensure!(
+            !crate::util::signal::triggered(),
+            "interrupted (SIGINT/SIGTERM) during elastic launch"
+        );
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "elastic rendezvous timed out after {:?}: {} of {} scheduled workers joined, \
+             waiting on epoch formation",
+            p.rendezvous_timeout,
+            members.len(),
+            cfg.plan.all_uids().len()
+        );
+        // Admit new connections.
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                let conn = next_conn;
+                next_conn += 1;
+                let tx = tx.clone();
+                let reader_stream = stream.try_clone()?;
+                std::thread::spawn(move || reader_thread(conn, reader_stream, tx));
+                // The writer half is claimed on the ejoin line.
+                conn_writers.insert(conn, stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(e).context("accept elastic worker"),
+        }
+        // Drain one event (bounded wait keeps the accept loop live).
+        let ev = match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                maybe_advance(
+                    cfg, &mut members, &dead, &mut prep, &mut epochs, &mut membership,
+                )?;
+                if let Some(report) =
+                    maybe_finish(cfg, &mut members, &dead, epochs, recoveries, &membership)?
+                {
+                    return Ok(report);
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => unreachable!("tx held locally"),
+        };
+        deadline = Instant::now() + p.rendezvous_timeout;
+        match ev {
+            Ev::Line(conn, line) => {
+                let mut it = line.split_whitespace();
+                let verb = it.next().unwrap_or("");
+                let uid: u64 = parse_field(it.next(), "worker uid")?;
+                match verb {
+                    "ejoin" => {
+                        let pid: u32 = parse_field(it.next(), "ejoin pid")?;
+                        let completed: usize = parse_field(it.next(), "ejoin completed")?;
+                        anyhow::ensure!(
+                            cfg.plan.all_uids().contains(&uid),
+                            "unscheduled uid {uid} tried to join"
+                        );
+                        conn_uid.insert(conn, uid);
+                        let writer = conn_writers
+                            .remove(&conn)
+                            .context("ejoin from an unknown connection")?;
+                        let m = members.entry(uid).or_insert_with(|| Member {
+                            conn,
+                            writer,
+                            pid,
+                            completed: 0,
+                            pending: false,
+                            byed: false,
+                            done: None,
+                            ring: FeedbackRing::new(32),
+                            addr: None,
+                        });
+                        m.conn = conn;
+                        m.pid = pid;
+                        m.completed = completed;
+                        m.pending = true;
+                    }
+                    "eaddr" => {
+                        let a: SocketAddr = parse_field(it.next(), "eaddr address")?;
+                        if let Some(m) = members.get_mut(&uid) {
+                            m.addr = Some(a);
+                        }
+                    }
+                    "estep" => {
+                        let step: usize = parse_field(it.next(), "estep step")?;
+                        let wall: f64 = parse_field(it.next(), "estep wall")?;
+                        let compute: f64 = parse_field(it.next(), "estep compute")?;
+                        if let Some(m) = members.get_mut(&uid) {
+                            m.ring.push(StepFeedback {
+                                step: step as u64,
+                                wall_s: wall,
+                                compute_s: compute,
+                                comm_busy_s: 0.0,
+                                busbw_gbps: 0.0,
+                            });
+                        }
+                        if let Some((ku, ks)) = cfg.fault.kill {
+                            if !killed && ku == uid && step >= ks {
+                                killed = true;
+                                if let Some(m) = members.get(&uid) {
+                                    crate::util::signal::kill_process(m.pid);
+                                }
+                            }
+                        }
+                    }
+                    "eabort" => {
+                        let completed: usize = parse_field(it.next(), "eabort completed")?;
+                        let reason: String = it.collect::<Vec<_>>().join(" ");
+                        if !cfg.fault.recovery {
+                            fail_all(&mut members, &reason);
+                            anyhow::bail!(
+                                "worker {uid} ({}) aborted at step {completed}: {reason}",
+                                uid_rank(&membership, uid)
+                            );
+                        }
+                        if let Some(m) = members.get_mut(&uid) {
+                            m.completed = completed;
+                            m.pending = true;
+                        }
+                        prep = None; // restart any in-flight formation
+                    }
+                    "edone" => {
+                        let checksum = it
+                            .next()
+                            .and_then(|s| u64::from_str_radix(s, 16).ok())
+                            .context("edone without a checksum")?;
+                        if let Some(m) = members.get_mut(&uid) {
+                            m.done = Some(checksum);
+                            m.pending = false;
+                        }
+                    }
+                    other => anyhow::bail!("unexpected worker line {other:?} from {uid}"),
+                }
+            }
+            Ev::Blob(conn, bytes) => {
+                if let Some(uid) = conn_uid.get(&conn) {
+                    if let Some(ps) = prep.as_mut() {
+                        if ps.blob_from == Some(*uid) {
+                            ps.blob = Some(bytes);
+                        }
+                    }
+                }
+            }
+            Ev::Eof(conn) => {
+                let Some(uid) = conn_uid.get(&conn).copied() else { continue };
+                let Some(m) = members.get(&uid) else { continue };
+                if m.conn != conn || m.byed || m.done.is_some() {
+                    continue; // stale or expected disconnect
+                }
+                // A live member's socket dropped: a death.
+                if !cfg.fault.recovery {
+                    let why = format!(
+                        "worker {uid} ({}) died after step {} (connection dropped)",
+                        uid_rank(&membership, uid),
+                        m.completed
+                    );
+                    fail_all(&mut members, &why);
+                    anyhow::bail!("{why}");
+                }
+                dead.insert(uid);
+                recoveries += 1;
+                members.get_mut(&uid).expect("checked").pending = false;
+                // Abort any formation that counted on the dead worker.
+                if prep.as_ref().map_or(false, |ps| ps.ranks.contains(&uid)) {
+                    prep = None;
+                }
+            }
+        }
+        maybe_advance(cfg, &mut members, &dead, &mut prep, &mut epochs, &mut membership)?;
+        if let Some(report) =
+            maybe_finish(cfg, &mut members, &dead, epochs, recoveries, &membership)?
+        {
+            return Ok(report);
+        }
+    }
+}
+
+fn reader_thread(conn: usize, stream: TcpStream, tx: mpsc::Sender<Ev>) {
+    stream.set_read_timeout(None).ok();
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => {
+                let _ = tx.send(Ev::Eof(conn));
+                return;
+            }
+            Ok(_) => {}
+        }
+        let trimmed = line.trim().to_string();
+        if let Some(rest) = trimmed.strip_prefix("eparams ") {
+            // Binary checkpoint upload: header line then exact bytes.
+            let Ok(len) = rest.trim().parse::<usize>() else {
+                let _ = tx.send(Ev::Eof(conn));
+                return;
+            };
+            let mut blob = vec![0u8; len];
+            if reader.read_exact(&mut blob).is_err() {
+                let _ = tx.send(Ev::Eof(conn));
+                return;
+            }
+            let _ = tx.send(Ev::Blob(conn, blob));
+        } else if !trimmed.is_empty() {
+            let _ = tx.send(Ev::Line(conn, trimmed));
+        }
+    }
+}
+
+/// Drive epoch formation: start a new epoch when every live active
+/// member is pending, finish an in-flight one when its addresses (and
+/// checkpoint, if needed) have arrived.
+fn maybe_advance(
+    cfg: &ElasticConfig,
+    members: &mut BTreeMap<u64, Member>,
+    dead: &BTreeSet<u64>,
+    prep: &mut Option<PrepState>,
+    epochs: &mut usize,
+    membership: &mut Vec<(usize, Vec<u64>)>,
+) -> Result<()> {
+    let p = &cfg.params;
+    if let Some(ps) = prep.as_mut() {
+        let ready = ps.ranks.iter().all(|u| members.get(u).map_or(false, |m| m.addr.is_some()))
+            && (!ps.need_blob || ps.blob.is_some());
+        if !ready {
+            return Ok(());
+        }
+        let ps = prep.take().expect("checked above");
+        let addrs: Vec<SocketAddr> = ps
+            .ranks
+            .iter()
+            .map(|u| members[u].addr.expect("checked above"))
+            .collect();
+        let blob = ps.blob.unwrap_or_default();
+        let world = ps.ranks.len();
+        let mut line = format!(
+            "epoch {} {} {} {} {} {} {} {}",
+            ps.resume, ps.until, p.steps, p.shards, p.elems, p.seed, p.compute_us, world
+        );
+        for a in &addrs {
+            line.push(' ');
+            line.push_str(&a.to_string());
+        }
+        line.push(' ');
+        line.push_str(&blob.len().to_string());
+        line.push('\n');
+        for u in &ps.ranks {
+            let m = members.get_mut(u).expect("ranked member");
+            m.writer.write_all(line.as_bytes()).context("send epoch line")?;
+            if !blob.is_empty() {
+                m.writer.write_all(&blob).context("send checkpoint blob")?;
+            }
+            m.pending = false;
+            m.addr = None;
+        }
+        *epochs += 1;
+        membership.push((ps.resume, ps.ranks.clone()));
+        return Ok(());
+    }
+    // Gather phase: is everyone who should train next ready? The first
+    // pass estimates the resume step over every pending member to settle
+    // the membership; the real resume is then the max completed step of
+    // the actual participants (a departing member can be ahead of
+    // survivors after a mid-epoch death — it cannot anchor their epoch).
+    let est = members
+        .iter()
+        .filter(|(u, m)| m.pending && !dead.contains(u))
+        .map(|(_, m)| m.completed)
+        .max();
+    let Some(est) = est else { return Ok(()) };
+    if est >= p.steps {
+        return Ok(());
+    }
+    let active: Vec<u64> =
+        cfg.plan.active_at(est).into_iter().filter(|u| !dead.contains(u)).collect();
+    anyhow::ensure!(!active.is_empty(), "every member of the cohort died at step {est}");
+    // Scheduled leavers that are past their exit step get the goodbye.
+    for (u, at) in &cfg.plan.leaves {
+        if *at <= est && !dead.contains(u) {
+            if let Some(m) = members.get_mut(u) {
+                if !m.byed && m.done.is_none() {
+                    let _ = writeln!(m.writer, "ebye");
+                    m.byed = true;
+                    m.pending = false;
+                }
+            }
+        }
+    }
+    let participants: Vec<u64> = active
+        .iter()
+        .copied()
+        .filter(|u| members.get(u).map_or(true, |m| m.done.is_none()))
+        .collect();
+    let all_pending =
+        participants.iter().all(|u| members.get(u).map_or(false, |m| m.pending));
+    if participants.is_empty() || !all_pending {
+        return Ok(());
+    }
+    let resume = participants
+        .iter()
+        .map(|u| members[u].completed)
+        .max()
+        .expect("participants is non-empty");
+    if resume >= p.steps {
+        return Ok(());
+    }
+    let until = cfg.plan.next_boundary(resume, p.steps);
+    anyhow::ensure!(until > resume, "degenerate epoch {resume}..{until}");
+    let need_blob =
+        resume > 0 && participants.iter().any(|u| members[u].completed < resume);
+    let blob_from = need_blob.then(|| {
+        *participants
+            .iter()
+            .find(|u| members[u].completed == resume)
+            .expect("resume is the max completed of the participants")
+    });
+    if let Some(src) = blob_from {
+        let m = members.get_mut(&src).expect("participant");
+        writeln!(m.writer, "eparams?").context("request checkpoint")?;
+    }
+    for (rank, u) in participants.iter().enumerate() {
+        let extra = cfg
+            .fault
+            .straggle
+            .iter()
+            .find(|(su, _)| su == u)
+            .map_or(0, |(_, e)| *e);
+        let m = members.get_mut(u).expect("participant");
+        m.addr = None;
+        writeln!(m.writer, "eprep {} {rank} {} {extra}", *epochs, participants.len())
+            .context("send eprep")?;
+    }
+    *prep = Some(PrepState {
+        resume,
+        until,
+        ranks: participants,
+        need_blob,
+        blob: None,
+        blob_from,
+    });
+    Ok(())
+}
+
+/// When every live member of the final cohort has reported `edone`,
+/// verify the checksums agree and assemble the report.
+fn maybe_finish(
+    cfg: &ElasticConfig,
+    members: &mut BTreeMap<u64, Member>,
+    dead: &BTreeSet<u64>,
+    epochs: usize,
+    recoveries: usize,
+    membership: &[(usize, Vec<u64>)],
+) -> Result<Option<ElasticReport>> {
+    let p = &cfg.params;
+    let finalists: Vec<u64> =
+        cfg.plan.active_at(p.steps).into_iter().filter(|u| !dead.contains(u)).collect();
+    if finalists.is_empty()
+        || !finalists.iter().all(|u| members.get(u).map_or(false, |m| m.done.is_some()))
+    {
+        return Ok(None);
+    }
+    let checksums: Vec<(u64, u64)> =
+        finalists.iter().map(|u| (*u, members[u].done.expect("checked"))).collect();
+    let first = checksums[0].1;
+    anyhow::ensure!(
+        checksums.iter().all(|(_, c)| *c == first),
+        "final checksums diverged across the cohort: {checksums:x?}"
+    );
+    // Release everyone still connected (finished workers, parked joiners
+    // that never activated).
+    for (_, m) in members.iter_mut() {
+        if !m.byed {
+            let _ = writeln!(m.writer, "ebye");
+            m.byed = true;
+        }
+    }
+    let rings: Vec<(u64, &FeedbackRing)> =
+        members.iter().map(|(u, m)| (*u, &m.ring)).collect();
+    let stragglers = straggler_scores(&rings, p.straggler_window, p.straggler_threshold);
+    Ok(Some(ElasticReport {
+        checksum: first,
+        steps: p.steps,
+        epochs,
+        recoveries,
+        final_world: finalists.len(),
+        membership: membership.to_vec(),
+        stragglers,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params(steps: usize, shards: usize) -> ElasticParams {
+        ElasticParams {
+            shards,
+            elems: 256,
+            steps,
+            seed: 0x5eed,
+            compute_us: 0,
+            rendezvous_timeout: Duration::from_secs(30),
+            straggler_window: 8,
+            straggler_threshold: 3.0,
+        }
+    }
+
+    #[test]
+    fn shard_range_tiles_every_shard_exactly_once() {
+        for world in 1..=8 {
+            for shards in world..=world * 5 {
+                let mut owned = vec![0usize; shards];
+                for rank in 0..world {
+                    for s in shard_range(rank, world, shards) {
+                        owned[s] += 1;
+                    }
+                }
+                assert!(owned.iter().all(|c| *c == 1), "w={world} L={shards}: {owned:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_is_deterministic_and_seed_sensitive() {
+        let p = quick_params(5, 6);
+        assert_eq!(expected_checksum(&p), expected_checksum(&p));
+        let mut q = p.clone();
+        q.seed ^= 1;
+        assert_ne!(expected_checksum(&p), expected_checksum(&q));
+    }
+
+    #[test]
+    fn fixed_membership_matches_the_oracle() {
+        let p = quick_params(4, 4);
+        let plan = MembershipPlan { initial: vec![7, 8], ..Default::default() };
+        let r = elastic_launch(&ElasticConfig::loopback(p.clone(), plan)).unwrap();
+        assert_eq!(r.checksum, expected_checksum(&p));
+        assert_eq!(r.epochs, 1);
+        assert_eq!(r.recoveries, 0);
+        assert_eq!(r.final_world, 2);
+    }
+
+    #[test]
+    fn scale_out_join_is_bit_identical() {
+        let p = quick_params(4, 4);
+        let plan = MembershipPlan {
+            initial: vec![10, 20],
+            joins: vec![(30, 2)],
+            ..Default::default()
+        };
+        let r = elastic_launch(&ElasticConfig::loopback(p.clone(), plan)).unwrap();
+        assert_eq!(r.checksum, expected_checksum(&p), "{:?}", r.membership);
+        assert_eq!(r.epochs, 2);
+        assert_eq!(r.final_world, 3);
+        assert_eq!(r.membership[1].1, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn scale_in_leave_is_bit_identical() {
+        let p = quick_params(4, 4);
+        let plan = MembershipPlan {
+            initial: vec![1, 2, 3],
+            leaves: vec![(3, 2)],
+            ..Default::default()
+        };
+        let r = elastic_launch(&ElasticConfig::loopback(p.clone(), plan)).unwrap();
+        assert_eq!(r.checksum, expected_checksum(&p), "{:?}", r.membership);
+        assert_eq!(r.epochs, 2);
+        assert_eq!(r.final_world, 2);
+        assert_eq!(r.membership[1].1, vec![1, 2]);
+    }
+
+    #[test]
+    fn crash_recovery_replays_the_dead_workers_shards() {
+        let p = quick_params(5, 6);
+        let plan = MembershipPlan { initial: vec![1, 2, 3], ..Default::default() };
+        let mut cfg = ElasticConfig::loopback(p.clone(), plan);
+        cfg.fault.die = Some((2, 2));
+        let r = elastic_launch(&cfg).unwrap();
+        assert_eq!(r.checksum, expected_checksum(&p), "{:?}", r.membership);
+        assert!(r.recoveries >= 1);
+        assert!(r.epochs >= 2);
+        assert_eq!(r.final_world, 2);
+        let last = &r.membership.last().unwrap().1;
+        assert!(!last.contains(&2), "dead worker re-admitted: {last:?}");
+    }
+
+    #[test]
+    fn crash_without_recovery_fails_fast_naming_the_worker() {
+        let p = ElasticParams {
+            rendezvous_timeout: Duration::from_secs(20),
+            ..quick_params(4, 4)
+        };
+        let plan = MembershipPlan { initial: vec![1, 2], ..Default::default() };
+        let mut cfg = ElasticConfig::loopback(p, plan);
+        cfg.fault.die = Some((2, 1));
+        cfg.fault.recovery = false;
+        let t0 = Instant::now();
+        let err = elastic_launch(&cfg).unwrap_err().to_string();
+        let elapsed = t0.elapsed();
+        // Either the coordinator saw the drop first (naming worker 2) or
+        // the survivor's recv deadline fired first (naming rank 1 = uid 2)
+        // — both fail fast and both name the dead party.
+        assert!(err.contains("rank 1") || err.contains("worker 2"), "{err}");
+        assert!(
+            elapsed < Duration::from_secs(15),
+            "no-recovery death took {elapsed:?} — that is a wedge, not fail-fast"
+        );
+    }
+
+    #[test]
+    fn straggler_is_flagged_from_the_feedback_rings() {
+        let p = ElasticParams { compute_us: 300, ..quick_params(4, 4) };
+        let plan = MembershipPlan { initial: vec![5, 6, 7], ..Default::default() };
+        let mut cfg = ElasticConfig::loopback(p.clone(), plan);
+        cfg.fault.straggle = vec![(6, 8_000)];
+        let r = elastic_launch(&cfg).unwrap();
+        assert_eq!(r.checksum, expected_checksum(&p));
+        let flagged: Vec<u64> =
+            r.stragglers.iter().filter(|s| s.straggler).map(|s| s.id).collect();
+        assert_eq!(flagged, vec![6], "{:?}", r.stragglers);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let p = quick_params(4, 2);
+        let dup = MembershipPlan { initial: vec![1, 1], ..Default::default() };
+        assert!(ElasticConfig::loopback(p.clone(), dup).validate().is_err());
+        let late = MembershipPlan {
+            initial: vec![1],
+            joins: vec![(2, 9)],
+            ..Default::default()
+        };
+        assert!(ElasticConfig::loopback(p.clone(), late).validate().is_err());
+        // 2 shards cannot cover a 3-wide cohort.
+        let wide = MembershipPlan { initial: vec![1, 2, 3], ..Default::default() };
+        assert!(ElasticConfig::loopback(p.clone(), wide).validate().is_err());
+        // SIGKILL injection needs real processes.
+        let mut threaded =
+            ElasticConfig::loopback(p, MembershipPlan { initial: vec![1, 2], ..Default::default() });
+        threaded.fault.kill = Some((1, 1));
+        assert!(threaded.validate().is_err());
+        let ok = ElasticConfig::loopback(
+            quick_params(4, 4),
+            MembershipPlan { initial: vec![1, 2], ..Default::default() },
+        );
+        ok.validate().unwrap();
+    }
+}

@@ -29,13 +29,23 @@
 //! bit anywhere in transport, striping or collective shows up as a
 //! checksum mismatch.
 //!
-//! **Known limitation**: a worker that dies *mid-step* after rendezvous
-//! closes its sockets cleanly, which peers see as EOF-between-frames
-//! (not poison), so survivors block inside the collective and the launch
-//! wedges rather than failing fast. The rendezvous phase itself is
-//! deadline-bounded, process exits are checked after the run, and the CI
-//! jobs carry `timeout-minutes`, so a wedged run is bounded in practice;
-//! liveness-tracking per worker stream is future work.
+//! **Fault model**: every mid-step collective recv carries a deadline
+//! derived from recent step times
+//! ([`crate::net::mesh::MeshEndpoint::set_recv_timeout`]), so a worker
+//! that dies after rendezvous surfaces as a deadline error naming the
+//! absent rank. The survivor poisons its remaining lanes, reports an
+//! `abort` line, and the coordinator — which also watches every worker
+//! stream for EOF while collecting — fails the launch fast instead of
+//! wedging. The rendezvous phase is bounded by `--rendezvous-timeout`
+//! (60 s default). For *elastic* membership, checkpoint/rollback
+//! recovery and scripted fault injection on top of this driver, see
+//! [`super::elastic`].
+//!
+//! Multi-host: the coordinator binds `--bind` (default loopback) and
+//! `--spawn external` skips spawning entirely — workers are started by
+//! hand on other machines with `netbn _worker --coordinator host:port`,
+//! and lane listeners bind the interface that routes to the coordinator
+//! rather than hardcoding loopback.
 
 use crate::collectives::{barrier, ring};
 use crate::config::{CollectiveKind, Compression, OverlapMode, TransportKind};
@@ -64,6 +74,10 @@ use std::time::{Duration, Instant};
 pub enum SpawnMode {
     Process,
     Thread,
+    /// Spawn nothing: serve the rendezvous and wait for workers started
+    /// by hand (`netbn _worker --coordinator host:port`), possibly on
+    /// other machines — the multi-host path.
+    External,
 }
 
 impl SpawnMode {
@@ -71,6 +85,7 @@ impl SpawnMode {
         match s.to_ascii_lowercase().as_str() {
             "process" => Some(SpawnMode::Process),
             "thread" => Some(SpawnMode::Thread),
+            "external" => Some(SpawnMode::External),
             _ => None,
         }
     }
@@ -131,11 +146,27 @@ pub struct LaunchConfig {
     /// per step (slowest-worker timings) — the trace `netbn tune
     /// --from-trace` replays.
     pub feedback_out: Option<std::path::PathBuf>,
+    /// Bound on the whole rendezvous phase (`--rendezvous-timeout`,
+    /// 60 s default): a worker that never registers fails the launch
+    /// after this long instead of hanging it.
+    pub rendezvous_timeout: Duration,
+    /// Coordinator bind address (`127.0.0.1:0` default; a routable
+    /// interface + fixed port for `--spawn external` multi-host runs).
+    pub bind: SocketAddr,
+}
+
+/// The default coordinator bind: loopback, OS-assigned port.
+pub fn loopback_bind() -> SocketAddr {
+    "127.0.0.1:0".parse().expect("loopback literal")
 }
 
 impl LaunchConfig {
     pub fn validate(&self) -> Result<()> {
         let p = &self.params;
+        anyhow::ensure!(
+            self.rendezvous_timeout > Duration::ZERO,
+            "rendezvous timeout must be > 0"
+        );
         anyhow::ensure!(p.world >= 1, "launch needs >= 1 worker");
         anyhow::ensure!(p.steps >= 1, "launch needs >= 1 step");
         anyhow::ensure!(p.elems >= 1, "launch needs >= 1 gradient element");
@@ -316,7 +347,7 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     // it and bail, and the process-mode error path below kills + reaps
     // every `_worker` child instead of orphaning them.
     crate::util::signal::install();
-    let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator port")?;
+    let listener = TcpListener::bind(cfg.bind).context("bind coordinator port")?;
     let addr = listener.local_addr()?;
     let p = cfg.params.clone();
     let report = match cfg.spawn {
@@ -326,16 +357,33 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 let p = p.clone();
                 workers.push(std::thread::spawn(move || worker_entry(rank, addr, &p)));
             }
-            let report = coordinator_serve(&listener, &p, None);
+            let report = coordinator_serve(&listener, &p, None, cfg.rendezvous_timeout);
             for (rank, h) in workers.into_iter().enumerate() {
-                h.join()
-                    .map_err(|_| anyhow::anyhow!("worker {rank} panicked"))?
-                    .with_context(|| format!("worker {rank} failed"))?;
+                let joined =
+                    h.join().map_err(|_| anyhow::anyhow!("worker {rank} panicked"));
+                // A failed launch already carries the root cause; the
+                // workers' own abort errors would only mask it.
+                if report.is_ok() {
+                    joined?.with_context(|| format!("worker {rank} failed"))?;
+                }
             }
             report
         }
+        SpawnMode::External => {
+            eprintln!(
+                "coordinator listening on {addr}: start {} workers with \
+                 `netbn _worker --coordinator {addr} --rank <r> ...`",
+                p.world
+            );
+            coordinator_serve(&listener, &p, None, cfg.rendezvous_timeout)
+        }
         SpawnMode::Process => {
-            let exe = std::env::current_exe().context("locate the netbn binary")?;
+            // NETBN_WORKER_EXE lets integration tests point the spawn at
+            // the cargo-built binary when the test harness is the parent.
+            let exe = std::env::var_os("NETBN_WORKER_EXE")
+                .map(std::path::PathBuf::from)
+                .map_or_else(std::env::current_exe, Ok)
+                .context("locate the netbn binary")?;
             let mut children = Vec::new();
             for rank in 0..p.world {
                 let child = std::process::Command::new(&exe)
@@ -384,7 +432,8 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     .with_context(|| format!("spawn worker process {rank}"))?;
                 children.push(child);
             }
-            let report = coordinator_serve(&listener, &p, Some(&mut children));
+            let report =
+                coordinator_serve(&listener, &p, Some(&mut children), cfg.rendezvous_timeout);
             if let Err(e) = report {
                 // The coordinator's error is the root cause; kill and reap
                 // the children without letting their (killed) exit
@@ -469,6 +518,7 @@ fn coordinator_serve(
     listener: &TcpListener,
     p: &WorkerParams,
     mut children: Option<&mut Vec<std::process::Child>>,
+    rendezvous_timeout: Duration,
 ) -> Result<LaunchReport> {
     let lanes = launch_lanes(p);
     let mut streams: Vec<Option<TcpStream>> = (0..p.world).map(|_| None).collect();
@@ -479,7 +529,7 @@ fn coordinator_serve(
     // registering must fail the launch, not hang it (a blocking accept
     // would wait forever for the hello that never comes).
     listener.set_nonblocking(true).context("set rendezvous listener non-blocking")?;
-    let rendezvous_deadline = Instant::now() + Duration::from_secs(60);
+    let rendezvous_deadline = Instant::now() + rendezvous_timeout;
     for _ in 0..p.world {
         let stream = loop {
             match listener.accept() {
@@ -550,49 +600,105 @@ fn coordinator_serve(
         s.write_all(peers.as_bytes()).context("send peer table")?;
     }
     // Collect results. The training loop runs for as long as steps ×
-    // tensor size dictate, so the rendezvous-phase read timeout must not
-    // apply here — a dead worker is detected by EOF (its socket closes),
-    // not by a clock.
+    // tensor size dictate, so there is no overall clock here — instead
+    // every stream is polled with a short read timeout so a worker that
+    // DIES mid-run (EOF) or ABORTS (deadline error in a collective)
+    // fails the launch immediately, naming the rank, while healthy slow
+    // runs wait as long as they need. This is the fix for the old
+    // "wedge on mid-step death" limitation.
     for s in streams.iter().flatten() {
-        s.set_read_timeout(None).ok();
+        s.set_read_timeout(Some(Duration::from_millis(300))).ok();
     }
     let mut step_wall = vec![0.0f64; p.steps];
     let mut ar = vec![0.0f64; p.steps];
     let mut checksums = vec![0u64; p.world];
     let mut knob_trajectory: Vec<(u64, usize)> = Vec::new();
-    for rank in 0..p.world {
+    let mut collected = vec![false; p.world];
+    // Partial-line accumulators: a timed-out read_line keeps the bytes
+    // it already consumed in the String, so each rank's buffer persists
+    // across polls.
+    let mut lines: Vec<String> = vec![String::new(); p.world];
+    while collected.iter().any(|c| !*c) {
         anyhow::ensure!(
             !crate::util::signal::triggered(),
             "interrupted (SIGINT/SIGTERM) while collecting worker results"
         );
-        let reader = readers[rank].as_mut().expect("registered above");
-        let mut line = String::new();
-        reader.read_line(&mut line).with_context(|| format!("read done from rank {rank}"))?;
-        let mut it = line.split_whitespace();
-        anyhow::ensure!(it.next() == Some("done"), "bad completion line {line:?}");
-        let done_rank: usize = it
-            .next()
-            .and_then(|s| s.parse().ok())
-            .with_context(|| format!("done without a rank: {line:?}"))?;
-        anyhow::ensure!(done_rank == rank, "rank {rank} stream reported rank {done_rank}");
-        let checksum = it
-            .next()
-            .and_then(|s| u64::from_str_radix(s, 16).ok())
-            .with_context(|| format!("done without a checksum: {line:?}"))?;
-        let ar_times = parse_csv_f64(it.next().unwrap_or(""), p.steps)
-            .with_context(|| format!("rank {rank} all-reduce timings"))?;
-        let walls = parse_csv_f64(it.next().unwrap_or(""), p.steps)
-            .with_context(|| format!("rank {rank} step timings"))?;
-        // Rank 0 appends its knob trajectory ("-" when not autotuning).
-        let traj_field = it.next().unwrap_or("-");
-        if rank == 0 && traj_field != "-" {
-            knob_trajectory = parse_trajectory(traj_field)
-                .with_context(|| format!("rank 0 knob trajectory {traj_field:?}"))?;
+        if let Some(children) = children.as_deref_mut() {
+            for (rank, c) in children.iter_mut().enumerate() {
+                if !collected[rank] {
+                    if let Ok(Some(status)) = c.try_wait() {
+                        anyhow::ensure!(
+                            status.success(),
+                            "worker process {rank} exited with {status} mid-run"
+                        );
+                    }
+                }
+            }
         }
-        checksums[rank] = checksum;
-        for s in 0..p.steps {
-            ar[s] = ar[s].max(ar_times[s]);
-            step_wall[s] = step_wall[s].max(walls[s]);
+        let mut progressed = false;
+        for rank in 0..p.world {
+            if collected[rank] {
+                continue;
+            }
+            let reader = readers[rank].as_mut().expect("registered above");
+            let line = &mut lines[rank];
+            match reader.read_line(line) {
+                Ok(0) => anyhow::bail!(
+                    "worker {rank} died mid-run (connection dropped after step \
+                     reports stopped) — peers will see its absence as a recv \
+                     deadline; see `netbn launch --help` for the fault model"
+                ),
+                Ok(_) if line.ends_with('\n') => progressed = true,
+                Ok(_) => {} // mid-line; keep accumulating
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) => {
+                    return Err(e).with_context(|| format!("read done from rank {rank}"))
+                }
+            }
+            if !line.ends_with('\n') {
+                continue;
+            }
+            let line = std::mem::take(&mut lines[rank]);
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("done") => {}
+                Some("abort") => {
+                    let abort_rank = it.next().unwrap_or("?").to_string();
+                    let reason: String = it.collect::<Vec<_>>().join(" ");
+                    anyhow::bail!("worker {abort_rank} aborted mid-run: {reason}");
+                }
+                _ => anyhow::bail!("bad completion line {line:?}"),
+            }
+            let done_rank: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("done without a rank: {line:?}"))?;
+            anyhow::ensure!(done_rank == rank, "rank {rank} stream reported rank {done_rank}");
+            let checksum = it
+                .next()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .with_context(|| format!("done without a checksum: {line:?}"))?;
+            let ar_times = parse_csv_f64(it.next().unwrap_or(""), p.steps)
+                .with_context(|| format!("rank {rank} all-reduce timings"))?;
+            let walls = parse_csv_f64(it.next().unwrap_or(""), p.steps)
+                .with_context(|| format!("rank {rank} step timings"))?;
+            // Rank 0 appends its knob trajectory ("-" when not autotuning).
+            let traj_field = it.next().unwrap_or("-");
+            if rank == 0 && traj_field != "-" {
+                knob_trajectory = parse_trajectory(traj_field)
+                    .with_context(|| format!("rank 0 knob trajectory {traj_field:?}"))?;
+            }
+            checksums[rank] = checksum;
+            for s in 0..p.steps {
+                ar[s] = ar[s].max(ar_times[s]);
+                step_wall[s] = step_wall[s].max(walls[s]);
+            }
+            collected[rank] = true;
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
     // Release the workers (they hold their fabrics open until everyone is
@@ -664,16 +770,21 @@ fn parse_csv_f64(s: &str, want: usize) -> Result<Vec<f64>> {
 pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> Result<()> {
     anyhow::ensure!(rank < p.world, "rank {rank} out of a world of {}", p.world);
     let lanes = launch_lanes(p);
+    // Rendezvous: connect the coordinator FIRST — the local address of
+    // that connection is the interface that routes to it, and the lane
+    // listeners bind there so a multi-host worker advertises reachable
+    // addresses instead of its own loopback.
+    let mut coord = connect_retry(coordinator, Duration::from_secs(10))
+        .context("connect to coordinator")?;
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let lane_ip = coord.local_addr()?.ip();
     // One mesh listener per lane: `striped:K` really is K connections per
     // peer pair across process boundaries.
     let mut nodes = Vec::with_capacity(lanes);
     for _ in 0..lanes {
-        nodes.push(MeshNode::bind(WorkerId(rank), p.world)?);
+        nodes.push(MeshNode::bind_on(lane_ip, WorkerId(rank), p.world)?);
     }
-    // Rendezvous: register lane addresses, receive everyone's.
-    let mut coord = connect_retry(coordinator, Duration::from_secs(10))
-        .context("connect to coordinator")?;
-    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    // Register lane addresses, receive everyone's.
     let mut hello = format!("hello {rank}");
     for n in &nodes {
         hello.push(' ');
@@ -702,11 +813,21 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     let flat: Vec<SocketAddr> =
         it.map(|s| s.parse().context("bad peer address")).collect::<Result<_>>()?;
     anyhow::ensure!(flat.len() == p.world * lanes, "peer table truncated");
-    // flat is rank-major: entry w*lanes + l.
+    // flat is rank-major: entry w*lanes + l. Keep the concrete mesh
+    // handles: they own the recv deadline (the anti-wedge clock) and the
+    // poison switch the error path below throws.
+    let mut mesh_lanes: Vec<Arc<crate::net::mesh::MeshEndpoint>> = Vec::with_capacity(lanes);
     let mut lane_eps: Vec<Arc<dyn Endpoint>> = Vec::with_capacity(lanes);
     for (l, node) in nodes.into_iter().enumerate() {
         let addrs: Vec<SocketAddr> = (0..p.world).map(|w| flat[w * lanes + l]).collect();
-        lane_eps.push(node.connect(addrs)? as Arc<dyn Endpoint>);
+        let mep = node.connect(addrs)?;
+        mesh_lanes.push(Arc::clone(&mep));
+        lane_eps.push(mep as Arc<dyn Endpoint>);
+    }
+    // Until a step time is measured, allow a generous bring-up deadline
+    // (peers may still be spawning / connecting).
+    for mep in &mesh_lanes {
+        mep.set_recv_timeout(Some(Duration::from_secs(15)));
     }
     // Bind the lanes. The striped path keeps the concrete endpoint so the
     // control plane can retune its chunk size (and gate rate) mid-run.
@@ -767,77 +888,104 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     // proves every lane-sender queue has fully drained — the only moment
     // a chunk-layout change cannot race an in-flight message.
     let mut pending_knobs: Option<KnobPoint> = None;
-    for step in 0..p.steps {
-        barrier(ep.as_ref(), step as u32)?;
-        if let Some(k) = pending_knobs.take() {
-            if let Some(sep) = &striped {
-                sep.set_chunk_bytes(k.chunk_kb << 10)?;
+    // The loop runs inside a closure so any failure — typically a recv
+    // deadline naming a dead peer — can poison the remaining lanes and
+    // report an `abort` line before propagating, instead of leaving the
+    // coordinator and the surviving ranks to wedge.
+    let step_loop = (|| -> Result<()> {
+        for step in 0..p.steps {
+            barrier(ep.as_ref(), step as u32)?;
+            if let Some(k) = pending_knobs.take() {
+                if let Some(sep) = &striped {
+                    sep.set_chunk_bytes(k.chunk_kb << 10)?;
+                }
             }
-        }
-        // Scripted NIC event: every rank drops its per-stream gate at the
-        // same (barrier-aligned) step — the environment change the
-        // autotune_adapt scenario recovers from. (Pacing only: gates need
-        // no cross-rank layout agreement.)
-        if p.drop_at_step > 0 && step == p.drop_at_step {
-            if let Some(sep) = &striped {
-                sep.set_stream_rate_bytes_per_sec(crate::gbps_to_bytes_per_sec(p.drop_gbps))?;
+            // Scripted NIC event: every rank drops its per-stream gate at the
+            // same (barrier-aligned) step — the environment change the
+            // autotune_adapt scenario recovers from. (Pacing only: gates need
+            // no cross-rank layout agreement.)
+            if p.drop_at_step > 0 && step == p.drop_at_step {
+                if let Some(sep) = &striped {
+                    sep.set_stream_rate_bytes_per_sec(crate::gbps_to_bytes_per_sec(p.drop_gbps))?;
+                }
             }
-        }
-        let t_step = Instant::now();
-        // Local gradient: different on every rank (seeded), summed by the
-        // collective — the data-parallel contract. Generated up front in
-        // both overlap modes so the wire bytes are identical either way.
-        let mut grad = vec![0.0f32; p.elems];
-        rng.fill_f32(&mut grad, 1.0);
-        let stats = run_step(
-            &engine,
-            p.overlap,
-            step as u32,
-            &mut grad,
-            &ranges,
-            &plan,
-            |_layer| super::spin_sleep(layer_compute_s),
-        )?;
-        // Comm-busy time of the engine's worker (includes any span
-        // overlapped under compute) — keeps the effective-bus-bandwidth
-        // figure comparable across overlap modes.
-        ar_times.push(stats.comm_busy_s);
-        // Averaged-gradient step: identical arithmetic on identical sums
-        // keeps every rank's parameters bit-identical.
-        for (w, g) in params.iter_mut().zip(&grad) {
-            *w -= 0.05 * g * inv_world;
-        }
-        walls.push(t_step.elapsed().as_secs_f64());
+            let t_step = Instant::now();
+            // Local gradient: different on every rank (seeded), summed by the
+            // collective — the data-parallel contract. Generated up front in
+            // both overlap modes so the wire bytes are identical either way.
+            let mut grad = vec![0.0f32; p.elems];
+            rng.fill_f32(&mut grad, 1.0);
+            let stats = run_step(
+                &engine,
+                p.overlap,
+                step as u32,
+                &mut grad,
+                &ranges,
+                &plan,
+                |_layer| super::spin_sleep(layer_compute_s),
+            )?;
+            // Comm-busy time of the engine's worker (includes any span
+            // overlapped under compute) — keeps the effective-bus-bandwidth
+            // figure comparable across overlap modes.
+            ar_times.push(stats.comm_busy_s);
+            // Averaged-gradient step: identical arithmetic on identical sums
+            // keeps every rank's parameters bit-identical.
+            for (w, g) in params.iter_mut().zip(&grad) {
+                *w -= 0.05 * g * inv_world;
+            }
+            walls.push(t_step.elapsed().as_secs_f64());
 
-        // ---- The control round: rank 0 feeds the tuner and broadcasts
-        // the decision over the mesh control channel; every rank applies
-        // it here — after all of this step's collectives drained and
-        // before the next barrier, so sender and receiver chunk layouts
-        // can never disagree mid-message. ----
-        if p.autotune {
-            let ctrl = tag(tags::CONTROL, step as u32, 0);
-            if rank == 0 {
-                let wall = *walls.last().expect("pushed above");
-                let fb =
-                    step_feedback(p, step as u64, wall, stats.compute_s, stats.comm_busy_s);
-                let decision = tuner.as_mut().expect("rank 0 owns the tuner").observe(&fb);
-                let msg = match &decision {
-                    Some(next) => next.spec(),
-                    None => "keep".to_string(),
-                };
-                for w in 1..p.world {
-                    ep.send(WorkerId(w), ctrl, msg.as_bytes())?;
-                }
-                pending_knobs = decision;
-            } else {
-                let raw = ep.recv(WorkerId(0), ctrl)?;
-                let msg = String::from_utf8(raw)
-                    .map_err(|_| anyhow::anyhow!("knob broadcast is not UTF-8"))?;
-                if msg != "keep" {
-                    pending_knobs = Some(KnobPoint::parse_spec(&msg)?);
+            // Anti-wedge clock: re-derive the recv deadline from recent
+            // step times, so the "dead peer" verdict tracks the actual
+            // pace of this run (fast runs fail fast; a slow modeled-
+            // compute run never false-positives). 25x the worst recent
+            // wall leaves room for the scripted mid-run NIC drops.
+            let recent = walls.iter().rev().take(3).fold(0.0f64, |a, w| a.max(*w));
+            let d = Duration::from_secs_f64((recent * 25.0).max(0.9))
+                + Duration::from_millis(100);
+            for mep in &mesh_lanes {
+                mep.set_recv_timeout(Some(d));
+            }
+
+            // ---- The control round: rank 0 feeds the tuner and broadcasts
+            // the decision over the mesh control channel; every rank applies
+            // it here — after all of this step's collectives drained and
+            // before the next barrier, so sender and receiver chunk layouts
+            // can never disagree mid-message. ----
+            if p.autotune {
+                let ctrl = tag(tags::CONTROL, step as u32, 0);
+                if rank == 0 {
+                    let wall = *walls.last().expect("pushed above");
+                    let fb =
+                        step_feedback(p, step as u64, wall, stats.compute_s, stats.comm_busy_s);
+                    let decision = tuner.as_mut().expect("rank 0 owns the tuner").observe(&fb);
+                    let msg = match &decision {
+                        Some(next) => next.spec(),
+                        None => "keep".to_string(),
+                    };
+                    for w in 1..p.world {
+                        ep.send(WorkerId(w), ctrl, msg.as_bytes())?;
+                    }
+                    pending_knobs = decision;
+                } else {
+                    let raw = ep.recv(WorkerId(0), ctrl)?;
+                    let msg = String::from_utf8(raw)
+                        .map_err(|_| anyhow::anyhow!("knob broadcast is not UTF-8"))?;
+                    if msg != "keep" {
+                        pending_knobs = Some(KnobPoint::parse_spec(&msg)?);
+                    }
                 }
             }
         }
+        Ok(())
+    })();
+    if let Err(e) = step_loop {
+        let reason = format!("{e:#}").replace('\n', " ");
+        for mep in &mesh_lanes {
+            mep.poison(format!("rank {rank} aborted: {reason}"));
+        }
+        let _ = writeln!(coord, "abort {rank} {reason}");
+        return Err(e);
     }
     drop(engine);
     let checksum = tensor_checksum(&params);
@@ -904,6 +1052,8 @@ mod tests {
             },
             spawn: SpawnMode::Thread,
             feedback_out: None,
+            rendezvous_timeout: Duration::from_secs(60),
+            bind: loopback_bind(),
         }
     }
 
@@ -1098,7 +1248,30 @@ mod tests {
     fn spawn_mode_parse() {
         assert_eq!(SpawnMode::parse("process"), Some(SpawnMode::Process));
         assert_eq!(SpawnMode::parse("Thread"), Some(SpawnMode::Thread));
+        assert_eq!(SpawnMode::parse("external"), Some(SpawnMode::External));
         assert_eq!(SpawnMode::parse("fork"), None);
+    }
+
+    #[test]
+    fn rendezvous_timeout_is_validated_and_enforced() {
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.rendezvous_timeout = Duration::ZERO;
+        assert!(launch(&cfg).is_err(), "zero rendezvous timeout must be rejected");
+
+        // External mode spawns nothing: with no worker ever dialing in,
+        // the coordinator must give up at the configured deadline — fast —
+        // instead of the old hardwired 60 s.
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Tcp);
+        cfg.spawn = SpawnMode::External;
+        cfg.rendezvous_timeout = Duration::from_millis(300);
+        let t0 = Instant::now();
+        let err = launch(&cfg).unwrap_err().to_string();
+        assert!(err.contains("rendezvous"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timeout not honored: took {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

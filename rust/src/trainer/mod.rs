@@ -25,7 +25,15 @@
 //! launch` spawns real worker *processes* on loopback TCP (rendezvous
 //! via a coordinator port) and runs synchronous data-parallel steps over
 //! the striped transport end to end.
+//!
+//! A fourth, [`elastic`], makes that multi-process path fault-tolerant:
+//! membership epochs with deterministic re-sharding over a fixed logical
+//! shard count, checkpoint/rollback replay of a crashed worker's shards,
+//! and straggler scoring from the same [`crate::tune::StepFeedback`]
+//! stream — the bits of the final tensor stay identical through joins,
+//! leaves and kill -9.
 
+pub mod elastic;
 pub mod launch;
 pub mod xla;
 

@@ -147,6 +147,62 @@ impl FeedbackRing {
         let mean = tail.iter().sum::<f64>() / take as f64;
         (tail.iter().map(|w| (w - mean) * (w - mean)).sum::<f64>() / take as f64).sqrt()
     }
+
+    /// Mean compute seconds over the newest `n` samples; 0 when empty.
+    /// In a synchronous data-parallel loop wall times equalize at the
+    /// slowest rank, so compute time is the per-rank signal that actually
+    /// separates a straggler from its peers.
+    pub fn mean_compute(&self, n: usize) -> f64 {
+        let xs: Vec<f64> = self.iter().map(|f| f.compute_s).collect();
+        let take = n.min(xs.len());
+        if take == 0 {
+            return 0.0;
+        }
+        xs[xs.len() - take..].iter().sum::<f64>() / take as f64
+    }
+}
+
+/// One rank's straggler verdict, scored against the cohort median.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerScore {
+    /// Caller-chosen identity of the member (uid or rank).
+    pub id: u64,
+    /// Mean compute seconds over the scoring window.
+    pub compute_s: f64,
+    /// `compute_s / median(compute_s over all ranks)`; 1.0 = typical,
+    /// large = straggling. 1.0 when the median is zero.
+    pub score: f64,
+    /// Whether `score` exceeded the caller's threshold.
+    pub straggler: bool,
+}
+
+/// Score every member's ring against the cohort: each rank's mean compute
+/// time over the newest `window` samples, divided by the cohort median.
+/// A rank whose ratio exceeds `threshold` is flagged. Rings with no
+/// samples score 1.0 (unknown ≠ straggling). Results keep input order.
+pub fn straggler_scores(
+    rings: &[(u64, &FeedbackRing)],
+    window: usize,
+    threshold: f64,
+) -> Vec<StragglerScore> {
+    let computes: Vec<f64> = rings.iter().map(|(_, r)| r.mean_compute(window)).collect();
+    let mut sorted: Vec<f64> = computes.iter().copied().filter(|c| *c > 0.0).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if sorted.is_empty() {
+        0.0
+    } else if sorted.len() % 2 == 1 {
+        sorted[sorted.len() / 2]
+    } else {
+        (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2]) / 2.0
+    };
+    rings
+        .iter()
+        .zip(computes)
+        .map(|(&(id, _), compute_s)| {
+            let score = if median > 0.0 && compute_s > 0.0 { compute_s / median } else { 1.0 };
+            StragglerScore { id, compute_s, score, straggler: score > threshold }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -242,5 +298,48 @@ mod tests {
         let f = fb(9, 0.25);
         let back = StepFeedback::from_record(&f.to_record(2));
         assert_eq!(back, f);
+    }
+
+    fn ring_with_compute(computes: &[f64]) -> FeedbackRing {
+        let mut r = FeedbackRing::new(16);
+        for (i, c) in computes.iter().enumerate() {
+            r.push(StepFeedback {
+                step: i as u64,
+                wall_s: 1.0, // synchronous loop: walls equalize
+                compute_s: *c,
+                comm_busy_s: 0.1,
+                busbw_gbps: 1.0,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn straggler_scoring_flags_the_slow_rank() {
+        let fast = ring_with_compute(&[0.10, 0.11, 0.10]);
+        let fast2 = ring_with_compute(&[0.10, 0.10, 0.09]);
+        let slow = ring_with_compute(&[0.42, 0.40, 0.41]);
+        let scores =
+            straggler_scores(&[(0, &fast), (1, &fast2), (2, &slow)], 8, 2.0);
+        assert_eq!(scores.len(), 3);
+        assert!(!scores[0].straggler && !scores[1].straggler);
+        assert!(scores[2].straggler, "{scores:?}");
+        assert!(scores[2].score > 3.0, "{scores:?}");
+        // Equal walls: the wall signal alone could not have separated them.
+        assert!((scores[2].score / scores[0].score) > 3.0);
+    }
+
+    #[test]
+    fn straggler_scoring_handles_empty_and_uniform_cohorts() {
+        let empty = FeedbackRing::new(4);
+        let scores = straggler_scores(&[(7, &empty)], 8, 2.0);
+        assert_eq!(scores[0].score, 1.0);
+        assert!(!scores[0].straggler);
+        let a = ring_with_compute(&[0.2, 0.2]);
+        let b = ring_with_compute(&[0.2, 0.2]);
+        for s in straggler_scores(&[(0, &a), (1, &b)], 8, 2.0) {
+            assert!((s.score - 1.0).abs() < 1e-9);
+            assert!(!s.straggler);
+        }
     }
 }

@@ -48,6 +48,6 @@ pub mod knobs;
 pub mod oracle;
 
 pub use controller::{AutoTuner, TunerCheckpoint, TunerConfig, TunerState, TuningSummary};
-pub use feedback::{FeedbackRing, StepFeedback};
+pub use feedback::{straggler_scores, FeedbackRing, StepFeedback, StragglerScore};
 pub use knobs::{KnobPoint, KnobSpace};
 pub use oracle::{drive_until_exploit, noisy_oracle_step, OracleEnv};

@@ -20,11 +20,17 @@ const SIGINT: i32 = 2;
 const SIGTERM: i32 = 15;
 
 #[cfg(unix)]
+const SIGKILL: i32 = 9;
+
+#[cfg(unix)]
 extern "C" {
     /// `sighandler_t signal(int signum, sighandler_t handler)` — carried
     /// as `usize` because the two special handlers (`SIG_DFL`/`SIG_IGN`)
     /// are integer constants, not function pointers.
     fn signal(signum: i32, handler: usize) -> usize;
+    /// `int kill(pid_t pid, int sig)` — the chaos harness's fault
+    /// injector (SIGKILL a worker mid-step, no chance to clean up).
+    fn kill(pid: i32, sig: i32) -> i32;
 }
 
 #[cfg(unix)]
@@ -40,6 +46,17 @@ pub fn install() {
         signal(SIGINT, on_signal as usize);
         signal(SIGTERM, on_signal as usize);
     }
+}
+
+/// SIGKILL `pid` — the abrupt, uncatchable death the crash-recovery
+/// scenarios inject. A best-effort no-op off unix or on a stale pid.
+pub fn kill_process(pid: u32) {
+    #[cfg(unix)]
+    unsafe {
+        let _ = kill(pid as i32, SIGKILL);
+    }
+    #[cfg(not(unix))]
+    let _ = pid;
 }
 
 /// Has a shutdown signal arrived since the last [`reset`]?

@@ -1,0 +1,114 @@
+//! Chaos suite — the elastic launch path's three hard promises, checked
+//! against real processes and real sockets:
+//!
+//! 1. **Crash recovery**: SIGKILL a spawned `netbn _eworker` process
+//!    mid-run; the survivors replay its shards from the checkpoint and
+//!    the final FNV checksum is bit-identical to an uninterrupted run;
+//! 2. **Fail fast**: with recovery disabled, a dead worker produces an
+//!    error naming it well before the rendezvous timeout — no wedge;
+//! 3. **Deterministic re-sharding** (property): for arbitrary join/leave
+//!    schedules the elastic result equals the fixed-membership oracle,
+//!    because shard gradient streams are a function of `(seed, shard)`
+//!    alone, never of who computes them.
+
+use netbn::trainer::elastic::{
+    elastic_launch, expected_checksum, ElasticConfig, ElasticParams, MembershipPlan,
+};
+use netbn::trainer::launch::SpawnMode;
+use netbn::util::prop::{forall, usize_in};
+use std::time::{Duration, Instant};
+
+/// Integration tests run as their own binary, so `current_exe` is not
+/// `netbn`; point the process spawner at the real CLI binary.
+fn use_real_netbn() {
+    std::env::set_var("NETBN_WORKER_EXE", env!("CARGO_BIN_EXE_netbn"));
+}
+
+fn small_params() -> ElasticParams {
+    ElasticParams { shards: 8, elems: 512, steps: 6, seed: 0xC4A5, ..ElasticParams::default() }
+}
+
+#[test]
+fn sigkilled_process_worker_recovers_bit_identical() {
+    use_real_netbn();
+    let params = small_params();
+    let oracle = expected_checksum(&params);
+    let mut cfg = ElasticConfig::loopback(
+        params,
+        MembershipPlan { initial: vec![1, 2, 3], joins: vec![], leaves: vec![] },
+    );
+    cfg.spawn = SpawnMode::Process;
+    // The coordinator SIGKILLs worker 3's real OS process once it
+    // reports finishing step 2 — a crash no destructor can soften.
+    cfg.fault.kill = Some((3, 2));
+    let report = elastic_launch(&cfg).expect("recovery run must complete");
+    assert_eq!(report.checksum, oracle, "recovered run diverged from the uninterrupted oracle");
+    assert!(report.recoveries >= 1, "the kill was never observed: {report:?}");
+    assert_eq!(report.final_world, 2, "the dead worker should not rejoin");
+    assert_eq!(report.steps, cfg.params.steps);
+}
+
+#[test]
+fn dead_worker_without_recovery_fails_fast_naming_it() {
+    use_real_netbn();
+    let params = small_params();
+    let mut cfg = ElasticConfig::loopback(
+        params,
+        MembershipPlan { initial: vec![1, 2, 3], joins: vec![], leaves: vec![] },
+    );
+    cfg.spawn = SpawnMode::Process;
+    cfg.fault.kill = Some((2, 2));
+    cfg.fault.recovery = false;
+    let t0 = Instant::now();
+    let err = elastic_launch(&cfg).expect_err("a dead worker with recovery off must fail");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 2"), "error must name the dead worker, got: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(20),
+        "fail-fast took {elapsed:?} (rendezvous timeout is {:?})",
+        cfg.params.rendezvous_timeout
+    );
+}
+
+#[test]
+fn resharding_is_arithmetic_neutral_for_any_schedule() {
+    // Arbitrary join/leave schedules over worlds of 2..=5 (shards = 8
+    // bounds the max world): the elastic checksum must equal the
+    // fixed-membership oracle every time. Thread mode keeps each case to
+    // sockets + threads, no process spawns.
+    forall("elastic re-sharding is arithmetic-neutral", 10, |rng| {
+        let world0 = usize_in(rng, 2..=4);
+        let steps = usize_in(rng, 3..=6);
+        let params = ElasticParams {
+            shards: 8,
+            elems: usize_in(rng, 64..=512),
+            steps,
+            seed: rng.next_below(u64::MAX),
+            ..ElasticParams::default()
+        };
+        let mut plan = MembershipPlan {
+            initial: (1..=world0 as u64).collect(),
+            joins: vec![],
+            leaves: vec![],
+        };
+        if rng.next_below(2) == 0 {
+            plan.joins.push((100, usize_in(rng, 1..=steps - 1)));
+        }
+        if rng.next_below(2) == 0 {
+            plan.leaves.push((1, usize_in(rng, 1..=steps - 1)));
+        }
+        let oracle = expected_checksum(&params);
+        let cfg = ElasticConfig::loopback(params, plan.clone());
+        let report = elastic_launch(&cfg)
+            .map_err(|e| format!("elastic_launch failed for plan {plan:?}: {e:#}"))?;
+        if report.checksum != oracle {
+            return Err(format!(
+                "plan {plan:?}: elastic checksum {:x} != oracle {oracle:x} \
+                 (epochs {}, membership {:?})",
+                report.checksum, report.epochs, report.membership
+            ));
+        }
+        Ok(())
+    });
+}

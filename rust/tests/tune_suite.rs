@@ -125,12 +125,16 @@ fn autotuned_launch_checksums_match_static_run() {
         params: params.clone(),
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })
     .unwrap();
     let tuned_run = launch(&LaunchConfig {
         params: WorkerParams { autotune: true, chunk_kbs: vec![2, 8, 48], ..params },
         spawn: SpawnMode::Thread,
         feedback_out: None,
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     })
     .unwrap();
     assert!(static_run.identical && tuned_run.identical);
@@ -170,6 +174,8 @@ fn launch_feedback_trace_replays_into_the_tuner_types() {
         },
         spawn: SpawnMode::Thread,
         feedback_out: Some(path.clone()),
+        rendezvous_timeout: std::time::Duration::from_secs(60),
+        bind: "127.0.0.1:0".parse().unwrap(),
     };
     cfg.params.steps = 4;
     let r = launch(&cfg).unwrap();
