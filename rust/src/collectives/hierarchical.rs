@@ -31,7 +31,7 @@
 //! with `--collective hier:<group_size>` wherever a collective knob
 //! exists ([`crate::config::CollectiveKind::Hierarchical`]).
 
-use super::{bytes_to_f32s_into, f32s_as_bytes, ring::ring_allreduce};
+use super::{f32s_as_bytes, f32s_as_bytes_mut, ring::ring_allreduce};
 use crate::net::{tag, tags, Endpoint};
 use crate::topology::Cluster;
 use crate::Result;
@@ -82,8 +82,9 @@ pub fn hier_allreduce(
             }
         }
     } else {
-        let bytes = ep.recv(cluster.group_leader(g), bcast)?;
-        bytes_to_f32s_into(&bytes, data)?;
+        // The global sum lands straight in the gradient buffer.
+        let got = ep.recv_into(cluster.group_leader(g), bcast, f32s_as_bytes_mut(data))?;
+        anyhow::ensure!(got == data.len() * 4, "hier bcast size mismatch");
     }
     Ok(())
 }

@@ -97,6 +97,19 @@ pub fn f32s_as_bytes(xs: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
+/// Mutable zero-copy view of an f32 slice as wire bytes — the receive
+/// side of [`f32s_as_bytes`]: collectives hand it to
+/// [`crate::net::Endpoint::recv_into`] so incoming chunks land in the
+/// gradient buffer with no intermediate copy. Sound for the same reasons
+/// (every byte pattern is a valid f32, u8 alignment is 1, LE wire
+/// format), plus the exclusive borrow rules out aliasing.
+#[inline]
+pub fn f32s_as_bytes_mut(xs: &mut [f32]) -> &mut [u8] {
+    const _: () = assert!(cfg!(target_endian = "little"), "wire format is little-endian");
+    // SAFETY: see f32s_as_bytes; the &mut borrow is exclusive.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4) }
+}
+
 /// Decode little-endian bytes into an existing f32 buffer (no allocation).
 #[inline]
 pub fn bytes_to_f32s_into(bytes: &[u8], dst: &mut [f32]) -> Result<()> {

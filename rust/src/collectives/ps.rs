@@ -4,7 +4,7 @@
 //! all-reduce strategy avoids. The paper lists PS as a future-work
 //! comparison; we include it so the benches can show the contrast.
 
-use super::{bytes_to_f32s, f32s_as_bytes, reduce::add_assign};
+use super::{f32s_as_bytes, f32s_as_bytes_mut, reduce::add_bytes_assign};
 use crate::net::{tag, tags, Endpoint};
 use crate::topology::Ring;
 use crate::Result;
@@ -31,21 +31,18 @@ pub fn ps_allreduce(
     let t_pull = tag(tags::PS_PULL, step, bucket);
     if rank == 0 {
         for &w in &ring.members()[1..] {
-            let inb = ep.recv(w, t_push)?;
-            let incoming = bytes_to_f32s(&inb)?;
-            anyhow::ensure!(incoming.len() == data.len(), "ps push size mismatch");
-            add_assign(data, &incoming);
+            // Pooled frame, decode-added in place (size-checked inside).
+            let inb = ep.recv_buf(w, t_push)?;
+            add_bytes_assign(data, &inb)?;
         }
-        let out = f32s_as_bytes(data).to_vec();
         for &w in &ring.members()[1..] {
-            ep.send(w, t_pull, &out)?;
+            ep.send(w, t_pull, f32s_as_bytes(data))?;
         }
     } else {
         ep.send(server, t_push, f32s_as_bytes(data))?;
-        let inb = ep.recv(server, t_pull)?;
-        let reduced = bytes_to_f32s(&inb)?;
-        anyhow::ensure!(reduced.len() == data.len(), "ps pull size mismatch");
-        data.copy_from_slice(&reduced);
+        // The reduced vector lands straight in the gradient buffer.
+        let got = ep.recv_into(server, t_pull, f32s_as_bytes_mut(data))?;
+        anyhow::ensure!(got == data.len() * 4, "ps pull size mismatch");
     }
     Ok(())
 }

@@ -25,6 +25,37 @@ pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     }
 }
 
+/// `dst[i] += f32_le(bytes[4i..4i+4])` — the wire-facing reduce: an
+/// incoming chunk is decoded and accumulated in one pass, straight off
+/// the receive buffer (no intermediate `Vec<f32>`). Chunked like
+/// [`add_assign`] so LLVM vectorizes the fused decode+add body; on LE
+/// targets the decode is a plain load, so this runs at [`add_assign`]
+/// speed. Bench-tracked as `reduce.reduce_bw_gbps` via
+/// [`measure_reduce_bw_gbps`].
+#[inline]
+pub fn add_bytes_assign(dst: &mut [f32], bytes: &[u8]) -> crate::Result<()> {
+    anyhow::ensure!(
+        bytes.len() == dst.len() * 4,
+        "reduce chunk size mismatch: got {} bytes, want {}",
+        bytes.len(),
+        dst.len() * 4
+    );
+    const LANES: usize = 8;
+    let n = dst.len();
+    let main = n - n % LANES;
+    let (dm, dt) = dst.split_at_mut(main);
+    let (bm, bt) = bytes.split_at(main * 4);
+    for (d8, b32) in dm.chunks_exact_mut(LANES).zip(bm.chunks_exact(LANES * 4)) {
+        for i in 0..LANES {
+            d8[i] += f32::from_le_bytes(b32[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+    }
+    for (d, c) in dt.iter_mut().zip(bt.chunks_exact(4)) {
+        *d += f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
 /// `dst[i] *= k` — used to turn the all-reduce sum into an average.
 #[inline]
 pub fn scale(dst: &mut [f32], k: f32) {
@@ -60,6 +91,24 @@ pub fn measure_add_seconds(elems: usize, reps: usize) -> f64 {
     let dt = t0.elapsed().as_secs_f64() / reps.max(1) as f64;
     std::hint::black_box(&a);
     dt
+}
+
+/// Sustained [`add_bytes_assign`] throughput in Gbps of wire bytes
+/// reduced — the receive-side CPU ceiling of every collective's hot
+/// path. Reported (and regression-gated) by `netbn bench` as
+/// `reduce.reduce_bw_gbps`.
+pub fn measure_reduce_bw_gbps(elems: usize, reps: usize) -> f64 {
+    let mut dst = vec![1.0f32; elems.max(1)];
+    let bytes = super::f32s_to_bytes(&vec![1.000001f32; elems.max(1)]);
+    // Warmup.
+    add_bytes_assign(&mut dst, &bytes).expect("sized to match");
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps.max(1) {
+        add_bytes_assign(&mut dst, &bytes).expect("sized to match");
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps.max(1) as f64;
+    std::hint::black_box(&dst);
+    crate::bytes_per_sec_to_gbps(bytes.len() as f64 / dt)
 }
 
 #[cfg(test)]
@@ -99,6 +148,37 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn add_assign_rejects_mismatch() {
         add_assign(&mut [1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn add_bytes_assign_matches_add_assign() {
+        prop::forall("add_bytes_assign == add_assign", 50, |rng| {
+            let a = prop::vec_f32(rng, 1..=1025, 10.0);
+            let b = prop::vec_f32(rng, a.len()..=a.len(), 10.0);
+            let mut want = a.clone();
+            add_assign(&mut want, &b);
+            let mut got = a.clone();
+            add_bytes_assign(&mut got, &crate::collectives::f32s_to_bytes(&b)).unwrap();
+            for i in 0..want.len() {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("idx {i}: {} != {}", got[i], want[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_bytes_assign_rejects_size_mismatch() {
+        let mut d = vec![0.0f32; 2];
+        assert!(add_bytes_assign(&mut d, &[0u8; 7]).is_err());
+        assert!(add_bytes_assign(&mut d, &[0u8; 12]).is_err());
+        assert!(add_bytes_assign(&mut d, &[0u8; 8]).is_ok());
+    }
+
+    #[test]
+    fn reduce_bw_is_positive() {
+        assert!(measure_reduce_bw_gbps(1 << 14, 4) > 0.0);
     }
 
     #[test]

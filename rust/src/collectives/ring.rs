@@ -5,26 +5,11 @@
 //! Every worker calls [`ring_allreduce`] with its local gradient vector;
 //! on return the vector holds the element-wise **sum** across the ring.
 
-use super::{f32s_as_bytes, split_points};
+use super::reduce::add_bytes_assign;
+use super::{f32s_as_bytes, f32s_as_bytes_mut, split_points};
 use crate::net::{tag, tags, Endpoint};
 use crate::topology::Ring;
 use crate::Result;
-
-/// Reinterpret received wire bytes as f32s in place of the destination
-/// chunk, adding (reduce-scatter) — no intermediate Vec<f32>.
-#[inline]
-fn add_bytes_assign(dst: &mut [f32], bytes: &[u8]) -> Result<()> {
-    anyhow::ensure!(
-        bytes.len() == dst.len() * 4,
-        "chunk size mismatch: got {} bytes, want {}",
-        bytes.len(),
-        dst.len() * 4
-    );
-    for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
-        *d += f32::from_le_bytes(c.try_into().unwrap());
-    }
-    Ok(())
-}
 
 /// In-place ring all-reduce of `data` across `ring`. `step` and `bucket`
 /// disambiguate concurrent collectives (tag space). Blocking; must be
@@ -56,17 +41,19 @@ pub fn ring_allreduce(
     for round in 0..n - 1 {
         let send_idx = (pos + n - round) % n;
         let recv_idx = (pos + n - round - 1) % n;
-        // Zero-copy send view; decode-and-add without an intermediate Vec.
+        // Zero-copy send view; the incoming chunk is borrowed from the
+        // fabric's pool and decode-added in place — no Vec on either side.
         ep.send(
             next,
             tag(tags::REDUCE_SCATTER, step, sub(round)),
             f32s_as_bytes(&data[chunks[send_idx].clone()]),
         )?;
-        let inb = ep.recv(prev, tag(tags::REDUCE_SCATTER, step, sub(round)))?;
+        let inb = ep.recv_buf(prev, tag(tags::REDUCE_SCATTER, step, sub(round)))?;
         add_bytes_assign(&mut data[chunks[recv_idx].clone()], &inb)?;
     }
 
-    // Phase 2 — all-gather. Each worker circulates its fully-reduced chunk.
+    // Phase 2 — all-gather. Each worker circulates its fully-reduced
+    // chunk; the incoming chunk lands straight in the gradient buffer.
     for round in 0..n - 1 {
         let send_idx = (pos + 1 + n - round) % n;
         let recv_idx = (pos + n - round) % n;
@@ -75,8 +62,13 @@ pub fn ring_allreduce(
             tag(tags::ALL_GATHER, step, sub(round)),
             f32s_as_bytes(&data[chunks[send_idx].clone()]),
         )?;
-        let inb = ep.recv(prev, tag(tags::ALL_GATHER, step, sub(round)))?;
-        super::bytes_to_f32s_into(&inb, &mut data[chunks[recv_idx].clone()])?;
+        let dst = f32s_as_bytes_mut(&mut data[chunks[recv_idx].clone()]);
+        let got = ep.recv_into(prev, tag(tags::ALL_GATHER, step, sub(round)), dst)?;
+        anyhow::ensure!(
+            got == dst.len(),
+            "all-gather chunk size mismatch: got {got} bytes, want {}",
+            dst.len()
+        );
     }
     Ok(())
 }

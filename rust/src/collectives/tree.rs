@@ -3,7 +3,7 @@
 //! path vs the ring's `2S(N−1)/N` — included so benches can contrast the
 //! algorithms the way the paper's §3.1 model assumes ring.
 
-use super::{bytes_to_f32s, f32s_as_bytes, reduce::add_assign};
+use super::{f32s_as_bytes, f32s_as_bytes_mut, reduce::add_bytes_assign};
 use crate::net::{tag, tags, Endpoint};
 use crate::topology::{Ring, WorkerId};
 use crate::Result;
@@ -48,10 +48,9 @@ pub fn tree_allreduce(
             break; // sender's reduce role is done
         } else if rank + bit < n {
             let src = rank + bit;
-            let inb = ep.recv(member(src), tag(tags::TREE_UP, step, sub(k)))?;
-            let incoming = bytes_to_f32s(&inb)?;
-            anyhow::ensure!(incoming.len() == data.len(), "tree reduce size mismatch");
-            add_assign(data, &incoming);
+            // Pooled frame, decode-added in place (size-checked inside).
+            let inb = ep.recv_buf(member(src), tag(tags::TREE_UP, step, sub(k)))?;
+            add_bytes_assign(data, &inb)?;
         }
         k += 1;
     }
@@ -65,10 +64,13 @@ pub fn tree_allreduce(
         }
         if rank & bit != 0 {
             let src = rank - bit;
-            let inb = ep.recv(member(src), tag(tags::TREE_DOWN, step, sub(k)))?;
-            let incoming = bytes_to_f32s(&inb)?;
-            anyhow::ensure!(incoming.len() == data.len(), "tree bcast size mismatch");
-            data.copy_from_slice(&incoming);
+            // The broadcast lands straight in the gradient buffer.
+            let got = ep.recv_into(
+                member(src),
+                tag(tags::TREE_DOWN, step, sub(k)),
+                f32s_as_bytes_mut(data),
+            )?;
+            anyhow::ensure!(got == data.len() * 4, "tree bcast size mismatch");
         } else if rank + bit < n {
             let dst = rank + bit;
             ep.send(member(dst), tag(tags::TREE_DOWN, step, sub(k)), f32s_as_bytes(data))?;

@@ -3,6 +3,9 @@
 //! be versioned without a serde dependency.
 
 pub mod parser;
+pub mod spec;
+
+pub use spec::FromSpec;
 
 use crate::models::ModelId;
 use std::fmt;
@@ -30,19 +33,12 @@ pub enum TransportKind {
 impl TransportKind {
     /// Accepted spellings: `full`/`ideal`, `kernel-tcp`/`horovod`/
     /// `single`, `tcp`, `striped` (8 streams) or `striped:<n>`.
+    ///
+    /// Thin alias over [`FromSpec::match_spec`]; use
+    /// [`FromSpec::from_spec`] when an actionable error is wanted instead
+    /// of `None`.
     pub fn parse(s: &str) -> Option<TransportKind> {
-        let lower = s.to_ascii_lowercase();
-        match lower.as_str() {
-            "full" | "full-utilization" | "ideal" => return Some(TransportKind::FullUtilization),
-            "kernel-tcp" | "kernel_tcp" | "horovod" | "single" => {
-                return Some(TransportKind::KernelTcp)
-            }
-            "tcp" | "emulated" => return Some(TransportKind::Tcp),
-            "striped" => return Some(TransportKind::Striped { streams: 8 }),
-            _ => {}
-        }
-        let n: usize = lower.strip_prefix("striped:")?.parse().ok()?;
-        (1..=256).contains(&n).then_some(TransportKind::Striped { streams: n })
+        Self::match_spec(s).and_then(|r| r.ok())
     }
 }
 
@@ -82,20 +78,12 @@ impl CollectiveKind {
     /// Accepted spellings: `ring`, `tree`, `ps`/`parameter-server`,
     /// `hier` (groups of 8) or `hier:<group_size>` /
     /// `hierarchical:<group_size>`.
+    ///
+    /// Thin alias over [`FromSpec::match_spec`]; use
+    /// [`FromSpec::from_spec`] when an actionable error is wanted instead
+    /// of `None`.
     pub fn parse(s: &str) -> Option<CollectiveKind> {
-        let lower = s.to_ascii_lowercase();
-        match lower.as_str() {
-            "ring" => return Some(CollectiveKind::Ring),
-            "tree" => return Some(CollectiveKind::Tree),
-            "ps" | "parameter-server" => return Some(CollectiveKind::ParameterServer),
-            "hier" | "hierarchical" => {
-                return Some(CollectiveKind::Hierarchical { group_size: 8 })
-            }
-            _ => {}
-        }
-        let rest = lower.strip_prefix("hier:").or_else(|| lower.strip_prefix("hierarchical:"))?;
-        let g: usize = rest.parse().ok()?;
-        (1..=4096).contains(&g).then_some(CollectiveKind::Hierarchical { group_size: g })
+        Self::match_spec(s).and_then(|r| r.ok())
     }
 }
 
@@ -130,12 +118,10 @@ pub enum OverlapMode {
 
 impl OverlapMode {
     /// Accepted spellings: `off`/`blocking`/`none`, `buckets`/`on`.
+    ///
+    /// Thin alias over [`FromSpec::match_spec`].
     pub fn parse(s: &str) -> Option<OverlapMode> {
-        match s.to_ascii_lowercase().as_str() {
-            "off" | "blocking" | "none" => Some(OverlapMode::Off),
-            "buckets" | "on" | "bucketized" => Some(OverlapMode::Buckets),
-            _ => None,
-        }
+        Self::match_spec(s).and_then(|r| r.ok())
     }
 }
 
@@ -206,32 +192,12 @@ impl Compression {
     /// assert!(Compression::parse("topk:0").is_err());
     /// assert!(Compression::parse("0.5").is_err());
     /// ```
+    ///
+    /// Thin alias over [`FromSpec::from_spec`] (this type's only
+    /// `Result`-returning entry point already carried the actionable
+    /// error, so the alias preserves the `Result` shape).
     pub fn parse(s: &str) -> crate::Result<Compression> {
-        let t = s.trim();
-        if t.is_empty() || t.eq_ignore_ascii_case("none") {
-            return Ok(Compression::None);
-        }
-        if let Ok(r) = t.parse::<f64>() {
-            anyhow::ensure!(
-                r.is_finite() && r >= 1.0,
-                "compression ratio must be finite and >= 1, got {t:?}"
-            );
-            return Ok(if r == 1.0 { Compression::None } else { Compression::Ratio(r) });
-        }
-        if let Some(kind) = crate::compress::CodecKind::parse(t) {
-            let c = Compression::Codec(kind);
-            anyhow::ensure!(
-                c.ratio() >= 1.0,
-                "codec {t:?} has wire ratio {:.3} < 1 (value+index doubling would inflate \
-                 traffic); pick topk k <= 0.5",
-                c.ratio()
-            );
-            return Ok(c);
-        }
-        anyhow::bail!(
-            "unknown compression {t:?}: expected a ratio >= 1, \"none\", or a codec \
-             (fp16 | int8 | onebit | topk:<k> | randk:<k>)"
-        )
+        Self::from_spec(s)
     }
 }
 

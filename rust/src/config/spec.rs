@@ -1,0 +1,206 @@
+//! [`FromSpec`] — the one trait behind every textual spec parser.
+//!
+//! The CLI, the TOML subset, and knob strings all accept short textual
+//! specs: `--transport striped:8`, `collective = "hier:4"`,
+//! `compression=topk:0.01`. Each spec-accepting type used to carry an
+//! ad-hoc `parse` with its own error wording; they now all implement
+//! [`FromSpec`], so the recognizer logic lives in exactly one place per
+//! type and the unknown-value error has the same shape everywhere:
+//!
+//! ```text
+//! unknown <kind> "<spec>"; valid values: <list>
+//! ```
+//!
+//! The old entry points ([`TransportKind::parse`],
+//! [`CollectiveKind::parse`], [`OverlapMode::parse`],
+//! [`Compression::parse`], [`crate::tune::KnobPoint::parse_spec`]) remain
+//! as thin aliases over the trait, so every CLI flag, TOML key, and knob
+//! string accepts and rejects exactly the specs it did before.
+
+use super::{CollectiveKind, Compression, OverlapMode, TransportKind};
+use crate::Result;
+
+/// A type constructible from a short textual spec (a CLI flag value, a
+/// TOML string, or a knob value).
+///
+/// Implementors provide [`FromSpec::match_spec`], which distinguishes
+/// *unrecognized* spellings (`None` — [`FromSpec::from_spec`] turns that
+/// into the shared `unknown ...; valid values: ...` error) from
+/// *recognized but invalid* ones (`Some(Err(..))` — a specific error says
+/// which constraint failed, e.g. `striped:0`'s stream range).
+pub trait FromSpec: Sized {
+    /// Human name of the kind, used in the shared unknown-value error.
+    const KIND: &'static str;
+    /// The valid spellings, listed verbatim in the shared error.
+    const VALID: &'static str;
+
+    /// Recognize and parse `s`.
+    fn match_spec(s: &str) -> Option<Result<Self>>;
+
+    /// Parse `s`, failing with the shared error format when the spelling
+    /// is not recognized: `unknown <KIND> "<s>"; valid values: <VALID>`.
+    fn from_spec(s: &str) -> Result<Self> {
+        Self::match_spec(s).unwrap_or_else(|| {
+            Err(anyhow::anyhow!(
+                "unknown {} {s:?}; valid values: {}",
+                Self::KIND,
+                Self::VALID
+            ))
+        })
+    }
+}
+
+impl FromSpec for TransportKind {
+    const KIND: &'static str = "transport";
+    const VALID: &'static str = "full | full-utilization | ideal | kernel-tcp | horovod | single \
+                                 | tcp | emulated | striped | striped:<1..=256>";
+
+    fn match_spec(s: &str) -> Option<Result<TransportKind>> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "full" | "full-utilization" | "ideal" => {
+                return Some(Ok(TransportKind::FullUtilization))
+            }
+            "kernel-tcp" | "kernel_tcp" | "horovod" | "single" => {
+                return Some(Ok(TransportKind::KernelTcp))
+            }
+            "tcp" | "emulated" => return Some(Ok(TransportKind::Tcp)),
+            "striped" => return Some(Ok(TransportKind::Striped { streams: 8 })),
+            _ => {}
+        }
+        let rest = lower.strip_prefix("striped:")?;
+        Some(match rest.parse::<usize>() {
+            Ok(n) if (1..=256).contains(&n) => Ok(TransportKind::Striped { streams: n }),
+            Ok(n) => Err(anyhow::anyhow!("striped transport streams must be in 1..=256, got {n}")),
+            Err(_) => Err(anyhow::anyhow!(
+                "striped transport stream count must be an integer, got {rest:?}"
+            )),
+        })
+    }
+}
+
+impl FromSpec for CollectiveKind {
+    const KIND: &'static str = "collective";
+    const VALID: &'static str = "ring | tree | ps | parameter-server | hier | hierarchical \
+                                 | hier:<1..=4096> | hierarchical:<1..=4096>";
+
+    fn match_spec(s: &str) -> Option<Result<CollectiveKind>> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "ring" => return Some(Ok(CollectiveKind::Ring)),
+            "tree" => return Some(Ok(CollectiveKind::Tree)),
+            "ps" | "parameter-server" => return Some(Ok(CollectiveKind::ParameterServer)),
+            "hier" | "hierarchical" => {
+                return Some(Ok(CollectiveKind::Hierarchical { group_size: 8 }))
+            }
+            _ => {}
+        }
+        let rest = lower.strip_prefix("hier:").or_else(|| lower.strip_prefix("hierarchical:"))?;
+        Some(match rest.parse::<usize>() {
+            Ok(g) if (1..=4096).contains(&g) => Ok(CollectiveKind::Hierarchical { group_size: g }),
+            Ok(g) => Err(anyhow::anyhow!(
+                "hierarchical collective group size must be in 1..=4096, got {g}"
+            )),
+            Err(_) => Err(anyhow::anyhow!(
+                "hierarchical collective group size must be an integer, got {rest:?}"
+            )),
+        })
+    }
+}
+
+impl FromSpec for OverlapMode {
+    const KIND: &'static str = "overlap mode";
+    const VALID: &'static str = "off | blocking | none | buckets | on | bucketized";
+
+    fn match_spec(s: &str) -> Option<Result<OverlapMode>> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "blocking" | "none" => Some(Ok(OverlapMode::Off)),
+            "buckets" | "on" | "bucketized" => Some(Ok(OverlapMode::Buckets)),
+            _ => None,
+        }
+    }
+}
+
+impl FromSpec for Compression {
+    const KIND: &'static str = "compression";
+    const VALID: &'static str =
+        "a ratio >= 1, \"none\", or a codec (fp16 | int8 | onebit | topk:<k> | randk:<k>)";
+
+    fn match_spec(s: &str) -> Option<Result<Compression>> {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("none") {
+            return Some(Ok(Compression::None));
+        }
+        if let Ok(r) = t.parse::<f64>() {
+            return Some(if r.is_finite() && r >= 1.0 {
+                Ok(if r == 1.0 { Compression::None } else { Compression::Ratio(r) })
+            } else {
+                Err(anyhow::anyhow!("compression ratio must be finite and >= 1, got {t:?}"))
+            });
+        }
+        let kind = crate::compress::CodecKind::parse(t)?;
+        let c = Compression::Codec(kind);
+        Some(if c.ratio() >= 1.0 {
+            Ok(c)
+        } else {
+            Err(anyhow::anyhow!(
+                "codec {t:?} has wire ratio {:.3} < 1 (value+index doubling would inflate \
+                 traffic); pick topk k <= 0.5",
+                c.ratio()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_specs_share_one_error_shape() {
+        let e = TransportKind::from_spec("warp").unwrap_err().to_string();
+        assert!(e.contains("unknown transport \"warp\""), "{e}");
+        assert!(e.contains("valid values:") && e.contains("striped"), "{e}");
+        let e = CollectiveKind::from_spec("butterfly").unwrap_err().to_string();
+        assert!(e.contains("unknown collective") && e.contains("ring"), "{e}");
+        let e = OverlapMode::from_spec("pipelined").unwrap_err().to_string();
+        assert!(e.contains("unknown overlap mode") && e.contains("buckets"), "{e}");
+        let e = Compression::from_spec("bogus").unwrap_err().to_string();
+        assert!(e.contains("unknown compression") && e.contains("fp16"), "{e}");
+    }
+
+    #[test]
+    fn recognized_but_invalid_specs_get_specific_errors() {
+        let e = TransportKind::from_spec("striped:0").unwrap_err().to_string();
+        assert!(e.contains("1..=256"), "{e}");
+        let e = TransportKind::from_spec("striped:x").unwrap_err().to_string();
+        assert!(e.contains("integer"), "{e}");
+        let e = CollectiveKind::from_spec("hier:5000").unwrap_err().to_string();
+        assert!(e.contains("1..=4096"), "{e}");
+        let e = Compression::from_spec("0.5").unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = Compression::from_spec("topk:0.9").unwrap_err().to_string();
+        assert!(e.contains("wire ratio"), "{e}");
+    }
+
+    #[test]
+    fn from_spec_agrees_with_legacy_parse() {
+        // The `parse` aliases must accept/reject exactly what the trait
+        // does — they are the compatibility contract for every CLI flag
+        // and TOML key.
+        for s in ["ideal", "single", "tcp", "striped", "striped:16", "striped:0", "nope", ""] {
+            assert_eq!(TransportKind::parse(s), TransportKind::from_spec(s).ok(), "{s:?}");
+        }
+        for s in ["ring", "tree", "ps", "hier", "hier:4", "hierarchical:2", "hier:0", "nope"] {
+            assert_eq!(CollectiveKind::parse(s), CollectiveKind::from_spec(s).ok(), "{s:?}");
+        }
+        for s in ["off", "blocking", "none", "buckets", "on", "bucketized", "nope"] {
+            assert_eq!(OverlapMode::parse(s), OverlapMode::from_spec(s).ok(), "{s:?}");
+        }
+        for s in ["none", "1", "4", "fp16", "topk:0.01", "topk:0", "0.5", "bogus"] {
+            let a = Compression::parse(s).ok();
+            let b = Compression::from_spec(s).ok();
+            assert_eq!(a, b, "{s:?}");
+        }
+    }
+}

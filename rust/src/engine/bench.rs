@@ -128,14 +128,21 @@ pub fn collect(registry: &ScenarioRegistry) -> Result<BenchReport> {
     Ok(BenchReport { metrics })
 }
 
-/// [`collect`], plus the gated e2e pair: run the registered
-/// `e2e_tcp_smoke` scenario (thread-spawned workers, striped lanes, hier
-/// collective over real loopback TCP — exactly the smoke CI already
-/// exercises, so there is a single definition of "the launch probe")
-/// `runs` times and report `e2e.busbw_gbps` (mean) +
-/// `e2e.busbw_gbps.stddev`. PR 4 shipped the mean as informational-only;
-/// with the dispersion measured per run, the metric is now **gated** —
-/// variance-aware, see [`compare`].
+/// [`collect`], plus the gated machine-dependent pairs:
+///
+/// * `e2e.busbw_gbps` (+ `.stddev`) — the registered `e2e_tcp_smoke`
+///   scenario (thread-spawned workers, striped lanes, hier collective
+///   over real loopback TCP — exactly the smoke CI already exercises,
+///   so there is a single definition of "the launch probe"), run `runs`
+///   times. PR 4 shipped the mean as informational-only; with the
+///   dispersion measured per run, the metric is **gated** —
+///   variance-aware, see [`compare`].
+/// * `reduce.reduce_bw_gbps` (+ `.stddev`) — the sustained decode+add
+///   bandwidth of [`crate::collectives::reduce::add_bytes_assign`], the
+///   receive-side CPU ceiling of every collective. Gated the same
+///   variance-aware way against a deliberately conservative baseline,
+///   so a de-vectorizing regression of the reduce loop fails CI without
+///   the gate tripping on CPU-speed differences between machines.
 pub fn collect_with_e2e(registry: &ScenarioRegistry, runs: usize) -> Result<BenchReport> {
     anyhow::ensure!(runs >= 1, "e2e bench needs >= 1 run");
     let mut report = collect(registry)?;
@@ -143,7 +150,18 @@ pub fn collect_with_e2e(registry: &ScenarioRegistry, runs: usize) -> Result<Benc
     let s = crate::util::stats::Summary::of(&samples);
     report.metrics.push(("e2e.busbw_gbps".to_string(), s.mean));
     report.metrics.push(("e2e.busbw_gbps.stddev".to_string(), s.std));
+    let r = reduce_bw_samples(runs.max(3));
+    let rs = crate::util::stats::Summary::of(&r);
+    report.metrics.push(("reduce.reduce_bw_gbps".to_string(), rs.mean));
+    report.metrics.push(("reduce.reduce_bw_gbps.stddev".to_string(), rs.std));
     Ok(report)
+}
+
+/// `runs` samples of the reduce hot path's wire-bytes-reduced bandwidth
+/// (1M f32 elements per rep — streaming from memory, the regime the
+/// collectives' chunks run in).
+fn reduce_bw_samples(runs: usize) -> Vec<f64> {
+    (0..runs).map(|_| crate::collectives::reduce::measure_reduce_bw_gbps(1 << 20, 4)).collect()
 }
 
 /// `runs` samples of the launch probe's effective bus bandwidth.
@@ -404,6 +422,22 @@ mod tests {
     }
 
     #[test]
+    fn reduce_bw_is_gated_with_measured_dispersion() {
+        // The reduce hot path's CPU ceiling is a first-class gated metric:
+        // samples are positive and the variance-aware pair is committed in
+        // the baseline, conservatively enough that the floor (10% of 20
+        // Gbps after 3σ slack) only trips on a genuine de-vectorization.
+        let samples = reduce_bw_samples(3);
+        assert_eq!(samples.len(), 3);
+        for s in &samples {
+            assert!(s.is_finite() && *s > 0.0, "{samples:?}");
+        }
+        let committed = parse_flat_json(include_str!("../../../bench/baseline.json")).unwrap();
+        assert!(committed.iter().any(|(k, _)| k == "reduce.reduce_bw_gbps"));
+        assert!(committed.iter().any(|(k, _)| k == "reduce.reduce_bw_gbps.stddev"));
+    }
+
+    #[test]
     fn variance_aware_gate_widens_by_three_sigma() {
         let base = kv(&[("e2e.busbw_gbps", 10.0), ("e2e.busbw_gbps.stddev", 1.0)]);
         // 7.5 is below the 20% floor (8.0) but inside 8.0 − 3σ = 5.0.
@@ -527,16 +561,16 @@ mod tests {
         // build produces must sit within the gate's own tolerance of it.
         // (Analytic scenarios are deterministic, so in practice they match
         // near-exactly; the tolerance absorbs model recalibrations small
-        // enough not to matter.) The e2e pair is machine-dependent by
-        // nature — `collect()` deliberately excludes it, so strip it from
-        // the committed set here; its gating is covered by the
-        // variance-aware tests above and exercised for real by CI's
-        // `netbn bench --compare`.
+        // enough not to matter.) The e2e and reduce pairs are
+        // machine-dependent by nature — `collect()` deliberately excludes
+        // them, so strip them from the committed set here; their gating is
+        // covered by the variance-aware tests above and exercised for real
+        // by CI's `netbn bench --compare`.
         let committed: Vec<(String, f64)> =
             parse_flat_json(include_str!("../../../bench/baseline.json"))
                 .unwrap()
                 .into_iter()
-                .filter(|(k, _)| !k.starts_with("e2e."))
+                .filter(|(k, _)| !k.starts_with("e2e.") && !k.starts_with("reduce."))
                 .collect();
         let current = collect(&ScenarioRegistry::builtin()).unwrap();
         let cmp = compare(&current.metrics, &committed, 0.2);

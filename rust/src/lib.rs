@@ -30,7 +30,7 @@
 //! | substrate | [`report`] | ASCII tables, figure series, CSV/JSON writers, paper-shape checks |
 //! | substrate | [`config`] | typed experiment configs, `Compression::parse` (ratio-or-codec), TOML-subset parser, paper presets |
 //! | domain | [`topology`] | servers × GPUs, ring construction, two-tier `Cluster` grouping |
-//! | domain | [`net`] | fabrics (in-proc, real TCP, multi-process mesh), the `Transport` strategy layer (single-stream vs striped:N), token-bucket shaper, kernel-TCP + striped cost models |
+//! | domain | [`net`] | fabrics (in-proc, real TCP, multi-process mesh), the `Transport` strategy layer (single-stream vs striped:N), size-classed buffer pool + vectored I/O, token-bucket shaper, kernel-TCP + striped cost models |
 //! | domain | [`collectives`] | ring / tree / PS / hierarchical leader-ring all-reduce + Horovod fusion buffer |
 //! | domain | [`models`] | ResNet50/101/VGG16 layer generators + V100 timing model |
 //! | domain | [`compress`] | real gradient codecs: fp16, int8, top-k, random-k, 1-bit |

@@ -1,0 +1,346 @@
+//! Size-classed buffer pool for the zero-copy data plane.
+//!
+//! The paper's diagnosis is that software overhead — not the wire —
+//! strands provisioned bandwidth, and per-chunk allocation is exactly
+//! that kind of overhead: before this module the striped transport
+//! `to_vec()`-copied every chunk into a fresh allocation and every
+//! `recv` returned a fresh `Vec<u8>`, so the steady-state hot path
+//! allocated per chunk per lane per step. [`BufPool`] closes the loop:
+//!
+//! * Buffers are grouped into power-of-two **size classes** (64 B up to
+//!   128 MiB). `get(len)` pops a free buffer of the smallest class that
+//!   fits, or allocates one fresh at the full class size so it is
+//!   reusable for any request in the class.
+//! * [`PooledBuf`] is an owned, `Send` handle that derefs to exactly the
+//!   logical `len` requested. Dropping it returns the storage to the
+//!   pool; [`PooledBuf::into_vec`] detaches it for legacy callers that
+//!   need a bare `Vec<u8>` (the allocation then stays with the caller).
+//! * The pool is **leak-checked by counting**: [`BufPool::stats`]
+//!   exposes fresh allocations, reuses, detaches and the number of
+//!   buffers currently outstanding. The transport-conformance suite
+//!   asserts `outstanding == 0` after a drain and that the striped hot
+//!   path performs **zero fresh allocations** at steady state.
+//!
+//! Free lists are bounded per class so a burst cannot pin unbounded
+//! memory: returns beyond the bound free the buffer (counted in
+//! `dropped`) rather than caching it.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest pooled class. Requests below this still get this class so
+/// tiny control messages recycle too.
+const MIN_CLASS_BYTES: usize = 64;
+/// Largest pooled class (one full uncompressed stripe of a VGG16-scale
+/// gradient fits). Larger requests fall back to exact, unpooled allocs.
+const MAX_CLASS_BYTES: usize = 1 << 27; // 128 MiB
+/// Default bound on cached free buffers per class.
+const DEFAULT_DEPTH: usize = 32;
+
+fn n_classes() -> usize {
+    (MAX_CLASS_BYTES / MIN_CLASS_BYTES).trailing_zeros() as usize + 1
+}
+
+/// The size class serving a request of `len` bytes, or `None` when the
+/// request is empty (no storage needed) or beyond the largest class.
+fn class_of(len: usize) -> Option<usize> {
+    if len == 0 || len > MAX_CLASS_BYTES {
+        return None;
+    }
+    let size = len.next_power_of_two().max(MIN_CLASS_BYTES);
+    Some((size / MIN_CLASS_BYTES).trailing_zeros() as usize)
+}
+
+fn class_bytes(class: usize) -> usize {
+    MIN_CLASS_BYTES << class
+}
+
+struct PoolInner {
+    classes: Vec<Mutex<Vec<Vec<u8>>>>,
+    max_per_class: usize,
+    fresh_allocs: AtomicU64,
+    reuses: AtomicU64,
+    outstanding: AtomicU64,
+    detached: AtomicU64,
+    recycled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Counters snapshot — the observable side of the leak check.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers allocated fresh from the system allocator.
+    pub fresh_allocs: u64,
+    /// Requests served from a class free list (no allocation).
+    pub reuses: u64,
+    /// Pooled buffers currently held by callers. Zero after a drain.
+    pub outstanding: u64,
+    /// Buffers handed away via [`PooledBuf::into_vec`] (legacy `Vec`
+    /// paths); their storage no longer recycles.
+    pub detached: u64,
+    /// Buffers returned to a free list on drop.
+    pub recycled: u64,
+    /// Buffers freed on drop because their class list was full.
+    pub dropped: u64,
+}
+
+/// A shared, thread-safe, size-classed buffer pool. `Clone` shares the
+/// same underlying pool (and counters), so one pool can back every lane
+/// of a fabric.
+#[derive(Clone)]
+pub struct BufPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        Self::with_depth(DEFAULT_DEPTH)
+    }
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        Self::default()
+    }
+
+    /// A pool caching at most `depth` free buffers per size class.
+    pub fn with_depth(depth: usize) -> BufPool {
+        BufPool {
+            inner: Arc::new(PoolInner {
+                classes: (0..n_classes()).map(|_| Mutex::new(Vec::new())).collect(),
+                max_per_class: depth,
+                fresh_allocs: AtomicU64::new(0),
+                reuses: AtomicU64::new(0),
+                outstanding: AtomicU64::new(0),
+                detached: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A zeroed buffer of logical length `len`. Storage comes from the
+    /// matching size class when one is cached; otherwise a fresh buffer
+    /// is allocated at the full class size (so it can serve any later
+    /// request in the class). Empty and over-`MAX_CLASS_BYTES` requests
+    /// are served unpooled.
+    pub fn get(&self, len: usize) -> PooledBuf {
+        let Some(class) = class_of(len) else {
+            return PooledBuf { buf: vec![0u8; len], class: 0, pool: None };
+        };
+        let cached = self.inner.classes[class].lock().unwrap().pop();
+        let buf = match cached {
+            Some(mut v) => {
+                // Capacity is at least the class size; resize only
+                // zero-fills the grown region (the caller overwrites).
+                v.clear();
+                v.resize(len, 0);
+                self.inner.reuses.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                let mut v = Vec::with_capacity(class_bytes(class));
+                v.resize(len, 0);
+                self.inner.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+        };
+        self.inner.outstanding.fetch_add(1, Ordering::Relaxed);
+        PooledBuf { buf, class, pool: Some(Arc::clone(&self.inner)) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            fresh_allocs: self.inner.fresh_allocs.load(Ordering::Relaxed),
+            reuses: self.inner.reuses.load(Ordering::Relaxed),
+            outstanding: self.inner.outstanding.load(Ordering::Relaxed),
+            detached: self.inner.detached.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned buffer borrowed from a [`BufPool`] (or wrapping a plain
+/// `Vec<u8>` via [`PooledBuf::from_vec`]). Derefs to exactly the logical
+/// length it was requested (or received) at; dropping it returns pooled
+/// storage to its class free list.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    class: usize,
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl PooledBuf {
+    /// Wrap an existing `Vec` as an unpooled buffer — the adapter the
+    /// default [`crate::net::Endpoint`] methods use so fabrics can
+    /// migrate to the pooled API incrementally.
+    pub fn from_vec(v: Vec<u8>) -> PooledBuf {
+        PooledBuf { buf: v, class: 0, pool: None }
+    }
+
+    /// Detach the storage as a bare `Vec<u8>`. The buffer does not
+    /// return to the pool (counted in [`PoolStats::detached`]); legacy
+    /// `recv() -> Vec<u8>` paths pay this, pooled paths never call it.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        if let Some(pool) = self.pool.take() {
+            pool.detached.fetch_add(1, Ordering::Relaxed);
+            pool.outstanding.fetch_sub(1, Ordering::Relaxed);
+        }
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.outstanding.fetch_sub(1, Ordering::Relaxed);
+            let mut free = pool.classes[self.class].lock().unwrap();
+            if free.len() < pool.max_per_class {
+                free.push(std::mem::take(&mut self.buf));
+                drop(free);
+                pool.recycled.fetch_add(1, Ordering::Relaxed);
+            } else {
+                drop(free);
+                pool.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+}
+
+impl AsRef<[u8]> for PooledBuf {
+    fn as_ref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("len", &self.buf.len())
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_sizing_rounds_up_to_power_of_two() {
+        assert_eq!(class_of(0), None);
+        assert_eq!(class_of(1), Some(0));
+        assert_eq!(class_of(64), Some(0));
+        assert_eq!(class_of(65), Some(1));
+        assert_eq!(class_of(100), Some(1));
+        assert_eq!(class_of(MAX_CLASS_BYTES), class_of(MAX_CLASS_BYTES / 2 + 1));
+        assert_eq!(class_of(MAX_CLASS_BYTES + 1), None);
+        assert_eq!(class_bytes(class_of(100).unwrap()), 128);
+    }
+
+    #[test]
+    fn get_returns_zeroed_logical_len() {
+        let pool = BufPool::new();
+        let b = pool.get(100);
+        assert_eq!(b.len(), 100);
+        assert!(b.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn drop_recycles_and_reuse_counts() {
+        let pool = BufPool::new();
+        {
+            let mut b = pool.get(1000);
+            b[0] = 7;
+        } // returns to the pool
+        let s = pool.stats();
+        assert_eq!((s.fresh_allocs, s.reuses, s.recycled, s.outstanding), (1, 0, 1, 0));
+        // Same class, different length: served without a fresh alloc,
+        // and re-zeroed.
+        let b = pool.get(900);
+        assert_eq!(b.len(), 900);
+        assert!(b.iter().all(|&x| x == 0));
+        let s = pool.stats();
+        assert_eq!((s.fresh_allocs, s.reuses, s.outstanding), (1, 1, 1));
+        drop(b);
+        assert_eq!(pool.stats().outstanding, 0);
+    }
+
+    #[test]
+    fn steady_state_allocates_zero_after_warmup() {
+        let pool = BufPool::new();
+        drop(pool.get(4096)); // warmup
+        let baseline = pool.stats().fresh_allocs;
+        for _ in 0..100 {
+            drop(pool.get(4096));
+        }
+        assert_eq!(pool.stats().fresh_allocs, baseline, "steady state must not allocate");
+        assert_eq!(pool.stats().outstanding, 0);
+    }
+
+    #[test]
+    fn into_vec_detaches_without_recycling() {
+        let pool = BufPool::new();
+        let v = pool.get(10).into_vec();
+        assert_eq!(v.len(), 10);
+        let s = pool.stats();
+        assert_eq!((s.detached, s.recycled, s.outstanding), (1, 0, 0));
+        // The next get of the class allocates fresh — the storage left.
+        pool.get(10);
+        assert_eq!(pool.stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn empty_and_oversize_requests_are_unpooled() {
+        let pool = BufPool::new();
+        let e = pool.get(0);
+        assert_eq!(e.len(), 0);
+        drop(e);
+        assert_eq!(pool.stats(), PoolStats::default());
+        let big = pool.get(MAX_CLASS_BYTES + 1);
+        assert_eq!(big.len(), MAX_CLASS_BYTES + 1);
+        drop(big);
+        assert_eq!(pool.stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn depth_bound_drops_excess_returns() {
+        let pool = BufPool::with_depth(2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.get(64)).collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!((s.recycled, s.dropped, s.outstanding), (2, 2, 0));
+    }
+
+    #[test]
+    fn clones_share_one_pool() {
+        let pool = BufPool::new();
+        let clone = pool.clone();
+        drop(clone.get(64));
+        assert_eq!(pool.stats().fresh_allocs, 1);
+        drop(pool.get(64));
+        assert_eq!(pool.stats().reuses, 1);
+    }
+
+    #[test]
+    fn from_vec_round_trips_unpooled() {
+        let b = PooledBuf::from_vec(b"abc".to_vec());
+        assert_eq!(&*b, b"abc");
+        assert_eq!(b.into_vec(), b"abc");
+    }
+}

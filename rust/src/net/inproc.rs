@@ -2,16 +2,22 @@
 //! with tag matching. The fast path for emulation and the reference
 //! implementation the TCP fabric is tested against.
 
+use super::buf::{BufPool, PooledBuf};
 use super::{Endpoint, Fabric, Mailbox};
 use crate::net::shaper::Shaper;
 use crate::topology::WorkerId;
 use crate::Result;
+use std::io::IoSlice;
 use std::sync::Arc;
 
 struct Shared {
     mailboxes: Vec<Mailbox>,
     /// Optional egress shaping (None = infinitely fast fabric).
     shaper: Option<Arc<Shaper>>,
+    /// Frame storage: sends copy into pooled buffers, receivers either
+    /// borrow them (`recv_buf`/`recv_into` — recycled on drop) or detach
+    /// them (`recv` — legacy `Vec` path).
+    pool: BufPool,
 }
 
 /// In-process fabric over `n` workers.
@@ -29,9 +35,25 @@ impl InProcFabric {
     /// shaper is shared — multiple fabric lanes of one striped transport
     /// drain the same per-server token buckets.
     pub fn with_shaper(n: usize, shaper: Option<Arc<Shaper>>) -> InProcFabric {
+        Self::with_shaper_and_pool(n, shaper, BufPool::new())
+    }
+
+    /// Like [`InProcFabric::with_shaper`] with an explicit (possibly
+    /// shared) buffer pool — the counting-pool conformance tests inject
+    /// one to prove the hot path allocates nothing at steady state.
+    pub fn with_shaper_and_pool(
+        n: usize,
+        shaper: Option<Arc<Shaper>>,
+        pool: BufPool,
+    ) -> InProcFabric {
         assert!(n >= 1);
         let mailboxes = (0..n).map(|_| Mailbox::default()).collect();
-        InProcFabric { shared: Arc::new(Shared { mailboxes, shaper }) }
+        InProcFabric { shared: Arc::new(Shared { mailboxes, shaper, pool }) }
+    }
+
+    /// The pool backing this fabric's frames.
+    pub fn pool(&self) -> &BufPool {
+        &self.shared.pool
     }
 }
 
@@ -65,11 +87,34 @@ impl Endpoint for InProcEndpoint {
         if let Some(shaper) = &self.shared.shaper {
             shaper.admit(self.me, to, payload.len() as u64);
         }
-        self.shared.mailboxes[to.0].put(self.me.0, tag, payload.to_vec());
+        let mut frame = self.shared.pool.get(payload.len());
+        frame.copy_from_slice(payload);
+        self.shared.mailboxes[to.0].put(self.me.0, tag, frame);
+        Ok(())
+    }
+
+    fn send_vectored(&self, to: WorkerId, tag: u64, iov: &[IoSlice<'_>]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world(), "send to out-of-range worker {to}");
+        let total: usize = iov.iter().map(|s| s.len()).sum();
+        if let Some(shaper) = &self.shared.shaper {
+            shaper.admit(self.me, to, total as u64);
+        }
+        // One pooled frame gathers the slices; no intermediate Vec.
+        let mut frame = self.shared.pool.get(total);
+        let mut off = 0usize;
+        for s in iov {
+            frame[off..off + s.len()].copy_from_slice(s);
+            off += s.len();
+        }
+        self.shared.mailboxes[to.0].put(self.me.0, tag, frame);
         Ok(())
     }
 
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        Ok(self.recv_buf(from, tag)?.into_vec())
+    }
+
+    fn recv_buf(&self, from: WorkerId, tag: u64) -> Result<PooledBuf> {
         anyhow::ensure!(from.0 < self.world(), "recv from out-of-range worker {from}");
         self.shared.mailboxes[self.me.0].take(from.0, tag)
     }

@@ -18,12 +18,16 @@
 //! lane is its own listener and its own set of peer connections, exactly
 //! like a `TransportFabric` lane in process.
 
-use super::tcp::{connect_retry, reader_loop_into, write_frame, CONNECT_TIMEOUT};
+use super::buf::{BufPool, PooledBuf};
+use super::tcp::{
+    connect_retry, reader_loop_into, write_frame, write_frame_vectored, CONNECT_TIMEOUT,
+};
 use super::{Endpoint, Mailbox};
 use crate::topology::WorkerId;
 use crate::Result;
 use anyhow::Context;
 use std::collections::HashMap;
+use std::io::IoSlice;
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -73,9 +77,11 @@ impl MeshNode {
         let addr = listener.local_addr()?;
         let mailbox = Arc::new(Mailbox::default());
         let closed = Arc::new(AtomicBool::new(false));
+        let pool = BufPool::new();
         {
             let mailbox = Arc::clone(&mailbox);
             let closed = Arc::clone(&closed);
+            let pool = pool.clone();
             thread::spawn(move || loop {
                 let (stream, _) = match listener.accept() {
                     Ok(s) => s,
@@ -85,8 +91,9 @@ impl MeshNode {
                     return;
                 }
                 let mailbox = Arc::clone(&mailbox);
+                let pool = pool.clone();
                 let owner = me.0;
-                thread::spawn(move || reader_loop_into(owner, stream, world, &mailbox));
+                thread::spawn(move || reader_loop_into(owner, stream, world, &mailbox, &pool));
             });
         }
         Ok(MeshNode { me, world, addr, mailbox, closed, defused: std::cell::Cell::new(false) })
@@ -212,7 +219,18 @@ impl Endpoint for MeshEndpoint {
         write_frame(&mut stream, self.me.0, tag, payload)
     }
 
+    fn send_vectored(&self, to: WorkerId, tag: u64, iov: &[IoSlice<'_>]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world, "send to out-of-range worker {to}");
+        let sender = self.sender_to(to.0)?;
+        let mut stream = sender.lock().unwrap();
+        write_frame_vectored(&mut stream, self.me.0, tag, iov)
+    }
+
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        Ok(self.recv_buf(from, tag)?.into_vec())
+    }
+
+    fn recv_buf(&self, from: WorkerId, tag: u64) -> Result<PooledBuf> {
         anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
         let ms = self.recv_timeout_ms.load(Ordering::SeqCst);
         let timeout = (ms > 0).then(|| Duration::from_millis(ms));

@@ -9,6 +9,10 @@
 //!   mailboxes, for tests and fast emulation), [`tcp`] (real loopback
 //!   sockets owned by one process) and [`mesh`] (the per-*process* half
 //!   of the TCP fabric, for `netbn launch`'s real worker processes).
+//! * [`buf`] — the size-classed, leak-checked buffer pool behind the
+//!   zero-copy receive path ([`Endpoint::recv_into`] /
+//!   [`Endpoint::recv_buf`]) and the scatter-gather send path
+//!   ([`Endpoint::send_vectored`]).
 //! * [`transport`] — the [`transport::Transport`] strategy layer: how a
 //!   logical message traverses the fabric — legacy single-stream or
 //!   striped across N parallel connections.
@@ -23,6 +27,7 @@
 //! * [`metrics`] — byte counters from which network utilization
 //!   (Fig 4) is computed.
 
+pub mod buf;
 pub mod inproc;
 pub mod kernel_tcp;
 pub mod mesh;
@@ -34,6 +39,8 @@ pub mod transport;
 
 use crate::topology::WorkerId;
 use crate::Result;
+use buf::PooledBuf;
+use std::io::IoSlice;
 use std::sync::Arc;
 
 /// Message tags name (collective, step, chunk) coordinates so concurrent
@@ -71,7 +78,55 @@ pub trait Endpoint: Send + Sync {
     /// accepted the bytes (after any shaping delay).
     fn send(&self, to: WorkerId, tag: u64, payload: &[u8]) -> Result<()>;
     /// Receive the next message from `from` under `tag`, blocking.
+    ///
+    /// **Allocates a fresh `Vec<u8>` per message** — on a pooled fabric
+    /// the storage is detached from the pool and never recycles. Hot
+    /// paths should prefer [`Endpoint::recv_into`] (receive straight
+    /// into caller storage) or [`Endpoint::recv_buf`] (borrow the pooled
+    /// frame); this method remains for control-plane and cold paths.
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>>;
+
+    /// Receive the next message from `from` under `tag` as a pooled
+    /// buffer: on pool-aware fabrics this hands over the very frame the
+    /// reader filled (no copy), and dropping it returns the storage to
+    /// the fabric's [`buf::BufPool`].
+    ///
+    /// The default falls back to [`Endpoint::recv`] and wraps the
+    /// allocation unpooled, so implementations migrate incrementally.
+    fn recv_buf(&self, from: WorkerId, tag: u64) -> Result<PooledBuf> {
+        Ok(PooledBuf::from_vec(self.recv(from, tag)?))
+    }
+
+    /// Receive the next message from `from` under `tag` directly into
+    /// `dst`, returning the message length. Fails if the message does
+    /// not fit. On pooled fabrics the only copy is frame → `dst`; the
+    /// frame storage recycles. Striped endpoints reassemble straight
+    /// into `dst` with no intermediate message-sized buffer at all.
+    fn recv_into(&self, from: WorkerId, tag: u64, dst: &mut [u8]) -> Result<usize> {
+        let buf = self.recv_buf(from, tag)?;
+        anyhow::ensure!(
+            buf.len() <= dst.len(),
+            "recv_into: message of {} bytes exceeds dst of {}",
+            buf.len(),
+            dst.len()
+        );
+        dst[..buf.len()].copy_from_slice(&buf);
+        Ok(buf.len())
+    }
+
+    /// Send a message whose payload is the concatenation of `iov`,
+    /// without requiring the caller to materialize it. Socket fabrics
+    /// turn this into one gathered `write_vectored`; mailbox fabrics
+    /// copy the slices once into a pooled frame. The default falls back
+    /// to concatenate-then-[`Endpoint::send`].
+    fn send_vectored(&self, to: WorkerId, tag: u64, iov: &[IoSlice<'_>]) -> Result<()> {
+        let total: usize = iov.iter().map(|s| s.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for s in iov {
+            flat.extend_from_slice(s);
+        }
+        self.send(to, tag, &flat)
+    }
 }
 
 /// A constructed fabric: one endpoint per worker.
@@ -90,7 +145,7 @@ pub(crate) struct Mailbox {
 }
 
 struct MailboxState {
-    queues: std::collections::HashMap<(usize, u64), std::collections::VecDeque<Vec<u8>>>,
+    queues: std::collections::HashMap<(usize, u64), std::collections::VecDeque<PooledBuf>>,
     poison: Option<String>,
 }
 
@@ -107,13 +162,16 @@ impl Default for Mailbox {
 }
 
 impl Mailbox {
-    pub(crate) fn put(&self, from: usize, tag: u64, payload: Vec<u8>) {
+    /// Queue a message. Frames arrive as [`PooledBuf`]s so pool-aware
+    /// fabrics hand storage through the mailbox without copying; plain
+    /// `Vec` producers wrap with [`PooledBuf::from_vec`].
+    pub(crate) fn put(&self, from: usize, tag: u64, payload: PooledBuf) {
         let mut st = self.state.lock().unwrap();
         st.queues.entry((from, tag)).or_default().push_back(payload);
         self.cv.notify_all();
     }
 
-    pub(crate) fn take(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
+    pub(crate) fn take(&self, from: usize, tag: u64) -> Result<PooledBuf> {
         self.take_deadline(from, tag, None)
     }
 
@@ -125,7 +183,7 @@ impl Mailbox {
         from: usize,
         tag: u64,
         timeout: Option<std::time::Duration>,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<PooledBuf> {
         let deadline = timeout.map(|t| std::time::Instant::now() + t);
         let mut st = self.state.lock().unwrap();
         loop {
@@ -193,10 +251,10 @@ mod tests {
     #[test]
     fn poisoned_mailbox_drains_then_fails() {
         let mb = Mailbox::default();
-        mb.put(0, 1, b"ok".to_vec());
+        mb.put(0, 1, PooledBuf::from_vec(b"ok".to_vec()));
         mb.poison("truncated frame");
         // Messages delivered before the poison still drain...
-        assert_eq!(mb.take(0, 1).unwrap(), b"ok");
+        assert_eq!(&*mb.take(0, 1).unwrap(), b"ok");
         // ...but a take that would block fails instead of hanging.
         let err = mb.take(0, 1).unwrap_err().to_string();
         assert!(err.contains("truncated frame"), "{err}");
@@ -221,8 +279,8 @@ mod tests {
             mb2.take_deadline(1, 2, Some(std::time::Duration::from_secs(5)))
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
-        mb.put(1, 2, b"late but in time".to_vec());
-        assert_eq!(t.join().unwrap().unwrap(), b"late but in time");
+        mb.put(1, 2, PooledBuf::from_vec(b"late but in time".to_vec()));
+        assert_eq!(&*t.join().unwrap().unwrap(), b"late but in time");
     }
 
     #[test]

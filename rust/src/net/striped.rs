@@ -24,20 +24,32 @@
 //! layout from the total length and the shared [`StripeConfig`]):
 //!
 //! ```text
-//! lane 0, frame 0: [total_len u64 LE][first chunk of stripe 0]
-//! lane 0, rest:    raw chunks of stripe 0
-//! lane l >= 1:     raw chunks of stripe l
-//! credits:         empty frames receiver -> sender, same tag with the
-//!                  high kind bit set (collective kinds stay < 0x80)
+//! fused (total <= chunk):
+//!   lane 0, one frame: [total_len u64 LE][payload]
+//! striped (total > chunk, any stream count including 1):
+//!   lane 0, frame 0:   [total_len u64 LE]          (header only)
+//!   lane 0, rest:      raw chunks of stripe 0
+//!   lane l >= 1:       raw chunks of stripe l
+//! credits:             empty frames receiver -> sender, same tag with
+//!                      the high kind bit set (collective kinds < 0x80)
 //! ```
 //!
-//! Messages no larger than one chunk (and every message when
-//! `streams == 1`) travel fused on lane 0 as `[total_len][payload]`.
+//! The header-only first frame makes every payload chunk identical on
+//! the wire — the receiver copies each exactly once, straight into the
+//! caller's buffer on the [`Endpoint::recv_into`] path (the old format
+//! piggybacked chunk 0 on the length prefix, which forced an extra
+//! buffered copy of the first chunk and broke down for single-stream
+//! multi-chunk messages).
+//!
 //! Senders never block the caller: `send` validates, copies the stripes
-//! and enqueues them to per-lane sender threads (this is what keeps a
-//! symmetric ring — everyone sending before anyone receives — free of
-//! credit deadlock). A lane sender that fails records the fault; later
-//! `send`/`recv` calls on the endpoint report it.
+//! into buffers from the endpoint's [`BufPool`] (steady state: zero
+//! allocations — the pool recycles) and enqueues them to per-lane
+//! sender threads (this is what keeps a symmetric ring — everyone
+//! sending before anyone receives — free of credit deadlock). Fused
+//! frames go out as one gathered write (`[prefix][payload]` via
+//! [`Endpoint::send_vectored`], no concatenation). A lane sender that
+//! fails records the fault; later `send`/`recv` calls on the endpoint
+//! report it.
 //!
 //! **Known limitation**: lane failures are reported per lane. If lanes
 //! fail *asymmetrically* mid-message (one lane's mailbox poisons while
@@ -56,11 +68,13 @@
 //! [`crate::collectives`] consumes per-peer traffic in send order, so
 //! they all run unchanged on either transport.
 
+use super::buf::{BufPool, PooledBuf};
 use super::Endpoint;
 use crate::collectives::split_points;
 use crate::net::kernel_tcp::KernelTcpModel;
 use crate::topology::WorkerId;
 use crate::Result;
+use std::io::IoSlice;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -156,26 +170,38 @@ impl RateGate {
     }
 }
 
-/// One enqueued stripe: `prefix` is the logical-message length carried by
-/// lane 0's first frame.
+/// How a stripe frames on its lane.
+enum JobKind {
+    /// The whole message in one `[total][payload]` frame on lane 0.
+    Fused,
+    /// Lane 0's stripe: a header-only `[total]` frame, then raw chunks.
+    Lead { total: u64 },
+    /// Lane >= 1 stripe: raw chunks only.
+    Tail,
+}
+
+/// One enqueued stripe, its payload held in a pooled buffer that
+/// returns to the endpoint's [`BufPool`] once the lane sender drains it.
 struct SendJob {
     to: WorkerId,
     tag: u64,
-    prefix: Option<u64>,
-    data: Vec<u8>,
+    kind: JobKind,
+    data: PooledBuf,
 }
 
 /// The striped transport strategy (see module docs). Implements
 /// [`crate::net::transport::Transport`]; bind it over `streams` fabric
-/// lanes with [`crate::net::transport::TransportFabric`].
+/// lanes with [`crate::net::transport::TransportFabric`]. All endpoints
+/// bound from one transport share its stripe buffer pool.
 pub struct StripedTransport {
     cfg: StripeConfig,
     per_stream_rate_bytes_per_sec: Option<f64>,
+    pool: BufPool,
 }
 
 impl StripedTransport {
     pub fn new(cfg: StripeConfig) -> StripedTransport {
-        StripedTransport { cfg, per_stream_rate_bytes_per_sec: None }
+        StripedTransport { cfg, per_stream_rate_bytes_per_sec: None, pool: BufPool::new() }
     }
 
     /// Cap each stream's egress at `rate_bytes_per_sec` — the mechanistic
@@ -187,11 +213,28 @@ impl StripedTransport {
             rate_bytes_per_sec > 0.0 && rate_bytes_per_sec.is_finite(),
             "stream ceiling must be a positive rate"
         );
-        StripedTransport { cfg, per_stream_rate_bytes_per_sec: Some(rate_bytes_per_sec) }
+        StripedTransport {
+            cfg,
+            per_stream_rate_bytes_per_sec: Some(rate_bytes_per_sec),
+            pool: BufPool::new(),
+        }
+    }
+
+    /// Like [`StripedTransport::new`] with an explicit (possibly shared)
+    /// stripe buffer pool — the counting-pool tests inject one to prove
+    /// the send path stops allocating after warmup.
+    pub fn with_pool(cfg: StripeConfig, pool: BufPool) -> StripedTransport {
+        StripedTransport { cfg, per_stream_rate_bytes_per_sec: None, pool }
     }
 
     pub fn config(&self) -> StripeConfig {
         self.cfg
+    }
+
+    /// The stripe buffer pool shared by every endpoint bound from this
+    /// transport.
+    pub fn pool(&self) -> &BufPool {
+        &self.pool
     }
 }
 
@@ -244,6 +287,7 @@ impl StripedTransport {
             stream_rate,
             tx,
             fault,
+            pool: self.pool.clone(),
         }))
     }
 }
@@ -297,38 +341,48 @@ fn send_job(
     chunk: usize,
     job: &SendJob,
 ) -> Result<()> {
-    if job.data.is_empty() && job.prefix.is_none() {
-        return Ok(());
-    }
     let ct = credit_tag(job.tag);
+    match job.kind {
+        JobKind::Fused => {
+            // One gathered frame: length prefix + payload slice, no
+            // concatenation. Fused messages never wait for credits.
+            let prefix = (job.data.len() as u64).to_le_bytes();
+            if let Some(g) = gate {
+                g.admit(8 + job.data.len());
+            }
+            return ep.send_vectored(
+                job.to,
+                job.tag,
+                &[IoSlice::new(&prefix), IoSlice::new(&job.data)],
+            );
+        }
+        JobKind::Lead { total } => {
+            // Header-only first frame announces the logical length; the
+            // stripe itself follows as raw chunks like every other lane.
+            let prefix = total.to_le_bytes();
+            if let Some(g) = gate {
+                g.admit(prefix.len());
+            }
+            ep.send(job.to, job.tag, &prefix)?;
+        }
+        JobKind::Tail => {}
+    }
     let mut sent = 0usize;
     let mut off = 0usize;
-    loop {
+    while off < job.data.len() {
         let end = (off + chunk).min(job.data.len());
         if sent >= cfg.credit_window {
             // Wait for the receiver to free a slot in the window.
             ep.recv(job.to, ct)?;
         }
-        if off == 0 && job.prefix.is_some() {
-            let mut frame = Vec::with_capacity(8 + end);
-            frame.extend_from_slice(&job.prefix.unwrap().to_le_bytes());
-            frame.extend_from_slice(&job.data[..end]);
-            if let Some(g) = gate {
-                g.admit(frame.len());
-            }
-            ep.send(job.to, job.tag, &frame)?;
-        } else {
-            if let Some(g) = gate {
-                g.admit(end - off);
-            }
-            ep.send(job.to, job.tag, &job.data[off..end])?;
+        if let Some(g) = gate {
+            g.admit(end - off);
         }
+        ep.send(job.to, job.tag, &job.data[off..end])?;
         sent += 1;
         off = end;
-        if off >= job.data.len() {
-            return Ok(());
-        }
     }
+    Ok(())
 }
 
 /// The endpoint collectives see: `send` stripes and enqueues, `recv`
@@ -346,6 +400,10 @@ pub struct StripedEndpoint {
     stream_rate: Option<Arc<AtomicU64>>,
     tx: Vec<Mutex<mpsc::Sender<SendJob>>>,
     fault: Arc<Mutex<Option<String>>>,
+    /// Stripe staging buffers; shared with the transport (and through it,
+    /// with every sibling endpoint) so steady-state traffic recycles
+    /// instead of allocating per chunk.
+    pool: BufPool,
 }
 
 impl StripedEndpoint {
@@ -396,6 +454,12 @@ impl StripedEndpoint {
         self.stream_rate.is_some()
     }
 
+    /// The pool staging this endpoint's stripes — exposed so tests (and
+    /// telemetry) can check reuse/leak counters.
+    pub fn pool(&self) -> &BufPool {
+        &self.pool
+    }
+
     fn enqueue(&self, lane: usize, job: SendJob) -> Result<()> {
         self.tx[lane]
             .lock()
@@ -404,6 +468,11 @@ impl StripedEndpoint {
             .map_err(|_| anyhow::anyhow!("stripe lane {lane} sender thread is gone"))
     }
 
+    /// Receive one lane's stripe: every chunk lands straight in `out`
+    /// via [`Endpoint::recv_into`] — the frame buffer recycles through
+    /// the lane fabric's pool, and nothing is copied twice. All lanes
+    /// (including lane 0, whose header frame [`Self::recv_first`]
+    /// already consumed) are symmetric.
     fn recv_stripe(
         &self,
         lane: usize,
@@ -411,7 +480,6 @@ impl StripedEndpoint {
         tag: u64,
         out: &mut [u8],
         chunk: usize,
-        lead_first: Option<&[u8]>,
     ) -> Result<()> {
         let ep = self.lanes[lane].as_ref();
         let ct = credit_tag(tag);
@@ -419,30 +487,13 @@ impl StripedEndpoint {
         let n_chunks = out.len().div_ceil(chunk).max(1);
         let mut off = 0usize;
         let mut k = 0usize;
-        if let Some(first) = lead_first {
-            let want = chunk.min(out.len());
-            anyhow::ensure!(
-                first.len() == 8 + want,
-                "striped lead frame on lane {lane}: {} bytes, want {}",
-                first.len(),
-                8 + want
-            );
-            out[..want].copy_from_slice(&first[8..]);
-            off = want;
-            if k + window < n_chunks {
-                ep.send(from, ct, &[])?;
-            }
-            k = 1;
-        }
         while off < out.len() {
             let want = chunk.min(out.len() - off);
-            let data = ep.recv(from, tag)?;
+            let got = ep.recv_into(from, tag, &mut out[off..off + want])?;
             anyhow::ensure!(
-                data.len() == want,
-                "striped chunk {k}/{n_chunks} on lane {lane}: {} bytes, want {want}",
-                data.len()
+                got == want,
+                "striped chunk {k}/{n_chunks} on lane {lane}: {got} bytes, want {want}"
             );
-            out[off..off + want].copy_from_slice(&data);
             off += want;
             if k + window < n_chunks {
                 ep.send(from, ct, &[])?;
@@ -450,6 +501,78 @@ impl StripedEndpoint {
             k += 1;
         }
         Ok(())
+    }
+
+    /// Common validation for the receive paths.
+    fn check_recv(&self, from: WorkerId, tag: u64) -> Result<()> {
+        anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
+        anyhow::ensure!(
+            tag & CREDIT_KIND_BIT == 0,
+            "tag kind bit 0x80 is reserved for stripe credits"
+        );
+        self.check_fault()
+    }
+
+    /// Consume lane 0's first frame. Fused messages (`total <= chunk`)
+    /// arrive whole — the frame is returned. Striped messages announce
+    /// themselves with a header-only frame — `None` is returned and the
+    /// payload follows as raw chunks on every lane.
+    fn recv_first(
+        &self,
+        from: WorkerId,
+        tag: u64,
+        chunk: usize,
+    ) -> Result<(usize, Option<PooledBuf>)> {
+        let first = self.lanes[0].recv_buf(from, tag)?;
+        anyhow::ensure!(
+            first.len() >= 8,
+            "striped frame missing length prefix ({} bytes)",
+            first.len()
+        );
+        let total = u64::from_le_bytes(first[..8].try_into().unwrap()) as usize;
+        if total <= chunk {
+            anyhow::ensure!(
+                first.len() == 8 + total,
+                "fused striped frame: {} bytes, want {}",
+                first.len(),
+                8 + total
+            );
+            Ok((total, Some(first)))
+        } else {
+            anyhow::ensure!(
+                first.len() == 8,
+                "striped header frame: {} bytes, want 8",
+                first.len()
+            );
+            Ok((total, None))
+        }
+    }
+
+    /// Reassemble a striped body straight into `out` (`out.len()` is the
+    /// announced total), one scoped receiver thread per extra lane.
+    fn recv_body(&self, from: WorkerId, tag: u64, chunk: usize, out: &mut [u8]) -> Result<()> {
+        let stripes = split_points(out.len(), self.cfg.streams);
+        let mut slices = Vec::with_capacity(stripes.len());
+        let mut rest = out;
+        for r in &stripes {
+            let (head, tail) = rest.split_at_mut(r.len());
+            slices.push(head);
+            rest = tail;
+        }
+        let mut iter = slices.into_iter();
+        let lead = iter.next().expect("streams >= 1");
+        std::thread::scope(|sc| -> Result<()> {
+            let mut handles = Vec::new();
+            for (i, slice) in iter.enumerate() {
+                let lane = i + 1;
+                handles.push(sc.spawn(move || self.recv_stripe(lane, from, tag, slice, chunk)));
+            }
+            let lead_res = self.recv_stripe(0, from, tag, lead, chunk);
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("stripe receiver panicked"))??;
+            }
+            lead_res
+        })
     }
 }
 
@@ -470,72 +593,97 @@ impl Endpoint for StripedEndpoint {
         );
         self.check_fault()?;
         let total = payload.len();
-        if self.cfg.streams == 1 || total <= self.chunk_bytes() {
-            return self.enqueue(
-                0,
-                SendJob { to, tag, prefix: Some(total as u64), data: payload.to_vec() },
-            );
+        if total <= self.chunk_bytes() {
+            let mut buf = self.pool.get(total);
+            buf.copy_from_slice(payload);
+            return self.enqueue(0, SendJob { to, tag, kind: JobKind::Fused, data: buf });
         }
         // `split_points` is shared with the receive path (and the ring
         // collective): both ends MUST derive the identical stripe layout.
         for (lane, r) in split_points(total, self.cfg.streams).iter().enumerate() {
-            let prefix = (lane == 0).then_some(total as u64);
-            self.enqueue(lane, SendJob { to, tag, prefix, data: payload[r.clone()].to_vec() })?;
+            let mut buf = self.pool.get(r.len());
+            buf.copy_from_slice(&payload[r.clone()]);
+            let kind =
+                if lane == 0 { JobKind::Lead { total: total as u64 } } else { JobKind::Tail };
+            self.enqueue(lane, SendJob { to, tag, kind, data: buf })?;
         }
         Ok(())
     }
 
-    fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
-        anyhow::ensure!(from.0 < self.world, "recv from out-of-range worker {from}");
+    fn send_vectored(&self, to: WorkerId, tag: u64, iov: &[IoSlice<'_>]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world, "send to out-of-range worker {to}");
         anyhow::ensure!(
             tag & CREDIT_KIND_BIT == 0,
             "tag kind bit 0x80 is reserved for stripe credits"
         );
         self.check_fault()?;
+        let total: usize = iov.iter().map(|s| s.len()).sum();
+        if total <= self.chunk_bytes() {
+            let mut buf = self.pool.get(total);
+            let mut off = 0usize;
+            for s in iov {
+                buf[off..off + s.len()].copy_from_slice(s);
+                off += s.len();
+            }
+            return self.enqueue(0, SendJob { to, tag, kind: JobKind::Fused, data: buf });
+        }
+        // Scatter the iovec straight into per-lane stripe buffers — the
+        // concatenated message never materializes.
+        let stripes = split_points(total, self.cfg.streams);
+        let mut bufs: Vec<PooledBuf> = stripes.iter().map(|r| self.pool.get(r.len())).collect();
+        let mut lane = 0usize;
+        let mut gpos = 0usize;
+        for s in iov {
+            let mut sp = 0usize;
+            while sp < s.len() {
+                while gpos >= stripes[lane].end {
+                    lane += 1;
+                }
+                let r = &stripes[lane];
+                let n = (r.end - gpos).min(s.len() - sp);
+                bufs[lane][gpos - r.start..gpos - r.start + n].copy_from_slice(&s[sp..sp + n]);
+                sp += n;
+                gpos += n;
+            }
+        }
+        for (lane, buf) in bufs.into_iter().enumerate() {
+            let kind =
+                if lane == 0 { JobKind::Lead { total: total as u64 } } else { JobKind::Tail };
+            self.enqueue(lane, SendJob { to, tag, kind, data: buf })?;
+        }
+        Ok(())
+    }
+
+    fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        self.check_recv(from, tag)?;
         // One consistent chunk size for the whole message (the set_chunk
         // contract guarantees sender and receiver agree on it).
         let chunk = self.chunk_bytes();
-        let first = self.lanes[0].recv(from, tag)?;
-        anyhow::ensure!(
-            first.len() >= 8,
-            "striped frame missing length prefix ({} bytes)",
-            first.len()
-        );
-        let total = u64::from_le_bytes(first[..8].try_into().unwrap()) as usize;
-        if self.cfg.streams == 1 || total <= chunk {
-            anyhow::ensure!(
-                first.len() == 8 + total,
-                "fused striped frame: {} bytes, want {}",
-                first.len(),
-                8 + total
-            );
+        let (total, fused) = self.recv_first(from, tag, chunk)?;
+        if let Some(first) = fused {
             return Ok(first[8..].to_vec());
         }
-        let stripes = split_points(total, self.cfg.streams);
         let mut buf = vec![0u8; total];
-        let mut slices = Vec::with_capacity(stripes.len());
-        let mut rest = buf.as_mut_slice();
-        for r in &stripes {
-            let (head, tail) = rest.split_at_mut(r.len());
-            slices.push(head);
-            rest = tail;
-        }
-        let mut iter = slices.into_iter();
-        let lead = iter.next().expect("streams >= 1");
-        std::thread::scope(|sc| -> Result<()> {
-            let mut handles = Vec::new();
-            for (i, slice) in iter.enumerate() {
-                let lane = i + 1;
-                handles
-                    .push(sc.spawn(move || self.recv_stripe(lane, from, tag, slice, chunk, None)));
-            }
-            let lead_res = self.recv_stripe(0, from, tag, lead, chunk, Some(&first));
-            for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("stripe receiver panicked"))??;
-            }
-            lead_res
-        })?;
+        self.recv_body(from, tag, chunk, &mut buf)?;
         Ok(buf)
+    }
+
+    fn recv_into(&self, from: WorkerId, tag: u64, dst: &mut [u8]) -> Result<usize> {
+        self.check_recv(from, tag)?;
+        let chunk = self.chunk_bytes();
+        let (total, fused) = self.recv_first(from, tag, chunk)?;
+        anyhow::ensure!(
+            total <= dst.len(),
+            "recv_into: striped message of {total} bytes exceeds dst of {}",
+            dst.len()
+        );
+        if let Some(first) = fused {
+            dst[..total].copy_from_slice(&first[8..]);
+            return Ok(total);
+        }
+        // Chunks land straight in `dst`: no message-sized staging buffer.
+        self.recv_body(from, tag, chunk, &mut dst[..total])?;
+        Ok(total)
     }
 }
 

@@ -9,13 +9,14 @@
 //! communication phase — the same stack the paper measured (Horovod/NCCL
 //! "use Linux kernel TCP").
 
+use super::buf::{BufPool, PooledBuf};
 use super::{Endpoint, Fabric, Mailbox};
 use crate::net::shaper::Shaper;
 use crate::topology::WorkerId;
 use crate::Result;
 use anyhow::Context;
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -65,6 +66,10 @@ struct Shared {
     mailboxes: Vec<Mailbox>,
     shaper: Option<Arc<Shaper>>,
     closed: AtomicBool,
+    /// Frame storage for the reader threads: payloads land in pooled
+    /// buffers and recycle when receivers consume them via
+    /// `recv_buf`/`recv_into`.
+    pool: BufPool,
 }
 
 /// A fabric of `n` workers connected over loopback TCP.
@@ -90,6 +95,7 @@ impl TcpFabric {
             mailboxes: (0..n).map(|_| Mailbox::default()).collect(),
             shaper,
             closed: AtomicBool::new(false),
+            pool: BufPool::new(),
         });
         let mut accept_handles = Vec::with_capacity(n);
         for (owner, listener) in listeners.into_iter().enumerate() {
@@ -147,10 +153,11 @@ pub(crate) fn reader_loop_into(
     mut stream: TcpStream,
     world: usize,
     mailbox: &Mailbox,
+    pool: &BufPool,
 ) {
     let _ = stream.set_nodelay(true);
     loop {
-        match read_frame(&mut stream, world) {
+        match read_frame(&mut stream, world, pool) {
             Ok(Some((from, tag, payload))) => mailbox.put(from, tag, payload),
             Ok(None) => return, // clean close at a frame boundary
             Err(e) => {
@@ -170,33 +177,76 @@ pub(crate) fn reader_loop_into(
 /// instead of hanging the collective. The multi-process mesh fabric
 /// ([`crate::net::mesh`]) shares the same loop over its own mailbox.
 fn reader_loop(owner: usize, stream: TcpStream, shared: Arc<Shared>) {
-    reader_loop_into(owner, stream, shared.addrs.len(), &shared.mailboxes[owner]);
+    reader_loop_into(owner, stream, shared.addrs.len(), &shared.mailboxes[owner], &shared.pool);
 }
 
 /// Write one `[from u64][tag u64][len u64][payload]` frame — the wire
 /// format shared by [`TcpFabric`] and the multi-process mesh fabric.
+/// Header and payload go out in one gathered `write_vectored` (no
+/// copy-then-write, and usually one syscall instead of two).
 pub(crate) fn write_frame(
     stream: &mut TcpStream,
     from: usize,
     tag: u64,
     payload: &[u8],
 ) -> Result<()> {
+    write_frame_vectored(stream, from, tag, &[IoSlice::new(payload)])
+}
+
+/// How many slices one gathered write submits (header + payload parts);
+/// anything beyond is flushed sequentially. Callers today pass at most
+/// 2 payload parts (stripe length prefix + chunk).
+const FRAME_IOV: usize = 8;
+
+/// Write one frame whose payload is the concatenation of `parts`,
+/// without materializing it: the 24-byte header and the payload slices
+/// are submitted as a single gathered write, and whatever the socket
+/// did not accept is finished with per-slice `write_all`.
+pub(crate) fn write_frame_vectored(
+    stream: &mut TcpStream,
+    from: usize,
+    tag: u64,
+    parts: &[IoSlice<'_>],
+) -> Result<()> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
     let mut header = [0u8; 24];
     header[0..8].copy_from_slice(&(from as u64).to_le_bytes());
     header[8..16].copy_from_slice(&tag.to_le_bytes());
-    header[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-    stream.write_all(&header)?;
-    stream.write_all(payload)?;
+    header[16..24].copy_from_slice(&(len as u64).to_le_bytes());
+    let mut iov = [IoSlice::new(&[]); FRAME_IOV];
+    iov[0] = IoSlice::new(&header);
+    let n_parts = parts.len().min(FRAME_IOV - 1);
+    for (i, p) in parts.iter().take(n_parts).enumerate() {
+        iov[i + 1] = IoSlice::new(p);
+    }
+    let mut written = match stream.write_vectored(&iov[..1 + n_parts]) {
+        Ok(n) => n,
+        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => 0,
+        Err(e) => return Err(e.into()),
+    };
+    // Skip what the gathered write covered; write_all the remainder
+    // (including any parts beyond the iov cap).
+    for piece in std::iter::once(&header[..]).chain(parts.iter().map(|p| &p[..])) {
+        if written >= piece.len() {
+            written -= piece.len();
+            continue;
+        }
+        stream.write_all(&piece[written..])?;
+        written = 0;
+    }
     Ok(())
 }
 
 /// Read one `[from][tag][len][payload]` frame. `Ok(None)` means the peer
 /// closed cleanly *between* frames; a mid-frame EOF, an oversized length,
-/// or an out-of-range sender is a decode error.
+/// or an out-of-range sender is a decode error. The payload lands in a
+/// buffer from `pool`, so a drained frame's storage recycles instead of
+/// costing an allocation per frame.
 pub(crate) fn read_frame(
     stream: &mut TcpStream,
     world: usize,
-) -> Result<Option<(usize, u64, Vec<u8>)>> {
+    pool: &BufPool,
+) -> Result<Option<(usize, u64, PooledBuf)>> {
     let mut header = [0u8; 24];
     let mut got = 0usize;
     while got < header.len() {
@@ -217,7 +267,7 @@ pub(crate) fn read_frame(
     let len = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
     anyhow::ensure!(from < world, "frame claims sender {from} in a world of {world}");
     anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame length {len} exceeds {MAX_FRAME_BYTES}");
-    let mut payload = vec![0u8; len];
+    let mut payload = pool.get(len);
     stream
         .read_exact(&mut payload)
         .map_err(|e| anyhow::anyhow!("connection closed mid-payload ({len} bytes expected): {e}"))?;
@@ -282,7 +332,22 @@ impl Endpoint for TcpEndpoint {
         write_frame(&mut stream, self.me.0, tag, payload)
     }
 
+    fn send_vectored(&self, to: WorkerId, tag: u64, iov: &[IoSlice<'_>]) -> Result<()> {
+        anyhow::ensure!(to.0 < self.world(), "send to out-of-range worker {to}");
+        if let Some(shaper) = &self.shared.shaper {
+            let total: usize = iov.iter().map(|s| s.len()).sum();
+            shaper.admit(self.me, to, total as u64);
+        }
+        let sender = self.sender_to(to.0)?;
+        let mut stream = sender.lock().unwrap();
+        write_frame_vectored(&mut stream, self.me.0, tag, iov)
+    }
+
     fn recv(&self, from: WorkerId, tag: u64) -> Result<Vec<u8>> {
+        Ok(self.recv_buf(from, tag)?.into_vec())
+    }
+
+    fn recv_buf(&self, from: WorkerId, tag: u64) -> Result<PooledBuf> {
         anyhow::ensure!(from.0 < self.world(), "recv from out-of-range worker {from}");
         self.shared.mailboxes[self.me.0].take(from.0, tag)
     }
@@ -416,8 +481,9 @@ mod tests {
         thread::sleep(Duration::from_millis(150));
         let listener = TcpListener::bind(addr).unwrap();
         let (mut conn, _) = listener.accept().unwrap();
-        let got = read_frame(&mut conn, 1).unwrap().unwrap();
-        assert_eq!(got, (0, 7, b"late-bind".to_vec()));
+        let pool = BufPool::new();
+        let (from, tag, payload) = read_frame(&mut conn, 1, &pool).unwrap().unwrap();
+        assert_eq!((from, tag, &*payload), (0, 7, &b"late-bind"[..]));
         connector.join().unwrap().unwrap();
     }
 

@@ -564,7 +564,8 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
             let mut peer_blobs: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
             for peer in 0..world {
                 if peer != rank {
-                    let raw = ep.recv(WorkerId(peer), t).map_err(|e| {
+                    // Pooled frame: decoded then recycled, no detach.
+                    let raw = ep.recv_buf(WorkerId(peer), t).map_err(|e| {
                         ep.poison(format!("step {step}: {e}"));
                         e.context(format!("all-gather at step {step}"))
                     })?;

@@ -968,8 +968,8 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
                     }
                     pending_knobs = decision;
                 } else {
-                    let raw = ep.recv(WorkerId(0), ctrl)?;
-                    let msg = String::from_utf8(raw)
+                    let raw = ep.recv_buf(WorkerId(0), ctrl)?;
+                    let msg = std::str::from_utf8(&raw)
                         .map_err(|_| anyhow::anyhow!("knob broadcast is not UTF-8"))?;
                     if msg != "keep" {
                         pending_knobs = Some(KnobPoint::parse_spec(&msg)?);

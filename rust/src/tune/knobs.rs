@@ -9,13 +9,14 @@
 //! `KnobPoint`s, so the five axis names and their value parsers live in
 //! exactly one place.
 //!
-//! Values reuse the repo's existing parsers — [`CollectiveKind::parse`]
-//! and [`Compression::parse`] (which itself accepts every
+//! Values reuse the repo's [`FromSpec`] parsers — [`CollectiveKind`] and
+//! [`Compression`] (which itself accepts every
 //! [`crate::compress::CodecKind`] spelling) — so `collective=hier:4` and
 //! `compression=topk:0.01` work anywhere a knob is written down, and an
-//! unknown knob *name* fails with an error that lists the legal names.
+//! unknown knob *name* or *value* fails with an error that lists the
+//! legal choices.
 
-use crate::config::{CollectiveKind, Compression};
+use crate::config::{CollectiveKind, Compression, FromSpec};
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
 use std::fmt;
@@ -76,8 +77,13 @@ impl KnobPoint {
     }
 
     /// Parse the [`KnobPoint::spec`] format. Every axis must appear
-    /// exactly once; unknown names fail with the legal list.
+    /// exactly once; unknown names fail with the legal list. Thin alias
+    /// over [`FromSpec::from_spec`].
     pub fn parse_spec(s: &str) -> Result<KnobPoint> {
+        Self::from_spec(s)
+    }
+
+    fn parse_spec_impl(s: &str) -> Result<KnobPoint> {
         let mut p = KnobPoint::default_static();
         let mut seen = [false; AXES.len()];
         for part in s.split(';') {
@@ -97,16 +103,29 @@ impl KnobPoint {
                 1 => p.stripes = parse_stripes(value)?,
                 2 => p.chunk_kb = parse_chunk_kb(value)?,
                 3 => {
-                    p.collective = CollectiveKind::parse(value)
-                        .ok_or_else(|| anyhow!("knob collective: unknown value {value:?}"))?
+                    p.collective = CollectiveKind::from_spec(value)
+                        .map_err(|e| anyhow!("knob collective: {e}"))?
                 }
-                _ => p.compression = Compression::parse(value)?,
+                _ => p.compression = Compression::from_spec(value)?,
             }
         }
         for (axis, seen) in seen.iter().enumerate() {
             ensure!(*seen, "knob spec {s:?} is missing {}", AXES[axis]);
         }
         Ok(p)
+    }
+}
+
+impl FromSpec for KnobPoint {
+    const KIND: &'static str = "knob spec";
+    const VALID: &'static str = "bucket_mb=<mb>;stripes=<n>;chunk_kb=<kb>;collective=<spec>;\
+                                 compression=<spec> (every axis exactly once, any order)";
+
+    /// A knob spec is a composite format, so every non-empty string is
+    /// "recognized": errors come from the per-axis parsers and the
+    /// exactly-once bookkeeping, which already name the failing axis.
+    fn match_spec(s: &str) -> Option<Result<KnobPoint>> {
+        Some(Self::parse_spec_impl(s))
     }
 }
 
@@ -257,14 +276,13 @@ impl KnobSpace {
                 self.collectives = parts
                     .iter()
                     .map(|v| {
-                        CollectiveKind::parse(v)
-                            .ok_or_else(|| anyhow!("knob collective: unknown value {v:?}"))
+                        CollectiveKind::from_spec(v).map_err(|e| anyhow!("knob collective: {e}"))
                     })
                     .collect::<Result<_>>()?
             }
             _ => {
                 self.compressions =
-                    parts.iter().map(|v| Compression::parse(v)).collect::<Result<_>>()?
+                    parts.iter().map(|v| Compression::from_spec(v)).collect::<Result<_>>()?
             }
         }
         Ok(())
@@ -451,6 +469,23 @@ mod tests {
         let mut s = KnobSpace::default();
         let err = s.set_axis_csv("chunk_bytes", "1,2").unwrap_err().to_string();
         assert!(err.contains("chunk_bytes") && err.contains("chunk_kb"), "{err}");
+    }
+
+    #[test]
+    fn knob_collective_error_lists_valid_values() {
+        // The shared FromSpec error shape surfaces through the knob
+        // wrapper: axis context first, then the full legal list.
+        let mut s = KnobSpace::default();
+        let err = s.set_axis_csv("collective", "butterfly").unwrap_err().to_string();
+        assert!(err.contains("knob collective"), "{err}");
+        assert!(err.contains("valid values") && err.contains("ring"), "{err}");
+    }
+
+    #[test]
+    fn knob_point_implements_from_spec() {
+        let p = KnobPoint::default_static();
+        assert_eq!(KnobPoint::from_spec(&p.spec()).unwrap(), p);
+        assert!(KnobPoint::from_spec("bucket_mb=1").is_err());
     }
 
     #[test]

@@ -8,13 +8,18 @@
 //! collective performs its additions in a deterministic order, the f32
 //! bit patterns must agree across all fabric × transport combinations.
 
+use netbn::collectives::hierarchical::hier_allreduce;
 use netbn::collectives::{ps::ps_allreduce, ring::ring_allreduce, tree::tree_allreduce};
+use netbn::net::buf::BufPool;
+use netbn::net::inproc::InProcFabric;
 use netbn::net::shaper::Shaper;
 use netbn::net::striped::{StripeConfig, StripedTransport};
 use netbn::net::transport::{SingleStream, Transport, TransportFabric};
 use netbn::net::{Endpoint, Fabric};
-use netbn::topology::{Ring, Topology, WorkerId};
+use netbn::topology::{Cluster, Ring, Topology, WorkerId};
+use netbn::util::prop::fnv1a;
 use netbn::util::Rng;
+use std::io::IoSlice;
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
@@ -57,6 +62,19 @@ fn build_fabric(kind: FabricKind, transport: &dyn Transport) -> Box<dyn Fabric> 
 
 type CollectiveFn = fn(&dyn Endpoint, &Ring, u32, u32, &mut [f32]) -> netbn::Result<()>;
 
+/// Adapter so the hierarchical collective fits the flat-ring harness:
+/// groups of 2 over the whole world (the `Ring` argument only supplies
+/// the signature; membership comes from the cluster).
+fn hier_groups_of_two(
+    ep: &dyn Endpoint,
+    _ring: &Ring,
+    step: u32,
+    bucket: u32,
+    data: &mut [f32],
+) -> netbn::Result<()> {
+    hier_allreduce(ep, &Cluster::new(ep.world(), 2), step, bucket, data)
+}
+
 /// Run one collective across the fabric and return every worker's result.
 fn run_collective(fabric: &dyn Fabric, f: CollectiveFn, fused: bool) -> Vec<Vec<f32>> {
     let ring = Topology::new(WORKERS, 1).flat_ring();
@@ -87,10 +105,11 @@ fn bits(v: &[f32]) -> Vec<u32> {
 
 #[test]
 fn collectives_bit_identical_across_fabrics_and_transports() {
-    let collectives: [(&str, CollectiveFn, bool); 4] = [
+    let collectives: [(&str, CollectiveFn, bool); 5] = [
         ("ring", ring_allreduce, false),
         ("tree", tree_allreduce, false),
         ("ps", ps_allreduce, false),
+        ("hier", hier_groups_of_two, false),
         ("fused-ring", ring_allreduce, true),
     ];
     for (name, f, fused) in collectives {
@@ -180,4 +199,117 @@ fn striped_beats_single_stream_on_shaped_10gbps() {
         striped_s < single_s * 0.7,
         "striped:4 {striped_s:.2}s should beat single-stream {single_s:.2}s by >= 30%"
     );
+}
+
+/// The buffer-aware API leg: a gathered `send_vectored` received with
+/// `recv_into` must deliver byte-identical payloads (same FNV-1a
+/// checksum) across every fabric × transport combination, on both the
+/// fused (small) and striped (large) paths.
+#[test]
+fn vectored_send_recv_into_conform_across_matrix() {
+    // Large enough to stripe under `test_stripe_cfg`, plus a payload that
+    // stays on the fused path.
+    let large: Vec<u8> =
+        (0..100_000u32).map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8).collect();
+    let small: Vec<u8> = (0..100u8).collect();
+    let want_large = fnv1a(&large);
+    let want_small = fnv1a(&small);
+
+    for fabric_kind in [FabricKind::Inproc, FabricKind::Tcp] {
+        let single = SingleStream;
+        let striped = StripedTransport::new(test_stripe_cfg());
+        let transports: [(&str, &dyn Transport); 2] =
+            [("single", &single), ("striped:4", &striped)];
+        for (tname, transport) in transports {
+            let fabric = build_fabric(fabric_kind, transport);
+            let eps = fabric.endpoints();
+            let (a, b) = (Arc::clone(&eps[0]), Arc::clone(&eps[1]));
+            let (ln, sn) = (large.len(), small.len());
+            let h = thread::spawn(move || {
+                // Extra headroom: recv_into reports the true length.
+                let mut big = vec![0u8; ln + 7];
+                let got_l = b.recv_into(WorkerId(0), 9, &mut big).unwrap();
+                big.truncate(got_l);
+                let mut tiny = vec![0u8; sn];
+                let got_s = b.recv_into(WorkerId(0), 10, &mut tiny).unwrap();
+                tiny.truncate(got_s);
+                (big, tiny)
+            });
+            // Three uneven slices exercise the gather/scatter path.
+            let (x, rest) = large.split_at(11);
+            let (y, z) = rest.split_at(60_000);
+            a.send_vectored(
+                WorkerId(1),
+                9,
+                &[IoSlice::new(x), IoSlice::new(y), IoSlice::new(z)],
+            )
+            .unwrap();
+            a.send_vectored(WorkerId(1), 10, &[IoSlice::new(&small)]).unwrap();
+            let (big, tiny) = h.join().unwrap();
+            assert_eq!(big.len(), large.len(), "{fabric_kind:?}/{tname}: large length");
+            assert_eq!(fnv1a(&big), want_large, "{fabric_kind:?}/{tname}: large checksum");
+            assert_eq!(tiny.len(), small.len(), "{fabric_kind:?}/{tname}: small length");
+            assert_eq!(fnv1a(&tiny), want_small, "{fabric_kind:?}/{tname}: small checksum");
+        }
+    }
+}
+
+/// One striped send + `recv_into` round trip over endpoints whose lanes
+/// and transport share `pool`.
+fn pooled_exchange(eps: &[Arc<dyn Endpoint>], payload: &[u8], tag: u64) {
+    let b = Arc::clone(&eps[1]);
+    let n = payload.len();
+    let h = thread::spawn(move || {
+        let mut dst = vec![0u8; n];
+        let got = b.recv_into(WorkerId(0), tag, &mut dst).unwrap();
+        assert_eq!(got, n);
+        dst
+    });
+    eps[0].send(WorkerId(1), tag, payload).unwrap();
+    let got = h.join().unwrap();
+    assert_eq!(fnv1a(&got), fnv1a(payload));
+}
+
+/// The tentpole's zero-allocation claim, enforced by counting: after a
+/// few warmup rounds populate the size classes, the striped hot path —
+/// stripe buffers, lane frames, credits, reassembly — performs **zero**
+/// fresh allocations from the shared pool, detaches nothing, and every
+/// [`PooledBuf`] returns to the pool (outstanding drains to 0).
+#[test]
+fn striped_hot_path_allocates_zero_at_steady_state() {
+    let pool = BufPool::new();
+    let transport = StripedTransport::with_pool(test_stripe_cfg(), pool.clone());
+    let fabric = TransportFabric::new(&transport, || {
+        Ok(Box::new(InProcFabric::with_shaper_and_pool(2, None, pool.clone())) as Box<dyn Fabric>)
+    })
+    .unwrap();
+    let eps = fabric.endpoints();
+    // 40 KB stripes into 4 × 10 KB, dozens of 512 B chunks per lane.
+    let payload: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+
+    // Deterministic pre-warm: pin the high-water mark of every size class
+    // the hot path touches (stripe buffers, chunk frames, the header
+    // frame) above any concurrency the exchanges can reach, so the
+    // steady-state assertion cannot be scheduling-sensitive.
+    let prewarm: Vec<_> =
+        (0..8).flat_map(|_| [pool.get(10_000), pool.get(512), pool.get(8)]).collect();
+    drop(prewarm);
+
+    for tag in 0..4 {
+        pooled_exchange(&eps, &payload, tag);
+    }
+    let warm = pool.stats();
+    assert_eq!(warm.outstanding, 0, "warmup must drain: {warm:?}");
+
+    for tag in 0..32 {
+        pooled_exchange(&eps, &payload, 100 + tag);
+    }
+    let s = pool.stats();
+    assert_eq!(
+        s.fresh_allocs, warm.fresh_allocs,
+        "striped hot path must not allocate at steady state: {s:?} vs warm {warm:?}"
+    );
+    assert_eq!(s.detached, warm.detached, "pooled hot path must not detach buffers: {s:?}");
+    assert_eq!(s.outstanding, 0, "every PooledBuf must return to the pool: {s:?}");
+    assert!(s.reuses > warm.reuses, "steady state must be served by reuse: {s:?}");
 }
