@@ -49,6 +49,7 @@ pub fn ring_allreduce(
             f32s_as_bytes(&data[chunks[send_idx].clone()]),
         )?;
         let inb = ep.recv_buf(prev, tag(tags::REDUCE_SCATTER, step, sub(round)))?;
+        let _sp = crate::span!("reduce.add", me.0, step, inb.len());
         add_bytes_assign(&mut data[chunks[recv_idx].clone()], &inb)?;
     }
 

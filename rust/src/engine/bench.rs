@@ -17,7 +17,9 @@
 //! shows up in the delta table as a reminder to re-baseline.
 //!
 //! The CLI path ([`collect_with_e2e`]) additionally runs the real
-//! `e2e_tcp_smoke` launch probe **N times** and reports
+//! `e2e_tcp_smoke` launch probe **N times** — once uninstrumented and
+//! once with the span tracer on (`obs=on`), gating the instrumentation
+//! overhead in-process (see [`OBS_OVERHEAD_TOL`]) — and reports
 //! `e2e.busbw_gbps` (mean) plus `e2e.busbw_gbps.stddev` — and, unlike
 //! the analytic metrics, this pair is gated **variance-aware**: a mean
 //! metric whose baseline carries a `.stddev` companion regresses only
@@ -137,6 +139,15 @@ pub fn collect(registry: &ScenarioRegistry) -> Result<BenchReport> {
 ///   times. PR 4 shipped the mean as informational-only; with the
 ///   dispersion measured per run, the metric is **gated** —
 ///   variance-aware, see [`compare`].
+/// * `e2e.busbw_gbps.obs` (+ `.stddev`) — the same probe with the span
+///   tracer and per-step breakdown shipping on. Besides being gated
+///   against the committed baseline like its uninstrumented twin, the
+///   pair is gated **in-process** against the off leg collected moments
+///   earlier on the same machine: instrumentation may cost at most
+///   [`OBS_OVERHEAD_TOL`] of the uninstrumented bandwidth (3σ
+///   variance-aware, so loopback noise doesn't flake the gate). The off
+///   leg always runs first — enabling the tracer is sticky for the
+///   process, so the ordering is load-bearing.
 /// * `reduce.reduce_bw_gbps` (+ `.stddev`) — the sustained decode+add
 ///   bandwidth of [`crate::collectives::reduce::add_bytes_assign`], the
 ///   receive-side CPU ceiling of every collective. Gated the same
@@ -146,10 +157,23 @@ pub fn collect(registry: &ScenarioRegistry) -> Result<BenchReport> {
 pub fn collect_with_e2e(registry: &ScenarioRegistry, runs: usize) -> Result<BenchReport> {
     anyhow::ensure!(runs >= 1, "e2e bench needs >= 1 run");
     let mut report = collect(registry)?;
+    // Uninstrumented leg FIRST: enabling the tracer is sticky for the
+    // process, so an obs-first ordering would contaminate these samples.
     let samples = e2e_busbw_samples(registry, runs)?;
     let s = crate::util::stats::Summary::of(&samples);
     report.metrics.push(("e2e.busbw_gbps".to_string(), s.mean));
     report.metrics.push(("e2e.busbw_gbps.stddev".to_string(), s.std));
+    let obs_samples = e2e_busbw_samples_with(registry, runs, &[("obs", "on")])?;
+    let os = crate::util::stats::Summary::of(&obs_samples);
+    report.metrics.push(("e2e.busbw_gbps.obs".to_string(), os.mean));
+    report.metrics.push(("e2e.busbw_gbps.obs.stddev".to_string(), os.std));
+    let gate = obs_overhead_gate(s.mean, s.std, os.mean);
+    anyhow::ensure!(
+        gate.ok(),
+        "span instrumentation overhead beyond {:.0}% of the uninstrumented leg:\n{}",
+        OBS_OVERHEAD_TOL * 100.0,
+        gate.render("uninstrumented leg (same process)", OBS_OVERHEAD_TOL)
+    );
     let r = reduce_bw_samples(runs.max(3));
     let rs = crate::util::stats::Summary::of(&r);
     report.metrics.push(("reduce.reduce_bw_gbps".to_string(), rs.mean));
@@ -166,11 +190,23 @@ fn reduce_bw_samples(runs: usize) -> Vec<f64> {
 
 /// `runs` samples of the launch probe's effective bus bandwidth.
 fn e2e_busbw_samples(registry: &ScenarioRegistry, runs: usize) -> Result<Vec<f64>> {
+    e2e_busbw_samples_with(registry, runs, &[])
+}
+
+/// [`e2e_busbw_samples`] with parameter overrides — the obs leg passes
+/// `obs=on` to run the identical probe with the tracer live.
+fn e2e_busbw_samples_with(
+    registry: &ScenarioRegistry,
+    runs: usize,
+    overrides: &[(&str, &str)],
+) -> Result<Vec<f64>> {
     use anyhow::Context as _;
     let scenario = registry.get("e2e_tcp_smoke")?;
+    let ov: Vec<(String, String)> =
+        overrides.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
     let mut samples = Vec::with_capacity(runs);
     for i in 0..runs {
-        let out = scenario.run(&[])?;
+        let out = scenario.run(&ov)?;
         anyhow::ensure!(out.passed(), "bench e2e probe run {i} failed its checks");
         samples.push(
             out.metric_value("effective_bus_gbps")
@@ -178,6 +214,24 @@ fn e2e_busbw_samples(registry: &ScenarioRegistry, runs: usize) -> Result<Vec<f64
         );
     }
     Ok(samples)
+}
+
+/// The in-process instrumentation-overhead tolerance: the obs leg's mean
+/// bus bandwidth may sit at most this fraction below the uninstrumented
+/// leg measured moments earlier in the same process.
+pub const OBS_OVERHEAD_TOL: f64 = 0.03;
+
+/// Gate the instrumented leg against the uninstrumented one through the
+/// same variance-aware [`compare`] machinery: the off leg's measured
+/// dispersion earns the 3σ slack (clamped by the collapse floor), so a
+/// noisy loopback run stays green while a real tracer slowdown fails.
+fn obs_overhead_gate(off_mean: f64, off_std: f64, obs_mean: f64) -> Comparison {
+    let base = vec![
+        ("e2e.busbw_gbps.obs".to_string(), off_mean),
+        ("e2e.busbw_gbps.obs.stddev".to_string(), off_std),
+    ];
+    let cur = vec![("e2e.busbw_gbps.obs".to_string(), obs_mean)];
+    compare(&cur, &base, OBS_OVERHEAD_TOL)
 }
 
 /// Parse a flat `{"key": number, ...}` JSON object — the only shape the
@@ -419,6 +473,8 @@ mod tests {
         let committed = parse_flat_json(include_str!("../../../bench/baseline.json")).unwrap();
         assert!(committed.iter().any(|(k, _)| k == "e2e.busbw_gbps"));
         assert!(committed.iter().any(|(k, _)| k == "e2e.busbw_gbps.stddev"));
+        assert!(committed.iter().any(|(k, _)| k == "e2e.busbw_gbps.obs"));
+        assert!(committed.iter().any(|(k, _)| k == "e2e.busbw_gbps.obs.stddev"));
     }
 
     #[test]
@@ -435,6 +491,18 @@ mod tests {
         let committed = parse_flat_json(include_str!("../../../bench/baseline.json")).unwrap();
         assert!(committed.iter().any(|(k, _)| k == "reduce.reduce_bw_gbps"));
         assert!(committed.iter().any(|(k, _)| k == "reduce.reduce_bw_gbps.stddev"));
+    }
+
+    #[test]
+    fn obs_overhead_gate_is_variance_aware() {
+        // A quiet off leg makes the gate sharp: 3% under fails, 2% passes.
+        assert!(obs_overhead_gate(1.0, 0.0, 0.98).ok());
+        assert!(!obs_overhead_gate(1.0, 0.0, 0.96).ok());
+        // A noisy off leg earns 3σ slack — 0.5 sits inside
+        // 1.0·0.97 − 3·0.2 = 0.37 — but the collapse floor still catches
+        // a tracer that destroys throughput outright.
+        assert!(obs_overhead_gate(1.0, 0.2, 0.5).ok());
+        assert!(!obs_overhead_gate(1.0, 0.2, 0.05).ok());
     }
 
     #[test]

@@ -23,9 +23,10 @@
 //!   `e2e_tcp_smoke`), the three overlap scenarios
 //!   (`overlap_ablation`, `bucket_size_sweep`,
 //!   `scaling_factor_recovered`), the three autotune scenarios
-//!   (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`)
-//!   and the two service scenarios (`multi_tenant_contention`,
-//!   `serve_throughput`); `netbn list --markdown` renders it as
+//!   (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`),
+//!   the two service scenarios (`multi_tenant_contention`,
+//!   `serve_throughput`) and the span-measured observability scenario
+//!   (`utilization_timeline`); `netbn list --markdown` renders it as
 //!   `docs/SCENARIOS.md`;
 //! * [`jobqueue`] — the registry as a job-queue backend: wire-friendly
 //!   [`jobqueue::JobRequest`] submissions, admission-time validation,
@@ -48,6 +49,7 @@ pub mod registry;
 pub mod runner;
 pub(crate) mod scenarios_chaos;
 pub(crate) mod scenarios_hier;
+pub(crate) mod scenarios_obs;
 pub(crate) mod scenarios_overlap;
 pub(crate) mod scenarios_serve;
 pub(crate) mod scenarios_transport;

@@ -123,9 +123,10 @@ impl ScenarioRegistry {
     /// `scaling_factor_recovered`), the three autotune scenarios
     /// (`autotune_convergence`, `autotune_vs_static`, `autotune_adapt`),
     /// the two service scenarios (`multi_tenant_contention`,
-    /// `serve_throughput`) and the three chaos scenarios
+    /// `serve_throughput`), the three chaos scenarios
     /// (`elastic_scaleout`, `straggler_injection`,
-    /// `worker_crash_recovery`).
+    /// `worker_crash_recovery`) and the span-measured observability
+    /// scenario (`utilization_timeline`).
     pub fn builtin() -> ScenarioRegistry {
         let mut r = ScenarioRegistry::new();
         let figures: [(&'static str, &'static str, &'static str); 8] = [
@@ -244,6 +245,7 @@ impl ScenarioRegistry {
         super::scenarios_tune::register(&mut r).expect("builtin registration");
         super::scenarios_serve::register(&mut r).expect("builtin registration");
         super::scenarios_chaos::register(&mut r).expect("builtin registration");
+        super::scenarios_obs::register(&mut r).expect("builtin registration");
         r
     }
 
@@ -346,7 +348,7 @@ mod tests {
     #[test]
     fn builtin_covers_every_entry_point() {
         let r = ScenarioRegistry::builtin();
-        assert!(r.len() >= 33, "only {} scenarios", r.len());
+        assert!(r.len() >= 34, "only {} scenarios", r.len());
         for name in [
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "simulate",
             "emulate", "validate", "ablate-fusion-size", "ablate-fusion-timeout",
@@ -356,6 +358,7 @@ mod tests {
             "scaling_factor_recovered", "autotune_convergence", "autotune_vs_static",
             "autotune_adapt", "multi_tenant_contention", "serve_throughput",
             "elastic_scaleout", "straggler_injection", "worker_crash_recovery",
+            "utilization_timeline",
         ] {
             assert!(r.get(name).is_ok(), "missing {name}");
         }

@@ -76,6 +76,12 @@ pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
                 ParamKind::Choice(&["thread", "process"]),
                 "thread",
             ),
+            ParamSpec::new(
+                "obs",
+                "span tracing + per-step breakdown shipping (the bench gate's overhead leg)",
+                ParamKind::Choice(&["off", "on"]),
+                "off",
+            ),
             ParamSpec::new("seed", "gradient RNG seed", ParamKind::Int, "3735928559"),
         ]),
         Box::new(E2eSmokeRunner),
@@ -273,6 +279,8 @@ impl super::runner::Runner for E2eSmokeRunner {
                 drop_at_step: 0,
                 drop_gbps: 0.0,
                 seed: p.get_usize("seed")? as u64,
+                obs: p.get_str("obs")? == "on",
+                trace_out: None,
             },
             spawn,
             feedback_out: None,

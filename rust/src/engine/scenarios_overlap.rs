@@ -123,6 +123,8 @@ impl super::runner::Runner for OverlapAblationRunner {
             drop_at_step: 0,
             drop_gbps: 0.0,
             seed: p.get_usize("seed")? as u64,
+            obs: false,
+            trace_out: None,
         };
         let blocking = launch(&LaunchConfig {
             params: params.clone(),

@@ -251,6 +251,8 @@ fn run_fnv_leg(out: &mut Outcome, seed: u64) -> Result<()> {
         drop_at_step: 0,
         drop_gbps: 0.0,
         seed,
+        obs: false,
+        trace_out: None,
     };
     let static_run = launch(&LaunchConfig {
         params: params.clone(),
@@ -524,6 +526,8 @@ fn run_adapt_launch(p: &ParamValues) -> Result<Outcome> {
         drop_at_step: drop_at,
         drop_gbps: p.get_f64("drop-gbps")?,
         seed,
+        obs: false,
+        trace_out: None,
     };
     let tuned = launch(&LaunchConfig {
         params: params.clone(),

@@ -28,6 +28,7 @@
 //! | substrate | [`util`] | PRNG, statistics, microbench + property-test mini-frameworks, logging |
 //! | substrate | [`cli`] | subcommand/flag parser with repeatable options (no clap in the offline env) |
 //! | substrate | [`report`] | ASCII tables, figure series, CSV/JSON writers, paper-shape checks |
+//! | substrate | [`obs`] | unified observability plane: lock-free metrics registry (counters/gauges/log-bucketed histograms), scoped `span!` tracing with Chrome-trace export, cross-rank per-step time breakdowns + link-utilization timelines |
 //! | substrate | [`config`] | typed experiment configs, `Compression::parse` (ratio-or-codec), TOML-subset parser, paper presets |
 //! | domain | [`topology`] | servers × GPUs, ring construction, two-tier `Cluster` grouping |
 //! | domain | [`net`] | fabrics (in-proc, real TCP, multi-process mesh), the `Transport` strategy layer (single-stream vs striped:N), size-classed buffer pool + vectored I/O, token-bucket shaper, kernel-TCP + striped cost models |
@@ -56,6 +57,7 @@ pub mod figures;
 pub mod measure;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -139,6 +139,8 @@ fn app() -> App {
                     OptSpec::value("gate-gbps", "modeled per-stream ceiling Gbps (0 = unshaped)", "0"),
                     OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
                     OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
+                    OptSpec::value("obs", "true|false: span tracing + per-step time breakdown and link-utilization report", "false"),
+                    OptSpec::optional("trace-out", "write the merged Chrome trace-event JSON here (implies --obs; open in Perfetto)"),
                     OptSpec::optional("feedback-out", "write per-step step_feedback JSONL here"),
                     OptSpec::value(
                         "spawn",
@@ -176,6 +178,8 @@ fn app() -> App {
                     OptSpec::value("gate-gbps", "modeled per-stream ceiling Gbps", "0"),
                     OptSpec::value("drop-at-step", "drop the gate at this step (0 = never)", "0"),
                     OptSpec::value("drop-gbps", "post-drop per-stream Gbps", "0"),
+                    OptSpec::value("obs", "true|false: span tracing + breakdown shipping", "false"),
+                    OptSpec::optional("trace-out", "rank 0 writes the merged Chrome trace here"),
                     OptSpec::value("seed", "gradient RNG seed", "3735928559"),
                 ],
                 positional: vec![],
@@ -625,12 +629,16 @@ fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::Wo
     let overlap_s = args.get_or("overlap", "off");
     let overlap = OverlapMode::parse(overlap_s)
         .ok_or_else(|| anyhow::anyhow!("--overlap: expected off|buckets, got {overlap_s:?}"))?;
-    let autotune_s = args.get_or("autotune", "false");
-    let autotune = match autotune_s {
-        "true" | "on" | "1" => true,
-        "false" | "off" | "0" => false,
-        other => anyhow::bail!("--autotune: expected true|false, got {other:?}"),
+    let parse_bool = |flag: &str, s: &str| -> Result<bool> {
+        match s {
+            "true" | "on" | "1" => Ok(true),
+            "false" | "off" | "0" => Ok(false),
+            other => anyhow::bail!("--{flag}: expected true|false, got {other:?}"),
+        }
     };
+    let autotune = parse_bool("autotune", args.get_or("autotune", "false"))?;
+    let obs = parse_bool("obs", args.get_or("obs", "false"))?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     let chunk_kbs = args
         .get_or("chunk-kbs", "4,32,256")
         .split(',')
@@ -657,6 +665,9 @@ fn worker_params(args: &Args, world: usize) -> Result<netbn::trainer::launch::Wo
         drop_at_step: args.get_usize("drop-at-step", 0)?,
         drop_gbps: args.get_f64("drop-gbps", 0.0)?,
         seed: args.get_usize("seed", 0xdeadbeef)? as u64,
+        // --trace-out without --obs still traces: the export needs spans.
+        obs: obs || trace_out.is_some(),
+        trace_out,
     })
 }
 
@@ -705,6 +716,33 @@ fn cmd_launch(args: &Args) -> Result<bool> {
     })?;
     println!("{}", r.step_table().render());
     println!("effective bus bandwidth: {:.3} Gbps", r.effective_bus_gbps);
+    if !r.breakdown.is_empty() {
+        let mut t = Table::new(
+            "per-step time breakdown (rank-averaged, from spans)".to_string(),
+            &["step", "barrier", "compute", "serialize", "wire", "reduce", "total", "sum/total"],
+        );
+        for b in &r.breakdown {
+            let fmt = netbn::util::fmt::secs;
+            t.row(vec![
+                b.step.to_string(),
+                fmt(b.barrier_s),
+                fmt(b.compute_s),
+                fmt(b.serialize_s),
+                fmt(b.wire_s),
+                fmt(b.reduce_s),
+                fmt(b.total_s),
+                format!("{:.1}%", 100.0 * b.components_sum() / b.total_s.max(1e-12)),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "mean delivered wire rate: {:.3} Gbps per rank",
+            netbn::bytes_per_sec_to_gbps(r.wire_mean_bps)
+        );
+    }
+    if let Some(path) = args.get("trace-out") {
+        println!("  -> {path} (Chrome trace; open in Perfetto / chrome://tracing)");
+    }
     if !r.knob_trajectory.is_empty() {
         println!(
             "knob trajectory (step:chunk KB): {}",
@@ -871,6 +909,9 @@ fn cmd_worker(args: &Args) -> Result<bool> {
         .get("coordinator")
         .and_then(|s| s.parse::<std::net::SocketAddr>().ok())
         .ok_or_else(|| anyhow::anyhow!("_worker needs --coordinator host:port"))?;
+    // Tag this process's log lines with its rank: N interleaved worker
+    // stderr streams stay attributable.
+    netbn::util::logging::set_identity(format!("rank{rank}"));
     let params = worker_params(args, world)?;
     netbn::trainer::launch::worker_entry(rank, coordinator, &params)?;
     Ok(true)
@@ -892,6 +933,7 @@ fn cmd_eworker(args: &Args) -> Result<bool> {
                 .map_err(|_| anyhow::anyhow!("--die-at: expected a step number, got {s:?}"))
         })
         .transpose()?;
+    netbn::util::logging::set_identity(format!("uid{uid}"));
     netbn::trainer::elastic::elastic_worker_entry(uid, coordinator, die_at)?;
     Ok(true)
 }

@@ -30,7 +30,22 @@ fn json_field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
         .find(&pat)
         .ok_or_else(|| anyhow::anyhow!("missing key {key} in {line:?}"))?
         + pat.len();
-    let rest = &line[start..];
+    let rest = line[start..].trim_start();
+    // String values may contain `,` / `}` (and escaped quotes), so scan
+    // them escape-aware to the closing quote instead of stopping at the
+    // first delimiter.
+    if rest.as_bytes().first() == Some(&b'"') {
+        let b = rest.as_bytes();
+        let mut j = 1;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return Ok(&rest[..=j]),
+                _ => j += 1,
+            }
+        }
+        anyhow::bail!("unterminated string value for {key}");
+    }
     let end = rest
         .find([',', '}'])
         .ok_or_else(|| anyhow::anyhow!("unterminated value for {key}"))?;
@@ -271,6 +286,24 @@ mod tests {
     #[test]
     fn malformed_line_is_error() {
         assert!(TraceRecord::from_json_line("{\"nope\":1}").is_err());
+        assert!(TraceRecord::from_json_line("{\"kind\":\"unterminated").is_err());
+    }
+
+    #[test]
+    fn string_values_containing_delimiters_round_trip() {
+        // Regression: the value scan used to stop at the first `,` or `}`
+        // even inside a quoted string, so a kind like this truncated to
+        // `"a` and every later field shifted.
+        let mut r = rec();
+        r.kind = "a,}b".into();
+        let line = r.to_json_line();
+        let parsed = TraceRecord::from_json_line(&line).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.bytes, 4096);
+        // Escaped quotes inside the string survive too.
+        let line = "{\"kind\":\"x\\\",}y\",\"step\":1,\"worker\":0,\"id\":0,\"bytes\":9,\"t\":0.5}";
+        let parsed = TraceRecord::from_json_line(line).unwrap();
+        assert_eq!(parsed.bytes, 9);
     }
 
     fn feedback_rec() -> StepFeedbackRecord {

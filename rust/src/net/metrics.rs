@@ -1,39 +1,48 @@
 //! Link byte counters and utilization sampling — the instrumentation behind
 //! the paper's Fig 4 ("recording real time network throughput").
+//!
+//! The counters are built on [`crate::obs::metrics::Counter`], the
+//! lock-free primitive of the unified observability plane; this module
+//! keeps its *per-instance* semantics (each fabric gets fresh counters)
+//! rather than going through the global registry, because utilization
+//! sampling needs a clean zero per experiment.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::metrics::Counter;
 use std::time::Instant;
 
 /// Cumulative byte counters: one egress counter per server plus an
 /// aggregate intra-node counter. Lock-free; safe to read while workers run.
 pub struct NetCounters {
-    egress: Vec<AtomicU64>,
-    intra: AtomicU64,
+    egress: Vec<Counter>,
+    intra: Counter,
 }
 
 impl NetCounters {
     pub fn new(servers: usize) -> NetCounters {
-        NetCounters { egress: (0..servers).map(|_| AtomicU64::new(0)).collect(), intra: AtomicU64::new(0) }
+        NetCounters {
+            egress: (0..servers).map(|_| Counter::default()).collect(),
+            intra: Counter::default(),
+        }
     }
 
     pub fn record_egress(&self, server: usize, bytes: u64) {
-        self.egress[server].fetch_add(bytes, Ordering::Relaxed);
+        self.egress[server].add(bytes);
     }
 
     pub fn record_intra(&self, bytes: u64) {
-        self.intra.fetch_add(bytes, Ordering::Relaxed);
+        self.intra.add(bytes);
     }
 
     pub fn egress_bytes(&self, server: usize) -> u64 {
-        self.egress[server].load(Ordering::Relaxed)
+        self.egress[server].get()
     }
 
     pub fn total_egress(&self) -> u64 {
-        self.egress.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        self.egress.iter().map(|c| c.get()).sum()
     }
 
     pub fn intra_bytes(&self) -> u64 {
-        self.intra.load(Ordering::Relaxed)
+        self.intra.get()
     }
 
     pub fn servers(&self) -> usize {

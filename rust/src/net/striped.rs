@@ -341,6 +341,15 @@ fn send_job(
     chunk: usize,
     job: &SendJob,
 ) -> Result<()> {
+    // Wire-busy span for the whole stripe: gate pacing, credit waits and
+    // the fabric writes are all time the lane is occupied by this job.
+    // The tag's step field ([kind:8][step:24][sub:32]) attributes it.
+    let _span = crate::obs::span::enter_bytes(
+        "wire.send",
+        ep.me().0 as u32,
+        ((job.tag >> 32) & 0xFF_FFFF) as u32,
+        job.data.len() as u64,
+    );
     let ct = credit_tag(job.tag);
     match job.kind {
         JobKind::Fused => {

@@ -1,0 +1,370 @@
+//! Cross-rank span aggregation: per-step time breakdowns and the
+//! link-utilization timeline — the paper's Fig-4 finding recovered from
+//! *instrumentation of a real launch* instead of the analytic model.
+//!
+//! Inputs are merged [`SpanRecord`] streams (the coordinator's own spans
+//! plus the batches every worker ships at step boundaries). All
+//! per-duration math is offset-invariant; only the timeline and Chrome
+//! export need [`align`], which shifts each rank's clock so the step-0
+//! barrier — a genuine synchronization point — ends simultaneously
+//! everywhere.
+//!
+//! Span-name contract (what the trainer/transport layers emit):
+//! `step.barrier`, `step.grad`, `step.compute`, `step.serialize`,
+//! `step.wait`, `step.update`, `step.total` on the worker thread;
+//! `comm.allreduce` on the engine thread; `wire.send` (with bytes) on
+//! the lane senders; `reduce.add` inside the collectives.
+
+use super::span::SpanRecord;
+use std::collections::BTreeMap;
+
+/// One step's wall time attributed to five disjoint phases. The worker
+/// thread's wait on the collective engine is split between `wire_s` and
+/// `reduce_s` proportionally to the engine side's measured send vs.
+/// reduce busy time for the same (rank, step).
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub step: u32,
+    /// Rendezvous barrier at the step boundary.
+    pub barrier_s: f64,
+    /// Gradient generation + modeled compute + parameter update.
+    pub compute_s: f64,
+    /// Gathering layer gradients into the flat wire payload.
+    pub serialize_s: f64,
+    /// Share of the collective wait attributed to moving bytes.
+    pub wire_s: f64,
+    /// Share of the collective wait attributed to decode+add.
+    pub reduce_s: f64,
+    /// The measured step wall (`step.total` span).
+    pub total_s: f64,
+}
+
+impl StepBreakdown {
+    /// Sum of the five attributed components — the acceptance check
+    /// compares this against `total_s` (within 5%).
+    pub fn components_sum(&self) -> f64 {
+        self.barrier_s + self.compute_s + self.serialize_s + self.wire_s + self.reduce_s
+    }
+}
+
+fn us(v: u64) -> f64 {
+    v as f64 / 1e6
+}
+
+/// Per-(rank, step) duration sums by span name.
+#[derive(Default, Clone)]
+struct RankStep {
+    barrier: u64,
+    grad: u64,
+    compute: u64,
+    update: u64,
+    serialize: u64,
+    wait: u64,
+    total: u64,
+    wire_busy: u64,
+    reduce_busy: u64,
+}
+
+/// Per-step breakdowns, averaged across every rank that reported a
+/// `step.total` for the step. Steps come back sorted.
+pub fn per_step(spans: &[SpanRecord]) -> Vec<StepBreakdown> {
+    let mut acc: BTreeMap<(u32, u32), RankStep> = BTreeMap::new();
+    for s in spans {
+        let e = acc.entry((s.step, s.rank)).or_default();
+        let d = s.dur_us;
+        match s.name.as_str() {
+            "step.barrier" => e.barrier += d,
+            "step.grad" => e.grad += d,
+            "step.compute" => e.compute += d,
+            "step.update" => e.update += d,
+            "step.serialize" => e.serialize += d,
+            "step.wait" => e.wait += d,
+            "step.total" => e.total += d,
+            "wire.send" => e.wire_busy += d,
+            "reduce.add" => e.reduce_busy += d,
+            _ => {}
+        }
+    }
+    let mut by_step: BTreeMap<u32, (StepBreakdown, usize)> = BTreeMap::new();
+    for ((step, _rank), rs) in &acc {
+        if rs.total == 0 {
+            // A rank that never closed its step.total (e.g. spans from a
+            // different instrumented site) contributes nothing.
+            continue;
+        }
+        let busy = (rs.wire_busy + rs.reduce_busy) as f64;
+        let wire_frac = if busy > 0.0 { rs.wire_busy as f64 / busy } else { 1.0 };
+        let (b, n) = by_step.entry(*step).or_insert_with(|| {
+            (StepBreakdown { step: *step, ..StepBreakdown::default() }, 0)
+        });
+        b.barrier_s += us(rs.barrier);
+        b.compute_s += us(rs.grad + rs.compute + rs.update);
+        b.serialize_s += us(rs.serialize);
+        b.wire_s += us(rs.wait) * wire_frac;
+        b.reduce_s += us(rs.wait) * (1.0 - wire_frac);
+        b.total_s += us(rs.total);
+        *n += 1;
+    }
+    by_step
+        .into_values()
+        .map(|(mut b, n)| {
+            let n = n as f64;
+            b.barrier_s /= n;
+            b.compute_s /= n;
+            b.serialize_s /= n;
+            b.wire_s /= n;
+            b.reduce_s /= n;
+            b.total_s /= n;
+            b
+        })
+        .collect()
+}
+
+/// Length of the union of `[start, end)` intervals, in µs.
+fn union_us(mut iv: Vec<(u64, u64)>) -> u64 {
+    iv.sort_unstable();
+    let mut total = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    for (s, e) in iv {
+        match &mut cur {
+            Some((_, ce)) if s <= *ce => *ce = (*ce).max(e),
+            _ => {
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                cur = Some((s, e));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Mean delivered wire rate per rank, bytes/second: each rank's total
+/// `wire.send` bytes divided by the *union* of its send spans' wall
+/// intervals, averaged over ranks.
+///
+/// The union window is the load-bearing choice: striped lanes overlap in
+/// wall time, so dividing by summed per-span busy time would just give
+/// back the per-lane gate rate for any stream count — the union measures
+/// what the link as a whole delivered while it was active, which is the
+/// quantity the paper's utilization figure is about.
+pub fn wire_mean_bps(spans: &[SpanRecord]) -> f64 {
+    let mut per_rank: BTreeMap<u32, (u64, Vec<(u64, u64)>)> = BTreeMap::new();
+    for s in spans {
+        if s.name == "wire.send" {
+            let e = per_rank.entry(s.rank).or_default();
+            e.0 += s.bytes;
+            e.1.push((s.start_us, s.end_us()));
+        }
+    }
+    if per_rank.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let n = per_rank.len() as f64;
+    for (_rank, (bytes, iv)) in per_rank {
+        let window = us(union_us(iv));
+        if window > 0.0 {
+            sum += bytes as f64 / window;
+        }
+    }
+    sum / n
+}
+
+/// Time-bucketed link-utilization timeline: `bins` buckets spanning the
+/// whole run, each reporting `(bucket midpoint seconds, mean bytes/sec
+/// per rank)`. A span's bytes spread across the buckets it overlaps,
+/// proportional to overlap.
+pub fn util_timeline(spans: &[SpanRecord], bins: usize) -> Vec<(f64, f64)> {
+    let wire: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "wire.send").collect();
+    if wire.is_empty() || bins == 0 {
+        return Vec::new();
+    }
+    let t0 = wire.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let t1 = wire.iter().map(|s| s.end_us()).max().unwrap_or(t0).max(t0 + 1);
+    let width = (t1 - t0) as f64 / bins as f64;
+    let mut bytes_in = vec![0.0f64; bins];
+    let mut ranks = std::collections::BTreeSet::new();
+    for s in &wire {
+        ranks.insert(s.rank);
+        let (ss, se) = (s.start_us as f64, s.end_us() as f64);
+        let dur = (se - ss).max(1.0);
+        for (i, b) in bytes_in.iter_mut().enumerate() {
+            let (bs, be) = (t0 as f64 + i as f64 * width, t0 as f64 + (i + 1) as f64 * width);
+            let overlap = (se.min(be) - ss.max(bs)).max(0.0);
+            *b += s.bytes as f64 * overlap / dur;
+        }
+    }
+    let nranks = ranks.len().max(1) as f64;
+    bytes_in
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let mid_s = ((i as f64 + 0.5) * width) / 1e6;
+            (mid_s, b / (width / 1e6) / nranks)
+        })
+        .collect()
+}
+
+/// Shift each rank's timestamps so its earliest `anchor` span *ends* at
+/// the same instant as the reference rank's (lowest rank present). The
+/// anchor should be a true synchronization point — the step-0 barrier —
+/// so cross-process epochs line up. Finally re-bases everything to start
+/// at 0. Ranks with no anchor span are left on their own clock (shifted
+/// only by the re-base).
+pub fn align(spans: &mut [SpanRecord], anchor: &str) {
+    let mut anchors: BTreeMap<u32, u64> = BTreeMap::new();
+    for s in spans.iter() {
+        if s.name == anchor {
+            let e = anchors.entry(s.rank).or_insert(u64::MAX);
+            // Earliest anchor by (step, start) — step 0's barrier.
+            let key = ((s.step as u64) << 40) | s.end_us().min((1 << 40) - 1);
+            *e = (*e).min(key);
+        }
+    }
+    let Some((&ref_rank, &ref_key)) = anchors.iter().next() else { return };
+    let end_of = |key: u64| (key & ((1 << 40) - 1)) as i64;
+    let ref_end = end_of(ref_key);
+    let offsets: BTreeMap<u32, i64> = anchors
+        .iter()
+        .map(|(&r, &k)| (r, if r == ref_rank { 0 } else { ref_end - end_of(k) }))
+        .collect();
+    let mut min_start = i64::MAX;
+    let shifted: Vec<i64> = spans
+        .iter()
+        .map(|s| {
+            let off = offsets.get(&s.rank).copied().unwrap_or(0);
+            let v = s.start_us as i64 + off;
+            min_start = min_start.min(v);
+            v
+        })
+        .collect();
+    for (s, v) in spans.iter_mut().zip(shifted) {
+        s.start_us = (v - min_start).max(0) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, rank: u32, step: u32, start_us: u64, dur_us: u64, bytes: u64) -> SpanRecord {
+        SpanRecord { seq: 0, name: name.to_string(), rank, step, start_us, dur_us, bytes }
+    }
+
+    #[test]
+    fn breakdown_splits_wait_by_engine_busy_ratio() {
+        // One rank, one step: 10ms barrier, 20ms compute phases, 5ms
+        // serialize, 40ms wait. Engine-side: 30ms of wire.send and 10ms
+        // of reduce.add → wait splits 3:1.
+        let spans = vec![
+            span("step.barrier", 0, 0, 0, 10_000, 0),
+            span("step.grad", 0, 0, 10_000, 8_000, 0),
+            span("step.compute", 0, 0, 18_000, 10_000, 0),
+            span("step.serialize", 0, 0, 28_000, 5_000, 0),
+            span("step.wait", 0, 0, 33_000, 40_000, 0),
+            span("step.update", 0, 0, 73_000, 2_000, 0),
+            span("step.total", 0, 0, 0, 75_000, 0),
+            span("wire.send", 0, 0, 34_000, 30_000, 1 << 20),
+            span("reduce.add", 0, 0, 40_000, 10_000, 0),
+        ];
+        let b = per_step(&spans);
+        assert_eq!(b.len(), 1);
+        let b = &b[0];
+        assert_eq!(b.step, 0);
+        assert!((b.barrier_s - 0.010).abs() < 1e-9);
+        assert!((b.compute_s - 0.020).abs() < 1e-9);
+        assert!((b.serialize_s - 0.005).abs() < 1e-9);
+        assert!((b.wire_s - 0.030).abs() < 1e-9, "{b:?}");
+        assert!((b.reduce_s - 0.010).abs() < 1e-9, "{b:?}");
+        assert!((b.total_s - 0.075).abs() < 1e-9);
+        assert!((b.components_sum() - b.total_s).abs() / b.total_s < 0.05);
+    }
+
+    #[test]
+    fn breakdown_averages_across_ranks_and_sorts_steps() {
+        let mut spans = Vec::new();
+        for rank in 0..2u32 {
+            for step in [1u32, 0] {
+                let wait = if rank == 0 { 20_000 } else { 40_000 };
+                spans.push(span("step.wait", rank, step, 0, wait, 0));
+                spans.push(span("step.total", rank, step, 0, 50_000, 0));
+                spans.push(span("wire.send", rank, step, 0, 10_000, 1024));
+            }
+        }
+        let b = per_step(&spans);
+        assert_eq!(b.len(), 2);
+        assert_eq!((b[0].step, b[1].step), (0, 1));
+        // No reduce.add busy → the whole wait is wire; mean of 20/40ms.
+        assert!((b[0].wire_s - 0.030).abs() < 1e-9, "{:?}", b[0]);
+        assert_eq!(b[0].reduce_s, 0.0);
+    }
+
+    #[test]
+    fn union_window_discriminates_overlapping_lanes() {
+        // 8 lanes each sending 1 MB for the same 100ms window: the summed
+        // busy time is 800ms but the union is 100ms — the delivered rate
+        // is 8 MB / 0.1 s, not 1 MB / 0.1 s.
+        let spans: Vec<SpanRecord> =
+            (0..8).map(|_| span("wire.send", 0, 0, 0, 100_000, 1 << 20)).collect();
+        let bps = wire_mean_bps(&spans);
+        assert!((bps - 8.0 * (1 << 20) as f64 / 0.1).abs() / bps < 1e-9, "{bps}");
+        // Disjoint spans: 2 MB over 0.2 s of union.
+        let spans = vec![
+            span("wire.send", 0, 0, 0, 100_000, 1 << 20),
+            span("wire.send", 0, 0, 200_000, 100_000, 1 << 20),
+        ];
+        let bps = wire_mean_bps(&spans);
+        assert!((bps - 2.0 * (1 << 20) as f64 / 0.2).abs() / bps < 1e-9, "{bps}");
+        // Mean across ranks, and non-wire spans are ignored.
+        let spans = vec![
+            span("wire.send", 0, 0, 0, 100_000, 1000),
+            span("wire.send", 1, 0, 0, 100_000, 3000),
+            span("step.total", 0, 0, 0, 500_000, 0),
+        ];
+        let bps = wire_mean_bps(&spans);
+        assert!((bps - (10_000.0 + 30_000.0) / 2.0).abs() < 1e-6, "{bps}");
+        assert_eq!(wire_mean_bps(&[]), 0.0);
+    }
+
+    #[test]
+    fn timeline_bins_spread_bytes_proportionally() {
+        // One 1 MB span covering exactly the first half of the window.
+        let spans = vec![
+            span("wire.send", 0, 0, 0, 100_000, 1 << 20),
+            span("wire.send", 0, 0, 100_000, 100_000, 0),
+        ];
+        let tl = util_timeline(&spans, 4);
+        assert_eq!(tl.len(), 4);
+        let rate = (1 << 20) as f64 / 0.1; // bytes/sec while active
+        assert!((tl[0].1 - rate).abs() / rate < 1e-9, "{tl:?}");
+        assert!((tl[1].1 - rate).abs() / rate < 1e-9, "{tl:?}");
+        assert_eq!(tl[2].1, 0.0);
+        assert_eq!(tl[3].1, 0.0);
+        // Midpoints are increasing and within the window.
+        assert!(tl.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(util_timeline(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn align_shifts_ranks_onto_the_reference_barrier() {
+        // Rank 1's process epoch is 1 s behind: its barrier ends at
+        // 1_050_000 while rank 0's ends at 50_000.
+        let mut spans = vec![
+            span("step.barrier", 0, 0, 0, 50_000, 0),
+            span("wire.send", 0, 0, 60_000, 10_000, 64),
+            span("step.barrier", 1, 0, 1_000_000, 50_000, 0),
+            span("wire.send", 1, 0, 1_060_000, 10_000, 64),
+        ];
+        align(&mut spans, "step.barrier");
+        let get = |rank: u32, name: &str| {
+            spans.iter().find(|s| s.rank == rank && s.name == name).unwrap().start_us
+        };
+        assert_eq!(get(0, "step.barrier"), get(1, "step.barrier"));
+        assert_eq!(get(0, "wire.send"), get(1, "wire.send"));
+        assert_eq!(spans.iter().map(|s| s.start_us).min().unwrap(), 0);
+    }
+}

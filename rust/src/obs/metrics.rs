@@ -1,0 +1,470 @@
+//! Lock-free metrics: counters, gauges, log-bucketed histograms, and the
+//! named+labeled [`Registry`] that `GET /metrics` renders.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histo`]) are cheap `Arc` clones:
+//! callers resolve a metric once (by name + labels, get-or-create) and
+//! record through plain atomics afterwards — no lock anywhere on the
+//! record path, so worker threads never contend and the registry can be
+//! snapshot mid-run without pausing anyone.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins float value (stored as f64 bits).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Bucket count: bucket 0 holds the value 0 exactly; bucket `k` (k >= 1)
+/// holds values whose bit length is `k`, i.e. the range
+/// `[2^(k-1), 2^k - 1]`. 64 doublings cover the full `u64` domain.
+pub const HISTO_BUCKETS: usize = 65;
+
+/// Bucket index for a recorded value.
+fn bucket_of(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i == 0 {
+        (0, 0)
+    } else if i >= 64 {
+        (1u64 << 63, u64::MAX)
+    } else {
+        (1u64 << (i - 1), (1u64 << i) - 1)
+    }
+}
+
+struct HistoInner {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// A log-bucketed histogram of `u64` samples (durations in µs, sizes in
+/// bytes, ...). Recording is three relaxed atomic adds; quantiles come
+/// from a [`HistoSnapshot`] with linear interpolation inside the bucket.
+#[derive(Clone)]
+pub struct Histo(Arc<HistoInner>);
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo(Arc::new(HistoInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        self.0.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy; safe while other threads keep recording (the
+    /// copy is not a single atomic cut, but every counted sample is in
+    /// exactly one bucket and counts only grow).
+    pub fn snapshot(&self) -> HistoSnapshot {
+        let mut buckets = [0u64; HISTO_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.0.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistoSnapshot {
+            buckets,
+            count: self.0.count.load(Ordering::Relaxed),
+            sum: self.0.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Frozen histogram state.
+#[derive(Clone, Debug)]
+pub struct HistoSnapshot {
+    pub buckets: [u64; HISTO_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistoSnapshot {
+    /// Quantile `q` in `[0, 1]`, linearly interpolated inside the bucket
+    /// the cumulative count crosses. Empty histograms report 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0.0;
+        let mut last = 0usize;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            last = i;
+            let c = c as f64;
+            if cum + c >= target {
+                let frac = ((target - cum) / c).clamp(0.0, 1.0);
+                let (lo, hi) = bucket_bounds(i);
+                return lo as f64 + frac * (hi - lo) as f64;
+            }
+            cum += c;
+        }
+        bucket_bounds(last).1 as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histo(Histo),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// Named + labeled metrics, get-or-create. The registry lock is taken
+/// only at resolution and snapshot time — never on the record path.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn resolve<T: Clone>(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        get: impl Fn(&Metric) -> Option<T>,
+        make: impl Fn() -> (Metric, T),
+    ) -> T {
+        let mut entries = self.entries.lock().unwrap();
+        let owned: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == owned) {
+            if let Some(t) = get(&e.metric) {
+                return t;
+            }
+            panic!("metric {name:?} re-registered with a different type");
+        }
+        let (metric, handle) = make();
+        entries.push(Entry { name: name.to_string(), labels: owned, metric });
+        handle
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        self.resolve(
+            name,
+            labels,
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+            || {
+                let c = Counter::new();
+                (Metric::Counter(c.clone()), c)
+            },
+        )
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        self.resolve(
+            name,
+            labels,
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+            || {
+                let g = Gauge::new();
+                (Metric::Gauge(g.clone()), g)
+            },
+        )
+    }
+
+    pub fn histo(&self, name: &str, labels: &[(&str, &str)]) -> Histo {
+        self.resolve(
+            name,
+            labels,
+            |m| match m {
+                Metric::Histo(h) => Some(h.clone()),
+                _ => None,
+            },
+            || {
+                let h = Histo::new();
+                (Metric::Histo(h.clone()), h)
+            },
+        )
+    }
+
+    /// Render every metric as `name{labels} value` text lines
+    /// (Prometheus-style exposition; histograms expand to quantile,
+    /// `_count` and `_sum` lines). This is what `GET /metrics` serves.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let fmt_labels = |labels: &[(String, String)], extra: Option<(&str, &str)>| {
+            let mut parts: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            if let Some((k, v)) = extra {
+                parts.push(format!("{k}=\"{v}\""));
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        };
+        let entries = self.entries.lock().unwrap();
+        let mut s = String::new();
+        for e in entries.iter() {
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(s, "{}{} {}", e.name, fmt_labels(&e.labels, None), c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(s, "{}{} {}", e.name, fmt_labels(&e.labels, None), g.get());
+                }
+                Metric::Histo(h) => {
+                    let snap = h.snapshot();
+                    for (q, v) in
+                        [("0.5", snap.p50()), ("0.95", snap.p95()), ("0.99", snap.p99())]
+                    {
+                        let _ = writeln!(
+                            s,
+                            "{}{} {v}",
+                            e.name,
+                            fmt_labels(&e.labels, Some(("quantile", q)))
+                        );
+                    }
+                    let _ = writeln!(
+                        s,
+                        "{}_count{} {}",
+                        e.name,
+                        fmt_labels(&e.labels, None),
+                        snap.count
+                    );
+                    let _ =
+                        writeln!(s, "{}_sum{} {}", e.name, fmt_labels(&e.labels, None), snap.sum);
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The process-global registry (what `netbn serve` exposes).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let c2 = c.clone();
+        c2.inc();
+        assert_eq!(c.get(), 43, "clones share state");
+        let g = Gauge::new();
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+    }
+
+    #[test]
+    fn histo_bucket_boundaries() {
+        // Bucket k holds exactly the values of bit length k: the
+        // boundaries are powers of two, closed below and open above.
+        assert_eq!(bucket_bounds(0), (0, 0));
+        assert_eq!(bucket_bounds(1), (1, 1));
+        assert_eq!(bucket_bounds(2), (2, 3));
+        assert_eq!(bucket_bounds(7), (64, 127));
+        assert_eq!(bucket_bounds(64), (1 << 63, u64::MAX));
+        let h = Histo::new();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 127, 128, u64::MAX] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 1); // 0
+        assert_eq!(s.buckets[1], 1); // 1
+        assert_eq!(s.buckets[2], 2); // 2, 3
+        assert_eq!(s.buckets[3], 2); // 4, 7
+        assert_eq!(s.buckets[4], 1); // 8
+        assert_eq!(s.buckets[7], 1); // 127
+        assert_eq!(s.buckets[8], 1); // 128
+        assert_eq!(s.buckets[64], 1); // u64::MAX
+        assert_eq!(s.count, 10);
+        // Every sample lands in exactly one bucket.
+        assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+    }
+
+    #[test]
+    fn histo_quantile_interpolation() {
+        // All samples inside one bucket: quantiles interpolate linearly
+        // across the bucket's [lo, hi] span.
+        let h = Histo::new();
+        for _ in 0..1000 {
+            h.record(100); // bucket 7 = [64, 127]
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.0), 64.0);
+        assert!((s.quantile(0.5) - 95.5).abs() < 1e-9, "{}", s.quantile(0.5));
+        assert_eq!(s.quantile(1.0), 127.0);
+        // Two widely separated buckets: the median sits in the lower one,
+        // the tail quantiles in the upper.
+        let h = Histo::new();
+        for _ in 0..90 {
+            h.record(1);
+        }
+        for _ in 0..10 {
+            h.record(1000); // bucket 10 = [512, 1023]
+        }
+        let s = h.snapshot();
+        assert!(s.p50() <= 1.0, "{}", s.p50());
+        assert!(s.p95() >= 512.0 && s.p95() <= 1023.0, "{}", s.p95());
+        assert!(s.p99() >= s.p95());
+        assert!((s.mean() - (90.0 + 10_000.0) / 100.0).abs() < 1e-9);
+        // Empty histogram is all zeros, not NaN.
+        let empty = Histo::new().snapshot();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn histo_concurrent_record_then_snapshot_is_consistent() {
+        let h = Histo::new();
+        let threads: u64 = 4;
+        let per = 10_000u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    h.record(t * 1000 + i % 257);
+                }
+            }));
+        }
+        // Mid-run snapshots must always be internally consistent: counts
+        // only grow and each counted sample is in exactly one bucket.
+        let mut last_count = 0u64;
+        for _ in 0..50 {
+            let s = h.snapshot();
+            assert!(s.count >= last_count);
+            last_count = s.count;
+        }
+        for th in handles {
+            th.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, threads * per);
+        assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+        let want_sum: u64 =
+            (0..threads).map(|t| (0..per).map(|i| t * 1000 + i % 257).sum::<u64>()).sum();
+        assert_eq!(s.sum, want_sum);
+    }
+
+    #[test]
+    fn registry_get_or_create_by_name_and_labels() {
+        let r = Registry::new();
+        let a = r.counter("tx_bytes", &[("rank", "0")]);
+        let b = r.counter("tx_bytes", &[("rank", "0")]);
+        let other = r.counter("tx_bytes", &[("rank", "1")]);
+        a.add(5);
+        b.add(7);
+        other.add(100);
+        assert_eq!(a.get(), 12, "same name+labels resolves the same counter");
+        assert_eq!(other.get(), 100, "different labels are a different series");
+        r.gauge("depth", &[]).set(3.0);
+        let h = r.histo("lat_us", &[]);
+        h.record(100);
+        let text = r.render_text();
+        assert!(text.contains("tx_bytes{rank=\"0\"} 12"), "{text}");
+        assert!(text.contains("tx_bytes{rank=\"1\"} 100"), "{text}");
+        assert!(text.contains("depth 3"), "{text}");
+        assert!(text.contains("lat_us{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("lat_us_count 1"), "{text}");
+        assert!(text.contains("lat_us_sum 100"), "{text}");
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let c = global().counter("obs_test_global_counter", &[("t", "metrics")]);
+        c.add(2);
+        assert!(global().render_text().contains("obs_test_global_counter{t=\"metrics\"}"));
+        assert!(global().counter("obs_test_global_counter", &[("t", "metrics")]).get() >= 2);
+    }
+}

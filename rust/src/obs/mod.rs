@@ -1,0 +1,37 @@
+//! Unified observability plane.
+//!
+//! The paper's core contribution is *measurement* — attributing step time
+//! to compute vs. communication and showing the network runs far below
+//! its provisioned rate (Fig 4). This module is the instrumentation that
+//! recovers those findings from a *live* run instead of an analytic
+//! model:
+//!
+//! * [`metrics`] — a lock-free metrics registry: [`Counter`] / [`Gauge`]
+//!   / [`Histo`] (log-bucketed histograms with interpolated p50/p95/p99),
+//!   named + labeled, snapshot-able while workers run. Supersedes the
+//!   ad-hoc `net/metrics.rs` counters (which are now built on these
+//!   primitives) and backs `netbn serve`'s `GET /metrics` endpoint.
+//! * [`span`] — scoped span tracing: `span!("wire.send", rank, step)`
+//!   returns an RAII timer that records into a bounded process-global
+//!   ring on drop. Disabled (the default) a span is one relaxed atomic
+//!   load — cheap enough to leave in every hot path. Spans export as
+//!   Chrome trace-event JSON (`netbn launch --trace-out trace.json`
+//!   loads directly into Perfetto).
+//! * [`breakdown`] — cross-rank aggregation: per-step time breakdowns
+//!   (barrier / compute / serialize / wire / reduce vs. the measured
+//!   step wall) and a time-bucketed link-utilization timeline, computed
+//!   by the launch coordinator from span snapshots the workers ship over
+//!   the mesh `tags::CONTROL` channel at step boundaries.
+//!
+//! One tracer per process: `netbn launch` / `netbn _worker` run exactly
+//! one traced cohort per process, so the ring needs no scoping. In-crate
+//! tests that enable tracing serialize on [`span::test_lock`] so
+//! parallel `cargo test` threads cannot interleave span streams.
+
+pub mod breakdown;
+pub mod metrics;
+pub mod span;
+
+pub use breakdown::StepBreakdown;
+pub use metrics::{Counter, Gauge, Histo, Registry};
+pub use span::SpanRecord;

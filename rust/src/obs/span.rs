@@ -1,0 +1,410 @@
+//! Scoped span tracing with a bounded process-global ring.
+//!
+//! `span!("wire.send", rank, step)` (optionally `, bytes`) returns an
+//! RAII guard; when it drops, a [`SpanRecord`] lands in the ring. With
+//! tracing **disabled — the default — a span is a single relaxed atomic
+//! load and no clock read**, so the instrumentation stays in every hot
+//! path permanently (the bench gate holds the enabled path to within 3%
+//! of uninstrumented throughput; the disabled path is free).
+//!
+//! The ring is process-global and sequence-numbered: readers snapshot
+//! non-destructively with [`since`], so in thread-spawned launches every
+//! rank ships its own spans (filtered by rank, advancing its own cursor)
+//! out of the one shared ring without racing the others. Records encode
+//! to a compact binary frame ([`encode`]/[`decode`]) for shipping over
+//! the mesh control channel, and any collection of records exports as
+//! Chrome trace-event JSON ([`chrome_trace_json`]) for Perfetto.
+
+use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Spans retained in the ring; older records are dropped (bounded
+/// memory — a run that outgrows the ring loses the oldest spans, never
+/// blocks a worker).
+pub const RING_CAP: usize = 65_536;
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// Ring sequence number (monotonic per process).
+    pub seq: u64,
+    pub name: String,
+    pub rank: u32,
+    pub step: u32,
+    /// Start, µs since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Payload bytes the span moved (0 when not applicable).
+    pub bytes: u64,
+}
+
+impl SpanRecord {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct Ring {
+    next_seq: u64,
+    buf: VecDeque<SpanRecord>,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(Ring { next_seq: 0, buf: VecDeque::new() }))
+}
+
+/// The process trace epoch: fixed at first use so `start_us` values are
+/// comparable within a process.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn recording on (idempotent). Never turned off implicitly: a launch
+/// that doesn't trace simply never enables it.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn recording off (tests).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII span timer; records on drop when armed.
+pub struct SpanGuard {
+    name: &'static str,
+    rank: u32,
+    step: u32,
+    bytes: u64,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// Attach the byte count after entry (e.g. once the payload size is
+    /// known mid-span).
+    pub fn set_bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let start_us = start.duration_since(epoch()).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        let mut r = ring().lock().unwrap();
+        let seq = r.next_seq;
+        r.next_seq += 1;
+        if r.buf.len() >= RING_CAP {
+            r.buf.pop_front();
+        }
+        r.buf.push_back(SpanRecord {
+            seq,
+            name: self.name.to_string(),
+            rank: self.rank,
+            step: self.step,
+            start_us,
+            dur_us,
+            bytes: self.bytes,
+        });
+    }
+}
+
+/// Open a span. Prefer the [`crate::span!`] macro at call sites.
+pub fn enter(name: &'static str, rank: u32, step: u32) -> SpanGuard {
+    enter_bytes(name, rank, step, 0)
+}
+
+/// Open a span carrying a payload byte count.
+pub fn enter_bytes(name: &'static str, rank: u32, step: u32, bytes: u64) -> SpanGuard {
+    let start = if is_enabled() { Some(Instant::now()) } else { None };
+    SpanGuard { name, rank, step, bytes, start }
+}
+
+/// Scoped span timer: `span!("wire.send", rank, step)` or
+/// `span!("wire.send", rank, step, bytes)`. Bind the result
+/// (`let _sp = span!(...)`) so the guard lives to the end of the scope.
+#[macro_export]
+macro_rules! span {
+    ($name:expr, $rank:expr, $step:expr) => {
+        $crate::obs::span::enter($name, $rank as u32, $step as u32)
+    };
+    ($name:expr, $rank:expr, $step:expr, $bytes:expr) => {
+        $crate::obs::span::enter_bytes($name, $rank as u32, $step as u32, $bytes as u64)
+    };
+}
+
+/// Non-destructive snapshot: records with `seq >= after` (optionally
+/// only one rank's), plus the cursor to pass next time. The cursor
+/// covers everything in the ring at snapshot time, including records the
+/// rank filter skipped — those belong to other ranks and are never this
+/// caller's to ship.
+pub fn since(after: u64, rank: Option<u32>) -> (Vec<SpanRecord>, u64) {
+    let r = ring().lock().unwrap();
+    let cursor = r.next_seq;
+    let out = r
+        .buf
+        .iter()
+        .filter(|s| s.seq >= after && rank.map_or(true, |rk| s.rank == rk))
+        .cloned()
+        .collect();
+    (out, cursor)
+}
+
+/// The next sequence number the ring will assign — snapshot this before
+/// a run starts so [`since`] skips anything recorded earlier.
+pub fn cursor() -> u64 {
+    ring().lock().unwrap().next_seq
+}
+
+/// Drop every buffered record (tests / between runs).
+pub fn clear() {
+    ring().lock().unwrap().buf.clear();
+}
+
+/// Serializes in-crate tests that enable the global tracer, so parallel
+/// `cargo test` threads don't interleave span streams. Recovers from a
+/// poisoned lock (a failed test must not cascade).
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Binary frame for shipping spans over the control channel:
+/// `u32 count`, then per record `seq u64 | rank u32 | step u32 |
+/// start_us u64 | dur_us u64 | bytes u64 | name_len u16 | name utf8`,
+/// all little-endian.
+pub fn encode(spans: &[SpanRecord]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + spans.len() * 48);
+    out.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+    for s in spans {
+        out.extend_from_slice(&s.seq.to_le_bytes());
+        out.extend_from_slice(&s.rank.to_le_bytes());
+        out.extend_from_slice(&s.step.to_le_bytes());
+        out.extend_from_slice(&s.start_us.to_le_bytes());
+        out.extend_from_slice(&s.dur_us.to_le_bytes());
+        out.extend_from_slice(&s.bytes.to_le_bytes());
+        let name = s.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+    }
+    out
+}
+
+/// Inverse of [`encode`].
+pub fn decode(buf: &[u8]) -> Result<Vec<SpanRecord>> {
+    let mut at = 0usize;
+    let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+        anyhow::ensure!(*at + n <= buf.len(), "span frame truncated at byte {at}");
+        let s = &buf[*at..*at + n];
+        *at += n;
+        Ok(s)
+    };
+    let count = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let seq = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+        let rank = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap());
+        let step = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap());
+        let start_us = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+        let dur_us = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+        let bytes = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+        let name_len = u16::from_le_bytes(take(&mut at, 2)?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(&mut at, name_len)?)
+            .map_err(|e| anyhow::anyhow!("span name not utf8: {e}"))?
+            .to_string();
+        out.push(SpanRecord { seq, name, rank, step, start_us, dur_us, bytes });
+    }
+    anyhow::ensure!(at == buf.len(), "{} trailing bytes after span frame", buf.len() - at);
+    Ok(out)
+}
+
+/// Render records as Chrome trace-event JSON (the `traceEvents` array
+/// format — load the file straight into Perfetto or
+/// `chrome://tracing`). Every span emits a matched `B`/`E` pair; events
+/// are sorted by timestamp (`B` before `E` on ties so zero-length spans
+/// stay well-formed). `pid` is the rank, `tid` groups spans of the same
+/// name onto one track.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut tids: Vec<&str> = Vec::new();
+    let mut events: Vec<(u64, u8, String)> = Vec::with_capacity(spans.len() * 2);
+    for s in spans {
+        let tid = match tids.iter().position(|n| *n == s.name) {
+            Some(i) => i,
+            None => {
+                tids.push(&s.name);
+                tids.len() - 1
+            }
+        };
+        let name = crate::report::json_str(&s.name);
+        events.push((
+            s.start_us,
+            0,
+            format!(
+                "{{\"name\":{name},\"ph\":\"B\",\"ts\":{},\"pid\":{},\"tid\":{tid},\
+                 \"args\":{{\"step\":{},\"bytes\":{}}}}}",
+                s.start_us, s.rank, s.step, s.bytes
+            ),
+        ));
+        events.push((
+            s.end_us(),
+            1,
+            format!(
+                "{{\"name\":{name},\"ph\":\"E\",\"ts\":{},\"pid\":{},\"tid\":{tid}}}",
+                s.end_us(),
+                s.rank
+            ),
+        ));
+    }
+    events.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, (_, _, e)) in events.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seq: u64, name: &str, rank: u32, start_us: u64, dur_us: u64) -> SpanRecord {
+        SpanRecord {
+            seq,
+            name: name.to_string(),
+            rank,
+            step: 1,
+            start_us,
+            dur_us,
+            bytes: 4096,
+        }
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _serial = test_lock();
+        disable();
+        let before = cursor();
+        {
+            let _sp = crate::span!("obs.test.disabled", 900, 0);
+        }
+        let (got, _) = since(before, Some(900));
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn enabled_spans_land_in_the_ring_with_rank_filtering() {
+        let _serial = test_lock();
+        enable();
+        let before = cursor();
+        {
+            let _a = crate::span!("obs.test.a", 901, 3, 128);
+            let _b = crate::span!("obs.test.b", 902, 3);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        disable();
+        let (mine, cur) = since(before, Some(901));
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].name, "obs.test.a");
+        assert_eq!(mine[0].step, 3);
+        assert_eq!(mine[0].bytes, 128);
+        assert!(mine[0].dur_us >= 1000, "{:?}", mine[0]);
+        assert!(cur > before);
+        // The cursor advanced past BOTH records: re-snapshotting from it
+        // re-ships nothing, for either rank.
+        assert!(since(cur, Some(901)).0.is_empty());
+        assert!(since(cur, Some(902)).0.is_empty());
+        let (other, _) = since(before, Some(902));
+        assert_eq!(other.len(), 1);
+        assert_eq!(other[0].name, "obs.test.b");
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let spans = vec![
+            sample(7, "wire.send", 0, 100, 50),
+            sample(8, "reduce.add", 3, 160, 0),
+            sample(9, "step.total", 1, 0, 100_000),
+        ];
+        let wire = encode(&spans);
+        assert_eq!(decode(&wire).unwrap(), spans);
+        assert_eq!(decode(&encode(&[])).unwrap(), vec![]);
+        assert!(decode(&wire[..wire.len() - 1]).is_err(), "truncated frame must fail");
+        let mut extra = wire.clone();
+        extra.push(0);
+        assert!(decode(&extra).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn chrome_trace_has_matched_pairs_and_monotonic_ts() {
+        let spans = vec![
+            sample(0, "step.total", 0, 0, 300),
+            sample(1, "wire.send", 0, 50, 100),
+            sample(2, "wire.send", 1, 60, 120),
+            sample(3, "zero.len", 0, 70, 0),
+        ];
+        let json = chrome_trace_json(&spans);
+        // Well-formed JSON with a single traceEvents array.
+        let fields = crate::util::json::object_fields(&json).unwrap();
+        let events_raw = crate::util::json::get(&fields, "traceEvents").unwrap();
+        assert!(events_raw.starts_with('['));
+        // One B and one E per span, B's ts never after its E.
+        let count = |needle: &str| json.matches(needle).count();
+        assert_eq!(count("\"ph\":\"B\""), spans.len());
+        assert_eq!(count("\"ph\":\"E\""), spans.len());
+        // Timestamps are monotone non-decreasing in emission order, and a
+        // zero-length span's B precedes its E.
+        let mut last_ts = 0u64;
+        let mut b_seen = 0i64;
+        for line in json.lines().filter(|l| l.contains("\"ph\"")) {
+            let ts_at = line.find("\"ts\":").unwrap() + 5;
+            let ts: u64 = line[ts_at..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .unwrap();
+            assert!(ts >= last_ts, "ts went backwards in:\n{json}");
+            last_ts = ts;
+            b_seen += if line.contains("\"ph\":\"B\"") { 1 } else { -1 };
+            assert!(b_seen >= 0, "an E appeared before any matching B:\n{json}");
+        }
+        assert_eq!(b_seen, 0, "unmatched B/E pairs:\n{json}");
+        // Args ride on the B event.
+        assert!(json.contains("\"args\":{\"step\":1,\"bytes\":4096}"), "{json}");
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _serial = test_lock();
+        enable();
+        let before = cursor();
+        for _ in 0..(RING_CAP + 10) {
+            let _sp = crate::span!("obs.test.flood", 903, 0);
+        }
+        disable();
+        let (got, _) = since(before, Some(903));
+        assert!(got.len() <= RING_CAP);
+        clear();
+        assert!(since(0, None).0.is_empty());
+    }
+}

@@ -95,11 +95,15 @@ struct Job {
 pub struct AsyncCollectiveEngine {
     tx: Option<mpsc::Sender<Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// The bound endpoint's rank — kept here (the endpoint itself moves
+    /// into the worker thread) so callers can attribute spans/metrics.
+    me: u32,
 }
 
 impl AsyncCollectiveEngine {
     /// Spawn the worker thread for `ep`, running `kind` for every job.
     pub fn new(ep: Arc<dyn Endpoint>, kind: CollectiveKind) -> AsyncCollectiveEngine {
+        let me = ep.me().0 as u32;
         let (tx, rx) = mpsc::channel::<Job>();
         let worker = std::thread::spawn(move || {
             // Topology is prebuilt once so the per-bucket comm path
@@ -117,6 +121,12 @@ impl AsyncCollectiveEngine {
                     std::thread::sleep(Duration::from_secs_f64(job.pre_delay_s));
                 }
                 let mut data = job.data;
+                let _sp = crate::span!(
+                    "comm.allreduce",
+                    ep.me().0,
+                    job.step,
+                    (data.len() * std::mem::size_of::<f32>()) as u64
+                );
                 let t0 = Instant::now();
                 let result = crate::collectives::allreduce_prepared(
                     kind,
@@ -134,7 +144,12 @@ impl AsyncCollectiveEngine {
                 job.shared.cv.notify_all();
             }
         });
-        AsyncCollectiveEngine { tx: Some(tx), worker: Some(worker) }
+        AsyncCollectiveEngine { tx: Some(tx), worker: Some(worker), me }
+    }
+
+    /// Rank of the endpoint this engine is bound to.
+    pub fn rank(&self) -> u32 {
+        self.me
     }
 
     /// Enqueue one all-reduce; returns immediately. `(step, seq)` must

@@ -69,13 +69,23 @@ pub fn run_step(
             );
         }
     }
+    let rank = engine.rank();
     let t0 = Instant::now();
     let mut handles: Vec<AllReduceHandle> = Vec::with_capacity(plan.buckets.len());
     let mut deferred: Vec<(u32, Vec<f32>)> = Vec::new();
     for b in &plan.buckets {
         let mut payload = Vec::with_capacity(ranges_len(ranges, b));
         for l in &b.layers {
-            compute_layer(l.layer);
+            {
+                let _sp = crate::span!("step.compute", rank, step);
+                compute_layer(l.layer);
+            }
+            let _sp = crate::span!(
+                "step.serialize",
+                rank,
+                step,
+                ranges[l.layer].len() * std::mem::size_of::<f32>()
+            );
             payload.extend_from_slice(&grad[ranges[l.layer].clone()]);
         }
         match mode {
@@ -87,6 +97,7 @@ pub fn run_step(
 
     // Blocking mode: the identical buckets, submitted only now.
     let t_wait = Instant::now();
+    let wait_sp = crate::span!("step.wait", rank, step);
     for (seq, payload) in deferred {
         handles.push(engine.submit(step, seq, payload));
     }
@@ -102,6 +113,7 @@ pub fn run_step(
             offset += r.len();
         }
     }
+    drop(wait_sp);
     let comm_wait_s = t_wait.elapsed().as_secs_f64();
     Ok(StepStats { compute_s, comm_wait_s, comm_busy_s: comm_busy, buckets })
 }

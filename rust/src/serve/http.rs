@@ -134,6 +134,7 @@ pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: String,
+    pub content_type: &'static str,
     /// Send the body with chunked transfer encoding (one chunk per line)
     /// instead of `Content-Length`.
     pub chunked: bool,
@@ -141,7 +142,18 @@ pub struct Response {
 
 impl Response {
     pub fn json(status: u16, body: impl Into<String>) -> Response {
-        Response { status, headers: Vec::new(), body: body.into(), chunked: false }
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.into(),
+            content_type: "application/json",
+            chunked: false,
+        }
+    }
+
+    /// A plaintext payload (the `/metrics` exposition format).
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { content_type: "text/plain; charset=utf-8", ..Response::json(status, body) }
     }
 
     /// A JSON error payload `{"error": …}`.
@@ -161,9 +173,10 @@ impl Response {
 
     pub fn write_to(&self, stream: &mut TcpStream) -> Result<()> {
         let mut head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nConnection: close\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nConnection: close\r\n",
             self.status,
-            reason(self.status)
+            reason(self.status),
+            self.content_type
         );
         for (k, v) in &self.headers {
             head.push_str(&format!("{k}: {v}\r\n"));

@@ -14,6 +14,7 @@
 //! GET    /jobs/<id>/feedback?since=N&timeout=S   long-poll telemetry (chunked)
 //! DELETE /jobs/<id>          cancel a still-queued job → 200 | 409 | 404
 //! GET    /healthz            liveness + load
+//! GET    /metrics            process-wide observability registry (plaintext)
 //! ```
 //!
 //! Module map: [`http`] is the std-only HTTP/1.1 layer, [`queue`] the
@@ -166,18 +167,30 @@ fn handle_connection(mut stream: TcpStream, state: &ServeState) {
 /// Dispatch one request. Pure request → response; all state transitions
 /// go through [`ServeState`].
 fn route(req: &Request, state: &ServeState) -> Response {
+    let m = crate::obs::metrics::global();
+    m.counter("serve.http_requests", &[("method", req.method.as_str())]).inc();
+    let t0 = std::time::Instant::now();
     let segments = req.segments();
-    match (req.method.as_str(), segments.as_slice()) {
+    let resp = match (req.method.as_str(), segments.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics(),
         ("POST", ["jobs"]) => submit(req, state),
         ("GET", ["jobs"]) => list(state),
         ("GET", ["jobs", id]) => with_id(id, |id| get_job(state, id)),
         ("DELETE", ["jobs", id]) => with_id(id, |id| cancel(state, id)),
         ("GET", ["jobs", id, "outcome"]) => with_id(id, |id| outcome(state, id)),
         ("GET", ["jobs", id, "feedback"]) => with_id(id, |id| feedback(req, state, id)),
-        (_, ["healthz" | "jobs", ..]) => Response::error(405, "method not allowed"),
+        (_, ["healthz" | "metrics" | "jobs", ..]) => Response::error(405, "method not allowed"),
         _ => Response::error(404, "no such route"),
-    }
+    };
+    m.histo("serve.route_us", &[]).record(t0.elapsed().as_micros() as u64);
+    resp
+}
+
+/// The process-wide observability registry, rendered in the plaintext
+/// exposition format of [`crate::obs::metrics::Registry::render_text`].
+fn metrics() -> Response {
+    Response::text(200, crate::obs::metrics::global().render_text())
 }
 
 fn with_id(raw: &str, f: impl FnOnce(u64) -> Response) -> Response {
@@ -288,7 +301,10 @@ fn feedback(req: &Request, state: &ServeState, id: u64) -> Response {
     Response::json(200, feedback_json(&samples, next, done)).chunked()
 }
 
-/// `{"samples":[…],"next":N,"done":b}`, one sample per line.
+/// `{"samples":[…],"next":N,"done":b}`, one sample per line. Each sample
+/// carries the derived per-step breakdown fractions (`compute_frac`,
+/// `comm_frac` of the step wall) so a watcher reads the compute/comm
+/// split without re-deriving it.
 fn feedback_json(samples: &[StepFeedback], next: u64, done: bool) -> String {
     let mut s = String::from("{\"samples\":[");
     for (i, fb) in samples.iter().enumerate() {
@@ -296,9 +312,17 @@ fn feedback_json(samples: &[StepFeedback], next: u64, done: bool) -> String {
             s.push(',');
         }
         s.push('\n');
+        let frac = |part: f64| if fb.wall_s > 0.0 { part / fb.wall_s } else { 0.0 };
         s.push_str(&format!(
-            "{{\"step\":{},\"wall_s\":{},\"compute_s\":{},\"comm_busy_s\":{},\"busbw_gbps\":{}}}",
-            fb.step, fb.wall_s, fb.compute_s, fb.comm_busy_s, fb.busbw_gbps
+            "{{\"step\":{},\"wall_s\":{},\"compute_s\":{},\"comm_busy_s\":{},\"busbw_gbps\":{},\
+             \"compute_frac\":{:.6},\"comm_frac\":{:.6}}}",
+            fb.step,
+            fb.wall_s,
+            fb.compute_s,
+            fb.comm_busy_s,
+            fb.busbw_gbps,
+            frac(fb.compute_s),
+            frac(fb.comm_busy_s)
         ));
     }
     s.push_str(&format!("],\n\"next\":{next},\"done\":{done}}}"));
@@ -353,6 +377,37 @@ mod tests {
         assert_eq!(status, 200);
         assert!(body.contains("\"workers\":2"), "{body}");
         assert!(body.contains("\"capacity\":8"), "{body}");
+    }
+
+    #[test]
+    fn metrics_route_serves_the_registry_as_plaintext() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        // The healthz hit increments the request counter the /metrics
+        // response must then contain.
+        assert_eq!(http::request(&addr, "GET", "/healthz", None).unwrap().0, 200);
+        let (status, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("serve.http_requests"), "{body}");
+        assert!(body.contains("serve.route_us"), "{body}");
+        assert_eq!(http::request(&addr, "POST", "/metrics", None).unwrap().0, 405);
+    }
+
+    #[test]
+    fn feedback_json_carries_breakdown_fractions() {
+        let fb = StepFeedback {
+            step: 3,
+            wall_s: 2.0,
+            compute_s: 1.0,
+            comm_busy_s: 0.5,
+            busbw_gbps: 7.0,
+        };
+        let s = feedback_json(&[fb], 4, false);
+        assert!(s.contains("\"compute_frac\":0.500000"), "{s}");
+        assert!(s.contains("\"comm_frac\":0.250000"), "{s}");
+        // A zero wall must not divide by zero.
+        let z = StepFeedback { step: 0, wall_s: 0.0, compute_s: 0.0, comm_busy_s: 0.0, busbw_gbps: 0.0 };
+        assert!(feedback_json(&[z], 1, true).contains("\"compute_frac\":0.000000"));
     }
 
     #[test]

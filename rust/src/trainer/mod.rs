@@ -422,7 +422,11 @@ fn worker_main(
     for step in 0..steps_total {
         let measured = step >= exp.warmup_steps;
         let step_start = Instant::now();
-        barrier(ep.as_ref(), step as u32)?;
+        let _total_sp = crate::span!("step.total", me.0, step);
+        {
+            let _sp = crate::span!("step.barrier", me.0, step);
+            barrier(ep.as_ref(), step as u32)?;
+        }
 
         // Knobs for this step: the barrier above orders worker 0's
         // end-of-previous-step write before this read on every rank, so
@@ -441,6 +445,7 @@ fn worker_main(
         };
 
         // ---- Forward (modeled). ----
+        let compute_sp = crate::span!("step.compute", me.0, step);
         let t_fwd = trace.t_forward * compute_inflation;
         spin_sleep(t_fwd);
 
@@ -482,9 +487,11 @@ fn worker_main(
                 spin_sleep(target - elapsed);
             }
         }
+        drop(compute_sp);
         let compute_s = step_start.elapsed().as_secs_f64();
 
         // Blocking mode: the buckets only reach the wire now.
+        let wait_sp = crate::span!("step.wait", me.0, step);
         for (seq, data) in deferred.drain(..) {
             handles.push(engine.submit_after(step as u32, seq, data, coord_latency));
         }
@@ -494,6 +501,7 @@ fn worker_main(
         for h in handles.drain(..) {
             std::hint::black_box(h.wait()?);
         }
+        drop(wait_sp);
         let comm_wait = wait_start.elapsed().as_secs_f64();
 
         if measured {

@@ -1,8 +1,17 @@
 //! Minimal leveled logger (the offline env has no `env_logger`). Controlled
-//! by `NETBN_LOG` = `error|warn|info|debug|trace`, default `info`.
+//! by `NETBN_LOG`: either a bare level (`error|warn|info|debug|trace`,
+//! default `info`) or a comma-separated filter spec with per-module rules,
+//! e.g. `NETBN_LOG=striped=debug,info` — `striped` lines at debug, the
+//! rest at info. Module matching is by substring of the log target, so
+//! `striped` matches `net.striped` and `striped.lane`.
+//!
+//! Launch / elastic worker processes call [`set_identity`] at entry
+//! (`rank{N}` / `uid{N}`) so the N interleaved stderr streams stay
+//! attributable: every line they print is prefixed `[rank3]`.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -36,11 +45,96 @@ impl Level {
             _ => None,
         }
     }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
 }
 
+/// A parsed `NETBN_LOG` spec: a default level plus `module=level` rules.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filter {
+    pub default: Level,
+    /// `(module substring, level)` in spec order; first match wins.
+    pub rules: Vec<(String, Level)>,
+}
+
+impl Filter {
+    /// Effective level for a log target.
+    pub fn level_for(&self, module: &str) -> Level {
+        for (pat, l) in &self.rules {
+            if module.contains(pat.as_str()) {
+                return *l;
+            }
+        }
+        self.default
+    }
+
+    /// Loosest level any target can reach — the fast-reject threshold.
+    pub fn max_level(&self) -> Level {
+        self.rules.iter().map(|(_, l)| *l).fold(self.default, Level::max)
+    }
+}
+
+/// Parse a `NETBN_LOG` spec: comma-separated items, each either a bare
+/// level (sets the default) or `module=level`. Unparseable items are
+/// ignored so a typo degrades to the default rather than panicking a
+/// worker fleet at startup.
+pub fn parse_spec(spec: &str) -> Filter {
+    let mut f = Filter { default: Level::Info, rules: Vec::new() };
+    for item in spec.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        match item.split_once('=') {
+            Some((module, level)) => {
+                if let Some(l) = Level::parse(level.trim()) {
+                    f.rules.push((module.trim().to_string(), l));
+                }
+            }
+            None => {
+                if let Some(l) = Level::parse(item) {
+                    f.default = l;
+                }
+            }
+        }
+    }
+    f
+}
+
+// Fast-reject threshold: max over the filter's default + rules.
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
 static INIT: std::sync::Once = std::sync::Once::new();
 static mut START: Option<Instant> = None;
+
+fn filter() -> &'static Mutex<Filter> {
+    static FILTER: OnceLock<Mutex<Filter>> = OnceLock::new();
+    FILTER.get_or_init(|| Mutex::new(Filter { default: Level::Info, rules: Vec::new() }))
+}
+
+fn identity() -> &'static Mutex<Option<String>> {
+    static IDENTITY: OnceLock<Mutex<Option<String>>> = OnceLock::new();
+    IDENTITY.get_or_init(|| Mutex::new(None))
+}
+
+/// Tag every subsequent log line from this process with `[{id}]` — launch
+/// workers pass `rank{N}`, elastic workers `uid{N}`, so interleaved
+/// multi-process stderr stays attributable.
+pub fn set_identity(id: impl Into<String>) {
+    *identity().lock().unwrap_or_else(|e| e.into_inner()) = Some(id.into());
+}
+
+fn install(f: Filter) {
+    MAX_LEVEL.store(f.max_level() as u8, Ordering::Relaxed);
+    *filter().lock().unwrap_or_else(|e| e.into_inner()) = f;
+}
 
 /// Initialize from `NETBN_LOG`; idempotent, called lazily by `log()`.
 pub fn init() {
@@ -48,28 +142,21 @@ pub fn init() {
         // SAFETY: guarded by Once; written exactly once before any read.
         unsafe { START = Some(Instant::now()) };
         if let Ok(v) = std::env::var("NETBN_LOG") {
-            if let Some(l) = Level::parse(&v) {
-                MAX_LEVEL.store(l as u8, Ordering::Relaxed);
-            }
+            install(parse_spec(&v));
         }
     });
 }
 
-/// Override the level programmatically (tests, CLI `-v`).
+/// Override the level programmatically (tests, CLI `-v`) — replaces any
+/// per-module rules with a flat level.
 pub fn set_level(l: Level) {
     init();
-    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+    install(Filter { default: l, rules: Vec::new() });
 }
 
-/// Current maximum level.
+/// Current fast-reject level — the loosest level any module can log at.
 pub fn level() -> Level {
-    match MAX_LEVEL.load(Ordering::Relaxed) {
-        0 => Level::Error,
-        1 => Level::Warn,
-        2 => Level::Info,
-        3 => Level::Debug,
-        _ => Level::Trace,
-    }
+    Level::from_u8(MAX_LEVEL.load(Ordering::Relaxed))
 }
 
 /// Core log call — prefer the `log_*!` macros.
@@ -78,10 +165,17 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if l > level() {
         return;
     }
+    if l > filter().lock().unwrap_or_else(|e| e.into_inner()).level_for(module) {
+        return;
+    }
     // SAFETY: START is written once inside init() before this read.
     let t = unsafe { START.expect("logger initialized") }.elapsed().as_secs_f64();
+    let id = identity().lock().unwrap_or_else(|e| e.into_inner()).clone();
     let mut out = std::io::stderr().lock();
-    let _ = writeln!(out, "[{t:10.4}] {} {module}: {msg}", l.as_str());
+    let _ = match id {
+        Some(id) => writeln!(out, "[{t:10.4}] [{id}] {} {module}: {msg}", l.as_str()),
+        None => writeln!(out, "[{t:10.4}] {} {module}: {msg}", l.as_str()),
+    };
 }
 
 /// `log_info!(target, "fmt", args...)`
@@ -134,5 +228,44 @@ mod tests {
     #[test]
     fn ordering() {
         assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn parse_spec_bare_level() {
+        let f = parse_spec("debug");
+        assert_eq!(f.default, Level::Debug);
+        assert!(f.rules.is_empty());
+        assert_eq!(f.max_level(), Level::Debug);
+    }
+
+    #[test]
+    fn parse_spec_per_module_rules() {
+        let f = parse_spec("striped=debug,info");
+        assert_eq!(f.default, Level::Info);
+        assert_eq!(f.rules, vec![("striped".to_string(), Level::Debug)]);
+        // Substring module matching.
+        assert_eq!(f.level_for("net.striped"), Level::Debug);
+        assert_eq!(f.level_for("striped.lane"), Level::Debug);
+        assert_eq!(f.level_for("sched"), Level::Info);
+        // Fast-reject threshold is the loosest rule.
+        assert_eq!(f.max_level(), Level::Debug);
+    }
+
+    #[test]
+    fn parse_spec_first_match_wins_and_junk_is_ignored() {
+        let f = parse_spec("launch=trace, striped=error ,bogus=nope,warn,");
+        assert_eq!(f.default, Level::Warn);
+        assert_eq!(f.level_for("trainer.launch"), Level::Trace);
+        assert_eq!(f.level_for("striped"), Level::Error);
+        assert_eq!(f.level_for("other"), Level::Warn);
+        assert_eq!(f.max_level(), Level::Trace);
+    }
+
+    #[test]
+    fn quieter_module_than_default() {
+        let f = parse_spec("debug,chatty=error");
+        assert_eq!(f.level_for("chatty.thing"), Level::Error);
+        assert_eq!(f.level_for("normal"), Level::Debug);
+        assert_eq!(f.max_level(), Level::Debug);
     }
 }

@@ -120,6 +120,8 @@ fn autotuned_launch_checksums_match_static_run() {
         drop_at_step: 0,
         drop_gbps: 0.0,
         seed: 0x7e57_5eed,
+        obs: false,
+        trace_out: None,
     };
     let static_run = launch(&LaunchConfig {
         params: params.clone(),
@@ -171,6 +173,8 @@ fn launch_feedback_trace_replays_into_the_tuner_types() {
             drop_at_step: 0,
             drop_gbps: 0.0,
             seed: 0xcafe,
+            obs: false,
+            trace_out: None,
         },
         spawn: SpawnMode::Thread,
         feedback_out: Some(path.clone()),
