@@ -178,6 +178,29 @@ pub fn collect_with_e2e(registry: &ScenarioRegistry, runs: usize) -> Result<Benc
     let rs = crate::util::stats::Summary::of(&r);
     report.metrics.push(("reduce.reduce_bw_gbps".to_string(), rs.mean));
     report.metrics.push(("reduce.reduce_bw_gbps.stddev".to_string(), rs.std));
+    // Per-lane wire histograms the striped lane senders recorded during
+    // the probes above: mean send time per lane, so lane skew shows up
+    // in `bench --json` (informational — not in the baseline, so the
+    // gate treats them as new metrics and never fails on them).
+    for s in crate::obs::metrics::global().sample() {
+        if s.name != "wire.lane.send_us" {
+            continue;
+        }
+        if let crate::obs::metrics::SampleValue::Histo { count, sum } = s.value {
+            if count == 0 {
+                continue;
+            }
+            let lane = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "lane")
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            report
+                .metrics
+                .push((format!("wire.lane{lane}.send_us.mean"), sum as f64 / count as f64));
+        }
+    }
     Ok(report)
 }
 
@@ -232,6 +255,104 @@ fn obs_overhead_gate(off_mean: f64, off_std: f64, obs_mean: f64) -> Comparison {
     ];
     let cur = vec![("e2e.busbw_gbps.obs".to_string(), obs_mean)];
     compare(&cur, &base, OBS_OVERHEAD_TOL)
+}
+
+/// Default history window for `netbn bench --trend`.
+pub const TREND_WINDOW: usize = 12;
+
+/// The trend gate's verdict over the tail of `bench_history.jsonl`.
+#[derive(Clone, Debug)]
+pub struct TrendReport {
+    /// History entries actually evaluated (after the window cut).
+    pub evaluated: usize,
+    /// Throughput series examined.
+    pub series: usize,
+    pub detections: Vec<crate::obs::Detection>,
+}
+
+impl TrendReport {
+    pub fn ok(&self) -> bool {
+        self.detections.is_empty()
+    }
+
+    pub fn render(&self, window: usize) -> String {
+        let mut t = Table::new(
+            format!(
+                "bench trend over last {} of {window} history entries, {} series",
+                self.evaluated, self.series
+            ),
+            &["series", "entry", "value", "baseline", "z"],
+        );
+        for d in &self.detections {
+            t.row(vec![
+                d.series.clone(),
+                d.at.to_string(),
+                format!("{:.4}", d.value),
+                format!("{:.4}", d.baseline),
+                format!("{:+.1}", d.z),
+            ]);
+        }
+        let mut s = t.render();
+        s.push_str(if self.ok() {
+            "\nbench trend: PASS (no sustained regression)\n"
+        } else {
+            "\nbench trend: FAIL (sustained throughput regression)\n"
+        });
+        s
+    }
+}
+
+/// `netbn bench --trend`: replay the last `window` entries of
+/// `<store_dir>/bench_history.jsonl` through the same online detector
+/// the serve daemon runs ([`crate::obs::detect`], throughput config).
+/// Only sustained drops fire — a single noisy CI run never fails the
+/// trend gate (that's the point-in-time [`compare`] gate's job), and a
+/// history shorter than the detector's warmup+sustain passes trivially.
+/// Throughput series are the `gbps`-named keys; `.stddev` companions
+/// and timestamps are skipped.
+pub fn evaluate_trend(store_dir: &Path, window: usize) -> Result<TrendReport> {
+    anyhow::ensure!(window >= 1, "trend window must be >= 1");
+    let path = store_dir.join("bench_history.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut entries: Vec<Vec<(String, f64)>> = Vec::new();
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+        entries.push(
+            parse_flat_json(line)
+                .map_err(|e| anyhow::anyhow!("bench history line {}: {e:#}", i + 1))?,
+        );
+    }
+    if entries.len() > window {
+        entries.drain(..entries.len() - window);
+    }
+    let lookup = |e: &[(String, f64)], key: &str| {
+        e.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    };
+    // Keys in first-seen order, deduped across entries (history may gain
+    // metrics over time).
+    let mut keys: Vec<String> = Vec::new();
+    for e in &entries {
+        for (k, _) in e {
+            if k.contains("gbps") && !k.ends_with(".stddev") && !keys.contains(k) {
+                keys.push(k.clone());
+            }
+        }
+    }
+    let mut detections = Vec::new();
+    for key in &keys {
+        let series: Vec<(u64, f64)> = entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| lookup(e, key).map(|v| (i as u64, v)))
+            .collect();
+        detections.extend(crate::obs::detect::scan(
+            crate::obs::detect::DetectorConfig::throughput(),
+            crate::obs::detect::DetectionKind::ThroughputRegression,
+            key,
+            &series,
+        ));
+    }
+    Ok(TrendReport { evaluated: entries.len(), series: keys.len(), detections })
 }
 
 /// Parse a flat `{"key": number, ...}` JSON object — the only shape the
@@ -572,6 +693,67 @@ mod tests {
             assert!(parsed.iter().any(|(k, v)| k == "a.x" && *v == 1.5), "{line}");
             assert!(parsed.iter().any(|(k, v)| k == "b.y@8" && *v == 30.25), "{line}");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trend_gate_fails_only_on_sustained_regression() {
+        let dir = std::env::temp_dir()
+            .join(format!("netbn_bench_trend_{}_{}", std::process::id(), line!()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let entry = |bw: f64| BenchReport {
+            metrics: kv(&[("e2e.busbw_gbps", bw), ("e2e.busbw_gbps.stddev", bw * 0.02)]),
+        };
+        // Steady prefix with a single-sample dip: the dip must NOT fail.
+        for bw in [10.0, 10.2, 9.9, 10.1, 4.0, 10.0, 10.1, 9.95] {
+            append_history(&entry(bw), &dir).unwrap();
+        }
+        let t = evaluate_trend(&dir, TREND_WINDOW).unwrap();
+        assert!(t.ok(), "single dip flagged: {:?}", t.detections);
+        assert_eq!(t.evaluated, 8);
+        assert_eq!(t.series, 1, ".stddev and unix_ts must not become series");
+        // Now a sustained collapse: the tail fails, naming the series.
+        for _ in 0..3 {
+            append_history(&entry(1.0), &dir).unwrap();
+        }
+        let t = evaluate_trend(&dir, TREND_WINDOW).unwrap();
+        assert!(!t.ok(), "sustained regression missed");
+        assert_eq!(t.detections[0].series, "e2e.busbw_gbps");
+        assert!(t.render(TREND_WINDOW).contains("FAIL"), "{}", t.render(TREND_WINDOW));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trend_gate_passes_trivially_on_short_history() {
+        let dir = std::env::temp_dir()
+            .join(format!("netbn_bench_trend_{}_{}", std::process::id(), line!()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(evaluate_trend(&dir, TREND_WINDOW).is_err(), "missing history is an error");
+        let report = BenchReport { metrics: kv(&[("e2e.busbw_gbps", 10.0)]) };
+        append_history(&report, &dir).unwrap();
+        append_history(&report, &dir).unwrap();
+        let t = evaluate_trend(&dir, TREND_WINDOW).unwrap();
+        assert!(t.ok(), "{t:?}");
+        assert_eq!(t.evaluated, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trend_window_cuts_old_history() {
+        let dir = std::env::temp_dir()
+            .join(format!("netbn_bench_trend_{}_{}", std::process::id(), line!()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // An ancient collapse outside the window must not fail today's gate.
+        let entry = |bw: f64| BenchReport { metrics: kv(&[("e2e.busbw_gbps", bw)]) };
+        for bw in [10.0, 10.0, 10.0, 10.0, 1.0, 1.0, 1.0] {
+            append_history(&entry(bw), &dir).unwrap();
+        }
+        for _ in 0..12 {
+            append_history(&entry(1.0), &dir).unwrap();
+        }
+        let t = evaluate_trend(&dir, 12).unwrap();
+        assert_eq!(t.evaluated, 12);
+        assert!(t.ok(), "flat (if low) window must pass: {:?}", t.detections);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

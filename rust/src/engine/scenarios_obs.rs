@@ -1,5 +1,6 @@
-//! Observability scenario: the paper's utilization argument, measured
-//! from spans instead of asserted from a model.
+//! Observability scenarios: the paper's utilization argument, measured
+//! from spans instead of asserted from a model — and the detector that
+//! watches for the finding live.
 //!
 //! `utilization_timeline` re-runs the paper's Fig-4 story end to end on
 //! real loopback sockets with the span tracer on: a single gated stream
@@ -10,17 +11,27 @@
 //! [`crate::obs::breakdown::wire_mean_bps`]), and the per-step
 //! compute/serialize/wire/reduce/barrier breakdown is checked to account
 //! for the measured step wall — the tracer auditing itself.
+//!
+//! `anomaly_sentinel` turns the same finding into an alarm: a scripted
+//! mid-run NIC drop must be flagged by the online detector
+//! ([`crate::obs::detect`]) within 3 steps, with zero false positives on
+//! the steady prefix and on a steady control run. `harness=model` scans
+//! a deterministic synthetic series; `harness=launch` drives two real
+//! gated loopback launches (dropped + steady control) and reads
+//! [`LaunchReport::detections`].
 
 use super::outcome::Outcome;
 use super::params::{ParamKind, ParamSchema, ParamSpec, ParamValues};
 use super::registry::{Scenario, ScenarioRegistry};
 use crate::config::{CollectiveKind, OverlapMode, TransportKind};
+use crate::obs::detect::{scan, Detection, DetectionKind, DetectorConfig};
 use crate::report::{Check, Figure, Series, Table};
 use crate::trainer::launch::{launch, LaunchConfig, LaunchReport, SpawnMode, WorkerParams};
+use crate::util::Rng;
 use crate::Result;
 use anyhow::ensure;
 
-/// Register the observability scenario (called from
+/// Register the observability scenarios (called from
 /// [`ScenarioRegistry::builtin`]).
 pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
     r.register(Scenario::new(
@@ -58,6 +69,52 @@ pub(crate) fn register(r: &mut ScenarioRegistry) -> Result<()> {
             ParamSpec::new("seed", "gradient RNG seed", ParamKind::Int, "77"),
         ]),
         Box::new(UtilizationTimelineRunner),
+    ))?;
+    r.register(Scenario::new(
+        "anomaly_sentinel",
+        "online detector flags a scripted mid-run NIC drop within 3 steps, zero false positives",
+        ParamSchema::new(vec![
+            ParamSpec::new(
+                "harness",
+                "model (synthetic busbw series) or launch (real gated loopback sockets)",
+                ParamKind::Choice(&["model", "launch"]),
+                "model",
+            ),
+            ParamSpec::new("workers", "worker count (launch harness)", ParamKind::Int, "2"),
+            ParamSpec::new("steps", "synchronous steps", ParamKind::Int, "8"),
+            ParamSpec::new(
+                "drop-at",
+                "step at which the per-stream gate collapses",
+                ParamKind::Int,
+                "4",
+            ),
+            ParamSpec::new(
+                "gate-gbps",
+                "steady per-stream gate Gbps before the drop",
+                ParamKind::PositiveFloat,
+                "0.5",
+            ),
+            ParamSpec::new(
+                "drop-gbps",
+                "per-stream gate Gbps after the drop",
+                ParamKind::PositiveFloat,
+                "0.05",
+            ),
+            ParamSpec::new(
+                "jitter",
+                "relative jitter on the synthetic steady level (model harness)",
+                ParamKind::PositiveFloat,
+                "0.02",
+            ),
+            ParamSpec::new(
+                "elems",
+                "gradient tensor length f32 (launch harness)",
+                ParamKind::Int,
+                "60000",
+            ),
+            ParamSpec::new("seed", "jitter / gradient RNG seed", ParamKind::Int, "7"),
+        ]),
+        Box::new(AnomalySentinelRunner),
     ))?;
     Ok(())
 }
@@ -219,6 +276,192 @@ impl super::runner::Runner for UtilizationTimelineRunner {
     }
 }
 
+/// Runner: the detector watching a run lose its NIC mid-flight. Both
+/// harnesses produce a per-step busbw-like series plus its detections
+/// and a steady control; the checks are harness-independent.
+struct AnomalySentinelRunner;
+
+/// Deterministic synthetic per-step series: `level` jittered by ±`jitter`.
+fn synth_series(
+    rng: &mut Rng,
+    steps: usize,
+    drop_at: usize,
+    gate: f64,
+    drop: f64,
+    jitter: f64,
+) -> Vec<(u64, f64)> {
+    (0..steps)
+        .map(|s| {
+            let level = if s < drop_at { gate } else { drop };
+            (s as u64, level * (1.0 + jitter * (rng.next_f64() * 2.0 - 1.0)))
+        })
+        .collect()
+}
+
+impl super::runner::Runner for AnomalySentinelRunner {
+    fn mode(&self) -> &'static str {
+        "e2e"
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, p: &ParamValues) -> Result<Outcome> {
+        let harness = p.get_str("harness")?;
+        let workers = p.get_usize("workers")?;
+        ensure!((2..=8).contains(&workers), "parameter workers: must be in 2..=8, got {workers}");
+        let steps = p.get_usize("steps")?;
+        let drop_at = p.get_usize("drop-at")?;
+        let det_cfg = DetectorConfig::throughput();
+        ensure!(
+            drop_at > det_cfg.warmup,
+            "parameter drop-at: the steady prefix must outlast the detector warmup ({}), got {drop_at}",
+            det_cfg.warmup
+        );
+        ensure!(
+            steps >= drop_at + 3,
+            "parameter steps: need drop-at + 3 ({}) so the detection window fits, got {steps}",
+            drop_at + 3
+        );
+        let gate = p.get_f64("gate-gbps")?;
+        let drop = p.get_f64("drop-gbps")?;
+        ensure!(
+            drop <= gate * 0.5,
+            "parameter drop-gbps: must be a real collapse (<= half of gate-gbps {gate}), got {drop}"
+        );
+        let jitter = p.get_f64("jitter")?;
+        ensure!(
+            jitter < det_cfg.min_rel_dev,
+            "parameter jitter: must stay under the detector scale floor {}, got {jitter}",
+            det_cfg.min_rel_dev
+        );
+        let elems = p.get_usize("elems")?;
+        ensure!(elems >= 1024, "parameter elems: must be >= 1024, got {elems}");
+        let seed = p.get_usize("seed")? as u64;
+
+        // (series for the figure, its detections, steady-control detections)
+        let (series, dets, control_dets, series_unit): (_, Vec<Detection>, Vec<Detection>, &str) =
+            if harness == "launch" {
+                let leg = |drop_at_step: usize| -> Result<LaunchReport> {
+                    launch(&LaunchConfig {
+                        params: WorkerParams {
+                            world: workers,
+                            steps,
+                            elems,
+                            transport: TransportKind::Striped { streams: 2 },
+                            collective: CollectiveKind::Ring,
+                            overlap: OverlapMode::Off,
+                            bucket_mb: 0.0,
+                            layers: 1,
+                            compute_us: 0,
+                            autotune: false,
+                            chunk_kbs: Vec::new(),
+                            gate_gbps: gate,
+                            drop_at_step,
+                            drop_gbps: if drop_at_step > 0 { drop } else { 0.0 },
+                            seed,
+                            obs: false,
+                            trace_out: None,
+                        },
+                        spawn: SpawnMode::Thread,
+                        feedback_out: None,
+                        rendezvous_timeout: std::time::Duration::from_secs(60),
+                        bind: "127.0.0.1:0".parse().unwrap(),
+                    })
+                };
+                let dropped = leg(drop_at)?;
+                let steady = leg(0)?;
+                ensure!(
+                    dropped.identical && steady.identical && dropped.passed() && steady.passed(),
+                    "launch legs failed or diverged"
+                );
+                let walls: Vec<(u64, f64)> =
+                    dropped.step_wall_s.iter().enumerate().map(|(s, w)| (s as u64, *w)).collect();
+                (walls, dropped.detections, steady.detections, "step wall s")
+            } else {
+                // Two independent jitter streams so the control is not
+                // just the dropped series with the drop erased.
+                let mut rng = Rng::new(seed);
+                let mut control_rng = rng.fork();
+                let series = synth_series(&mut rng, steps, drop_at, gate, drop, jitter);
+                let control = synth_series(&mut control_rng, steps, steps, gate, drop, jitter);
+                let dets = scan(
+                    det_cfg,
+                    DetectionKind::ThroughputRegression,
+                    "busbw_gbps",
+                    &series,
+                );
+                let control_dets = scan(
+                    det_cfg,
+                    DetectionKind::ThroughputRegression,
+                    "busbw_gbps",
+                    &control,
+                );
+                (series, dets, control_dets, "busbw Gbps")
+            };
+
+        let first_at = dets.iter().map(|d| d.at).min();
+        let latency = first_at.map(|at| at as f64 - drop_at as f64);
+        let false_pos = dets.iter().filter(|d| d.at < drop_at as u64).count();
+
+        let mut out = Outcome::new();
+        out.metric("detections", dets.len() as f64);
+        out.metric("false_positives", false_pos as f64);
+        out.metric("control_detections", control_dets.len() as f64);
+        out.metric("latency_steps", latency.unwrap_or(-1.0));
+        out.checks.push(Check::assert(
+            "scripted NIC drop is detected",
+            !dets.is_empty(),
+            format!("{} detection(s) on the dropped run", dets.len()),
+        ));
+        out.checks.push(Check::assert(
+            "detected within 3 steps of the drop",
+            matches!(latency, Some(l) if (0.0..3.0).contains(&l)),
+            format!("drop at step {drop_at}, first detection {first_at:?}"),
+        ));
+        out.checks.push(Check::assert(
+            "zero false positives on the steady prefix",
+            false_pos == 0,
+            format!("{false_pos} detection(s) before step {drop_at}"),
+        ));
+        out.checks.push(Check::assert(
+            "steady control run yields no detections",
+            control_dets.is_empty(),
+            format!("{} detection(s) on the control", control_dets.len()),
+        ));
+
+        let mut fig = Figure::new(
+            "anomaly_sentinel",
+            format!("per-step series with a gate drop {gate}→{drop} Gbps at step {drop_at} ({harness} harness)"),
+            "step",
+            series_unit,
+        );
+        let mut s = Series::new("observed");
+        for &(at, v) in &series {
+            s.push(at as f64, v);
+        }
+        fig.series.push(s);
+        out.figures.push(fig);
+
+        let mut t = Table::new(
+            "detections (throughput config: EWMA baseline + MAD z-score, sustain 2)".to_string(),
+            &["kind", "at", "z", "baseline", "value"],
+        );
+        for d in &dets {
+            t.row(vec![
+                d.kind.as_str().to_string(),
+                d.at.to_string(),
+                format!("{:.2}", d.z),
+                format!("{:.4}", d.baseline),
+                format!("{:.4}", d.value),
+            ]);
+        }
+        out.tables.push(t);
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +501,60 @@ mod tests {
         let r = ScenarioRegistry::builtin();
         let sc = r.get("utilization_timeline").unwrap();
         for (k, v) in [("workers", "1"), ("streams", "1"), ("steps", "1"), ("elems", "4")] {
+            let err = sc.run(&[(k.to_string(), v.to_string())]).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}={v}: {err}");
+        }
+    }
+
+    #[test]
+    fn anomaly_sentinel_is_registered_with_schema() {
+        let r = ScenarioRegistry::builtin();
+        let sc = r.get("anomaly_sentinel").unwrap();
+        assert_eq!(sc.mode(), "e2e");
+        assert!(sc.realtime());
+        let names: Vec<&str> = sc.schema().specs().iter().map(|p| p.name).collect();
+        for n in
+            ["harness", "workers", "steps", "drop-at", "gate-gbps", "drop-gbps", "jitter", "elems", "seed"]
+        {
+            assert!(names.contains(&n), "missing param {n}");
+        }
+    }
+
+    #[test]
+    fn anomaly_sentinel_model_harness() {
+        let out = ScenarioRegistry::builtin().get("anomaly_sentinel").unwrap().run(&[]).unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert_eq!(out.metric_value("false_positives").unwrap(), 0.0);
+        assert_eq!(out.metric_value("control_detections").unwrap(), 0.0);
+        let latency = out.metric_value("latency_steps").unwrap();
+        assert!((0.0..3.0).contains(&latency), "latency {latency}");
+    }
+
+    #[test]
+    fn anomaly_sentinel_launch_harness() {
+        // Real gated loopback sockets — the same mechanism launch.rs's
+        // gated_launch_with_mid_run_drop_completes exercises, judged
+        // through the scenario's checks.
+        let out = ScenarioRegistry::builtin()
+            .get("anomaly_sentinel")
+            .unwrap()
+            .run(&[("harness".to_string(), "launch".to_string())])
+            .unwrap();
+        assert!(out.passed(), "checks failed: {:?}", out.checks);
+        assert_eq!(out.metric_value("false_positives").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn anomaly_sentinel_rejects_bad_params() {
+        let r = ScenarioRegistry::builtin();
+        let sc = r.get("anomaly_sentinel").unwrap();
+        for (k, v) in [
+            ("drop-at", "2"),     // steady prefix inside detector warmup
+            ("steps", "5"),       // detection window does not fit
+            ("drop-gbps", "0.4"), // not a real collapse vs gate 0.5
+            ("jitter", "0.5"),    // above the detector scale floor
+            ("workers", "1"),
+        ] {
             let err = sc.run(&[(k.to_string(), v.to_string())]).unwrap_err().to_string();
             assert!(err.contains(k), "{k}={v}: {err}");
         }

@@ -218,6 +218,8 @@ fn app() -> App {
                     OptSpec::value("tolerance", "allowed fractional regression", "0.2"),
                     OptSpec::value("e2e-runs", "launch-probe repetitions for e2e.busbw mean/stddev", "3"),
                     OptSpec::optional("store", "append this run to <store>/bench_history.jsonl"),
+                    OptSpec::flag("trend", "evaluate <store>/bench_history.jsonl for sustained regressions and exit"),
+                    OptSpec::value("trend-window", "history entries the trend gate looks at", "12"),
                 ],
                 positional: vec![],
             },
@@ -943,6 +945,18 @@ fn cmd_bench(registry: &ScenarioRegistry, args: &Args) -> Result<bool> {
     // The launch probe runs N times so e2e.busbw_gbps carries a measured
     // mean + stddev; the gate for that pair is variance-aware (3σ slack
     // on top of the fractional tolerance).
+    // --trend is a pure history gate: it reads what earlier runs appended
+    // and never re-measures, so CI can point it at an uploaded artifact.
+    if args.has_flag("trend") {
+        let store = args.get("store").ok_or_else(|| {
+            anyhow::anyhow!("--trend reads <store>/bench_history.jsonl; pass --store <dir>")
+        })?;
+        let window = args.get_usize("trend-window", bench::TREND_WINDOW)?;
+        anyhow::ensure!(window >= 2, "--trend-window must be >= 2, got {window}");
+        let trend = bench::evaluate_trend(std::path::Path::new(store), window)?;
+        println!("{}", trend.render(window));
+        return Ok(trend.ok());
+    }
     let e2e_runs = args.get_usize("e2e-runs", 3)?;
     let report = bench::collect_with_e2e(registry, e2e_runs)?;
     println!("{}", report.render());

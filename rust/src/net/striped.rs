@@ -320,9 +320,18 @@ fn lane_sender(
     chunk_bytes: Arc<AtomicUsize>,
     fault: Arc<Mutex<Option<String>>>,
 ) {
+    // Per-lane wire-time histogram (one registry resolution per lane
+    // lifetime, atomics per job) — `netbn bench --json` and the serve
+    // `/metrics` exposition both surface it, so lane skew is visible
+    // without turning span tracing on.
+    let send_us =
+        crate::obs::metrics::global().histo("wire.lane.send_us", &[("lane", &lane.to_string())]);
     while let Ok(job) = rx.recv() {
         let chunk = chunk_bytes.load(Ordering::SeqCst);
-        if let Err(e) = send_job(ep.as_ref(), gate.as_ref(), &cfg, chunk, &job) {
+        let t0 = std::time::Instant::now();
+        let sent = send_job(ep.as_ref(), gate.as_ref(), &cfg, chunk, &job);
+        send_us.record(t0.elapsed().as_micros() as u64);
+        if let Err(e) = sent {
             let why = format!("lane {lane} sender to {}: {e:#}", job.to);
             crate::log_error!("net::striped", "{why}");
             let mut f = fault.lock().unwrap();
@@ -849,6 +858,15 @@ mod tests {
         let t = std::thread::spawn(move || b.recv(WorkerId(0), 9).unwrap());
         a.send(WorkerId(1), 9, &payload).unwrap();
         assert_eq!(t.join().unwrap(), want);
+        // Every lane's sender recorded its wire time in the global
+        // registry (labels survive into the exposition format).
+        let text = crate::obs::metrics::global().render_text();
+        for lane in 0..4 {
+            assert!(
+                text.contains(&format!("wire.lane.send_us{{lane=\"{lane}\"")),
+                "missing lane {lane} histogram:\n{text}"
+            );
+        }
     }
 
     #[test]

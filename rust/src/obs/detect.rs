@@ -1,0 +1,515 @@
+//! Online anomaly detection over telemetry series — the watching half of
+//! the observability plane.
+//!
+//! The paper's finding is that the network runs far below its
+//! provisioned rate *and nobody notices*; [`super::timeseries`] makes
+//! utilization continuously visible, and this module makes it
+//! continuously *judged*. A [`SeriesDetector`] keeps an EWMA baseline
+//! per series and scores each new sample with a robust z-score (median
+//! absolute deviation over a sliding window of past deviations, scaled
+//! by the usual 1.4826 normal-consistency constant). A detection fires
+//! only after `sustain` consecutive anomalous samples — a single noisy
+//! step never trips it — and anomalous samples are excluded from the
+//! baseline so a genuine regression cannot normalize itself away.
+//!
+//! Three detection kinds, one mechanism:
+//! * **throughput regression** — a sustained drop in a rate series
+//!   (`busbw_gbps`, bench history entries; direction = low);
+//! * **utilization collapse** — the same low-side rule on utilization /
+//!   wire-rate series sampled by the serve daemon;
+//! * **straggler onset** — cohort scoring reused verbatim from
+//!   [`crate::tune::straggler_scores`], surfaced as [`Detection`]s.
+//!
+//! Consumers: `netbn launch` stamps detections into the
+//! [`crate::trainer::launch::LaunchReport`], the serve sampler streams
+//! them over `GET /metrics/stream`, job feedback rings stamp them into
+//! job telemetry, and `netbn bench --trend` fails CI on a sustained
+//! regression across `bench_history.jsonl`.
+
+use crate::tune::FeedbackRing;
+use crate::Result;
+use std::collections::VecDeque;
+
+/// What a detection claims went wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectionKind {
+    /// A rate/bandwidth series dropped significantly below its baseline.
+    ThroughputRegression,
+    /// A utilization series collapsed below its baseline.
+    UtilizationCollapse,
+    /// One cohort member's compute time left the cohort median.
+    StragglerOnset,
+}
+
+impl DetectionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DetectionKind::ThroughputRegression => "throughput_regression",
+            DetectionKind::UtilizationCollapse => "utilization_collapse",
+            DetectionKind::StragglerOnset => "straggler_onset",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DetectionKind> {
+        match s {
+            "throughput_regression" => Some(DetectionKind::ThroughputRegression),
+            "utilization_collapse" => Some(DetectionKind::UtilizationCollapse),
+            "straggler_onset" => Some(DetectionKind::StragglerOnset),
+            _ => None,
+        }
+    }
+}
+
+/// One fired detection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    pub kind: DetectionKind,
+    /// The series the detector was watching (a metrics series key, a
+    /// feedback field name, or a cohort member id).
+    pub series: String,
+    /// Sample index the detection fired at (step, seq, or history row).
+    pub at: u64,
+    /// Signed robust z-score of the firing sample vs the baseline.
+    pub z: f64,
+    /// EWMA baseline at firing time.
+    pub baseline: f64,
+    /// The sample that fired.
+    pub value: f64,
+}
+
+impl Detection {
+    /// One JSON object (hand-rolled like every other emitter here).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"kind\":{},\"series\":{},\"at\":{},\"z\":{:.3},\"baseline\":{:.6},\"value\":{:.6}}}",
+            crate::report::json_str(self.kind.as_str()),
+            crate::report::json_str(&self.series),
+            self.at,
+            self.z,
+            self.baseline,
+            self.value
+        )
+    }
+
+    /// A one-line human summary (`netbn bench --trend`, serve logs).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} on {} at sample {}: value {:.4} vs baseline {:.4} (z = {:.1})",
+            self.kind.as_str(),
+            self.series,
+            self.at,
+            self.value,
+            self.baseline,
+            self.z
+        )
+    }
+}
+
+/// Which side of the baseline is anomalous.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Drops are anomalous (throughput, utilization).
+    Low,
+    /// Rises are anomalous (wall times, latencies).
+    High,
+}
+
+/// Detector tuning. The defaults are deliberately conservative: the
+/// acceptance bar is *zero* false positives on a steady prefix, so the
+/// scale estimate is floored at `min_rel_dev` of the baseline — on a
+/// near-noiseless series (MAD ≈ 0) a sample must still deviate by
+/// `z_threshold × min_rel_dev` (40% with the defaults) to count.
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorConfig {
+    /// EWMA smoothing factor for the baseline.
+    pub alpha: f64,
+    /// Robust z-score a sample must cross to count as anomalous.
+    pub z_threshold: f64,
+    /// Samples consumed (baseline priming) before detection arms.
+    pub warmup: usize,
+    /// Consecutive anomalous samples required to fire — the
+    /// single-sample-blip filter.
+    pub sustain: usize,
+    /// Sliding window of past absolute deviations the MAD is taken over.
+    pub mad_window: usize,
+    /// Scale floor as a fraction of the baseline magnitude.
+    pub min_rel_dev: f64,
+    pub direction: Direction,
+}
+
+impl DetectorConfig {
+    /// Rate/bandwidth series: a sustained drop is a regression.
+    pub fn throughput() -> DetectorConfig {
+        DetectorConfig {
+            alpha: 0.3,
+            z_threshold: 5.0,
+            warmup: 3,
+            sustain: 2,
+            mad_window: 16,
+            min_rel_dev: 0.08,
+            direction: Direction::Low,
+        }
+    }
+
+    /// Utilization series: same low-side rule as throughput.
+    pub fn utilization() -> DetectorConfig {
+        DetectorConfig::throughput()
+    }
+
+    /// Duration series (step walls, latencies): a sustained rise fires.
+    pub fn wall() -> DetectorConfig {
+        DetectorConfig { direction: Direction::High, ..DetectorConfig::throughput() }
+    }
+}
+
+/// Online per-series detector: EWMA baseline + MAD z-score, sustained
+/// firing, baseline frozen while anomalous.
+#[derive(Clone, Debug)]
+pub struct SeriesDetector {
+    cfg: DetectorConfig,
+    ewma: f64,
+    devs: VecDeque<f64>,
+    seen: usize,
+    streak: usize,
+    /// Latched after a fire so one sustained episode reports once;
+    /// re-arms when a normal sample arrives.
+    fired: bool,
+}
+
+impl SeriesDetector {
+    pub fn new(cfg: DetectorConfig) -> SeriesDetector {
+        SeriesDetector { cfg, ewma: 0.0, devs: VecDeque::new(), seen: 0, streak: 0, fired: false }
+    }
+
+    fn mad(&self) -> f64 {
+        if self.devs.is_empty() {
+            return 0.0;
+        }
+        let mut d: Vec<f64> = self.devs.iter().copied().collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if d.len() % 2 == 1 {
+            d[d.len() / 2]
+        } else {
+            (d[d.len() / 2 - 1] + d[d.len() / 2]) / 2.0
+        }
+    }
+
+    fn absorb(&mut self, value: f64) {
+        let dev = (value - self.ewma).abs();
+        self.ewma = if self.seen == 0 {
+            value
+        } else {
+            self.cfg.alpha * value + (1.0 - self.cfg.alpha) * self.ewma
+        };
+        if self.seen > 0 {
+            if self.devs.len() >= self.cfg.mad_window {
+                self.devs.pop_front();
+            }
+            self.devs.push_back(dev);
+        }
+        self.seen += 1;
+    }
+
+    /// Feed one sample; `Some((z, baseline))` when this sample completes a
+    /// sustained anomalous run. Non-finite samples are ignored.
+    pub fn observe(&mut self, value: f64) -> Option<(f64, f64)> {
+        if !value.is_finite() {
+            return None;
+        }
+        if self.seen < self.cfg.warmup {
+            self.absorb(value);
+            return None;
+        }
+        let scale = (1.4826 * self.mad())
+            .max(self.cfg.min_rel_dev * self.ewma.abs())
+            .max(1e-12);
+        let z = (value - self.ewma) / scale;
+        let anomalous = match self.cfg.direction {
+            Direction::Low => z <= -self.cfg.z_threshold,
+            Direction::High => z >= self.cfg.z_threshold,
+        };
+        if !anomalous {
+            self.streak = 0;
+            self.fired = false;
+            self.absorb(value);
+            return None;
+        }
+        // Anomalous samples never update the baseline: a persistent
+        // regression stays visible instead of becoming the new normal.
+        self.streak += 1;
+        if self.streak >= self.cfg.sustain && !self.fired {
+            self.fired = true;
+            return Some((z, self.ewma));
+        }
+        None
+    }
+}
+
+/// Run a detector over a whole `(at, value)` series — identical firing
+/// points to the online form, packaged as [`Detection`]s. This is what
+/// post-hoc consumers (`netbn bench --trend`, the launch coordinator's
+/// step series) call.
+pub fn scan(
+    cfg: DetectorConfig,
+    kind: DetectionKind,
+    series: &str,
+    values: &[(u64, f64)],
+) -> Vec<Detection> {
+    let mut det = SeriesDetector::new(cfg);
+    let mut out = Vec::new();
+    for &(at, v) in values {
+        if let Some((z, baseline)) = det.observe(v) {
+            out.push(Detection { kind, series: series.to_string(), at, z, baseline, value: v });
+        }
+    }
+    out
+}
+
+/// Cohort straggler onset: score every member's feedback ring against
+/// the cohort median (the exact [`crate::tune::straggler_scores`]
+/// logic) and surface each flagged member as a [`Detection`] whose `z`
+/// is its score multiple and whose `series` names the member.
+pub fn straggler_onset(
+    rings: &[(u64, &FeedbackRing)],
+    window: usize,
+    threshold: f64,
+    at: u64,
+) -> Vec<Detection> {
+    crate::tune::straggler_scores(rings, window, threshold)
+        .into_iter()
+        .filter(|s| s.straggler)
+        .map(|s| Detection {
+            kind: DetectionKind::StragglerOnset,
+            series: format!("member.{}.compute_s", s.id),
+            at,
+            z: s.score,
+            baseline: if s.score > 0.0 { s.compute_s / s.score } else { 0.0 },
+            value: s.compute_s,
+        })
+        .collect()
+}
+
+/// Whitespace-free wire form for the launch done line:
+/// `kind:at:z:baseline:value` tuples joined with `;` (the series is
+/// carried separately — done-line fields cannot hold arbitrary text).
+pub fn format_detections(dets: &[Detection]) -> String {
+    if dets.is_empty() {
+        return "-".to_string();
+    }
+    dets.iter()
+        .map(|d| {
+            format!("{}:{}:{:.3}:{:.6}:{:.6}", d.kind.as_str(), d.at, d.z, d.baseline, d.value)
+        })
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Inverse of [`format_detections`]; `series` is stamped onto every
+/// entry.
+pub fn parse_detections(s: &str, series: &str) -> Result<Vec<Detection>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(';')
+        .filter(|part| !part.is_empty())
+        .map(|part| {
+            let f: Vec<&str> = part.split(':').collect();
+            anyhow::ensure!(f.len() == 5, "bad detection entry {part:?}");
+            let num = |i: usize| -> Result<f64> {
+                f[i].parse().map_err(|_| anyhow::anyhow!("bad detection field {:?}", f[i]))
+            };
+            Ok(Detection {
+                kind: DetectionKind::parse(f[0])
+                    .ok_or_else(|| anyhow::anyhow!("bad detection kind {:?}", f[0]))?,
+                series: series.to_string(),
+                at: f[1].parse().map_err(|_| anyhow::anyhow!("bad detection step {:?}", f[1]))?,
+                z: num(2)?,
+                baseline: num(3)?,
+                value: num(4)?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::StepFeedback;
+
+    fn steady_then_drop(steady: usize, drop_at: usize, total: usize) -> Vec<(u64, f64)> {
+        (0..total)
+            .map(|i| {
+                // Deterministic ±2% jitter around the steady level.
+                let jitter = 1.0 + 0.02 * (((i * 7 + 3) % 5) as f64 - 2.0) / 2.0;
+                let base = if i >= drop_at { 0.1 } else { 1.0 };
+                (i as u64, base * jitter)
+            })
+            .take(total.max(steady))
+            .collect()
+    }
+
+    #[test]
+    fn sustained_drop_fires_within_three_samples_no_false_positives() {
+        let series = steady_then_drop(8, 8, 14);
+        let dets = scan(
+            DetectorConfig::throughput(),
+            DetectionKind::ThroughputRegression,
+            "busbw_gbps",
+            &series,
+        );
+        assert_eq!(dets.len(), 1, "{dets:?}");
+        let d = &dets[0];
+        assert!(d.at >= 8 && d.at < 8 + 3, "fired at {}", d.at);
+        assert!(d.z < -5.0, "{d:?}");
+        assert!(d.baseline > 0.9 && d.value < 0.15, "{d:?}");
+    }
+
+    #[test]
+    fn single_sample_blip_never_fires() {
+        let mut series: Vec<(u64, f64)> = (0..12).map(|i| (i as u64, 1.0)).collect();
+        series[6].1 = 0.05; // one bad step, recovered next sample
+        let dets = scan(
+            DetectorConfig::throughput(),
+            DetectionKind::ThroughputRegression,
+            "busbw_gbps",
+            &series,
+        );
+        assert!(dets.is_empty(), "{dets:?}");
+    }
+
+    #[test]
+    fn steady_series_with_noise_stays_silent() {
+        let series: Vec<(u64, f64)> = (0..64)
+            .map(|i| (i as u64, 10.0 * (1.0 + 0.05 * ((i % 7) as f64 - 3.0) / 3.0)))
+            .collect();
+        let dets =
+            scan(DetectorConfig::throughput(), DetectionKind::UtilizationCollapse, "u", &series);
+        assert!(dets.is_empty(), "{dets:?}");
+    }
+
+    #[test]
+    fn high_direction_fires_on_wall_time_rise_only() {
+        let mut series: Vec<(u64, f64)> = (0..12).map(|i| (i as u64, 0.010)).collect();
+        for p in series.iter_mut().skip(7) {
+            p.1 = 0.120; // 12x slower from sample 7 on
+        }
+        let dets = scan(DetectorConfig::wall(), DetectionKind::ThroughputRegression, "w", &series);
+        assert_eq!(dets.len(), 1, "{dets:?}");
+        assert!(dets[0].at >= 7 && dets[0].at <= 9, "{dets:?}");
+        // The same series through a low-side detector is silent.
+        let low =
+            scan(DetectorConfig::throughput(), DetectionKind::ThroughputRegression, "w", &series);
+        assert!(low.is_empty(), "{low:?}");
+    }
+
+    #[test]
+    fn one_episode_reports_once_and_rearms_after_recovery() {
+        let mut series: Vec<(u64, f64)> = (0..24).map(|i| (i as u64, 1.0)).collect();
+        for p in series.iter_mut().take(10).skip(6) {
+            p.1 = 0.1; // first episode: samples 6..10
+        }
+        for p in series.iter_mut().take(22).skip(16) {
+            p.1 = 0.1; // second episode after recovery
+        }
+        let dets =
+            scan(DetectorConfig::throughput(), DetectionKind::ThroughputRegression, "b", &series);
+        assert_eq!(dets.len(), 2, "{dets:?}");
+        assert!(dets[0].at < 10 && dets[1].at >= 16, "{dets:?}");
+    }
+
+    #[test]
+    fn anomalous_samples_do_not_poison_the_baseline() {
+        // After a long regression, the baseline still reflects the
+        // healthy level — so the detection's reported baseline is honest.
+        let mut series: Vec<(u64, f64)> = (0..8).map(|i| (i as u64, 2.0)).collect();
+        series.extend((8..32).map(|i| (i as u64, 0.2)));
+        let dets =
+            scan(DetectorConfig::throughput(), DetectionKind::ThroughputRegression, "b", &series);
+        assert_eq!(dets.len(), 1);
+        assert!((dets[0].baseline - 2.0).abs() < 0.2, "{:?}", dets[0]);
+    }
+
+    #[test]
+    fn straggler_onset_reuses_cohort_scoring() {
+        let mk = |compute_s: f64| {
+            let mut r = FeedbackRing::new(8);
+            for step in 0..5u64 {
+                r.push(StepFeedback {
+                    step,
+                    wall_s: 1.0,
+                    compute_s,
+                    comm_busy_s: 0.1,
+                    busbw_gbps: 1.0,
+                });
+            }
+            r
+        };
+        let (a, b, slow) = (mk(0.1), mk(0.11), mk(0.45));
+        let dets = straggler_onset(&[(1, &a), (2, &b), (3, &slow)], 8, 3.0, 42);
+        assert_eq!(dets.len(), 1, "{dets:?}");
+        assert_eq!(dets[0].kind, DetectionKind::StragglerOnset);
+        assert_eq!(dets[0].series, "member.3.compute_s");
+        assert_eq!(dets[0].at, 42);
+        assert!(dets[0].z > 3.0);
+    }
+
+    #[test]
+    fn wire_format_round_trips() {
+        let dets = vec![
+            Detection {
+                kind: DetectionKind::ThroughputRegression,
+                series: "busbw_gbps".to_string(),
+                at: 5,
+                z: -7.25,
+                baseline: 1.5,
+                value: 0.15,
+            },
+            Detection {
+                kind: DetectionKind::UtilizationCollapse,
+                series: "busbw_gbps".to_string(),
+                at: 9,
+                z: -12.0,
+                baseline: 0.9,
+                value: 0.01,
+            },
+        ];
+        let s = format_detections(&dets);
+        assert!(!s.contains(' '), "done-line fields are whitespace-delimited: {s}");
+        let back = parse_detections(&s, "busbw_gbps").unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].kind, dets[0].kind);
+        assert_eq!(back[0].at, 5);
+        assert!((back[0].z - dets[0].z).abs() < 1e-3);
+        assert!((back[1].value - dets[1].value).abs() < 1e-6);
+        assert_eq!(format_detections(&[]), "-");
+        assert!(parse_detections("nope:1:2:3:4", "s").is_err());
+        assert!(parse_detections("throughput_regression:1:2", "s").is_err());
+    }
+
+    #[test]
+    fn detection_json_shape() {
+        let d = Detection {
+            kind: DetectionKind::StragglerOnset,
+            series: "member.3.compute_s".to_string(),
+            at: 7,
+            z: 4.5,
+            baseline: 0.1,
+            value: 0.45,
+        };
+        let j = d.to_json();
+        let fields = crate::util::json::object_fields(&j).unwrap();
+        assert_eq!(
+            crate::util::json::parse_string(
+                crate::util::json::require(&fields, "kind").unwrap()
+            )
+            .unwrap(),
+            "straggler_onset"
+        );
+        assert_eq!(
+            crate::util::json::parse_u64(crate::util::json::require(&fields, "at").unwrap())
+                .unwrap(),
+            7
+        );
+        assert!(d.summary().contains("straggler_onset"), "{}", d.summary());
+    }
+}

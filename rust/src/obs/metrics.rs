@@ -182,6 +182,39 @@ enum Metric {
     Histo(Histo),
 }
 
+/// One registry entry's point-in-time value, as structured data rather
+/// than exposition text — what [`crate::obs::timeseries`]'s sampler
+/// diffs between rounds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    /// Cumulative sample count and value sum of a histogram.
+    Histo { count: u64, sum: u64 },
+}
+
+/// A named + labeled entry paired with its [`SampleValue`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+impl Sample {
+    /// Canonical series key, `name{k=v,...}` (registration label order,
+    /// no quotes — the key doubles as a JSONL field and must stay
+    /// whitespace/escape-free).
+    pub fn series_key(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let labels: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{}{{{}}}", self.name, labels.join(","))
+    }
+}
+
 struct Entry {
     name: String,
     labels: Vec<(String, String)>,
@@ -264,6 +297,28 @@ impl Registry {
                 (Metric::Histo(h.clone()), h)
             },
         )
+    }
+
+    /// Structured point-in-time snapshot of every entry, in registration
+    /// order. Like [`Registry::render_text`] this never pauses writers:
+    /// each value is a relaxed atomic read.
+    pub fn sample(&self) -> Vec<Sample> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .iter()
+            .map(|e| Sample {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                value: match &e.metric {
+                    Metric::Counter(c) => SampleValue::Counter(c.get()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Histo(h) => {
+                        let s = h.snapshot();
+                        SampleValue::Histo { count: s.count, sum: s.sum }
+                    }
+                },
+            })
+            .collect()
     }
 
     /// Render every metric as `name{labels} value` text lines
@@ -458,6 +513,26 @@ mod tests {
         assert!(text.contains("lat_us{quantile=\"0.5\"}"), "{text}");
         assert!(text.contains("lat_us_count 1"), "{text}");
         assert!(text.contains("lat_us_sum 100"), "{text}");
+    }
+
+    #[test]
+    fn sample_returns_structured_values_and_series_keys() {
+        let r = Registry::new();
+        r.counter("tx_bytes", &[("rank", "0")]).add(9);
+        r.gauge("depth", &[]).set(2.5);
+        let h = r.histo("lat_us", &[("lane", "3")]);
+        h.record(10);
+        h.record(30);
+        let samples = r.sample();
+        assert_eq!(samples.len(), 3);
+        assert_eq!(samples[0].series_key(), "tx_bytes{rank=0}");
+        assert_eq!(samples[0].value, SampleValue::Counter(9));
+        assert_eq!(samples[1].series_key(), "depth");
+        assert_eq!(samples[1].value, SampleValue::Gauge(2.5));
+        assert_eq!(samples[2].series_key(), "lat_us{lane=3}");
+        assert_eq!(samples[2].value, SampleValue::Histo { count: 2, sum: 40 });
+        // Keys stay whitespace-free (they ride inside JSONL fields).
+        assert!(samples.iter().all(|s| !s.series_key().contains(' ')));
     }
 
     #[test]

@@ -22,6 +22,14 @@
 //!   step wall) and a time-bucketed link-utilization timeline, computed
 //!   by the launch coordinator from span snapshots the workers ship over
 //!   the mesh `tags::CONTROL` channel at step boundaries.
+//! * [`timeseries`] — continuous sampling: a background [`Sampler`]
+//!   snapshots the registry into rate/level [`TsPoint`] rings with
+//!   durable seq cursors, persisted by `netbn serve` as JSONL and
+//!   streamed live over `GET /metrics/stream`.
+//! * [`detect`] — online anomaly detection (EWMA baseline + MAD
+//!   z-score): utilization collapse, throughput regression, straggler
+//!   onset. Watches the sampled series, the per-job feedback stream,
+//!   launch reports, and `bench_history.jsonl` (`netbn bench --trend`).
 //!
 //! One tracer per process: `netbn launch` / `netbn _worker` run exactly
 //! one traced cohort per process, so the ring needs no scoping. In-crate
@@ -29,9 +37,13 @@
 //! parallel `cargo test` threads cannot interleave span streams.
 
 pub mod breakdown;
+pub mod detect;
 pub mod metrics;
 pub mod span;
+pub mod timeseries;
 
 pub use breakdown::StepBreakdown;
+pub use detect::Detection;
 pub use metrics::{Counter, Gauge, Histo, Registry};
 pub use span::SpanRecord;
+pub use timeseries::{Sampler, TimeSeries, TsPoint};

@@ -1,0 +1,485 @@
+//! Continuous time-series sampling of the metrics registry.
+//!
+//! A [`TimeSeries`] periodically snapshots a [`Registry`]
+//! ([`Registry::sample`]) and turns the cumulative values into
+//! [`TsPoint`]s: counters and histogram counts become **rates**
+//! (delta / elapsed seconds), gauges stay **levels**, and histograms
+//! additionally emit the mean of the samples recorded since the last
+//! round. Points land in a bounded, sequence-numbered ring with the
+//! same non-destructive cursor contract as the span ring and the
+//! feedback rings: `GET /metrics/stream?since=N` resumes exactly where
+//! it left off, and a reader that falls behind loses the overwritten
+//! prefix, never sees duplicates.
+//!
+//! Every sampled rate/utilization series also flows through an online
+//! [`SeriesDetector`] ([`super::detect`]), so the daemon notices a
+//! utilization collapse while the run is still going — the paper's
+//! "nobody watched the network" failure, automated away.
+//!
+//! Sequence numbers are durable: the serve store persists points as
+//! JSONL and a restarted daemon resumes from the last persisted seq
+//! ([`TimeSeries::resume_from`]) without duplicating or losing cursors.
+
+use super::detect::{Detection, DetectionKind, DetectorConfig, SeriesDetector};
+use super::metrics::{Registry, SampleValue};
+use crate::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Points retained in the ring (across all series).
+pub const TS_RING_CAP: usize = 16_384;
+/// Detections retained alongside the ring.
+pub const DETECTIONS_CAP: usize = 256;
+/// The serve daemon's default sampling cadence.
+pub const DEFAULT_SAMPLE_INTERVAL: Duration = Duration::from_secs(1);
+
+/// One sampled value of one series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TsPoint {
+    /// Global monotonic sequence number (durable across daemon restarts).
+    pub seq: u64,
+    /// Seconds since this daemon life's sampler started.
+    pub t_s: f64,
+    /// Series key (`name{k=v,...}`, with `.rate` / `.mean` suffixes for
+    /// the derived histogram series).
+    pub series: String,
+    /// Rate (per second) or level, per `kind`.
+    pub value: f64,
+    /// `"rate"` or `"level"`.
+    pub kind: TsKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TsKind {
+    Rate,
+    Level,
+}
+
+impl TsKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TsKind::Rate => "rate",
+            TsKind::Level => "level",
+        }
+    }
+}
+
+impl TsPoint {
+    /// One JSONL line (the store format and the stream format).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"seq\":{},\"t_s\":{:.3},\"series\":{},\"kind\":\"{}\",\"value\":{}}}",
+            self.seq,
+            self.t_s,
+            crate::report::json_str(&self.series),
+            self.kind.as_str(),
+            if self.value.is_finite() { format!("{:.6}", self.value) } else { "0".to_string() }
+        )
+    }
+
+    /// Inverse of [`TsPoint::to_json_line`].
+    pub fn from_json_line(line: &str) -> Result<TsPoint> {
+        use crate::util::json;
+        let fields = json::object_fields(line)?;
+        let kind = match json::parse_string(json::require(&fields, "kind")?)?.as_str() {
+            "rate" => TsKind::Rate,
+            "level" => TsKind::Level,
+            other => anyhow::bail!("bad timeseries kind {other:?}"),
+        };
+        Ok(TsPoint {
+            seq: json::parse_u64(json::require(&fields, "seq")?)?,
+            t_s: json::parse_f64(json::require(&fields, "t_s")?)?,
+            series: json::parse_string(json::require(&fields, "series")?)?,
+            value: json::parse_f64(json::require(&fields, "value")?)?,
+            kind,
+        })
+    }
+}
+
+/// Per-series cumulative state from the previous sampling round.
+#[derive(Clone, Copy, Default)]
+struct LastRaw {
+    count: u64,
+    sum: u64,
+}
+
+struct TsInner {
+    next_seq: u64,
+    buf: VecDeque<TsPoint>,
+    /// Last cumulative counter/histogram values, for the deltas.
+    last: BTreeMap<String, LastRaw>,
+    /// Wall clock of the previous round (None before the first).
+    last_t: Option<f64>,
+    detectors: BTreeMap<String, SeriesDetector>,
+    detections: VecDeque<Detection>,
+    rounds: u64,
+}
+
+/// The sampled store: ring + seq cursors + online detectors.
+pub struct TimeSeries {
+    t0: Instant,
+    inner: Mutex<TsInner>,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries::new()
+    }
+}
+
+impl TimeSeries {
+    pub fn new() -> TimeSeries {
+        TimeSeries::resume_from(0)
+    }
+
+    /// Resume sequence numbering after `next_seq` — pass `last persisted
+    /// seq + 1` so a restarted daemon's stream and store stay gap- and
+    /// duplicate-free.
+    pub fn resume_from(next_seq: u64) -> TimeSeries {
+        TimeSeries {
+            t0: Instant::now(),
+            inner: Mutex::new(TsInner {
+                next_seq,
+                buf: VecDeque::new(),
+                last: BTreeMap::new(),
+                last_t: None,
+                detectors: BTreeMap::new(),
+                detections: VecDeque::new(),
+                rounds: 0,
+            }),
+        }
+    }
+
+    /// The next sequence number the ring will assign.
+    pub fn cursor(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Sampling rounds taken so far.
+    pub fn rounds(&self) -> u64 {
+        self.inner.lock().unwrap().rounds
+    }
+
+    /// Snapshot `registry` once: append the derived points to the ring
+    /// and return them (the persistence sink writes exactly this batch).
+    /// The first round only primes the cumulative state — rates need a
+    /// baseline — so it returns gauge levels but no counter rates.
+    pub fn sample(&self, registry: &Registry) -> Vec<TsPoint> {
+        let now = self.t0.elapsed().as_secs_f64();
+        let samples = registry.sample();
+        let mut inner = self.inner.lock().unwrap();
+        let dt = inner.last_t.map(|t| now - t);
+        let mut fresh: Vec<(String, f64, TsKind)> = Vec::new();
+        for s in samples {
+            let key = s.series_key();
+            match s.value {
+                SampleValue::Gauge(v) => fresh.push((key, v, TsKind::Level)),
+                SampleValue::Counter(v) => {
+                    let prev = inner.last.get(&key).copied();
+                    inner.last.insert(key.clone(), LastRaw { count: v, sum: 0 });
+                    if let (Some(prev), Some(dt)) = (prev, dt) {
+                        if dt > 0.0 {
+                            let rate = v.saturating_sub(prev.count) as f64 / dt;
+                            fresh.push((format!("{key}.rate"), rate, TsKind::Rate));
+                        }
+                    }
+                }
+                SampleValue::Histo { count, sum } => {
+                    let prev = inner.last.get(&key).copied();
+                    inner.last.insert(key.clone(), LastRaw { count, sum });
+                    if let (Some(prev), Some(dt)) = (prev, dt) {
+                        if dt > 0.0 {
+                            let dc = count.saturating_sub(prev.count);
+                            fresh.push((format!("{key}.rate"), dc as f64 / dt, TsKind::Rate));
+                            if dc > 0 {
+                                let mean = sum.saturating_sub(prev.sum) as f64 / dc as f64;
+                                fresh.push((format!("{key}.mean"), mean, TsKind::Level));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        inner.last_t = Some(now);
+        inner.rounds += 1;
+        let mut out = Vec::with_capacity(fresh.len());
+        for (series, value, kind) in fresh {
+            let seq = inner.next_seq;
+            inner.next_seq += 1;
+            let p = TsPoint { seq, t_s: now, series, value, kind };
+            // The daemon watches every bandwidth/utilization series it
+            // samples — detection is a property of the stream, not of
+            // any one consumer.
+            if let Some(dkind) = watch_kind(&p.series) {
+                let det = inner
+                    .detectors
+                    .entry(p.series.clone())
+                    .or_insert_with(|| SeriesDetector::new(DetectorConfig::utilization()));
+                if let Some((z, baseline)) = det.observe(p.value) {
+                    if inner.detections.len() >= DETECTIONS_CAP {
+                        inner.detections.pop_front();
+                    }
+                    inner.detections.push_back(Detection {
+                        kind: dkind,
+                        series: p.series.clone(),
+                        at: seq,
+                        z,
+                        baseline,
+                        value: p.value,
+                    });
+                }
+            }
+            if inner.buf.len() >= TS_RING_CAP {
+                inner.buf.pop_front();
+            }
+            inner.buf.push_back(p.clone());
+            out.push(p);
+        }
+        out
+    }
+
+    /// Non-destructive snapshot: points with `seq >= after`, plus the
+    /// cursor to pass next time (same contract as
+    /// [`crate::obs::span::since`]).
+    pub fn since(&self, after: u64) -> (Vec<TsPoint>, u64) {
+        let inner = self.inner.lock().unwrap();
+        let cursor = inner.next_seq;
+        (inner.buf.iter().filter(|p| p.seq >= after).cloned().collect(), cursor)
+    }
+
+    /// Every retained detection (bounded at [`DETECTIONS_CAP`]).
+    pub fn detections(&self) -> Vec<Detection> {
+        self.inner.lock().unwrap().detections.iter().cloned().collect()
+    }
+}
+
+/// Which series the daemon's standing detectors watch, and as what kind:
+/// utilization/wire-rate series collapse, other bandwidth series regress.
+fn watch_kind(series: &str) -> Option<DetectionKind> {
+    if series.contains("util") || series.contains("wire.") {
+        Some(DetectionKind::UtilizationCollapse)
+    } else if series.contains("gbps") || series.contains("bps") {
+        Some(DetectionKind::ThroughputRegression)
+    } else {
+        None
+    }
+}
+
+/// A background sampling thread: snapshots `registry` into `ts` every
+/// `interval` and hands each fresh batch to the persistence sink.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Sampler {
+    pub fn start(
+        ts: Arc<TimeSeries>,
+        registry: &'static Registry,
+        interval: Duration,
+        mut persist: Option<Box<dyn FnMut(&[TsPoint]) + Send>>,
+    ) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obs-sampler".to_string())
+            .spawn(move || {
+                let mut last = Instant::now();
+                // Prime the cumulative state immediately so the first
+                // interval already yields rates.
+                let first = ts.sample(registry);
+                if let Some(p) = persist.as_mut() {
+                    p(&first);
+                }
+                while !stop2.load(Ordering::Relaxed) {
+                    // Short dozes so stop() returns promptly even with a
+                    // long sampling interval.
+                    std::thread::sleep(Duration::from_millis(25).min(interval));
+                    if last.elapsed() < interval {
+                        continue;
+                    }
+                    last = Instant::now();
+                    let batch = ts.sample(registry);
+                    if let Some(p) = persist.as_mut() {
+                        p(&batch);
+                    }
+                }
+            })
+            .expect("spawn obs sampler");
+        Sampler { stop, handle: Some(handle) }
+    }
+
+    /// Stop and join (idempotent; also runs on drop).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_become_rates_and_gauges_stay_levels() {
+        let reg = Registry::new();
+        let ts = TimeSeries::new();
+        let c = reg.counter("bytes_tx", &[("rank", "0")]);
+        reg.gauge("depth", &[]).set(3.0);
+        c.add(100);
+        let first = ts.sample(&reg);
+        // Round 1: only the gauge level (rates need a baseline).
+        assert_eq!(first.len(), 1, "{first:?}");
+        assert_eq!(first[0].series, "depth");
+        assert_eq!(first[0].kind, TsKind::Level);
+        c.add(300);
+        std::thread::sleep(Duration::from_millis(20));
+        let second = ts.sample(&reg);
+        let rate = second.iter().find(|p| p.series == "bytes_tx{rank=0}.rate").unwrap();
+        assert_eq!(rate.kind, TsKind::Rate);
+        // 300 new bytes over >= 20ms: the rate is positive and bounded.
+        assert!(rate.value > 0.0 && rate.value <= 300.0 / 0.02, "{rate:?}");
+        // Seqs are dense and monotonic across rounds.
+        let seqs: Vec<u64> = first.iter().chain(&second).map(|p| p.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1), "{seqs:?}");
+    }
+
+    #[test]
+    fn histos_emit_count_rate_and_interval_mean() {
+        let reg = Registry::new();
+        let ts = TimeSeries::new();
+        let h = reg.histo("send_us", &[("lane", "1")]);
+        h.record(10);
+        ts.sample(&reg);
+        h.record(30);
+        h.record(50);
+        std::thread::sleep(Duration::from_millis(10));
+        let batch = ts.sample(&reg);
+        let mean = batch.iter().find(|p| p.series == "send_us{lane=1}.mean").unwrap();
+        // Only the NEW samples (30, 50) are in the interval mean.
+        assert!((mean.value - 40.0).abs() < 1e-9, "{mean:?}");
+        assert!(batch.iter().any(|p| p.series == "send_us{lane=1}.rate"));
+    }
+
+    #[test]
+    fn since_cursor_resumes_without_duplicates() {
+        let reg = Registry::new();
+        let ts = TimeSeries::new();
+        reg.gauge("g", &[]).set(1.0);
+        ts.sample(&reg);
+        let (all, cur) = ts.since(0);
+        assert_eq!(all.len(), 1);
+        assert_eq!(cur, 1);
+        assert!(ts.since(cur).0.is_empty(), "cursor resume must yield only the delta");
+        ts.sample(&reg);
+        let (delta, cur2) = ts.since(cur);
+        assert_eq!(delta.len(), 1);
+        assert_eq!(delta[0].seq, 1);
+        assert_eq!(cur2, 2);
+    }
+
+    #[test]
+    fn resume_from_continues_the_durable_seq_space() {
+        let reg = Registry::new();
+        reg.gauge("g", &[]).set(1.0);
+        let ts = TimeSeries::resume_from(41);
+        let batch = ts.sample(&reg);
+        assert_eq!(batch[0].seq, 41);
+        assert_eq!(ts.cursor(), 42);
+    }
+
+    #[test]
+    fn json_lines_round_trip() {
+        let p = TsPoint {
+            seq: 7,
+            t_s: 1.25,
+            series: "wire.lane.send_us{lane=3}.rate".to_string(),
+            value: 125.5,
+            kind: TsKind::Rate,
+        };
+        let back = TsPoint::from_json_line(&p.to_json_line()).unwrap();
+        assert_eq!(back.seq, 7);
+        assert_eq!(back.series, p.series);
+        assert_eq!(back.kind, TsKind::Rate);
+        assert!((back.value - 125.5).abs() < 1e-6);
+        assert!(TsPoint::from_json_line("{\"seq\":1}").is_err());
+        assert!(TsPoint::from_json_line("not json").is_err());
+    }
+
+    #[test]
+    fn sampled_gbps_series_flow_through_the_collapse_detector() {
+        let reg = Registry::new();
+        let ts = TimeSeries::new();
+        let g = reg.gauge("e2e.busbw_gbps", &[]);
+        for _ in 0..8 {
+            g.set(10.0);
+            ts.sample(&reg);
+        }
+        assert!(ts.detections().is_empty(), "steady series must stay silent");
+        for _ in 0..3 {
+            g.set(0.5);
+            ts.sample(&reg);
+        }
+        let dets = ts.detections();
+        assert_eq!(dets.len(), 1, "{dets:?}");
+        assert_eq!(dets[0].kind, DetectionKind::ThroughputRegression);
+        assert_eq!(dets[0].series, "e2e.busbw_gbps");
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let reg = Registry::new();
+        let ts = TimeSeries::new();
+        let g = reg.gauge("g", &[]);
+        for i in 0..(TS_RING_CAP + 50) {
+            g.set(i as f64);
+            ts.sample(&reg);
+        }
+        let (got, cur) = ts.since(0);
+        assert!(got.len() <= TS_RING_CAP);
+        assert_eq!(cur, (TS_RING_CAP + 50) as u64);
+        // The oldest retained point reflects the drop.
+        assert_eq!(got[0].seq, 50);
+    }
+
+    #[test]
+    fn sampler_thread_samples_and_persists() {
+        let reg: &'static Registry = Box::leak(Box::new(Registry::new()));
+        reg.gauge("sampler_test_g", &[]).set(1.0);
+        let ts = Arc::new(TimeSeries::new());
+        let persisted: Arc<Mutex<Vec<TsPoint>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&persisted);
+        let mut s = Sampler::start(
+            Arc::clone(&ts),
+            reg,
+            Duration::from_millis(30),
+            Some(Box::new(move |batch: &[TsPoint]| {
+                sink.lock().unwrap().extend_from_slice(batch);
+            })),
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ts.rounds() < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        s.stop();
+        assert!(ts.rounds() >= 3, "sampler only took {} rounds", ts.rounds());
+        let persisted = persisted.lock().unwrap();
+        assert!(!persisted.is_empty());
+        // Persisted exactly the ring's points: same seqs, no duplicates.
+        let mut seqs: Vec<u64> = persisted.iter().map(|p| p.seq).collect();
+        let n = seqs.len();
+        seqs.dedup();
+        assert_eq!(seqs.len(), n, "duplicate seqs persisted");
+    }
+}

@@ -156,6 +156,11 @@ impl Response {
         Response { content_type: "text/plain; charset=utf-8", ..Response::json(status, body) }
     }
 
+    /// An HTML payload (the `/dash` page).
+    pub fn html(status: u16, body: impl Into<String>) -> Response {
+        Response { content_type: "text/html; charset=utf-8", ..Response::json(status, body) }
+    }
+
     /// A JSON error payload `{"error": …}`.
     pub fn error(status: u16, message: &str) -> Response {
         Response::json(status, format!("{{\"error\":{}}}", crate::report::json_str(message)))

@@ -12,9 +12,12 @@
 //! GET    /jobs/<id>          one full record (embedded outcome when done)
 //! GET    /jobs/<id>/outcome  the raw Outcome JSON alone → 200 | 409 | 404
 //! GET    /jobs/<id>/feedback?since=N&timeout=S   long-poll telemetry (chunked)
+//! GET    /jobs/<id>/trace    merged Chrome trace of the job's spans
 //! DELETE /jobs/<id>          cancel a still-queued job → 200 | 409 | 404
 //! GET    /healthz            liveness + load
 //! GET    /metrics            process-wide observability registry (plaintext)
+//! GET    /metrics/stream?since=N&timeout=S   long-poll sampled timeseries (chunked)
+//! GET    /dash               dependency-free live dashboard (HTML)
 //! ```
 //!
 //! Module map: [`http`] is the std-only HTTP/1.1 layer, [`queue`] the
@@ -72,17 +75,23 @@ const READ_TIMEOUT: Duration = Duration::from_secs(10);
 /// Long-poll ceiling for the feedback route.
 const MAX_POLL_S: f64 = 30.0;
 
-/// A running daemon: accept loop + worker pool over one [`ServeState`].
+/// A running daemon: accept loop + worker pool + metrics sampler over
+/// one [`ServeState`].
 pub struct Daemon {
     state: Arc<ServeState>,
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     pool: Option<WorkerPool>,
+    sampler: Option<crate::obs::Sampler>,
 }
 
 impl Daemon {
-    /// Bind, reload the store, spawn workers, start accepting.
+    /// Bind, reload the store, spawn workers, start accepting and
+    /// sampling. The sampler persists each batch to the store's
+    /// `timeseries.jsonl`; the state's [`crate::obs::TimeSeries`] has
+    /// already resumed the durable seq space, so restarts neither
+    /// duplicate nor lose cursors.
     pub fn start(cfg: &ServeConfig) -> Result<Daemon> {
         let store = Store::open(&cfg.store_dir)?;
         let state = Arc::new(ServeState::new(store, cfg.queue_capacity, cfg.workers)?);
@@ -92,6 +101,19 @@ impl Daemon {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let pool = WorkerPool::start(cfg.workers, Arc::clone(&state));
+        // The sink gets its own store handle (stores are just a rooted
+        // path) so persistence never contends with request handlers.
+        let sink_store = Store::open(&cfg.store_dir)?;
+        let sampler = crate::obs::Sampler::start(
+            Arc::clone(&state.timeseries),
+            crate::obs::metrics::global(),
+            crate::obs::timeseries::DEFAULT_SAMPLE_INTERVAL,
+            Some(Box::new(move |batch: &[crate::obs::TsPoint]| {
+                if let Err(e) = sink_store.append_timeseries(batch) {
+                    eprintln!("serve: failed to persist timeseries batch: {e:#}");
+                }
+            })),
+        );
         let accept_thread = {
             let state = Arc::clone(&state);
             let stop = Arc::clone(&stop);
@@ -100,7 +122,14 @@ impl Daemon {
                 .spawn(move || accept_loop(&listener, &state, &stop))
                 .context("spawning accept loop")?
         };
-        Ok(Daemon { state, addr, stop, accept_thread: Some(accept_thread), pool: Some(pool) })
+        Ok(Daemon {
+            state,
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            pool: Some(pool),
+            sampler: Some(sampler),
+        })
     }
 
     /// Where the daemon is listening (resolves port 0).
@@ -117,6 +146,9 @@ impl Daemon {
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.state.begin_shutdown();
+        if let Some(mut sampler) = self.sampler.take() {
+            sampler.stop();
+        }
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -174,13 +206,18 @@ fn route(req: &Request, state: &ServeState) -> Response {
     let resp = match (req.method.as_str(), segments.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
         ("GET", ["metrics"]) => metrics(),
+        ("GET", ["metrics", "stream"]) => metrics_stream(req, state),
+        ("GET", ["dash"]) => dash(),
         ("POST", ["jobs"]) => submit(req, state),
         ("GET", ["jobs"]) => list(state),
         ("GET", ["jobs", id]) => with_id(id, |id| get_job(state, id)),
         ("DELETE", ["jobs", id]) => with_id(id, |id| cancel(state, id)),
         ("GET", ["jobs", id, "outcome"]) => with_id(id, |id| outcome(state, id)),
         ("GET", ["jobs", id, "feedback"]) => with_id(id, |id| feedback(req, state, id)),
-        (_, ["healthz" | "metrics" | "jobs", ..]) => Response::error(405, "method not allowed"),
+        ("GET", ["jobs", id, "trace"]) => with_id(id, |id| job_trace(state, id)),
+        (_, ["healthz" | "metrics" | "dash" | "jobs", ..]) => {
+            Response::error(405, "method not allowed")
+        }
         _ => Response::error(404, "no such route"),
     };
     m.histo("serve.route_us", &[]).record(t0.elapsed().as_micros() as u64);
@@ -192,6 +229,172 @@ fn route(req: &Request, state: &ServeState) -> Response {
 fn metrics() -> Response {
     Response::text(200, crate::obs::metrics::global().render_text())
 }
+
+/// Poll cadence while a stream request waits for fresh samples. The
+/// sampler ticks at [`crate::obs::timeseries::DEFAULT_SAMPLE_INTERVAL`],
+/// so a short sleep keeps first-chunk latency low without a condvar.
+const STREAM_POLL: Duration = Duration::from_millis(50);
+
+/// Long-poll the sampled timeseries ring. Cursor contract mirrors
+/// `/jobs/<id>/feedback?since=N`: pass back `next` to resume without
+/// duplicates; chunked so `curl -N` sees points line by line.
+fn metrics_stream(req: &Request, state: &ServeState) -> Response {
+    let since = req.query_u64("since").unwrap_or(0);
+    let timeout = req.query_f64("timeout").unwrap_or(10.0).clamp(0.0, MAX_POLL_S);
+    let deadline = std::time::Instant::now() + Duration::from_secs_f64(timeout);
+    let (points, next) = loop {
+        let (points, next) = state.timeseries.since(since);
+        if !points.is_empty() || std::time::Instant::now() >= deadline {
+            break (points, next);
+        }
+        std::thread::sleep(STREAM_POLL);
+    };
+    let mut body = String::from("{\"points\":[");
+    for (i, p) in points.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push('\n');
+        body.push_str(&p.to_json_line());
+    }
+    body.push_str("],\n\"detections\":[");
+    for (i, d) in state.timeseries.detections().iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push('\n');
+        body.push_str(&d.to_json());
+    }
+    body.push_str(&format!("],\n\"next\":{next}}}"));
+    Response::json(200, body).chunked()
+}
+
+/// The merged Chrome trace of everything the job's run left in the span
+/// ring — loads straight into Perfetto / `chrome://tracing`. Untraced
+/// jobs (and history reloaded from a previous daemon life) answer with
+/// a valid empty trace rather than an error.
+fn job_trace(state: &ServeState, id: u64) -> Response {
+    if state.get(id).is_none() {
+        return Response::error(404, &format!("no job {id}"));
+    }
+    let spans = state.telemetry.get(id).map(|f| f.spans()).unwrap_or_default();
+    Response::json(200, crate::obs::span::chrome_trace_json(&spans))
+}
+
+/// The live dashboard: one self-contained HTML page (no external
+/// scripts, fonts, or styles — it must render inside an airgapped
+/// cluster) that tails `/metrics/stream` with a resume cursor and plots
+/// the utilization timeline plus the latest job's per-step breakdown.
+fn dash() -> Response {
+    Response::html(200, DASH_HTML)
+}
+
+const DASH_HTML: &str = r#"<!DOCTYPE html>
+<html lang="en">
+<head>
+<meta charset="utf-8">
+<title>netbn dash</title>
+<style>
+body { font: 13px/1.4 monospace; margin: 1.5em; background: #111; color: #ddd; }
+h1 { font-size: 16px; } h2 { font-size: 13px; color: #9cf; margin: 1.2em 0 0.3em; }
+svg { background: #181818; border: 1px solid #333; }
+table { border-collapse: collapse; } td, th { padding: 2px 8px; border: 1px solid #333; }
+#detections li { color: #f66; }
+.muted { color: #777; }
+</style>
+</head>
+<body>
+<h1>netbn · live telemetry</h1>
+<div class="muted" id="status">connecting…</div>
+<h2>utilization timeline (sampled bandwidth/utilization series)</h2>
+<svg id="timeline" width="720" height="160"></svg>
+<h2>detections</h2>
+<ul id="detections"><li class="muted">none</li></ul>
+<h2>latest job · per-step breakdown</h2>
+<table id="steps"><tr><th>step</th><th>wall_s</th><th>compute</th><th>comm</th><th>busbw_gbps</th></tr></table>
+<script>
+"use strict";
+const hist = new Map(); // series -> [{t,v}]
+let cursor = 0;
+function plot() {
+  const svg = document.getElementById("timeline");
+  const W = 720, H = 160;
+  let out = "";
+  let all = [];
+  for (const pts of hist.values()) all = all.concat(pts);
+  if (all.length > 1) {
+    const t0 = Math.min(...all.map(p => p.t)), t1 = Math.max(...all.map(p => p.t));
+    const vmax = Math.max(1e-9, ...all.map(p => p.v));
+    const colors = ["#6cf", "#fc6", "#6f9", "#f9f", "#ff6", "#c9f"];
+    let ci = 0, legendY = 14;
+    for (const [name, pts] of hist) {
+      const c = colors[ci++ % colors.length];
+      const d = pts.map((p, i) => (i ? "L" : "M") +
+        ((p.t - t0) / Math.max(1e-9, t1 - t0) * (W - 20) + 10).toFixed(1) + "," +
+        (H - 10 - p.v / vmax * (H - 30)).toFixed(1)).join(" ");
+      out += `<path d="${d}" fill="none" stroke="${c}" stroke-width="1.5"/>`;
+      out += `<text x="14" y="${legendY}" fill="${c}" font-size="10">${name}</text>`;
+      legendY += 12;
+    }
+  }
+  svg.innerHTML = out;
+}
+function onBatch(msg) {
+  for (const p of msg.points || []) {
+    if (!(p.series.includes("bps") || p.series.includes("util"))) continue;
+    if (!hist.has(p.series)) hist.set(p.series, []);
+    const pts = hist.get(p.series);
+    pts.push({ t: p.t_s, v: p.value });
+    if (pts.length > 600) pts.shift();
+  }
+  const ul = document.getElementById("detections");
+  if ((msg.detections || []).length) {
+    ul.innerHTML = msg.detections.map(d =>
+      `<li>${d.kind} on ${d.series} at seq ${d.at}: ${d.value.toFixed(3)} vs baseline ${d.baseline.toFixed(3)} (z=${d.z.toFixed(1)})</li>`
+    ).join("");
+  }
+  plot();
+}
+async function tail() {
+  for (;;) {
+    try {
+      const r = await fetch(`/metrics/stream?since=${cursor}&timeout=15`);
+      const msg = await r.json();
+      cursor = msg.next;
+      document.getElementById("status").textContent =
+        `streaming · cursor ${cursor} · ${hist.size} series`;
+      onBatch(msg);
+    } catch (e) {
+      document.getElementById("status").textContent = "stream error: " + e;
+      await new Promise(res => setTimeout(res, 2000));
+    }
+  }
+}
+async function steps() {
+  for (;;) {
+    try {
+      const jobs = (await (await fetch("/jobs")).json()).jobs || [];
+      if (jobs.length) {
+        const id = jobs[jobs.length - 1].id;
+        const fb = await (await fetch(`/jobs/${id}/feedback?since=0&timeout=0`)).json();
+        const rows = (fb.samples || []).slice(-20).map(s =>
+          `<tr><td>${s.step}</td><td>${s.wall_s.toFixed(4)}</td>` +
+          `<td>${(100 * s.compute_frac).toFixed(1)}%</td>` +
+          `<td>${(100 * s.comm_frac).toFixed(1)}%</td><td>${s.busbw_gbps.toFixed(3)}</td></tr>`
+        ).join("");
+        document.getElementById("steps").innerHTML =
+          "<tr><th>step</th><th>wall_s</th><th>compute</th><th>comm</th><th>busbw_gbps</th></tr>" + rows;
+      }
+    } catch (e) { /* daemon may not have jobs yet */ }
+    await new Promise(res => setTimeout(res, 2000));
+  }
+}
+tail();
+steps();
+</script>
+</body>
+</html>
+"#;
 
 fn with_id(raw: &str, f: impl FnOnce(u64) -> Response) -> Response {
     match raw.parse::<u64>() {
@@ -442,5 +645,91 @@ mod tests {
         let addr = daemon.addr().to_string();
         let (status, _) = http::request(&addr, "GET", "/jobs/42/feedback", None).unwrap();
         assert_eq!(status, 404, "unknown job has no feedback");
+    }
+
+    #[test]
+    fn dash_serves_a_self_contained_html_page() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        let (status, body) = http::request(&addr, "GET", "/dash", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("<!DOCTYPE html>"), "{body:.60}");
+        assert!(body.contains("/metrics/stream"), "the page must tail the live stream");
+        assert!(!body.contains("http://") && !body.contains("https://"),
+            "dash must not reference external resources");
+        assert_eq!(http::request(&addr, "POST", "/dash", None).unwrap().0, 405);
+    }
+
+    #[test]
+    fn metrics_stream_answers_with_points_and_a_cursor() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        // Force at least one sampled gauge, then take a deterministic
+        // sample (the background sampler's cadence is too slow for a
+        // unit test).
+        crate::obs::metrics::global().gauge("serve_stream_test", &[]).set(4.0);
+        daemon.state().sample_now();
+        let since = 0;
+        let (status, body) = http::request(
+            &addr,
+            "GET",
+            &format!("/metrics/stream?since={since}&timeout=0"),
+            None,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"points\":["), "{body}");
+        assert!(body.contains("\"next\":"), "{body}");
+        assert!(body.contains("serve_stream_test"), "{body}");
+        // Cursor resume: asking from the returned cursor yields only
+        // points at or past it (the background sampler may have ticked
+        // in between — new points are fine, re-sent ones are not).
+        let next = body
+            .rsplit("\"next\":")
+            .next()
+            .and_then(|s| s.trim_end_matches('}').trim().parse::<u64>().ok())
+            .unwrap();
+        let (_, body2) = http::request(
+            &addr,
+            "GET",
+            &format!("/metrics/stream?since={next}&timeout=0"),
+            None,
+        )
+        .unwrap();
+        for line in body2.lines().filter(|l| l.contains("\"seq\"")) {
+            // Point lines may carry the array's trailing `],` or `,`.
+            let clean = line.trim_end_matches(',').trim_end_matches(']').trim_end_matches(',');
+            let p = crate::obs::TsPoint::from_json_line(clean)
+                .unwrap_or_else(|e| panic!("bad stream line {line:?}: {e:#}"));
+            assert!(p.seq >= next, "duplicate point {p:?} (cursor {next})");
+        }
+    }
+
+    #[test]
+    fn trace_route_answers_per_job() {
+        let daemon = test_daemon(1, 4);
+        let addr = daemon.addr().to_string();
+        assert_eq!(http::request(&addr, "GET", "/jobs/9/trace", None).unwrap().0, 404);
+        let (status, body) = http::request(
+            &addr,
+            "POST",
+            "/jobs",
+            Some("{\"scenario\":\"simulate\",\"params\":{}}"),
+        )
+        .unwrap();
+        assert_eq!(status, 202, "{body}");
+        // Wait for the job to finish so the feed holds its span window.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let (_, job) = http::request(&addr, "GET", "/jobs/1", None).unwrap();
+            if job.contains("\"state\":\"done\"") || job.contains("\"state\":\"failed\"") {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never finished: {job}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let (status, trace) = http::request(&addr, "GET", "/jobs/1/trace", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(trace.contains("\"traceEvents\""), "{trace}");
     }
 }

@@ -11,10 +11,11 @@ use super::queue::{JobQueue, QueueFull};
 use super::store::Store;
 use super::telemetry::TelemetryHub;
 use crate::engine::jobqueue::JobRequest;
+use crate::obs::TimeSeries;
 use crate::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Why a cancellation was refused.
 #[derive(Debug, PartialEq, Eq)]
@@ -30,6 +31,10 @@ pub struct ServeState {
     pub queue: JobQueue,
     pub telemetry: TelemetryHub,
     pub store: Store,
+    /// The continuous metrics sampler's ring. Its seq space resumes
+    /// from the store's persisted high-water mark, so a restarted
+    /// daemon's stream and JSONL log never duplicate or skip a cursor.
+    pub timeseries: Arc<TimeSeries>,
     /// Worker pool size (surfaced by `/healthz`).
     pub workers: usize,
     jobs: Mutex<BTreeMap<u64, JobRecord>>,
@@ -54,15 +59,28 @@ impl ServeState {
             }
             jobs.insert(record.id, record);
         }
+        let ts_resume = store.last_timeseries_seq().map(|s| s + 1).unwrap_or(0);
         Ok(ServeState {
             queue: JobQueue::new(queue_capacity, workers),
             telemetry: TelemetryHub::new(),
             store,
+            timeseries: Arc::new(TimeSeries::resume_from(ts_resume)),
             workers,
             jobs: Mutex::new(jobs),
             next_id: AtomicU64::new(max_id + 1),
             running: AtomicUsize::new(0),
         })
+    }
+
+    /// Take one timeseries sample immediately and persist it — exactly
+    /// what the background [`crate::obs::Sampler`] does every interval.
+    /// Tests and shutdown paths use this for a deterministic sample.
+    pub fn sample_now(&self) -> usize {
+        let batch = self.timeseries.sample(crate::obs::metrics::global());
+        if let Err(e) = self.store.append_timeseries(&batch) {
+            eprintln!("serve: failed to persist timeseries batch: {e:#}");
+        }
+        batch.len()
     }
 
     /// Admit a validated request: allocate an id, persist the queued

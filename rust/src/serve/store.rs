@@ -3,22 +3,37 @@
 //! Layout under the store root:
 //!
 //! ```text
-//! <store>/jobs/<id>.json    one JobRecord per submitted job
-//! <store>/tuner/<key>.json  one TunerCheckpoint per scenario
+//! <store>/jobs/<id>.json      one JobRecord per submitted job
+//! <store>/tuner/<key>.json    one TunerCheckpoint per scenario
+//! <store>/timeseries.jsonl    sampled TsPoints, append-only + compaction
 //! ```
 //!
-//! Every write goes through a temp-file + rename so a daemon killed
-//! mid-write never leaves a torn record. On restart the daemon reloads
-//! both trees: finished jobs become queryable history, and checkpoints
-//! warm-start resubmitted jobs ([`crate::engine::jobqueue::warm_start_overrides`])
-//! — the first slice of the ROADMAP's "persist and reuse tuner state".
+//! Every record write goes through a temp-file + rename so a daemon
+//! killed mid-write never leaves a torn record. On restart the daemon
+//! reloads both trees: finished jobs become queryable history, and
+//! checkpoints warm-start resubmitted jobs
+//! ([`crate::engine::jobqueue::warm_start_overrides`]) — the first
+//! slice of the ROADMAP's "persist and reuse tuner state".
+//!
+//! The timeseries log is the durable half of [`crate::obs::timeseries`]:
+//! batches append as JSONL; when the file outgrows
+//! [`TS_COMPACT_LINES`] it is compacted (newest half kept, via
+//! temp + rename so compaction is crash-safe); and on restart
+//! [`Store::last_timeseries_seq`] recovers the high-water sequence so
+//! the resumed sampler continues the seq space with no gap and no
+//! duplicate.
 
 use super::job::JobRecord;
+use crate::obs::timeseries::TsPoint;
 use crate::tune::TunerCheckpoint;
 use crate::Result;
 use anyhow::Context;
 use std::fs;
+use std::io::Write;
 use std::path::{Path, PathBuf};
+
+/// Compact `timeseries.jsonl` once it exceeds this many lines.
+pub const TS_COMPACT_LINES: usize = 100_000;
 
 pub struct Store {
     root: PathBuf,
@@ -88,6 +103,70 @@ impl Store {
         let path = self.root.join("tuner").join(format!("{}.json", file_key(scenario)));
         let text = fs::read_to_string(path).ok()?;
         TunerCheckpoint::from_json(&text).ok()
+    }
+
+    fn timeseries_path(&self) -> PathBuf {
+        self.root.join("timeseries.jsonl")
+    }
+
+    /// Append one sampled batch to `timeseries.jsonl`, compacting first
+    /// if the log has outgrown [`TS_COMPACT_LINES`]. Compaction keeps
+    /// the newest half and rewrites through temp + rename, so a crash
+    /// mid-compaction leaves either the old log or the new one — seq
+    /// numbers survive intact either way.
+    pub fn append_timeseries(&self, points: &[TsPoint]) -> Result<()> {
+        if points.is_empty() {
+            return Ok(());
+        }
+        let path = self.timeseries_path();
+        if let Ok(text) = fs::read_to_string(&path) {
+            let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+            if lines.len() > TS_COMPACT_LINES {
+                let keep = &lines[lines.len() / 2..];
+                let tmp = self.root.join("timeseries.jsonl.tmp");
+                let mut body = keep.join("\n");
+                body.push('\n');
+                fs::write(&tmp, body).with_context(|| format!("writing {}", tmp.display()))?;
+                fs::rename(&tmp, &path)
+                    .with_context(|| format!("compacting {}", path.display()))?;
+            }
+        }
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut batch = String::new();
+        for p in points {
+            batch.push_str(&p.to_json_line());
+            batch.push('\n');
+        }
+        file.write_all(batch.as_bytes())
+            .with_context(|| format!("appending {}", path.display()))?;
+        Ok(())
+    }
+
+    /// The highest persisted timeseries seq, if any — the restart
+    /// resume point (`resume_from(seq + 1)`). Scans from the tail;
+    /// torn or corrupt trailing lines are skipped, not fatal.
+    pub fn last_timeseries_seq(&self) -> Option<u64> {
+        let text = fs::read_to_string(self.timeseries_path()).ok()?;
+        text.lines()
+            .rev()
+            .filter_map(|l| TsPoint::from_json_line(l).ok())
+            .map(|p| p.seq)
+            .next()
+    }
+
+    /// Persisted timeseries points with `seq >= after`, in log order.
+    pub fn load_timeseries_since(&self, after: u64) -> Vec<TsPoint> {
+        let Ok(text) = fs::read_to_string(self.timeseries_path()) else {
+            return Vec::new();
+        };
+        text.lines()
+            .filter_map(|l| TsPoint::from_json_line(l).ok())
+            .filter(|p| p.seq >= after)
+            .collect()
     }
 }
 
@@ -160,6 +239,71 @@ mod tests {
         let loaded = store.load_jobs().unwrap();
         assert_eq!(loaded.len(), 1);
         assert_eq!(loaded[0].state, JobState::Done);
+    }
+
+    #[test]
+    fn timeseries_appends_resume_and_survive_torn_tails() {
+        use crate::obs::timeseries::{TsKind, TsPoint};
+        let store = tmp_store("ts");
+        assert_eq!(store.last_timeseries_seq(), None);
+        let point = |seq: u64| TsPoint {
+            seq,
+            t_s: seq as f64,
+            series: "e2e.busbw_gbps".to_string(),
+            value: 10.0,
+            kind: TsKind::Level,
+        };
+        store.append_timeseries(&[point(0), point(1)]).unwrap();
+        store.append_timeseries(&[point(2)]).unwrap();
+        assert_eq!(store.last_timeseries_seq(), Some(2));
+        let loaded = store.load_timeseries_since(1);
+        assert_eq!(loaded.iter().map(|p| p.seq).collect::<Vec<_>>(), vec![1, 2]);
+        // A torn trailing line (daemon killed mid-append) is skipped.
+        let mut f = fs::OpenOptions::new()
+            .append(true)
+            .open(store.root().join("timeseries.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"seq\":99,\"t_s").unwrap();
+        drop(f);
+        assert_eq!(store.last_timeseries_seq(), Some(2));
+        // Resume and append with the continued seq space: no dup, no gap.
+        let reopened = Store::open(store.root()).unwrap();
+        let next = reopened.last_timeseries_seq().unwrap() + 1;
+        reopened.append_timeseries(&[point(next)]).unwrap();
+        let seqs: Vec<u64> =
+            reopened.load_timeseries_since(0).iter().map(|p| p.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn timeseries_log_compacts_keeping_the_newest_half() {
+        use crate::obs::timeseries::{TsKind, TsPoint};
+        let store = tmp_store("ts_compact");
+        let path = store.root().join("timeseries.jsonl");
+        // Seed an oversized log directly (unit-speed stand-in for a
+        // long-lived daemon), then trigger compaction with one append.
+        let mut body = String::new();
+        for seq in 0..(TS_COMPACT_LINES as u64 + 10) {
+            body.push_str(&format!(
+                "{{\"seq\":{seq},\"t_s\":0.0,\"series\":\"g\",\"kind\":\"level\",\"value\":1}}\n"
+            ));
+        }
+        fs::write(&path, body).unwrap();
+        store
+            .append_timeseries(&[TsPoint {
+                seq: TS_COMPACT_LINES as u64 + 10,
+                t_s: 1.0,
+                series: "g".to_string(),
+                value: 1.0,
+                kind: TsKind::Level,
+            }])
+            .unwrap();
+        let points = store.load_timeseries_since(0);
+        assert!(points.len() <= TS_COMPACT_LINES / 2 + 20, "compaction kept {}", points.len());
+        // Newest points survive; seqs stay strictly increasing.
+        assert_eq!(points.last().unwrap().seq, TS_COMPACT_LINES as u64 + 10);
+        assert!(points.windows(2).all(|w| w[1].seq > w[0].seq));
+        assert_eq!(store.last_timeseries_seq(), Some(TS_COMPACT_LINES as u64 + 10));
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! a slow poller loses old samples silently instead of blocking the
 //! publisher.
 
+use crate::obs::detect::{Detection, DetectionKind, DetectorConfig, SeriesDetector};
+use crate::obs::SpanRecord;
 use crate::tune::{FeedbackRing, StepFeedback};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -17,6 +19,10 @@ use std::time::{Duration, Instant};
 
 /// Samples retained per job.
 const RING_CAP: usize = 256;
+/// Detections retained per job.
+const DETECTIONS_CAP: usize = 64;
+/// Span records retained per job (for `GET /jobs/<id>/trace`).
+const SPANS_CAP: usize = 50_000;
 
 /// One job's live feed.
 pub struct JobFeed {
@@ -24,6 +30,16 @@ pub struct JobFeed {
     /// Signaled on every publish and on close.
     changed: Condvar,
     closed: Mutex<bool>,
+    /// Online watcher over the published `busbw_gbps` stream (zero
+    /// samples — heartbeats — are skipped; they carry no bandwidth).
+    watch: Mutex<WatchState>,
+    /// Span snapshot captured around the job's run, for the trace route.
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+struct WatchState {
+    busbw: SeriesDetector,
+    detections: Vec<Detection>,
 }
 
 impl JobFeed {
@@ -32,13 +48,55 @@ impl JobFeed {
             ring: Mutex::new(FeedbackRing::new(RING_CAP)),
             changed: Condvar::new(),
             closed: Mutex::new(false),
+            watch: Mutex::new(WatchState {
+                busbw: SeriesDetector::new(DetectorConfig::throughput()),
+                detections: Vec::new(),
+            }),
+            spans: Mutex::new(Vec::new()),
         }
     }
 
-    /// Append one sample and wake pollers.
+    /// Append one sample and wake pollers. Non-heartbeat samples (those
+    /// carrying a bandwidth figure) also flow through the job's online
+    /// throughput detector, so a regression is stamped into the feed
+    /// while the job still runs.
     pub fn publish(&self, fb: StepFeedback) {
+        if fb.busbw_gbps > 0.0 {
+            let mut watch = self.watch.lock().unwrap();
+            if let Some((z, baseline)) = watch.busbw.observe(fb.busbw_gbps) {
+                if watch.detections.len() < DETECTIONS_CAP {
+                    watch.detections.push(Detection {
+                        kind: DetectionKind::ThroughputRegression,
+                        series: "busbw_gbps".to_string(),
+                        at: fb.step,
+                        z,
+                        baseline,
+                        value: fb.busbw_gbps,
+                    });
+                }
+            }
+        }
         self.ring.lock().unwrap().push(fb);
         self.changed.notify_all();
+    }
+
+    /// Detections the online watcher has stamped so far.
+    pub fn detections(&self) -> Vec<Detection> {
+        self.watch.lock().unwrap().detections.clone()
+    }
+
+    /// Attach the span snapshot captured around this job's run (bounded
+    /// at [`SPANS_CAP`]; overflow keeps the newest records).
+    pub fn set_spans(&self, mut spans: Vec<SpanRecord>) {
+        if spans.len() > SPANS_CAP {
+            spans.drain(..spans.len() - SPANS_CAP);
+        }
+        *self.spans.lock().unwrap() = spans;
+    }
+
+    /// The stored span snapshot (empty when the job ran untraced).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().clone()
     }
 
     /// Mark the feed finished (job left the running state) and wake
@@ -156,6 +214,59 @@ mod tests {
         assert_eq!(samples.len(), 1);
         assert_eq!(next, 1);
         assert!(!done);
+    }
+
+    #[test]
+    fn sustained_busbw_collapse_is_stamped_into_the_feed() {
+        let feed = TelemetryHub::new().feed(9);
+        let sample = |step: u64, bw: f64| StepFeedback {
+            step,
+            wall_s: 0.1,
+            compute_s: 0.05,
+            comm_busy_s: 0.05,
+            busbw_gbps: bw,
+        };
+        for step in 0..8 {
+            feed.publish(sample(step, 10.0));
+        }
+        // Heartbeats (no bandwidth) must not poison the watcher.
+        feed.publish(StepFeedback {
+            step: 8,
+            wall_s: 0.8,
+            compute_s: 0.0,
+            comm_busy_s: 0.0,
+            busbw_gbps: 0.0,
+        });
+        assert!(feed.detections().is_empty(), "steady stream must stay silent");
+        for step in 9..12 {
+            feed.publish(sample(step, 0.5));
+        }
+        let dets = feed.detections();
+        assert_eq!(dets.len(), 1, "{dets:?}");
+        assert_eq!(dets[0].series, "busbw_gbps");
+        assert!(dets[0].at >= 9);
+    }
+
+    #[test]
+    fn span_snapshots_round_trip_and_stay_bounded() {
+        let feed = TelemetryHub::new().feed(11);
+        assert!(feed.spans().is_empty());
+        let span = |seq: u64| crate::obs::SpanRecord {
+            seq,
+            rank: 0,
+            step: seq as u32,
+            start_us: seq * 10,
+            dur_us: 5,
+            bytes: 0,
+            name: "compute".to_string(),
+        };
+        feed.set_spans((0..3).map(span).collect());
+        assert_eq!(feed.spans().len(), 3);
+        // Oversized snapshots keep the newest records.
+        feed.set_spans((0..(super::SPANS_CAP as u64 + 10)).map(span).collect());
+        let kept = feed.spans();
+        assert_eq!(kept.len(), super::SPANS_CAP);
+        assert_eq!(kept[0].seq, 10);
     }
 
     #[test]

@@ -90,7 +90,12 @@ fn run_one(state: &ServeState, registry: &ScenarioRegistry, job_id: u64) {
         })
     };
 
+    // Snapshot the span ring around the run so `GET /jobs/<id>/trace`
+    // can serve whatever the scenario traced (empty when tracing was
+    // off — the route still answers with a valid, empty trace).
+    let span_cursor = crate::obs::span::cursor();
     let result = jobqueue::execute(registry, &request);
+    feed.set_spans(crate::obs::span::since(span_cursor, None).0);
 
     stop.store(true, Ordering::Relaxed);
     let _ = monitor.join();

@@ -67,6 +67,9 @@ pub struct ElasticParams {
     /// Flag a worker whose mean compute exceeds `threshold x` the cohort
     /// median (see [`crate::tune::straggler_scores`]).
     pub straggler_threshold: f64,
+    /// Record obs spans on every worker and ship them to the coordinator
+    /// (also implied by [`ElasticConfig::trace_out`]).
+    pub obs: bool,
 }
 
 impl Default for ElasticParams {
@@ -80,6 +83,7 @@ impl Default for ElasticParams {
             rendezvous_timeout: Duration::from_secs(60),
             straggler_window: 8,
             straggler_threshold: 2.0,
+            obs: false,
         }
     }
 }
@@ -168,6 +172,14 @@ pub struct ElasticConfig {
     /// Coordinator bind address (`127.0.0.1:0` for loopback runs; a
     /// routable interface for multi-host cohorts).
     pub bind: SocketAddr,
+    /// Write the merged Chrome trace of the whole run here (implies span
+    /// recording on every worker). Each epoch's rank 0 merges the
+    /// cohort's spans and ships them to the coordinator over the
+    /// feedback socket, so the file lands on the coordinator's
+    /// filesystem even with external multi-host workers. Spans keep
+    /// their recording clocks: uids are stable track ids, and tracks
+    /// from distinct worker processes are only approximately aligned.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl ElasticConfig {
@@ -178,6 +190,7 @@ impl ElasticConfig {
             fault: FaultPlan::default(),
             spawn: SpawnMode::Thread,
             bind: "127.0.0.1:0".parse().expect("loopback literal"),
+            trace_out: None,
         }
     }
 
@@ -273,6 +286,10 @@ pub struct ElasticReport {
     pub membership: Vec<(usize, Vec<u64>)>,
     /// Per-worker straggler verdicts (sorted by uid).
     pub stragglers: Vec<StragglerScore>,
+    /// Straggler-onset detections from the same feedback rings, in the
+    /// wire format the serve daemon and `LaunchReport` use (see
+    /// [`crate::obs::detect::straggler_onset`]).
+    pub detections: Vec<crate::obs::Detection>,
 }
 
 // ------------------------------------------------------------ determinism
@@ -387,6 +404,7 @@ pub fn elastic_worker_entry(
                 let elems: usize = parse_field(it.next(), "epoch elems")?;
                 let seed: u64 = parse_field(it.next(), "epoch seed")?;
                 let compute_us: u64 = parse_field(it.next(), "epoch compute_us")?;
+                let obs = parse_field::<u8>(it.next(), "epoch obs")? != 0;
                 let wire_world: usize = parse_field(it.next(), "epoch world")?;
                 anyhow::ensure!(
                     wire_world == world,
@@ -404,6 +422,9 @@ pub fn elastic_worker_entry(
                 } else if params.is_empty() {
                     params = vec![0.0f32; elems];
                 }
+                if obs {
+                    crate::obs::span::enable();
+                }
                 let seg = run_segment(
                     &mut params,
                     SegmentSpec {
@@ -419,6 +440,7 @@ pub fn elastic_worker_entry(
                         addrs,
                         node,
                         uid,
+                        obs,
                         feedback: writer.try_clone()?,
                     },
                 );
@@ -488,8 +510,44 @@ struct SegmentSpec {
     addrs: Vec<SocketAddr>,
     node: MeshNode,
     uid: u64,
+    /// Record spans and ship them to the epoch's rank 0 every step.
+    obs: bool,
     /// Coordinator stream for live `estep` heartbeats.
     feedback: TcpStream,
+}
+
+/// Sub-tag on [`tags::CONTROL`] carrying span snapshots (the shard
+/// all-gather rides [`tags::SHARD_GATHER`] sub 0, so the two flows
+/// never collide). Mirrors [`super::launch`]'s obs shipping.
+const OBS_SUB: u32 = 1;
+
+/// One obs shipping round at a step boundary: the worker drains the
+/// spans it recorded since the previous round (uid-filtered —
+/// thread-mode cohorts share one process-global ring) and sends them to
+/// the epoch's rank 0, which merges the batches with its own.
+fn ship_segment_spans(
+    ep: &dyn Endpoint,
+    rank: usize,
+    world: usize,
+    uid: u64,
+    step: u32,
+    cursor: &mut u64,
+    merged: &mut Vec<crate::obs::SpanRecord>,
+) -> Result<()> {
+    use crate::obs::span;
+    let ctrl = tag(tags::CONTROL, step, OBS_SUB);
+    let (batch, next) = span::since(*cursor, Some(uid as u32));
+    *cursor = next;
+    if rank == 0 {
+        merged.extend(batch);
+        for peer in 1..world {
+            let raw = ep.recv_buf(WorkerId(peer), ctrl)?;
+            merged.extend(span::decode(&raw)?);
+        }
+    } else {
+        ep.send(WorkerId(0), ctrl, &span::encode(&batch))?;
+    }
+    Ok(())
 }
 
 /// Run one epoch's steps `resume..until` of the elastic loop over a
@@ -511,9 +569,14 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
         addrs,
         node,
         uid,
+        obs,
         mut feedback,
     } = spec;
     let own = shard_range(rank, world, shards);
+    // Spans recorded before this segment belong to earlier epochs and
+    // were already shipped there — start the drain cursor at "now".
+    let mut obs_cursor = crate::obs::span::cursor();
+    let mut obs_merged: Vec<crate::obs::SpanRecord> = Vec::new();
     // Fast-forward the owned shard streams to `resume` by replaying
     // their fills — the crash-replay mechanism.
     let mut scratch = vec![0.0f32; elems];
@@ -538,27 +601,44 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
                 return Ok(SegmentEnd::Died);
             }
             let t_step = Instant::now();
+            // Spans use the run-stable uid as the track id, not the
+            // epoch rank: ranks are re-dealt every epoch and thread-mode
+            // cohorts share one process-global ring.
+            let total_sp = crate::span!("step.total", uid, step);
             // Own shards: fill from the per-shard streams, modeled
             // compute, then one concatenated blob for the all-gather.
             let mut own_grads: Vec<Vec<f32>> = Vec::with_capacity(own.len());
-            for stream in streams.iter_mut() {
-                let mut g = vec![0.0f32; elems];
-                stream.fill_f32(&mut g, 1.0);
-                own_grads.push(g);
+            let compute_elapsed;
+            {
+                let _sp =
+                    crate::span!("step.grad", uid, step, (own.len() * elems * 4) as u64);
+                for stream in streams.iter_mut() {
+                    let mut g = vec![0.0f32; elems];
+                    stream.fill_f32(&mut g, 1.0);
+                    own_grads.push(g);
+                }
+                let t_compute = Instant::now();
+                if compute_s > 0.0 {
+                    super::spin_sleep(compute_s);
+                }
+                compute_elapsed = t_compute.elapsed().as_secs_f64();
             }
-            let t_compute = Instant::now();
-            if compute_s > 0.0 {
-                super::spin_sleep(compute_s);
-            }
-            let compute_elapsed = t_compute.elapsed().as_secs_f64();
             let mut blob = Vec::with_capacity(own.len() * elems * 4);
             for g in &own_grads {
                 blob.extend_from_slice(crate::collectives::f32s_as_bytes(g));
             }
             let t = tag(tags::SHARD_GATHER, step as u32, 0);
-            for peer in 0..world {
-                if peer != rank {
-                    ep.send(WorkerId(peer), t, &blob)?;
+            {
+                let _sp = crate::span!(
+                    "wire.send",
+                    uid,
+                    step,
+                    (blob.len() * world.saturating_sub(1)) as u64
+                );
+                for peer in 0..world {
+                    if peer != rank {
+                        ep.send(WorkerId(peer), t, &blob)?;
+                    }
                 }
             }
             let mut peer_blobs: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
@@ -573,6 +653,7 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
                 }
             }
             // Sum in logical shard order 0..L — the bit-identity pivot.
+            let reduce_sp = crate::span!("reduce.add", uid, step);
             let mut acc = vec![0.0f32; elems];
             for s in 0..shards {
                 let owner = (0..world)
@@ -598,10 +679,15 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
                     }
                 }
             }
+            drop(reduce_sp);
             let inv = 1.0f32 / shards as f32;
-            for (w, a) in working.iter_mut().zip(&acc) {
-                *w -= 0.05 * a * inv;
+            {
+                let _sp = crate::span!("step.update", uid, step);
+                for (w, a) in working.iter_mut().zip(&acc) {
+                    *w -= 0.05 * a * inv;
+                }
             }
+            drop(total_sp);
             writeln!(
                 feedback,
                 "estep {uid} {step} {:.9} {:.9}",
@@ -609,11 +695,33 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
                 compute_elapsed
             )
             .context("send estep heartbeat")?;
+            // Obs shipping rides the same mesh after the step's gather
+            // drained, so the control traffic never contends with
+            // gradient blobs.
+            if obs {
+                ship_segment_spans(
+                    &*ep, rank, world, uid, step as u32, &mut obs_cursor, &mut obs_merged,
+                )?;
+            }
+        }
+        // One last round sweeps anything recorded after the final
+        // step's drain (every rank participates — rank 0 recvs).
+        if obs {
+            ship_segment_spans(
+                &*ep, rank, world, uid, until as u32, &mut obs_cursor, &mut obs_merged,
+            )?;
         }
         Ok(SegmentEnd::Completed)
     })();
     if matches!(result, Ok(SegmentEnd::Completed)) {
         *params = working;
+        // The epoch's rank 0 forwards the cohort's merged spans to the
+        // coordinator: header line then exact bytes, like `eparams`.
+        if obs && rank == 0 && !obs_merged.is_empty() {
+            let blob = crate::obs::span::encode(&obs_merged);
+            writeln!(feedback, "espans {}", blob.len()).context("send espans header")?;
+            feedback.write_all(&blob).context("send espans blob")?;
+        }
     }
     result
 }
@@ -623,6 +731,8 @@ fn run_segment(params: &mut Vec<f32>, spec: SegmentSpec) -> Result<SegmentEnd> {
 enum Ev {
     Line(usize, String),
     Blob(usize, Vec<u8>),
+    /// Encoded span snapshot from an epoch's rank 0 (`espans`).
+    Spans(Vec<u8>),
     Eof(usize),
 }
 
@@ -740,6 +850,9 @@ fn coordinator_loop(listener: &TcpListener, cfg: &ElasticConfig) -> Result<Elast
     let mut recoveries = 0usize;
     let mut membership: Vec<(usize, Vec<u64>)> = Vec::new();
     let mut prep: Option<PrepState> = None;
+    // Spans shipped by each completed epoch's rank 0, accumulated across
+    // epochs (a failed epoch ships nothing — its spans die with it).
+    let mut spans: Vec<crate::obs::SpanRecord> = Vec::new();
     let mut deadline = Instant::now() + p.rendezvous_timeout;
 
     let fail_all = |members: &mut BTreeMap<u64, Member>, why: &str| {
@@ -789,9 +902,9 @@ fn coordinator_loop(listener: &TcpListener, cfg: &ElasticConfig) -> Result<Elast
                 maybe_advance(
                     cfg, &mut members, &dead, &mut prep, &mut epochs, &mut membership,
                 )?;
-                if let Some(report) =
-                    maybe_finish(cfg, &mut members, &dead, epochs, recoveries, &membership)?
-                {
+                if let Some(report) = maybe_finish(
+                    cfg, &mut members, &dead, epochs, recoveries, &membership, &spans,
+                )? {
                     return Ok(report);
                 }
                 continue;
@@ -898,6 +1011,11 @@ fn coordinator_loop(listener: &TcpListener, cfg: &ElasticConfig) -> Result<Elast
                     }
                 }
             }
+            Ev::Spans(bytes) => {
+                spans.extend(
+                    crate::obs::span::decode(&bytes).context("decode shipped span snapshot")?,
+                );
+            }
             Ev::Eof(conn) => {
                 let Some(uid) = conn_uid.get(&conn).copied() else { continue };
                 let Some(m) = members.get(&uid) else { continue };
@@ -925,7 +1043,7 @@ fn coordinator_loop(listener: &TcpListener, cfg: &ElasticConfig) -> Result<Elast
         }
         maybe_advance(cfg, &mut members, &dead, &mut prep, &mut epochs, &mut membership)?;
         if let Some(report) =
-            maybe_finish(cfg, &mut members, &dead, epochs, recoveries, &membership)?
+            maybe_finish(cfg, &mut members, &dead, epochs, recoveries, &membership, &spans)?
         {
             return Ok(report);
         }
@@ -957,6 +1075,18 @@ fn reader_thread(conn: usize, stream: TcpStream, tx: mpsc::Sender<Ev>) {
                 return;
             }
             let _ = tx.send(Ev::Blob(conn, blob));
+        } else if let Some(rest) = trimmed.strip_prefix("espans ") {
+            // Span snapshot upload: same header-then-bytes framing.
+            let Ok(len) = rest.trim().parse::<usize>() else {
+                let _ = tx.send(Ev::Eof(conn));
+                return;
+            };
+            let mut blob = vec![0u8; len];
+            if reader.read_exact(&mut blob).is_err() {
+                let _ = tx.send(Ev::Eof(conn));
+                return;
+            }
+            let _ = tx.send(Ev::Spans(blob));
         } else if !trimmed.is_empty() {
             let _ = tx.send(Ev::Line(conn, trimmed));
         }
@@ -989,8 +1119,9 @@ fn maybe_advance(
             .collect();
         let blob = ps.blob.unwrap_or_default();
         let world = ps.ranks.len();
+        let obs = u8::from(p.obs || cfg.trace_out.is_some());
         let mut line = format!(
-            "epoch {} {} {} {} {} {} {} {}",
+            "epoch {} {} {} {} {} {} {} {obs} {}",
             ps.resume, ps.until, p.steps, p.shards, p.elems, p.seed, p.compute_us, world
         );
         for a in &addrs {
@@ -1106,6 +1237,7 @@ fn maybe_finish(
     epochs: usize,
     recoveries: usize,
     membership: &[(usize, Vec<u64>)],
+    spans: &[crate::obs::SpanRecord],
 ) -> Result<Option<ElasticReport>> {
     let p = &cfg.params;
     let finalists: Vec<u64> =
@@ -1133,6 +1265,24 @@ fn maybe_finish(
     let rings: Vec<(u64, &FeedbackRing)> =
         members.iter().map(|(u, m)| (*u, &m.ring)).collect();
     let stragglers = straggler_scores(&rings, p.straggler_window, p.straggler_threshold);
+    // Replay the same rings through the online detector so a straggler
+    // shows up as a Detection — the format the serve daemon stamps into
+    // job telemetry — not just a score row.
+    let detections = crate::obs::detect::straggler_onset(
+        &rings,
+        p.straggler_window,
+        p.straggler_threshold,
+        p.steps as u64,
+    );
+    if let Some(path) = &cfg.trace_out {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, crate::obs::span::chrome_trace_json(spans))
+            .with_context(|| format!("write chrome trace to {}", path.display()))?;
+    }
     Ok(Some(ElasticReport {
         checksum: first,
         steps: p.steps,
@@ -1141,6 +1291,7 @@ fn maybe_finish(
         final_world: finalists.len(),
         membership: membership.to_vec(),
         stragglers,
+        detections,
     }))
 }
 
@@ -1158,6 +1309,7 @@ mod tests {
             rendezvous_timeout: Duration::from_secs(30),
             straggler_window: 8,
             straggler_threshold: 3.0,
+            obs: false,
         }
     }
 
@@ -1275,6 +1427,39 @@ mod tests {
         let flagged: Vec<u64> =
             r.stragglers.iter().filter(|s| s.straggler).map(|s| s.id).collect();
         assert_eq!(flagged, vec![6], "{:?}", r.stragglers);
+        // The same verdict rides the report as a wire-format Detection.
+        assert!(
+            r.detections.iter().any(|d| d.series == "member.6.compute_s"),
+            "{:?}",
+            r.detections
+        );
+    }
+
+    #[test]
+    fn obs_run_ships_spans_and_writes_the_coordinator_trace() {
+        // Serialize with other tracer-enabling tests: the span ring is
+        // process-global and the epoch line flips the tracer on.
+        let _serial = crate::obs::span::test_lock();
+        let trace = std::env::temp_dir().join("netbn_elastic_obs_test_trace.json");
+        let _ = std::fs::remove_file(&trace);
+        let p = quick_params(4, 4);
+        let plan = MembershipPlan {
+            initial: vec![1, 2],
+            joins: vec![(3, 2)],
+            ..Default::default()
+        };
+        let mut cfg = ElasticConfig::loopback(p.clone(), plan);
+        cfg.trace_out = Some(trace.clone());
+        let r = elastic_launch(&cfg).unwrap();
+        crate::obs::span::disable();
+        assert_eq!(r.checksum, expected_checksum(&p), "{:?}", r.membership);
+        assert_eq!(r.epochs, 2, "join at step 2 splits the run");
+        let json = std::fs::read_to_string(&trace).unwrap();
+        assert!(json.contains("\"traceEvents\""), "{json}");
+        for name in ["step.total", "step.grad", "wire.send", "reduce.add", "step.update"] {
+            assert!(json.contains(name), "trace is missing {name}: {json}");
+        }
+        let _ = std::fs::remove_file(&trace);
     }
 
     #[test]

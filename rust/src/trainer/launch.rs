@@ -61,7 +61,7 @@ use crate::tune::{AutoTuner, KnobPoint, KnobSpace, StepFeedback, TunerConfig};
 use crate::util::Rng;
 use crate::Result;
 use anyhow::Context;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -265,6 +265,10 @@ pub struct LaunchReport {
     /// Time-bucketed link-utilization timeline `(t_seconds, bytes/sec
     /// per rank)` over the whole run (empty when obs was off).
     pub util_timeline: Vec<(f64, f64)>,
+    /// Online anomaly detections over rank 0's per-step bus-bandwidth
+    /// series ([`crate::obs::detect`], throughput config) — a scripted
+    /// or real mid-run rate drop shows up here within a few steps.
+    pub detections: Vec<crate::obs::Detection>,
 }
 
 impl LaunchReport {
@@ -636,6 +640,7 @@ fn coordinator_serve(
     for s in streams.iter().flatten() {
         s.set_read_timeout(Some(Duration::from_millis(300))).ok();
     }
+    let obs_on = p.obs || p.trace_out.is_some();
     let mut step_wall = vec![0.0f64; p.steps];
     let mut ar = vec![0.0f64; p.steps];
     let mut checksums = vec![0u64; p.world];
@@ -643,6 +648,7 @@ fn coordinator_serve(
     let mut breakdown: Vec<crate::obs::StepBreakdown> = Vec::new();
     let mut wire_mean_bps = 0.0f64;
     let mut util_timeline: Vec<(f64, f64)> = Vec::new();
+    let mut detections: Vec<crate::obs::Detection> = Vec::new();
     let mut collected = vec![false; p.world];
     // Partial-line accumulators: a timed-out read_line keeps the bytes
     // it already consumed in the String, so each rank's buffer persists
@@ -739,6 +745,29 @@ fn coordinator_serve(
                         .with_context(|| format!("rank 0 util timeline {tl_field:?}"))?;
                 }
             }
+            // Rank 0 appends its online busbw detections ("-" when the
+            // series stayed clean; absent entirely from old workers).
+            let det_field = it.next().unwrap_or("-");
+            if rank == 0 {
+                detections = crate::obs::detect::parse_detections(det_field, "busbw_gbps")
+                    .with_context(|| format!("rank 0 detections {det_field:?}"))?;
+            }
+            // Obs runs: rank 0 follows its done line with `trace <len>`
+            // plus the merged span stream, so `--trace-out` lands on the
+            // coordinator's filesystem even when rank 0 is a remote
+            // external worker (which writes its own local copy too).
+            if rank == 0 && obs_on {
+                let spans = read_span_trace(readers[0].as_mut().expect("registered above"))?;
+                if let Some(path) = &p.trace_out {
+                    if let Some(dir) = path.parent() {
+                        if !dir.as_os_str().is_empty() {
+                            std::fs::create_dir_all(dir)?;
+                        }
+                    }
+                    std::fs::write(path, crate::obs::span::chrome_trace_json(&spans))
+                        .with_context(|| format!("write chrome trace to {}", path.display()))?;
+                }
+            }
             checksums[rank] = checksum;
             for s in 0..p.steps {
                 ar[s] = ar[s].max(ar_times[s]);
@@ -776,7 +805,51 @@ fn coordinator_serve(
         breakdown,
         wire_mean_bps,
         util_timeline,
+        detections,
     })
+}
+
+/// Read rank 0's post-done span shipment (`trace <len>` header then
+/// exactly `len` encoded bytes). The socket keeps the collection loop's
+/// short poll timeout, so both reads tolerate `WouldBlock`/`TimedOut`
+/// under an overall deadline — generous, because the worker writes the
+/// whole shipment immediately after its done line.
+fn read_span_trace(reader: &mut BufReader<TcpStream>) -> Result<Vec<crate::obs::SpanRecord>> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut hdr = String::new();
+    while !hdr.ends_with('\n') {
+        match reader.read_line(&mut hdr) {
+            Ok(0) => anyhow::bail!("rank 0 closed before sending its span trace"),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e).context("read span trace header"),
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "rank 0 never sent its span trace (was the worker started with --obs?)"
+        );
+    }
+    let len: usize = hdr
+        .trim()
+        .strip_prefix("trace ")
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad span trace header {hdr:?}"))?;
+    let mut blob = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match reader.read(&mut blob[got..]) {
+            Ok(0) => anyhow::bail!("rank 0 closed mid span trace ({got} of {len} bytes)"),
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e).context("read span trace bytes"),
+        }
+        anyhow::ensure!(Instant::now() < deadline, "span trace stalled at {got} of {len} bytes");
+    }
+    crate::obs::span::decode(&blob)
 }
 
 /// Serialize/parse rank 0's chunk trajectory for the done line:
@@ -1199,6 +1272,30 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
             (format_breakdown(&breakdown), format!("{wire_bps:.3}"), format_timeline(&timeline));
     }
 
+    // Rank 0 replays its per-step busbw series through the same online
+    // detector the serve daemon and `netbn bench --trend` run — a
+    // mid-run rate drop becomes a Detection in the LaunchReport, not
+    // just a slower row in the step table. Independent of --obs: the
+    // inputs are the step timings every run already has.
+    let mut det_field = "-".to_string();
+    if rank == 0 {
+        let series: Vec<(u64, f64)> = walls
+            .iter()
+            .zip(&ar_times)
+            .enumerate()
+            .map(|(s, (wall, busy))| {
+                (s as u64, step_feedback(p, s as u64, *wall, (*wall - *busy).max(0.0), *busy).busbw_gbps)
+            })
+            .collect();
+        let dets = crate::obs::detect::scan(
+            crate::obs::detect::DetectorConfig::throughput(),
+            crate::obs::detect::DetectionKind::ThroughputRegression,
+            "busbw_gbps",
+            &series,
+        );
+        det_field = crate::obs::detect::format_detections(&dets);
+    }
+
     // Report and wait for the global release before tearing down lanes.
     let mut done = format!("done {rank} {checksum:x} ");
     done.push_str(&join_csv(&ar_times));
@@ -1220,8 +1317,8 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
         }
         None => done.push('-'),
     }
-    // Obs aggregates, rank 0 only ("-" placeholders otherwise).
-    for f in [&obs_fields.0, &obs_fields.1, &obs_fields.2] {
+    // Obs aggregates + detections, rank 0 only ("-" placeholders otherwise).
+    for f in [&obs_fields.0, &obs_fields.1, &obs_fields.2, &det_field] {
         done.push(' ');
         done.push_str(f);
     }
@@ -1231,6 +1328,16 @@ pub fn worker_entry(rank: usize, coordinator: SocketAddr, p: &WorkerParams) -> R
     // coordinator surfaces as EOF.
     coord.set_read_timeout(None).ok();
     coord.write_all(done.as_bytes()).context("send done")?;
+    // Obs runs follow the done line with the merged (aligned) span
+    // stream: `trace <len>` then exact bytes. Rank 0 may be a remote
+    // external worker, so this is what lets the coordinator write
+    // `--trace-out` on its own filesystem.
+    if obs_on && rank == 0 {
+        let blob = crate::obs::span::encode(&obs_merged);
+        let mut msg = format!("trace {}\n", blob.len()).into_bytes();
+        msg.extend_from_slice(&blob);
+        coord.write_all(&msg).context("send span trace")?;
+    }
     let mut bye = String::new();
     reader.read_line(&mut bye).context("read release")?;
     anyhow::ensure!(bye.trim() == "bye", "bad release line {bye:?}");
@@ -1416,6 +1523,24 @@ mod tests {
         let pre = r.step_wall_s[1].min(r.step_wall_s[2]);
         let post = r.step_wall_s[4].max(r.step_wall_s[5]);
         assert!(post > pre * 2.0, "drop not visible: pre {pre} post {post}");
+        // The online detector flags the collapse within 3 steps of the
+        // scripted drop, and never before it.
+        assert!(!r.detections.is_empty(), "drop must be detected");
+        for d in &r.detections {
+            assert!(d.at >= 3 && d.at <= 6, "detection outside the drop window: {d:?}");
+            assert!(d.z < 0.0, "throughput collapse must be a low-side anomaly: {d:?}");
+        }
+    }
+
+    #[test]
+    fn steady_launch_reports_no_detections() {
+        let mut cfg = thread_cfg(2, CollectiveKind::Ring, TransportKind::Striped { streams: 2 });
+        cfg.params.elems = 60_000;
+        cfg.params.steps = 6;
+        cfg.params.gate_gbps = 0.5;
+        let r = launch(&cfg).unwrap();
+        assert!(r.passed());
+        assert!(r.detections.is_empty(), "false positives on a steady run: {:?}", r.detections);
     }
 
     #[test]

@@ -218,6 +218,90 @@ fn fusion_timeline_and_sim_agree_on_bucket_count() {
 }
 
 #[test]
+fn span_codec_round_trips_random_batches() {
+    use netbn::obs::{span, SpanRecord};
+    prop::forall("span wire codec round-trip", 60, |rng| {
+        let names =
+            ["step.total", "wire.send", "reduce.add", "x", "a.very.long.span.name.for.framing"];
+        let n = prop::usize_in(rng, 0..=64);
+        let batch: Vec<SpanRecord> = (0..n)
+            .map(|_| SpanRecord {
+                seq: rng.next_u64(),
+                name: (*rng.choose(&names)).to_string(),
+                rank: rng.next_u64() as u32,
+                step: rng.next_u64() as u32,
+                start_us: rng.next_u64(),
+                dur_us: rng.next_u64(),
+                bytes: rng.next_u64(),
+            })
+            .collect();
+        let wire = span::encode(&batch);
+        let back = span::decode(&wire).map_err(|e| format!("decode: {e}"))?;
+        if back != batch {
+            return Err(format!("round-trip changed {} records", batch.len()));
+        }
+        // Any strict prefix must error (the count header promises more
+        // bytes than remain), and so must trailing garbage — never panic,
+        // never silently return a short batch.
+        let cut = prop::usize_in(rng, 0..=wire.len() - 1);
+        if span::decode(&wire[..cut]).is_ok() {
+            return Err(format!("decode accepted a {cut}-byte prefix of {}", wire.len()));
+        }
+        let mut extra = wire.clone();
+        extra.push(rng.next_u64() as u8);
+        if span::decode(&extra).is_ok() {
+            return Err("decode accepted trailing bytes".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn span_ring_wraparound_keeps_cursors_consistent() {
+    use netbn::obs::span;
+    // The ring is process-global: serialize with anything else that
+    // enables the tracer in this test binary.
+    let _serial = span::test_lock();
+    prop::forall("span ring wraparound cursors", 3, |rng| {
+        span::clear();
+        span::enable();
+        let before = span::cursor();
+        let flood = span::RING_CAP + prop::usize_in(rng, 1..=1500);
+        for step in 0..flood {
+            let _sp = netbn::span!("prop.flood", 7, step as u32);
+        }
+        span::disable();
+        let (got, cur) = span::since(before, Some(7));
+        // Bounded: the oldest overflowed records are gone, the newest
+        // survive, and seq numbers stay strictly increasing up to the
+        // returned cursor.
+        if got.is_empty() || got.len() > span::RING_CAP {
+            return Err(format!("{} records survived a flood of {flood}", got.len()));
+        }
+        for w in got.windows(2) {
+            if w[1].seq <= w[0].seq {
+                return Err(format!("seq not increasing: {} then {}", w[0].seq, w[1].seq));
+            }
+        }
+        let last = got.last().expect("non-empty").seq;
+        if last + 1 != cur {
+            return Err(format!("cursor {cur} does not follow last seq {last}"));
+        }
+        // A wrapped batch still round-trips the wire codec bit-exactly,
+        // and re-snapshotting from the cursor ships nothing twice.
+        let back = span::decode(&span::encode(&got)).map_err(|e| format!("decode: {e}"))?;
+        if back != got {
+            return Err("wire codec changed a wrapped batch".to_string());
+        }
+        if !span::since(cur, Some(7)).0.is_empty() {
+            return Err("cursor re-shipped records".to_string());
+        }
+        span::clear();
+        Ok(())
+    });
+}
+
+#[test]
 fn error_feedback_conserves_gradient_mass_exactly() {
     // The error-feedback invariant: shipped + residual == Σ gradients,
     // per coordinate, at every step (this is what makes the compression

@@ -213,6 +213,43 @@ fn telemetry_long_poll_pages_without_duplicates_and_closes() {
 }
 
 #[test]
+fn restart_resumes_timeseries_seqs_without_loss_or_duplication() {
+    use netbn::obs::TsPoint;
+    let store = tmp_store("ts_resume");
+
+    // Life A: two deterministic samples into the persisted log (the
+    // background sampler's cadence is too slow for a test, so force
+    // them; a set gauge guarantees at least one point per sample).
+    let a = daemon(0, 2, store.clone());
+    netbn::obs::metrics::global().gauge("serve_suite_ts_resume", &[]).set(1.0);
+    assert!(a.state().sample_now() > 0, "a set gauge must sample to at least one point");
+    netbn::obs::metrics::global().gauge("serve_suite_ts_resume", &[]).set(2.0);
+    a.state().sample_now();
+    drop(a); // graceful stop: drain + flush
+
+    // Life B on the same store must resume allocating seqs after the
+    // persisted high-water mark, not restart from 0 (duplicates) and
+    // not leap past it (holes).
+    let b = daemon(0, 2, store.clone());
+    netbn::obs::metrics::global().gauge("serve_suite_ts_resume", &[]).set(3.0);
+    assert!(b.state().sample_now() > 0);
+    drop(b);
+
+    let text = std::fs::read_to_string(store.join("timeseries.jsonl")).unwrap();
+    let mut seqs: Vec<u64> = text
+        .lines()
+        .map(|l| TsPoint::from_json_line(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e:#}")).seq)
+        .collect();
+    assert!(seqs.len() >= 3, "three forced samples persisted {} points", seqs.len());
+    // Sorted (concurrent background samples may interleave file order),
+    // the persisted seqs are exactly 0..n — every cursor appears once.
+    seqs.sort_unstable();
+    for (i, seq) in seqs.iter().enumerate() {
+        assert_eq!(*seq, i as u64, "seq hole or duplicate across restart: {seqs:?}");
+    }
+}
+
+#[test]
 fn restart_preserves_history_and_warm_starts_resubmissions() {
     let store = tmp_store("restart");
 
